@@ -1,0 +1,44 @@
+//! Compare all four paper implementations on one mesh — a miniature of the
+//! paper's Tables 1–4 that runs in seconds.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example compare_variants -- blob
+//! ```
+
+use msgsn::bench::{grid::run_grid, render::render_table, Scale};
+use msgsn::config::Driver;
+use msgsn::mesh::BenchmarkShape;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let shape = args
+        .get(1)
+        .and_then(|s| BenchmarkShape::from_name(s))
+        .unwrap_or(BenchmarkShape::Blob);
+
+    // Which drivers can run here? PJRT needs the AOT artifacts.
+    let mut drivers = vec![Driver::Single, Driver::Indexed, Driver::Multi];
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        drivers.push(Driver::Pjrt);
+    } else {
+        eprintln!("note: artifacts/ missing — skipping the GPU-based (pjrt) column");
+    }
+
+    let grid = run_grid(&[shape], &drivers, &Scale::SMOKE, 42, None, |line| {
+        println!("{line}")
+    })?;
+
+    let table_no = match shape {
+        BenchmarkShape::Blob => 1,
+        BenchmarkShape::Eight => 2,
+        BenchmarkShape::Hand => 3,
+        BenchmarkShape::Heptoroid => 4,
+    };
+    let (text, _) = render_table(&grid, table_no)?;
+    println!("\n{text}");
+    println!(
+        "(smoke scale: tiny networks, short cap — run `msgsn reproduce` for \
+         the real tables)"
+    );
+    Ok(())
+}

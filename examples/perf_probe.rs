@@ -1,0 +1,93 @@
+// perf probe: BatchRust tile sweep + scalar SoA experiment
+use std::time::{Duration, Instant};
+use msgsn::findwinners::{BatchRust, FindWinners, Scalar};
+use msgsn::geometry::Vec3;
+use msgsn::rng::Rng;
+use msgsn::som::Network;
+
+fn random_net(n: usize, seed: u64) -> Network {
+    let mut rng = Rng::seed_from(seed);
+    let mut net = Network::new();
+    for _ in 0..n { net.insert(Vec3::new(rng.f32(), rng.f32(), rng.f32()), 0.1); }
+    net
+}
+
+fn main() {
+    let n = 8192;
+    let m = 8192;
+    let net = random_net(n, 1);
+    let mut rng = Rng::seed_from(2);
+    let signals: Vec<Vec3> = (0..m).map(|_| Vec3::new(rng.f32(), rng.f32(), rng.f32())).collect();
+    let mut out = Vec::new();
+    println!("BatchRust tile sweep (m=n=8192, s/signal):");
+    for tile in [64, 128, 256, 512, 1024, 2048, 8192] {
+        let mut fw = BatchRust::new(tile);
+        fw.find2_batch(&net, &signals, &mut out);
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            let t0 = Instant::now();
+            let mut iters = 0;
+            while t0.elapsed() < Duration::from_millis(300) { fw.find2_batch(&net, &signals, &mut out); iters += 1; }
+            best = best.min(t0.elapsed().as_secs_f64() / (iters as f64 * m as f64));
+        }
+        println!("  tile {:5}: {:.3e}", tile, best);
+    }
+    // signal-blocked variant: process signals in blocks of B over each tile to keep tile hot
+    println!("scalar single-signal (s/signal):");
+    let mut sc = Scalar::new();
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        let mut done = 0usize;
+        while t0.elapsed() < Duration::from_millis(300) {
+            std::hint::black_box(sc.find2(&net, signals[done % m]));
+            done += 1;
+        }
+        best = best.min(t0.elapsed().as_secs_f64() / done as f64);
+    }
+    println!("  AoS walk: {:.3e}", best);
+    // SoA probe: dense position arrays
+    let mut px = Vec::with_capacity(n); let mut py = Vec::with_capacity(n); let mut pz = Vec::with_capacity(n);
+    for id in net.ids() { let p = net.pos(id); px.push(p.x); py.push(p.y); pz.push(p.z); }
+    let mut best2 = f64::INFINITY;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        let mut done = 0usize;
+        while t0.elapsed() < Duration::from_millis(300) {
+            let s = signals[done % m];
+            let mut d1 = f32::INFINITY; let mut d2 = f32::INFINITY; let mut i1 = 0u32; let mut i2 = 0u32;
+            for k in 0..px.len() {
+                let dx = s.x - px[k]; let dy = s.y - py[k]; let dz = s.z - pz[k];
+                let d = dx*dx + dy*dy + dz*dz;
+                if d < d1 { d2 = d1; i2 = i1; d1 = d; i1 = k as u32; }
+                else if d < d2 { d2 = d; i2 = k as u32; }
+            }
+            std::hint::black_box((i1, i2, d1, d2));
+            done += 1;
+        }
+        best2 = best2.min(t0.elapsed().as_secs_f64() / done as f64);
+    }
+    println!("  SoA walk: {:.3e}", best2);
+    // interleaved xyz contiguous array (AoS dense, no alive checks)
+    let mut flat: Vec<f32> = Vec::with_capacity(n*3);
+    for id in net.ids() { let p = net.pos(id); flat.extend_from_slice(&[p.x, p.y, p.z]); }
+    let mut best3 = f64::INFINITY;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        let mut done = 0usize;
+        while t0.elapsed() < Duration::from_millis(300) {
+            let s = signals[done % m];
+            let mut d1 = f32::INFINITY; let mut d2 = f32::INFINITY; let mut i1 = 0u32; let mut i2 = 0u32;
+            for (k, c) in flat.chunks_exact(3).enumerate() {
+                let dx = s.x - c[0]; let dy = s.y - c[1]; let dz = s.z - c[2];
+                let d = dx*dx + dy*dy + dz*dz;
+                if d < d1 { d2 = d1; i2 = i1; d1 = d; i1 = k as u32; }
+                else if d < d2 { d2 = d; i2 = k as u32; }
+            }
+            std::hint::black_box((i1, i2, d1, d2));
+            done += 1;
+        }
+        best3 = best3.min(t0.elapsed().as_secs_f64() / done as f64);
+    }
+    println!("  dense AoS walk: {:.3e}", best3);
+}

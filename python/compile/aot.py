@@ -1,0 +1,137 @@
+"""AOT lowering: JAX/Pallas Find-Winners buckets -> HLO text artifacts.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example/README.md).
+
+One artifact per ``(flavor, m, n)`` bucket. The bucket ladder implements the
+paper's parallelism schedule (section 3.1): ``m`` = the least power of two
+greater than the current unit count, capped at 8192; ``n`` = unit capacity,
+padded with ``PAD_VALUE``. The rust ``runtime::Registry`` picks the smallest
+bucket that fits and ignores output rows beyond the live batch, which keeps
+the algorithm's behavior exactly equal to the unbucketed schedule.
+
+Python runs ONLY here (``make artifacts``); the rust binary is self-contained
+afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+
+from .model import lower_bucket
+
+MIN_N = 128
+DEFAULT_MAX_N = 16384
+M_CAP = 8192  # paper: "maximum level of parallelism has been set to 8192"
+DIM = 3
+FLAVORS = ("pallas", "scan")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the rust
+    side can unwrap a single tuple result)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def buckets(max_n: int):
+    n = MIN_N
+    while n <= max_n:
+        yield min(n, M_CAP), n
+        n *= 2
+
+
+def artifact_name(flavor: str, m: int, n: int) -> str:
+    return f"find_winners_{flavor}_m{m}_n{n}.hlo.txt"
+
+
+def build(out_dir: str, max_n: int, flavors, block_m: int, block_n: int,
+          default_flavor: str, force: bool) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for flavor in flavors:
+        for m, n in buckets(max_n):
+            name = artifact_name(flavor, m, n)
+            path = os.path.join(out_dir, name)
+            t0 = time.time()
+            if not force and os.path.exists(path):
+                text = open(path).read()
+                action = "kept"
+            else:
+                lowered = lower_bucket(
+                    m, n, DIM, flavor=flavor,
+                    block_m=block_m, block_n=block_n,
+                )
+                text = to_hlo_text(lowered)
+                with open(path, "w") as f:
+                    f.write(text)
+                action = "wrote"
+            sha = hashlib.sha256(text.encode()).hexdigest()[:16]
+            entries.append({
+                "flavor": flavor, "m": m, "n": n, "dim": DIM,
+                "dtype": "f32", "file": name, "sha256_16": sha,
+                "inputs": [f"f32[{m},{DIM}]", f"f32[{n},{DIM}]"],
+                "outputs": [f"s32[{m}]", f"s32[{m}]", f"f32[{m}]", f"f32[{m}]"],
+            })
+            print(f"  {action} {name} ({len(text)} chars, "
+                  f"{time.time() - t0:.1f}s)", flush=True)
+
+    manifest = {
+        "version": 1,
+        "jax": jax.__version__,
+        "pad_value": 1e30,
+        "m_cap": M_CAP,
+        "min_n": MIN_N,
+        "dim": DIM,
+        "block_m": block_m,
+        "block_n": block_n,
+        "default_flavor": default_flavor,
+        "artifacts": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts", help="output directory")
+    p.add_argument("--max-n", type=int, default=DEFAULT_MAX_N,
+                   help="largest unit-capacity bucket to emit")
+    p.add_argument("--flavors", default=",".join(FLAVORS),
+                   help="comma-separated subset of {pallas,scan}")
+    p.add_argument("--block-m", type=int, default=128)
+    p.add_argument("--block-n", type=int, default=128)
+    p.add_argument("--default-flavor", default="pallas",
+                   help="flavor the rust runtime uses unless overridden")
+    p.add_argument("--force", action="store_true",
+                   help="re-lower even if the artifact file exists")
+    args = p.parse_args(argv)
+
+    flavors = [f.strip() for f in args.flavors.split(",") if f.strip()]
+    for f in flavors:
+        if f not in FLAVORS:
+            p.error(f"unknown flavor {f!r}")
+    print(f"AOT lowering find-winners buckets -> {args.out}", flush=True)
+    manifest = build(args.out, args.max_n, flavors, args.block_m,
+                     args.block_n, args.default_flavor, args.force)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

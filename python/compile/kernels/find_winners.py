@@ -1,0 +1,186 @@
+"""Layer-1 Pallas kernel: batched top-2 nearest-unit search ("Find Winners").
+
+This is the paper's GPU hot-spot (section 2.5, Fig. 5) rethought for TPU:
+
+- paper (CUDA): one *thread per signal*; a threadblock stages a contiguous
+  batch of reference vectors in __shared__ memory with a coalesced load, then
+  every thread scans the staged batch sequentially, keeping a running top-2
+  in registers.
+- here (Pallas): one *row of the distance block per signal*; ``BlockSpec``
+  stages a ``[block_n, d]`` tile of the unit array in VMEM (the TPU analogue
+  of shared memory — the HBM->VMEM tile copy is the coalesced load), the
+  ``[block_m, block_n]`` distance block is computed vectorized on the VPU,
+  and the running top-2 lives in the output refs, merged across unit tiles
+  exactly like the per-thread registers of the CUDA kernel.
+
+The grid is ``(m / block_m, n / block_n)`` with the unit-tile axis innermost,
+so each signal tile accumulates over all unit tiles sequentially — the same
+schedule the CUDA kernel expresses with its shared-memory loop.
+
+Distances use the *naive difference form* ``sum((s-u)**2)`` so that the
+kernel, the jnp oracle (``ref.py``), the scan flavor (``model.py``) and the
+rust scalar path share bit-exact semantics (required for the multi-signal ==
+batched-PJRT replication invariant, DESIGN.md section 7). The MXU
+``|s|^2 - 2 s.u^T + |u|^2`` expansion is available as ``flavor="mxu"`` for
+the TPU-perf discussion (DESIGN.md section 9); it changes float rounding, so
+it is NOT used for the parity artifacts.
+
+``interpret=True`` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO that the rust
+runtime can run anywhere.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import PAD_VALUE
+
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_N = 128
+
+
+def _block_distances(s, u, flavor: str):
+    """Distance block f32[bm, bn] between signal tile s[bm,d] and unit tile u[bn,d]."""
+    if flavor == "mxu":
+        # MXU-friendly expansion: one [bm,d]x[d,bn] matmul feeds the systolic
+        # array; the rank-1 norm terms ride on the VPU.
+        s2 = jnp.sum(s * s, axis=-1)[:, None]
+        u2 = jnp.sum(u * u, axis=-1)[None, :]
+        return s2 - 2.0 * jnp.dot(s, u.T, preferred_element_type=jnp.float32) + u2
+    # "exact": naive difference form, bit-compatible with ref.py and rust.
+    diff = s[:, None, :] - u[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def _kernel(s_ref, u_ref, i1_ref, i2_ref, d1_ref, d2_ref, *, block_n, flavor):
+    j = pl.program_id(1)
+
+    s = s_ref[...]
+    u = u_ref[...]
+    d = _block_distances(s, u, flavor)
+    bm, bn = d.shape
+
+    # In-block top-2 (tie-break: lowest index, via argmin).
+    col = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)
+    bi1 = jnp.argmin(d, axis=1).astype(jnp.int32)
+    bd1 = jnp.min(d, axis=1)
+    masked = jnp.where(col == bi1[:, None], jnp.inf, d)
+    bi2 = jnp.argmin(masked, axis=1).astype(jnp.int32)
+    bd2 = jnp.min(masked, axis=1)
+
+    base = j * block_n
+    bi1 = bi1 + base
+    bi2 = bi2 + base
+
+    # Reset the running top-2 at the first unit tile of every signal tile.
+    @pl.when(j == 0)
+    def _init():
+        d1_ref[...] = jnp.full((bm,), jnp.inf, jnp.float32)
+        d2_ref[...] = jnp.full((bm,), jnp.inf, jnp.float32)
+        i1_ref[...] = jnp.zeros((bm,), jnp.int32)
+        i2_ref[...] = jnp.zeros((bm,), jnp.int32)
+
+    d1, d2 = d1_ref[...], d2_ref[...]
+    i1, i2 = i1_ref[...], i2_ref[...]
+
+    # Merge running (d1<=d2) with block (bd1<=bd2). Strict '<' prefers the
+    # running value on exact ties; running indices come from earlier tiles,
+    # hence lower — this preserves the lowest-index tie-break across tiles.
+    take_new1 = bd1 < d1
+    nd1 = jnp.where(take_new1, bd1, d1)
+    ni1 = jnp.where(take_new1, bi1, i1)
+    lf_d = jnp.where(take_new1, d1, bd1)  # loser of the two firsts
+    lf_i = jnp.where(take_new1, i1, bi1)
+    take_new2 = bd2 < d2
+    w2_d = jnp.where(take_new2, bd2, d2)  # winner of the two seconds
+    w2_i = jnp.where(take_new2, bi2, i2)
+    take_lf = lf_d < w2_d
+    nd2 = jnp.where(take_lf, lf_d, w2_d)
+    ni2 = jnp.where(take_lf, lf_i, w2_i)
+
+    d1_ref[...] = nd1
+    d2_ref[...] = nd2
+    i1_ref[...] = ni1
+    i2_ref[...] = ni2
+
+
+def _pad_rows(x, multiple, value):
+    rows = x.shape[0]
+    target = ((rows + multiple - 1) // multiple) * multiple
+    if target == rows:
+        return x
+    pad = jnp.full((target - rows,) + x.shape[1:], value, x.dtype)
+    return jnp.concatenate([x, pad], axis=0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "flavor", "interpret")
+)
+def find_winners_pallas(
+    signals,
+    units,
+    *,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    flavor: str = "exact",
+    interpret: bool = True,
+):
+    """Batched top-2 nearest-unit search.
+
+    signals: f32[m, d]; units: f32[n, d] (padding slots = ``PAD_VALUE``).
+    Returns ``(i1 i32[m], i2 i32[m], d1 f32[m], d2 f32[m])``.
+
+    Arbitrary m/n are padded internally up to the block size (signals with
+    zeros — their outputs are sliced away; units with ``PAD_VALUE`` — they
+    can never win).
+    """
+    m, d = signals.shape
+    n = units.shape[0]
+    bm = min(block_m, max(8, m))
+    bn = min(block_n, max(8, n))
+    sp = _pad_rows(signals.astype(jnp.float32), bm, 0.0)
+    up = _pad_rows(units.astype(jnp.float32), bn, PAD_VALUE)
+    mp, np_ = sp.shape[0], up.shape[0]
+
+    grid = (mp // bm, np_ // bn)
+    kernel = functools.partial(_kernel, block_n=bn, flavor=flavor)
+    i1, i2, d1, d2 = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp,), jnp.int32),
+            jax.ShapeDtypeStruct((mp,), jnp.int32),
+            jax.ShapeDtypeStruct((mp,), jnp.float32),
+            jax.ShapeDtypeStruct((mp,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(sp, up)
+    return i1[:m], i2[:m], d1[:m], d2[:m]
+
+
+def vmem_footprint_bytes(block_m: int, block_n: int, d: int = 3) -> int:
+    """Estimated VMEM residency of one grid step (DESIGN.md section 9).
+
+    signal tile + unit tile + distance block + masked copy + 4 running [bm]
+    vectors. Used by the perf report and by tests that pin the kernel under
+    the 16 MiB/core budget.
+    """
+    tiles = (block_m + block_n) * d * 4
+    dist = 2 * block_m * block_n * 4  # d + masked
+    running = 4 * block_m * 4
+    return tiles + dist + running

@@ -1,0 +1,71 @@
+"""Pure-jnp oracle for the batched find-winners (top-2 nearest units) kernel.
+
+This is the CORE correctness signal for Layer 1: the Pallas kernel in
+``find_winners.py`` and the scan-based XLA flavor in ``model.py`` must agree
+with this reference on indices (modulo exact-distance ties, which are
+measure-zero on continuous data — see ``ties_possible``) and on distances to
+float tolerance.
+
+Semantics (shared with the rust ``findwinners::Scalar`` implementation):
+
+- distance = squared Euclidean distance, computed as ``sum((s - u)**2)`` in
+  f32 (the *naive difference form*, NOT the ``|s|^2 - 2 s.u + |u|^2``
+  expansion, so that rust scalar code and the kernel can agree bit-for-bit);
+- winner   = unit with minimal distance, ties broken toward the LOWEST index;
+- second   = unit with minimal distance among the rest, same tie-break;
+- invalid (padding) unit slots are pre-filled by the caller with ``PAD_VALUE``
+  so their distances overflow to ``+inf`` and they can never win while at
+  least two valid units exist.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Padding sentinel for unused unit slots. (1e30)**2 overflows f32 -> +inf,
+# which guarantees padded slots lose against any valid unit.
+PAD_VALUE = 1e30
+
+
+def pairwise_sq_dist(signals: jnp.ndarray, units: jnp.ndarray) -> jnp.ndarray:
+    """All-pairs squared distances, naive difference form.
+
+    signals: f32[m, d]; units: f32[n, d] -> f32[m, n]
+    """
+    diff = signals[:, None, :] - units[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def find_winners_ref(signals: jnp.ndarray, units: jnp.ndarray):
+    """Reference top-2 nearest-unit search.
+
+    Returns ``(i1, i2, d1, d2)`` with ``i*`` int32[m], ``d*`` f32[m].
+    ``jnp.argmin`` breaks ties toward the lowest index, matching the kernel's
+    in-block behavior and the rust scalar implementation.
+    """
+    d = pairwise_sq_dist(signals, units)
+    m = d.shape[0]
+    i1 = jnp.argmin(d, axis=1).astype(jnp.int32)
+    d1 = jnp.min(d, axis=1)
+    masked = d.at[jnp.arange(m), i1].set(jnp.inf)
+    i2 = jnp.argmin(masked, axis=1).astype(jnp.int32)
+    d2 = jnp.min(masked, axis=1)
+    return i1, i2, d1, d2
+
+
+def ties_possible(signals, units) -> bool:
+    """True when the top-2 result is ambiguous under index tie-breaking.
+
+    Used by tests: when hypothesis generates exact-duplicate units (or exact
+    equidistance), the kernel's cross-tile merge may legitimately pick a
+    different index than the oracle; tests then compare distances only.
+    """
+    import numpy as np
+
+    d = np.asarray(pairwise_sq_dist(jnp.asarray(signals), jnp.asarray(units)))
+    part = np.sort(d, axis=1)
+    k = min(3, part.shape[1])
+    for col in range(k - 1):
+        if np.any(part[:, col] == part[:, col + 1]):
+            return True
+    return False

@@ -1,0 +1,112 @@
+"""Layer-2 JAX compute graph for the batched Find Winners phase.
+
+The paper's L2 is deliberately thin: the multi-signal contribution parallelizes
+exactly ONE phase — Find Winners — and leaves Sample and Update on the host
+(section 2.5 / Conclusions). Correspondingly this module exposes the batched
+top-2 search as a fixed-shape jax function per ``(m, n)`` size bucket, in two
+flavors that share exact float semantics:
+
+- ``pallas``: calls the L1 Pallas kernel (``kernels.find_winners``), which
+  lowers (interpret mode) into the same HLO module;
+- ``scan``:   a pure-XLA formulation that chunks the unit axis with
+  ``lax.scan`` and performs the identical running top-2 merge. This is the
+  A/B comparator for the perf pass (DESIGN.md section 9) and keeps peak memory
+  at ``m * chunk`` instead of ``m * n``.
+
+Both flavors consume units pre-padded with ``PAD_VALUE`` by the rust caller
+and return ``(i1, i2, d1, d2)``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.find_winners import find_winners_pallas
+from .kernels.ref import PAD_VALUE  # noqa: F401  (re-exported for aot/tests)
+
+SCAN_CHUNK = 512
+
+
+def find_winners_scan(signals, units, *, chunk: int = SCAN_CHUNK):
+    """Pure-XLA batched top-2: scan over unit chunks with a running merge.
+
+    Mirrors the Pallas kernel's cross-tile merge exactly (strict ``<`` keeps
+    the earlier chunk on ties -> lowest-index tie-break).
+    """
+    m, d = signals.shape
+    n = units.shape[0]
+    chunk = min(chunk, n)
+    if n % chunk != 0:
+        pad = chunk - n % chunk
+        units = jnp.concatenate(
+            [units, jnp.full((pad, d), PAD_VALUE, units.dtype)], axis=0
+        )
+        n = units.shape[0]
+    tiles = units.reshape(n // chunk, chunk, d)
+
+    def step(carry, tile_with_idx):
+        tile, t = tile_with_idx
+        d1, d2, i1, i2 = carry
+        diff = signals[:, None, :] - tile[None, :, :]
+        dist = jnp.sum(diff * diff, axis=-1)
+        col = jax.lax.broadcasted_iota(jnp.int32, dist.shape, 1)
+        bi1 = jnp.argmin(dist, axis=1).astype(jnp.int32)
+        bd1 = jnp.min(dist, axis=1)
+        masked = jnp.where(col == bi1[:, None], jnp.inf, dist)
+        bi2 = jnp.argmin(masked, axis=1).astype(jnp.int32)
+        bd2 = jnp.min(masked, axis=1)
+        base = t * chunk
+        bi1, bi2 = bi1 + base, bi2 + base
+
+        take_new1 = bd1 < d1
+        nd1 = jnp.where(take_new1, bd1, d1)
+        ni1 = jnp.where(take_new1, bi1, i1)
+        lf_d = jnp.where(take_new1, d1, bd1)
+        lf_i = jnp.where(take_new1, i1, bi1)
+        take_new2 = bd2 < d2
+        w2_d = jnp.where(take_new2, bd2, d2)
+        w2_i = jnp.where(take_new2, bi2, i2)
+        take_lf = lf_d < w2_d
+        nd2 = jnp.where(take_lf, lf_d, w2_d)
+        ni2 = jnp.where(take_lf, lf_i, w2_i)
+        return (nd1, nd2, ni1, ni2), None
+
+    init = (
+        jnp.full((m,), jnp.inf, jnp.float32),
+        jnp.full((m,), jnp.inf, jnp.float32),
+        jnp.zeros((m,), jnp.int32),
+        jnp.zeros((m,), jnp.int32),
+    )
+    idx = jnp.arange(tiles.shape[0], dtype=jnp.int32)
+    (d1, d2, i1, i2), _ = jax.lax.scan(step, init, (tiles, idx))
+    return i1, i2, d1, d2
+
+
+def find_winners_model(signals, units, *, flavor: str = "pallas",
+                       block_m: int = 128, block_n: int = 128):
+    """The exported L2 entry point: fixed-shape batched Find Winners.
+
+    ``signals`` f32[m, d]; ``units`` f32[n, d] with padding = ``PAD_VALUE``.
+    Output tuple ``(i1 i32[m], i2 i32[m], d1 f32[m], d2 f32[m])``.
+    """
+    if flavor == "pallas":
+        return find_winners_pallas(
+            signals, units, block_m=block_m, block_n=block_n
+        )
+    if flavor == "scan":
+        return find_winners_scan(signals, units)
+    raise ValueError(f"unknown flavor {flavor!r}")
+
+
+def lower_bucket(m: int, n: int, d: int = 3, *, flavor: str = "pallas",
+                 block_m: int = 128, block_n: int = 128):
+    """Lower one ``(m, n)`` bucket to a jax ``Lowered`` object."""
+    sig = jax.ShapeDtypeStruct((m, d), jnp.float32)
+    uni = jax.ShapeDtypeStruct((n, d), jnp.float32)
+    fn = functools.partial(
+        find_winners_model, flavor=flavor, block_m=block_m, block_n=block_n
+    )
+    return jax.jit(fn).lower(sig, uni)

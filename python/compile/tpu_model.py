@@ -1,0 +1,76 @@
+"""TPU roofline model for the Find-Winners kernel (DESIGN.md §9, §11.5).
+
+The reproduction testbed is a single CPU core: the physical data-parallel
+axis of the paper's GPU column does not exist, so device speedups cannot be
+*measured* here. This module computes the clearly-labeled *estimate* used in
+EXPERIMENTS.md §TPU-model: per-bucket kernel time on a TPU-v4-like core from
+first principles, using the L1 kernel's actual BlockSpec schedule.
+
+Model (exact flavor, diff² on the VPU):
+
+- HBM traffic per batch: each signal tile is re-read once per unit tile and
+  vice versa under the `(m/bm, n/bn)` grid:
+      bytes = m·12·(n/bn) + n·12·(m/bm) + m·16 (outputs)
+- VPU work per pair: 3 sub + 3 mul + 2 add (distance) + ~4 compare/select
+  (running top-2 merge) ≈ 12 lane-ops.
+- Roofline time = max(bytes / BW, ops / VPU_THROUGHPUT); the kernel is
+  compute(VPU)-bound for all buckets at the default 128×128 blocks.
+
+Usage: python -m compile.tpu_model [--manifest ../artifacts/manifest.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+# TPU-v4-like single-core budget (public figures, order-of-magnitude).
+HBM_BW = 1.2e12  # bytes/s
+VPU_OPS = 3.5e12  # f32 lane-ops/s
+OPS_PER_PAIR = 12.0
+
+DEFAULT_BLOCK = 128
+
+
+def bucket_estimate(m: int, n: int, bm: int = DEFAULT_BLOCK, bn: int = DEFAULT_BLOCK):
+    """Returns (bytes, ops, time_s, bound) for one batch of the bucket."""
+    tiles_m = max(1, m // bm)
+    tiles_n = max(1, n // bn)
+    bytes_moved = m * 12 * tiles_n + n * 12 * tiles_m + m * 16
+    ops = m * n * OPS_PER_PAIR
+    t_mem = bytes_moved / HBM_BW
+    t_cmp = ops / VPU_OPS
+    t = max(t_mem, t_cmp)
+    return bytes_moved, ops, t, ("memory" if t_mem > t_cmp else "vpu")
+
+
+def vmem_bytes(bm: int, bn: int, d: int = 3) -> int:
+    """Mirror of kernels.find_winners.vmem_footprint_bytes."""
+    return (bm + bn) * d * 4 + 2 * bm * bn * 4 + 4 * bm * 4
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--manifest", default="../artifacts/manifest.json")
+    p.add_argument("--block-m", type=int, default=DEFAULT_BLOCK)
+    p.add_argument("--block-n", type=int, default=DEFAULT_BLOCK)
+    args = p.parse_args(argv)
+
+    man = json.load(open(args.manifest))
+    buckets = sorted(
+        {(e["m"], e["n"]) for e in man["artifacts"]},
+    )
+    print(
+        "TPU-v4-like roofline ESTIMATE (not a measurement) — exact flavor, "
+        f"blocks {args.block_m}x{args.block_n}, "
+        f"VMEM/step {vmem_bytes(args.block_m, args.block_n)/2**20:.2f} MiB"
+    )
+    print(f"{'m':>6} {'n':>6} {'batch_time':>12} {'per_signal':>12} {'bound':>7}")
+    for m, n in buckets:
+        _, _, t, bound = bucket_estimate(m, n, args.block_m, args.block_n)
+        print(f"{m:>6} {n:>6} {t:>12.3e} {t / m:>12.3e} {bound:>7}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,132 @@
+"""AOT pipeline tests: bucket ladder, manifest contract, HLO-text format."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+class TestBucketLadder:
+    def test_ladder_shape(self):
+        got = list(aot.buckets(16384))
+        assert got[0] == (128, 128)
+        assert (8192, 8192) in got
+        assert got[-1] == (8192, 16384)
+
+    def test_m_capped_at_8192(self):
+        for m, n in aot.buckets(32768):
+            assert m == min(n, aot.M_CAP)
+
+    def test_powers_of_two(self):
+        for m, n in aot.buckets(16384):
+            assert n & (n - 1) == 0 and m & (m - 1) == 0
+
+
+class TestEmission:
+    @pytest.fixture(scope="class")
+    def built(self, tmp_path_factory):
+        out = tmp_path_factory.mktemp("artifacts")
+        manifest = aot.build(
+            str(out), max_n=256, flavors=("pallas", "scan"),
+            block_m=64, block_n=64, default_flavor="pallas", force=True,
+        )
+        return out, manifest
+
+    def test_all_files_exist(self, built):
+        out, manifest = built
+        assert len(manifest["artifacts"]) == 4  # 2 buckets x 2 flavors
+        for e in manifest["artifacts"]:
+            assert (out / e["file"]).exists()
+
+    def test_hlo_text_not_proto(self, built):
+        """The interchange MUST be HLO text (xla_extension 0.5.1 rejects
+        jax>=0.5 serialized protos)."""
+        out, manifest = built
+        for e in manifest["artifacts"]:
+            head = (out / e["file"]).read_text()[:200]
+            assert "HloModule" in head
+
+    def test_manifest_contract(self, built):
+        out, _ = built
+        m = json.loads((out / "manifest.json").read_text())
+        assert m["pad_value"] == 1e30
+        assert m["dim"] == 3
+        assert m["default_flavor"] in ("pallas", "scan")
+        for e in m["artifacts"]:
+            assert e["inputs"] == [f"f32[{e['m']},3]", f"f32[{e['n']},3]"]
+            assert e["outputs"][0] == f"s32[{e['m']}]"
+
+    def test_incremental_noop(self, built):
+        """Re-running without --force keeps existing files (mtime unchanged)."""
+        out, _ = built
+        target = out / aot.artifact_name("scan", 128, 128)
+        before = target.stat().st_mtime_ns
+        aot.build(str(out), max_n=128, flavors=("scan",), block_m=64,
+                  block_n=64, default_flavor="scan", force=False)
+        assert target.stat().st_mtime_ns == before
+
+    def test_entry_point_is_tuple(self, built):
+        """return_tuple=True: ENTRY computation must return a 4-tuple so the
+        rust side can to_tuple() it."""
+        out, manifest = built
+        for e in manifest["artifacts"]:
+            text = (out / e["file"]).read_text()
+            roots = [l for l in text.splitlines() if "ROOT" in l]
+            assert any(
+                f"(s32[{e['m']}]" in l and f"f32[{e['m']}]" in l
+                for l in roots
+            ), e["file"]
+
+
+class TestRepoArtifacts:
+    """Sanity over the artifacts/ directory actually shipped to rust
+    (skipped when `make artifacts` has not run yet)."""
+
+    MANIFEST = os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json"
+    )
+
+    @pytest.fixture()
+    def manifest(self):
+        if not os.path.exists(self.MANIFEST):
+            pytest.skip("make artifacts not run")
+        return json.load(open(self.MANIFEST))
+
+    def test_covers_paper_sizes(self, manifest):
+        """The ladder must cover every network size in Tables 1-4
+        (347 .. 15,638 units) and the m cap of 8192."""
+        ns = {e["n"] for e in manifest["artifacts"]}
+        for units in (347, 658, 8884, 15638):
+            assert any(n >= units + 1 for n in ns)
+        assert any(e["m"] == 8192 for e in manifest["artifacts"])
+
+    def test_files_present(self, manifest):
+        base = os.path.dirname(self.MANIFEST)
+        for e in manifest["artifacts"]:
+            assert os.path.exists(os.path.join(base, e["file"]))
+
+
+class TestTpuModel:
+    """The §TPU-model roofline estimator (compile.tpu_model)."""
+
+    def test_vpu_bound_at_default_blocks(self):
+        from compile import tpu_model
+
+        _, _, t, bound = tpu_model.bucket_estimate(8192, 8192)
+        assert bound == "vpu"
+        assert 1e-6 < t < 1e-3
+
+    def test_time_scales_with_work(self):
+        from compile import tpu_model
+
+        small = tpu_model.bucket_estimate(128, 128)[2]
+        big = tpu_model.bucket_estimate(8192, 8192)[2]
+        assert big > 100 * small
+
+    def test_vmem_matches_kernel_model(self):
+        from compile import tpu_model
+        from compile.kernels.find_winners import vmem_footprint_bytes
+
+        assert tpu_model.vmem_bytes(128, 128) == vmem_footprint_bytes(128, 128)

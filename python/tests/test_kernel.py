@@ -1,0 +1,162 @@
+"""Layer-1 correctness: Pallas kernel vs the pure-jnp oracle.
+
+This is the core correctness signal of the compile path: every artifact the
+rust runtime executes is lowered from the function under test here.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.find_winners import (
+    find_winners_pallas,
+    vmem_footprint_bytes,
+)
+from compile.kernels.ref import PAD_VALUE, find_winners_ref, ties_possible
+
+
+def _run_both(s, u, **kw):
+    out = find_winners_pallas(jnp.asarray(s), jnp.asarray(u), **kw)
+    ref = find_winners_ref(jnp.asarray(s), jnp.asarray(u))
+    return [np.asarray(x) for x in out], [np.asarray(x) for x in ref]
+
+
+def _assert_match(s, u, out, ref):
+    i1, i2, d1, d2 = out
+    ri1, ri2, rd1, rd2 = ref
+    np.testing.assert_allclose(d1, rd1, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(d2, rd2, rtol=1e-6, atol=1e-6)
+    if not ties_possible(s, u):
+        np.testing.assert_array_equal(i1, ri1)
+        np.testing.assert_array_equal(i2, ri2)
+
+
+def _random_case(seed, m, n, pad=0):
+    rng = np.random.default_rng(seed)
+    s = rng.normal(size=(m, 3)).astype(np.float32)
+    u = rng.normal(size=(n, 3)).astype(np.float32)
+    if pad:
+        u[n - pad:] = PAD_VALUE
+    return s, u
+
+
+class TestKernelVsRef:
+    @pytest.mark.parametrize("m,n", [(1, 2), (3, 7), (16, 16), (37, 211),
+                                     (128, 128), (200, 1000), (64, 4096)])
+    def test_random_clouds(self, m, n):
+        s, u = _random_case(42 + m * n, m, n)
+        out, ref = _run_both(s, u, block_m=32, block_n=64)
+        _assert_match(s, u, out, ref)
+
+    @pytest.mark.parametrize("pad", [1, 5, 100])
+    def test_padded_units_never_win(self, pad):
+        s, u = _random_case(7, 33, 128, pad=pad)
+        out, ref = _run_both(s, u, block_m=16, block_n=32)
+        _assert_match(s, u, out, ref)
+        assert np.all(out[0] < 128 - pad)
+        assert np.all(out[1] < 128 - pad)
+
+    def test_winner_not_equal_second(self):
+        s, u = _random_case(3, 50, 300)
+        out, _ = _run_both(s, u)
+        assert np.all(out[0] != out[1])
+
+    def test_signal_on_unit_gives_zero_distance(self):
+        _, u = _random_case(11, 1, 64)
+        s = u[17:18].copy()
+        out, _ = _run_both(s, u, block_m=8, block_n=16)
+        assert out[0][0] == 17
+        assert out[2][0] == 0.0
+
+    @pytest.mark.parametrize("bm,bn", [(8, 8), (16, 64), (128, 128),
+                                       (64, 256)])
+    def test_block_shape_invariance(self, bm, bn):
+        """The running cross-tile merge must be block-shape independent."""
+        s, u = _random_case(5, 96, 640)
+        base, _ = _run_both(s, u, block_m=8, block_n=8)
+        out, _ = _run_both(s, u, block_m=bm, block_n=bn)
+        for a, b in zip(base, out):
+            np.testing.assert_array_equal(a, b)
+
+    def test_mxu_flavor_close_to_exact(self):
+        """The |s|^2-2su+|u|^2 expansion changes rounding but not winners on
+        well-separated data."""
+        s, u = _random_case(13, 64, 512)
+        exact = find_winners_pallas(jnp.asarray(s), jnp.asarray(u))
+        mxu = find_winners_pallas(jnp.asarray(s), jnp.asarray(u), flavor="mxu")
+        np.testing.assert_array_equal(np.asarray(exact[0]), np.asarray(mxu[0]))
+        np.testing.assert_allclose(
+            np.asarray(exact[2]), np.asarray(mxu[2]), rtol=1e-3, atol=1e-3
+        )
+
+    def test_two_units_only(self):
+        """Smallest legal network: top-2 must be the two units, ordered."""
+        u = np.array([[0, 0, 0], [10, 0, 0]], np.float32)
+        s = np.array([[1, 0, 0], [9, 0, 0]], np.float32)
+        out, _ = _run_both(s, u, block_m=8, block_n=8)
+        np.testing.assert_array_equal(out[0], [0, 1])
+        np.testing.assert_array_equal(out[1], [1, 0])
+
+
+class TestHypothesisSweep:
+    """Property sweep over shapes and values (DESIGN.md section 10)."""
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        m=st.integers(1, 70),
+        n=st.integers(2, 300),
+        bm=st.sampled_from([8, 16, 32, 128]),
+        bn=st.sampled_from([8, 32, 64, 256]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, m, n, bm, bn, seed):
+        s, u = _random_case(seed, m, n)
+        out, ref = _run_both(s, u, block_m=bm, block_n=bn)
+        _assert_match(s, u, out, ref)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(1, 40),
+        n=st.integers(2, 120),
+        dup=st.integers(0, 10),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_duplicate_units_distances_still_exact(self, m, n, dup, seed):
+        """Duplicated units force ties: indices may differ, distances not."""
+        s, u = _random_case(seed, m, n)
+        if dup and n > dup:
+            u[:dup] = u[dup:2 * dup] if 2 * dup <= n else u[n - dup:]
+        out, ref = _run_both(s, u, block_m=16, block_n=16)
+        np.testing.assert_allclose(out[2], ref[2], rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(out[3], ref[3], rtol=1e-6, atol=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        scale=st.floats(1e-3, 1e3),
+        shift=st.floats(-100.0, 100.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_scale_shift_robust(self, scale, shift, seed):
+        """Winner indices are invariant to similarity transforms of the
+        cloud (applied to both signals and units)."""
+        s, u = _random_case(seed, 24, 96)
+        out0, _ = _run_both(s, u, block_m=8, block_n=32)
+        s2 = (s * scale + shift).astype(np.float32)
+        u2 = (u * scale + shift).astype(np.float32)
+        out1, _ = _run_both(s2, u2, block_m=8, block_n=32)
+        if not (ties_possible(s, u) or ties_possible(s2, u2)):
+            np.testing.assert_array_equal(out0[0], out1[0])
+
+
+class TestVmemModel:
+    def test_default_blocks_fit_budget(self):
+        assert vmem_footprint_bytes(128, 128) < 16 * 2**20
+
+    def test_footprint_monotone(self):
+        assert vmem_footprint_bytes(256, 256) > vmem_footprint_bytes(128, 128)
+
+    @pytest.mark.parametrize("bm,bn", [(128, 128), (256, 256), (512, 512)])
+    def test_perf_plan_blocks_fit(self, bm, bn):
+        """Every block shape in the DESIGN.md section 9 sweep fits VMEM."""
+        assert vmem_footprint_bytes(bm, bn) < 16 * 2**20

@@ -1,0 +1,106 @@
+"""Layer-2 correctness: scan flavor vs Pallas flavor vs oracle, plus the
+exported-bucket contract the rust runtime relies on."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.model import (
+    SCAN_CHUNK,
+    find_winners_model,
+    find_winners_scan,
+    lower_bucket,
+)
+from compile.kernels.ref import PAD_VALUE, find_winners_ref, ties_possible
+
+
+def _cloud(seed, m, n, live=None):
+    rng = np.random.default_rng(seed)
+    s = rng.normal(size=(m, 3)).astype(np.float32)
+    u = rng.normal(size=(n, 3)).astype(np.float32)
+    if live is not None:
+        u[live:] = PAD_VALUE
+    return jnp.asarray(s), jnp.asarray(u)
+
+
+class TestScanFlavor:
+    @pytest.mark.parametrize("m,n", [(4, 8), (128, 128), (77, 1000),
+                                     (128, 2048)])
+    def test_scan_matches_ref(self, m, n):
+        s, u = _cloud(m * n, m, n)
+        out = find_winners_scan(s, u)
+        ref = find_winners_ref(s, u)
+        for a, b in zip(out, ref):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1e-6)
+
+    def test_scan_chunk_invariance(self):
+        s, u = _cloud(1, 32, 700)
+        base = find_winners_scan(s, u, chunk=700)
+        for chunk in (1, 7, 64, 256, SCAN_CHUNK):
+            out = find_winners_scan(s, u, chunk=chunk)
+            for a, b in zip(out, base):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    @settings(max_examples=25, deadline=None)
+    @given(m=st.integers(1, 50), n=st.integers(2, 260),
+           chunk=st.integers(1, 300), seed=st.integers(0, 2**31 - 1))
+    def test_scan_hypothesis(self, m, n, chunk, seed):
+        s, u = _cloud(seed, m, n)
+        out = find_winners_scan(s, u, chunk=chunk)
+        ref = find_winners_ref(s, u)
+        np.testing.assert_allclose(np.asarray(out[2]), np.asarray(ref[2]),
+                                   rtol=1e-6, atol=1e-6)
+        if not ties_possible(np.asarray(s), np.asarray(u)):
+            np.testing.assert_array_equal(np.asarray(out[0]),
+                                          np.asarray(ref[0]))
+
+
+class TestFlavorParity:
+    """pallas and scan flavors share exact semantics — the rust runtime may
+    pick either artifact per bucket without changing algorithm behavior."""
+
+    @pytest.mark.parametrize("m,n,live", [(128, 128, 5), (128, 128, 128),
+                                          (128, 256, 200), (64, 512, 300)])
+    def test_bitwise_equal_outputs(self, m, n, live):
+        s, u = _cloud(99, m, n, live=live)
+        a = find_winners_model(s, u, flavor="pallas")
+        b = find_winners_model(s, u, flavor="scan")
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_unknown_flavor_raises(self):
+        s, u = _cloud(0, 8, 8)
+        with pytest.raises(ValueError):
+            find_winners_model(s, u, flavor="cuda")
+
+
+class TestBucketContract:
+    """What rust (runtime/registry.rs) assumes about every artifact."""
+
+    @pytest.mark.parametrize("flavor", ["pallas", "scan"])
+    def test_lowered_signature(self, flavor):
+        low = lower_bucket(128, 256, flavor=flavor)
+        text = low.as_text()
+        assert "128x3" in text and "256x3" in text
+
+    def test_live_prefix_semantics(self):
+        """Only the first `live` unit slots are real; results must be
+        identical to a dense call on the live prefix."""
+        m, n, live = 64, 256, 37
+        s, u = _cloud(5, m, n, live=live)
+        out = find_winners_model(s, u, flavor="scan")
+        ref = find_winners_ref(s, u[:live])
+        for a, b in zip(out, ref):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1e-6)
+
+    def test_signal_rows_independent(self):
+        """Row i of the batch output depends only on signal i — the implicit
+        contract behind 'ignore output rows beyond the live batch'."""
+        s, u = _cloud(21, 32, 128)
+        full = find_winners_model(s, u, flavor="scan")
+        half = find_winners_model(s[:16], u, flavor="scan")
+        for a, b in zip(full, half):
+            np.testing.assert_array_equal(np.asarray(a)[:16], np.asarray(b))

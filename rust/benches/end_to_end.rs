@@ -1,0 +1,48 @@
+//! End-to-end driver comparison at smoke scale — the bench-sized analogue
+//! of the paper's Tables 1–4 / Fig. 10 (who wins end-to-end, by what
+//! factor). Full paper-shaped runs: `msgsn reproduce --scale quick`.
+
+use std::path::Path;
+
+use msgsn::bench::{grid::run_grid, render::render_figure10, Scale};
+use msgsn::config::Driver;
+use msgsn::mesh::BenchmarkShape;
+
+fn main() -> anyhow::Result<()> {
+    let mut drivers = vec![Driver::Single, Driver::Indexed, Driver::Multi];
+    if Path::new("artifacts/manifest.json").exists() {
+        drivers.push(Driver::Pjrt);
+    } else {
+        eprintln!("note: artifacts/ missing — pjrt column skipped");
+    }
+
+    println!("end-to-end smoke grid (blob + eight):");
+    let grid = run_grid(
+        &[BenchmarkShape::Blob, BenchmarkShape::Eight],
+        &drivers,
+        &Scale::SMOKE,
+        42,
+        None,
+        |line| println!("{line}"),
+    )?;
+
+    for shape in grid.shapes() {
+        println!("\n[{}] time to convergence / cap:", shape.name());
+        for &d in &drivers {
+            let r = grid.get(shape, d).unwrap();
+            println!(
+                "  {:8} {:>9.3}s  ({} units, find {:.0}% of time)",
+                d.name(),
+                r.total.as_secs_f64(),
+                r.units,
+                100.0 * r.phase.find_fraction(),
+            );
+        }
+    }
+
+    if drivers.contains(&Driver::Pjrt) {
+        let (text, _) = render_figure10(&grid)?;
+        println!("\n{text}");
+    }
+    Ok(())
+}

@@ -1,0 +1,114 @@
+//! Microbenchmark of the Find Winners implementations vs network size —
+//! the per-phase counterpart of the paper's Fig. 9 ("times per signal in
+//! the Find Winners phase" and speed-ups vs Single-signal).
+//!
+//! Custom harness (`harness = false`): the vendored crate set has no
+//! criterion. Methodology: warm up, then repeat each measurement until
+//! ≥ `MIN_TIME` elapsed, report the best-of-`REPS` per-signal time (best-of
+//! resists scheduler noise on the single-CPU testbed).
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use msgsn::findwinners::{BatchRust, FindWinners, Indexed, Scalar};
+use msgsn::geometry::Vec3;
+use msgsn::rng::Rng;
+use msgsn::runtime::{PjrtFindWinners, Registry};
+use msgsn::som::Network;
+
+const REPS: usize = 5;
+const MIN_TIME: Duration = Duration::from_millis(120);
+
+fn random_net(n: usize, seed: u64) -> Network {
+    let mut rng = Rng::seed_from(seed);
+    let mut net = Network::new();
+    for _ in 0..n {
+        net.insert(Vec3::new(rng.f32(), rng.f32(), rng.f32()), 0.1);
+    }
+    net
+}
+
+fn random_signals(m: usize, seed: u64) -> Vec<Vec3> {
+    let mut rng = Rng::seed_from(seed);
+    (0..m).map(|_| Vec3::new(rng.f32(), rng.f32(), rng.f32())).collect()
+}
+
+/// Best-of-REPS seconds per signal for one batched implementation.
+fn bench_batch(fw: &mut dyn FindWinners, net: &Network, signals: &[Vec3]) -> f64 {
+    let mut out = Vec::new();
+    fw.find2_batch(net, signals, &mut out); // warmup (+ PJRT compile)
+    let mut best = f64::INFINITY;
+    for _ in 0..REPS {
+        let mut iters = 0u32;
+        let t0 = Instant::now();
+        while t0.elapsed() < MIN_TIME {
+            fw.find2_batch(net, signals, &mut out);
+            iters += 1;
+        }
+        let per_signal = t0.elapsed().as_secs_f64() / (iters as f64 * signals.len() as f64);
+        best = best.min(per_signal);
+    }
+    best
+}
+
+/// Best-of-REPS seconds per signal for the per-signal (single) path.
+fn bench_single(fw: &mut dyn FindWinners, net: &Network, signals: &[Vec3]) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..REPS {
+        let mut done = 0usize;
+        let t0 = Instant::now();
+        while t0.elapsed() < MIN_TIME {
+            let s = signals[done % signals.len()];
+            std::hint::black_box(fw.find2(net, s));
+            done += 1;
+        }
+        best = best.min(t0.elapsed().as_secs_f64() / done as f64);
+    }
+    best
+}
+
+fn main() {
+    let pjrt_ready = Path::new("artifacts/manifest.json").exists();
+    println!("find_winners microbenchmark (best-of-{REPS}, per-signal seconds)");
+    println!(
+        "{:>7} {:>7} {:>12} {:>12} {:>12} {:>12} {:>9} {:>9}",
+        "units", "batch", "single", "indexed", "multi", "pjrt", "idx x", "pjrt x"
+    );
+    for n in [128usize, 512, 2048, 8192] {
+        let net = random_net(n, 1);
+        let m = (n + 1).next_power_of_two().min(8192);
+        let signals = random_signals(m, 2);
+
+        let single = bench_single(&mut Scalar::new(), &net, &signals);
+        let mut idx = Indexed::new(0.08);
+        idx.rebuild(&net);
+        let indexed = bench_single(&mut idx, &net, &signals);
+        let multi = bench_batch(&mut BatchRust::default(), &net, &signals);
+        let pjrt = if pjrt_ready {
+            // Flavor override for A/B runs: MSGSN_FLAVOR=pallas|scan.
+            let flavor = std::env::var("MSGSN_FLAVOR").ok();
+            let reg = Registry::open(Path::new("artifacts"), flavor.as_deref()).unwrap();
+            bench_batch(&mut PjrtFindWinners::new(reg), &net, &signals)
+        } else {
+            f64::NAN
+        };
+        println!(
+            "{:>7} {:>7} {:>12.3e} {:>12.3e} {:>12.3e} {:>12.3e} {:>9.1} {:>9.1}",
+            n,
+            m,
+            single,
+            indexed,
+            multi,
+            pjrt,
+            single / indexed,
+            single / pjrt
+        );
+    }
+    if !pjrt_ready {
+        println!("(pjrt column skipped: run `make artifacts`)");
+    }
+    println!(
+        "\npaper shape (Fig 9b): speedups grow with the unit count; the \
+         batched implementations win by orders of magnitude at n=8192."
+    );
+}

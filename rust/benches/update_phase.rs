@@ -1,0 +1,118 @@
+//! Update-phase throughput: the paper's Conclusions call Update "the most
+//! time-consuming" phase once Find Winners is accelerated, and leave its
+//! parallelization as future work. This bench quantifies the Update rule
+//! itself (SOAM adapt/insert/prune path) and the winner-lock overhead, and
+//! measures the pipelined driver's overlap win (our answer to that future
+//! work).
+
+use std::time::{Duration, Instant};
+
+use msgsn::config::Limits;
+use msgsn::coordinator::{run_pipelined, LockTable};
+use msgsn::engine::run_multi_signal;
+use msgsn::findwinners::{BatchRust, FindWinners, Scalar};
+use msgsn::mesh::{benchmark_mesh, BenchmarkShape, SurfaceSampler};
+use msgsn::rng::Rng;
+use msgsn::som::{ChangeLog, GrowingNetwork, Soam, SoamParams};
+
+fn grown_soam(sampler: &SurfaceSampler, threshold: f32, grow_signals: u64) -> Soam {
+    let mut rng = Rng::seed_from(3);
+    let mut soam = Soam::new(SoamParams {
+        insertion_threshold: threshold,
+        ..SoamParams::default()
+    });
+    soam.init(sampler, &mut rng);
+    let mut fw = Scalar::new();
+    let mut log = ChangeLog::default();
+    for _ in 0..grow_signals {
+        let s = sampler.sample(&mut rng);
+        let w = fw.find2(soam.net(), s).unwrap();
+        log.clear();
+        soam.update(s, &w, &mut log);
+    }
+    soam
+}
+
+fn main() {
+    let mesh = benchmark_mesh(BenchmarkShape::Blob, 48);
+    let sampler = SurfaceSampler::new(&mesh);
+
+    // 1. Raw update-rule throughput on a mature network.
+    println!("update rule throughput (mature network, winners precomputed):");
+    for (threshold, grow) in [(0.15f32, 150_000u64), (0.075, 600_000)] {
+        let mut soam = grown_soam(&sampler, threshold, grow);
+        let units = soam.net().len();
+        let mut rng = Rng::seed_from(9);
+        let mut fw = Scalar::new();
+        // Precompute a pool of (signal, winners).
+        let pool: Vec<_> = (0..4096)
+            .map(|_| {
+                let s = sampler.sample(&mut rng);
+                (s, fw.find2(soam.net(), s).unwrap())
+            })
+            .collect();
+        let mut log = ChangeLog::default();
+        let t0 = Instant::now();
+        let mut done = 0usize;
+        while t0.elapsed() < Duration::from_millis(400) {
+            let (s, w) = pool[done % pool.len()];
+            log.clear();
+            soam.update(s, &w, &mut log);
+            done += 1;
+        }
+        let per = t0.elapsed().as_secs_f64() / done as f64;
+        println!(
+            "  {:>5} units: {:>10.1} ns/update ({:.2} M updates/s)",
+            units,
+            per * 1e9,
+            1e-6 / per
+        );
+    }
+
+    // 2. Lock-table overhead (the §2.2 collision mechanism).
+    {
+        let mut locks = LockTable::new();
+        locks.ensure_capacity(100_000);
+        let mut rng = Rng::seed_from(1);
+        let winners: Vec<u32> = (0..8192).map(|_| rng.below(3000) as u32).collect();
+        let t0 = Instant::now();
+        let mut rounds = 0u64;
+        while t0.elapsed() < Duration::from_millis(300) {
+            locks.next_batch();
+            for &w in &winners {
+                std::hint::black_box(locks.try_lock(w));
+            }
+            rounds += 1;
+        }
+        let per = t0.elapsed().as_secs_f64() / (rounds as f64 * winners.len() as f64);
+        println!("\nlock table: {:.2} ns per try_lock (batch of 8192)", per * 1e9);
+    }
+
+    // 3. Pipelined vs plain multi driver (Sample/Update overlap).
+    println!("\npipelined sample-prefetch vs plain multi (30k signals, blob):");
+    for name in ["multi", "pipelined"] {
+        let mut rng = Rng::seed_from(5);
+        let mut soam = Soam::new(SoamParams {
+            insertion_threshold: 0.1,
+            ..SoamParams::default()
+        });
+        let mut fw = BatchRust::default();
+        let limits = Limits { max_signals: 300_000, ..Limits::default() };
+        let t0 = Instant::now();
+        let r = if name == "multi" {
+            run_multi_signal(&mut soam, &sampler, &mut fw, &limits, &mut rng)
+        } else {
+            run_pipelined(&mut soam, &sampler, &mut fw, &limits, &mut rng, 2)
+        };
+        println!(
+            "  {:10} {:>8.3}s total  sample {:>7.3}s  find {:>7.3}s  update {:>7.3}s ({} units)",
+            name,
+            t0.elapsed().as_secs_f64(),
+            r.phase.sample.as_secs_f64(),
+            r.phase.find.as_secs_f64(),
+            r.phase.update.as_secs_f64(),
+            r.units,
+        );
+    }
+    println!("\n(pipelined: the Sample row is residual wait time — overlap hides the rest)");
+}

@@ -1,0 +1,272 @@
+//! Ablations of the multi-signal design choices (DESIGN.md §6 "ablation
+//! benches for the design choices").
+//!
+//! The paper motivates three mechanisms without isolating them:
+//! the **winner lock** (§2.2 — "only the first incoming signal … will
+//! produce the corresponding effect"), the **m-schedule** (§3.1 — least
+//! power of two above the unit count, "to avoid discarding an excessive
+//! number of signals"), and our staleness guard (DESIGN.md §11.3). Each
+//! ablation below switches one mechanism off and reruns the same workload.
+
+use anyhow::Result;
+
+use crate::config::Limits;
+use crate::engine::RunReport;
+use crate::findwinners::{BatchRust, FindWinners, Indexed, Scalar};
+use crate::geometry::Vec3;
+use crate::mesh::{benchmark_mesh, BenchmarkShape, SurfaceSampler};
+use crate::metrics::Table;
+use crate::rng::Rng;
+use crate::som::{ChangeLog, GrowingNetwork, Soam, SoamParams, Winners};
+
+/// Policy knobs for the ablatable multi-signal driver.
+#[derive(Clone, Copy, Debug)]
+pub struct MultiPolicy {
+    /// The §2.2 implicit winner lock. Off ⇒ every signal is applied.
+    pub winner_lock: bool,
+    /// Discard signals superseded by same-batch insertions (§11.3).
+    pub staleness_guard: bool,
+    /// `None` = the paper's power-of-two schedule; `Some(m)` = constant m.
+    pub fixed_m: Option<usize>,
+}
+
+impl Default for MultiPolicy {
+    fn default() -> Self {
+        Self { winner_lock: true, staleness_guard: true, fixed_m: None }
+    }
+}
+
+/// `run_multi_signal` with switchable collision policies (kept separate from
+/// the engine driver so the production loop stays branch-free).
+pub fn run_multi_with_policy(
+    algo: &mut dyn GrowingNetwork,
+    sampler: &SurfaceSampler,
+    fw: &mut dyn FindWinners,
+    limits: &Limits,
+    rng: &mut Rng,
+    policy: MultiPolicy,
+) -> RunReport {
+    let start = std::time::Instant::now();
+    let mut report = RunReport::new(algo.name(), "ablate");
+    let mut log = ChangeLog::default();
+    algo.init(sampler, rng);
+    fw.rebuild(algo.net());
+
+    let mut locks = crate::coordinator::LockTable::new();
+    let mut signals: Vec<Vec3> = Vec::new();
+    let mut winners: Vec<Option<Winners>> = Vec::new();
+    let mut order: Vec<u32> = Vec::new();
+    let mut batch_inserted: Vec<Vec3> = Vec::new();
+
+    loop {
+        report.iterations += 1;
+        let m = policy
+            .fixed_m
+            .unwrap_or_else(|| crate::engine::m_schedule(algo.net().len(), limits.max_parallelism));
+
+        sampler.sample_batch(rng, m, &mut signals);
+        fw.find2_batch(algo.net(), &signals, &mut winners);
+        rng.permutation(m, &mut order);
+        locks.next_batch();
+        locks.ensure_capacity(algo.net().capacity());
+        batch_inserted.clear();
+        for &j in &order {
+            let w = match winners[j as usize] {
+                Some(w) => w,
+                None => {
+                    report.discarded += 1;
+                    continue;
+                }
+            };
+            let signal = signals[j as usize];
+            if !algo.net().is_alive(w.w1) || !algo.net().is_alive(w.w2) {
+                report.discarded += 1;
+                continue;
+            }
+            if policy.staleness_guard
+                && batch_inserted.iter().any(|p| signal.dist2(*p) < w.d1_sq)
+            {
+                report.discarded += 1;
+                continue;
+            }
+            if policy.winner_lock && !locks.try_lock(w.w1) {
+                report.discarded += 1;
+                continue;
+            }
+            log.clear();
+            algo.update(signal, &w, &mut log);
+            for &id in &log.inserted {
+                batch_inserted.push(algo.net().pos(id));
+            }
+            fw.sync(algo.net(), &log);
+        }
+        report.signals += m as u64;
+
+        log.clear();
+        let converged = algo.housekeeping(&mut log);
+        if !log.is_empty() {
+            fw.sync(algo.net(), &log);
+        }
+        if converged {
+            report.converged = true;
+            break;
+        }
+        if report.signals >= limits.max_signals {
+            break;
+        }
+    }
+    report.finish(algo, Default::default(), start.elapsed());
+    report
+}
+
+fn soam_run(policy: MultiPolicy, max_signals: u64, seed: u64) -> RunReport {
+    let mesh = benchmark_mesh(BenchmarkShape::Blob, 32);
+    let sampler = SurfaceSampler::new(&mesh);
+    let mut soam = Soam::new(SoamParams {
+        insertion_threshold: 0.15,
+        ..SoamParams::default()
+    });
+    let mut fw = BatchRust::default();
+    let limits = Limits { max_signals, ..Limits::default() };
+    let mut rng = Rng::seed_from(seed);
+    run_multi_with_policy(&mut soam, &sampler, &mut fw, &limits, &mut rng, policy)
+}
+
+/// Ablation 1: the winner lock and the staleness guard.
+pub fn ablate_collision_policy(max_signals: u64, seed: u64) -> Table {
+    let mut t = Table::new(&[
+        "policy", "converged", "units", "connections", "signals", "discarded",
+    ]);
+    for (name, policy) in [
+        ("no collision handling", MultiPolicy { winner_lock: false, staleness_guard: false, fixed_m: None }),
+        ("winner lock only", MultiPolicy { winner_lock: true, staleness_guard: false, fixed_m: None }),
+        ("lock + staleness guard", MultiPolicy::default()),
+    ] {
+        let r = soam_run(policy, max_signals, seed);
+        t.row(vec![
+            name.into(),
+            r.converged.to_string(),
+            r.units.to_string(),
+            r.connections.to_string(),
+            r.signals.to_string(),
+            r.discarded.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Ablation 2: the m-schedule vs fixed batch sizes.
+pub fn ablate_m_schedule(max_signals: u64, seed: u64) -> Table {
+    let mut t = Table::new(&[
+        "schedule", "converged", "units", "signals", "discarded", "discard %",
+    ]);
+    let mut run = |name: &str, fixed: Option<usize>| {
+        let r = soam_run(
+            MultiPolicy { fixed_m: fixed, ..MultiPolicy::default() },
+            max_signals,
+            seed,
+        );
+        let pct = 100.0 * r.discarded as f64 / r.signals.max(1) as f64;
+        t.row(vec![
+            name.into(),
+            r.converged.to_string(),
+            r.units.to_string(),
+            r.signals.to_string(),
+            r.discarded.to_string(),
+            format!("{pct:.1}"),
+        ]);
+    };
+    run("pow2 schedule (paper)", None);
+    run("fixed m = 64", Some(64));
+    run("fixed m = 1024", Some(1024));
+    run("fixed m = 8192", Some(8192));
+    t
+}
+
+/// Ablation 3: the Indexed variant's cube size (the paper tunes it "for
+/// maximum performances"; mistuned cells either scan too many units or fall
+/// back to exhaustive).
+pub fn ablate_index_cell(seed: u64) -> Result<Table> {
+    let mesh = benchmark_mesh(BenchmarkShape::Eight, 48);
+    let sampler = SurfaceSampler::new(&mesh);
+    // Grow a realistic network once.
+    let mut soam = Soam::new(SoamParams {
+        insertion_threshold: 0.04,
+        ..SoamParams::default()
+    });
+    let mut rng = Rng::seed_from(seed);
+    soam.init(&sampler, &mut rng);
+    let mut fw = Scalar::new();
+    let mut log = ChangeLog::default();
+    for _ in 0..400_000 {
+        let s = sampler.sample(&mut rng);
+        let w = fw.find2(soam.net(), s).unwrap();
+        log.clear();
+        soam.update(s, &w, &mut log);
+    }
+    let net = soam.net();
+
+    let mut t = Table::new(&["cell size", "ns/query", "fallback %", "agreement %"]);
+    let queries: Vec<Vec3> = (0..20_000).map(|_| sampler.sample(&mut rng)).collect();
+    let mut scalar = Scalar::new();
+    let truth: Vec<_> = queries.iter().map(|q| scalar.find2(net, *q)).collect();
+    for cell in [0.02f32, 0.04, 0.08, 0.16, 0.32] {
+        let mut idx = Indexed::new(cell);
+        idx.rebuild(net);
+        let t0 = std::time::Instant::now();
+        let mut agree = 0usize;
+        for (q, want) in queries.iter().zip(&truth) {
+            let got = idx.find2(net, *q);
+            if got.map(|w| w.w1) == want.map(|w| w.w1) {
+                agree += 1;
+            }
+        }
+        let per = t0.elapsed().as_secs_f64() / queries.len() as f64;
+        t.row(vec![
+            format!("{cell:.2}"),
+            format!("{:.0}", per * 1e9),
+            format!("{:.2}", 100.0 * idx.fallback_rate()),
+            format!("{:.2}", 100.0 * agree as f64 / queries.len() as f64),
+        ]);
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_default_matches_production_semantics() {
+        let p = MultiPolicy::default();
+        assert!(p.winner_lock && p.staleness_guard && p.fixed_m.is_none());
+    }
+
+    #[test]
+    fn no_lock_applies_everything() {
+        let r = soam_run(
+            MultiPolicy { winner_lock: false, staleness_guard: false, fixed_m: None },
+            20_000,
+            1,
+        );
+        // Without collision handling nothing is discarded (stale-dead
+        // winners aside, which are rare at this scale).
+        assert!(r.discarded * 20 < r.signals, "{} of {}", r.discarded, r.signals);
+    }
+
+    #[test]
+    fn lock_discards_substantially() {
+        let r = soam_run(MultiPolicy::default(), 20_000, 1);
+        assert!(r.discarded * 4 > r.signals, "{} of {}", r.discarded, r.signals);
+    }
+
+    #[test]
+    fn fixed_m_runs() {
+        let r = soam_run(
+            MultiPolicy { fixed_m: Some(256), ..MultiPolicy::default() },
+            10_000,
+            2,
+        );
+        assert!(r.iterations >= 10_000 / 256);
+    }
+}

@@ -1,0 +1,172 @@
+//! The experiment grid: meshes × implementations, each a full run to
+//! convergence (or the scale's signal cap).
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::config::Driver;
+use crate::engine::{run, RunReport};
+use crate::mesh::{benchmark_mesh, BenchmarkShape};
+use crate::rng::Rng;
+
+use super::scale::Scale;
+
+/// One completed cell of the grid.
+#[derive(Clone, Debug)]
+pub struct GridCell {
+    pub shape: BenchmarkShape,
+    pub driver: Driver,
+    pub report: RunReport,
+}
+
+/// All completed runs of one reproduction session.
+#[derive(Clone, Debug)]
+pub struct Grid {
+    pub scale: Scale,
+    pub seed: u64,
+    pub cells: Vec<GridCell>,
+}
+
+impl Grid {
+    pub fn get(&self, shape: BenchmarkShape, driver: Driver) -> Option<&RunReport> {
+        self.cells
+            .iter()
+            .find(|c| c.shape == shape && c.driver == driver)
+            .map(|c| &c.report)
+    }
+
+    pub fn shapes(&self) -> Vec<BenchmarkShape> {
+        let mut out = Vec::new();
+        for c in &self.cells {
+            if !out.contains(&c.shape) {
+                out.push(c.shape);
+            }
+        }
+        out
+    }
+
+    /// The grid rows as one CSV (results/grid-<scale>.csv).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "mesh,driver,scale,seed,iterations,signals,discarded,units,\
+             connections,converged,total_s,sample_s,find_s,update_s,\
+             time_per_signal,find_per_signal,qe\n",
+        );
+        for c in &self.cells {
+            let r = &c.report;
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.6},{:.6e},{:.6e},{:.6e}\n",
+                c.shape.name(),
+                c.driver.name(),
+                self.scale.name,
+                self.seed,
+                r.iterations,
+                r.signals,
+                r.discarded,
+                r.units,
+                r.connections,
+                r.converged,
+                r.total.as_secs_f64(),
+                r.phase.sample.as_secs_f64(),
+                r.phase.find.as_secs_f64(),
+                r.phase.update.as_secs_f64(),
+                r.time_per_signal(),
+                r.find_per_signal(),
+                r.qe,
+            ));
+        }
+        out
+    }
+}
+
+/// Run every (shape, driver) combination. `progress` receives one line per
+/// started/finished run (the CLI prints them; tests pass a sink).
+pub fn run_grid(
+    shapes: &[BenchmarkShape],
+    drivers: &[Driver],
+    scale: &Scale,
+    seed: u64,
+    artifacts_dir: Option<PathBuf>,
+    mut progress: impl FnMut(&str),
+) -> Result<Grid> {
+    let mut cells = Vec::new();
+    for &shape in shapes {
+        let cfg0 = scale.configure(shape);
+        progress(&format!(
+            "mesh {} (threshold {:.4}, resolution {})",
+            shape.name(),
+            cfg0.soam.insertion_threshold,
+            if cfg0.mesh_resolution == 0 {
+                shape.default_resolution()
+            } else {
+                cfg0.mesh_resolution
+            },
+        ));
+        let mesh = benchmark_mesh(shape, cfg0.mesh_resolution);
+        for &driver in drivers {
+            let mut cfg = cfg0.clone();
+            if let Some(dir) = &artifacts_dir {
+                cfg.artifacts_dir = dir.clone();
+            }
+            // Every driver sees the same seed — the paper's protocol (same
+            // shared parameters, same signal distribution).
+            let mut rng = Rng::seed_from(seed);
+            let t0 = std::time::Instant::now();
+            let report = run(&mesh, driver, &cfg, &mut rng)?;
+            progress(&format!(
+                "  {:8} {:>9} units={} conns={} signals={} discarded={} {}",
+                driver.name(),
+                format!("{:.2}s", t0.elapsed().as_secs_f64()),
+                report.units,
+                report.connections,
+                report.signals,
+                report.discarded,
+                if report.converged { "converged" } else { "CAP HIT" },
+            ));
+            cells.push(GridCell { shape, driver, report });
+        }
+    }
+    Ok(Grid { scale: *scale, seed, cells })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_grid_single_and_multi() {
+        let grid = run_grid(
+            &[BenchmarkShape::Blob],
+            &[Driver::Single, Driver::Multi],
+            &Scale::SMOKE,
+            1,
+            None,
+            |_| {},
+        )
+        .unwrap();
+        assert_eq!(grid.cells.len(), 2);
+        assert!(grid.get(BenchmarkShape::Blob, Driver::Single).is_some());
+        assert!(grid.get(BenchmarkShape::Blob, Driver::Pjrt).is_none());
+        let csv = grid.to_csv();
+        assert!(csv.lines().count() == 3, "{csv}");
+        assert!(csv.contains("blob,single,smoke"));
+    }
+
+    #[test]
+    fn shapes_listed_in_order() {
+        let grid = run_grid(
+            &[BenchmarkShape::Blob, BenchmarkShape::Eight],
+            &[Driver::Single],
+            &Scale::SMOKE,
+            2,
+            None,
+            |_| {},
+        )
+        .unwrap();
+        assert_eq!(
+            grid.shapes(),
+            vec![BenchmarkShape::Blob, BenchmarkShape::Eight]
+        );
+    }
+}

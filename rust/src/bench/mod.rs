@@ -1,0 +1,25 @@
+//! Reproduction harness: regenerates every table and figure of the paper's
+//! evaluation (§3) from one experiment grid.
+//!
+//! The paper's entire evaluation is a 4×4 grid — four meshes (Bunny, Eight,
+//! Hand, Heptoroid) × four implementations (Single-signal, Indexed,
+//! Multi-signal, GPU-based). Tables 1–4 are the grid's columns per mesh;
+//! Figs 2, 7, 8, 9, 10 are projections of the same runs. [`grid::run_grid`]
+//! executes the grid once; [`render`] derives every artifact from it.
+//!
+//! Because the original testbed ran for hours (Table 3: 18,548 s single-
+//! signal), the harness supports [`scale::Scale`] presets: `paper` uses the
+//! calibrated per-mesh thresholds (paper-sized networks), `quick` (default)
+//! scales thresholds up ~2× for minute-scale runs with the same qualitative
+//! shape, `smoke` is a seconds-scale CI check. EXPERIMENTS.md records which
+//! scale produced which numbers.
+
+pub mod ablate;
+pub mod grid;
+pub mod render;
+pub mod scale;
+
+pub use ablate::{ablate_collision_policy, ablate_index_cell, ablate_m_schedule, MultiPolicy};
+pub use grid::{Grid, GridCell};
+pub use render::{render_figure, render_table, write_all};
+pub use scale::Scale;

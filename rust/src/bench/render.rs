@@ -1,0 +1,458 @@
+//! Renderers: one paper table / figure per function, all derived from the
+//! experiment [`Grid`].
+//!
+//! Output is text (paper-style rows, ASCII charts for the figures) plus a
+//! CSV per artifact under `results/` for downstream plotting.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::Driver;
+use crate::engine::RunReport;
+use crate::mesh::BenchmarkShape;
+use crate::metrics::{fmt_sci, Table};
+
+use super::grid::Grid;
+
+/// Paper table number for a mesh (Table 1 = Bunny … Table 4 = Heptoroid).
+pub fn table_shape(table: u32) -> Option<BenchmarkShape> {
+    match table {
+        1 => Some(BenchmarkShape::Blob),
+        2 => Some(BenchmarkShape::Eight),
+        3 => Some(BenchmarkShape::Hand),
+        4 => Some(BenchmarkShape::Heptoroid),
+        _ => None,
+    }
+}
+
+/// Drivers in the paper's column order.
+const COLUMNS: [Driver; 4] = [
+    Driver::Single,
+    Driver::Indexed,
+    Driver::Multi,
+    Driver::Pjrt,
+];
+
+fn secs(r: &RunReport) -> f64 {
+    r.total.as_secs_f64()
+}
+
+/// Render paper Table `n` ("Execution time and statistics on the … data-set").
+pub fn render_table(grid: &Grid, n: u32) -> Result<(String, String)> {
+    let shape =
+        table_shape(n).with_context(|| format!("no paper table {n} (have 1-4)"))?;
+    let mut cols: Vec<(&'static str, &RunReport)> = Vec::new();
+    for d in COLUMNS {
+        if let Some(r) = grid.get(shape, d) {
+            cols.push((d.paper_name(), r));
+        }
+    }
+    if cols.is_empty() {
+        bail!("grid has no runs for {}", shape.name());
+    }
+
+    let mut header = vec!["Algorithm Version"];
+    header.extend(cols.iter().map(|(name, _)| *name));
+    let mut t = Table::new(&header);
+    let row = |t: &mut Table, label: &str, f: &dyn Fn(&RunReport) -> String| {
+        let mut cells = vec![label.to_string()];
+        cells.extend(cols.iter().map(|(_, r)| f(r)));
+        t.row(cells);
+    };
+    row(&mut t, "Iterations", &|r| group(r.iterations));
+    row(&mut t, "Signals", &|r| group(r.signals));
+    row(&mut t, "Discarded Signals", &|r| group(r.discarded));
+    row(&mut t, "Units", &|r| group(r.units as u64));
+    row(&mut t, "Connections", &|r| group(r.connections as u64));
+    row(&mut t, "Converged", &|r| r.converged.to_string());
+    row(&mut t, "Total Time", &|r| format!("{:.4}", secs(r)));
+    row(&mut t, "Sample", &|r| {
+        format!("{:.4}", r.phase.sample.as_secs_f64())
+    });
+    row(&mut t, "Find Winners", &|r| {
+        format!("{:.4}", r.phase.find.as_secs_f64())
+    });
+    row(&mut t, "Update", &|r| {
+        format!("{:.4}", r.phase.update.as_secs_f64())
+    });
+    row(&mut t, "Time per Signal", &|r| fmt_sci(r.time_per_signal()));
+    row(&mut t, "Find Winners /sig", &|r| fmt_sci(r.find_per_signal()));
+
+    let title = format!(
+        "Table {n}: Execution time and statistics on the {} data-set\n\
+         (proxy mesh `{}`, scale `{}`, seed {})\n\n",
+        shape.paper_name(),
+        shape.name(),
+        grid.scale.name,
+        grid.seed,
+    );
+    Ok((title + &t.render(), t.to_csv()))
+}
+
+fn group(x: u64) -> String {
+    // 1,234,567 formatting as in the paper's tables.
+    let s = x.to_string();
+    let mut out = String::new();
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+/// Log-scaled ASCII bar (the paper's figures use log axes).
+fn bar(value: f64, max: f64, width: usize) -> String {
+    if value <= 0.0 || max <= 0.0 {
+        return String::new();
+    }
+    // Map [max/1e4, max] log-range onto [1, width].
+    let lo = (max / 1e4).max(f64::MIN_POSITIVE);
+    let t = ((value / lo).ln() / (max / lo).ln()).clamp(0.0, 1.0);
+    "#".repeat((1.0 + t * (width as f64 - 1.0)).round() as usize)
+}
+
+/// Fig. 2: single-signal per-phase share of total time vs mesh (shows the
+/// Find Winners dominance growing with network size).
+pub fn render_figure2(grid: &Grid) -> Result<(String, String)> {
+    let mut text = String::from(
+        "Figure 2: Single-phase time to convergence of the SOAM algorithm\n\
+         (share of total time per phase, Single-signal implementation)\n\n",
+    );
+    let mut csv = String::from("mesh,units,sample_pct,find_pct,update_pct\n");
+    let mut t = Table::new(&["mesh", "units", "Sample %", "Find Winners %", "Update %"]);
+    for shape in grid.shapes() {
+        let Some(r) = grid.get(shape, Driver::Single) else { continue };
+        let total = secs(r).max(1e-12);
+        let pct = |x: std::time::Duration| 100.0 * x.as_secs_f64() / total;
+        t.row(vec![
+            shape.name().into(),
+            r.units.to_string(),
+            format!("{:.1}", pct(r.phase.sample)),
+            format!("{:.1}", pct(r.phase.find)),
+            format!("{:.1}", pct(r.phase.update)),
+        ]);
+        writeln!(
+            csv,
+            "{},{},{:.2},{:.2},{:.2}",
+            shape.name(),
+            r.units,
+            pct(r.phase.sample),
+            pct(r.phase.find),
+            pct(r.phase.update)
+        )
+        .unwrap();
+    }
+    text += &t.render();
+    text += "\nPaper shape: Find Winners ~50-60% for small nets (bunny), \
+             rising to 95%+ for heptoroid.\n";
+    Ok((text, csv))
+}
+
+/// Fig. 7: time to convergence, Single-signal vs Multi-signal.
+pub fn render_figure7(grid: &Grid) -> Result<(String, String)> {
+    let mut text = String::from(
+        "Figure 7: Time to convergence of the Single-signal and Multi-signal\n\
+         implementations (both sequential; the behavioral difference)\n\n",
+    );
+    let mut csv = String::from("mesh,single_s,multi_s,ratio\n");
+    let max = grid
+        .shapes()
+        .iter()
+        .filter_map(|&s| grid.get(s, Driver::Single).map(secs))
+        .fold(0.0f64, f64::max);
+    for shape in grid.shapes() {
+        let (Some(a), Some(b)) = (
+            grid.get(shape, Driver::Single),
+            grid.get(shape, Driver::Multi),
+        ) else {
+            continue;
+        };
+        writeln!(
+            text,
+            "{:10} single {:>10.3}s |{}",
+            shape.name(),
+            secs(a),
+            bar(secs(a), max, 40)
+        )
+        .unwrap();
+        writeln!(
+            text,
+            "{:10} multi  {:>10.3}s |{}",
+            "",
+            secs(b),
+            bar(secs(b), max, 40)
+        )
+        .unwrap();
+        writeln!(csv, "{},{:.6},{:.6},{:.3}", shape.name(), secs(a), secs(b), secs(a) / secs(b))
+            .unwrap();
+    }
+    text += "\nPaper shape: Multi-signal always converges faster, and the gap \
+             widens with mesh complexity.\n";
+    Ok((text, csv))
+}
+
+/// Fig. 8: per-phase stacked times for the two most complex meshes,
+/// Single-signal / Indexed / GPU-based.
+pub fn render_figure8(grid: &Grid) -> Result<(String, String)> {
+    let mut text = String::from(
+        "Figure 8: Single-phase time to convergence for the two more complex\n\
+         meshes (hand, heptoroid)\n\n",
+    );
+    let mut csv = String::from("mesh,impl,sample_s,find_s,update_s,total_s\n");
+    for shape in [BenchmarkShape::Hand, BenchmarkShape::Heptoroid] {
+        if !grid.shapes().contains(&shape) {
+            continue;
+        }
+        let mut t = Table::new(&["impl", "Sample", "Find Winners", "Update", "Total"]);
+        for d in [Driver::Single, Driver::Indexed, Driver::Pjrt] {
+            let Some(r) = grid.get(shape, d) else { continue };
+            t.row(vec![
+                d.paper_name().into(),
+                format!("{:.3}", r.phase.sample.as_secs_f64()),
+                format!("{:.3}", r.phase.find.as_secs_f64()),
+                format!("{:.3}", r.phase.update.as_secs_f64()),
+                format!("{:.3}", secs(r)),
+            ]);
+            writeln!(
+                csv,
+                "{},{},{:.6},{:.6},{:.6},{:.6}",
+                shape.name(),
+                d.name(),
+                r.phase.sample.as_secs_f64(),
+                r.phase.find.as_secs_f64(),
+                r.phase.update.as_secs_f64(),
+                secs(r)
+            )
+            .unwrap();
+        }
+        writeln!(text, "[{}]\n{}", shape.name(), t.render()).unwrap();
+    }
+    text += "Paper shape: in the GPU-based column Find Winners ceases to be \
+             dominant and Update becomes the most time-consuming phase.\n";
+    Ok((text, csv))
+}
+
+/// Fig. 9: (a) Find-Winners time per signal; (b) speedups vs Single-signal.
+pub fn render_figure9(grid: &Grid) -> Result<(String, String)> {
+    let mut text = String::from(
+        "Figure 9a: Times per signal in the Find Winners phase\n\
+         Figure 9b: Speed-up factors vs the Single-signal implementation\n\n",
+    );
+    let mut csv =
+        String::from("mesh,units,single_fps,indexed_fps,pjrt_fps,indexed_speedup,pjrt_speedup\n");
+    let mut t = Table::new(&[
+        "mesh",
+        "units",
+        "single s/sig",
+        "indexed s/sig",
+        "pjrt s/sig",
+        "indexed x",
+        "pjrt x",
+    ]);
+    for shape in grid.shapes() {
+        let (Some(s), Some(i), Some(p)) = (
+            grid.get(shape, Driver::Single),
+            grid.get(shape, Driver::Indexed),
+            grid.get(shape, Driver::Pjrt),
+        ) else {
+            continue;
+        };
+        let (fs, fi, fp) = (s.find_per_signal(), i.find_per_signal(), p.find_per_signal());
+        t.row(vec![
+            shape.name().into(),
+            s.units.to_string(),
+            fmt_sci(fs),
+            fmt_sci(fi),
+            fmt_sci(fp),
+            format!("{:.1}", fs / fi.max(1e-12)),
+            format!("{:.1}", fs / fp.max(1e-12)),
+        ]);
+        writeln!(
+            csv,
+            "{},{},{:.6e},{:.6e},{:.6e},{:.3},{:.3}",
+            shape.name(),
+            s.units,
+            fs,
+            fi,
+            fp,
+            fs / fi.max(1e-12),
+            fs / fp.max(1e-12)
+        )
+        .unwrap();
+    }
+    text += &t.render();
+    text += "\nPaper shape: speedups grow with network size; GPU-based reaches \
+             165x on Heptoroid.\n";
+    Ok((text, csv))
+}
+
+/// Fig. 10: (a) total times to convergence; (b) speedups vs Single-signal.
+pub fn render_figure10(grid: &Grid) -> Result<(String, String)> {
+    let mut text = String::from(
+        "Figure 10a: Times to convergence\n\
+         Figure 10b: Speed-up factors vs the Single-signal implementation\n\n",
+    );
+    let mut csv =
+        String::from("mesh,single_s,indexed_s,pjrt_s,indexed_speedup,pjrt_speedup\n");
+    let mut t = Table::new(&[
+        "mesh", "single s", "indexed s", "pjrt s", "indexed x", "pjrt x",
+    ]);
+    for shape in grid.shapes() {
+        let (Some(s), Some(i), Some(p)) = (
+            grid.get(shape, Driver::Single),
+            grid.get(shape, Driver::Indexed),
+            grid.get(shape, Driver::Pjrt),
+        ) else {
+            continue;
+        };
+        t.row(vec![
+            shape.name().into(),
+            format!("{:.3}", secs(s)),
+            format!("{:.3}", secs(i)),
+            format!("{:.3}", secs(p)),
+            format!("{:.1}", secs(s) / secs(i).max(1e-12)),
+            format!("{:.1}", secs(s) / secs(p).max(1e-12)),
+        ]);
+        writeln!(
+            csv,
+            "{},{:.6},{:.6},{:.6},{:.3},{:.3}",
+            shape.name(),
+            secs(s),
+            secs(i),
+            secs(p),
+            secs(s) / secs(i).max(1e-12),
+            secs(s) / secs(p).max(1e-12)
+        )
+        .unwrap();
+    }
+    text += &t.render();
+    text += "\nPaper shape: speedups from 2.5x (bunny) to 129x (heptoroid), \
+             growing with mesh complexity.\n";
+    Ok((text, csv))
+}
+
+/// Render one figure by paper number.
+pub fn render_figure(grid: &Grid, n: u32) -> Result<(String, String)> {
+    match n {
+        2 => render_figure2(grid),
+        7 => render_figure7(grid),
+        8 => render_figure8(grid),
+        9 => render_figure9(grid),
+        10 => render_figure10(grid),
+        _ => bail!("no paper figure {n} (have 2, 7, 8, 9, 10)"),
+    }
+}
+
+/// Write every requested artifact under `out_dir`; returns written paths.
+pub fn write_all(
+    grid: &Grid,
+    out_dir: &Path,
+    tables: &[u32],
+    figures: &[u32],
+) -> Result<Vec<PathBuf>> {
+    fs::create_dir_all(out_dir)
+        .with_context(|| format!("creating {}", out_dir.display()))?;
+    let mut written = Vec::new();
+    let mut save = |name: String, content: &str| -> Result<()> {
+        let path = out_dir.join(name);
+        fs::write(&path, content).with_context(|| format!("writing {}", path.display()))?;
+        written.push(path);
+        Ok(())
+    };
+    save(format!("grid-{}.csv", grid.scale.name), &grid.to_csv())?;
+    for &n in tables {
+        let (text, csv) = render_table(grid, n)?;
+        save(format!("table{n}-{}.txt", grid.scale.name), &text)?;
+        save(format!("table{n}-{}.csv", grid.scale.name), &csv)?;
+    }
+    for &n in figures {
+        let (text, csv) = render_figure(grid, n)?;
+        save(format!("figure{n}-{}.txt", grid.scale.name), &text)?;
+        save(format!("figure{n}-{}.csv", grid.scale.name), &csv)?;
+    }
+    Ok(written)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::grid::run_grid;
+    use super::super::scale::Scale;
+    use super::*;
+
+    fn tiny_grid() -> Grid {
+        run_grid(
+            &[BenchmarkShape::Blob],
+            &[Driver::Single, Driver::Indexed, Driver::Multi],
+            &Scale::SMOKE,
+            3,
+            None,
+            |_| {},
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn table1_renders_with_available_columns() {
+        let grid = tiny_grid();
+        let (text, csv) = render_table(&grid, 1).unwrap();
+        assert!(text.contains("Stanford Bunny"));
+        assert!(text.contains("Discarded Signals"));
+        assert!(text.contains("Multi-signal"));
+        assert!(!text.contains("GPU-based"), "pjrt not in this grid");
+        assert!(csv.lines().count() > 10);
+    }
+
+    #[test]
+    fn unknown_table_and_figure_error() {
+        let grid = tiny_grid();
+        assert!(render_table(&grid, 5).is_err());
+        assert!(render_figure(&grid, 3).is_err());
+    }
+
+    #[test]
+    fn figure2_and_7_render() {
+        let grid = tiny_grid();
+        let (t2, c2) = render_figure2(&grid).unwrap();
+        assert!(t2.contains("Find Winners %"));
+        assert!(c2.starts_with("mesh,units"));
+        let (t7, c7) = render_figure7(&grid).unwrap();
+        assert!(t7.contains("single"));
+        assert!(c7.lines().count() == 2);
+    }
+
+    #[test]
+    fn grouping_matches_paper_style() {
+        assert_eq!(group(620_000), "620,000");
+        assert_eq!(group(1_296), "1,296");
+        assert_eq!(group(42), "42");
+        assert_eq!(group(0), "0");
+    }
+
+    #[test]
+    fn write_all_produces_files() {
+        let grid = tiny_grid();
+        let dir = std::env::temp_dir().join("msgsn_render_test");
+        let _ = fs::remove_dir_all(&dir);
+        let written = write_all(&grid, &dir, &[1], &[2, 7]).unwrap();
+        assert_eq!(written.len(), 1 + 2 + 4); // grid + table(2) + figures(4)
+        for p in &written {
+            assert!(p.exists());
+        }
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bar_is_monotone() {
+        let a = bar(1.0, 100.0, 40).len();
+        let b = bar(10.0, 100.0, 40).len();
+        let c = bar(100.0, 100.0, 40).len();
+        assert!(a <= b && b <= c);
+        assert_eq!(c, 40);
+        assert_eq!(bar(0.0, 100.0, 40), "");
+    }
+}

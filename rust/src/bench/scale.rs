@@ -1,0 +1,104 @@
+//! Workload scales for the reproduction harness.
+
+use crate::config::RunConfig;
+use crate::mesh::BenchmarkShape;
+
+/// A workload scale: how big the networks get and how long runs may last.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Scale {
+    pub name: &'static str,
+    /// Multiplier on the per-mesh calibrated insertion threshold. Units
+    /// scale like `1/factor²` (spacing ∝ threshold).
+    pub threshold_factor: f32,
+    /// Signal cap per run (a run that hits the cap reports
+    /// `converged = false` and is labeled accordingly).
+    pub max_signals: u64,
+    /// Marching resolution override (0 = shape default).
+    pub mesh_resolution: u32,
+}
+
+impl Scale {
+    /// Seconds-scale smoke run (CI): tiny networks, short cap.
+    pub const SMOKE: Scale = Scale {
+        name: "smoke",
+        threshold_factor: 3.0,
+        max_signals: 60_000,
+        mesh_resolution: 24,
+    };
+
+    /// Minute-scale runs that preserve the paper's qualitative shape
+    /// (default for `msgsn reproduce`).
+    pub const QUICK: Scale = Scale {
+        name: "quick",
+        threshold_factor: 2.0,
+        max_signals: 25_000_000,
+        mesh_resolution: 0,
+    };
+
+    /// Paper-sized networks (hour-scale on one CPU — the original testbed
+    /// also ran for hours; see Table 3's 18,548 s).
+    pub const PAPER: Scale = Scale {
+        name: "paper",
+        threshold_factor: 1.0,
+        max_signals: 400_000_000,
+        mesh_resolution: 0,
+    };
+
+    pub fn from_name(name: &str) -> Option<Scale> {
+        match name {
+            "smoke" => Some(Self::SMOKE),
+            "quick" => Some(Self::QUICK),
+            "paper" | "full" => Some(Self::PAPER),
+            _ => None,
+        }
+    }
+
+    /// Apply this scale to a mesh preset.
+    pub fn configure(&self, shape: BenchmarkShape) -> RunConfig {
+        let mut cfg = RunConfig::preset(shape);
+        cfg.soam.insertion_threshold *= self.threshold_factor;
+        cfg.gwr.insertion_threshold *= self.threshold_factor;
+        // The index cube tracks the unit spacing (presets set it from the
+        // unscaled threshold).
+        cfg.index_cell = (2.0 * cfg.soam.insertion_threshold).clamp(0.02, 0.3);
+        cfg.limits.max_signals = self.max_signals;
+        if self.mesh_resolution != 0 {
+            cfg.mesh_resolution = self.mesh_resolution;
+        }
+        cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for s in [Scale::SMOKE, Scale::QUICK, Scale::PAPER] {
+            assert_eq!(Scale::from_name(s.name), Some(s));
+        }
+        assert_eq!(Scale::from_name("full"), Some(Scale::PAPER));
+        assert!(Scale::from_name("nope").is_none());
+    }
+
+    #[test]
+    fn configure_scales_thresholds() {
+        let base = RunConfig::preset(BenchmarkShape::Eight);
+        let cfg = Scale::QUICK.configure(BenchmarkShape::Eight);
+        assert!(
+            (cfg.soam.insertion_threshold
+                - base.soam.insertion_threshold * 2.0)
+                .abs()
+                < 1e-6
+        );
+        assert_eq!(cfg.limits.max_signals, 25_000_000);
+    }
+
+    #[test]
+    fn paper_scale_is_identity_on_thresholds() {
+        let base = RunConfig::preset(BenchmarkShape::Hand);
+        let cfg = Scale::PAPER.configure(BenchmarkShape::Hand);
+        assert_eq!(cfg.soam.insertion_threshold, base.soam.insertion_threshold);
+    }
+}

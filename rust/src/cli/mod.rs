@@ -1,0 +1,195 @@
+//! Command-line interface for the `msgsn` binary (hand-rolled — the
+//! vendored crate set has no `clap`).
+//!
+//! ```text
+//! msgsn run        --mesh eight --driver pjrt [--seed N] [--set k=v]…
+//! msgsn reproduce  [--table N]… [--figure N]… [--all] [--scale quick|paper]
+//! msgsn mesh       --shape hand [--resolution N] [--out hand.obj]
+//! msgsn artifacts  [--dir artifacts] [--warmup-n 4096]
+//! msgsn help
+//! ```
+
+mod parser;
+
+pub use parser::{ArgError, Parsed};
+
+use std::fmt;
+
+/// A parsed `msgsn` invocation.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Command {
+    /// One reconstruction run, printing the paper-style report table.
+    Run(Parsed),
+    /// Regenerate paper tables/figures.
+    Reproduce(Parsed),
+    /// Generate / inspect benchmark meshes.
+    Mesh(Parsed),
+    /// Inspect / warm the AOT artifact registry.
+    Artifacts(Parsed),
+    /// Ablation studies of the multi-signal design choices.
+    Ablate(Parsed),
+    Help,
+}
+
+/// Usage text (also the `help` command output).
+pub const USAGE: &str = "\
+msgsn — multi-signal growing self-organizing networks (paper reproduction)
+
+USAGE:
+  msgsn run [OPTIONS]            one reconstruction run, report to stdout
+      --mesh <blob|eight|hand|heptoroid>   benchmark cloud     [blob]
+      --driver <single|indexed|multi|pjrt|pipelined>           [single]
+      --algorithm <soam|gwr|gng>                               [soam]
+      --seed <N>                                               [42]
+      --config <file.toml>       load config file
+      --set <key=value>          override any config key (repeatable)
+      --max-signals <N>          safety cap
+      --trace                    record trace points
+      --save-mesh <out.obj>      write the reconstructed network mesh
+      --quiet                    suppress the report table
+
+  msgsn reproduce [OPTIONS]      regenerate the paper's evaluation
+      --table <1|2|3|4>          one table (repeatable)
+      --figure <2|7|8|9|10>      one figure (repeatable)
+      --all                      every table and figure
+      --scale <smoke|quick|paper>  workload scale              [quick]
+      --out <dir>                results directory             [results]
+      --seed <N>                                               [42]
+      --set <key=value>          override config keys (repeatable)
+
+  msgsn mesh [OPTIONS]           benchmark-mesh utilities
+      --shape <name>             which shape                   [blob]
+      --resolution <N>           marching grid (0 = default)   [0]
+      --out <file.obj|.off>      write the mesh
+      (always prints V/E/F, Euler characteristic, genus, area)
+
+  msgsn artifacts [OPTIONS]      AOT artifact registry
+      --dir <path>               artifact directory            [artifacts]
+      --flavor <pallas|scan>     flavor to inspect/warm
+      --warmup-n <N>             pre-compile buckets up to n=N
+
+  msgsn ablate [OPTIONS]         ablation studies (DESIGN.md section 6)
+      --which <locks|schedule|cell|all>                        [all]
+      --max-signals <N>          per-run cap                   [400000]
+      --seed <N>                                               [42]
+
+  msgsn help                     this text
+";
+
+/// Top-level parse of `argv[1..]`.
+pub fn parse(args: &[String]) -> Result<Command, ArgError> {
+    let Some((cmd, rest)) = args.split_first() else {
+        return Ok(Command::Help);
+    };
+    match cmd.as_str() {
+        "run" => Ok(Command::Run(parser::parse_flags(
+            rest,
+            &[
+                "mesh", "driver", "algorithm", "seed", "config", "set",
+                "max-signals", "save-mesh",
+            ],
+            &["trace", "quiet"],
+        )?)),
+        "reproduce" => Ok(Command::Reproduce(parser::parse_flags(
+            rest,
+            &["table", "figure", "scale", "out", "seed", "set"],
+            &["all"],
+        )?)),
+        "mesh" => Ok(Command::Mesh(parser::parse_flags(
+            rest,
+            &["shape", "resolution", "out"],
+            &[],
+        )?)),
+        "artifacts" => Ok(Command::Artifacts(parser::parse_flags(
+            rest,
+            &["dir", "flavor", "warmup-n"],
+            &[],
+        )?)),
+        "ablate" => Ok(Command::Ablate(parser::parse_flags(
+            rest,
+            &["which", "max-signals", "seed"],
+            &[],
+        )?)),
+        "help" | "--help" | "-h" => Ok(Command::Help),
+        other => Err(ArgError::UnknownCommand(other.to_string())),
+    }
+}
+
+impl fmt::Display for Command {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Command::Run(_) => write!(f, "run"),
+            Command::Reproduce(_) => write!(f, "reproduce"),
+            Command::Mesh(_) => write!(f, "mesh"),
+            Command::Artifacts(_) => write!(f, "artifacts"),
+            Command::Ablate(_) => write!(f, "ablate"),
+            Command::Help => write!(f, "help"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_run_command() {
+        let cmd = parse(&argv("run --mesh eight --driver pjrt --seed 7")).unwrap();
+        let Command::Run(p) = cmd else { panic!("not run") };
+        assert_eq!(p.get("mesh"), Some("eight"));
+        assert_eq!(p.get("driver"), Some("pjrt"));
+        assert_eq!(p.get("seed"), Some("7"));
+    }
+
+    #[test]
+    fn repeatable_set_flags() {
+        let Command::Run(p) = parse(&argv("run --set a=1 --set b=2")).unwrap() else {
+            panic!()
+        };
+        assert_eq!(p.get_all("set"), vec!["a=1", "b=2"]);
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let Command::Run(p) = parse(&argv("run --trace")).unwrap() else { panic!() };
+        assert!(p.flag("trace"));
+        assert!(!p.flag("quiet"));
+    }
+
+    #[test]
+    fn reproduce_tables_and_figures() {
+        let Command::Reproduce(p) =
+            parse(&argv("reproduce --table 1 --table 4 --figure 9")).unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(p.get_all("table"), vec!["1", "4"]);
+        assert_eq!(p.get_all("figure"), vec!["9"]);
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(matches!(
+            parse(&argv("frobnicate")),
+            Err(ArgError::UnknownCommand(_))
+        ));
+        assert!(matches!(
+            parse(&argv("run --bogus 1")),
+            Err(ArgError::UnknownFlag(_))
+        ));
+        assert!(matches!(
+            parse(&argv("run --mesh")),
+            Err(ArgError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn empty_is_help() {
+        assert_eq!(parse(&[]).unwrap(), Command::Help);
+        assert_eq!(parse(&argv("--help")).unwrap(), Command::Help);
+    }
+}

@@ -1,0 +1,157 @@
+//! Flag parser: `--name value` / `--name` (boolean) / repeatable flags.
+
+use std::fmt;
+
+/// Argument errors.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArgError {
+    UnknownCommand(String),
+    UnknownFlag(String),
+    MissingValue(String),
+    /// `(flag, value, expected)`
+    BadValue(String, String, &'static str),
+}
+
+impl fmt::Display for ArgError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ArgError::UnknownCommand(c) => {
+                write!(f, "unknown command {c:?} (try `msgsn help`)")
+            }
+            ArgError::UnknownFlag(x) => write!(f, "unknown flag --{x}"),
+            ArgError::MissingValue(x) => write!(f, "flag --{x} needs a value"),
+            ArgError::BadValue(flag, v, want) => {
+                write!(f, "--{flag} {v:?}: expected {want}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ArgError {}
+
+/// Parsed flags of one subcommand.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Parsed {
+    /// `(flag, value)` in argv order; repeatable flags appear repeatedly.
+    values: Vec<(String, String)>,
+    flags: Vec<String>,
+}
+
+impl Parsed {
+    /// Last value of a flag (CLI convention: later overrides earlier).
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values
+            .iter()
+            .rev()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// All values of a repeatable flag, in order.
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.values
+            .iter()
+            .filter(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+            .collect()
+    }
+
+    /// Boolean flag present?
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Typed accessor with a default.
+    pub fn get_parsed<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        default: T,
+        expected: &'static str,
+    ) -> Result<T, ArgError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| ArgError::BadValue(name.into(), v.into(), expected)),
+        }
+    }
+}
+
+/// Parse `args` given the allowed value-flags and boolean-flags.
+pub fn parse_flags(
+    args: &[String],
+    value_flags: &[&str],
+    bool_flags: &[&str],
+) -> Result<Parsed, ArgError> {
+    let mut out = Parsed::default();
+    let mut it = args.iter().peekable();
+    while let Some(arg) = it.next() {
+        let name = arg
+            .strip_prefix("--")
+            .ok_or_else(|| ArgError::UnknownFlag(arg.clone()))?;
+        // `--name=value` form.
+        if let Some((n, v)) = name.split_once('=') {
+            if value_flags.contains(&n) {
+                out.values.push((n.to_string(), v.to_string()));
+                continue;
+            }
+            return Err(ArgError::UnknownFlag(n.to_string()));
+        }
+        if bool_flags.contains(&name) {
+            out.flags.push(name.to_string());
+        } else if value_flags.contains(&name) {
+            let v = it
+                .next()
+                .ok_or_else(|| ArgError::MissingValue(name.to_string()))?;
+            out.values.push((name.to_string(), v.clone()));
+        } else {
+            return Err(ArgError::UnknownFlag(name.to_string()));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn equals_form() {
+        let p = parse_flags(&argv("--seed=9 --mesh=hand"), &["seed", "mesh"], &[]).unwrap();
+        assert_eq!(p.get("seed"), Some("9"));
+        assert_eq!(p.get("mesh"), Some("hand"));
+    }
+
+    #[test]
+    fn later_value_wins() {
+        let p = parse_flags(&argv("--seed 1 --seed 2"), &["seed"], &[]).unwrap();
+        assert_eq!(p.get("seed"), Some("2"));
+        assert_eq!(p.get_all("seed"), vec!["1", "2"]);
+    }
+
+    #[test]
+    fn typed_accessor() {
+        let p = parse_flags(&argv("--seed 11"), &["seed"], &[]).unwrap();
+        assert_eq!(p.get_parsed("seed", 0u64, "integer").unwrap(), 11);
+        assert_eq!(p.get_parsed("missing", 5u32, "integer").unwrap(), 5);
+        let bad = parse_flags(&argv("--seed x"), &["seed"], &[]).unwrap();
+        assert!(bad.get_parsed("seed", 0u64, "integer").is_err());
+    }
+
+    #[test]
+    fn rejects_positional() {
+        assert!(parse_flags(&argv("oops"), &[], &[]).is_err());
+    }
+
+    #[test]
+    fn display_messages() {
+        assert_eq!(
+            ArgError::MissingValue("x".into()).to_string(),
+            "flag --x needs a value"
+        );
+    }
+}

@@ -1,0 +1,332 @@
+//! Run configuration: typed structs, per-mesh presets (the paper's tuned
+//! insertion thresholds), a TOML-subset parser for config files, and
+//! `--set key=value` override merging.
+
+mod parse;
+mod presets;
+
+pub use parse::{parse_config_text, ConfigError, ConfigValue};
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use crate::mesh::BenchmarkShape;
+use crate::som::{GngParams, GwrParams, SoamParams};
+
+/// The four experimental columns of the paper (§3.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Driver {
+    /// Reference single-signal implementation (exhaustive Find Winners).
+    Single,
+    /// Single-signal with the spatial hash index.
+    Indexed,
+    /// Multi-signal semantics, sequential batched execution in rust.
+    Multi,
+    /// Multi-signal with the batched Find Winners executed from the AOT
+    /// artifact on the PJRT runtime (the paper's GPU-based column).
+    Pjrt,
+}
+
+impl Driver {
+    pub const ALL: [Driver; 4] = [Driver::Single, Driver::Indexed, Driver::Multi, Driver::Pjrt];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Driver::Single => "single",
+            Driver::Indexed => "indexed",
+            Driver::Multi => "multi",
+            Driver::Pjrt => "pjrt",
+        }
+    }
+
+    /// Paper column header this driver reproduces.
+    pub fn paper_name(self) -> &'static str {
+        match self {
+            Driver::Single => "Single-signal",
+            Driver::Indexed => "Indexed",
+            Driver::Multi => "Multi-signal",
+            Driver::Pjrt => "GPU-based",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Driver> {
+        match s {
+            "single" => Some(Driver::Single),
+            "indexed" => Some(Driver::Indexed),
+            "multi" => Some(Driver::Multi),
+            "pjrt" | "gpu" => Some(Driver::Pjrt),
+            _ => None,
+        }
+    }
+
+    pub fn is_multi_signal(self) -> bool {
+        matches!(self, Driver::Multi | Driver::Pjrt)
+    }
+}
+
+/// Which growing network to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    Soam,
+    Gwr,
+    Gng,
+}
+
+impl Algorithm {
+    pub fn name(self) -> &'static str {
+        match self {
+            Algorithm::Soam => "soam",
+            Algorithm::Gwr => "gwr",
+            Algorithm::Gng => "gng",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Algorithm> {
+        match s {
+            "soam" => Some(Algorithm::Soam),
+            "gwr" => Some(Algorithm::Gwr),
+            "gng" => Some(Algorithm::Gng),
+            _ => None,
+        }
+    }
+}
+
+/// Run limits and bookkeeping cadence.
+#[derive(Clone, Copy, Debug)]
+pub struct Limits {
+    /// Hard cap on processed signals (safety net; converging runs stop on
+    /// the algorithm's own criterion).
+    pub max_signals: u64,
+    /// Signals between housekeeping/convergence scans (single-signal
+    /// drivers; multi-signal drivers scan per iteration).
+    pub check_interval: u64,
+    /// Paper: "the maximum level of parallelism has been set to 8192".
+    pub max_parallelism: usize,
+    /// Record trace points at every housekeeping scan.
+    pub trace: bool,
+}
+
+impl Default for Limits {
+    fn default() -> Self {
+        Self {
+            max_signals: 500_000_000,
+            check_interval: 1_000,
+            max_parallelism: 8192,
+            trace: false,
+        }
+    }
+}
+
+/// Full configuration of one run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub algorithm: Algorithm,
+    pub driver: Driver,
+    pub shape: BenchmarkShape,
+    pub seed: u64,
+    /// Marching-grid resolution for the benchmark mesh (0 = shape default).
+    pub mesh_resolution: u32,
+    /// Index cube size for the `Indexed` driver (tuned for performance,
+    /// §3.1 — autotuned by `presets` from the insertion threshold).
+    pub index_cell: f32,
+    /// Unit-tile length for `BatchRust`.
+    pub batch_tile: usize,
+    /// Where the AOT artifacts live.
+    pub artifacts_dir: PathBuf,
+    /// Artifact flavor override (`pallas` / `scan`; None = manifest default).
+    pub flavor: Option<String>,
+    pub soam: SoamParams,
+    pub gwr: GwrParams,
+    pub gng: GngParams,
+    pub limits: Limits,
+}
+
+impl RunConfig {
+    /// The tuned per-mesh preset (paper §3.1: shared parameters fixed, only
+    /// the insertion threshold tuned per mesh).
+    pub fn preset(shape: BenchmarkShape) -> Self {
+        presets::preset(shape)
+    }
+
+    /// Apply `key = value` overrides (`--set`, config files). Returns an
+    /// error naming the key when unknown or ill-typed.
+    pub fn apply(&mut self, key: &str, value: &ConfigValue) -> Result<(), ConfigError> {
+        let num = || -> Result<f64, ConfigError> {
+            value
+                .as_f64()
+                .ok_or_else(|| ConfigError::Type(key.to_string(), "number"))
+        };
+        let int = || -> Result<u64, ConfigError> {
+            value
+                .as_f64()
+                .filter(|v| *v >= 0.0 && v.fract() == 0.0)
+                .map(|v| v as u64)
+                .ok_or_else(|| ConfigError::Type(key.to_string(), "integer"))
+        };
+        match key {
+            "algorithm" => {
+                self.algorithm = value
+                    .as_str()
+                    .and_then(Algorithm::from_name)
+                    .ok_or_else(|| ConfigError::Type(key.into(), "soam|gwr|gng"))?;
+            }
+            "driver" => {
+                self.driver = value
+                    .as_str()
+                    .and_then(Driver::from_name)
+                    .ok_or_else(|| ConfigError::Type(key.into(), "single|indexed|multi|pjrt"))?;
+            }
+            "mesh" | "shape" => {
+                self.shape = value
+                    .as_str()
+                    .and_then(BenchmarkShape::from_name)
+                    .ok_or_else(|| ConfigError::Type(key.into(), "blob|eight|hand|heptoroid"))?;
+            }
+            "seed" => self.seed = int()?,
+            "mesh_resolution" => self.mesh_resolution = int()? as u32,
+            "index_cell" => self.index_cell = num()? as f32,
+            "batch_tile" => self.batch_tile = int()? as usize,
+            "artifacts_dir" => {
+                self.artifacts_dir = value
+                    .as_str()
+                    .ok_or_else(|| ConfigError::Type(key.into(), "path"))?
+                    .into();
+            }
+            "flavor" => {
+                self.flavor = Some(
+                    value
+                        .as_str()
+                        .ok_or_else(|| ConfigError::Type(key.into(), "pallas|scan"))?
+                        .to_string(),
+                );
+            }
+            "insertion_threshold" => {
+                let v = num()? as f32;
+                self.soam.insertion_threshold = v;
+                self.gwr.insertion_threshold = v;
+            }
+            "eps_b" => {
+                let v = num()? as f32;
+                self.soam.adapt.eps_b = v;
+                self.gwr.adapt.eps_b = v;
+                self.gng.adapt.eps_b = v;
+            }
+            "eps_n" => {
+                let v = num()? as f32;
+                self.soam.adapt.eps_n = v;
+                self.gwr.adapt.eps_n = v;
+                self.gng.adapt.eps_n = v;
+            }
+            "max_age" => {
+                let v = num()? as f32;
+                self.soam.adapt.max_age = v;
+                self.gwr.adapt.max_age = v;
+                self.gng.adapt.max_age = v;
+            }
+            "max_units" => {
+                let v = int()? as usize;
+                self.soam.max_units = v;
+                self.gwr.max_units = v;
+                self.gng.max_units = v;
+            }
+            "threshold_decay" => self.soam.threshold_decay = num()? as f32,
+            "threshold_floor_frac" => self.soam.threshold_floor_frac = num()? as f32,
+            "gng_lambda" => self.gng.lambda = int()?,
+            "target_qe" => {
+                let v = num()? as f32;
+                self.gwr.target_qe = v;
+                self.gng.target_qe = v;
+            }
+            "max_signals" => self.limits.max_signals = int()?,
+            "check_interval" => self.limits.check_interval = int()?.max(1),
+            "max_parallelism" => self.limits.max_parallelism = int()? as usize,
+            "trace" => {
+                self.limits.trace = value
+                    .as_bool()
+                    .ok_or_else(|| ConfigError::Type(key.into(), "bool"))?;
+            }
+            _ => return Err(ConfigError::UnknownKey(key.to_string())),
+        }
+        Ok(())
+    }
+
+    /// Apply a parsed config-file map (sorted for determinism).
+    pub fn apply_all(
+        &mut self,
+        map: &BTreeMap<String, ConfigValue>,
+    ) -> Result<(), ConfigError> {
+        for (k, v) in map {
+            self.apply(k, v)?;
+        }
+        Ok(())
+    }
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self::preset(BenchmarkShape::Blob)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_cover_all_shapes() {
+        for shape in BenchmarkShape::ALL {
+            let cfg = RunConfig::preset(shape);
+            assert_eq!(cfg.shape, shape);
+            assert!(cfg.soam.insertion_threshold > 0.0);
+        }
+    }
+
+    #[test]
+    fn thresholds_decrease_with_complexity() {
+        // More complex meshes need more units ⇒ smaller thresholds
+        // (paper: unit counts 347 < 658 < 8884 < 15638).
+        let t: Vec<f32> = BenchmarkShape::ALL
+            .iter()
+            .map(|&s| RunConfig::preset(s).soam.insertion_threshold)
+            .collect();
+        assert!(t[0] > t[1] && t[1] > t[2] && t[2] >= t[3], "{t:?}");
+    }
+
+    #[test]
+    fn apply_overrides() {
+        let mut cfg = RunConfig::default();
+        cfg.apply("driver", &ConfigValue::Str("pjrt".into())).unwrap();
+        assert_eq!(cfg.driver, Driver::Pjrt);
+        cfg.apply("insertion_threshold", &ConfigValue::Num(0.123)).unwrap();
+        assert!((cfg.soam.insertion_threshold - 0.123).abs() < 1e-6);
+        cfg.apply("seed", &ConfigValue::Num(9.0)).unwrap();
+        assert_eq!(cfg.seed, 9);
+        cfg.apply("trace", &ConfigValue::Bool(true)).unwrap();
+        assert!(cfg.limits.trace);
+    }
+
+    #[test]
+    fn apply_rejects_unknown_and_ill_typed() {
+        let mut cfg = RunConfig::default();
+        assert!(matches!(
+            cfg.apply("nonesuch", &ConfigValue::Num(1.0)),
+            Err(ConfigError::UnknownKey(_))
+        ));
+        assert!(matches!(
+            cfg.apply("seed", &ConfigValue::Str("x".into())),
+            Err(ConfigError::Type(_, _))
+        ));
+        assert!(matches!(
+            cfg.apply("seed", &ConfigValue::Num(1.5)),
+            Err(ConfigError::Type(_, _))
+        ));
+    }
+
+    #[test]
+    fn driver_names_roundtrip() {
+        for d in Driver::ALL {
+            assert_eq!(Driver::from_name(d.name()), Some(d));
+        }
+        assert_eq!(Driver::from_name("gpu"), Some(Driver::Pjrt));
+    }
+}

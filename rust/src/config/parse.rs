@@ -1,0 +1,182 @@
+//! A TOML-subset parser (the vendored crate set has no `toml`/`serde`).
+//!
+//! Supported grammar — deliberately the subset real run configs need:
+//!
+//! ```toml
+//! # comment
+//! key = 1.5            # number
+//! name = "pjrt"        # string (double quotes)
+//! flag = true          # bool
+//! [section]            # keys below become "section.key" …
+//! inner = 2            # … except the conventional [run] section, which is
+//!                      # flattened (its keys are top-level RunConfig keys).
+//! ```
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Parsed scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ConfigValue {
+    Num(f64),
+    Str(String),
+    Bool(bool),
+}
+
+impl ConfigValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            ConfigValue::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            ConfigValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            ConfigValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Configuration errors (parse + apply).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ConfigError {
+    /// `(line, message)`
+    Parse(usize, String),
+    UnknownKey(String),
+    /// `(key, expected type)`
+    Type(String, &'static str),
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::Parse(line, msg) => write!(f, "config line {line}: {msg}"),
+            ConfigError::UnknownKey(k) => write!(f, "unknown config key {k:?}"),
+            ConfigError::Type(k, want) => write!(f, "config key {k:?} expects {want}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// Parse config text into a flat `key -> value` map. Keys inside a
+/// `[section]` other than `[run]` are prefixed `section.`.
+pub fn parse_config_text(text: &str) -> Result<BTreeMap<String, ConfigValue>, ConfigError> {
+    let mut map = BTreeMap::new();
+    let mut section = String::new();
+    for (n, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| ConfigError::Parse(n + 1, "unterminated section".into()))?
+                .trim();
+            if name.is_empty() {
+                return Err(ConfigError::Parse(n + 1, "empty section name".into()));
+            }
+            section = if name == "run" { String::new() } else { format!("{name}.") };
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| ConfigError::Parse(n + 1, format!("expected key = value, got {line:?}")))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(ConfigError::Parse(n + 1, "empty key".into()));
+        }
+        let value = parse_value(line[eq + 1..].trim())
+            .ok_or_else(|| ConfigError::Parse(n + 1, format!("bad value in {line:?}")))?;
+        map.insert(format!("{section}{key}"), value);
+    }
+    Ok(map)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Option<ConfigValue> {
+    if s == "true" {
+        return Some(ConfigValue::Bool(true));
+    }
+    if s == "false" {
+        return Some(ConfigValue::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"')?;
+        if inner.contains('"') {
+            return None;
+        }
+        return Some(ConfigValue::Str(inner.to_string()));
+    }
+    // Underscored integers (1_000_000) as in TOML.
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    cleaned.parse::<f64>().ok().map(ConfigValue::Num)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        let m = parse_config_text(
+            "a = 1\nb = 2.5\nc = \"hello\"\nd = true\ne = 1_000\n",
+        )
+        .unwrap();
+        assert_eq!(m["a"], ConfigValue::Num(1.0));
+        assert_eq!(m["b"], ConfigValue::Num(2.5));
+        assert_eq!(m["c"], ConfigValue::Str("hello".into()));
+        assert_eq!(m["d"], ConfigValue::Bool(true));
+        assert_eq!(m["e"], ConfigValue::Num(1000.0));
+    }
+
+    #[test]
+    fn sections_prefix_keys_except_run() {
+        let m = parse_config_text("[run]\nseed = 1\n[soam]\nx = 2\n").unwrap();
+        assert!(m.contains_key("seed"));
+        assert!(m.contains_key("soam.x"));
+    }
+
+    #[test]
+    fn comments_ignored_even_after_values() {
+        let m = parse_config_text("a = 1 # one\n# whole line\nb = \"x # y\"\n").unwrap();
+        assert_eq!(m["a"], ConfigValue::Num(1.0));
+        assert_eq!(m["b"], ConfigValue::Str("x # y".into()));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse_config_text("ok = 1\nbroken\n").unwrap_err();
+        assert_eq!(err, ConfigError::Parse(2, "expected key = value, got \"broken\"".into()));
+        assert!(parse_config_text("[oops\n").is_err());
+        assert!(parse_config_text("a = \"unterminated\n").is_err());
+    }
+
+    #[test]
+    fn display_formats() {
+        let e = ConfigError::Type("seed".into(), "integer");
+        assert_eq!(e.to_string(), "config key \"seed\" expects integer");
+    }
+}

@@ -1,0 +1,103 @@
+//! The winner-lock table.
+//!
+//! Stamp-based: `stamp[unit] == current_batch` means locked. Clearing all
+//! locks between batches is O(1) (bump the stamp), and the table grows with
+//! the slab so freshly inserted units are lockable immediately.
+
+use crate::som::UnitId;
+
+/// Per-batch winner locks (paper §2.2).
+#[derive(Clone, Debug, Default)]
+pub struct LockTable {
+    stamp: Vec<u64>,
+    current: u64,
+}
+
+impl LockTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start a new batch: all locks released in O(1).
+    pub fn next_batch(&mut self) {
+        self.current += 1;
+    }
+
+    /// Make sure `capacity` units are addressable.
+    pub fn ensure_capacity(&mut self, capacity: usize) {
+        if self.stamp.len() < capacity {
+            self.stamp.resize(capacity, 0);
+        }
+    }
+
+    /// Attempt to lock `unit` for the current batch. Returns `false` when
+    /// the unit is already locked (⇒ discard the signal).
+    #[inline]
+    pub fn try_lock(&mut self, unit: UnitId) -> bool {
+        let slot = unit as usize;
+        if slot >= self.stamp.len() {
+            self.stamp.resize(slot + 1, 0);
+        }
+        if self.stamp[slot] == self.current {
+            false
+        } else {
+            self.stamp[slot] = self.current;
+            true
+        }
+    }
+
+    #[inline]
+    pub fn is_locked(&self, unit: UnitId) -> bool {
+        self.stamp
+            .get(unit as usize)
+            .is_some_and(|&s| s == self.current)
+    }
+
+    /// Locked count this batch (diagnostics).
+    pub fn locked_count(&self) -> usize {
+        self.stamp.iter().filter(|&&s| s == self.current).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_lock_wins() {
+        let mut t = LockTable::new();
+        t.next_batch();
+        assert!(t.try_lock(5));
+        assert!(!t.try_lock(5), "second signal with the same winner discards");
+        assert!(t.try_lock(6));
+        assert_eq!(t.locked_count(), 2);
+    }
+
+    #[test]
+    fn next_batch_releases_everything() {
+        let mut t = LockTable::new();
+        t.next_batch();
+        assert!(t.try_lock(1));
+        assert!(t.try_lock(2));
+        t.next_batch();
+        assert!(!t.is_locked(1));
+        assert!(t.try_lock(1));
+        assert!(t.try_lock(2));
+    }
+
+    #[test]
+    fn grows_on_demand() {
+        let mut t = LockTable::new();
+        t.next_batch();
+        assert!(t.try_lock(1_000));
+        assert!(!t.try_lock(1_000));
+        assert!(t.try_lock(3));
+    }
+
+    #[test]
+    fn fresh_table_locks_nothing() {
+        let t = LockTable::new();
+        assert!(!t.is_locked(0));
+        assert_eq!(t.locked_count(), 0);
+    }
+}

@@ -1,0 +1,22 @@
+//! Multi-signal coordination: the winner-lock table, the parallelism
+//! schedule, and the pipelined driver.
+//!
+//! The paper's §2.2 collision taxonomy (adapt-position / modify-neighborhood
+//! / insert-edge) is resolved by one mechanism — "an implicit lock on the
+//! winner unit" — implemented here as [`LockTable`] and used by both
+//! multi-signal drivers in [`crate::engine`].
+//!
+//! [`pipeline::run_pipelined`] is this reproduction's answer to the paper's
+//! future-work note ("future developments … should aim to the
+//! parallelization of the Update phase as well"): while the Update phase of
+//! batch *k* runs, a sampler thread prefetches the signals of batch *k+1*
+//! through a bounded (backpressure) channel, overlapping the Sample phase
+//! entirely with Update.
+
+pub mod locks;
+pub mod pipeline;
+pub mod schedule;
+
+pub use locks::LockTable;
+pub use pipeline::run_pipelined;
+pub use schedule::MSchedule;

@@ -1,0 +1,207 @@
+//! Pipelined multi-signal driver: Sample(k+1) overlaps Update(k).
+//!
+//! The paper leaves the Update phase sequential and notes that once Find
+//! Winners is accelerated "the Update phase becomes the most time-consuming"
+//! (§3.3). This driver recovers part of that cost without touching the
+//! collision semantics: a dedicated sampler thread produces the *next*
+//! batch while the main thread updates the current one, connected by
+//! bounded channels (depth = `queue_depth`, which is the backpressure
+//! knob — the sampler can never run more than `queue_depth` batches ahead).
+//!
+//! Semantics note: the signals of batch k+1 are sampled with the batch size
+//! computed from the unit count *before* batch k's update (the request is
+//! issued before the update starts). The m-schedule therefore lags one
+//! batch relative to `run_multi_signal`; everything else — winner locks,
+//! random update order, update rule — is identical. Batches are recycled
+//! through a return channel, so the steady state allocates nothing.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::config::Limits;
+use crate::engine::RunReport;
+use crate::findwinners::FindWinners;
+use crate::geometry::Vec3;
+use crate::mesh::SurfaceSampler;
+use crate::metrics::{Phase, PhaseClock, PhaseTimes};
+use crate::rng::Rng;
+use crate::som::{ChangeLog, GrowingNetwork, Winners};
+
+use super::locks::LockTable;
+use super::schedule::MSchedule;
+
+/// Run the multi-signal iteration with a pipelined Sample phase.
+pub fn run_pipelined(
+    algo: &mut dyn GrowingNetwork,
+    sampler: &SurfaceSampler,
+    fw: &mut dyn FindWinners,
+    limits: &Limits,
+    rng: &mut Rng,
+    queue_depth: usize,
+) -> RunReport {
+    assert!(queue_depth >= 1);
+    let start = Instant::now();
+    let mut phase = PhaseTimes::default();
+    let mut report = RunReport::new(algo.name(), "pipelined");
+    let mut log = ChangeLog::default();
+    algo.init(sampler, rng);
+    fw.rebuild(algo.net());
+
+    let schedule = MSchedule::new(limits.max_parallelism);
+    let mut locks = LockTable::new();
+    let mut winners: Vec<Option<Winners>> = Vec::new();
+    let mut order: Vec<u32> = Vec::new();
+    // See engine::run_multi_signal: staleness guard against units inserted
+    // earlier in the same batch.
+    let mut batch_inserted: Vec<Vec3> = Vec::new();
+
+    // The sampler thread owns a forked RNG stream; the main thread keeps
+    // drawing permutations from `rng`. (This is why the pipelined driver is
+    // an optimization variant, not a bit-replica of `run_multi_signal`.)
+    let mut sampler_rng = rng.fork();
+
+    std::thread::scope(|scope| {
+        let (req_tx, req_rx) = mpsc::sync_channel::<usize>(queue_depth);
+        let (batch_tx, batch_rx) = mpsc::sync_channel::<Vec<Vec3>>(queue_depth);
+        let (recycle_tx, recycle_rx) = mpsc::channel::<Vec<Vec3>>();
+
+        scope.spawn(move || {
+            while let Ok(m) = req_rx.recv() {
+                let mut buf = recycle_rx.try_recv().unwrap_or_default();
+                sampler.sample_batch(&mut sampler_rng, m, &mut buf);
+                if batch_tx.send(buf).is_err() {
+                    break;
+                }
+            }
+        });
+
+        // Prime the pipeline.
+        let mut requested = schedule.m(algo.net().len());
+        req_tx.send(requested).expect("sampler alive");
+
+        loop {
+            report.iterations += 1;
+
+            // 1. Sample = wait for the prefetched batch (the visible stall).
+            let clock = PhaseClock::start();
+            let signals = batch_rx.recv().expect("sampler alive");
+            clock.stop(&mut phase, Phase::Sample);
+            let m = requested;
+            debug_assert_eq!(signals.len(), m);
+
+            // Request the NEXT batch before updating this one — this is the
+            // overlap. Batch size from the pre-update unit count.
+            requested = schedule.m(algo.net().len());
+            req_tx.send(requested).expect("sampler alive");
+
+            // 2. Batched Find Winners.
+            let clock = PhaseClock::start();
+            fw.find2_batch(algo.net(), &signals, &mut winners);
+            clock.stop(&mut phase, Phase::FindWinners);
+
+            // 3. Update under winner locks, random order.
+            let clock = PhaseClock::start();
+            rng.permutation(m, &mut order);
+            locks.next_batch();
+            locks.ensure_capacity(algo.net().capacity());
+            batch_inserted.clear();
+            for &j in &order {
+                let w = match winners[j as usize] {
+                    Some(w) => w,
+                    None => {
+                        report.discarded += 1;
+                        continue;
+                    }
+                };
+                let signal = signals[j as usize];
+                if !algo.net().is_alive(w.w1)
+                    || !algo.net().is_alive(w.w2)
+                    || batch_inserted.iter().any(|p| signal.dist2(*p) < w.d1_sq)
+                    || !locks.try_lock(w.w1)
+                {
+                    report.discarded += 1;
+                    continue;
+                }
+                log.clear();
+                algo.update(signal, &w, &mut log);
+                for &id in &log.inserted {
+                    batch_inserted.push(algo.net().pos(id));
+                }
+                fw.sync(algo.net(), &log);
+            }
+            clock.stop(&mut phase, Phase::Update);
+
+            report.signals += m as u64;
+            let _ = recycle_tx.send(signals);
+
+            log.clear();
+            let converged = algo.housekeeping(&mut log);
+            if !log.is_empty() {
+                fw.sync(algo.net(), &log);
+            }
+            if limits.trace {
+                report.push_trace(algo, &phase);
+            }
+            if converged {
+                report.converged = true;
+                break;
+            }
+            if report.signals >= limits.max_signals {
+                break;
+            }
+        }
+        drop(req_tx); // sampler thread exits
+    });
+
+    report.finish(algo, phase, start.elapsed());
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::findwinners::BatchRust;
+    use crate::mesh::{benchmark_mesh, BenchmarkShape};
+    use crate::som::{Soam, SoamParams};
+
+    fn quick_run(queue_depth: usize, seed: u64) -> RunReport {
+        let mesh = benchmark_mesh(BenchmarkShape::Blob, 20);
+        let sampler = SurfaceSampler::new(&mesh);
+        let mut rng = Rng::seed_from(seed);
+        let mut soam = Soam::new(SoamParams {
+            insertion_threshold: 0.16,
+            ..SoamParams::default()
+        });
+        let mut fw = BatchRust::default();
+        let limits = Limits { max_signals: 30_000, ..Limits::default() };
+        run_pipelined(&mut soam, &sampler, &mut fw, &limits, &mut rng, queue_depth)
+    }
+
+    #[test]
+    fn pipelined_converges_like_multi() {
+        let r = quick_run(2, 9);
+        assert!(r.units > 10, "{} units", r.units);
+        assert!(r.discarded > 0);
+        assert!(r.signals >= 30_000);
+    }
+
+    #[test]
+    fn deterministic_for_fixed_seed() {
+        let a = quick_run(2, 4);
+        let b = quick_run(2, 4);
+        assert_eq!(a.units, b.units);
+        assert_eq!(a.discarded, b.discarded);
+        assert_eq!(a.iterations, b.iterations);
+    }
+
+    #[test]
+    fn queue_depth_does_not_change_results() {
+        // Backpressure depth affects timing only — the signal stream is a
+        // pure function of the request sequence, which is deterministic.
+        let a = quick_run(1, 7);
+        let b = quick_run(4, 7);
+        assert_eq!(a.units, b.units);
+        assert_eq!(a.iterations, b.iterations);
+        assert_eq!(a.discarded, b.discarded);
+    }
+}

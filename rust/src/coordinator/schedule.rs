@@ -1,0 +1,62 @@
+//! The parallelism schedule (paper §3.1): `m` = the least power of two
+//! strictly greater than the current unit count, capped.
+
+/// Batch-size schedule for the multi-signal drivers.
+#[derive(Clone, Copy, Debug)]
+pub struct MSchedule {
+    /// Paper: "the maximum level of parallelism has been set to 8192".
+    pub cap: usize,
+    /// Lower bound (a batch of at least 2 keeps the drivers simple).
+    pub floor: usize,
+}
+
+impl Default for MSchedule {
+    fn default() -> Self {
+        Self { cap: 8192, floor: 2 }
+    }
+}
+
+impl MSchedule {
+    pub fn new(cap: usize) -> Self {
+        Self { cap, floor: 2 }
+    }
+
+    /// Batch size for a network of `units` live units.
+    #[inline]
+    pub fn m(&self, units: usize) -> usize {
+        (units + 1)
+            .next_power_of_two()
+            .min(self.cap)
+            .max(self.floor)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strictly_greater_power_of_two() {
+        let s = MSchedule::default();
+        assert_eq!(s.m(0), 2);
+        assert_eq!(s.m(1), 2);
+        assert_eq!(s.m(2), 4, "strictly greater than the unit count");
+        assert_eq!(s.m(7), 8);
+        assert_eq!(s.m(8), 16);
+        assert_eq!(s.m(330), 512);
+    }
+
+    #[test]
+    fn capped_at_8192_by_default() {
+        let s = MSchedule::default();
+        assert_eq!(s.m(8191), 8192);
+        assert_eq!(s.m(8192), 8192);
+        assert_eq!(s.m(15_638), 8192, "paper's heptoroid network");
+    }
+
+    #[test]
+    fn custom_cap() {
+        let s = MSchedule::new(1024);
+        assert_eq!(s.m(5_000), 1024);
+    }
+}

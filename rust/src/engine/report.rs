@@ -1,0 +1,171 @@
+//! Run reports: everything one row of the paper's Tables 1–4 needs, plus
+//! trace points for the figures.
+
+use std::time::Duration;
+
+use crate::metrics::{fmt_sci, fmt_secs, PhaseTimes, Table};
+use crate::som::GrowingNetwork;
+
+/// One trace sample (recorded at housekeeping scans when `limits.trace`).
+#[derive(Clone, Copy, Debug)]
+pub struct TracePoint {
+    pub signals: u64,
+    pub units: usize,
+    pub qe: f32,
+    /// Cumulative Find-Winners seconds per signal so far.
+    pub find_per_signal: f64,
+}
+
+/// Result of one driver run — the paper's per-column table data.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub algorithm: String,
+    pub implementation: String,
+    pub mesh: Option<String>,
+    pub iterations: u64,
+    pub signals: u64,
+    /// Signals dropped by the winner-lock collision rule (multi-signal only).
+    pub discarded: u64,
+    pub units: usize,
+    pub connections: usize,
+    pub converged: bool,
+    pub qe: f32,
+    pub phase: PhaseTimes,
+    pub total: Duration,
+    pub trace: Vec<TracePoint>,
+}
+
+impl RunReport {
+    pub(crate) fn new(algorithm: &str, implementation: &str) -> Self {
+        Self {
+            algorithm: algorithm.to_string(),
+            implementation: implementation.to_string(),
+            mesh: None,
+            iterations: 0,
+            signals: 0,
+            discarded: 0,
+            units: 0,
+            connections: 0,
+            converged: false,
+            qe: f32::INFINITY,
+            phase: PhaseTimes::default(),
+            total: Duration::ZERO,
+            trace: Vec::new(),
+        }
+    }
+
+    pub(crate) fn push_trace(&mut self, algo: &dyn GrowingNetwork, phase: &PhaseTimes) {
+        self.trace.push(TracePoint {
+            signals: self.signals,
+            units: algo.net().len(),
+            qe: algo.quantization_error(),
+            find_per_signal: if self.signals == 0 {
+                0.0
+            } else {
+                phase.find.as_secs_f64() / self.signals as f64
+            },
+        });
+    }
+
+    pub(crate) fn finish(
+        &mut self,
+        algo: &dyn GrowingNetwork,
+        phase: PhaseTimes,
+        total: Duration,
+    ) {
+        self.units = algo.net().len();
+        self.connections = algo.net().edge_count();
+        self.qe = algo.quantization_error();
+        self.phase = phase;
+        self.total = total;
+    }
+
+    /// Signals that actually changed the network.
+    pub fn effective_signals(&self) -> u64 {
+        self.signals - self.discarded
+    }
+
+    /// Seconds per signal, total (paper's "Time per Signal").
+    pub fn time_per_signal(&self) -> f64 {
+        if self.signals == 0 {
+            0.0
+        } else {
+            self.total.as_secs_f64() / self.signals as f64
+        }
+    }
+
+    /// Seconds per signal in Find Winners (paper's per-phase row; the Fig 9
+    /// series).
+    pub fn find_per_signal(&self) -> f64 {
+        if self.signals == 0 {
+            0.0
+        } else {
+            self.phase.find.as_secs_f64() / self.signals as f64
+        }
+    }
+
+    /// Render as one paper-style table (row labels match Tables 1–4).
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(&["metric", "value"]);
+        t.row(vec!["Algorithm".into(), self.algorithm.clone()]);
+        t.row(vec!["Implementation".into(), self.implementation.clone()]);
+        if let Some(mesh) = &self.mesh {
+            t.row(vec!["Mesh".into(), mesh.clone()]);
+        }
+        t.row(vec!["Iterations".into(), self.iterations.to_string()]);
+        t.row(vec!["Signals".into(), self.signals.to_string()]);
+        t.row(vec!["Discarded Signals".into(), self.discarded.to_string()]);
+        t.row(vec!["Units".into(), self.units.to_string()]);
+        t.row(vec!["Connections".into(), self.connections.to_string()]);
+        t.row(vec!["Converged".into(), self.converged.to_string()]);
+        t.row(vec!["Total Time".into(), fmt_secs(self.total)]);
+        t.row(vec!["Sample".into(), fmt_secs(self.phase.sample)]);
+        t.row(vec!["Find Winners".into(), fmt_secs(self.phase.find)]);
+        t.row(vec!["Update".into(), fmt_secs(self.phase.update)]);
+        t.row(vec!["Time per Signal".into(), fmt_sci(self.time_per_signal())]);
+        t.row(vec![
+            "Find Winners per Signal".into(),
+            fmt_sci(self.find_per_signal()),
+        ]);
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn effective_signals_subtracts_discards() {
+        let mut r = RunReport::new("soam", "multi");
+        r.signals = 100;
+        r.discarded = 37;
+        assert_eq!(r.effective_signals(), 63);
+    }
+
+    #[test]
+    fn per_signal_rates() {
+        let mut r = RunReport::new("soam", "single");
+        r.signals = 1000;
+        r.total = Duration::from_secs(2);
+        r.phase.find = Duration::from_secs(1);
+        assert!((r.time_per_signal() - 2e-3).abs() < 1e-12);
+        assert!((r.find_per_signal() - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_signals_safe() {
+        let r = RunReport::new("soam", "single");
+        assert_eq!(r.time_per_signal(), 0.0);
+        assert_eq!(r.find_per_signal(), 0.0);
+    }
+
+    #[test]
+    fn table_has_paper_rows() {
+        let r = RunReport::new("soam", "multi");
+        let rendered = r.to_table().render();
+        for row in ["Iterations", "Discarded Signals", "Connections", "Find Winners"] {
+            assert!(rendered.contains(row), "missing {row}");
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! `BatchRust`: the paper's **Multi-signal** reference implementation —
+//! batched Find Winners with the same semantics as `Scalar`, "but without
+//! any actual parallelization, in terms of execution" (§3.1).
+//!
+//! The scan is *unit-tiled*: a tile of unit positions is gathered into a
+//! dense scratch buffer once and streamed over all signals, mirroring the
+//! CUDA kernel's shared-memory staging (and the Pallas kernel's VMEM tiles)
+//! on the CPU cache. Results are exactly those of `Scalar` (same distance
+//! expression, same lowest-index tie-break) — the running merge visits
+//! units in ascending id order.
+
+use crate::geometry::Vec3;
+use crate::som::{Network, Winners, DEAD_POS};
+
+use super::{exhaustive_top2, FindWinners};
+
+/// Cache-tiled batched Find Winners.
+pub struct BatchRust {
+    /// Units per tile (tuned so a tile fits in L1/L2: 3 f32 + id per unit).
+    pub tile: usize,
+    // Scratch (reused across calls).
+    tile_pos: Vec<Vec3>,
+    tile_ids: Vec<u32>,
+}
+
+impl Default for BatchRust {
+    fn default() -> Self {
+        Self::new(512)
+    }
+}
+
+impl BatchRust {
+    pub fn new(tile: usize) -> Self {
+        assert!(tile > 0);
+        Self { tile, tile_pos: Vec::new(), tile_ids: Vec::new() }
+    }
+}
+
+impl FindWinners for BatchRust {
+    fn name(&self) -> &'static str {
+        "multi"
+    }
+
+    fn find2(&mut self, net: &Network, signal: Vec3) -> Option<Winners> {
+        exhaustive_top2(net, signal)
+    }
+
+    fn find2_batch(
+        &mut self,
+        net: &Network,
+        signals: &[Vec3],
+        out: &mut Vec<Option<Winners>>,
+    ) {
+        out.clear();
+        out.resize(
+            signals.len(),
+            Some(Winners { w1: u32::MAX, w2: u32::MAX, d1_sq: f32::INFINITY, d2_sq: f32::INFINITY }),
+        );
+
+        let positions = net.positions();
+        let mut next_slot = 0usize;
+        loop {
+            // Gather the next tile of live units from the dense mirror
+            // (dead slots hold DEAD_POS and are skipped at gather time so
+            // the inner loop stays branch-free).
+            self.tile_pos.clear();
+            self.tile_ids.clear();
+            while next_slot < positions.len() && self.tile_ids.len() < self.tile {
+                let p = positions[next_slot];
+                if p.x != DEAD_POS.x {
+                    self.tile_ids.push(next_slot as u32);
+                    self.tile_pos.push(p);
+                }
+                next_slot += 1;
+            }
+            if self.tile_ids.is_empty() {
+                break;
+            }
+            // Stream every signal over the tile, merging into the running
+            // top-2. Ids ascend across tiles, so strict `<` keeps the
+            // lowest-index tie-break.
+            for (s, slot) in signals.iter().zip(out.iter_mut()) {
+                let w = slot.as_mut().unwrap();
+                for (k, &p) in self.tile_pos.iter().enumerate() {
+                    let d = s.dist2(p);
+                    if d < w.d1_sq {
+                        w.d2_sq = w.d1_sq;
+                        w.w2 = w.w1;
+                        w.d1_sq = d;
+                        w.w1 = self.tile_ids[k];
+                    } else if d < w.d2_sq {
+                        w.d2_sq = d;
+                        w.w2 = self.tile_ids[k];
+                    }
+                }
+            }
+        }
+
+        for slot in out.iter_mut() {
+            if slot.as_ref().unwrap().w2 == u32::MAX {
+                *slot = None;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::*;
+    use super::super::Scalar;
+    use super::*;
+
+    #[test]
+    fn batch_matches_scalar_exactly() {
+        let net = random_net(777, 31, 7);
+        let signals = random_signals(301, 32);
+        let mut batch = BatchRust::new(64);
+        let mut scalar = Scalar::new();
+        let mut got = Vec::new();
+        batch.find2_batch(&net, &signals, &mut got);
+        for (s, g) in signals.iter().zip(&got) {
+            assert_eq!(*g, scalar.find2(&net, *s));
+        }
+    }
+
+    #[test]
+    fn tile_size_invariance() {
+        let net = random_net(333, 33, 0);
+        let signals = random_signals(64, 34);
+        let mut base = Vec::new();
+        BatchRust::new(1).find2_batch(&net, &signals, &mut base);
+        for tile in [2, 7, 128, 1024] {
+            let mut got = Vec::new();
+            BatchRust::new(tile).find2_batch(&net, &signals, &mut got);
+            assert_eq!(got, base, "tile {tile}");
+        }
+    }
+
+    #[test]
+    fn tiny_network_yields_none() {
+        let net = random_net(1, 35, 0);
+        let signals = random_signals(4, 36);
+        let mut got = Vec::new();
+        BatchRust::default().find2_batch(&net, &signals, &mut got);
+        assert!(got.iter().all(|w| w.is_none()));
+    }
+
+    #[test]
+    fn empty_batch_ok() {
+        let net = random_net(10, 37, 0);
+        let mut got = vec![None; 3];
+        BatchRust::default().find2_batch(&net, &[], &mut got);
+        assert!(got.is_empty());
+    }
+}

@@ -1,0 +1,194 @@
+//! `Indexed`: the paper's hash-indexed single-signal variant (§3.1).
+//!
+//! Query = top-2 over the 27-cell neighborhood of the signal; when fewer
+//! than two units live there, fall back to the exhaustive scan. As in the
+//! paper this is *slightly approximate*: a true winner hiding outside the
+//! neighborhood is missed. Index maintenance rides on the Update phase via
+//! [`FindWinners::sync`].
+
+use crate::geometry::{Aabb, Vec3};
+use crate::index::HashGrid;
+use crate::som::{ChangeLog, Network, Winners};
+
+use super::{exhaustive_top2, FindWinners};
+
+/// Hash-grid-accelerated Find Winners.
+pub struct Indexed {
+    grid: HashGrid,
+    /// Count of queries answered by the exhaustive fallback (reported by the
+    /// benches; large values mean the cell size is mistuned).
+    pub fallbacks: u64,
+    pub queries: u64,
+}
+
+impl Indexed {
+    /// Meshes are normalized to the unit cube; `cell` is the index cube
+    /// size (tuned for performance, paper §3.1).
+    pub fn new(cell: f32) -> Self {
+        // Slightly inflated bounds so adapted units that drift out of
+        // [0,1]³ still clamp into a valid boundary cell.
+        let bounds = Aabb::new(Vec3::splat(0.0), Vec3::splat(1.0));
+        Self { grid: HashGrid::new(bounds, cell), fallbacks: 0, queries: 0 }
+    }
+
+    pub fn fallback_rate(&self) -> f64 {
+        if self.queries == 0 {
+            0.0
+        } else {
+            self.fallbacks as f64 / self.queries as f64
+        }
+    }
+}
+
+impl FindWinners for Indexed {
+    fn name(&self) -> &'static str {
+        "indexed"
+    }
+
+    fn find2(&mut self, net: &Network, signal: Vec3) -> Option<Winners> {
+        self.queries += 1;
+        let mut w1 = u32::MAX;
+        let mut w2 = u32::MAX;
+        let mut d1 = f32::INFINITY;
+        let mut d2 = f32::INFINITY;
+        self.grid.for_neighborhood(signal, |id| {
+            let d = signal.dist2(net.pos(id));
+            // Strict `<` + id-order visit is not guaranteed by bucket order,
+            // so break distance ties toward the lower id explicitly to keep
+            // parity with the exhaustive reference.
+            if d < d1 || (d == d1 && id < w1) {
+                if w1 != id {
+                    d2 = d1;
+                    w2 = w1;
+                }
+                d1 = d;
+                w1 = id;
+            } else if (d < d2 || (d == d2 && id < w2)) && id != w1 {
+                d2 = d;
+                w2 = id;
+            }
+        });
+        if w2 == u32::MAX {
+            // Paper: "If this search fails, the exhaustive search is
+            // performed instead."
+            self.fallbacks += 1;
+            return exhaustive_top2(net, signal);
+        }
+        Some(Winners { w1, w2, d1_sq: d1, d2_sq: d2 })
+    }
+
+    fn sync(&mut self, net: &Network, changes: &ChangeLog) {
+        self.sync_with_net(net, changes);
+    }
+
+    fn rebuild(&mut self, net: &Network) {
+        self.grid.rebuild(net);
+    }
+}
+
+impl Indexed {
+    /// Index maintenance (the Update phase's bookkeeping): `moved` units are
+    /// re-bucketed, `inserted` added, `removed` dropped.
+    pub fn sync_with_net(&mut self, net: &Network, changes: &ChangeLog) {
+        for &id in &changes.inserted {
+            self.grid.insert(id, net.pos(id));
+        }
+        for &(id, _old) in &changes.moved {
+            // A unit may have been moved and then removed within the same
+            // signal (orphan pruning); skip those — the removed loop handles
+            // them.
+            if net.is_alive(id) {
+                self.grid.update(id, net.pos(id));
+            }
+        }
+        for &(id, _pos) in &changes.removed {
+            self.grid.remove(id);
+        }
+    }
+
+    pub fn grid(&self) -> &HashGrid {
+        &self.grid
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::*;
+    use super::super::Scalar;
+    use super::*;
+
+    fn build_indexed(net: &Network, cell: f32) -> Indexed {
+        let mut idx = Indexed::new(cell);
+        idx.rebuild(net);
+        idx
+    }
+
+    #[test]
+    fn dense_net_matches_exhaustive() {
+        // With a dense uniform net and a reasonable cell size the 27-cell
+        // neighborhood almost always contains the true winners.
+        let net = random_net(2000, 21, 0);
+        let mut idx = build_indexed(&net, 0.08);
+        let mut scalar = Scalar::new();
+        let mut agree = 0;
+        let signals = random_signals(500, 22);
+        for &s in &signals {
+            let a = idx.find2(&net, s).unwrap();
+            let b = scalar.find2(&net, s).unwrap();
+            if a.w1 == b.w1 {
+                agree += 1;
+            }
+            // d1 can exceed the true minimum only when approximation missed.
+            assert!(a.d1_sq >= b.d1_sq - 1e-9);
+        }
+        assert!(agree as f64 / signals.len() as f64 > 0.99, "agree {agree}/500");
+    }
+
+    #[test]
+    fn sparse_net_falls_back() {
+        let net = random_net(2, 23, 0);
+        let mut idx = build_indexed(&net, 0.05);
+        let s = Vec3::new(0.5, 0.5, 0.5);
+        let got = idx.find2(&net, s).unwrap();
+        assert!(idx.fallbacks > 0, "expected exhaustive fallback");
+        let want = Scalar::new().find2(&net, s).unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn maintenance_tracks_changes() {
+        let mut net = random_net(100, 25, 0);
+        let mut idx = build_indexed(&net, 0.1);
+        // Simulate an update: move one unit far away, insert one, remove one.
+        let moved_id = net.ids().next().unwrap();
+        let removed_id = net.ids().nth(1).unwrap();
+        let mut log = ChangeLog::default();
+        let old = net.pos(moved_id);
+        net.unit_mut(moved_id).pos = Vec3::new(0.99, 0.99, 0.99);
+        log.moved.push((moved_id, old));
+        let new_id = net.insert(Vec3::new(0.01, 0.5, 0.5), 0.1);
+        log.inserted.push(new_id);
+        let rpos = net.pos(removed_id);
+        net.remove(removed_id);
+        log.removed.push((removed_id, rpos));
+        idx.sync_with_net(&net, &log);
+        idx.grid().check_invariants().unwrap();
+        // Index agrees with exhaustive after maintenance.
+        let mut scalar = Scalar::new();
+        for &s in &random_signals(100, 26) {
+            let a = idx.find2(&net, s).unwrap();
+            let b = scalar.find2(&net, s).unwrap();
+            assert!(a.d1_sq >= b.d1_sq - 1e-9);
+        }
+    }
+
+    #[test]
+    fn fallback_rate_reported() {
+        let net = random_net(2, 27, 0);
+        let mut idx = build_indexed(&net, 0.02);
+        for &s in &random_signals(50, 28) {
+            idx.find2(&net, s);
+        }
+        assert!(idx.fallback_rate() > 0.5);
+    }
+}

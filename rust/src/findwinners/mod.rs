@@ -1,0 +1,172 @@
+//! The Find Winners phase — the paper's compute hot-spot — behind one trait
+//! with four implementations matching the paper's four experimental columns:
+//!
+//! | paper column | impl | strategy |
+//! |---|---|---|
+//! | Single-signal | [`Scalar`] | exhaustive scan per signal |
+//! | Indexed | [`Indexed`] | spatial hash, 27-cell query, exhaustive fallback |
+//! | Multi-signal | [`BatchRust`] | batched scan, unit-tiled for cache reuse |
+//! | GPU-based | `runtime::PjrtFindWinners` | AOT Pallas/XLA artifact via PJRT |
+//!
+//! All implementations share *exact* semantics (squared distances in f32 via
+//! the naive difference form, lowest-index tie-break); `Indexed` is the one
+//! documented exception (the paper calls it "slightly approximate": the
+//! 27-cell query can miss the true winner when a closer unit lies outside
+//! the neighborhood — exactly as in the original).
+
+mod batch;
+mod indexed;
+mod scalar;
+
+pub use batch::BatchRust;
+pub use indexed::Indexed;
+pub use scalar::Scalar;
+
+use crate::geometry::Vec3;
+use crate::som::{ChangeLog, Network, Winners};
+
+/// Strategy for the Find Winners phase.
+pub trait FindWinners {
+    /// Implementation name (report column).
+    fn name(&self) -> &'static str;
+
+    /// Top-2 nearest live units for one signal. `None` when the network has
+    /// fewer than two units.
+    fn find2(&mut self, net: &Network, signal: Vec3) -> Option<Winners>;
+
+    /// Batched top-2 for `signals`, one [`Winners`] per signal, appended to
+    /// `out` (cleared first). Default: loop over `find2`.
+    fn find2_batch(
+        &mut self,
+        net: &Network,
+        signals: &[Vec3],
+        out: &mut Vec<Option<Winners>>,
+    ) {
+        out.clear();
+        out.reserve(signals.len());
+        for &s in signals {
+            out.push(self.find2(net, s));
+        }
+    }
+
+    /// Notification that the Update phase changed the network — index-based
+    /// implementations maintain their structures here ("the maintenance of
+    /// the index … is performed in the Update phase", §3.1).
+    fn sync(&mut self, _net: &Network, _changes: &ChangeLog) {}
+
+    /// (Re)build any internal structure from scratch (called once after
+    /// `init`).
+    fn rebuild(&mut self, _net: &Network) {}
+}
+
+/// Shared exhaustive top-2 core: scans live slots in id order (lowest-index
+/// tie-break via strict `<`). This is the semantic reference for every other
+/// implementation.
+#[inline]
+pub(crate) fn exhaustive_top2(net: &Network, signal: Vec3) -> Option<Winners> {
+    let mut w1 = u32::MAX;
+    let mut w2 = u32::MAX;
+    let mut d1 = f32::INFINITY;
+    let mut d2 = f32::INFINITY;
+    // Walk the dense position mirror: 12-byte stride, no alive branch (dead
+    // slots hold DEAD_POS whose distance overflows to +inf) — ~1.6× faster
+    // than walking the Unit slab (EXPERIMENTS.md §Perf).
+    for (k, p) in net.positions().iter().enumerate() {
+        let d = signal.dist2(*p);
+        if d < d1 {
+            d2 = d1;
+            w2 = w1;
+            d1 = d;
+            w1 = k as u32;
+        } else if d < d2 {
+            d2 = d;
+            w2 = k as u32;
+        }
+    }
+    if w2 == u32::MAX || d2 == f32::INFINITY {
+        None
+    } else {
+        Some(Winners { w1, w2, d1_sq: d1, d2_sq: d2 })
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// Random test network with `n` units in the unit cube (some removed to
+    /// exercise dead slots).
+    pub fn random_net(n: usize, seed: u64, kill_every: usize) -> Network {
+        let mut rng = Rng::seed_from(seed);
+        let mut net = Network::new();
+        let mut ids = Vec::new();
+        for _ in 0..n {
+            let p = Vec3::new(rng.f32(), rng.f32(), rng.f32());
+            ids.push(net.insert(p, 0.1));
+        }
+        if kill_every > 0 {
+            for (k, &id) in ids.iter().enumerate() {
+                if k % kill_every == kill_every - 1 && net.len() > 2 {
+                    net.remove(id);
+                }
+            }
+        }
+        net
+    }
+
+    pub fn random_signals(m: usize, seed: u64) -> Vec<Vec3> {
+        let mut rng = Rng::seed_from(seed);
+        (0..m)
+            .map(|_| Vec3::new(rng.f32(), rng.f32(), rng.f32()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::*;
+    use super::*;
+
+    #[test]
+    fn exhaustive_returns_two_distinct() {
+        let net = random_net(50, 1, 0);
+        for s in random_signals(20, 2) {
+            let w = exhaustive_top2(&net, s).unwrap();
+            assert_ne!(w.w1, w.w2);
+            assert!(w.d1_sq <= w.d2_sq);
+        }
+    }
+
+    #[test]
+    fn exhaustive_none_for_tiny_net() {
+        let net = random_net(1, 3, 0);
+        assert!(exhaustive_top2(&net, Vec3::ZERO).is_none());
+    }
+
+    #[test]
+    fn exhaustive_skips_dead_units() {
+        let net = random_net(30, 4, 3);
+        for s in random_signals(10, 5) {
+            let w = exhaustive_top2(&net, s).unwrap();
+            assert!(net.is_alive(w.w1));
+            assert!(net.is_alive(w.w2));
+        }
+    }
+
+    #[test]
+    fn winner_is_truly_nearest() {
+        let net = random_net(100, 6, 0);
+        for s in random_signals(50, 7) {
+            let w = exhaustive_top2(&net, s).unwrap();
+            for id in net.ids() {
+                if id != w.w1 {
+                    assert!(s.dist2(net.pos(id)) >= w.d1_sq);
+                }
+                if id != w.w1 && id != w.w2 {
+                    assert!(s.dist2(net.pos(id)) >= w.d2_sq);
+                }
+            }
+        }
+    }
+}

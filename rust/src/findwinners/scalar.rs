@@ -1,0 +1,48 @@
+//! `Scalar`: the paper's **Single-signal** reference implementation — one
+//! exhaustive O(N) scan per signal, no auxiliary structure.
+
+use crate::geometry::Vec3;
+use crate::som::{Network, Winners};
+
+use super::{exhaustive_top2, FindWinners};
+
+/// Exhaustive per-signal Find Winners (the baseline every speedup in
+/// Figs. 9–10 is measured against).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Scalar;
+
+impl Scalar {
+    pub fn new() -> Self {
+        Scalar
+    }
+}
+
+impl FindWinners for Scalar {
+    fn name(&self) -> &'static str {
+        "single"
+    }
+
+    #[inline]
+    fn find2(&mut self, net: &Network, signal: Vec3) -> Option<Winners> {
+        exhaustive_top2(net, signal)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::*;
+    use super::*;
+
+    #[test]
+    fn batch_default_matches_single() {
+        let net = random_net(64, 10, 5);
+        let signals = random_signals(33, 11);
+        let mut fw = Scalar::new();
+        let mut out = Vec::new();
+        fw.find2_batch(&net, &signals, &mut out);
+        assert_eq!(out.len(), signals.len());
+        for (s, got) in signals.iter().zip(&out) {
+            assert_eq!(*got, fw.find2(&net, *s));
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Axis-aligned bounding box — used by the marching grid, the hash index
+//! (cell addressing) and mesh normalization.
+
+use super::Vec3;
+
+/// Axis-aligned bounding box `[min, max]`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Aabb {
+    pub min: Vec3,
+    pub max: Vec3,
+}
+
+impl Aabb {
+    /// The empty box (inverted bounds); grows under [`Aabb::expand`].
+    pub const EMPTY: Aabb = Aabb {
+        min: Vec3::splat(f32::INFINITY),
+        max: Vec3::splat(f32::NEG_INFINITY),
+    };
+
+    pub fn new(min: Vec3, max: Vec3) -> Self {
+        Self { min, max }
+    }
+
+    /// Box enclosing a point set.
+    pub fn from_points<'a>(pts: impl IntoIterator<Item = &'a Vec3>) -> Self {
+        let mut b = Self::EMPTY;
+        for p in pts {
+            b.expand(*p);
+        }
+        b
+    }
+
+    #[inline]
+    pub fn expand(&mut self, p: Vec3) {
+        self.min = self.min.min(p);
+        self.max = self.max.max(p);
+    }
+
+    /// Uniformly inflate by `pad` on all sides.
+    pub fn inflated(&self, pad: f32) -> Aabb {
+        Aabb::new(self.min - Vec3::splat(pad), self.max + Vec3::splat(pad))
+    }
+
+    #[inline]
+    pub fn extent(&self) -> Vec3 {
+        self.max - self.min
+    }
+
+    #[inline]
+    pub fn center(&self) -> Vec3 {
+        (self.min + self.max) * 0.5
+    }
+
+    /// Longest edge of the box.
+    #[inline]
+    pub fn max_extent(&self) -> f32 {
+        let e = self.extent();
+        e.x.max(e.y).max(e.z)
+    }
+
+    #[inline]
+    pub fn contains(&self, p: Vec3) -> bool {
+        p.x >= self.min.x
+            && p.y >= self.min.y
+            && p.z >= self.min.z
+            && p.x <= self.max.x
+            && p.y <= self.max.y
+            && p.z <= self.max.z
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.min.x > self.max.x
+    }
+
+    /// Surface area (0 for empty).
+    pub fn area(&self) -> f32 {
+        if self.is_empty() {
+            return 0.0;
+        }
+        let e = self.extent();
+        2.0 * (e.x * e.y + e.y * e.z + e.z * e.x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_points_and_contains() {
+        let pts = [
+            Vec3::new(-1.0, 0.0, 2.0),
+            Vec3::new(3.0, -2.0, 0.0),
+            Vec3::new(0.0, 5.0, 1.0),
+        ];
+        let b = Aabb::from_points(pts.iter());
+        assert_eq!(b.min, Vec3::new(-1.0, -2.0, 0.0));
+        assert_eq!(b.max, Vec3::new(3.0, 5.0, 2.0));
+        for p in &pts {
+            assert!(b.contains(*p));
+        }
+        assert!(!b.contains(Vec3::new(10.0, 0.0, 0.0)));
+    }
+
+    #[test]
+    fn empty_box_behaviour() {
+        let b = Aabb::EMPTY;
+        assert!(b.is_empty());
+        assert_eq!(b.area(), 0.0);
+        assert!(!b.contains(Vec3::ZERO));
+    }
+
+    #[test]
+    fn inflate_grows_symmetrically() {
+        let b = Aabb::new(Vec3::ZERO, Vec3::ONE).inflated(0.5);
+        assert_eq!(b.min, Vec3::splat(-0.5));
+        assert_eq!(b.max, Vec3::splat(1.5));
+    }
+
+    #[test]
+    fn extent_center_area() {
+        let b = Aabb::new(Vec3::ZERO, Vec3::new(2.0, 3.0, 4.0));
+        assert_eq!(b.extent(), Vec3::new(2.0, 3.0, 4.0));
+        assert_eq!(b.center(), Vec3::new(1.0, 1.5, 2.0));
+        assert_eq!(b.max_extent(), 4.0);
+        assert_eq!(b.area(), 2.0 * (6.0 + 12.0 + 8.0));
+    }
+}

@@ -1,0 +1,12 @@
+//! Geometric primitives: [`Vec3`], [`Aabb`], [`Triangle`].
+//!
+//! Everything downstream (implicit fields, marching tetrahedra, meshes, the
+//! SOAM reference vectors, the hash index) is built on these three types.
+
+mod aabb;
+mod triangle;
+mod vec3;
+
+pub use aabb::Aabb;
+pub use triangle::Triangle;
+pub use vec3::Vec3;

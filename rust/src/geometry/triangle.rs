@@ -1,0 +1,134 @@
+//! Triangle primitive: area, normal, uniform sampling.
+//!
+//! The paper samples input signals "with uniform probability distribution
+//! P(ξ)" from a triangular mesh (§3.1); [`Triangle::sample_uniform`] is the
+//! per-face half of that sampler (the area-weighted face choice lives in
+//! `mesh::sampler`).
+
+use super::Vec3;
+use crate::rng::Rng;
+
+/// A triangle given by its three corners.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Triangle {
+    pub a: Vec3,
+    pub b: Vec3,
+    pub c: Vec3,
+}
+
+impl Triangle {
+    pub fn new(a: Vec3, b: Vec3, c: Vec3) -> Self {
+        Self { a, b, c }
+    }
+
+    #[inline]
+    pub fn area(&self) -> f32 {
+        (self.b - self.a).cross(self.c - self.a).norm() * 0.5
+    }
+
+    /// Unit normal with right-hand orientation `(b-a) × (c-a)`; `None` for
+    /// degenerate triangles.
+    pub fn normal(&self) -> Option<Vec3> {
+        (self.b - self.a).cross(self.c - self.a).normalized()
+    }
+
+    #[inline]
+    pub fn centroid(&self) -> Vec3 {
+        (self.a + self.b + self.c) / 3.0
+    }
+
+    /// Uniform point on the triangle via the square-root parametrization
+    /// (Osada et al.): `p = (1-√r1)·a + √r1(1-r2)·b + √r1·r2·c`.
+    pub fn sample_uniform(&self, rng: &mut Rng) -> Vec3 {
+        let r1 = (rng.f64() as f32).sqrt();
+        let r2 = rng.f64() as f32;
+        self.a * (1.0 - r1) + self.b * (r1 * (1.0 - r2)) + self.c * (r1 * r2)
+    }
+
+    /// Barycentric coordinates of `p` projected onto the triangle plane.
+    pub fn barycentric(&self, p: Vec3) -> (f32, f32, f32) {
+        let v0 = self.b - self.a;
+        let v1 = self.c - self.a;
+        let v2 = p - self.a;
+        let d00 = v0.dot(v0);
+        let d01 = v0.dot(v1);
+        let d11 = v1.dot(v1);
+        let d20 = v2.dot(v0);
+        let d21 = v2.dot(v1);
+        let denom = d00 * d11 - d01 * d01;
+        if denom.abs() < 1e-20 {
+            return (1.0, 0.0, 0.0);
+        }
+        let v = (d11 * d20 - d01 * d21) / denom;
+        let w = (d00 * d21 - d01 * d20) / denom;
+        (1.0 - v - w, v, w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unit_right() -> Triangle {
+        Triangle::new(Vec3::ZERO, Vec3::new(1.0, 0.0, 0.0), Vec3::new(0.0, 1.0, 0.0))
+    }
+
+    #[test]
+    fn area_and_normal() {
+        let t = unit_right();
+        assert!((t.area() - 0.5).abs() < 1e-7);
+        assert_eq!(t.normal().unwrap(), Vec3::new(0.0, 0.0, 1.0));
+    }
+
+    #[test]
+    fn degenerate_normal_is_none() {
+        let t = Triangle::new(Vec3::ZERO, Vec3::ONE, Vec3::ONE * 2.0);
+        assert!(t.normal().is_none());
+        assert_eq!(t.area(), 0.0);
+    }
+
+    #[test]
+    fn samples_inside_triangle() {
+        let t = unit_right();
+        let mut rng = Rng::seed_from(5);
+        for _ in 0..2000 {
+            let p = t.sample_uniform(&mut rng);
+            let (u, v, w) = t.barycentric(p);
+            for c in [u, v, w] {
+                assert!((-1e-4..=1.0 + 1e-4).contains(&c), "bary {c}");
+            }
+            assert!(p.z.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn sampling_is_roughly_uniform() {
+        // Split the unit right triangle along x+y=0.5: the small corner
+        // triangle holds 1/4 of the area.
+        let t = unit_right();
+        let mut rng = Rng::seed_from(11);
+        let n = 20_000;
+        let corner = (0..n)
+            .filter(|_| {
+                let p = t.sample_uniform(&mut rng);
+                p.x + p.y < 0.5
+            })
+            .count();
+        let frac = corner as f64 / n as f64;
+        assert!((frac - 0.25).abs() < 0.02, "corner fraction {frac}");
+    }
+
+    #[test]
+    fn barycentric_roundtrip() {
+        let t = Triangle::new(
+            Vec3::new(0.0, 0.0, 1.0),
+            Vec3::new(2.0, 0.0, 1.0),
+            Vec3::new(0.0, 3.0, 1.0),
+        );
+        let p = t.a * 0.2 + t.b * 0.3 + t.c * 0.5;
+        let (u, v, w) = t.barycentric(p);
+        assert!((u - 0.2).abs() < 1e-5);
+        assert!((v - 0.3).abs() < 1e-5);
+        assert!((w - 0.5).abs() < 1e-5);
+    }
+}

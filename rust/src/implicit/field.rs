@@ -1,0 +1,267 @@
+//! Field trait, signed-distance primitives and hard CSG operators.
+//!
+//! Hard (`min`/`max`) CSG is used instead of smooth blending on purpose:
+//! blending radii can silently change topology (fill a hole, fuse two
+//! handles), and the benchmark shapes pin their genus with tests.
+
+use crate::geometry::Vec3;
+
+/// A scalar field over R³; negative inside, positive outside.
+pub trait Field: Send + Sync {
+    /// Field value at `p`.
+    fn eval(&self, p: Vec3) -> f32;
+
+    /// Central-difference gradient (used by the polygonizer to orient
+    /// output triangles outward).
+    fn gradient(&self, p: Vec3, h: f32) -> Vec3 {
+        let dx = self.eval(p + Vec3::new(h, 0.0, 0.0)) - self.eval(p - Vec3::new(h, 0.0, 0.0));
+        let dy = self.eval(p + Vec3::new(0.0, h, 0.0)) - self.eval(p - Vec3::new(0.0, h, 0.0));
+        let dz = self.eval(p + Vec3::new(0.0, 0.0, h)) - self.eval(p - Vec3::new(0.0, 0.0, h));
+        Vec3::new(dx, dy, dz)
+    }
+}
+
+impl<F: Fn(Vec3) -> f32 + Send + Sync> Field for F {
+    fn eval(&self, p: Vec3) -> f32 {
+        self(p)
+    }
+}
+
+/// Sphere of radius `r` centered at `c` (exact SDF).
+#[derive(Clone, Copy, Debug)]
+pub struct Sphere {
+    pub center: Vec3,
+    pub radius: f32,
+}
+
+impl Sphere {
+    pub fn new(center: Vec3, radius: f32) -> Self {
+        Self { center, radius }
+    }
+}
+
+impl Field for Sphere {
+    #[inline]
+    fn eval(&self, p: Vec3) -> f32 {
+        (p - self.center).norm() - self.radius
+    }
+}
+
+/// Torus with arbitrary center and (unit) axis; major radius `major`,
+/// tube radius `minor` (exact SDF).
+#[derive(Clone, Copy, Debug)]
+pub struct Torus {
+    pub center: Vec3,
+    pub axis: Vec3,
+    pub major: f32,
+    pub minor: f32,
+}
+
+impl Torus {
+    pub fn new(center: Vec3, axis: Vec3, major: f32, minor: f32) -> Self {
+        let axis = axis.normalized().expect("torus axis must be nonzero");
+        Self { center, axis, major, minor }
+    }
+}
+
+impl Field for Torus {
+    #[inline]
+    fn eval(&self, p: Vec3) -> f32 {
+        let q = p - self.center;
+        let z = q.dot(self.axis);
+        let radial = (q - self.axis * z).norm();
+        let dr = radial - self.major;
+        (dr * dr + z * z).sqrt() - self.minor
+    }
+}
+
+/// Infinite cylinder of radius `radius` around the line `center + t·axis`.
+/// Used subtractively to punch through-holes (heptoroid plate).
+#[derive(Clone, Copy, Debug)]
+pub struct Cylinder {
+    pub center: Vec3,
+    pub axis: Vec3,
+    pub radius: f32,
+}
+
+impl Cylinder {
+    pub fn new(center: Vec3, axis: Vec3, radius: f32) -> Self {
+        let axis = axis.normalized().expect("cylinder axis must be nonzero");
+        Self { center, axis, radius }
+    }
+}
+
+impl Field for Cylinder {
+    #[inline]
+    fn eval(&self, p: Vec3) -> f32 {
+        let q = p - self.center;
+        let z = q.dot(self.axis);
+        (q - self.axis * z).norm() - self.radius
+    }
+}
+
+/// Axis-aligned box with rounded edges: half-extents `half`, corner radius
+/// `round` (exact SDF).
+#[derive(Clone, Copy, Debug)]
+pub struct RoundedBox {
+    pub center: Vec3,
+    pub half: Vec3,
+    pub round: f32,
+}
+
+impl RoundedBox {
+    pub fn new(center: Vec3, half: Vec3, round: f32) -> Self {
+        Self { center, half, round }
+    }
+}
+
+impl Field for RoundedBox {
+    #[inline]
+    fn eval(&self, p: Vec3) -> f32 {
+        let q = p - self.center;
+        let d = Vec3::new(q.x.abs(), q.y.abs(), q.z.abs()) - self.half
+            + Vec3::splat(self.round);
+        let outside = Vec3::new(d.x.max(0.0), d.y.max(0.0), d.z.max(0.0)).norm();
+        let inside = d.x.max(d.y).max(d.z).min(0.0);
+        outside + inside - self.round
+    }
+}
+
+/// CSG union: `min` of the children.
+pub struct Union {
+    pub children: Vec<Box<dyn Field>>,
+}
+
+impl Union {
+    pub fn new(children: Vec<Box<dyn Field>>) -> Self {
+        assert!(!children.is_empty(), "empty union");
+        Self { children }
+    }
+}
+
+impl Field for Union {
+    #[inline]
+    fn eval(&self, p: Vec3) -> f32 {
+        self.children
+            .iter()
+            .map(|c| c.eval(p))
+            .fold(f32::INFINITY, f32::min)
+    }
+}
+
+/// CSG intersection: `max` of the children.
+pub struct Intersection {
+    pub children: Vec<Box<dyn Field>>,
+}
+
+impl Intersection {
+    pub fn new(children: Vec<Box<dyn Field>>) -> Self {
+        assert!(!children.is_empty(), "empty intersection");
+        Self { children }
+    }
+}
+
+impl Field for Intersection {
+    #[inline]
+    fn eval(&self, p: Vec3) -> f32 {
+        self.children
+            .iter()
+            .map(|c| c.eval(p))
+            .fold(f32::NEG_INFINITY, f32::max)
+    }
+}
+
+/// CSG difference `base \ cut₁ \ cut₂ …` : `max(base, -cutᵢ)`.
+pub struct Difference {
+    pub base: Box<dyn Field>,
+    pub cuts: Vec<Box<dyn Field>>,
+}
+
+impl Difference {
+    pub fn new(base: Box<dyn Field>, cuts: Vec<Box<dyn Field>>) -> Self {
+        Self { base, cuts }
+    }
+}
+
+impl Field for Difference {
+    #[inline]
+    fn eval(&self, p: Vec3) -> f32 {
+        let mut v = self.base.eval(p);
+        for c in &self.cuts {
+            v = v.max(-c.eval(p));
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sphere_sign_convention() {
+        let s = Sphere::new(Vec3::ZERO, 1.0);
+        assert!(s.eval(Vec3::ZERO) < 0.0);
+        assert!(s.eval(Vec3::new(2.0, 0.0, 0.0)) > 0.0);
+        assert!(s.eval(Vec3::new(1.0, 0.0, 0.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn torus_ring_points() {
+        let t = Torus::new(Vec3::ZERO, Vec3::new(0.0, 0.0, 1.0), 1.0, 0.25);
+        // On the ring circle: deepest inside.
+        assert!((t.eval(Vec3::new(1.0, 0.0, 0.0)) + 0.25).abs() < 1e-6);
+        // Center of the hole: outside.
+        assert!(t.eval(Vec3::ZERO) > 0.0);
+        // On the tube surface.
+        assert!(t.eval(Vec3::new(1.25, 0.0, 0.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn torus_arbitrary_axis_is_rotation_invariant() {
+        let a = Torus::new(Vec3::ZERO, Vec3::new(0.0, 0.0, 1.0), 1.0, 0.2);
+        let b = Torus::new(Vec3::ZERO, Vec3::new(1.0, 0.0, 0.0), 1.0, 0.2);
+        // Swap x/z between the two evaluations.
+        let p = Vec3::new(0.3, 0.8, 0.1);
+        let q = Vec3::new(0.1, 0.8, 0.3);
+        assert!((a.eval(p) - b.eval(q)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cylinder_axis_independence() {
+        let c = Cylinder::new(Vec3::ZERO, Vec3::new(0.0, 0.0, 1.0), 0.5);
+        assert_eq!(c.eval(Vec3::new(0.0, 0.0, -37.0)), c.eval(Vec3::ZERO));
+        assert!(c.eval(Vec3::new(1.0, 0.0, 5.0)) > 0.0);
+    }
+
+    #[test]
+    fn rounded_box_inside_outside() {
+        let b = RoundedBox::new(Vec3::ZERO, Vec3::new(1.0, 0.5, 0.25), 0.05);
+        assert!(b.eval(Vec3::ZERO) < 0.0);
+        assert!(b.eval(Vec3::new(1.2, 0.0, 0.0)) > 0.0);
+        assert!(b.eval(Vec3::new(0.0, 0.0, 0.26)) > 0.0);
+    }
+
+    #[test]
+    fn csg_difference_punches_hole() {
+        let plate = RoundedBox::new(Vec3::ZERO, Vec3::new(1.0, 1.0, 0.2), 0.02);
+        let hole = Cylinder::new(Vec3::ZERO, Vec3::new(0.0, 0.0, 1.0), 0.3);
+        let d = Difference::new(Box::new(plate), vec![Box::new(hole)]);
+        assert!(d.eval(Vec3::ZERO) > 0.0, "inside the hole is outside the solid");
+        assert!(d.eval(Vec3::new(0.6, 0.0, 0.0)) < 0.0, "plate material remains");
+    }
+
+    #[test]
+    fn gradient_points_outward() {
+        let s = Sphere::new(Vec3::ZERO, 1.0);
+        let g = s.gradient(Vec3::new(0.9, 0.0, 0.0), 1e-3);
+        assert!(g.x > 0.0);
+        assert!(g.normalized().unwrap().x > 0.99);
+    }
+
+    #[test]
+    fn closure_as_field() {
+        let f = |p: Vec3| p.norm() - 2.0;
+        assert!(Field::eval(&f, Vec3::ZERO) < 0.0);
+    }
+}

@@ -1,0 +1,25 @@
+//! Implicit scalar fields and CSG — the source geometry substrate.
+//!
+//! The paper evaluates on four benchmark meshes (Stanford Bunny, Eight,
+//! Skeleton Hand, Heptoroid) that are not redistributable in this offline
+//! image. Per the substitution rule (DESIGN.md §3) we rebuild the *relevant
+//! properties* — genus and local-feature-size profile — as procedural
+//! implicit surfaces, polygonized by [`crate::marching`]:
+//!
+//! | paper mesh | proxy ([`shapes`]) | genus | LFS profile |
+//! |---|---|---|---|
+//! | Stanford Bunny | `blob` (union of 4 spheres) | 0 | moderate variation |
+//! | Eight | `eight` (two merged tori) | 2 | nearly constant |
+//! | Skeleton Hand | `hand` (palm + 5 finger loops) | 5 | wide variation, thin features |
+//! | Heptoroid | `heptoroid` (plate with 22 holes) | 22 | low & variable |
+//!
+//! Convention: field value `< 0` inside, `> 0` outside; the surface is the
+//! zero level set. Values need not be exact distances — only the sign and
+//! continuity matter to the polygonizer.
+
+mod field;
+pub mod shapes;
+
+pub use field::{
+    Cylinder, Difference, Field, Intersection, RoundedBox, Sphere, Torus, Union,
+};

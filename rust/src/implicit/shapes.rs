@@ -1,0 +1,204 @@
+//! The four benchmark shapes (proxies for the paper's test meshes).
+//!
+//! Each builder returns the implicit field, the polygonization bounds and
+//! the genus the reconstruction must reproduce (pinned by tests through the
+//! Euler characteristic of the marched mesh — `V − E + F = 2 − 2g`).
+
+use crate::geometry::{Aabb, Vec3};
+
+use super::{Cylinder, Difference, Field, RoundedBox, Sphere, Torus, Union};
+
+/// A benchmark shape: field + meshing bounds + expected topology.
+pub struct Shape {
+    pub field: Box<dyn Field>,
+    pub bounds: Aabb,
+    pub genus: u32,
+    pub name: &'static str,
+    /// Default marching-grid resolution that resolves the thinnest feature.
+    pub default_resolution: u32,
+}
+
+/// Bunny proxy: a blobby union of four spheres — genus 0 with non-trivial
+/// curvature (and hence LFS) variation, like the original's ears/body ratio.
+pub fn blob() -> Shape {
+    let field = Union::new(vec![
+        Box::new(Sphere::new(Vec3::new(0.0, 0.0, 0.0), 0.42)),
+        Box::new(Sphere::new(Vec3::new(0.34, 0.22, 0.05), 0.26)),
+        Box::new(Sphere::new(Vec3::new(-0.28, 0.26, 0.12), 0.17)),
+        Box::new(Sphere::new(Vec3::new(0.02, -0.38, 0.18), 0.13)),
+    ]);
+    Shape {
+        field: Box::new(field),
+        bounds: Aabb::new(Vec3::splat(-0.8), Vec3::splat(0.8)),
+        genus: 0,
+        name: "blob",
+        default_resolution: 64,
+    }
+}
+
+/// Eight / double-torus proxy: two tori merged side-by-side — genus 2 with
+/// nearly constant LFS (tube radius everywhere).
+pub fn eight() -> Shape {
+    let field = Union::new(vec![
+        Box::new(Torus::new(
+            Vec3::new(-0.27, 0.0, 0.0),
+            Vec3::new(0.0, 0.0, 1.0),
+            0.22,
+            0.09,
+        )),
+        Box::new(Torus::new(
+            Vec3::new(0.27, 0.0, 0.0),
+            Vec3::new(0.0, 0.0, 1.0),
+            0.22,
+            0.09,
+        )),
+    ]);
+    Shape {
+        field: Box::new(field),
+        bounds: Aabb::new(Vec3::new(-0.7, -0.45, -0.25), Vec3::new(0.7, 0.45, 0.25)),
+        genus: 2,
+        name: "eight",
+        default_resolution: 72,
+    }
+}
+
+/// Skeleton-hand proxy: a palm sphere with five thin finger *loops* — genus
+/// 5 with widely varying LFS (the thin loops mimic the wrist/finger regions
+/// the paper calls out as "considerably low" LFS).
+pub fn hand() -> Shape {
+    let palm = Sphere::new(Vec3::ZERO, 0.42);
+    let mut children: Vec<Box<dyn Field>> = vec![Box::new(palm)];
+    // Five loops fanned over the upper hemisphere. Each torus sits with its
+    // center on the palm surface and its ring plane containing the radial
+    // direction, so part of the ring is inside the palm and the rest arcs
+    // outside: union ⇒ one handle each.
+    let fingers = 5;
+    for i in 0..fingers {
+        let phi = (i as f32 / (fingers - 1) as f32 - 0.5) * 1.9; // fan angle
+        let radial = Vec3::new(phi.sin(), phi.cos(), 0.15 * (i as f32 - 2.0))
+            .normalized()
+            .unwrap();
+        let center = radial * 0.42;
+        // Ring plane must contain `radial` ⇒ torus axis ⊥ radial.
+        let axis = radial.cross(Vec3::new(0.0, 0.0, 1.0)).normalized().unwrap();
+        let major = 0.16 + 0.02 * (i as f32 - 2.0).abs(); // vary loop size
+        children.push(Box::new(Torus::new(center, axis, major, 0.045)));
+    }
+    Shape {
+        field: Box::new(Union::new(children)),
+        bounds: Aabb::new(Vec3::splat(-0.85), Vec3::splat(0.85)),
+        genus: 5,
+        name: "hand",
+        default_resolution: 96,
+    }
+}
+
+/// Heptoroid proxy: a rounded plate punched by 22 through-holes (11 × 2
+/// grid) — genus 22 with low, variable LFS in the thin walls between holes.
+pub fn heptoroid() -> Shape {
+    let plate = RoundedBox::new(Vec3::ZERO, Vec3::new(1.32, 0.36, 0.1), 0.04);
+    let mut cuts: Vec<Box<dyn Field>> = Vec::new();
+    let (cols, rows) = (11, 2);
+    for i in 0..cols {
+        for j in 0..rows {
+            let x = (i as f32 - (cols - 1) as f32 / 2.0) * 0.23;
+            let y = (j as f32 - (rows - 1) as f32 / 2.0) * 0.34;
+            cuts.push(Box::new(Cylinder::new(
+                Vec3::new(x, y, 0.0),
+                Vec3::new(0.0, 0.0, 1.0),
+                0.075,
+            )));
+        }
+    }
+    debug_assert_eq!(cols * rows, 22);
+    Shape {
+        field: Box::new(Difference::new(Box::new(plate), cuts)),
+        bounds: Aabb::new(Vec3::new(-1.6, -0.65, -0.3), Vec3::new(1.6, 0.65, 0.3)),
+        genus: 22,
+        name: "heptoroid",
+        default_resolution: 160,
+    }
+}
+
+/// All four benchmark shapes in paper order (Bunny, Eight, Hand, Heptoroid).
+pub fn all() -> Vec<Shape> {
+    vec![blob(), eight(), hand(), heptoroid()]
+}
+
+/// Look a shape up by name.
+pub fn by_name(name: &str) -> Option<Shape> {
+    match name {
+        "blob" | "bunny" => Some(blob()),
+        "eight" => Some(eight()),
+        "hand" => Some(hand()),
+        "heptoroid" => Some(heptoroid()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_shapes_have_interior_and_exterior() {
+        for s in all() {
+            // bounds corner must be outside…
+            assert!(s.field.eval(s.bounds.min) > 0.0, "{}", s.name);
+            // …and the field must go negative somewhere on a coarse probe.
+            let mut found_inside = false;
+            let steps = 24;
+            'outer: for i in 0..steps {
+                for j in 0..steps {
+                    for k in 0..steps {
+                        let t = Vec3::new(
+                            (i as f32 + 0.5) / steps as f32,
+                            (j as f32 + 0.5) / steps as f32,
+                            (k as f32 + 0.5) / steps as f32,
+                        );
+                        let p = Vec3::new(
+                            s.bounds.min.x + t.x * s.bounds.extent().x,
+                            s.bounds.min.y + t.y * s.bounds.extent().y,
+                            s.bounds.min.z + t.z * s.bounds.extent().z,
+                        );
+                        if s.field.eval(p) < 0.0 {
+                            found_inside = true;
+                            break 'outer;
+                        }
+                    }
+                }
+            }
+            assert!(found_inside, "{} has no interior on probe grid", s.name);
+        }
+    }
+
+    #[test]
+    fn heptoroid_has_22_holes() {
+        let s = heptoroid();
+        // The center of each hole is outside the solid.
+        let (cols, rows) = (11, 2);
+        for i in 0..cols {
+            for j in 0..rows {
+                let x = (i as f32 - (cols - 1) as f32 / 2.0) * 0.23;
+                let y = (j as f32 - (rows - 1) as f32 / 2.0) * 0.34;
+                assert!(s.field.eval(Vec3::new(x, y, 0.0)) > 0.0, "hole {i},{j}");
+            }
+        }
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for s in all() {
+            assert!(by_name(s.name).is_some());
+        }
+        assert!(by_name("bunny").is_some(), "paper alias");
+        assert!(by_name("nonesuch").is_none());
+    }
+
+    #[test]
+    fn paper_order_and_genus() {
+        let shapes = all();
+        let genus: Vec<u32> = shapes.iter().map(|s| s.genus).collect();
+        assert_eq!(genus, vec![0, 2, 5, 22]);
+    }
+}

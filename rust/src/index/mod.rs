@@ -1,0 +1,254 @@
+//! Uniform spatial hash grid — the substrate of the paper's **Indexed**
+//! variant (§3.1).
+//!
+//! "The hash index is constructed by defining a grid of cubes of fixed size
+//! inside an axis-parallel bounding box that contains all the input
+//! signals." Units are bucketed by cell; a query scans the signal's cell
+//! plus its 26 neighbors and falls back to the exhaustive search when that
+//! neighborhood holds fewer than two units. Maintenance (insert / move /
+//! remove) happens during the Update phase and is O(1) per change.
+
+use crate::geometry::{Aabb, Vec3};
+use crate::som::{Network, UnitId};
+
+/// Uniform grid over a fixed bounding box.
+pub struct HashGrid {
+    bounds: Aabb,
+    cell: f32,
+    dims: [u32; 3],
+    buckets: Vec<Vec<UnitId>>,
+    /// Where each unit currently lives (`u32::MAX` = not indexed).
+    slot_of: Vec<u32>,
+}
+
+impl HashGrid {
+    /// `cell` is the cube edge length ("index cube size" — the paper tunes
+    /// it per run; `config` exposes it).
+    pub fn new(bounds: Aabb, cell: f32) -> Self {
+        assert!(cell > 0.0, "cell size must be positive");
+        let e = bounds.extent();
+        let dim = |len: f32| ((len / cell).ceil() as u32).max(1);
+        let dims = [dim(e.x), dim(e.y), dim(e.z)];
+        let total = dims[0] as usize * dims[1] as usize * dims[2] as usize;
+        Self {
+            bounds,
+            cell,
+            dims,
+            buckets: vec![Vec::new(); total],
+            slot_of: Vec::new(),
+        }
+    }
+
+    pub fn cell_size(&self) -> f32 {
+        self.cell
+    }
+
+    #[inline]
+    fn coords(&self, p: Vec3) -> [u32; 3] {
+        let rel = p - self.bounds.min;
+        let clamp = |v: f32, d: u32| (v / self.cell).floor().clamp(0.0, (d - 1) as f32) as u32;
+        [
+            clamp(rel.x, self.dims[0]),
+            clamp(rel.y, self.dims[1]),
+            clamp(rel.z, self.dims[2]),
+        ]
+    }
+
+    #[inline]
+    fn flat(&self, c: [u32; 3]) -> usize {
+        (c[0] as usize)
+            + (c[1] as usize) * self.dims[0] as usize
+            + (c[2] as usize) * self.dims[0] as usize * self.dims[1] as usize
+    }
+
+    fn ensure_slot_capacity(&mut self, id: UnitId) {
+        if self.slot_of.len() <= id as usize {
+            self.slot_of.resize(id as usize + 1, u32::MAX);
+        }
+    }
+
+    /// Index a unit at `p`.
+    pub fn insert(&mut self, id: UnitId, p: Vec3) {
+        self.ensure_slot_capacity(id);
+        debug_assert_eq!(self.slot_of[id as usize], u32::MAX, "unit {id} already indexed");
+        let flat = self.flat(self.coords(p));
+        self.buckets[flat].push(id);
+        self.slot_of[id as usize] = flat as u32;
+    }
+
+    /// Remove a unit (position no longer needed — we remember its bucket).
+    pub fn remove(&mut self, id: UnitId) {
+        let slot = self.slot_of[id as usize];
+        debug_assert_ne!(slot, u32::MAX, "unit {id} not indexed");
+        let bucket = &mut self.buckets[slot as usize];
+        let k = bucket.iter().position(|&u| u == id).expect("unit in recorded bucket");
+        bucket.swap_remove(k);
+        self.slot_of[id as usize] = u32::MAX;
+    }
+
+    /// Update a unit's cell after it moved to `p` (no-op when it stays in
+    /// the same cell — the common case for small adaptation steps).
+    pub fn update(&mut self, id: UnitId, p: Vec3) {
+        let new_flat = self.flat(self.coords(p)) as u32;
+        let old = self.slot_of[id as usize];
+        if old == new_flat {
+            return;
+        }
+        self.remove(id);
+        self.buckets[new_flat as usize].push(id);
+        self.slot_of[id as usize] = new_flat as u32;
+    }
+
+    /// Rebuild from a network (initialization / recovery).
+    pub fn rebuild(&mut self, net: &Network) {
+        for b in &mut self.buckets {
+            b.clear();
+        }
+        self.slot_of.clear();
+        for id in net.ids() {
+            self.insert(id, net.pos(id));
+        }
+    }
+
+    /// Visit all units in the 3×3×3 cell neighborhood of `p`.
+    #[inline]
+    pub fn for_neighborhood(&self, p: Vec3, mut visit: impl FnMut(UnitId)) {
+        let c = self.coords(p);
+        let lo = |v: u32| v.saturating_sub(1);
+        let hi = |v: u32, d: u32| (v + 1).min(d - 1);
+        for z in lo(c[2])..=hi(c[2], self.dims[2]) {
+            for y in lo(c[1])..=hi(c[1], self.dims[1]) {
+                for x in lo(c[0])..=hi(c[0], self.dims[0]) {
+                    for &id in &self.buckets[self.flat([x, y, z])] {
+                        visit(id);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Number of indexed units (for invariants/tests).
+    pub fn len(&self) -> usize {
+        self.slot_of.iter().filter(|&&s| s != u32::MAX).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Structural invariant: every recorded slot contains the unit.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for (id, &slot) in self.slot_of.iter().enumerate() {
+            if slot != u32::MAX {
+                let b = &self.buckets[slot as usize];
+                if !b.contains(&(id as UnitId)) {
+                    return Err(format!("unit {id} missing from bucket {slot}"));
+                }
+            }
+        }
+        let total: usize = self.buckets.iter().map(|b| b.len()).sum();
+        if total != self.len() {
+            return Err(format!("bucket total {total} != indexed {}", self.len()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid() -> HashGrid {
+        HashGrid::new(Aabb::new(Vec3::ZERO, Vec3::ONE), 0.1)
+    }
+
+    #[test]
+    fn insert_query_roundtrip() {
+        let mut g = grid();
+        g.insert(7, Vec3::new(0.55, 0.55, 0.55));
+        let mut seen = Vec::new();
+        g.for_neighborhood(Vec3::new(0.5, 0.5, 0.5), |id| seen.push(id));
+        assert_eq!(seen, vec![7]);
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn far_unit_not_in_neighborhood() {
+        let mut g = grid();
+        g.insert(1, Vec3::new(0.05, 0.05, 0.05));
+        g.insert(2, Vec3::new(0.95, 0.95, 0.95));
+        let mut seen = Vec::new();
+        g.for_neighborhood(Vec3::new(0.05, 0.05, 0.05), |id| seen.push(id));
+        assert_eq!(seen, vec![1]);
+    }
+
+    #[test]
+    fn update_moves_between_cells() {
+        let mut g = grid();
+        g.insert(3, Vec3::new(0.05, 0.05, 0.05));
+        g.update(3, Vec3::new(0.95, 0.95, 0.95));
+        let mut seen = Vec::new();
+        g.for_neighborhood(Vec3::new(0.95, 0.95, 0.95), |id| seen.push(id));
+        assert_eq!(seen, vec![3]);
+        let mut old = Vec::new();
+        g.for_neighborhood(Vec3::new(0.05, 0.05, 0.05), |id| old.push(id));
+        assert!(old.is_empty());
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn update_same_cell_is_noop() {
+        let mut g = grid();
+        g.insert(4, Vec3::new(0.51, 0.51, 0.51));
+        g.update(4, Vec3::new(0.52, 0.52, 0.52));
+        assert_eq!(g.len(), 1);
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn remove_clears_unit() {
+        let mut g = grid();
+        g.insert(5, Vec3::new(0.5, 0.5, 0.5));
+        g.remove(5);
+        assert!(g.is_empty());
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn out_of_bounds_points_clamp() {
+        let mut g = grid();
+        g.insert(6, Vec3::new(-5.0, 5.0, 0.5));
+        let mut seen = Vec::new();
+        g.for_neighborhood(Vec3::new(0.0, 1.0, 0.5), |id| seen.push(id));
+        assert_eq!(seen, vec![6]);
+    }
+
+    #[test]
+    fn rebuild_matches_network() {
+        let mut net = Network::new();
+        let a = net.insert(Vec3::new(0.1, 0.1, 0.1), 0.0);
+        let b = net.insert(Vec3::new(0.9, 0.9, 0.9), 0.0);
+        let c = net.insert(Vec3::new(0.5, 0.5, 0.5), 0.0);
+        net.connect(a, b);
+        net.remove(b);
+        let _ = c;
+        let mut g = grid();
+        g.rebuild(&net);
+        assert_eq!(g.len(), 2);
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn neighborhood_covers_27_cells() {
+        let mut g = grid();
+        // Corner-adjacent cell: distance one cell diagonally.
+        g.insert(8, Vec3::new(0.61, 0.61, 0.61));
+        let mut seen = Vec::new();
+        g.for_neighborhood(Vec3::new(0.59, 0.59, 0.59), |id| seen.push(id));
+        assert_eq!(seen, vec![8]);
+        // Two cells away: not visited.
+        let mut far = Vec::new();
+        g.for_neighborhood(Vec3::new(0.35, 0.61, 0.61), |id| far.push(id));
+        assert!(far.is_empty());
+    }
+}

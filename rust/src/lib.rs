@@ -1,0 +1,65 @@
+//! # msgsn — Multi-Signal Growing Self-Organizing Networks
+//!
+//! A reproduction of *"A Multi-signal Variant for the GPU-based
+//! Parallelization of Growing Self-Organizing Networks"* (Parigi, Stramieri,
+//! Pau, Piastra; 2015) as a three-layer rust + JAX + Pallas system:
+//!
+//! - **Layer 1/2** (build time, `python/compile/`): the batched top-2
+//!   nearest-unit search ("Find Winners") as a Pallas kernel wrapped in a JAX
+//!   graph, AOT-lowered per size bucket to HLO text under `artifacts/`.
+//! - **Layer 3** (this crate): everything else — the growing-network
+//!   framework (GNG / GWR / SOAM), the multi-signal batcher with its
+//!   winner-lock collision rule, the spatial hash index, the mesh substrate
+//!   (implicit surfaces → marching tetrahedra → area-weighted point-cloud
+//!   sampling), the PJRT runtime that executes the AOT artifacts, and the
+//!   benchmark harness that regenerates every table and figure of the paper.
+//!
+//! Python never runs after `make artifacts`; the `msgsn` binary is
+//! self-contained.
+//!
+//! ## Crate map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`rng`] | deterministic SplitMix64 / Xoshiro256** PRNG streams |
+//! | [`geometry`] | `Vec3`, `Aabb`, triangle primitives |
+//! | [`implicit`] | implicit scalar fields + CSG, the four benchmark shapes |
+//! | [`marching`] | marching-tetrahedra polygonizer (watertight by construction) |
+//! | [`mesh`] | indexed triangle meshes, IO, Euler/genus stats, samplers |
+//! | [`topology`] | neighborhood-graph classification (disk / half-disk / …) |
+//! | [`som`] | network store + GNG / GWR / SOAM update rules |
+//! | [`index`] | uniform spatial hash grid (the paper's *Indexed* variant) |
+//! | [`findwinners`] | `FindWinners` trait: scalar / indexed / batched impls |
+//! | [`runtime`] | PJRT client + AOT artifact registry (the *GPU-based* variant) |
+//! | [`coordinator`] | multi-signal batcher, m-schedule, winner locks, pipeline |
+//! | [`engine`] | convergence drivers for all four paper implementations |
+//! | [`config`] | config structs, TOML-subset parser, per-mesh presets |
+//! | [`cli`] | argument parsing for the `msgsn` binary |
+//! | [`metrics`] | phase timers, counters, table rendering |
+//! | [`bench`] | experiment grid regenerating Tables 1–4 and Figs 2,7–10 |
+//! | [`proptest`] | minimal in-repo property-testing harness |
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod findwinners;
+pub mod geometry;
+pub mod implicit;
+pub mod index;
+pub mod marching;
+pub mod mesh;
+pub mod metrics;
+pub mod proptest;
+pub mod rng;
+pub mod runtime;
+pub mod som;
+pub mod topology;
+
+/// The most common imports, bundled.
+pub mod prelude {
+    pub use crate::geometry::{Aabb, Vec3};
+    pub use crate::mesh::{BenchmarkShape, Mesh};
+    pub use crate::rng::Rng;
+}

@@ -1,0 +1,319 @@
+//! `msgsn` — the Layer-3 coordinator binary.
+//!
+//! Self-contained after `make artifacts`: loads AOT-compiled Find-Winners
+//! buckets from `artifacts/` and never touches Python.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use anyhow::{bail, Context, Result};
+
+use msgsn::bench::{self, Scale};
+use msgsn::cli::{parse, Command, Parsed, USAGE};
+use msgsn::config::{parse_config_text, Algorithm, ConfigValue, Driver, RunConfig};
+use msgsn::coordinator::run_pipelined;
+use msgsn::engine::{make_algorithm, make_findwinners, run};
+use msgsn::mesh::{benchmark_mesh, write_obj, write_off, BenchmarkShape, SurfaceSampler};
+use msgsn::rng::Rng;
+use msgsn::runtime::Registry;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = match parse(&args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let result = match cmd {
+        Command::Help => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Command::Run(p) => cmd_run(&p),
+        Command::Reproduce(p) => cmd_reproduce(&p),
+        Command::Mesh(p) => cmd_mesh(&p),
+        Command::Artifacts(p) => cmd_artifacts(&p),
+        Command::Ablate(p) => cmd_ablate(&p),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// Build a RunConfig from preset + config file + --set overrides.
+fn build_config(p: &Parsed) -> Result<RunConfig> {
+    let shape = match p.get("mesh") {
+        None => BenchmarkShape::Blob,
+        Some(name) => BenchmarkShape::from_name(name)
+            .with_context(|| format!("unknown mesh {name:?}"))?,
+    };
+    let mut cfg = RunConfig::preset(shape);
+    if let Some(path) = p.get("config") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        let map = parse_config_text(&text)?;
+        cfg.apply_all(&map)?;
+    }
+    if let Some(d) = p.get("driver") {
+        if d != "pipelined" {
+            cfg.driver = Driver::from_name(d).with_context(|| format!("unknown driver {d:?}"))?;
+        }
+    }
+    if let Some(a) = p.get("algorithm") {
+        cfg.algorithm =
+            Algorithm::from_name(a).with_context(|| format!("unknown algorithm {a:?}"))?;
+    }
+    cfg.seed = p.get_parsed("seed", cfg.seed, "integer")?;
+    if let Some(n) = p.get("max-signals") {
+        cfg.limits.max_signals = n.parse().context("--max-signals expects an integer")?;
+    }
+    if p.flag("trace") {
+        cfg.limits.trace = true;
+    }
+    for kv in p.get_all("set") {
+        let (k, v) = kv
+            .split_once('=')
+            .with_context(|| format!("--set expects key=value, got {kv:?}"))?;
+        // Values go through the config-file value parser (numbers, bools,
+        // bare strings).
+        let value = match v {
+            "true" => ConfigValue::Bool(true),
+            "false" => ConfigValue::Bool(false),
+            _ => v
+                .parse::<f64>()
+                .map(ConfigValue::Num)
+                .unwrap_or_else(|_| ConfigValue::Str(v.to_string())),
+        };
+        cfg.apply(k, &value)?;
+    }
+    Ok(cfg)
+}
+
+fn cmd_run(p: &Parsed) -> Result<()> {
+    let cfg = build_config(p)?;
+    let mesh = benchmark_mesh(cfg.shape, cfg.mesh_resolution);
+    let stats = mesh.stats();
+    if !p.flag("quiet") {
+        println!(
+            "mesh {} ({}): {} vertices, {} faces, genus {:?}",
+            cfg.shape.name(),
+            cfg.shape.paper_name(),
+            stats.vertices,
+            stats.faces,
+            stats.genus
+        );
+    }
+    let mut rng = Rng::seed_from(cfg.seed);
+    let report = if p.get("driver") == Some("pipelined") {
+        let sampler = SurfaceSampler::new(&mesh);
+        let mut algo = make_algorithm(&cfg);
+        let mut cfg2 = cfg.clone();
+        cfg2.driver = Driver::Multi;
+        let mut fw = make_findwinners(&cfg2)?;
+        let mut r =
+            run_pipelined(algo.as_mut(), &sampler, fw.as_mut(), &cfg.limits, &mut rng, 2);
+        r.mesh = Some(cfg.shape.name().to_string());
+        r
+    } else {
+        run(&mesh, cfg.driver, &cfg, &mut rng)?
+    };
+    if !p.flag("quiet") {
+        print!("{}", report.to_table().render());
+    }
+    if let Some(path) = p.get("save-mesh") {
+        // Export the reconstructed network triangulation.
+        let algo_mesh = reconstruct_for_export(&mesh, &cfg)?;
+        let path = Path::new(path);
+        match path.extension().and_then(|e| e.to_str()) {
+            Some("off") => write_off(&algo_mesh, path)?,
+            _ => write_obj(&algo_mesh, path)?,
+        }
+        println!("wrote reconstruction to {}", path.display());
+    }
+    Ok(())
+}
+
+/// Re-run (same seed) keeping the network, then export its triangulation.
+fn reconstruct_for_export(
+    mesh: &msgsn::mesh::Mesh,
+    cfg: &RunConfig,
+) -> Result<msgsn::mesh::Mesh> {
+    use msgsn::engine::{run_multi_signal, run_single_signal};
+    let sampler = SurfaceSampler::new(mesh);
+    let mut algo = make_algorithm(cfg);
+    let mut fw = make_findwinners(cfg)?;
+    let mut rng = Rng::seed_from(cfg.seed);
+    if cfg.driver.is_multi_signal() {
+        run_multi_signal(algo.as_mut(), &sampler, fw.as_mut(), &cfg.limits, &mut rng);
+    } else {
+        run_single_signal(algo.as_mut(), &sampler, fw.as_mut(), &cfg.limits, &mut rng);
+    }
+    Ok(algo.net().to_mesh())
+}
+
+fn cmd_reproduce(p: &Parsed) -> Result<()> {
+    let scale_name = p.get("scale").unwrap_or("quick");
+    let scale = Scale::from_name(scale_name)
+        .with_context(|| format!("unknown scale {scale_name:?} (smoke|quick|paper)"))?;
+    let out_dir = PathBuf::from(p.get("out").unwrap_or("results"));
+    let seed: u64 = p.get_parsed("seed", 42, "integer")?;
+
+    let mut tables: Vec<u32> = p
+        .get_all("table")
+        .iter()
+        .map(|s| s.parse().with_context(|| format!("bad table {s:?}")))
+        .collect::<Result<_>>()?;
+    let mut figures: Vec<u32> = p
+        .get_all("figure")
+        .iter()
+        .map(|s| s.parse().with_context(|| format!("bad figure {s:?}")))
+        .collect::<Result<_>>()?;
+    if p.flag("all") || (tables.is_empty() && figures.is_empty()) {
+        tables = vec![1, 2, 3, 4];
+        figures = vec![2, 7, 8, 9, 10];
+    }
+    for &t in &tables {
+        if bench::render::table_shape(t).is_none() {
+            bail!("no paper table {t}");
+        }
+    }
+
+    // Which meshes are needed: tables name them directly; figures need all.
+    let shapes: Vec<BenchmarkShape> = if figures.is_empty() {
+        tables
+            .iter()
+            .map(|&t| bench::render::table_shape(t).unwrap())
+            .collect()
+    } else {
+        BenchmarkShape::ALL.to_vec()
+    };
+
+    println!(
+        "reproduce: scale={} seed={seed} meshes={:?} tables={tables:?} figures={figures:?}",
+        scale.name,
+        shapes.iter().map(|s| s.name()).collect::<Vec<_>>(),
+    );
+    let artifacts = PathBuf::from("artifacts");
+    let grid = bench::grid::run_grid(
+        &shapes,
+        &Driver::ALL,
+        &scale,
+        seed,
+        Some(artifacts),
+        |line| println!("{line}"),
+    )?;
+
+    for &n in &tables {
+        let (text, _) = bench::render_table(&grid, n)?;
+        println!("\n{text}");
+    }
+    for &n in &figures {
+        let (text, _) = bench::render_figure(&grid, n)?;
+        println!("\n{text}");
+    }
+    let written = bench::write_all(&grid, &out_dir, &tables, &figures)?;
+    println!("\nwrote {} files under {}", written.len(), out_dir.display());
+    Ok(())
+}
+
+fn cmd_mesh(p: &Parsed) -> Result<()> {
+    let shape = match p.get("shape") {
+        None => BenchmarkShape::Blob,
+        Some(name) => BenchmarkShape::from_name(name)
+            .with_context(|| format!("unknown shape {name:?}"))?,
+    };
+    let resolution: u32 = p.get_parsed("resolution", 0, "integer")?;
+    let mesh = benchmark_mesh(shape, resolution);
+    let s = mesh.stats();
+    println!(
+        "{} (proxy for {}; marching resolution {})",
+        shape.name(),
+        shape.paper_name(),
+        if resolution == 0 { shape.default_resolution() } else { resolution },
+    );
+    println!(
+        "  V={} E={} F={} chi={} genus={:?} components={} watertight={} area={:.4}",
+        s.vertices,
+        s.edges,
+        s.faces,
+        s.euler_characteristic,
+        s.genus,
+        s.components,
+        s.watertight,
+        s.total_area,
+    );
+    let expected = shape.expected_genus();
+    match s.genus {
+        Some(g) if g == expected => println!("  genus matches the paper mesh ({expected})"),
+        got => bail!("genus {got:?} != expected {expected} — raise --resolution"),
+    }
+    // The paper's second complexity axis: the LFS distribution (§3.1).
+    let mut rng = Rng::seed_from(0xFEA7);
+    let lfs = msgsn::mesh::estimate_lfs(&mesh, 1500, &mut rng);
+    println!(
+        "  LFS (unit-cube scale): min={:.4} p05={:.4} median={:.4} max={:.4} cv={:.2}",
+        lfs.min, lfs.p05, lfs.median, lfs.max, lfs.cv
+    );
+    if let Some(path) = p.get("out") {
+        let path = Path::new(path);
+        match path.extension().and_then(|e| e.to_str()) {
+            Some("off") => write_off(&mesh, path)?,
+            _ => write_obj(&mesh, path)?,
+        }
+        println!("  wrote {}", path.display());
+    }
+    Ok(())
+}
+
+fn cmd_ablate(p: &Parsed) -> Result<()> {
+    let which = p.get("which").unwrap_or("all");
+    let max_signals: u64 = p.get_parsed("max-signals", 400_000, "integer")?;
+    let seed: u64 = p.get_parsed("seed", 42, "integer")?;
+    if matches!(which, "locks" | "all") {
+        println!("Ablation: collision policy (winner lock / staleness guard)\n");
+        println!("{}", bench::ablate_collision_policy(max_signals, seed).render());
+    }
+    if matches!(which, "schedule" | "all") {
+        println!("Ablation: parallelism schedule (paper's pow2 vs fixed m)\n");
+        println!("{}", bench::ablate_m_schedule(max_signals, seed).render());
+    }
+    if matches!(which, "cell" | "all") {
+        println!("Ablation: hash-index cube size (Indexed variant)\n");
+        println!("{}", bench::ablate_index_cell(seed)?.render());
+    }
+    if !matches!(which, "locks" | "schedule" | "cell" | "all") {
+        bail!("--which expects locks|schedule|cell|all");
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(p: &Parsed) -> Result<()> {
+    let dir = PathBuf::from(p.get("dir").unwrap_or("artifacts"));
+    let mut reg = Registry::open(&dir, p.get("flavor"))?;
+    println!(
+        "artifacts at {}: flavor={} pad={} buckets:",
+        dir.display(),
+        reg.flavor(),
+        msgsn::runtime::PAD_VALUE
+    );
+    let entries: Vec<_> = reg.manifest().artifacts.clone();
+    for e in &entries {
+        println!("  {:6} m={:5} n={:5} {}", e.flavor, e.m, e.n, e.file);
+    }
+    if let Some(n) = p.get("warmup-n") {
+        let max_n: usize = n.parse().context("--warmup-n expects an integer")?;
+        let t0 = std::time::Instant::now();
+        let count = reg.warmup(max_n)?;
+        println!(
+            "warmed {count} buckets (n <= {max_n}) in {:.2}s",
+            t0.elapsed().as_secs_f64()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,118 @@
+//! Kuhn decomposition of the unit cube into 6 tetrahedra.
+//!
+//! Cube corners are numbered by bits: bit 0 → x, bit 1 → y, bit 2 → z, so
+//! corner 0 = (0,0,0) and corner 7 = (1,1,1). Each tetrahedron is a monotone
+//! path 0 → a → b → 7 along cube edges (one per permutation of the three
+//! axis steps). All six share the main diagonal 0–7.
+//!
+//! Why this decomposition: the diagonal it induces on each cube *face* is
+//! determined by the face alone (e.g. face x=1 always gets 1–7, face x=0
+//! always 0–6, which coincide between x-neighbors). Using the same
+//! decomposition in every cell therefore makes triangulations of adjacent
+//! cells agree on the shared face — the property that guarantees watertight
+//! output (verified by `mesh::stats` in the polygonizer tests).
+
+/// The 6 Kuhn tetrahedra, as cube-corner indices. Order within each tet is
+/// the monotone path (0, first step, second step, 7).
+pub const KUHN_TETS: [[u8; 4]; 6] = [
+    [0, 1, 3, 7], // x, y, z
+    [0, 1, 5, 7], // x, z, y
+    [0, 2, 3, 7], // y, x, z
+    [0, 2, 6, 7], // y, z, x
+    [0, 4, 5, 7], // z, x, y
+    [0, 4, 6, 7], // z, y, x
+];
+
+/// Offset of cube corner `c` (bit 0 → x, bit 1 → y, bit 2 → z).
+#[inline]
+pub fn cube_corner_offset(c: u8) -> (u32, u32, u32) {
+    ((c & 1) as u32, ((c >> 1) & 1) as u32, ((c >> 2) & 1) as u32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn six_distinct_tets_cover_all_corners() {
+        let mut seen: HashSet<[u8; 4]> = HashSet::new();
+        let mut corners: HashSet<u8> = HashSet::new();
+        for t in KUHN_TETS {
+            assert!(seen.insert(t), "duplicate tet {t:?}");
+            corners.extend(t);
+            // Every tet contains the main diagonal.
+            assert_eq!(t[0], 0);
+            assert_eq!(t[3], 7);
+        }
+        assert_eq!(corners, (0..8).collect());
+    }
+
+    #[test]
+    fn tets_are_monotone_paths() {
+        for t in KUHN_TETS {
+            // Each step sets exactly one additional bit.
+            for w in t.windows(2) {
+                let diff = w[0] ^ w[1];
+                assert_eq!(diff.count_ones(), 1, "non-edge step in {t:?}");
+                assert_eq!(w[0] & diff, 0, "bit cleared along path {t:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn tets_tile_the_cube_by_volume() {
+        // Volume of a tet with corners a,b,c,d = |det(b-a, c-a, d-a)| / 6.
+        let corner = |c: u8| {
+            let (x, y, z) = cube_corner_offset(c);
+            [x as f64, y as f64, z as f64]
+        };
+        let sub = |a: [f64; 3], b: [f64; 3]| [a[0] - b[0], a[1] - b[1], a[2] - b[2]];
+        let det = |u: [f64; 3], v: [f64; 3], w: [f64; 3]| {
+            u[0] * (v[1] * w[2] - v[2] * w[1]) - u[1] * (v[0] * w[2] - v[2] * w[0])
+                + u[2] * (v[0] * w[1] - v[1] * w[0])
+        };
+        let mut total = 0.0;
+        for t in KUHN_TETS {
+            let (a, b, c, d) = (corner(t[0]), corner(t[1]), corner(t[2]), corner(t[3]));
+            let v = det(sub(b, a), sub(c, a), sub(d, a)).abs() / 6.0;
+            assert!((v - 1.0 / 6.0).abs() < 1e-12, "tet {t:?} volume {v}");
+            total += v;
+        }
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shared_face_diagonals_match_between_neighbors() {
+        // Face x=1 of a cell must use diagonal {1,7}; face x=0 must use
+        // {0,6}; these are the same world edge for x-neighbors. Likewise
+        // y: {2,7}/{0,5}, z: {4,7}/{0,3}.
+        let face_diag = |corners: [u8; 4]| {
+            // Collect tets with 3 corners on the face; the repeated pair of
+            // corner sets share the diagonal.
+            let inface: Vec<Vec<u8>> = KUHN_TETS
+                .iter()
+                .map(|t| t.iter().copied().filter(|c| corners.contains(c)).collect())
+                .filter(|v: &Vec<u8>| v.len() == 3)
+                .collect();
+            assert_eq!(inface.len(), 2, "face {corners:?}");
+            let a: HashSet<u8> = inface[0].iter().copied().collect();
+            let b: HashSet<u8> = inface[1].iter().copied().collect();
+            let mut shared: Vec<u8> = a.intersection(&b).copied().collect();
+            shared.sort_unstable();
+            shared
+        };
+        assert_eq!(face_diag([1, 3, 5, 7]), vec![1, 7]); // x = 1
+        assert_eq!(face_diag([0, 2, 4, 6]), vec![0, 6]); // x = 0
+        assert_eq!(face_diag([2, 3, 6, 7]), vec![2, 7]); // y = 1
+        assert_eq!(face_diag([0, 1, 4, 5]), vec![0, 5]); // y = 0
+        assert_eq!(face_diag([4, 5, 6, 7]), vec![4, 7]); // z = 1
+        assert_eq!(face_diag([0, 1, 2, 3]), vec![0, 3]); // z = 0
+        // Correspondence across the shared face: +x neighbor's {0,6} is this
+        // cell's {1,7} (add bit 0), +y neighbor's {0,5} is {2,7} (add bit 1),
+        // +z neighbor's {0,3} is {4,7} (add bit 2).
+        assert_eq!([0 | 1, 6 | 1], [1, 7]);
+        assert_eq!([0 | 2, 5 | 2], [2, 7]);
+        assert_eq!([0 | 4, 3 | 4], [4, 7]);
+    }
+}

@@ -1,0 +1,25 @@
+//! Polygonization of implicit surfaces by **marching tetrahedra**.
+//!
+//! Marching tetrahedra is chosen over classic marching cubes deliberately:
+//! the Kuhn 6-tetrahedra decomposition shares face diagonals between
+//! neighboring cells, so the extracted surface is watertight and 2-manifold
+//! *by construction* — no 256-entry case table whose transcription errors
+//! would silently corrupt the genus tests that pin our benchmark shapes
+//! (DESIGN.md §3). The cost is ~2× more triangles, which is irrelevant here:
+//! meshes are generated once per run and only ever *sampled*.
+
+mod kuhn;
+mod polygonize;
+
+pub use kuhn::{cube_corner_offset, KUHN_TETS};
+pub use polygonize::{polygonize, GridSpec};
+
+use crate::geometry::Aabb;
+use crate::implicit::Field;
+use crate::mesh::Mesh;
+
+/// Convenience wrapper: polygonize `field` over `bounds` with a cubic grid
+/// of `resolution` cells along the longest axis.
+pub fn polygonize_simple(field: &dyn Field, bounds: Aabb, resolution: u32) -> Mesh {
+    polygonize(field, bounds, resolution)
+}

@@ -1,0 +1,322 @@
+//! The marching-tetrahedra polygonizer.
+//!
+//! Pipeline: evaluate the field on a vertex grid → per cell, per Kuhn tet,
+//! classify the 4 corners by sign → emit 0/1/2 triangles whose vertices are
+//! interpolated zero crossings on tet edges → weld vertices by grid-edge key
+//! (exact, no epsilon matching) → orient every triangle outward along the
+//! field gradient.
+//!
+//! Welding by *grid-edge identity* rather than by position is what makes the
+//! output watertight: two triangles from different tets/cells that cross the
+//! same grid edge share the same output vertex index by construction.
+
+use std::collections::HashMap;
+
+use crate::geometry::{Aabb, Vec3};
+use crate::implicit::Field;
+use crate::mesh::Mesh;
+
+use super::kuhn::{cube_corner_offset, KUHN_TETS};
+
+/// Discretization of the polygonization volume.
+#[derive(Clone, Copy, Debug)]
+pub struct GridSpec {
+    pub bounds: Aabb,
+    /// Cells along x/y/z.
+    pub nx: u32,
+    pub ny: u32,
+    pub nz: u32,
+}
+
+impl GridSpec {
+    /// Cubic cells: `resolution` cells along the longest axis, proportional
+    /// counts (≥ 2) on the others.
+    pub fn cubic(bounds: Aabb, resolution: u32) -> Self {
+        assert!(resolution >= 2, "resolution must be >= 2");
+        let e = bounds.extent();
+        let cell = bounds.max_extent() / resolution as f32;
+        let n = |len: f32| ((len / cell).round() as u32).max(2);
+        Self { bounds, nx: n(e.x), ny: n(e.y), nz: n(e.z) }
+    }
+
+    #[inline]
+    fn cell_size(&self) -> Vec3 {
+        let e = self.bounds.extent();
+        Vec3::new(e.x / self.nx as f32, e.y / self.ny as f32, e.z / self.nz as f32)
+    }
+
+    #[inline]
+    fn point(&self, ix: u32, iy: u32, iz: u32) -> Vec3 {
+        let c = self.cell_size();
+        self.bounds.min + Vec3::new(ix as f32 * c.x, iy as f32 * c.y, iz as f32 * c.z)
+    }
+
+    /// Grid-vertex id (vertex grid is (nx+1)×(ny+1)×(nz+1)).
+    #[inline]
+    fn vid(&self, ix: u32, iy: u32, iz: u32) -> u64 {
+        let sx = self.nx as u64 + 1;
+        let sy = self.ny as u64 + 1;
+        ix as u64 + iy as u64 * sx + iz as u64 * sx * sy
+    }
+}
+
+/// Polygonize `field` over `bounds` at `resolution` cells along the longest
+/// axis. Returns a welded, outward-oriented triangle mesh.
+pub fn polygonize(field: &dyn Field, bounds: Aabb, resolution: u32) -> Mesh {
+    let spec = GridSpec::cubic(bounds, resolution);
+    polygonize_grid(field, &spec)
+}
+
+/// Polygonize with an explicit grid.
+pub fn polygonize_grid(field: &dyn Field, spec: &GridSpec) -> Mesh {
+    let (nx, ny, nz) = (spec.nx, spec.ny, spec.nz);
+    let (sx, sy) = (nx as usize + 1, ny as usize + 1);
+    let sz = nz as usize + 1;
+
+    // 1. Field values on the vertex grid (single pass, cached).
+    let mut values = vec![0.0f32; sx * sy * sz];
+    for iz in 0..=nz {
+        for iy in 0..=ny {
+            for ix in 0..=nx {
+                let mut v = field.eval(spec.point(ix, iy, iz));
+                // Push exact zeros off the surface so sign classification is
+                // total and no degenerate (zero-length) edges appear.
+                if v == 0.0 {
+                    v = f32::MIN_POSITIVE;
+                }
+                values[spec.vid(ix, iy, iz) as usize] = v;
+            }
+        }
+    }
+
+    // 2. March all tets, welding crossing vertices by grid-edge key.
+    let mut weld: HashMap<(u64, u64), u32> = HashMap::new();
+    let mut vertices: Vec<Vec3> = Vec::new();
+    let mut faces: Vec<[u32; 3]> = Vec::new();
+
+    let mut edge_vertex = |ga: u64, pa: Vec3, va: f32, gb: u64, pb: Vec3, vb: f32,
+                           vertices: &mut Vec<Vec3>|
+     -> u32 {
+        let key = if ga < gb { (ga, gb) } else { (gb, ga) };
+        *weld.entry(key).or_insert_with(|| {
+            // Zero crossing; va, vb have opposite signs. Clamp away from the
+            // endpoints so crossings on different edges incident to a grid
+            // vertex that lies (numerically) on the surface stay distinct —
+            // otherwise they would produce geometrically degenerate faces.
+            let t = (va / (va - vb)).clamp(1e-4, 1.0 - 1e-4);
+            let idx = vertices.len() as u32;
+            vertices.push(pa.lerp(pb, t));
+            idx
+        })
+    };
+
+    for iz in 0..nz {
+        for iy in 0..ny {
+            for ix in 0..nx {
+                // Gather the cube's 8 corners once.
+                let mut gid = [0u64; 8];
+                let mut pos = [Vec3::ZERO; 8];
+                let mut val = [0.0f32; 8];
+                for c in 0..8u8 {
+                    let (dx, dy, dz) = cube_corner_offset(c);
+                    let (jx, jy, jz) = (ix + dx, iy + dy, iz + dz);
+                    let id = spec.vid(jx, jy, jz);
+                    gid[c as usize] = id;
+                    pos[c as usize] = spec.point(jx, jy, jz);
+                    val[c as usize] = values[id as usize];
+                }
+                // Cheap reject: cube entirely on one side.
+                let any_in = val.iter().any(|&v| v < 0.0);
+                let any_out = val.iter().any(|&v| v >= 0.0);
+                if !(any_in && any_out) {
+                    continue;
+                }
+                for tet in KUHN_TETS {
+                    march_tet(
+                        &tet, &gid, &pos, &val, &mut vertices, &mut faces,
+                        &mut edge_vertex,
+                    );
+                }
+            }
+        }
+    }
+
+    // 3. Outward orientation along the field gradient.
+    let h = spec.cell_size().x.min(spec.cell_size().y).min(spec.cell_size().z) * 0.5;
+    for f in &mut faces {
+        let (a, b, c) = (
+            vertices[f[0] as usize],
+            vertices[f[1] as usize],
+            vertices[f[2] as usize],
+        );
+        let n = (b - a).cross(c - a);
+        if n.norm2() == 0.0 {
+            continue; // degenerate sliver; orientation is meaningless
+        }
+        let centroid = (a + b + c) / 3.0;
+        let g = field.gradient(centroid, h);
+        if n.dot(g) < 0.0 {
+            f.swap(1, 2);
+        }
+    }
+
+    let mut mesh = Mesh::new(vertices, faces);
+    mesh.compact();
+    mesh
+}
+
+/// Emit triangles for one tetrahedron.
+#[allow(clippy::too_many_arguments)]
+fn march_tet(
+    tet: &[u8; 4],
+    gid: &[u64; 8],
+    pos: &[Vec3; 8],
+    val: &[f32; 8],
+    vertices: &mut Vec<Vec3>,
+    faces: &mut Vec<[u32; 3]>,
+    edge_vertex: &mut impl FnMut(u64, Vec3, f32, u64, Vec3, f32, &mut Vec<Vec3>) -> u32,
+) {
+    let corners: Vec<usize> = tet.iter().map(|&c| c as usize).collect();
+    let inside: Vec<usize> = corners.iter().copied().filter(|&c| val[c] < 0.0).collect();
+    let outside: Vec<usize> = corners.iter().copied().filter(|&c| val[c] >= 0.0).collect();
+
+    let mut ev = |i: usize, o: usize, vertices: &mut Vec<Vec3>| {
+        edge_vertex(gid[i], pos[i], val[i], gid[o], pos[o], val[o], vertices)
+    };
+
+    match inside.len() {
+        0 | 4 => {}
+        1 => {
+            let i = inside[0];
+            let t = [
+                ev(i, outside[0], vertices),
+                ev(i, outside[1], vertices),
+                ev(i, outside[2], vertices),
+            ];
+            push_face(faces, t);
+        }
+        3 => {
+            let o = outside[0];
+            let t = [
+                ev(inside[0], o, vertices),
+                ev(inside[1], o, vertices),
+                ev(inside[2], o, vertices),
+            ];
+            push_face(faces, t);
+        }
+        2 => {
+            // Quad spanned by the 4 crossing edges, split into 2 triangles.
+            // Corner order walks around the quad: (i0,o0) (i0,o1) (i1,o1)
+            // (i1,o0) — adjacent corners share a tet corner, so the quad is
+            // planar-convex in parameter space and the split never crosses.
+            let q = [
+                ev(inside[0], outside[0], vertices),
+                ev(inside[0], outside[1], vertices),
+                ev(inside[1], outside[1], vertices),
+                ev(inside[1], outside[0], vertices),
+            ];
+            push_face(faces, [q[0], q[1], q[2]]);
+            push_face(faces, [q[0], q[2], q[3]]);
+        }
+        _ => unreachable!(),
+    }
+}
+
+#[inline]
+fn push_face(faces: &mut Vec<[u32; 3]>, f: [u32; 3]) {
+    // Drop degenerate triangles (can only appear if two crossing points weld
+    // to the same grid edge — impossible by construction, but cheap to guard).
+    if f[0] != f[1] && f[1] != f[2] && f[0] != f[2] {
+        faces.push(f);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::implicit::{Sphere, Torus};
+
+    fn sphere_mesh(res: u32) -> Mesh {
+        let s = Sphere::new(Vec3::ZERO, 0.75);
+        polygonize(&s, Aabb::new(Vec3::splat(-1.0), Vec3::splat(1.0)), res)
+    }
+
+    #[test]
+    fn sphere_is_watertight_genus_zero() {
+        let m = sphere_mesh(24);
+        let st = m.stats();
+        assert!(st.watertight, "{st:?}");
+        assert_eq!(st.components, 1);
+        assert_eq!(st.euler_characteristic, 2);
+        assert_eq!(st.genus, Some(0));
+    }
+
+    #[test]
+    fn sphere_vertices_near_surface() {
+        let m = sphere_mesh(32);
+        for v in &m.vertices {
+            let r = v.norm();
+            assert!((r - 0.75).abs() < 0.08, "vertex at radius {r}");
+        }
+    }
+
+    #[test]
+    fn sphere_area_converges() {
+        let exact = 4.0 * std::f64::consts::PI * 0.75f64 * 0.75;
+        let a = sphere_mesh(48).total_area();
+        assert!((a - exact).abs() / exact < 0.03, "area {a} vs {exact}");
+    }
+
+    #[test]
+    fn torus_genus_one() {
+        let t = Torus::new(Vec3::ZERO, Vec3::new(0.0, 0.0, 1.0), 0.5, 0.2);
+        let m = polygonize(
+            &t,
+            Aabb::new(Vec3::new(-0.9, -0.9, -0.35), Vec3::new(0.9, 0.9, 0.35)),
+            48,
+        );
+        let st = m.stats();
+        assert!(st.watertight);
+        assert_eq!(st.components, 1);
+        assert_eq!(st.genus, Some(1), "{st:?}");
+    }
+
+    #[test]
+    fn orientation_points_outward() {
+        let m = sphere_mesh(24);
+        for (i, _) in m.faces.iter().enumerate() {
+            let t = m.triangle(i);
+            let n = match t.normal() {
+                Some(n) => n,
+                None => continue, // degenerate sliver, no orientation
+            };
+            let out = t.centroid().normalized().unwrap();
+            assert!(n.dot(out) > 0.0, "face {i} inward");
+        }
+    }
+
+    #[test]
+    fn resolution_scales_triangle_count() {
+        let lo = sphere_mesh(12).faces.len();
+        let hi = sphere_mesh(24).faces.len();
+        assert!(hi > 3 * lo, "lo={lo} hi={hi}");
+    }
+
+    #[test]
+    fn empty_field_gives_empty_mesh() {
+        let s = Sphere::new(Vec3::splat(100.0), 0.1); // far outside bounds
+        let m = polygonize(&s, Aabb::new(Vec3::splat(-1.0), Vec3::splat(1.0)), 8);
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn anisotropic_bounds_respected() {
+        let spec = GridSpec::cubic(
+            Aabb::new(Vec3::new(-2.0, -1.0, -0.5), Vec3::new(2.0, 1.0, 0.5)),
+            32,
+        );
+        assert_eq!(spec.nx, 32);
+        assert_eq!(spec.ny, 16);
+        assert_eq!(spec.nz, 8);
+    }
+}

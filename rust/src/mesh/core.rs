@@ -1,0 +1,272 @@
+//! Mesh storage and topology statistics.
+//!
+//! The statistics matter for the reproduction: the benchmark meshes are
+//! *defined* by their genus (topological complexity) and LFS profile
+//! (geometric complexity), and the SOAM termination check verifies the
+//! reconstructed network is a closed 2-manifold of the right genus via the
+//! same Euler-characteristic arithmetic implemented here.
+
+use std::collections::HashMap;
+
+use crate::geometry::{Aabb, Triangle, Vec3};
+
+/// Indexed triangle mesh.
+#[derive(Clone, Debug, Default)]
+pub struct Mesh {
+    pub vertices: Vec<Vec3>,
+    pub faces: Vec<[u32; 3]>,
+}
+
+/// Topology / geometry summary of a mesh (see [`Mesh::stats`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MeshStats {
+    pub vertices: usize,
+    pub edges: usize,
+    pub faces: usize,
+    /// `V − E + F`.
+    pub euler_characteristic: i64,
+    /// `(2·C − χ) / 2` summed over components — valid for closed orientable
+    /// surfaces; `None` when the mesh is not watertight.
+    pub genus: Option<u32>,
+    pub components: usize,
+    pub watertight: bool,
+    pub total_area: f64,
+}
+
+impl Mesh {
+    pub fn new(vertices: Vec<Vec3>, faces: Vec<[u32; 3]>) -> Self {
+        Self { vertices, faces }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faces.is_empty()
+    }
+
+    pub fn triangle(&self, f: usize) -> Triangle {
+        let [a, b, c] = self.faces[f];
+        Triangle::new(
+            self.vertices[a as usize],
+            self.vertices[b as usize],
+            self.vertices[c as usize],
+        )
+    }
+
+    pub fn bounds(&self) -> Aabb {
+        Aabb::from_points(self.vertices.iter())
+    }
+
+    pub fn total_area(&self) -> f64 {
+        (0..self.faces.len())
+            .map(|f| self.triangle(f).area() as f64)
+            .sum()
+    }
+
+    /// Unique undirected edges with their face-incidence counts.
+    fn edge_counts(&self) -> HashMap<(u32, u32), u32> {
+        let mut edges: HashMap<(u32, u32), u32> = HashMap::new();
+        for &[a, b, c] in &self.faces {
+            for (u, v) in [(a, b), (b, c), (c, a)] {
+                let key = (u.min(v), u.max(v));
+                *edges.entry(key).or_insert(0) += 1;
+            }
+        }
+        edges
+    }
+
+    /// Number of connected components (over the face-edge graph restricted
+    /// to referenced vertices).
+    fn component_count(&self) -> usize {
+        if self.vertices.is_empty() {
+            return 0;
+        }
+        let n = self.vertices.len();
+        let mut parent: Vec<u32> = (0..n as u32).collect();
+        fn find(parent: &mut [u32], mut x: u32) -> u32 {
+            while parent[x as usize] != x {
+                parent[x as usize] = parent[parent[x as usize] as usize];
+                x = parent[x as usize];
+            }
+            x
+        }
+        let mut referenced = vec![false; n];
+        for &[a, b, c] in &self.faces {
+            for v in [a, b, c] {
+                referenced[v as usize] = true;
+            }
+            for (u, v) in [(a, b), (b, c)] {
+                let (ru, rv) = (find(&mut parent, u), find(&mut parent, v));
+                if ru != rv {
+                    parent[ru as usize] = rv;
+                }
+            }
+        }
+        let mut roots = std::collections::HashSet::new();
+        for v in 0..n as u32 {
+            if referenced[v as usize] {
+                roots.insert(find(&mut parent, v));
+            }
+        }
+        roots.len()
+    }
+
+    /// Full statistics pass.
+    pub fn stats(&self) -> MeshStats {
+        let edges = self.edge_counts();
+        let watertight = !self.faces.is_empty() && edges.values().all(|&c| c == 2);
+        let v = self
+            .faces
+            .iter()
+            .flat_map(|f| f.iter().copied())
+            .collect::<std::collections::HashSet<_>>()
+            .len();
+        let e = edges.len();
+        let f = self.faces.len();
+        let chi = v as i64 - e as i64 + f as i64;
+        let components = self.component_count();
+        let genus = if watertight {
+            let g2 = 2 * components as i64 - chi;
+            if g2 >= 0 && g2 % 2 == 0 {
+                Some((g2 / 2) as u32)
+            } else {
+                None
+            }
+        } else {
+            None
+        };
+        MeshStats {
+            vertices: v,
+            edges: e,
+            faces: f,
+            euler_characteristic: chi,
+            genus,
+            components,
+            watertight,
+            total_area: self.total_area(),
+        }
+    }
+
+    /// Translate + uniformly scale so the bounding box fits `[0,1]³`
+    /// (centered on the longest axis). Keeps aspect ratio.
+    pub fn normalize_to_unit_cube(&mut self) {
+        if self.vertices.is_empty() {
+            return;
+        }
+        let b = self.bounds();
+        let scale = 1.0 / b.max_extent().max(1e-20);
+        let center = b.center();
+        for v in &mut self.vertices {
+            *v = (*v - center) * scale + Vec3::splat(0.5);
+        }
+    }
+
+    /// Drop vertices not referenced by any face, remapping indices.
+    pub fn compact(&mut self) {
+        let mut remap = vec![u32::MAX; self.vertices.len()];
+        let mut kept = Vec::new();
+        for f in &mut self.faces {
+            for v in f.iter_mut() {
+                let old = *v as usize;
+                if remap[old] == u32::MAX {
+                    remap[old] = kept.len() as u32;
+                    kept.push(self.vertices[old]);
+                }
+                *v = remap[old];
+            }
+        }
+        self.vertices = kept;
+    }
+}
+
+/// A canonical closed test mesh: the regular octahedron (V=6, E=12, F=8,
+/// genus 0). Used across the test suite.
+#[cfg(test)]
+pub fn octahedron() -> Mesh {
+    let vertices = vec![
+        Vec3::new(1.0, 0.0, 0.0),
+        Vec3::new(-1.0, 0.0, 0.0),
+        Vec3::new(0.0, 1.0, 0.0),
+        Vec3::new(0.0, -1.0, 0.0),
+        Vec3::new(0.0, 0.0, 1.0),
+        Vec3::new(0.0, 0.0, -1.0),
+    ];
+    let faces = vec![
+        [0, 2, 4],
+        [2, 1, 4],
+        [1, 3, 4],
+        [3, 0, 4],
+        [2, 0, 5],
+        [1, 2, 5],
+        [3, 1, 5],
+        [0, 3, 5],
+    ];
+    Mesh::new(vertices, faces)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn octahedron_stats() {
+        let s = octahedron().stats();
+        assert_eq!(s.vertices, 6);
+        assert_eq!(s.edges, 12);
+        assert_eq!(s.faces, 8);
+        assert_eq!(s.euler_characteristic, 2);
+        assert_eq!(s.genus, Some(0));
+        assert_eq!(s.components, 1);
+        assert!(s.watertight);
+    }
+
+    #[test]
+    fn open_mesh_is_not_watertight() {
+        let mut m = octahedron();
+        m.faces.pop();
+        let s = m.stats();
+        assert!(!s.watertight);
+        assert_eq!(s.genus, None);
+    }
+
+    #[test]
+    fn two_components_counted() {
+        let mut m = octahedron();
+        let other = octahedron();
+        let off = m.vertices.len() as u32;
+        m.vertices
+            .extend(other.vertices.iter().map(|v| *v + Vec3::splat(10.0)));
+        m.faces
+            .extend(other.faces.iter().map(|f| [f[0] + off, f[1] + off, f[2] + off]));
+        let s = m.stats();
+        assert_eq!(s.components, 2);
+        assert_eq!(s.euler_characteristic, 4);
+        assert_eq!(s.genus, Some(0));
+    }
+
+    #[test]
+    fn normalize_fits_unit_cube() {
+        let mut m = octahedron();
+        for v in &mut m.vertices {
+            *v = *v * 37.0 + Vec3::new(5.0, -3.0, 100.0);
+        }
+        m.normalize_to_unit_cube();
+        let b = m.bounds();
+        assert!(b.min.x >= -1e-5 && b.max.x <= 1.0 + 1e-5);
+        assert!((b.max_extent() - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn compact_removes_orphans() {
+        let mut m = octahedron();
+        m.vertices.push(Vec3::splat(99.0)); // orphan
+        m.compact();
+        assert_eq!(m.vertices.len(), 6);
+        assert_eq!(m.stats().genus, Some(0));
+    }
+
+    #[test]
+    fn area_of_octahedron() {
+        // 8 equilateral-right triangles with legs √2: area = 8·(√3/4·2) = 4√3.
+        let a = octahedron().total_area();
+        assert!((a - 4.0 * 3.0f64.sqrt()).abs() < 1e-5, "{a}");
+    }
+}

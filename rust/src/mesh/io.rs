@@ -1,0 +1,224 @@
+//! Wavefront OBJ and OFF mesh IO (the two formats the original benchmark
+//! meshes circulate in). Reader accepts the common minimal subsets; writer
+//! emits canonical files that round-trip through the reader.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::geometry::Vec3;
+
+use super::Mesh;
+
+/// Read a Wavefront OBJ (v/f lines; polygons are fan-triangulated;
+/// `v/vt/vn` face syntax accepted, negative indices resolved).
+pub fn read_obj(path: &Path) -> Result<Mesh> {
+    let text = fs::read_to_string(path)
+        .with_context(|| format!("reading OBJ {}", path.display()))?;
+    parse_obj(&text)
+}
+
+pub(crate) fn parse_obj(text: &str) -> Result<Mesh> {
+    let mut vertices = Vec::new();
+    let mut faces = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        let mut it = line.split_whitespace();
+        match it.next() {
+            Some("v") => {
+                let mut coord = |what| -> Result<f32> {
+                    it.next()
+                        .with_context(|| format!("line {}: missing {what}", lineno + 1))?
+                        .parse()
+                        .with_context(|| format!("line {}: bad {what}", lineno + 1))
+                };
+                let (x, y, z) = (coord("x")?, coord("y")?, coord("z")?);
+                vertices.push(Vec3::new(x, y, z));
+            }
+            Some("f") => {
+                let idx: Vec<u32> = it
+                    .map(|tok| parse_obj_index(tok, vertices.len(), lineno))
+                    .collect::<Result<_>>()?;
+                if idx.len() < 3 {
+                    bail!("line {}: face with {} vertices", lineno + 1, idx.len());
+                }
+                for k in 1..idx.len() - 1 {
+                    faces.push([idx[0], idx[k], idx[k + 1]]);
+                }
+            }
+            _ => {} // comments, normals, groups… ignored
+        }
+    }
+    Ok(Mesh::new(vertices, faces))
+}
+
+fn parse_obj_index(tok: &str, nverts: usize, lineno: usize) -> Result<u32> {
+    let first = tok.split('/').next().unwrap_or("");
+    let i: i64 = first
+        .parse()
+        .with_context(|| format!("line {}: bad face index {tok:?}", lineno + 1))?;
+    let resolved = if i < 0 { nverts as i64 + i } else { i - 1 };
+    if resolved < 0 || resolved >= nverts as i64 {
+        bail!("line {}: face index {i} out of range", lineno + 1);
+    }
+    Ok(resolved as u32)
+}
+
+/// Write a Wavefront OBJ.
+pub fn write_obj(mesh: &Mesh, path: &Path) -> Result<()> {
+    let mut out = String::with_capacity(mesh.vertices.len() * 32);
+    out.push_str("# msgsn mesh\n");
+    for v in &mesh.vertices {
+        out.push_str(&format!("v {} {} {}\n", v.x, v.y, v.z));
+    }
+    for f in &mesh.faces {
+        out.push_str(&format!("f {} {} {}\n", f[0] + 1, f[1] + 1, f[2] + 1));
+    }
+    fs::File::create(path)
+        .and_then(|mut f| f.write_all(out.as_bytes()))
+        .with_context(|| format!("writing OBJ {}", path.display()))
+}
+
+/// Read an OFF file (header `OFF`, counts line, vertices, faces).
+pub fn read_off(path: &Path) -> Result<Mesh> {
+    let text = fs::read_to_string(path)
+        .with_context(|| format!("reading OFF {}", path.display()))?;
+    parse_off(&text)
+}
+
+pub(crate) fn parse_off(text: &str) -> Result<Mesh> {
+    let mut tokens = text
+        .lines()
+        .filter(|l| !l.trim_start().starts_with('#'))
+        .flat_map(|l| l.split_whitespace());
+    match tokens.next() {
+        Some("OFF") => {}
+        other => bail!("not an OFF file (header {:?})", other),
+    }
+    let mut next_usize = |what: &str| -> Result<usize> {
+        tokens
+            .next()
+            .with_context(|| format!("OFF: missing {what}"))?
+            .parse()
+            .with_context(|| format!("OFF: bad {what}"))
+    };
+    let nv = next_usize("vertex count")?;
+    let nf = next_usize("face count")?;
+    let _ne = next_usize("edge count")?;
+    // Re-create the iterator state by collecting remaining tokens.
+    let rest: Vec<&str> = tokens.collect();
+    let mut pos = 0;
+    let mut take = |what: &str| -> Result<&str> {
+        let t = rest.get(pos).copied().with_context(|| format!("OFF: missing {what}"))?;
+        pos += 1;
+        Ok(t)
+    };
+    let mut vertices = Vec::with_capacity(nv);
+    for _ in 0..nv {
+        let x: f32 = take("x")?.parse().context("OFF: bad x")?;
+        let y: f32 = take("y")?.parse().context("OFF: bad y")?;
+        let z: f32 = take("z")?.parse().context("OFF: bad z")?;
+        vertices.push(Vec3::new(x, y, z));
+    }
+    let mut faces = Vec::with_capacity(nf);
+    for _ in 0..nf {
+        let k: usize = take("face arity")?.parse().context("OFF: bad arity")?;
+        if k < 3 {
+            bail!("OFF: face with {k} vertices");
+        }
+        let mut idx = Vec::with_capacity(k);
+        for _ in 0..k {
+            let i: u32 = take("face index")?.parse().context("OFF: bad index")?;
+            if i as usize >= nv {
+                bail!("OFF: index {i} out of range");
+            }
+            idx.push(i);
+        }
+        for j in 1..k - 1 {
+            faces.push([idx[0], idx[j], idx[j + 1]]);
+        }
+    }
+    Ok(Mesh::new(vertices, faces))
+}
+
+/// Write an OFF file.
+pub fn write_off(mesh: &Mesh, path: &Path) -> Result<()> {
+    let mut out = String::with_capacity(mesh.vertices.len() * 32);
+    out.push_str("OFF\n");
+    out.push_str(&format!(
+        "{} {} 0\n",
+        mesh.vertices.len(),
+        mesh.faces.len()
+    ));
+    for v in &mesh.vertices {
+        out.push_str(&format!("{} {} {}\n", v.x, v.y, v.z));
+    }
+    for f in &mesh.faces {
+        out.push_str(&format!("3 {} {} {}\n", f[0], f[1], f[2]));
+    }
+    fs::File::create(path)
+        .and_then(|mut f| f.write_all(out.as_bytes()))
+        .with_context(|| format!("writing OFF {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::core::octahedron;
+    use super::*;
+
+    #[test]
+    fn obj_roundtrip() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("msgsn_test_roundtrip.obj");
+        let m = octahedron();
+        write_obj(&m, &path).unwrap();
+        let back = read_obj(&path).unwrap();
+        assert_eq!(back.vertices.len(), m.vertices.len());
+        assert_eq!(back.faces, m.faces);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn off_roundtrip() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("msgsn_test_roundtrip.off");
+        let m = octahedron();
+        write_off(&m, &path).unwrap();
+        let back = read_off(&path).unwrap();
+        assert_eq!(back.vertices.len(), m.vertices.len());
+        assert_eq!(back.faces, m.faces);
+        assert_eq!(back.stats().genus, Some(0));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn obj_quad_triangulated() {
+        let m = parse_obj("v 0 0 0\nv 1 0 0\nv 1 1 0\nv 0 1 0\nf 1 2 3 4\n").unwrap();
+        assert_eq!(m.faces, vec![[0, 1, 2], [0, 2, 3]]);
+    }
+
+    #[test]
+    fn obj_slash_and_negative_indices() {
+        let m = parse_obj("v 0 0 0\nv 1 0 0\nv 0 1 0\nf 1/1/1 2/2/2 -1/3\n").unwrap();
+        assert_eq!(m.faces, vec![[0, 1, 2]]);
+    }
+
+    #[test]
+    fn obj_bad_index_errors() {
+        assert!(parse_obj("v 0 0 0\nf 1 2 3\n").is_err());
+    }
+
+    #[test]
+    fn off_header_required() {
+        assert!(parse_off("NOFF\n0 0 0\n").is_err());
+    }
+
+    #[test]
+    fn off_with_comments() {
+        let text = "OFF\n# a comment\n3 1 0\n0 0 0\n1 0 0\n0 1 0\n3 0 1 2\n";
+        let m = parse_off(text).unwrap();
+        assert_eq!(m.faces, vec![[0, 1, 2]]);
+    }
+}

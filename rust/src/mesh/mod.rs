@@ -1,0 +1,95 @@
+//! Indexed triangle meshes: storage, IO, topology statistics and the
+//! uniform surface sampler that produces the paper's input signals.
+
+mod core;
+mod io;
+pub mod lfs;
+mod sampler;
+
+pub use core::{Mesh, MeshStats};
+pub use io::{read_obj, read_off, write_obj, write_off};
+pub use lfs::{estimate_lfs, LfsStats};
+pub use sampler::SurfaceSampler;
+
+use crate::implicit::shapes;
+use crate::marching;
+
+/// The four benchmark point-cloud sources, in the paper's order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BenchmarkShape {
+    /// Stanford-Bunny proxy (genus 0).
+    Blob,
+    /// Double torus (genus 2).
+    Eight,
+    /// Skeleton-hand proxy (genus 5).
+    Hand,
+    /// Heptoroid proxy (genus 22).
+    Heptoroid,
+}
+
+impl BenchmarkShape {
+    pub const ALL: [BenchmarkShape; 4] = [
+        BenchmarkShape::Blob,
+        BenchmarkShape::Eight,
+        BenchmarkShape::Hand,
+        BenchmarkShape::Heptoroid,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BenchmarkShape::Blob => "blob",
+            BenchmarkShape::Eight => "eight",
+            BenchmarkShape::Hand => "hand",
+            BenchmarkShape::Heptoroid => "heptoroid",
+        }
+    }
+
+    /// The paper mesh this shape stands in for.
+    pub fn paper_name(self) -> &'static str {
+        match self {
+            BenchmarkShape::Blob => "Stanford Bunny",
+            BenchmarkShape::Eight => "Eight",
+            BenchmarkShape::Hand => "Skeleton Hand",
+            BenchmarkShape::Heptoroid => "Heptoroid",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "blob" | "bunny" => Some(BenchmarkShape::Blob),
+            "eight" => Some(BenchmarkShape::Eight),
+            "hand" => Some(BenchmarkShape::Hand),
+            "heptoroid" => Some(BenchmarkShape::Heptoroid),
+            _ => None,
+        }
+    }
+
+    pub fn expected_genus(self) -> u32 {
+        self.shape().genus
+    }
+
+    pub fn shape(self) -> shapes::Shape {
+        match self {
+            BenchmarkShape::Blob => shapes::blob(),
+            BenchmarkShape::Eight => shapes::eight(),
+            BenchmarkShape::Hand => shapes::hand(),
+            BenchmarkShape::Heptoroid => shapes::heptoroid(),
+        }
+    }
+
+    pub fn default_resolution(self) -> u32 {
+        self.shape().default_resolution
+    }
+}
+
+/// Polygonize one benchmark shape at the given grid resolution
+/// (`resolution == 0` selects the shape's default) and normalize it into the
+/// unit cube, matching the paper's setup where per-mesh parameters are
+/// comparable across shapes.
+pub fn benchmark_mesh(shape: BenchmarkShape, resolution: u32) -> Mesh {
+    let s = shape.shape();
+    let res = if resolution == 0 { s.default_resolution } else { resolution };
+    let mut mesh = marching::polygonize(s.field.as_ref(), s.bounds, res);
+    mesh.normalize_to_unit_cube();
+    mesh
+}

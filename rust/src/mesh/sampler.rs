@@ -1,0 +1,176 @@
+//! Uniform surface sampling — the paper's Sample phase.
+//!
+//! "In each experiment, the point cloud was taken from a triangular mesh and
+//! sampled with uniform probability distribution P(ξ)" (§3.1). Uniform over
+//! *area* means: choose a face with probability ∝ its area (binary search on
+//! the cumulative area table), then a uniform point inside it (square-root
+//! barycentric trick in `geometry::Triangle`).
+
+use crate::geometry::Vec3;
+use crate::rng::Rng;
+
+use super::Mesh;
+
+/// Pre-built area-weighted sampler over a mesh surface.
+pub struct SurfaceSampler {
+    triangles: Vec<crate::geometry::Triangle>,
+    /// Cumulative areas; `cdf[i]` = total area of faces `0..=i`.
+    cdf: Vec<f64>,
+    total_area: f64,
+}
+
+impl SurfaceSampler {
+    /// Build the cumulative table. Degenerate (zero-area) faces are kept in
+    /// the table with zero mass — they can never be selected.
+    pub fn new(mesh: &Mesh) -> Self {
+        let triangles: Vec<_> = (0..mesh.faces.len()).map(|f| mesh.triangle(f)).collect();
+        let mut cdf = Vec::with_capacity(triangles.len());
+        let mut acc = 0.0f64;
+        for t in &triangles {
+            acc += t.area() as f64;
+            cdf.push(acc);
+        }
+        assert!(acc > 0.0, "cannot sample a zero-area mesh");
+        Self { triangles, cdf, total_area: acc }
+    }
+
+    pub fn total_area(&self) -> f64 {
+        self.total_area
+    }
+
+    /// One uniform sample from the surface.
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> Vec3 {
+        let target = rng.f64() * self.total_area;
+        // First face whose cumulative area exceeds the target.
+        let mut lo = 0usize;
+        let mut hi = self.cdf.len() - 1;
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if self.cdf[mid] <= target {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        self.triangles[lo].sample_uniform(rng)
+    }
+
+    /// Fill `out` with `count` samples (hot-path variant reusing the output
+    /// buffer — the multi-signal driver calls this every iteration).
+    pub fn sample_batch(&self, rng: &mut Rng, count: usize, out: &mut Vec<Vec3>) {
+        out.clear();
+        out.reserve(count);
+        for _ in 0..count {
+            out.push(self.sample(rng));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::core::octahedron;
+    use super::*;
+    use crate::geometry::Triangle;
+    use crate::mesh::Mesh;
+
+    #[test]
+    fn samples_lie_on_surface() {
+        let m = octahedron();
+        let s = SurfaceSampler::new(&m);
+        let mut rng = Rng::seed_from(1);
+        for _ in 0..2000 {
+            let p = s.sample(&mut rng);
+            // Octahedron surface: |x|+|y|+|z| = 1.
+            let l1 = p.x.abs() + p.y.abs() + p.z.abs();
+            assert!((l1 - 1.0).abs() < 1e-5, "{l1}");
+        }
+    }
+
+    #[test]
+    fn area_weighting_respected() {
+        // Two triangles: one with 4x the area of the other.
+        let m = Mesh::new(
+            vec![
+                Vec3::ZERO,
+                Vec3::new(1.0, 0.0, 0.0),
+                Vec3::new(0.0, 1.0, 0.0),
+                Vec3::new(5.0, 0.0, 0.0),
+                Vec3::new(3.0, 2.0, 0.0),
+                Vec3::new(5.0, 2.0, 0.0),
+            ],
+            vec![[0, 1, 2], [3, 4, 5]],
+        );
+        let big_area = m.triangle(1).area();
+        let small_area = m.triangle(0).area();
+        let ratio = (big_area / small_area) as f64;
+        let s = SurfaceSampler::new(&m);
+        let mut rng = Rng::seed_from(3);
+        let n = 40_000;
+        let mut big = 0usize;
+        for _ in 0..n {
+            if s.sample(&mut rng).x > 2.0 {
+                big += 1;
+            }
+        }
+        let got = big as f64 / (n - big) as f64;
+        assert!((got - ratio).abs() / ratio < 0.1, "got {got}, want {ratio}");
+    }
+
+    #[test]
+    fn degenerate_faces_never_selected() {
+        let m = Mesh::new(
+            vec![
+                Vec3::ZERO,
+                Vec3::new(1.0, 0.0, 0.0),
+                Vec3::new(0.0, 1.0, 0.0),
+                Vec3::new(9.0, 9.0, 9.0),
+            ],
+            vec![[3, 3, 3], [0, 1, 2]],
+        );
+        let s = SurfaceSampler::new(&m);
+        let mut rng = Rng::seed_from(5);
+        for _ in 0..1000 {
+            let p = s.sample(&mut rng);
+            assert!(p.x < 2.0, "sampled the degenerate face at (9,9,9)");
+        }
+    }
+
+    #[test]
+    fn batch_reuses_buffer() {
+        let m = octahedron();
+        let s = SurfaceSampler::new(&m);
+        let mut rng = Rng::seed_from(7);
+        let mut buf = Vec::new();
+        s.sample_batch(&mut rng, 128, &mut buf);
+        assert_eq!(buf.len(), 128);
+        s.sample_batch(&mut rng, 16, &mut buf);
+        assert_eq!(buf.len(), 16);
+    }
+
+    #[test]
+    fn sampler_total_area_matches_mesh() {
+        let m = octahedron();
+        let s = SurfaceSampler::new(&m);
+        assert!((s.total_area() - m.total_area()).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "zero-area")]
+    fn zero_area_mesh_panics() {
+        let m = Mesh::new(vec![Vec3::ZERO; 3], vec![[0, 1, 2]]);
+        let _ = SurfaceSampler::new(&m);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let t = Triangle::new(Vec3::ZERO, Vec3::new(1.0, 0.0, 0.0), Vec3::new(0.0, 1.0, 0.0));
+        let m = Mesh::new(vec![t.a, t.b, t.c], vec![[0, 1, 2]]);
+        let s = SurfaceSampler::new(&m);
+        let mut a = Rng::seed_from(99);
+        let mut b = Rng::seed_from(99);
+        for _ in 0..100 {
+            assert_eq!(s.sample(&mut a), s.sample(&mut b));
+        }
+    }
+}

@@ -1,0 +1,212 @@
+//! Phase timing and report rendering.
+//!
+//! The paper reports, per run: iterations, signals, discarded signals,
+//! units, connections, total time, per-phase times (Sample / Find Winners /
+//! Update) and times per signal (Tables 1–4). [`PhaseTimes`] accumulates
+//! the per-phase clocks; [`table`] renders aligned text tables for the
+//! reproduction harness.
+
+use std::time::{Duration, Instant};
+
+/// The three phases of the basic iteration (paper §2.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Phase {
+    Sample,
+    FindWinners,
+    Update,
+}
+
+/// Accumulated wall-clock per phase.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseTimes {
+    pub sample: Duration,
+    pub find: Duration,
+    pub update: Duration,
+}
+
+impl PhaseTimes {
+    #[inline]
+    pub fn add(&mut self, phase: Phase, d: Duration) {
+        match phase {
+            Phase::Sample => self.sample += d,
+            Phase::FindWinners => self.find += d,
+            Phase::Update => self.update += d,
+        }
+    }
+
+    pub fn total(&self) -> Duration {
+        self.sample + self.find + self.update
+    }
+
+    /// Fraction of total time spent in Find Winners (Fig. 2's y-axis).
+    pub fn find_fraction(&self) -> f64 {
+        let t = self.total().as_secs_f64();
+        if t == 0.0 {
+            0.0
+        } else {
+            self.find.as_secs_f64() / t
+        }
+    }
+}
+
+/// Scope timer: measures into a `PhaseTimes` slot on drop-free explicit
+/// stop (explicit to keep the hot loop free of drop glue).
+pub struct PhaseClock {
+    start: Instant,
+}
+
+impl PhaseClock {
+    #[inline]
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    #[inline]
+    pub fn stop(self, times: &mut PhaseTimes, phase: Phase) {
+        times.add(phase, self.start.elapsed());
+    }
+
+    #[inline]
+    pub fn lap(&mut self) -> Duration {
+        let now = Instant::now();
+        let d = now - self.start;
+        self.start = now;
+        d
+    }
+}
+
+/// Minimal aligned-text table builder (the vendored set has no prettytable;
+/// the reproduction harness prints the paper's tables through this).
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render with per-column alignment (first column left, rest right).
+    pub fn render(&self) -> String {
+        let cols = self.header.len();
+        let mut width = vec![0usize; cols];
+        for c in 0..cols {
+            width[c] = self.header[c].chars().count();
+            for r in &self.rows {
+                width[c] = width[c].max(r[c].chars().count());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], width: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, cell) in cells.iter().enumerate() {
+                let pad = width[c] - cell.chars().count();
+                if c == 0 {
+                    line.push_str(&format!(" {}{} |", cell, " ".repeat(pad)));
+                } else {
+                    line.push_str(&format!(" {}{} |", " ".repeat(pad), cell));
+                }
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &width));
+        out.push('|');
+        for w in &width {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &width));
+        }
+        out
+    }
+
+    /// CSV dump (results/ files consumed by plotting).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.header.join(","));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Human duration (s with ms precision).
+pub fn fmt_secs(d: Duration) -> String {
+    format!("{:.3}", d.as_secs_f64())
+}
+
+/// Scientific notation matching the paper's "time per signal" rows.
+pub fn fmt_sci(x: f64) -> String {
+    if x == 0.0 {
+        return "0".to_string();
+    }
+    format!("{x:.4e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_times_accumulate() {
+        let mut t = PhaseTimes::default();
+        t.add(Phase::Sample, Duration::from_millis(10));
+        t.add(Phase::FindWinners, Duration::from_millis(60));
+        t.add(Phase::Update, Duration::from_millis(30));
+        assert_eq!(t.total(), Duration::from_millis(100));
+        assert!((t.find_fraction() - 0.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clock_measures_something() {
+        let mut times = PhaseTimes::default();
+        let c = PhaseClock::start();
+        std::thread::sleep(Duration::from_millis(2));
+        c.stop(&mut times, Phase::Update);
+        assert!(times.update >= Duration::from_millis(1));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(vec!["alpha".into(), "1".into()]);
+        t.row(vec!["b".into(), "12345".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        let w = lines[0].len();
+        assert!(lines.iter().all(|l| l.len() == w), "{s}");
+    }
+
+    #[test]
+    fn csv_escapes_nothing_but_works() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        assert_eq!(t.to_csv(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn row_arity_checked() {
+        Table::new(&["a"]).row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn sci_format_matches_paper_style() {
+        assert_eq!(fmt_sci(5.4692e-6), "5.4692e-6");
+        assert_eq!(fmt_sci(0.0), "0");
+    }
+}

@@ -1,0 +1,133 @@
+//! Minimal property-testing harness (the vendored crate set has no
+//! `proptest`/`quickcheck`).
+//!
+//! Deterministic: case `k` of a run with seed `s` always sees the RNG stream
+//! `SplitMix64(s).nth(k)`, so a failure message's `(seed, case)` pair
+//! reproduces exactly. No automatic shrinking — generators are expected to
+//! draw *sized* inputs (`sized_usize`) so early cases are small, which gives
+//! most of shrinking's benefit for these invariants.
+
+use crate::rng::{Rng, SplitMix64};
+
+/// Property runner configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Prop {
+    pub cases: u32,
+    pub seed: u64,
+}
+
+impl Default for Prop {
+    fn default() -> Self {
+        Self { cases: 128, seed: 0xC0FFEE }
+    }
+}
+
+impl Prop {
+    pub fn new(cases: u32, seed: u64) -> Self {
+        Self { cases, seed }
+    }
+
+    /// Run `property` on `cases` generated inputs; panics with the
+    /// reproducing `(seed, case)` on the first counterexample.
+    ///
+    /// The generator receives `(rng, size)` where `size` ramps 0 → 100 over
+    /// the run, so early failures are small.
+    pub fn run<T: std::fmt::Debug>(
+        &self,
+        generate: impl Fn(&mut Rng, u32) -> T,
+        property: impl Fn(&T) -> Result<(), String>,
+    ) {
+        let mut seeder = SplitMix64::new(self.seed);
+        for case in 0..self.cases {
+            let case_seed = seeder.next_u64();
+            let mut rng = Rng::seed_from(case_seed);
+            let size = if self.cases <= 1 { 100 } else { 100 * case / (self.cases - 1) };
+            let input = generate(&mut rng, size);
+            if let Err(msg) = property(&input) {
+                panic!(
+                    "property failed (seed={:#x}, case={case}, case_seed={case_seed:#x}):\n  \
+                     {msg}\n  input: {input:?}",
+                    self.seed
+                );
+            }
+        }
+    }
+}
+
+/// Draw a usize in `[lo, hi]` scaled by the size ramp (small early).
+pub fn sized_usize(rng: &mut Rng, size: u32, lo: usize, hi: usize) -> usize {
+    let span = hi.saturating_sub(lo);
+    let cap = lo + span * (size as usize).min(100) / 100;
+    if cap <= lo {
+        lo
+    } else {
+        lo + rng.index(cap - lo + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        Prop::default().run(
+            |rng, size| sized_usize(rng, size, 0, 1000),
+            |&x| {
+                if x <= 1000 {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_counterexample() {
+        Prop::new(50, 7).run(
+            |rng, size| sized_usize(rng, size, 0, 100),
+            |&x| {
+                if x < 90 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} too big"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn sizes_ramp_up() {
+        let mut small = Vec::new();
+        let mut rng = Rng::seed_from(0);
+        for size in [0, 50, 100] {
+            small.push(sized_usize(&mut rng, size, 1, 101));
+        }
+        // size=0 pins to the lower bound.
+        assert_eq!(small[0], 1);
+    }
+
+    #[test]
+    fn deterministic_inputs_per_seed() {
+        use std::cell::RefCell;
+        let seen_a = RefCell::new(Vec::new());
+        Prop::new(10, 42).run(
+            |rng, _| rng.next_u64(),
+            |&x| {
+                seen_a.borrow_mut().push(x);
+                Ok(())
+            },
+        );
+        let seen_b = RefCell::new(Vec::new());
+        Prop::new(10, 42).run(
+            |rng, _| rng.next_u64(),
+            |&x| {
+                seen_b.borrow_mut().push(x);
+                Ok(())
+            },
+        );
+        assert_eq!(seen_a.into_inner(), seen_b.into_inner());
+    }
+}

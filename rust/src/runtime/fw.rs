@@ -1,0 +1,108 @@
+//! `PjrtFindWinners`: the paper's **GPU-based** Find Winners — the batched
+//! top-2 search executed from the AOT Pallas/XLA artifact via PJRT.
+//!
+//! Marshalling contract (DESIGN.md §8): signals are zero-padded up to the
+//! bucket's `m` (extra rows are computed and discarded — semantics equal to
+//! the unbucketed schedule because output rows are independent, pinned by
+//! `python/tests/test_model.py::test_signal_rows_independent`); unit slots
+//! are the network slab in id order, dead slots pre-filled with `PAD_VALUE`
+//! so the kernel's winner index IS the `UnitId`.
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::findwinners::{exhaustive_top2, FindWinners};
+use crate::geometry::Vec3;
+use crate::som::{Network, Winners};
+
+use super::registry::Registry;
+use super::PAD_VALUE;
+
+/// Batched Find Winners over the PJRT runtime.
+pub struct PjrtFindWinners {
+    registry: Registry,
+    sig_buf: Vec<f32>,
+    unit_buf: Vec<f32>,
+}
+
+impl PjrtFindWinners {
+    pub fn new(registry: Registry) -> Self {
+        Self { registry, sig_buf: Vec::new(), unit_buf: Vec::new() }
+    }
+
+    /// Build from a run configuration (artifact dir + flavor override).
+    pub fn from_config(cfg: &RunConfig) -> Result<Self> {
+        let registry = Registry::open(&cfg.artifacts_dir, cfg.flavor.as_deref())?;
+        Ok(Self::new(registry))
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn registry_mut(&mut self) -> &mut Registry {
+        &mut self.registry
+    }
+}
+
+impl FindWinners for PjrtFindWinners {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    /// Single-signal queries don't amortize a PJRT dispatch; the multi
+    /// driver never calls this, but keep it correct for completeness.
+    fn find2(&mut self, net: &Network, signal: Vec3) -> Option<Winners> {
+        exhaustive_top2(net, signal)
+    }
+
+    fn find2_batch(
+        &mut self,
+        net: &Network,
+        signals: &[Vec3],
+        out: &mut Vec<Option<Winners>>,
+    ) {
+        out.clear();
+        if signals.is_empty() {
+            return;
+        }
+        let m_live = signals.len();
+        let n_needed = net.capacity().max(2);
+        let entry = self
+            .registry
+            .bucket_for(m_live, n_needed.max(m_live))
+            .expect("artifact bucket (run `make artifacts`)");
+
+        // Signals: live rows then zero padding.
+        self.sig_buf.clear();
+        self.sig_buf.reserve(entry.m * entry.dim);
+        for s in signals {
+            self.sig_buf.extend_from_slice(&[s.x, s.y, s.z]);
+        }
+        self.sig_buf.resize(entry.m * entry.dim, 0.0);
+
+        // Units: slab order (dead slots already PAD), pad rows to bucket n.
+        net.fill_positions(&mut self.unit_buf, PAD_VALUE);
+        self.unit_buf.resize(entry.n * entry.dim, PAD_VALUE);
+
+        let (i1, i2, d1, d2) = self
+            .registry
+            .execute(&entry, &self.sig_buf, &self.unit_buf)
+            .expect("PJRT find-winners execution");
+
+        out.reserve(m_live);
+        for j in 0..m_live {
+            // Fewer than two live units ⇒ a padded slot "won" with +inf.
+            if !d2[j].is_finite() || i1[j] == i2[j] {
+                out.push(None);
+            } else {
+                out.push(Some(Winners {
+                    w1: i1[j] as u32,
+                    w2: i2[j] as u32,
+                    d1_sq: d1[j],
+                    d2_sq: d2[j],
+                }));
+            }
+        }
+    }
+}

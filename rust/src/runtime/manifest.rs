@@ -1,0 +1,187 @@
+//! Typed view of `artifacts/manifest.json` — the contract between the AOT
+//! compile path (`python/compile/aot.py`) and this runtime.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::json::{parse_json, Json};
+
+/// One AOT-compiled Find-Winners bucket.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactEntry {
+    pub flavor: String,
+    /// Signal-batch capacity.
+    pub m: usize,
+    /// Unit capacity (padded slots hold `pad_value`).
+    pub n: usize,
+    pub dim: usize,
+    pub file: String,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub pad_value: f32,
+    pub m_cap: usize,
+    pub dim: usize,
+    pub default_flavor: String,
+    pub artifacts: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` to build the AOT buckets",
+                path.display()
+            )
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    pub(crate) fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let v = parse_json(text).map_err(|e| anyhow!("{e}"))?;
+        let num = |key: &str| -> Result<f64> {
+            v.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("manifest: missing numeric {key:?}"))
+        };
+        let pad_value = num("pad_value")? as f32;
+        let m_cap = num("m_cap")? as usize;
+        let dim = num("dim")? as usize;
+        let default_flavor = v
+            .get("default_flavor")
+            .and_then(Json::as_str)
+            .unwrap_or("pallas")
+            .to_string();
+        let mut artifacts = Vec::new();
+        for (i, e) in v
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest: missing artifacts[]"))?
+            .iter()
+            .enumerate()
+        {
+            let field_num = |key: &str| -> Result<usize> {
+                e.get(key)
+                    .and_then(Json::as_u64)
+                    .map(|x| x as usize)
+                    .ok_or_else(|| anyhow!("manifest artifact {i}: missing {key:?}"))
+            };
+            artifacts.push(ArtifactEntry {
+                flavor: e
+                    .get("flavor")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("manifest artifact {i}: missing flavor"))?
+                    .to_string(),
+                m: field_num("m")?,
+                n: field_num("n")?,
+                dim: field_num("dim")?,
+                file: e
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("manifest artifact {i}: missing file"))?
+                    .to_string(),
+            });
+        }
+        if artifacts.is_empty() {
+            bail!("manifest has no artifacts — re-run `make artifacts`");
+        }
+        // Buckets must be sorted by capacity per flavor for bucket_for().
+        artifacts.sort_by_key(|a| (a.flavor.clone(), a.n, a.m));
+        Ok(Manifest { dir: dir.to_path_buf(), pad_value, m_cap, dim, default_flavor, artifacts })
+    }
+
+    /// Flavors present in the manifest.
+    pub fn flavors(&self) -> Vec<&str> {
+        let mut f: Vec<&str> = self.artifacts.iter().map(|a| a.flavor.as_str()).collect();
+        f.sort_unstable();
+        f.dedup();
+        f
+    }
+
+    /// Smallest bucket of `flavor` holding `m` signals and `n` unit slots.
+    pub fn bucket_for(&self, flavor: &str, m: usize, n: usize) -> Option<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.flavor == flavor && a.m >= m.min(self.m_cap) && a.n >= n)
+            .min_by_key(|a| (a.n, a.m))
+    }
+
+    /// Absolute path of an entry's HLO text.
+    pub fn path_of(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "jax": "0.8.2", "pad_value": 1e30, "m_cap": 8192,
+      "min_n": 128, "dim": 3, "block_m": 128, "block_n": 128,
+      "default_flavor": "pallas",
+      "artifacts": [
+        {"flavor": "pallas", "m": 128, "n": 128, "dim": 3, "file": "p128.hlo.txt"},
+        {"flavor": "pallas", "m": 8192, "n": 16384, "dim": 3, "file": "p16384.hlo.txt"},
+        {"flavor": "scan", "m": 128, "n": 128, "dim": 3, "file": "s128.hlo.txt"},
+        {"flavor": "scan", "m": 256, "n": 256, "dim": 3, "file": "s256.hlo.txt"}
+      ]
+    }"#;
+
+    fn sample() -> Manifest {
+        Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap()
+    }
+
+    #[test]
+    fn parses_fields() {
+        let m = sample();
+        assert_eq!(m.pad_value, 1e30);
+        assert_eq!(m.m_cap, 8192);
+        assert_eq!(m.default_flavor, "pallas");
+        assert_eq!(m.artifacts.len(), 4);
+        assert_eq!(m.flavors(), vec!["pallas", "scan"]);
+    }
+
+    #[test]
+    fn bucket_selection_smallest_fit() {
+        let m = sample();
+        let b = m.bucket_for("scan", 100, 200).unwrap();
+        assert_eq!((b.m, b.n), (256, 256));
+        let b = m.bucket_for("pallas", 8192, 9000).unwrap();
+        assert_eq!((b.m, b.n), (8192, 16384));
+        assert!(m.bucket_for("scan", 100, 100_000).is_none());
+        assert!(m.bucket_for("mxu", 1, 1).is_none());
+    }
+
+    #[test]
+    fn m_above_cap_still_resolves() {
+        // The engine never requests m > m_cap, but a request at the cap must
+        // resolve to the capped artifacts.
+        let m = sample();
+        let b = m.bucket_for("pallas", 8192, 16384).unwrap();
+        assert_eq!(b.m, 8192);
+    }
+
+    #[test]
+    fn rejects_empty_and_malformed() {
+        assert!(Manifest::parse("{}", Path::new("/tmp")).is_err());
+        assert!(Manifest::parse(
+            r#"{"pad_value":1,"m_cap":1,"dim":3,"artifacts":[]}"#,
+            Path::new("/tmp")
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn path_joins_dir() {
+        let m = sample();
+        let p = m.path_of(&m.artifacts[0]);
+        assert!(p.to_string_lossy().starts_with("/tmp/a/"));
+    }
+}

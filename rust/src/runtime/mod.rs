@@ -1,0 +1,23 @@
+//! PJRT runtime — executes the AOT Find-Winners artifacts from the rust
+//! request path (the paper's **GPU-based** column).
+//!
+//! `python/compile/aot.py` lowers the Layer-1/2 JAX+Pallas computation to
+//! HLO **text** per size bucket; this module loads the text
+//! (`HloModuleProto::from_text_file`), compiles it once per bucket on the
+//! PJRT CPU client, caches the executable, and marshals network state in
+//! and winners out. Python never runs here.
+
+mod fw;
+mod json;
+mod manifest;
+mod registry;
+
+pub use fw::PjrtFindWinners;
+pub use json::{parse_json, Json, JsonError};
+pub use manifest::{ArtifactEntry, Manifest};
+pub use registry::{ExecStats, Registry};
+
+/// Padding sentinel for unit slots; `PAD_VALUE²` overflows f32 to `+inf`,
+/// so padded slots can never win. MUST match `kernels/ref.py::PAD_VALUE`
+/// (checked against the manifest at load).
+pub const PAD_VALUE: f32 = 1e30;

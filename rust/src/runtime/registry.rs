@@ -1,0 +1,193 @@
+//! Artifact registry: PJRT client + per-bucket compiled-executable cache.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::manifest::{ArtifactEntry, Manifest};
+use super::PAD_VALUE;
+
+/// Execution statistics (exposed to the perf harness).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecStats {
+    pub executions: u64,
+    pub exec_time: Duration,
+    pub compilations: u64,
+    pub compile_time: Duration,
+}
+
+/// Loads HLO-text buckets lazily and keeps compiled executables cached.
+pub struct Registry {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    flavor: String,
+    cache: HashMap<(usize, usize), xla::PjRtLoadedExecutable>,
+    pub stats: ExecStats,
+}
+
+impl Registry {
+    /// Open the artifact directory. `flavor` overrides the manifest default
+    /// (`pallas` or `scan` — both have identical semantics; see
+    /// `python/tests/test_model.py::TestFlavorParity`).
+    pub fn open(dir: &Path, flavor: Option<&str>) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        if (manifest.pad_value - PAD_VALUE).abs() > PAD_VALUE * 1e-6 {
+            bail!(
+                "manifest pad_value {} != runtime PAD_VALUE {PAD_VALUE}",
+                manifest.pad_value
+            );
+        }
+        let flavor = flavor.unwrap_or(&manifest.default_flavor).to_string();
+        if !manifest.flavors().contains(&flavor.as_str()) {
+            bail!(
+                "flavor {flavor:?} not in manifest (have {:?})",
+                manifest.flavors()
+            );
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Self {
+            client,
+            manifest,
+            flavor,
+            cache: HashMap::new(),
+            stats: ExecStats::default(),
+        })
+    }
+
+    pub fn flavor(&self) -> &str {
+        &self.flavor
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Bucket entry for a batch of `m` signals over `n` unit slots.
+    pub fn bucket_for(&self, m: usize, n: usize) -> Result<ArtifactEntry> {
+        self.manifest
+            .bucket_for(&self.flavor, m, n)
+            .cloned()
+            .ok_or_else(|| {
+                anyhow!(
+                    "no {} artifact bucket for m={m}, n={n} — re-run `make \
+                     artifacts` with a larger --max-n",
+                    self.flavor
+                )
+            })
+    }
+
+    /// Compile (or fetch from cache) the executable of a bucket.
+    pub fn executable(&mut self, entry: &ArtifactEntry) -> Result<&xla::PjRtLoadedExecutable> {
+        let key = (entry.m, entry.n);
+        if !self.cache.contains_key(&key) {
+            let path = self.manifest.path_of(entry);
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("loading HLO text {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling bucket m={} n={}: {e}", entry.m, entry.n))?;
+            self.stats.compilations += 1;
+            self.stats.compile_time += t0.elapsed();
+            self.cache.insert(key, exe);
+        }
+        Ok(&self.cache[&key])
+    }
+
+    /// Execute a bucket on raw row-major buffers.
+    ///
+    /// `signals`: `m·dim` floats (padded by the caller to the bucket's m);
+    /// `units`: `n·dim` floats (padded with [`PAD_VALUE`]). Returns
+    /// `(i1, i2, d1, d2)` of length `m`.
+    pub fn execute(
+        &mut self,
+        entry: &ArtifactEntry,
+        signals: &[f32],
+        units: &[f32],
+    ) -> Result<(Vec<i32>, Vec<i32>, Vec<f32>, Vec<f32>)> {
+        let dim = entry.dim;
+        if signals.len() != entry.m * dim {
+            bail!("signals buffer {} != m*dim {}", signals.len(), entry.m * dim);
+        }
+        if units.len() != entry.n * dim {
+            bail!("units buffer {} != n*dim {}", units.len(), entry.n * dim);
+        }
+        // Borrow-split: compile first (mutable), then run readonly.
+        self.executable(entry)?;
+        let exe = &self.cache[&(entry.m, entry.n)];
+
+        let as_bytes = |x: &[f32]| -> &[u8] {
+            // Safety: f32 slice reinterpreted as bytes; alignment of u8 is 1.
+            unsafe { std::slice::from_raw_parts(x.as_ptr() as *const u8, x.len() * 4) }
+        };
+        let sig_lit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &[entry.m, dim],
+            as_bytes(signals),
+        )
+        .map_err(|e| anyhow!("signal literal: {e}"))?;
+        let unit_lit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &[entry.n, dim],
+            as_bytes(units),
+        )
+        .map_err(|e| anyhow!("unit literal: {e}"))?;
+
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(&[sig_lit, unit_lit])
+            .map_err(|e| anyhow!("PJRT execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("PJRT result sync: {e}"))?;
+        self.stats.executions += 1;
+        self.stats.exec_time += t0.elapsed();
+
+        // aot.py lowers with return_tuple=True: a 4-tuple (i1, i2, d1, d2).
+        let (i1, i2, d1, d2) = result
+            .to_tuple4()
+            .map_err(|e| anyhow!("result tuple: {e}"))?;
+        Ok((
+            i1.to_vec::<i32>().map_err(|e| anyhow!("i1: {e}"))?,
+            i2.to_vec::<i32>().map_err(|e| anyhow!("i2: {e}"))?,
+            d1.to_vec::<f32>().map_err(|e| anyhow!("d1: {e}"))?,
+            d2.to_vec::<f32>().map_err(|e| anyhow!("d2: {e}"))?,
+        ))
+    }
+
+    /// Pre-compile every bucket up to `max_n` (warm start for benches, so
+    /// compile time never pollutes phase timings).
+    pub fn warmup(&mut self, max_n: usize) -> Result<usize> {
+        let entries: Vec<ArtifactEntry> = self
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.flavor == self.flavor && a.n <= max_n)
+            .cloned()
+            .collect();
+        let count = entries.len();
+        for e in &entries {
+            self.executable(e)?;
+        }
+        Ok(count)
+    }
+}
+
+// Tests that need real artifacts live in rust/tests/pjrt_roundtrip.rs (they
+// require `make artifacts` to have run).
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_missing_dir_is_actionable() {
+        let err = match Registry::open(Path::new("/nonexistent/artifacts"), None) {
+            Ok(_) => panic!("open must fail on a missing directory"),
+            Err(e) => e.to_string(),
+        };
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,209 @@
+//! Growing Neural Gas (Fritzke 1995).
+//!
+//! Insertion is *scheduled*: every `lambda` signals a unit is inserted
+//! between the unit with the largest accumulated error and that unit's
+//! worst-error neighbor. Included for framework completeness (the paper
+//! discusses GNG as the main prior growing network and the GPU baselines
+//! [6], [18] parallelize it) and exercised by the `gng_clustering` example.
+
+use crate::geometry::Vec3;
+use crate::mesh::SurfaceSampler;
+use crate::rng::Rng;
+
+use super::network::{ChangeLog, Network, UnitId};
+use super::params::GngParams;
+use super::{GrowingNetwork, QeTracker, Winners};
+
+/// GNG algorithm state.
+pub struct Gng {
+    pub params: GngParams,
+    net: Network,
+    qe: QeTracker,
+    signals_seen: u64,
+    orphan_buf: Vec<UnitId>,
+}
+
+impl Gng {
+    pub fn new(params: GngParams) -> Self {
+        Self {
+            params,
+            net: Network::new(),
+            qe: QeTracker::new(0.001),
+            signals_seen: 0,
+            orphan_buf: Vec::new(),
+        }
+    }
+
+    /// Scheduled insertion: split the worst edge of the worst unit.
+    fn insert_scheduled(&mut self, log: &mut ChangeLog) {
+        if self.net.len() >= self.params.max_units {
+            return;
+        }
+        // Unit q with the largest accumulated error.
+        let q = match self
+            .net
+            .ids()
+            .max_by(|&a, &b| {
+                self.net
+                    .unit(a)
+                    .error
+                    .partial_cmp(&self.net.unit(b).error)
+                    .unwrap()
+            }) {
+            Some(q) => q,
+            None => return,
+        };
+        // Its neighbor f with the largest error.
+        let f = match self
+            .net
+            .edges_of(q)
+            .iter()
+            .map(|e| e.to)
+            .max_by(|&a, &b| {
+                self.net
+                    .unit(a)
+                    .error
+                    .partial_cmp(&self.net.unit(b).error)
+                    .unwrap()
+            }) {
+            Some(f) => f,
+            None => return,
+        };
+        let pos = (self.net.pos(q) + self.net.pos(f)) * 0.5;
+        let r = self.net.insert(pos, 0.0);
+        self.net.disconnect(q, f);
+        self.net.connect(q, r);
+        self.net.connect(r, f);
+        // Decay the split errors; seed the new unit's error.
+        let alpha = self.params.alpha;
+        self.net.unit_mut(q).error *= alpha;
+        self.net.unit_mut(f).error *= alpha;
+        let seed_err = (self.net.unit(q).error + self.net.unit(f).error) * 0.5;
+        self.net.unit_mut(r).error = seed_err;
+        log.inserted.push(r);
+    }
+}
+
+impl GrowingNetwork for Gng {
+    fn name(&self) -> &'static str {
+        "gng"
+    }
+
+    fn net(&self) -> &Network {
+        &self.net
+    }
+
+    fn net_mut(&mut self) -> &mut Network {
+        &mut self.net
+    }
+
+    fn init(&mut self, sampler: &SurfaceSampler, rng: &mut Rng) {
+        let a = self.net.insert(sampler.sample(rng), 0.0);
+        let b = self.net.insert(sampler.sample(rng), 0.0);
+        self.net.connect(a, b);
+    }
+
+    fn update(&mut self, signal: Vec3, w: &Winners, log: &mut ChangeLog) {
+        if !self.net.is_alive(w.w1) || !self.net.is_alive(w.w2) || w.w1 == w.w2 {
+            return;
+        }
+        self.signals_seen += 1;
+        self.qe.push(w.d1_sq);
+
+        // Standard GNG update.
+        self.net.age_edges_of(w.w1, 1.0);
+        self.net.unit_mut(w.w1).error += w.d1_sq;
+        let old = self.net.pos(w.w1);
+        let new = old + (signal - old) * self.params.adapt.eps_b;
+        self.net.set_pos(w.w1, new);
+        log.moved.push((w.w1, old));
+        let nbrs: Vec<UnitId> = self.net.edges_of(w.w1).iter().map(|e| e.to).collect();
+        for n in nbrs {
+            let old_n = self.net.pos(n);
+            let new_n = old_n + (signal - old_n) * self.params.adapt.eps_n;
+            self.net.set_pos(n, new_n);
+            log.moved.push((n, old_n));
+        }
+        self.net.connect(w.w1, w.w2);
+
+        self.orphan_buf.clear();
+        self.net
+            .prune_old_edges(w.w1, self.params.adapt.max_age, &mut self.orphan_buf);
+        for i in 0..self.orphan_buf.len() {
+            let o = self.orphan_buf[i];
+            if self.net.is_alive(o) && self.net.degree(o) == 0 && self.net.len() > 2 {
+                let pos = self.net.pos(o);
+                self.net.remove(o);
+                log.removed.push((o, pos));
+            }
+        }
+
+        // Scheduled insertion + global error decay.
+        if self.signals_seen % self.params.lambda == 0 {
+            self.insert_scheduled(log);
+        }
+        let beta = self.params.beta;
+        if beta > 0.0 {
+            let ids: Vec<UnitId> = self.net.ids().collect();
+            for id in ids {
+                self.net.unit_mut(id).error *= 1.0 - beta;
+            }
+        }
+    }
+
+    fn housekeeping(&mut self, _log: &mut ChangeLog) -> bool {
+        self.qe.value() < self.params.target_qe
+    }
+
+    fn quantization_error(&self) -> f32 {
+        self.qe.value()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::findwinners::{FindWinners, Scalar};
+    use crate::mesh::{benchmark_mesh, BenchmarkShape};
+
+    fn run_gng(signals: u64, lambda: u64) -> Gng {
+        let mesh = benchmark_mesh(BenchmarkShape::Eight, 24);
+        let sampler = SurfaceSampler::new(&mesh);
+        let mut rng = Rng::seed_from(3);
+        let mut gng = Gng::new(GngParams { lambda, ..GngParams::default() });
+        gng.init(&sampler, &mut rng);
+        let mut fw = Scalar::new();
+        let mut log = ChangeLog::default();
+        for _ in 0..signals {
+            let s = sampler.sample(&mut rng);
+            let w = fw.find2(gng.net(), s).unwrap();
+            log.clear();
+            gng.update(s, &w, &mut log);
+        }
+        gng
+    }
+
+    #[test]
+    fn grows_on_schedule() {
+        let gng = run_gng(2_000, 100);
+        // 2 seeds + one insertion per 100 signals (minus any orphan removals).
+        assert!(gng.net().len() > 15, "{} units", gng.net().len());
+        assert!(gng.net().len() <= 22);
+        gng.net().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn error_accumulates_on_winner() {
+        let mut gng = run_gng(50, 1_000_000); // no insertion
+        let total_error: f32 = gng.net().ids().map(|i| gng.net().unit(i).error).sum();
+        assert!(total_error > 0.0);
+        let _ = gng.housekeeping(&mut ChangeLog::default());
+    }
+
+    #[test]
+    fn qe_improves_with_growth() {
+        let early = run_gng(500, 100).quantization_error();
+        let late = run_gng(10_000, 100).quantization_error();
+        assert!(late < early, "late {late} vs early {early}");
+    }
+}

@@ -1,0 +1,223 @@
+//! Growing When Required (Marsland, Shapiro, Nehmzow 2002).
+//!
+//! Insertion is driven by *need*: when a habituated winner is still too far
+//! from the signal (distance above the insertion threshold), a new unit is
+//! created halfway between them. Termination: quantization-error EMA below
+//! target (the "threshold on the overall quantization error" criterion the
+//! paper attributes to most growing networks, §2.1).
+
+use crate::geometry::Vec3;
+use crate::mesh::SurfaceSampler;
+use crate::rng::Rng;
+
+use super::network::{ChangeLog, Network, UnitId};
+use super::params::GwrParams;
+use super::{GrowingNetwork, QeTracker, Winners};
+
+/// GWR algorithm state.
+pub struct Gwr {
+    pub params: GwrParams,
+    net: Network,
+    qe: QeTracker,
+    orphan_buf: Vec<UnitId>,
+}
+
+impl Gwr {
+    pub fn new(params: GwrParams) -> Self {
+        Self {
+            params,
+            net: Network::new(),
+            qe: QeTracker::new(0.001),
+            orphan_buf: Vec::new(),
+        }
+    }
+
+    /// Shared GWR-style update core, reused by SOAM (which layers its
+    /// threshold adaptation and topological termination on top).
+    ///
+    /// Returns `true` if the signal was applied (false = stale winners).
+    pub(super) fn gwr_update(
+        net: &mut Network,
+        params: &GwrParams,
+        signal: Vec3,
+        w: &Winners,
+        log: &mut ChangeLog,
+        orphan_buf: &mut Vec<UnitId>,
+        // SOAM: per-unit thresholds; GWR: the global one.
+        per_unit_threshold: bool,
+    ) -> bool {
+        if !net.is_alive(w.w1) || !net.is_alive(w.w2) || w.w1 == w.w2 {
+            return false; // stale winners (multi-signal batch)
+        }
+
+        // 1. Edge aging on the winner + competitive Hebbian edge w1–w2.
+        net.age_edges_of(w.w1, 1.0);
+        net.connect(w.w1, w.w2);
+
+        // 2. Insert or adapt.
+        let d1 = w.d1_sq.sqrt();
+        let threshold = if per_unit_threshold {
+            net.unit(w.w1).threshold
+        } else {
+            params.insertion_threshold
+        };
+        let habituated = params.hab.is_habituated(net.unit(w.w1).firing);
+        if d1 > threshold && habituated && net.len() < params.max_units {
+            // New unit halfway between winner and signal.
+            let pos = (net.pos(w.w1) + signal) * 0.5;
+            let new_threshold = if per_unit_threshold {
+                (net.unit(w.w1).threshold + net.unit(w.w2).threshold) * 0.5
+            } else {
+                params.insertion_threshold
+            };
+            let r = net.insert(pos, new_threshold);
+            net.connect(r, w.w1);
+            net.connect(r, w.w2);
+            net.disconnect(w.w1, w.w2);
+            log.inserted.push(r);
+        } else {
+            // Adapt winner and its topological neighbors (paper eq. (1)).
+            let hw = net.unit(w.w1).firing;
+            let mod_b = if params.adapt.firing_modulation { hw } else { 1.0 };
+            let old = net.pos(w.w1);
+            let new = old + (signal - old) * (params.adapt.eps_b * mod_b);
+            net.set_pos(w.w1, new);
+            log.moved.push((w.w1, old));
+
+            // Neighbor list is tiny; copy ids to release the borrow.
+            let nbrs: Vec<UnitId> = net.edges_of(w.w1).iter().map(|e| e.to).collect();
+            for n in nbrs {
+                let hn = net.unit(n).firing;
+                let mod_n = if params.adapt.firing_modulation { hn } else { 1.0 };
+                let old_n = net.pos(n);
+                let new_n = old_n + (signal - old_n) * (params.adapt.eps_n * mod_n);
+                net.set_pos(n, new_n);
+                log.moved.push((n, old_n));
+                let f = net.unit(n).firing;
+                net.unit_mut(n).firing = params.hab.fire_neighbor(f);
+            }
+            let f = net.unit(w.w1).firing;
+            net.unit_mut(w.w1).firing = params.hab.fire_winner(f);
+        }
+
+        // 3. Prune stale edges around the winner; drop orphaned units.
+        orphan_buf.clear();
+        net.prune_old_edges(w.w1, params.adapt.max_age, orphan_buf);
+        for i in 0..orphan_buf.len() {
+            let o = orphan_buf[i];
+            if net.is_alive(o) && net.degree(o) == 0 && net.len() > 2 {
+                let pos = net.pos(o);
+                net.remove(o);
+                log.removed.push((o, pos));
+            }
+        }
+        true
+    }
+
+    /// Seed with two units at random surface points (GWR §3 init).
+    pub(super) fn seed_two(net: &mut Network, sampler: &SurfaceSampler, rng: &mut Rng, threshold: f32) {
+        let a = net.insert(sampler.sample(rng), threshold);
+        let b = net.insert(sampler.sample(rng), threshold);
+        net.connect(a, b);
+    }
+}
+
+impl GrowingNetwork for Gwr {
+    fn name(&self) -> &'static str {
+        "gwr"
+    }
+
+    fn net(&self) -> &Network {
+        &self.net
+    }
+
+    fn net_mut(&mut self) -> &mut Network {
+        &mut self.net
+    }
+
+    fn init(&mut self, sampler: &SurfaceSampler, rng: &mut Rng) {
+        Self::seed_two(&mut self.net, sampler, rng, self.params.insertion_threshold);
+    }
+
+    fn update(&mut self, signal: Vec3, winners: &Winners, log: &mut ChangeLog) {
+        if Self::gwr_update(
+            &mut self.net,
+            &self.params,
+            signal,
+            winners,
+            log,
+            &mut self.orphan_buf,
+            false,
+        ) {
+            self.qe.push(winners.d1_sq);
+        }
+    }
+
+    fn housekeeping(&mut self, _log: &mut ChangeLog) -> bool {
+        self.qe.value() < self.params.target_qe
+    }
+
+    fn quantization_error(&self) -> f32 {
+        self.qe.value()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::findwinners::{FindWinners, Scalar};
+    use crate::mesh::{benchmark_mesh, BenchmarkShape};
+
+    fn run_gwr(signals: u64, threshold: f32) -> Gwr {
+        let mesh = benchmark_mesh(BenchmarkShape::Blob, 24);
+        let sampler = SurfaceSampler::new(&mesh);
+        let mut rng = Rng::seed_from(42);
+        let mut gwr = Gwr::new(GwrParams {
+            insertion_threshold: threshold,
+            ..GwrParams::default()
+        });
+        gwr.init(&sampler, &mut rng);
+        let mut fw = Scalar::new();
+        let mut log = ChangeLog::default();
+        for _ in 0..signals {
+            let s = sampler.sample(&mut rng);
+            let w = fw.find2(&gwr.net, s).unwrap();
+            log.clear();
+            gwr.update(s, &w, &mut log);
+        }
+        gwr
+    }
+
+    #[test]
+    fn grows_and_stays_consistent() {
+        let gwr = run_gwr(5_000, 0.1);
+        assert!(gwr.net().len() > 10, "only {} units", gwr.net().len());
+        gwr.net().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn smaller_threshold_more_units() {
+        let coarse = run_gwr(8_000, 0.15).net().len();
+        let fine = run_gwr(8_000, 0.06).net().len();
+        assert!(fine > coarse, "fine {fine} <= coarse {coarse}");
+    }
+
+    #[test]
+    fn quantization_error_decreases() {
+        let gwr = run_gwr(8_000, 0.08);
+        // After growth the EMA of squared winner distance must be well below
+        // the squared mesh diameter (~1 in the unit cube).
+        assert!(gwr.quantization_error() < 0.02, "{}", gwr.quantization_error());
+    }
+
+    #[test]
+    fn stale_winners_ignored() {
+        let mut gwr = run_gwr(500, 0.1);
+        let mut log = ChangeLog::default();
+        let dead = Winners { w1: 9999, w2: 0, d1_sq: 0.1, d2_sq: 0.2 };
+        let units_before = gwr.net().len();
+        gwr.update(Vec3::ZERO, &dead, &mut log);
+        assert_eq!(gwr.net().len(), units_before);
+        assert!(log.is_empty());
+    }
+}

@@ -1,0 +1,118 @@
+//! Habituation (firing-counter) dynamics, after Marsland's GWR.
+//!
+//! Each unit carries a habituation level `h ∈ (h_min, 1]` that decays every
+//! time the unit fires (wins or neighbors a winner):
+//!
+//! `dh/dt = τ · (α·(1 − h) − 1)`
+//!
+//! discretized with unit time step. `h` decays from 1 toward the fixed point
+//! `h* = 1 − 1/α < h_threshold`; a unit is *habituated* ("trained often
+//! enough that inserting next to it is meaningful") once `h < h_threshold`.
+//! Winners habituate faster than neighbors (`τ_b > τ_n`).
+
+/// Habituation parameters (defaults follow the GWR paper's regime).
+#[derive(Clone, Copy, Debug)]
+pub struct Habituation {
+    /// Curve steepness; fixed point is `1 − 1/alpha`.
+    pub alpha: f32,
+    /// Winner decay rate.
+    pub tau_b: f32,
+    /// Neighbor decay rate.
+    pub tau_n: f32,
+    /// A unit is habituated when `h < threshold`.
+    pub threshold: f32,
+}
+
+impl Default for Habituation {
+    fn default() -> Self {
+        Self { alpha: 1.05, tau_b: 0.3, tau_n: 0.1, threshold: 0.1 }
+    }
+}
+
+impl Habituation {
+    /// Fixed point of the decay (lowest reachable habituation).
+    pub fn floor(&self) -> f32 {
+        1.0 - 1.0 / self.alpha
+    }
+
+    /// One firing step at rate `tau`; returns the new level.
+    #[inline]
+    pub fn step(&self, h: f32, tau: f32) -> f32 {
+        (h + tau * (self.alpha * (1.0 - h) - 1.0)).max(self.floor())
+    }
+
+    #[inline]
+    pub fn fire_winner(&self, h: f32) -> f32 {
+        self.step(h, self.tau_b)
+    }
+
+    #[inline]
+    pub fn fire_neighbor(&self, h: f32) -> f32 {
+        self.step(h, self.tau_n)
+    }
+
+    #[inline]
+    pub fn is_habituated(&self, h: f32) -> bool {
+        h < self.threshold
+    }
+
+    /// Number of winner firings to habituate a fresh unit (used by tests
+    /// and to sanity-check parameter presets).
+    pub fn firings_to_habituate(&self) -> u32 {
+        let mut h = 1.0f32;
+        for k in 0..10_000 {
+            if self.is_habituated(h) {
+                return k;
+            }
+            h = self.fire_winner(h);
+        }
+        u32::MAX
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decays_monotonically_to_floor() {
+        let hab = Habituation::default();
+        let mut h = 1.0f32;
+        let mut prev = h;
+        for _ in 0..200 {
+            h = hab.fire_winner(h);
+            assert!(h <= prev);
+            prev = h;
+        }
+        assert!((h - hab.floor()).abs() < 1e-3);
+    }
+
+    #[test]
+    fn floor_below_threshold() {
+        // Habituation must be *reachable*: the fixed point lies below the
+        // habituated threshold.
+        let hab = Habituation::default();
+        assert!(hab.floor() < hab.threshold);
+    }
+
+    #[test]
+    fn winner_habituates_faster_than_neighbor() {
+        let hab = Habituation::default();
+        let w = hab.fire_winner(1.0);
+        let n = hab.fire_neighbor(1.0);
+        assert!(w < n);
+    }
+
+    #[test]
+    fn habituates_in_reasonable_firings() {
+        let k = Habituation::default().firings_to_habituate();
+        assert!((5..30).contains(&k), "{k} firings");
+    }
+
+    #[test]
+    fn fresh_unit_not_habituated() {
+        let hab = Habituation::default();
+        assert!(!hab.is_habituated(1.0));
+        assert!(hab.is_habituated(hab.floor() + 1e-4));
+    }
+}

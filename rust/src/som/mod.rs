@@ -1,0 +1,136 @@
+//! Growing self-organizing networks: the shared store, the three algorithms
+//! (GNG, GWR, SOAM) and the update-rule trait the drivers run against.
+//!
+//! The split mirrors the paper's §2.1: a growing network is the *basic
+//! iteration* `Sample → Find Winners → Update` where Sample and Find Winners
+//! are algorithm-independent (they live in [`crate::engine`] /
+//! [`crate::findwinners`]) and Update is the algorithm: aging + competitive
+//! Hebbian edges + adaptation + insertion/removal, `O(1)` per signal.
+
+mod gng;
+mod gwr;
+pub mod habituation;
+mod network;
+mod params;
+mod soam;
+
+pub use gng::Gng;
+pub use gwr::Gwr;
+pub use habituation::Habituation;
+pub use network::{ChangeLog, Edge, Network, Unit, UnitId, DEAD_POS};
+pub use params::{AdaptParams, GngParams, GwrParams, SoamParams};
+pub use soam::{Soam, SoamState};
+
+use crate::geometry::Vec3;
+use crate::mesh::SurfaceSampler;
+use crate::rng::Rng;
+
+/// Result of the Find Winners phase for one signal: the two nearest units
+/// and their *squared* distances (squared to stay bit-compatible with the
+/// L1 kernel; take `sqrt` only where the algorithm needs a length).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Winners {
+    pub w1: UnitId,
+    pub w2: UnitId,
+    pub d1_sq: f32,
+    pub d2_sq: f32,
+}
+
+/// The Update phase of a growing self-organizing network.
+///
+/// Implementations must treat `update` as *the single-signal update rule*:
+/// the multi-signal driver reproduces the paper's semantics by calling it
+/// sequentially under the winner-lock discipline (DESIGN.md §4), so any
+/// state an implementation keeps must be valid under interleaved signals.
+pub trait GrowingNetwork {
+    /// Algorithm name, as printed in reports.
+    fn name(&self) -> &'static str;
+
+    fn net(&self) -> &Network;
+
+    fn net_mut(&mut self) -> &mut Network;
+
+    /// Seed the network (usually two units at sampled positions).
+    fn init(&mut self, sampler: &SurfaceSampler, rng: &mut Rng);
+
+    /// Apply the update rule for one signal whose winners were already
+    /// found. `log` receives every structural change (for spatial-index
+    /// maintenance); implementations must append, not clear.
+    ///
+    /// `winners` may be stale under multi-signal batching (computed before
+    /// earlier signals of the same batch were applied); implementations
+    /// must ignore signals whose winners died (`Network::is_alive`).
+    fn update(&mut self, signal: Vec3, winners: &Winners, log: &mut ChangeLog);
+
+    /// Periodic housekeeping + convergence test (called every
+    /// `check_interval` signals by the drivers, NOT once per signal — the
+    /// scan is `O(N)`). Structural changes (e.g. SOAM's removal of
+    /// persistently under-connected units) are appended to `log` so spatial
+    /// indexes can follow. Returns `true` when the algorithm's termination
+    /// criterion is met.
+    fn housekeeping(&mut self, log: &mut ChangeLog) -> bool;
+
+    /// Running quantization error (EMA of the squared winner distance) —
+    /// the convergence measure of GNG/GWR and a reported metric for SOAM.
+    fn quantization_error(&self) -> f32;
+}
+
+/// Shared helper: exponential moving average of the quantization error.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct QeTracker {
+    ema: f32,
+    beta: f32,
+    samples: u64,
+}
+
+impl QeTracker {
+    pub fn new(beta: f32) -> Self {
+        Self { ema: f32::INFINITY, beta, samples: 0 }
+    }
+
+    #[inline]
+    pub fn push(&mut self, d_sq: f32) {
+        self.samples += 1;
+        if self.ema.is_infinite() {
+            self.ema = d_sq;
+        } else {
+            self.ema += self.beta * (d_sq - self.ema);
+        }
+    }
+
+    pub fn value(&self) -> f32 {
+        self.ema
+    }
+
+    #[allow(dead_code)]
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qe_tracker_converges_to_constant() {
+        let mut q = QeTracker::new(0.05);
+        for _ in 0..500 {
+            q.push(2.0);
+        }
+        assert!((q.value() - 2.0).abs() < 1e-3);
+        assert_eq!(q.samples(), 500);
+    }
+
+    #[test]
+    fn qe_tracker_tracks_drop() {
+        let mut q = QeTracker::new(0.1);
+        for _ in 0..100 {
+            q.push(10.0);
+        }
+        for _ in 0..200 {
+            q.push(1.0);
+        }
+        assert!(q.value() < 1.1);
+    }
+}

@@ -1,0 +1,533 @@
+//! The network store shared by all growing self-organizing algorithms.
+//!
+//! Units live in a slab with a free list so unit ids stay stable across
+//! removals (ids are what the winner-lock table, the hash index and the AOT
+//! batch buffers key on). Adjacency is a per-unit edge vector with ages —
+//! growing networks create, reset, age and destroy edges constantly, and the
+//! neighbor sets are small (≈6 on a 2-manifold), so linear scans beat hash
+//! sets here.
+
+use crate::geometry::Vec3;
+use crate::topology::{classify_link, LinkClass};
+
+/// Stable unit identifier (slab slot).
+pub type UnitId = u32;
+
+/// One unit of the network.
+#[derive(Clone, Copy, Debug)]
+pub struct Unit {
+    /// Reference vector in input space.
+    pub pos: Vec3,
+    /// Habituation / firing counter: 1 = fresh, decays toward ~0 as the
+    /// unit wins (see [`super::habituation`]).
+    pub firing: f32,
+    /// GNG-style accumulated quantization error.
+    pub error: f32,
+    /// SOAM per-unit insertion threshold (tracks local feature size).
+    pub threshold: f32,
+    pub alive: bool,
+}
+
+/// One directed half of an undirected aged edge.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Edge {
+    pub to: UnitId,
+    pub age: f32,
+}
+
+/// What an update did to the network — consumed by spatial-index
+/// maintenance and by the metrics layer. Reused across calls.
+#[derive(Clone, Debug, Default)]
+pub struct ChangeLog {
+    pub moved: Vec<(UnitId, Vec3)>, // (id, old position)
+    pub inserted: Vec<UnitId>,
+    pub removed: Vec<(UnitId, Vec3)>, // (id, last position)
+}
+
+impl ChangeLog {
+    pub fn clear(&mut self) {
+        self.moved.clear();
+        self.inserted.clear();
+        self.removed.clear();
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.moved.is_empty() && self.inserted.is_empty() && self.removed.is_empty()
+    }
+}
+
+/// Padding sentinel mirrored from the AOT contract: dead slots in the dense
+/// position array hold this value, so their squared distances overflow to
+/// `+inf` and they can never win a Find-Winners scan.
+pub const DEAD_POS: Vec3 = Vec3 { x: 1e30, y: 1e30, z: 1e30 };
+
+/// Slab-allocated unit graph.
+#[derive(Clone, Debug, Default)]
+pub struct Network {
+    units: Vec<Unit>,
+    adjacency: Vec<Vec<Edge>>,
+    free: Vec<UnitId>,
+    alive: usize,
+    edges: usize,
+    /// Dense position mirror (one row per slab slot, dead slots = DEAD_POS).
+    /// This is the hot-path view: the exhaustive/batched Find-Winners scans
+    /// walk this 12-byte-stride array instead of the 28-byte `Unit` slab
+    /// (~1.6× on the memory-bound scan), and `fill_positions` for the PJRT
+    /// marshalling is a straight copy of it.
+    positions: Vec<Vec3>,
+}
+
+impl Network {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of live units.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.alive
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.alive == 0
+    }
+
+    /// Number of undirected edges ("connections" in the paper's tables).
+    #[inline]
+    pub fn edge_count(&self) -> usize {
+        self.edges
+    }
+
+    /// Slab high-water mark: ids are always `< capacity()`. This is the `n`
+    /// the batched Find-Winners pads to.
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.units.len()
+    }
+
+    #[inline]
+    pub fn is_alive(&self, id: UnitId) -> bool {
+        (id as usize) < self.units.len() && self.units[id as usize].alive
+    }
+
+    #[inline]
+    pub fn unit(&self, id: UnitId) -> &Unit {
+        debug_assert!(self.is_alive(id), "dead unit {id}");
+        &self.units[id as usize]
+    }
+
+    #[inline]
+    pub fn unit_mut(&mut self, id: UnitId) -> &mut Unit {
+        debug_assert!(self.is_alive(id), "dead unit {id}");
+        &mut self.units[id as usize]
+    }
+
+    #[inline]
+    pub fn pos(&self, id: UnitId) -> Vec3 {
+        self.positions[id as usize]
+    }
+
+    /// Move a unit's reference vector (keeps the dense mirror in sync —
+    /// always use this instead of writing `unit_mut(id).pos`).
+    #[inline]
+    pub fn set_pos(&mut self, id: UnitId, p: Vec3) {
+        debug_assert!(self.is_alive(id));
+        self.units[id as usize].pos = p;
+        self.positions[id as usize] = p;
+    }
+
+    /// The dense position mirror (len == `capacity()`, dead slots =
+    /// [`DEAD_POS`]). The hot-path view for Find-Winners scans.
+    #[inline]
+    pub fn positions(&self) -> &[Vec3] {
+        &self.positions
+    }
+
+    /// Iterate live unit ids (slab order — deterministic).
+    pub fn ids(&self) -> impl Iterator<Item = UnitId> + '_ {
+        self.units
+            .iter()
+            .enumerate()
+            .filter(|(_, u)| u.alive)
+            .map(|(i, _)| i as UnitId)
+    }
+
+    /// Neighbors (with edge ages) of a live unit.
+    #[inline]
+    pub fn edges_of(&self, id: UnitId) -> &[Edge] {
+        &self.adjacency[id as usize]
+    }
+
+    pub fn degree(&self, id: UnitId) -> usize {
+        self.adjacency[id as usize].len()
+    }
+
+    pub fn has_edge(&self, a: UnitId, b: UnitId) -> bool {
+        self.adjacency[a as usize].iter().any(|e| e.to == b)
+    }
+
+    /// Insert a unit, reusing a free slot when available.
+    pub fn insert(&mut self, pos: Vec3, threshold: f32) -> UnitId {
+        let unit = Unit { pos, firing: 1.0, error: 0.0, threshold, alive: true };
+        self.alive += 1;
+        if let Some(id) = self.free.pop() {
+            self.units[id as usize] = unit;
+            self.positions[id as usize] = pos;
+            debug_assert!(self.adjacency[id as usize].is_empty());
+            id
+        } else {
+            self.units.push(unit);
+            self.positions.push(pos);
+            self.adjacency.push(Vec::new());
+            (self.units.len() - 1) as UnitId
+        }
+    }
+
+    /// Remove a unit and all its edges.
+    pub fn remove(&mut self, id: UnitId) {
+        debug_assert!(self.is_alive(id));
+        let nbrs: Vec<UnitId> = self.adjacency[id as usize].iter().map(|e| e.to).collect();
+        for n in nbrs {
+            self.disconnect(id, n);
+        }
+        self.units[id as usize].alive = false;
+        self.positions[id as usize] = DEAD_POS;
+        self.alive -= 1;
+        self.free.push(id);
+    }
+
+    /// Create the edge `a`–`b` (age 0) or reset its age if present.
+    /// This is the competitive-Hebbian step of the Update phase.
+    pub fn connect(&mut self, a: UnitId, b: UnitId) {
+        debug_assert!(a != b, "self edge on {a}");
+        debug_assert!(self.is_alive(a) && self.is_alive(b));
+        let mut found = false;
+        for e in &mut self.adjacency[a as usize] {
+            if e.to == b {
+                e.age = 0.0;
+                found = true;
+                break;
+            }
+        }
+        if found {
+            for e in &mut self.adjacency[b as usize] {
+                if e.to == a {
+                    e.age = 0.0;
+                    break;
+                }
+            }
+        } else {
+            self.adjacency[a as usize].push(Edge { to: b, age: 0.0 });
+            self.adjacency[b as usize].push(Edge { to: a, age: 0.0 });
+            self.edges += 1;
+        }
+    }
+
+    /// Remove the edge `a`–`b` if present.
+    pub fn disconnect(&mut self, a: UnitId, b: UnitId) {
+        let la = &mut self.adjacency[a as usize];
+        let before = la.len();
+        la.retain(|e| e.to != b);
+        if la.len() != before {
+            self.adjacency[b as usize].retain(|e| e.to != a);
+            self.edges -= 1;
+        }
+    }
+
+    /// Age all edges incident to `id` by `amount` (paper's aging mechanism;
+    /// the symmetric copies stay in sync).
+    pub fn age_edges_of(&mut self, id: UnitId, amount: f32) {
+        // Split borrows: collect targets first (degrees are tiny).
+        for k in 0..self.adjacency[id as usize].len() {
+            self.adjacency[id as usize][k].age += amount;
+            let to = self.adjacency[id as usize][k].to;
+            for e in &mut self.adjacency[to as usize] {
+                if e.to == id {
+                    e.age += amount;
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Drop edges of `id` older than `max_age`; returns neighbors that lost
+    /// their last edge (candidates for removal) into `orphans`.
+    pub fn prune_old_edges(&mut self, id: UnitId, max_age: f32, orphans: &mut Vec<UnitId>) {
+        let stale: Vec<UnitId> = self.adjacency[id as usize]
+            .iter()
+            .filter(|e| e.age > max_age)
+            .map(|e| e.to)
+            .collect();
+        for n in stale {
+            self.disconnect(id, n);
+            if self.adjacency[n as usize].is_empty() {
+                orphans.push(n);
+            }
+        }
+        if self.adjacency[id as usize].is_empty() {
+            orphans.push(id);
+        }
+    }
+
+    /// Classify the link (induced neighbor subgraph) of a unit.
+    pub fn link_class(&self, id: UnitId) -> LinkClass {
+        let nbrs: Vec<u32> = self.adjacency[id as usize].iter().map(|e| e.to).collect();
+        classify_link(&nbrs, |a, b| self.has_edge(a, b))
+    }
+
+    /// Adjacency as a hash map (for `topology::euler_characteristic` and
+    /// mesh export at convergence).
+    pub fn adjacency_map(&self) -> std::collections::HashMap<u32, Vec<u32>> {
+        self.ids()
+            .map(|id| (id, self.adjacency[id as usize].iter().map(|e| e.to).collect()))
+            .collect()
+    }
+
+    /// Export the reconstruction as a triangle mesh (3-cliques as faces).
+    pub fn to_mesh(&self) -> crate::mesh::Mesh {
+        let adj = self.adjacency_map();
+        let tris = crate::topology::triangles(&adj);
+        let vertices: Vec<Vec3> = (0..self.units.len())
+            .map(|i| self.units[i].pos)
+            .collect();
+        let mut mesh = crate::mesh::Mesh::new(vertices, tris);
+        mesh.compact();
+        mesh
+    }
+
+    /// Write live unit positions into a dense `[cap, 3]` f32 row-major
+    /// buffer, dead slots filled with `pad` (the AOT padding sentinel).
+    /// Returns the number of rows written (== `capacity()`).
+    pub fn fill_positions(&self, buf: &mut Vec<f32>, pad: f32) -> usize {
+        let cap = self.units.len();
+        buf.clear();
+        buf.reserve(cap * 3);
+        for (i, p) in self.positions.iter().enumerate() {
+            if self.units[i].alive {
+                buf.extend_from_slice(&[p.x, p.y, p.z]);
+            } else {
+                buf.extend_from_slice(&[pad, pad, pad]);
+            }
+        }
+        cap
+    }
+
+    /// Structural invariants (used by tests and the property harness):
+    /// symmetry, no self loops, no edges to dead units, consistent counts.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut alive = 0;
+        let mut halves = 0usize;
+        for (i, u) in self.units.iter().enumerate() {
+            let id = i as UnitId;
+            if u.alive {
+                alive += 1;
+            } else if !self.adjacency[i].is_empty() {
+                return Err(format!("dead unit {id} has edges"));
+            }
+            for e in &self.adjacency[i] {
+                halves += 1;
+                if e.to == id {
+                    return Err(format!("self edge on {id}"));
+                }
+                if !self.is_alive(e.to) {
+                    return Err(format!("edge {id}->{} to dead unit", e.to));
+                }
+                let back = self.adjacency[e.to as usize]
+                    .iter()
+                    .find(|r| r.to == id)
+                    .ok_or_else(|| format!("asymmetric edge {id}->{}", e.to))?;
+                if (back.age - e.age).abs() > 1e-5 {
+                    return Err(format!(
+                        "age mismatch on edge {id}<->{}: {} vs {}",
+                        e.to, e.age, back.age
+                    ));
+                }
+            }
+            // Duplicate neighbor check.
+            for (k, e) in self.adjacency[i].iter().enumerate() {
+                if self.adjacency[i][k + 1..].iter().any(|r| r.to == e.to) {
+                    return Err(format!("duplicate edge {id}->{}", e.to));
+                }
+            }
+        }
+        if alive != self.alive {
+            return Err(format!("alive count {} != {}", self.alive, alive));
+        }
+        if halves != 2 * self.edges {
+            return Err(format!("edge halves {halves} != 2*{}", self.edges));
+        }
+        if self.positions.len() != self.units.len() {
+            return Err(format!(
+                "position mirror len {} != slab len {}",
+                self.positions.len(),
+                self.units.len()
+            ));
+        }
+        for (i, u) in self.units.iter().enumerate() {
+            if u.alive && self.positions[i] != u.pos {
+                return Err(format!("position mirror diverged at slot {i}"));
+            }
+            if !u.alive && self.positions[i] != DEAD_POS {
+                return Err(format!("dead slot {i} not DEAD_POS in mirror"));
+            }
+        }
+        let mut free_seen = std::collections::HashSet::new();
+        for &f in &self.free {
+            if self.units[f as usize].alive {
+                return Err(format!("free slot {f} is alive"));
+            }
+            if !free_seen.insert(f) {
+                return Err(format!("slot {f} twice in free list"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(x: f32) -> Vec3 {
+        Vec3::new(x, 0.0, 0.0)
+    }
+
+    #[test]
+    fn insert_connect_counts() {
+        let mut n = Network::new();
+        let a = n.insert(v(0.0), 1.0);
+        let b = n.insert(v(1.0), 1.0);
+        let c = n.insert(v(2.0), 1.0);
+        n.connect(a, b);
+        n.connect(b, c);
+        assert_eq!(n.len(), 3);
+        assert_eq!(n.edge_count(), 2);
+        assert!(n.has_edge(a, b) && n.has_edge(b, a));
+        assert!(!n.has_edge(a, c));
+        n.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn connect_twice_resets_age() {
+        let mut n = Network::new();
+        let a = n.insert(v(0.0), 1.0);
+        let b = n.insert(v(1.0), 1.0);
+        n.connect(a, b);
+        n.age_edges_of(a, 5.0);
+        assert_eq!(n.edges_of(a)[0].age, 5.0);
+        n.connect(a, b);
+        assert_eq!(n.edges_of(a)[0].age, 0.0);
+        assert_eq!(n.edges_of(b)[0].age, 0.0);
+        assert_eq!(n.edge_count(), 1);
+        n.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn remove_unit_cleans_edges_and_reuses_slot() {
+        let mut n = Network::new();
+        let a = n.insert(v(0.0), 1.0);
+        let b = n.insert(v(1.0), 1.0);
+        let c = n.insert(v(2.0), 1.0);
+        n.connect(a, b);
+        n.connect(b, c);
+        n.remove(b);
+        assert_eq!(n.len(), 2);
+        assert_eq!(n.edge_count(), 0);
+        assert!(!n.is_alive(b));
+        n.check_invariants().unwrap();
+        let d = n.insert(v(3.0), 1.0);
+        assert_eq!(d, b, "slot reuse");
+        assert_eq!(n.capacity(), 3);
+        n.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn aging_is_symmetric() {
+        let mut n = Network::new();
+        let a = n.insert(v(0.0), 1.0);
+        let b = n.insert(v(1.0), 1.0);
+        let c = n.insert(v(2.0), 1.0);
+        n.connect(a, b);
+        n.connect(a, c);
+        n.age_edges_of(a, 1.5);
+        assert_eq!(n.edges_of(b)[0].age, 1.5);
+        assert_eq!(n.edges_of(c)[0].age, 1.5);
+        n.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prune_collects_orphans() {
+        let mut n = Network::new();
+        let a = n.insert(v(0.0), 1.0);
+        let b = n.insert(v(1.0), 1.0);
+        let c = n.insert(v(2.0), 1.0);
+        n.connect(a, b);
+        n.connect(a, c);
+        n.connect(b, c);
+        n.age_edges_of(a, 10.0); // ages a-b and a-c
+        let mut orphans = Vec::new();
+        n.prune_old_edges(a, 5.0, &mut orphans);
+        assert_eq!(n.edge_count(), 1); // b-c survives
+        assert_eq!(orphans, vec![a]); // a lost all edges
+        n.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fill_positions_pads_dead_slots() {
+        let mut n = Network::new();
+        let a = n.insert(v(1.0), 1.0);
+        let b = n.insert(v(2.0), 1.0);
+        let _c = n.insert(v(3.0), 1.0);
+        n.connect(a, b);
+        n.remove(b);
+        let mut buf = Vec::new();
+        let cap = n.fill_positions(&mut buf, 1e30);
+        assert_eq!(cap, 3);
+        assert_eq!(buf.len(), 9);
+        assert_eq!(buf[0], 1.0);
+        assert_eq!(buf[3], 1e30);
+        assert_eq!(buf[6], 3.0);
+    }
+
+    #[test]
+    fn link_class_of_triangle_fan() {
+        let mut n = Network::new();
+        let hub = n.insert(v(0.0), 1.0);
+        let r1 = n.insert(Vec3::new(1.0, 0.0, 0.0), 1.0);
+        let r2 = n.insert(Vec3::new(0.0, 1.0, 0.0), 1.0);
+        let r3 = n.insert(Vec3::new(-1.0, 0.0, 0.0), 1.0);
+        for r in [r1, r2, r3] {
+            n.connect(hub, r);
+        }
+        assert_eq!(n.link_class(hub), LinkClass::Dust);
+        n.connect(r1, r2);
+        n.connect(r2, r3);
+        assert_eq!(n.link_class(hub), LinkClass::HalfDisk);
+        n.connect(r3, r1);
+        assert_eq!(n.link_class(hub), LinkClass::Disk);
+    }
+
+    #[test]
+    fn to_mesh_exports_cliques() {
+        let mut n = Network::new();
+        let a = n.insert(Vec3::new(0.0, 0.0, 0.0), 1.0);
+        let b = n.insert(Vec3::new(1.0, 0.0, 0.0), 1.0);
+        let c = n.insert(Vec3::new(0.0, 1.0, 0.0), 1.0);
+        n.connect(a, b);
+        n.connect(b, c);
+        n.connect(c, a);
+        let m = n.to_mesh();
+        assert_eq!(m.faces.len(), 1);
+        assert_eq!(m.vertices.len(), 3);
+    }
+
+    #[test]
+    fn ids_iterates_alive_only() {
+        let mut n = Network::new();
+        let a = n.insert(v(0.0), 1.0);
+        let b = n.insert(v(1.0), 1.0);
+        n.remove(a);
+        let ids: Vec<UnitId> = n.ids().collect();
+        assert_eq!(ids, vec![b]);
+    }
+}

@@ -1,0 +1,141 @@
+//! Parameter sets for the three algorithms.
+//!
+//! Following the paper's experimental protocol (§3.1): "All the shared input
+//! parameters have been set to the same values for all the tests … only the
+//! crucial *insertion threshold* has been tuned for each mesh". The presets
+//! in `config::presets` do exactly that: one `AdaptParams`/`Habituation` for
+//! everything, a per-mesh `insertion_threshold`.
+
+use super::habituation::Habituation;
+
+/// Adaptation-law parameters shared by all algorithms (paper eq. (1)).
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptParams {
+    /// Winner learning rate ε_b (paper: ε_b ≫ ε_i).
+    pub eps_b: f32,
+    /// Neighbor learning rate ε_n.
+    pub eps_n: f32,
+    /// Edges older than this are pruned (aging mechanism, paper footnote 3).
+    pub max_age: f32,
+    /// Scale adaptation by the unit's habituation level (GWR-style): trained
+    /// units move less, which stabilizes the final triangulation.
+    pub firing_modulation: bool,
+}
+
+impl Default for AdaptParams {
+    fn default() -> Self {
+        Self { eps_b: 0.1, eps_n: 0.01, max_age: 250.0, firing_modulation: true }
+    }
+}
+
+/// Growing-When-Required (Marsland et al. 2002).
+#[derive(Clone, Copy, Debug)]
+pub struct GwrParams {
+    pub adapt: AdaptParams,
+    pub hab: Habituation,
+    /// Insert when the winner distance exceeds this and the winner is
+    /// habituated.
+    pub insertion_threshold: f32,
+    pub max_units: usize,
+    /// Converged when the quantization-error EMA drops below this.
+    pub target_qe: f32,
+}
+
+impl Default for GwrParams {
+    fn default() -> Self {
+        Self {
+            adapt: AdaptParams::default(),
+            hab: Habituation::default(),
+            insertion_threshold: 0.05,
+            max_units: 50_000,
+            target_qe: 1e-4,
+        }
+    }
+}
+
+/// Growing Neural Gas (Fritzke 1995).
+#[derive(Clone, Copy, Debug)]
+pub struct GngParams {
+    pub adapt: AdaptParams,
+    /// Insert a unit every `lambda` signals.
+    pub lambda: u64,
+    /// Error decay applied to the split units at insertion.
+    pub alpha: f32,
+    /// Global error decay per signal.
+    pub beta: f32,
+    pub max_units: usize,
+    /// Converged when the quantization-error EMA drops below this.
+    pub target_qe: f32,
+}
+
+impl Default for GngParams {
+    fn default() -> Self {
+        Self {
+            adapt: AdaptParams::default(),
+            lambda: 100,
+            alpha: 0.5,
+            beta: 0.0005,
+            max_units: 50_000,
+            target_qe: 1e-4,
+        }
+    }
+}
+
+/// Self-Organizing Adaptive Map (Piastra 2012) — GWR-style growth plus the
+/// topological state machine and the LFS-adaptive per-unit threshold.
+#[derive(Clone, Copy, Debug)]
+pub struct SoamParams {
+    pub adapt: AdaptParams,
+    pub hab: Habituation,
+    /// Initial (global) insertion threshold — the one knob tuned per mesh.
+    pub insertion_threshold: f32,
+    /// Multiplier applied to a unit's threshold while its link stays
+    /// non-manifold in a mature (fully habituated) neighborhood — the
+    /// optional LFS-refinement mechanism ("the threshold may vary … to
+    /// reflect the local feature size", §2.1). `1.0` disables it — the
+    /// DEFAULT, because with uniform dense sampling the calibrated initial
+    /// threshold already resolves every feature, and active decay measurably
+    /// drives runaway growth (units ∝ 1/threshold²): on the blob preset,
+    /// decay 0.97 ⇒ 3,749 units and no convergence in 2M signals; decay
+    /// off ⇒ 277 units, converged. See DESIGN.md §4.
+    pub threshold_decay: f32,
+    /// Per-unit thresholds never drop below
+    /// `threshold_floor_frac * insertion_threshold`.
+    pub threshold_floor_frac: f32,
+    pub max_units: usize,
+}
+
+impl Default for SoamParams {
+    fn default() -> Self {
+        Self {
+            adapt: AdaptParams::default(),
+            hab: Habituation::default(),
+            insertion_threshold: 0.08,
+            threshold_decay: 1.0,
+            threshold_floor_frac: 0.25,
+            max_units: 50_000,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let a = AdaptParams::default();
+        assert!(a.eps_b > a.eps_n * 5.0, "paper: eps_b >> eps_n");
+        let s = SoamParams::default();
+        assert!(s.threshold_decay <= 1.0 && s.threshold_decay > 0.5);
+        assert!(s.threshold_floor_frac > 0.0 && s.threshold_floor_frac < 1.0);
+        let g = GngParams::default();
+        assert!(g.alpha < 1.0 && g.beta < 1.0);
+    }
+
+    #[test]
+    fn habituation_reachable_for_defaults() {
+        let s = SoamParams::default();
+        assert!(s.hab.firings_to_habituate() < 50);
+    }
+}

@@ -1,0 +1,277 @@
+//! Local-topology classification of network neighborhoods.
+//!
+//! The SOAM termination criterion (paper §2.1) is *topological*: "the
+//! learning process terminates when all units have reached a local topology
+//! consistent with that of a surface". Concretely, a unit's neighborhood is
+//! surface-consistent when the subgraph *induced by its neighbors* (the
+//! link of the vertex) is a single closed cycle — then the unit's star is a
+//! triangulated disk. A single open chain is a half-disk (surface boundary);
+//! anything else is non-manifold or under-connected.
+//!
+//! This module is pure graph logic, independent of the network store, so it
+//! is reusable (and property-testable) in isolation.
+
+use std::collections::HashMap;
+
+/// Classification of the link (induced neighbor subgraph) of a unit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LinkClass {
+    /// No neighbors at all.
+    Isolated,
+    /// Neighbors exist but none are connected to each other.
+    Dust,
+    /// Single open chain through all neighbors — boundary of a surface
+    /// patch (half-disk).
+    HalfDisk,
+    /// Single closed cycle through all neighbors — interior point of a
+    /// 2-manifold (disk). The SOAM stability target.
+    Disk,
+    /// Anything else: branching (degree > 2), multiple components, or a
+    /// cycle plus extra chords — locally non-manifold.
+    NonManifold,
+}
+
+impl LinkClass {
+    /// Surface-consistent for a *closed* surface (the benchmark meshes are
+    /// all closed, so SOAM requires `Disk` everywhere).
+    pub fn is_disk(self) -> bool {
+        matches!(self, LinkClass::Disk)
+    }
+}
+
+/// Classify the link of a unit.
+///
+/// * `neighbors` — the unit's neighbor ids (any id type order).
+/// * `connected` — edge oracle over *neighbor pairs* (the global adjacency
+///   restricted to the link).
+pub fn classify_link(
+    neighbors: &[u32],
+    mut connected: impl FnMut(u32, u32) -> bool,
+) -> LinkClass {
+    let k = neighbors.len();
+    if k == 0 {
+        return LinkClass::Isolated;
+    }
+    if k == 1 {
+        // A single neighbor can form neither a chain of length ≥1 nor a
+        // cycle; treat as dust (under-connected).
+        return LinkClass::Dust;
+    }
+
+    // Induced adjacency (k is small — typically ≤ 10 — so O(k²) is right).
+    let mut degree = vec![0u32; k];
+    let mut adj: Vec<Vec<usize>> = vec![Vec::new(); k];
+    let mut edges = 0usize;
+    for i in 0..k {
+        for j in i + 1..k {
+            if connected(neighbors[i], neighbors[j]) {
+                degree[i] += 1;
+                degree[j] += 1;
+                adj[i].push(j);
+                adj[j].push(i);
+                edges += 1;
+            }
+        }
+    }
+    if edges == 0 {
+        return LinkClass::Dust;
+    }
+    if degree.iter().any(|&d| d > 2) {
+        return LinkClass::NonManifold;
+    }
+
+    // All degrees ≤ 2: the graph is a disjoint union of chains and cycles.
+    // Connectivity check over vertices with degree ≥ 1.
+    let mut seen = vec![false; k];
+    let start = (0..k).find(|&i| degree[i] > 0).unwrap();
+    let mut stack = vec![start];
+    seen[start] = true;
+    let mut reached = 1usize;
+    while let Some(v) = stack.pop() {
+        for &w in &adj[v] {
+            if !seen[w] {
+                seen[w] = true;
+                reached += 1;
+                stack.push(w);
+            }
+        }
+    }
+    let active = (0..k).filter(|&i| degree[i] > 0).count();
+    if reached < active || active < k {
+        // Multiple components, or isolated neighbors alongside a chain/cycle.
+        return LinkClass::NonManifold;
+    }
+
+    let endpoints = degree.iter().filter(|&&d| d == 1).count();
+    match endpoints {
+        0 => {
+            // Single component, all degree 2 ⇒ one cycle through all k.
+            // A cycle needs at least 3 vertices.
+            if k >= 3 {
+                LinkClass::Disk
+            } else {
+                // k == 2 with "all degree 2" would need a doubled edge —
+                // impossible in a simple graph; defensive fallback.
+                LinkClass::NonManifold
+            }
+        }
+        2 => LinkClass::HalfDisk,
+        _ => LinkClass::NonManifold,
+    }
+}
+
+/// Extract the triangle faces of a network graph: 3-cliques `(a, b, c)`
+/// with `a < b < c`. Used to compute the Euler characteristic of a SOAM
+/// reconstruction and verify its genus against the target mesh.
+pub fn triangles(adjacency: &HashMap<u32, Vec<u32>>) -> Vec<[u32; 3]> {
+    let mut tris = Vec::new();
+    for (&a, na) in adjacency {
+        for &b in na {
+            if b <= a {
+                continue;
+            }
+            let nb = match adjacency.get(&b) {
+                Some(n) => n,
+                None => continue,
+            };
+            for &c in na {
+                if c <= b {
+                    continue;
+                }
+                if nb.contains(&c) {
+                    tris.push([a, b, c]);
+                }
+            }
+        }
+    }
+    tris.sort_unstable();
+    tris.dedup();
+    tris
+}
+
+/// Euler characteristic `V − E + F` of a graph whose faces are its
+/// 3-cliques (valid when every face of the complex is a triangle, as in a
+/// SOAM reconstruction at convergence).
+pub fn euler_characteristic(adjacency: &HashMap<u32, Vec<u32>>) -> i64 {
+    let v = adjacency.len() as i64;
+    let e: i64 = adjacency.values().map(|n| n.len() as i64).sum::<i64>() / 2;
+    let f = triangles(adjacency).len() as i64;
+    v - e + f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn edge_set(edges: &[(u32, u32)]) -> impl FnMut(u32, u32) -> bool + '_ {
+        move |a, b| {
+            edges
+                .iter()
+                .any(|&(x, y)| (x == a && y == b) || (x == b && y == a))
+        }
+    }
+
+    #[test]
+    fn isolated_and_dust() {
+        assert_eq!(classify_link(&[], edge_set(&[])), LinkClass::Isolated);
+        assert_eq!(classify_link(&[1], edge_set(&[])), LinkClass::Dust);
+        assert_eq!(classify_link(&[1, 2, 3], edge_set(&[])), LinkClass::Dust);
+    }
+
+    #[test]
+    fn triangle_link_is_disk() {
+        // Neighbors 1,2,3 forming a cycle 1-2-3-1.
+        let edges = [(1, 2), (2, 3), (3, 1)];
+        assert_eq!(classify_link(&[1, 2, 3], edge_set(&edges)), LinkClass::Disk);
+    }
+
+    #[test]
+    fn square_link_is_disk() {
+        let edges = [(1, 2), (2, 3), (3, 4), (4, 1)];
+        assert_eq!(
+            classify_link(&[1, 2, 3, 4], edge_set(&edges)),
+            LinkClass::Disk
+        );
+    }
+
+    #[test]
+    fn chain_is_half_disk() {
+        let edges = [(1, 2), (2, 3), (3, 4)];
+        assert_eq!(
+            classify_link(&[1, 2, 3, 4], edge_set(&edges)),
+            LinkClass::HalfDisk
+        );
+        // Two neighbors joined by one edge: chain of length 1.
+        assert_eq!(classify_link(&[7, 9], edge_set(&[(7, 9)])), LinkClass::HalfDisk);
+    }
+
+    #[test]
+    fn branching_is_non_manifold() {
+        // Star: neighbor 1 connected to 2, 3, 4 (degree 3 in the link).
+        let edges = [(1, 2), (1, 3), (1, 4)];
+        assert_eq!(
+            classify_link(&[1, 2, 3, 4], edge_set(&edges)),
+            LinkClass::NonManifold
+        );
+    }
+
+    #[test]
+    fn two_components_non_manifold() {
+        let edges = [(1, 2), (3, 4)];
+        assert_eq!(
+            classify_link(&[1, 2, 3, 4], edge_set(&edges)),
+            LinkClass::NonManifold
+        );
+    }
+
+    #[test]
+    fn cycle_plus_isolated_neighbor_non_manifold() {
+        let edges = [(1, 2), (2, 3), (3, 1)];
+        assert_eq!(
+            classify_link(&[1, 2, 3, 4], edge_set(&edges)),
+            LinkClass::NonManifold
+        );
+    }
+
+    #[test]
+    fn cycle_with_chord_non_manifold() {
+        let edges = [(1, 2), (2, 3), (3, 4), (4, 1), (1, 3)];
+        assert_eq!(
+            classify_link(&[1, 2, 3, 4], edge_set(&edges)),
+            LinkClass::NonManifold
+        );
+    }
+
+    fn octahedron_adj() -> HashMap<u32, Vec<u32>> {
+        // Octahedron: 0/1 poles on x, 2/3 on y, 4/5 on z; every pair of
+        // non-opposite vertices is adjacent.
+        let mut adj: HashMap<u32, Vec<u32>> = HashMap::new();
+        let opposite = |v: u32| v ^ 1;
+        for a in 0..6u32 {
+            for b in 0..6u32 {
+                if a != b && b != opposite(a) {
+                    adj.entry(a).or_default().push(b);
+                }
+            }
+        }
+        adj
+    }
+
+    #[test]
+    fn octahedron_triangles_and_euler() {
+        let adj = octahedron_adj();
+        let tris = triangles(&adj);
+        assert_eq!(tris.len(), 8);
+        assert_eq!(euler_characteristic(&adj), 2); // sphere
+    }
+
+    #[test]
+    fn octahedron_links_are_disks() {
+        let adj = octahedron_adj();
+        for v in 0..6u32 {
+            let nbrs = adj[&v].clone();
+            let class = classify_link(&nbrs, |a, b| adj[&a].contains(&b));
+            assert_eq!(class, LinkClass::Disk, "vertex {v}");
+        }
+    }
+}

@@ -1,0 +1,192 @@
+//! End-to-end integration tests: full reconstructions across layers.
+
+use msgsn::config::{Algorithm, Driver, RunConfig};
+use msgsn::engine::{make_algorithm, make_findwinners, run, run_multi_signal, run_single_signal};
+use msgsn::mesh::{benchmark_mesh, BenchmarkShape, SurfaceSampler};
+use msgsn::rng::Rng;
+use msgsn::topology::euler_characteristic;
+
+/// A demo-scale config (2× threshold ⇒ ~1/4 the paper-size network).
+fn demo_cfg(shape: BenchmarkShape, max_signals: u64) -> RunConfig {
+    let mut cfg = RunConfig::preset(shape);
+    cfg.soam.insertion_threshold *= 2.0;
+    cfg.gwr.insertion_threshold *= 2.0;
+    cfg.limits.max_signals = max_signals;
+    cfg
+}
+
+#[test]
+fn soam_blob_converges_to_genus_zero() {
+    let mesh = benchmark_mesh(BenchmarkShape::Blob, 32);
+    let cfg = demo_cfg(BenchmarkShape::Blob, 4_000_000);
+    let sampler = SurfaceSampler::new(&mesh);
+    let mut algo = make_algorithm(&cfg);
+    let mut fw = make_findwinners(&cfg).unwrap();
+    let mut rng = Rng::seed_from(42);
+    let report = run_multi_signal(algo.as_mut(), &sampler, fw.as_mut(), &cfg.limits, &mut rng);
+    assert!(report.converged, "no convergence in {} signals", report.signals);
+    // At convergence the network is a closed triangulated 2-manifold of the
+    // source's genus (the paper's Fig. 1 property).
+    let adj = algo.net().adjacency_map();
+    let chi = euler_characteristic(&adj);
+    assert_eq!(chi, 2, "blob reconstruction must be a sphere (chi=2)");
+    algo.net().check_invariants().unwrap();
+    // Every unit's link is a closed cycle ⇒ degree ≥ 3 everywhere.
+    for id in algo.net().ids() {
+        assert!(algo.net().degree(id) >= 3, "unit {id} under-connected");
+    }
+}
+
+#[test]
+fn soam_eight_converges_to_genus_two() {
+    let mesh = benchmark_mesh(BenchmarkShape::Eight, 48);
+    let cfg = demo_cfg(BenchmarkShape::Eight, 8_000_000);
+    let sampler = SurfaceSampler::new(&mesh);
+    let mut algo = make_algorithm(&cfg);
+    let mut fw = make_findwinners(&cfg).unwrap();
+    let mut rng = Rng::seed_from(7);
+    let report = run_multi_signal(algo.as_mut(), &sampler, fw.as_mut(), &cfg.limits, &mut rng);
+    assert!(report.converged, "no convergence in {} signals", report.signals);
+    let adj = algo.net().adjacency_map();
+    let chi = euler_characteristic(&adj);
+    assert_eq!(chi, -2, "double torus reconstruction must have chi=-2 (genus 2)");
+}
+
+#[test]
+fn single_signal_converges_too() {
+    let mesh = benchmark_mesh(BenchmarkShape::Blob, 32);
+    let cfg = demo_cfg(BenchmarkShape::Blob, 4_000_000);
+    let sampler = SurfaceSampler::new(&mesh);
+    let mut algo = make_algorithm(&cfg);
+    let mut fw = make_findwinners(&cfg).unwrap();
+    let mut rng = Rng::seed_from(42);
+    let report = run_single_signal(algo.as_mut(), &sampler, fw.as_mut(), &cfg.limits, &mut rng);
+    assert!(report.converged);
+    assert_eq!(report.discarded, 0);
+    assert_eq!(report.signals, report.iterations);
+}
+
+#[test]
+fn multi_needs_fewer_effective_signals_than_single() {
+    // The paper's central behavioral claim (§3.2): "the Multi-signal variant
+    // always needs a substantially lower number of input signals than the
+    // Single-signal one to converge", counting effective (non-discarded)
+    // signals.
+    let mesh = benchmark_mesh(BenchmarkShape::Blob, 32);
+    let cfg = demo_cfg(BenchmarkShape::Blob, 6_000_000);
+    let mut r1 = Rng::seed_from(3);
+    let mut r2 = Rng::seed_from(3);
+    let single = run(&mesh, Driver::Single, &cfg, &mut r1).unwrap();
+    let multi = run(&mesh, Driver::Multi, &cfg, &mut r2).unwrap();
+    assert!(single.converged && multi.converged);
+    assert!(
+        multi.effective_signals() < single.signals,
+        "multi effective {} !< single {}",
+        multi.effective_signals(),
+        single.signals
+    );
+}
+
+#[test]
+fn indexed_converges_with_low_fallback_rate() {
+    let mesh = benchmark_mesh(BenchmarkShape::Blob, 32);
+    let cfg = demo_cfg(BenchmarkShape::Blob, 4_000_000);
+    let mut rng = Rng::seed_from(42);
+    let report = run(&mesh, Driver::Indexed, &cfg, &mut rng).unwrap();
+    assert!(report.converged);
+    assert!(report.units > 30);
+}
+
+#[test]
+fn gwr_reaches_target_quantization_error() {
+    let mesh = benchmark_mesh(BenchmarkShape::Blob, 24);
+    let mut cfg = demo_cfg(BenchmarkShape::Blob, 1_000_000);
+    cfg.algorithm = Algorithm::Gwr;
+    // Equilibrium qe ≈ (spacing/2)²; threshold 0.1 ⇒ qe ≈ 2e-3 < target.
+    cfg.gwr.insertion_threshold = 0.1;
+    cfg.gwr.target_qe = 4e-3;
+    cfg.limits.check_interval = 500;
+    let mut rng = Rng::seed_from(1);
+    let report = run(&mesh, Driver::Single, &cfg, &mut rng).unwrap();
+    assert!(report.converged, "GWR did not reach target qe: {}", report.qe);
+    assert!(report.qe < 4e-3);
+}
+
+#[test]
+fn gng_grows_and_reports() {
+    let mesh = benchmark_mesh(BenchmarkShape::Eight, 24);
+    let mut cfg = demo_cfg(BenchmarkShape::Eight, 100_000);
+    cfg.algorithm = Algorithm::Gng;
+    let mut rng = Rng::seed_from(2);
+    let report = run(&mesh, Driver::Multi, &cfg, &mut rng).unwrap();
+    assert!(report.units > 100, "{} units", report.units);
+    assert_eq!(report.algorithm, "gng");
+}
+
+#[test]
+fn mesh_generation_all_genera() {
+    // The four benchmark proxies must reproduce the paper meshes' genus
+    // exactly (DESIGN.md §3's substitution justification).
+    for shape in BenchmarkShape::ALL {
+        // Reduced resolutions keep this test fast but must still resolve
+        // every feature.
+        let res = match shape {
+            BenchmarkShape::Blob => 32,
+            BenchmarkShape::Eight => 48,
+            BenchmarkShape::Hand => 96,
+            BenchmarkShape::Heptoroid => 160,
+        };
+        let mesh = benchmark_mesh(shape, res);
+        let s = mesh.stats();
+        assert!(s.watertight, "{} not watertight", shape.name());
+        assert_eq!(s.components, 1, "{} fragmented", shape.name());
+        assert_eq!(
+            s.genus,
+            Some(shape.expected_genus()),
+            "{} genus mismatch: {s:?}",
+            shape.name()
+        );
+    }
+}
+
+#[test]
+fn reports_are_internally_consistent() {
+    let mesh = benchmark_mesh(BenchmarkShape::Blob, 24);
+    let mut cfg = demo_cfg(BenchmarkShape::Blob, 50_000);
+    cfg.limits.trace = true;
+    let mut rng = Rng::seed_from(5);
+    let r = run(&mesh, Driver::Multi, &cfg, &mut rng).unwrap();
+    assert!(r.discarded <= r.signals);
+    assert!(r.phase.total() <= r.total + std::time::Duration::from_millis(50));
+    assert!(!r.trace.is_empty(), "trace requested but empty");
+    let last = r.trace.last().unwrap();
+    assert_eq!(last.units, r.units);
+}
+
+#[test]
+fn lfs_profiles_match_paper_characterization() {
+    // Paper §3.1: Bunny "non-negligible variations"; Eight "relatively
+    // constant LFS almost everywhere"; Hand "widely variable … considerably
+    // low" in places; Heptoroid "low and variable". Our proxies must show
+    // the same ordering on both axes (absolute LFS and variation).
+    use msgsn::mesh::estimate_lfs;
+    use msgsn::rng::Rng;
+    let mut stats = std::collections::HashMap::new();
+    for shape in BenchmarkShape::ALL {
+        let mesh = benchmark_mesh(shape, 0);
+        let mut rng = Rng::seed_from(0xFEA7);
+        stats.insert(shape.name(), estimate_lfs(&mesh, 800, &mut rng));
+    }
+    let (blob, eight) = (stats["blob"], stats["eight"]);
+    let (hand, hepta) = (stats["hand"], stats["heptoroid"]);
+    // Eight: the most constant profile.
+    assert!(eight.cv < blob.cv && eight.cv < hand.cv, "{eight:?}");
+    // Hand: the widest variation, with very low regions.
+    assert!(hand.cv > blob.cv, "{hand:?} vs {blob:?}");
+    assert!(hand.p05 < eight.p05, "{hand:?}");
+    // Heptoroid: the lowest absolute feature size.
+    assert!(
+        hepta.median < blob.median.min(eight.median).min(hand.median),
+        "{hepta:?}"
+    );
+}

@@ -1,0 +1,172 @@
+//! PJRT round-trip: the AOT artifacts (python/jax/pallas → HLO text) loaded
+//! and executed from rust must agree EXACTLY with the in-rust reference
+//! implementations. This is the cross-layer seam of the whole system.
+//!
+//! Requires `make artifacts` (skips with a message otherwise).
+
+use std::path::{Path, PathBuf};
+
+use msgsn::findwinners::{BatchRust, FindWinners, Scalar};
+use msgsn::som::Winners;
+use msgsn::geometry::Vec3;
+use msgsn::rng::Rng;
+use msgsn::runtime::{PjrtFindWinners, Registry, PAD_VALUE};
+use msgsn::som::Network;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+fn random_network(n: usize, seed: u64) -> Network {
+    let mut rng = Rng::seed_from(seed);
+    let mut net = Network::new();
+    for _ in 0..n {
+        net.insert(Vec3::new(rng.f32(), rng.f32(), rng.f32()), 0.1);
+    }
+    net
+}
+
+fn random_signals(m: usize, seed: u64) -> Vec<Vec3> {
+    let mut rng = Rng::seed_from(seed);
+    (0..m).map(|_| Vec3::new(rng.f32(), rng.f32(), rng.f32())).collect()
+}
+
+
+/// Winner-index equality with distance tolerance (XLA FMA contraction can
+/// shift raw distance bits by ~1 ulp; indices must still agree — a flip
+/// would need two units equidistant to within 1 ulp).
+fn assert_winners_match(got: &[Option<Winners>], want: &[Option<Winners>]) {
+    assert_eq!(got.len(), want.len());
+    for (j, (g, w)) in got.iter().zip(want).enumerate() {
+        match (g, w) {
+            (None, None) => {}
+            (Some(g), Some(w)) => {
+                assert_eq!(g.w1, w.w1, "winner at {j}");
+                assert_eq!(g.w2, w.w2, "second at {j}");
+                assert!((g.d1_sq - w.d1_sq).abs() <= 1e-6 * w.d1_sq.max(1e-3));
+                assert!((g.d2_sq - w.d2_sq).abs() <= 1e-6 * w.d2_sq.max(1e-3));
+            }
+            _ => panic!("Some/None mismatch at {j}: {g:?} vs {w:?}"),
+        }
+    }
+}
+
+#[test]
+fn registry_opens_and_lists_buckets() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = Registry::open(&dir, None).unwrap();
+    assert!(reg.manifest().artifacts.len() >= 8);
+    let b = reg.bucket_for(100, 100).unwrap();
+    assert_eq!((b.m, b.n), (128, 128));
+}
+
+#[test]
+fn execute_matches_reference_both_flavors() {
+    let Some(dir) = artifacts_dir() else { return };
+    for flavor in ["pallas", "scan"] {
+        let mut reg = Registry::open(&dir, Some(flavor)).unwrap();
+        let entry = reg.bucket_for(128, 128).unwrap();
+        // 100 live signals / 90 live units inside a 128/128 bucket.
+        let signals = random_signals(100, 1);
+        let net = random_network(90, 2);
+        let mut sig_buf = Vec::new();
+        for s in &signals {
+            sig_buf.extend_from_slice(&[s.x, s.y, s.z]);
+        }
+        sig_buf.resize(entry.m * 3, 0.0);
+        let mut unit_buf = Vec::new();
+        net.fill_positions(&mut unit_buf, PAD_VALUE);
+        unit_buf.resize(entry.n * 3, PAD_VALUE);
+
+        let (i1, i2, d1, d2) = reg.execute(&entry, &sig_buf, &unit_buf).unwrap();
+        let mut scalar = Scalar::new();
+        for (j, s) in signals.iter().enumerate() {
+            let w = scalar.find2(&net, *s).unwrap();
+            assert_eq!(i1[j] as u32, w.w1, "{flavor} winner at {j}");
+            assert_eq!(i2[j] as u32, w.w2, "{flavor} second at {j}");
+            // XLA's LLVM backend contracts mul+add into FMA with
+            // lane-dependent grouping, so raw distance bits may differ by
+            // ~1 ulp from the rust expression (DESIGN.md section 7).
+            assert!((d1[j] - w.d1_sq).abs() <= 1e-6 * w.d1_sq.max(1e-3),
+                "{flavor} d1 at {j}: {} vs {}", d1[j], w.d1_sq);
+            assert!((d2[j] - w.d2_sq).abs() <= 1e-6 * w.d2_sq.max(1e-3),
+                "{flavor} d2 at {j}: {} vs {}", d2[j], w.d2_sq);
+        }
+    }
+}
+
+#[test]
+fn pjrt_findwinners_matches_batchrust_with_dead_slots() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut net = random_network(300, 3);
+    // Kill a third of the units: the slab now has PAD holes.
+    let ids: Vec<u32> = net.ids().collect();
+    for (k, id) in ids.iter().enumerate() {
+        if k % 3 == 0 {
+            net.remove(*id);
+        }
+    }
+    let signals = random_signals(333, 4);
+    let mut pjrt = PjrtFindWinners::new(Registry::open(&dir, None).unwrap());
+    let mut batch = BatchRust::default();
+    let mut got = Vec::new();
+    let mut want = Vec::new();
+    pjrt.find2_batch(&net, &signals, &mut got);
+    batch.find2_batch(&net, &signals, &mut want);
+    assert_winners_match(&got, &want);
+}
+
+#[test]
+fn pjrt_handles_tiny_network() {
+    let Some(dir) = artifacts_dir() else { return };
+    let net = random_network(2, 5);
+    let signals = random_signals(8, 6);
+    let mut pjrt = PjrtFindWinners::new(Registry::open(&dir, None).unwrap());
+    let mut got = Vec::new();
+    pjrt.find2_batch(&net, &signals, &mut got);
+    let mut scalar = Scalar::new();
+    let want: Vec<Option<Winners>> =
+        signals.iter().map(|s| scalar.find2(&net, *s)).collect();
+    assert_winners_match(&got, &want);
+}
+
+#[test]
+fn pjrt_one_live_unit_yields_none() {
+    let Some(dir) = artifacts_dir() else { return };
+    let net = random_network(1, 7);
+    let signals = random_signals(4, 8);
+    let mut pjrt = PjrtFindWinners::new(Registry::open(&dir, None).unwrap());
+    let mut got = Vec::new();
+    pjrt.find2_batch(&net, &signals, &mut got);
+    assert!(got.iter().all(|w| w.is_none()));
+}
+
+#[test]
+fn bucket_ladder_crossing_is_seamless() {
+    let Some(dir) = artifacts_dir() else { return };
+    // A network just past the 128 bucket boundary must route to 256.
+    let net = random_network(130, 9);
+    let signals = random_signals(130, 10);
+    let mut pjrt = PjrtFindWinners::new(Registry::open(&dir, None).unwrap());
+    let mut batch = BatchRust::default();
+    let mut got = Vec::new();
+    let mut want = Vec::new();
+    pjrt.find2_batch(&net, &signals, &mut got);
+    batch.find2_batch(&net, &signals, &mut want);
+    assert_winners_match(&got, &want);
+}
+
+#[test]
+fn warmup_precompiles() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut reg = Registry::open(&dir, Some("scan")).unwrap();
+    let n = reg.warmup(512).unwrap();
+    assert!(n >= 3, "expected at least 3 buckets <= 512, got {n}");
+    assert_eq!(reg.stats.compilations as usize, n);
+}

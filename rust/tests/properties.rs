@@ -1,0 +1,240 @@
+//! Property tests over the DESIGN.md §7 invariants, using the in-repo
+//! mini property harness (`msgsn::proptest`).
+
+use msgsn::coordinator::{LockTable, MSchedule};
+use msgsn::findwinners::{BatchRust, FindWinners, Indexed, Scalar};
+use msgsn::geometry::Vec3;
+use msgsn::mesh::{benchmark_mesh, BenchmarkShape, SurfaceSampler};
+use msgsn::proptest::{sized_usize, Prop};
+use msgsn::rng::Rng;
+use msgsn::som::{ChangeLog, GrowingNetwork, Network, Soam, SoamParams, Winners};
+
+fn random_net(rng: &mut Rng, n: usize) -> Network {
+    let mut net = Network::new();
+    for _ in 0..n {
+        net.insert(Vec3::new(rng.f32(), rng.f32(), rng.f32()), 0.1);
+    }
+    net
+}
+
+/// §7.1 — the m-schedule: least power of two strictly above the unit count,
+/// capped, for every unit count.
+#[test]
+fn prop_m_schedule() {
+    Prop::new(300, 1).run(
+        |rng, size| sized_usize(rng, size, 0, 100_000),
+        |&units| {
+            let m = MSchedule::default().m(units);
+            if !m.is_power_of_two() {
+                return Err(format!("m={m} not a power of two"));
+            }
+            if units < 8192 && m <= units {
+                return Err(format!("m={m} not strictly greater than {units}"));
+            }
+            if m > 8192 {
+                return Err(format!("m={m} exceeds the 8192 cap"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// §7.2 — within a batch no two applied signals share a winner.
+#[test]
+fn prop_lock_table_excludes_duplicates() {
+    Prop::new(100, 2).run(
+        |rng, size| {
+            let n = sized_usize(rng, size, 1, 500);
+            let winners: Vec<u32> = (0..n).map(|_| rng.below(50) as u32).collect();
+            winners
+        },
+        |winners| {
+            let mut locks = LockTable::new();
+            locks.next_batch();
+            let mut applied = Vec::new();
+            for &w in winners {
+                if locks.try_lock(w) {
+                    applied.push(w);
+                }
+            }
+            let mut dedup = applied.clone();
+            dedup.sort_unstable();
+            dedup.dedup();
+            if dedup.len() != applied.len() {
+                return Err("two applied signals share a winner".into());
+            }
+            // Every distinct winner is applied exactly once.
+            let mut distinct: Vec<u32> = winners.clone();
+            distinct.sort_unstable();
+            distinct.dedup();
+            if distinct.len() != applied.len() {
+                return Err(format!(
+                    "{} distinct winners but {} applied",
+                    distinct.len(),
+                    applied.len()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// §7.5 — every exact Find-Winners implementation agrees with Scalar.
+#[test]
+fn prop_findwinners_agreement() {
+    Prop::new(60, 3).run(
+        |rng, size| {
+            let units = sized_usize(rng, size, 2, 400);
+            let signals = sized_usize(rng, size, 1, 100);
+            let net = random_net(rng, units);
+            let sigs: Vec<Vec3> = (0..signals)
+                .map(|_| Vec3::new(rng.f32(), rng.f32(), rng.f32()))
+                .collect();
+            (net, sigs)
+        },
+        |(net, sigs)| {
+            let mut scalar = Scalar::new();
+            let mut batch = BatchRust::new(64);
+            let mut got = Vec::new();
+            batch.find2_batch(net, sigs, &mut got);
+            for (j, s) in sigs.iter().enumerate() {
+                let want = scalar.find2(net, *s);
+                if got[j] != want {
+                    return Err(format!("batch disagrees at {j}: {:?} vs {want:?}", got[j]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The Indexed variant is approximate, but its reported distance can never
+/// beat the true minimum, and its fallback path is exact.
+#[test]
+fn prop_indexed_never_beats_exhaustive() {
+    Prop::new(40, 4).run(
+        |rng, size| {
+            let units = sized_usize(rng, size, 2, 300);
+            let net = random_net(rng, units);
+            let sigs: Vec<Vec3> = (0..20)
+                .map(|_| Vec3::new(rng.f32(), rng.f32(), rng.f32()))
+                .collect();
+            (net, sigs)
+        },
+        |(net, sigs)| {
+            let mut idx = Indexed::new(0.12);
+            idx.rebuild(net);
+            let mut scalar = Scalar::new();
+            for s in sigs {
+                let a = idx.find2(net, *s).unwrap();
+                let b = scalar.find2(net, *s).unwrap();
+                if a.d1_sq + 1e-9 < b.d1_sq {
+                    return Err(format!("indexed {a:?} beats exhaustive {b:?}"));
+                }
+                if a.w1 == a.w2 {
+                    return Err("winner == second".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// §7.6 — network structural invariants hold after arbitrary random update
+/// streams through the real SOAM rule (including stale winners).
+#[test]
+fn prop_network_invariants_under_soam_updates() {
+    let mesh = benchmark_mesh(BenchmarkShape::Blob, 16);
+    let sampler = SurfaceSampler::new(&mesh);
+    Prop::new(25, 5).run(
+        |rng, size| {
+            let steps = sized_usize(rng, size, 10, 3_000);
+            (rng.next_u64(), steps)
+        },
+        |&(seed, steps)| {
+            let mut rng = Rng::seed_from(seed);
+            let mut soam = Soam::new(SoamParams {
+                insertion_threshold: 0.15,
+                ..SoamParams::default()
+            });
+            soam.init(&sampler, &mut rng);
+            let mut fw = Scalar::new();
+            let mut log = ChangeLog::default();
+            for k in 0..steps {
+                let s = sampler.sample(&mut rng);
+                let mut w = fw.find2(soam.net(), s).unwrap();
+                // Occasionally feed stale/garbage winners — they must be
+                // ignored, never corrupt the store.
+                if k % 97 == 13 {
+                    w = Winners { w1: 9_999_999, w2: w.w2, d1_sq: 0.0, d2_sq: 0.1 };
+                }
+                log.clear();
+                soam.update(s, &w, &mut log);
+                // Moved/inserted/removed ids must reference real slots.
+                for &(id, _) in &log.moved {
+                    if !soam.net().is_alive(id) && !log.removed.iter().any(|&(r, _)| r == id) {
+                        return Err(format!("moved id {id} neither alive nor removed"));
+                    }
+                }
+            }
+            log.clear();
+            soam.housekeeping(&mut log);
+            soam.net().check_invariants().map_err(|e| format!("after {steps} steps: {e}"))
+        },
+    );
+}
+
+/// §7.3 — applied + discarded = m for every batch (checked through the
+/// public driver on varying caps).
+#[test]
+fn prop_signal_accounting() {
+    let mesh = benchmark_mesh(BenchmarkShape::Blob, 16);
+    Prop::new(10, 6).run(
+        |rng, size| {
+            let cap = sized_usize(rng, size, 1_000, 40_000) as u64;
+            (rng.next_u64(), cap)
+        },
+        |&(seed, cap)| {
+            use msgsn::config::{Driver, RunConfig};
+            let mut cfg = RunConfig::preset(BenchmarkShape::Blob);
+            cfg.soam.insertion_threshold = 0.2;
+            cfg.limits.max_signals = cap;
+            let mut rng = Rng::seed_from(seed);
+            let r = msgsn::engine::run(&mesh, Driver::Multi, &cfg, &mut rng)
+                .map_err(|e| e.to_string())?;
+            if r.discarded > r.signals {
+                return Err(format!("discarded {} > signals {}", r.discarded, r.signals));
+            }
+            if r.signals < cap {
+                // Can only stop early by converging.
+                if !r.converged {
+                    return Err("stopped early without convergence".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Sampler outputs always lie on the source surface (barycentric hull).
+#[test]
+fn prop_sampler_on_surface() {
+    let mesh = benchmark_mesh(BenchmarkShape::Eight, 20);
+    let sampler = SurfaceSampler::new(&mesh);
+    let bounds = mesh.bounds().inflated(1e-4);
+    Prop::new(50, 7).run(
+        |rng, _| {
+            let mut r2 = Rng::seed_from(rng.next_u64());
+            sampler.sample(&mut r2)
+        },
+        |p| {
+            if !p.is_finite() {
+                return Err("non-finite sample".into());
+            }
+            if !bounds.contains(*p) {
+                return Err(format!("sample {p:?} outside mesh bounds"));
+            }
+            Ok(())
+        },
+    );
+}
