@@ -15,6 +15,10 @@ fn main() -> anyhow::Result<()> {
     } else {
         eprintln!("note: artifacts/ missing — pjrt column skipped");
     }
+    // The Update-phase drivers (same semantics as `multi`; the interesting
+    // columns are Update wall time and, for pipelined, residual Sample).
+    drivers.push(Driver::Pipelined);
+    drivers.push(Driver::Parallel);
 
     println!("end-to-end smoke grid (blob + eight):");
     let grid = run_grid(
@@ -31,9 +35,10 @@ fn main() -> anyhow::Result<()> {
         for &d in &drivers {
             let r = grid.get(shape, d).unwrap();
             println!(
-                "  {:8} {:>9.3}s  ({} units, find {:.0}% of time)",
+                "  {:9} {:>9.3}s  (update {:>7.3}s, {} units, find {:.0}% of time)",
                 d.name(),
                 r.total.as_secs_f64(),
+                r.phase.update.as_secs_f64(),
                 r.units,
                 100.0 * r.phase.find_fraction(),
             );

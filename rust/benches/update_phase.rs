@@ -9,7 +9,7 @@ use std::time::{Duration, Instant};
 
 use msgsn::config::Limits;
 use msgsn::coordinator::{run_pipelined, LockTable};
-use msgsn::engine::run_multi_signal;
+use msgsn::engine::{run_multi_signal, run_parallel};
 use msgsn::findwinners::{BatchRust, FindWinners, Scalar};
 use msgsn::mesh::{benchmark_mesh, BenchmarkShape, SurfaceSampler};
 use msgsn::rng::Rng;
@@ -88,9 +88,10 @@ fn main() {
         println!("\nlock table: {:.2} ns per try_lock (batch of 8192)", per * 1e9);
     }
 
-    // 3. Pipelined vs plain multi driver (Sample/Update overlap).
-    println!("\npipelined sample-prefetch vs plain multi (30k signals, blob):");
-    for name in ["multi", "pipelined"] {
+    // 3. Update-phase drivers: plain multi vs pipelined (Sample/Update
+    //    overlap) vs parallel (threaded plan pass).
+    println!("\nupdate-phase drivers (300k signals, blob):");
+    for name in ["multi", "pipelined", "parallel"] {
         let mut rng = Rng::seed_from(5);
         let mut soam = Soam::new(SoamParams {
             insertion_threshold: 0.1,
@@ -99,20 +100,22 @@ fn main() {
         let mut fw = BatchRust::default();
         let limits = Limits { max_signals: 300_000, ..Limits::default() };
         let t0 = Instant::now();
-        let r = if name == "multi" {
-            run_multi_signal(&mut soam, &sampler, &mut fw, &limits, &mut rng)
-        } else {
-            run_pipelined(&mut soam, &sampler, &mut fw, &limits, &mut rng, 2)
+        let r = match name {
+            "multi" => run_multi_signal(&mut soam, &sampler, &mut fw, &limits, &mut rng),
+            "pipelined" => run_pipelined(&mut soam, &sampler, &mut fw, &limits, &mut rng, 2),
+            _ => run_parallel(&mut soam, &sampler, &mut fw, &limits, &mut rng, 0),
         };
         println!(
-            "  {:10} {:>8.3}s total  sample {:>7.3}s  find {:>7.3}s  update {:>7.3}s ({} units)",
+            "  {:10} {:>8.3}s total  sample {:>7.3}s  find {:>7.3}s  update {:>7.3}s ({} units, {} discarded)",
             name,
             t0.elapsed().as_secs_f64(),
             r.phase.sample.as_secs_f64(),
             r.phase.find.as_secs_f64(),
             r.phase.update.as_secs_f64(),
             r.units,
+            r.discarded,
         );
     }
-    println!("\n(pipelined: the Sample row is residual wait time — overlap hides the rest)");
+    println!("\n(pipelined: the Sample row is residual wait time — overlap hides the rest;");
+    println!(" parallel: identical units/discards to multi by construction)");
 }

@@ -10,7 +10,8 @@
 
 use anyhow::Result;
 
-use crate::config::Limits;
+use crate::config::{Driver, Limits, RunConfig};
+use crate::coordinator::InsertedGuard;
 use crate::engine::RunReport;
 use crate::findwinners::{BatchRust, FindWinners, Indexed, Scalar};
 use crate::geometry::Vec3;
@@ -56,7 +57,7 @@ pub fn run_multi_with_policy(
     let mut signals: Vec<Vec3> = Vec::new();
     let mut winners: Vec<Option<Winners>> = Vec::new();
     let mut order: Vec<u32> = Vec::new();
-    let mut batch_inserted: Vec<Vec3> = Vec::new();
+    let mut batch_inserted = InsertedGuard::new();
 
     loop {
         report.iterations += 1;
@@ -83,9 +84,7 @@ pub fn run_multi_with_policy(
                 report.discarded += 1;
                 continue;
             }
-            if policy.staleness_guard
-                && batch_inserted.iter().any(|p| signal.dist2(*p) < w.d1_sq)
-            {
+            if policy.staleness_guard && batch_inserted.supersedes(signal, w.d1_sq) {
                 report.discarded += 1;
                 continue;
             }
@@ -181,6 +180,48 @@ pub fn ablate_m_schedule(max_signals: u64, seed: u64) -> Table {
     run("fixed m = 1024", Some(1024));
     run("fixed m = 8192", Some(8192));
     t
+}
+
+/// Ablation 4: the Update-phase execution strategy — the same multi-signal
+/// semantics run sequentially (`multi`), with the Sample phase prefetched
+/// (`pipelined`), and with the threaded plan/commit split (`parallel`).
+/// Units/connections/discards must agree for `multi` vs `parallel` (bit
+/// parity by construction); the Update column shows where the time goes.
+pub fn ablate_update_executor(max_signals: u64, seed: u64) -> Result<Table> {
+    let mesh = benchmark_mesh(BenchmarkShape::Blob, 32);
+    let mut cfg = RunConfig::preset(BenchmarkShape::Blob);
+    cfg.soam.insertion_threshold = 0.15;
+    cfg.limits.max_signals = max_signals;
+    let mut t = Table::new(&[
+        "driver", "threads", "converged", "units", "connections", "discarded",
+        "update_s", "total_s",
+    ]);
+    let runs: [(Driver, usize); 4] = [
+        (Driver::Multi, 1),
+        (Driver::Pipelined, 1),
+        (Driver::Parallel, 1),
+        (Driver::Parallel, 0), // auto-detect
+    ];
+    for (driver, update_threads) in runs {
+        cfg.update_threads = update_threads;
+        let mut rng = Rng::seed_from(seed);
+        let r = crate::engine::run(&mesh, driver, &cfg, &mut rng)?;
+        t.row(vec![
+            driver.name().into(),
+            if driver == Driver::Parallel && update_threads == 0 {
+                "auto".into()
+            } else {
+                update_threads.to_string()
+            },
+            r.converged.to_string(),
+            r.units.to_string(),
+            r.connections.to_string(),
+            r.discarded.to_string(),
+            format!("{:.3}", r.phase.update.as_secs_f64()),
+            format!("{:.3}", r.total.as_secs_f64()),
+        ]);
+    }
+    Ok(t)
 }
 
 /// Ablation 3: the Indexed variant's cube size (the paper tunes it "for

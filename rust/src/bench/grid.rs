@@ -154,6 +154,32 @@ mod tests {
     }
 
     #[test]
+    fn smoke_grid_update_phase_drivers() {
+        // The comparison grid must carry the pipelined/parallel columns,
+        // and parallel must agree with multi cell-for-cell (same semantics).
+        let grid = run_grid(
+            &[BenchmarkShape::Blob],
+            &[Driver::Multi, Driver::Pipelined, Driver::Parallel],
+            &Scale::SMOKE,
+            3,
+            None,
+            |_| {},
+        )
+        .unwrap();
+        assert_eq!(grid.cells.len(), 3);
+        let multi = grid.get(BenchmarkShape::Blob, Driver::Multi).unwrap();
+        let par = grid.get(BenchmarkShape::Blob, Driver::Parallel).unwrap();
+        assert_eq!(multi.units, par.units);
+        assert_eq!(multi.connections, par.connections);
+        assert_eq!(multi.discarded, par.discarded);
+        let pipe = grid.get(BenchmarkShape::Blob, Driver::Pipelined).unwrap();
+        assert!(pipe.units > 4);
+        let csv = grid.to_csv();
+        assert!(csv.contains("blob,pipelined,smoke"));
+        assert!(csv.contains("blob,parallel,smoke"));
+    }
+
+    #[test]
     fn shapes_listed_in_order() {
         let grid = run_grid(
             &[BenchmarkShape::Blob, BenchmarkShape::Eight],

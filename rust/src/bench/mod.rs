@@ -19,7 +19,10 @@ pub mod grid;
 pub mod render;
 pub mod scale;
 
-pub use ablate::{ablate_collision_policy, ablate_index_cell, ablate_m_schedule, MultiPolicy};
+pub use ablate::{
+    ablate_collision_policy, ablate_index_cell, ablate_m_schedule, ablate_update_executor,
+    MultiPolicy,
+};
 pub use grid::{Grid, GridCell};
 pub use render::{render_figure, render_table, write_all};
 pub use scale::Scale;

@@ -28,12 +28,16 @@ pub fn table_shape(table: u32) -> Option<BenchmarkShape> {
     }
 }
 
-/// Drivers in the paper's column order.
-const COLUMNS: [Driver; 4] = [
+/// Drivers in the paper's column order, then this reproduction's two
+/// Update-phase drivers. A driver absent from the grid is skipped, so
+/// paper-only grids still render the paper's four columns exactly.
+const COLUMNS: [Driver; 6] = [
     Driver::Single,
     Driver::Indexed,
     Driver::Multi,
     Driver::Pjrt,
+    Driver::Pipelined,
+    Driver::Parallel,
 ];
 
 fn secs(r: &RunReport) -> f64 {

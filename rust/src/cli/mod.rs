@@ -38,11 +38,12 @@ msgsn — multi-signal growing self-organizing networks (paper reproduction)
 USAGE:
   msgsn run [OPTIONS]            one reconstruction run, report to stdout
       --mesh <blob|eight|hand|heptoroid>   benchmark cloud     [blob]
-      --driver <single|indexed|multi|pjrt|pipelined>           [single]
+      --driver <single|indexed|multi|pjrt|pipelined|parallel>  [single]
       --algorithm <soam|gwr|gng>                               [soam]
       --seed <N>                                               [42]
       --config <file.toml>       load config file
-      --set <key=value>          override any config key (repeatable)
+      --set <key=value>          override any config key (repeatable;
+                                 e.g. queue_depth=4, update_threads=8)
       --max-signals <N>          safety cap
       --trace                    record trace points
       --save-mesh <out.obj>      write the reconstructed network mesh
@@ -52,6 +53,7 @@ USAGE:
       --table <1|2|3|4>          one table (repeatable)
       --figure <2|7|8|9|10>      one figure (repeatable)
       --all                      every table and figure
+      --paper-only               only the paper's four driver columns
       --scale <smoke|quick|paper>  workload scale              [quick]
       --out <dir>                results directory             [results]
       --seed <N>                                               [42]
@@ -69,7 +71,7 @@ USAGE:
       --warmup-n <N>             pre-compile buckets up to n=N
 
   msgsn ablate [OPTIONS]         ablation studies (DESIGN.md section 6)
-      --which <locks|schedule|cell|all>                        [all]
+      --which <locks|schedule|cell|executor|all>               [all]
       --max-signals <N>          per-run cap                   [400000]
       --seed <N>                                               [42]
 
@@ -93,7 +95,7 @@ pub fn parse(args: &[String]) -> Result<Command, ArgError> {
         "reproduce" => Ok(Command::Reproduce(parser::parse_flags(
             rest,
             &["table", "figure", "scale", "out", "seed", "set"],
-            &["all"],
+            &["all", "paper-only"],
         )?)),
         "mesh" => Ok(Command::Mesh(parser::parse_flags(
             rest,

@@ -13,7 +13,9 @@ use std::path::PathBuf;
 use crate::mesh::BenchmarkShape;
 use crate::som::{GngParams, GwrParams, SoamParams};
 
-/// The four experimental columns of the paper (§3.1).
+/// The four experimental columns of the paper (§3.1) plus this
+/// reproduction's two Update-phase drivers (the paper's named future work:
+/// "the parallelization of the Update phase").
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Driver {
     /// Reference single-signal implementation (exhaustive Find Winners).
@@ -25,10 +27,28 @@ pub enum Driver {
     /// Multi-signal with the batched Find Winners executed from the AOT
     /// artifact on the PJRT runtime (the paper's GPU-based column).
     Pjrt,
+    /// Multi-signal with the Sample phase of batch k+1 prefetched on a
+    /// sampler thread while batch k updates (`queue_depth` backpressure).
+    Pipelined,
+    /// Multi-signal with the Update phase split into a sequential admission
+    /// pass and a multi-threaded plan pass over conflict-disjoint winner
+    /// groups (`update_threads` workers, deterministic by construction).
+    Parallel,
 }
 
 impl Driver {
-    pub const ALL: [Driver; 4] = [Driver::Single, Driver::Indexed, Driver::Multi, Driver::Pjrt];
+    pub const ALL: [Driver; 6] = [
+        Driver::Single,
+        Driver::Indexed,
+        Driver::Multi,
+        Driver::Pjrt,
+        Driver::Pipelined,
+        Driver::Parallel,
+    ];
+
+    /// The paper's four experimental columns (§3.1), in table order.
+    pub const PAPER_COLUMNS: [Driver; 4] =
+        [Driver::Single, Driver::Indexed, Driver::Multi, Driver::Pjrt];
 
     pub fn name(self) -> &'static str {
         match self {
@@ -36,16 +56,21 @@ impl Driver {
             Driver::Indexed => "indexed",
             Driver::Multi => "multi",
             Driver::Pjrt => "pjrt",
+            Driver::Pipelined => "pipelined",
+            Driver::Parallel => "parallel",
         }
     }
 
-    /// Paper column header this driver reproduces.
+    /// Paper column header this driver reproduces (the two Update-phase
+    /// drivers are this reproduction's additions, not paper columns).
     pub fn paper_name(self) -> &'static str {
         match self {
             Driver::Single => "Single-signal",
             Driver::Indexed => "Indexed",
             Driver::Multi => "Multi-signal",
             Driver::Pjrt => "GPU-based",
+            Driver::Pipelined => "Pipelined (ours)",
+            Driver::Parallel => "Parallel (ours)",
         }
     }
 
@@ -55,12 +80,18 @@ impl Driver {
             "indexed" => Some(Driver::Indexed),
             "multi" => Some(Driver::Multi),
             "pjrt" | "gpu" => Some(Driver::Pjrt),
+            "pipelined" => Some(Driver::Pipelined),
+            "parallel" => Some(Driver::Parallel),
             _ => None,
         }
     }
 
+    /// Every name [`Driver::from_name`] accepts (keep in sync with the CLI
+    /// help and the `driver` config-key error).
+    pub const NAMES: &'static str = "single|indexed|multi|pjrt|pipelined|parallel";
+
     pub fn is_multi_signal(self) -> bool {
-        matches!(self, Driver::Multi | Driver::Pjrt)
+        !matches!(self, Driver::Single | Driver::Indexed)
     }
 }
 
@@ -131,6 +162,13 @@ pub struct RunConfig {
     pub index_cell: f32,
     /// Unit-tile length for `BatchRust`.
     pub batch_tile: usize,
+    /// Sampler prefetch depth for the `Pipelined` driver (how many batches
+    /// the sampler thread may run ahead; ≥ 1).
+    pub queue_depth: usize,
+    /// Worker threads for the `Parallel` driver's Update plan pass
+    /// (0 = auto-detect, 1 = sequential; results are identical for any
+    /// value by construction).
+    pub update_threads: usize,
     /// Where the AOT artifacts live.
     pub artifacts_dir: PathBuf,
     /// Artifact flavor override (`pallas` / `scan`; None = manifest default).
@@ -174,7 +212,7 @@ impl RunConfig {
                 self.driver = value
                     .as_str()
                     .and_then(Driver::from_name)
-                    .ok_or_else(|| ConfigError::Type(key.into(), "single|indexed|multi|pjrt"))?;
+                    .ok_or_else(|| ConfigError::Type(key.into(), Driver::NAMES))?;
             }
             "mesh" | "shape" => {
                 self.shape = value
@@ -186,6 +224,8 @@ impl RunConfig {
             "mesh_resolution" => self.mesh_resolution = int()? as u32,
             "index_cell" => self.index_cell = num()? as f32,
             "batch_tile" => self.batch_tile = int()? as usize,
+            "queue_depth" => self.queue_depth = (int()? as usize).max(1),
+            "update_threads" => self.update_threads = int()? as usize,
             "artifacts_dir" => {
                 self.artifacts_dir = value
                     .as_str()
@@ -328,5 +368,43 @@ mod tests {
             assert_eq!(Driver::from_name(d.name()), Some(d));
         }
         assert_eq!(Driver::from_name("gpu"), Some(Driver::Pjrt));
+    }
+
+    #[test]
+    fn every_advertised_driver_name_parses() {
+        // The CLI help, `Driver::NAMES` and `from_name` must agree — the
+        // help once advertised `pipelined` while `from_name` rejected it.
+        for name in Driver::NAMES.split('|') {
+            let d = Driver::from_name(name)
+                .unwrap_or_else(|| panic!("advertised driver {name:?} does not parse"));
+            assert_eq!(d.name(), name);
+        }
+        assert_eq!(Driver::NAMES.split('|').count(), Driver::ALL.len());
+    }
+
+    #[test]
+    fn multi_signal_split_covers_all_drivers() {
+        // Only the two basic-iteration drivers are single-signal; the
+        // paper columns are the first four of ALL.
+        for d in Driver::ALL {
+            let expect = !matches!(d, Driver::Single | Driver::Indexed);
+            assert_eq!(d.is_multi_signal(), expect, "{}", d.name());
+        }
+        assert_eq!(&Driver::ALL[..4], &Driver::PAPER_COLUMNS);
+    }
+
+    #[test]
+    fn update_phase_driver_knobs_apply() {
+        let mut cfg = RunConfig::default();
+        cfg.apply("driver", &ConfigValue::Str("pipelined".into())).unwrap();
+        assert_eq!(cfg.driver, Driver::Pipelined);
+        cfg.apply("driver", &ConfigValue::Str("parallel".into())).unwrap();
+        assert_eq!(cfg.driver, Driver::Parallel);
+        cfg.apply("queue_depth", &ConfigValue::Num(4.0)).unwrap();
+        assert_eq!(cfg.queue_depth, 4);
+        cfg.apply("queue_depth", &ConfigValue::Num(0.0)).unwrap();
+        assert_eq!(cfg.queue_depth, 1, "depth clamps to >= 1");
+        cfg.apply("update_threads", &ConfigValue::Num(8.0)).unwrap();
+        assert_eq!(cfg.update_threads, 8);
     }
 }

@@ -46,6 +46,8 @@ pub fn preset(shape: BenchmarkShape) -> RunConfig {
         mesh_resolution: 0, // shape default
         index_cell: (2.0 * threshold).clamp(0.02, 0.25),
         batch_tile: 512,
+        queue_depth: 2,
+        update_threads: 0, // auto-detect
         artifacts_dir: PathBuf::from("artifacts"),
         flavor: None,
         soam,

@@ -1,0 +1,547 @@
+//! The batch-update executor — the one implementation of the paper's §2.2
+//! Update-phase discipline that every convergence driver delegates to.
+//!
+//! Before this module the winner-lock / staleness / random-order / sync
+//! loop was triplicated across `engine::run_single_signal`,
+//! `engine::run_multi_signal` and `coordinator::run_pipelined`. It now
+//! lives here exactly once:
+//!
+//! - [`BatchExecutor::run_batch`] consumes one sampled batch with its
+//!   precomputed winners and applies the paper's collision semantics: a
+//!   random permutation (no RNG is drawn for the degenerate `m = 1`
+//!   single-signal case), the "implicit lock on the winner unit", and the
+//!   staleness guard against units inserted earlier in the same batch
+//!   ([`InsertedGuard`], with an AABB early exit instead of the old
+//!   O(m·inserts) linear scan).
+//! - Structural changes accumulate into one merged [`ChangeLog`] that is
+//!   committed to the [`FindWinners`] index with a single `sync` per batch
+//!   (the deferred-commit pattern of the CUDA-SSO line of work) instead of
+//!   one `sync` per signal. `Indexed::sync` reconciles per unit, so the
+//!   merged log is equivalent to the per-signal sequence.
+//!
+//! With `update_threads > 1` the executor additionally splits the Update
+//! phase — the paper's own named bottleneck once Find Winners is
+//! accelerated (§3.3) — into:
+//!
+//! 1. a **sequential admission pass** in permutation order (locks,
+//!    staleness, aliveness: exactly the paper's collision semantics);
+//! 2. a **parallel plan pass**: admitted signals whose updates are
+//!    provably pure adaptation ([`UpdateKind::Adapt`]) and whose winner
+//!    neighborhoods are conflict-disjoint are planned off-thread via the
+//!    read-only [`GrowingNetwork::plan_update`];
+//! 3. an **in-order commit pass**: plans are applied on the driver thread
+//!    in admission order, so the final network is bit-identical to the
+//!    sequential `Multi` driver for any thread count.
+//!
+//! Structural updates (insertions, removals, edge prunes — or anything an
+//! algorithm won't certify) force a flush of the deferred plans and run
+//! inline, preserving slab-id assignment order exactly.
+
+use crate::findwinners::FindWinners;
+use crate::geometry::{Aabb, Vec3};
+use crate::rng::Rng;
+use crate::som::{ChangeLog, GrowingNetwork, Network, UpdateKind, UpdatePlan, Winners};
+
+use super::locks::LockTable;
+
+/// Deferred plan passes shorter than this are computed inline. Each
+/// parallel flush spawns scoped OS threads (tens of µs each), so it only
+/// pays for itself on large flushes — typically the big steady-state
+/// batches of a mature network (m up to 8192). A persistent worker pool
+/// would lower this break-even point; see ROADMAP "Open items".
+const MIN_PARALLEL_FLUSH: usize = 512;
+
+/// Staleness guard: positions of units inserted earlier in the current
+/// batch. A signal whose (stale) winner distance exceeds its distance to
+/// one of these has effectively been won by the new unit — the paper's
+/// staleness policy discards it, otherwise several stale winners around one
+/// gap each insert a unit into it and the network over-grows.
+///
+/// `supersedes` is the hot check: an AABB over the inserted positions gives
+/// an O(1) early exit (`dist²(signal, box) ≥ d1²` ⇒ no insert can be
+/// closer), falling back to the exact linear scan only when the box is
+/// within range. The AABB lower-bounds every member distance in f32
+/// (see [`Aabb::dist2`]), so the result is identical to the plain scan.
+#[derive(Clone, Debug)]
+pub struct InsertedGuard {
+    points: Vec<Vec3>,
+    bounds: Aabb,
+}
+
+impl Default for InsertedGuard {
+    fn default() -> Self {
+        Self { points: Vec::new(), bounds: Aabb::EMPTY }
+    }
+}
+
+impl InsertedGuard {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn clear(&mut self) {
+        self.points.clear();
+        self.bounds = Aabb::EMPTY;
+    }
+
+    pub fn push(&mut self, p: Vec3) {
+        self.points.push(p);
+        self.bounds.expand(p);
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Was any batch insert strictly closer to `signal` than `d1_sq`?
+    #[inline]
+    pub fn supersedes(&self, signal: Vec3, d1_sq: f32) -> bool {
+        if self.points.is_empty() || self.bounds.dist2(signal) >= d1_sq {
+            return false;
+        }
+        self.points.iter().any(|p| signal.dist2(*p) < d1_sq)
+    }
+}
+
+/// One admitted-but-deferred adapt-class signal awaiting its plan/commit.
+#[derive(Clone, Copy, Debug)]
+struct Pending {
+    signal: Vec3,
+    w: Winners,
+}
+
+/// The unified Update-phase executor (see module docs).
+pub struct BatchExecutor {
+    /// Resolved worker count (≥ 1).
+    threads: usize,
+    /// Minimum pending-plan count before a flush spawns worker threads
+    /// ([`MIN_PARALLEL_FLUSH`]; lowered by tests to exercise the threaded
+    /// path on small batches).
+    flush_threshold: usize,
+    locks: LockTable,
+    /// Stamp set of units whose state the deferred plans read or write.
+    touched: LockTable,
+    order: Vec<u32>,
+    log: ChangeLog,
+    guard: InsertedGuard,
+    pending: Vec<Pending>,
+    plans: Vec<UpdatePlan>,
+}
+
+impl BatchExecutor {
+    /// `update_threads`: 0 = auto-detect, 1 = sequential (the exact `Multi`
+    /// loop), n > 1 = parallel plan pass with n workers. The final network
+    /// is identical for every value.
+    pub fn new(update_threads: usize) -> Self {
+        let threads = if update_threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            update_threads
+        };
+        Self {
+            threads,
+            flush_threshold: MIN_PARALLEL_FLUSH,
+            locks: LockTable::new(),
+            touched: LockTable::new(),
+            order: Vec::new(),
+            log: ChangeLog::default(),
+            guard: InsertedGuard::new(),
+            pending: Vec::new(),
+            plans: Vec::new(),
+        }
+    }
+
+    /// Resolved worker count (≥ 1).
+    pub fn update_threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Lower the thread-spawn break-even for tests (results are identical
+    /// either way; only where plans are computed changes).
+    #[cfg(test)]
+    fn set_flush_threshold(&mut self, n: usize) {
+        self.flush_threshold = n;
+    }
+
+    /// Run the Update phase for one batch: apply every admissible signal in
+    /// a random order under the winner-lock discipline, then commit the
+    /// merged change log to `fw` with a single `sync`. Returns the number
+    /// of discarded signals (collisions + stale winners + absent winners).
+    ///
+    /// The degenerate `m = 1` case is the single-signal basic iteration:
+    /// the permutation of one element draws no RNG, the lock always
+    /// succeeds and the guard is empty, so the behavior (and the RNG
+    /// stream) is exactly the classic loop's.
+    pub fn run_batch(
+        &mut self,
+        algo: &mut dyn GrowingNetwork,
+        fw: &mut dyn FindWinners,
+        signals: &[Vec3],
+        winners: &[Option<Winners>],
+        rng: &mut Rng,
+    ) -> u64 {
+        debug_assert_eq!(signals.len(), winners.len());
+        let m = signals.len();
+        // "in a random order" (paper §2.2); a 1-permutation is draw-free.
+        rng.permutation(m, &mut self.order);
+        self.locks.next_batch();
+        self.locks.ensure_capacity(algo.net().capacity());
+        self.guard.clear();
+        self.log.clear();
+
+        let mut discarded = 0u64;
+        if self.threads > 1 && m > 1 {
+            self.parallel_batch(algo, signals, winners, &mut discarded);
+        } else {
+            self.sequential_batch(algo, signals, winners, &mut discarded);
+        }
+
+        if !self.log.is_empty() {
+            fw.sync(algo.net(), &self.log);
+        }
+        discarded
+    }
+
+    /// The paper's admission rule, short-circuit order preserved: stale
+    /// winners (dead, or superseded by a same-batch insert) and locked
+    /// winners all discard the signal; the lock is only taken when every
+    /// earlier check passed.
+    #[inline]
+    fn admit(
+        net: &Network,
+        locks: &mut LockTable,
+        guard: &InsertedGuard,
+        signal: Vec3,
+        w: &Winners,
+    ) -> bool {
+        net.is_alive(w.w1)
+            && net.is_alive(w.w2)
+            && !guard.supersedes(signal, w.d1_sq)
+            && locks.try_lock(w.w1)
+    }
+
+    /// Apply one admitted signal inline and track its insertions for the
+    /// staleness guard.
+    fn apply_inline(&mut self, algo: &mut dyn GrowingNetwork, signal: Vec3, w: &Winners) {
+        let inserted_before = self.log.inserted.len();
+        algo.update(signal, w, &mut self.log);
+        for k in inserted_before..self.log.inserted.len() {
+            let id = self.log.inserted[k];
+            self.guard.push(algo.net().pos(id));
+        }
+    }
+
+    /// The sequential Update loop — the reference semantics (and the exact
+    /// pre-refactor `Multi` behavior).
+    fn sequential_batch(
+        &mut self,
+        algo: &mut dyn GrowingNetwork,
+        signals: &[Vec3],
+        winners: &[Option<Winners>],
+        discarded: &mut u64,
+    ) {
+        let m = self.order.len();
+        for idx in 0..m {
+            let j = self.order[idx] as usize;
+            let w = match winners[j] {
+                Some(w) => w,
+                None => {
+                    *discarded += 1;
+                    continue;
+                }
+            };
+            let signal = signals[j];
+            if !Self::admit(algo.net(), &mut self.locks, &self.guard, signal, &w) {
+                *discarded += 1;
+                continue;
+            }
+            self.apply_inline(algo, signal, &w);
+        }
+    }
+
+    /// Admission + deferred plan/commit protocol (see module docs). The
+    /// admission decisions, the commit order and every floating-point
+    /// result are identical to [`Self::sequential_batch`]; only *where*
+    /// adapt plans are computed differs.
+    fn parallel_batch(
+        &mut self,
+        algo: &mut dyn GrowingNetwork,
+        signals: &[Vec3],
+        winners: &[Option<Winners>],
+        discarded: &mut u64,
+    ) {
+        self.pending.clear();
+        self.touched.next_batch();
+        self.touched.ensure_capacity(algo.net().capacity());
+
+        let m = self.order.len();
+        for idx in 0..m {
+            let j = self.order[idx] as usize;
+            let w = match winners[j] {
+                Some(w) => w,
+                None => {
+                    *discarded += 1;
+                    continue;
+                }
+            };
+            let signal = signals[j];
+            // Admission reads only structural state (aliveness, batch
+            // inserts, locks), none of which deferred adapts can change —
+            // so deciding it before the flush matches the sequential order.
+            if !Self::admit(algo.net(), &mut self.locks, &self.guard, signal, &w) {
+                *discarded += 1;
+                continue;
+            }
+            // Classification and planning read the winner's neighborhood;
+            // flush first if any deferred plan touches it, so both see
+            // exactly the state the sequential loop would.
+            if self.conflicts(algo.net(), &w) {
+                self.flush(algo);
+            }
+            match algo.classify_update(signal, &w) {
+                UpdateKind::Structural => {
+                    // Inserts/removals must happen at this exact point in
+                    // the permutation order (slab-id assignment, staleness
+                    // guard), after every earlier deferred adapt.
+                    self.flush(algo);
+                    self.apply_inline(algo, signal, &w);
+                }
+                UpdateKind::Adapt => self.defer(algo.net(), signal, w),
+            }
+        }
+        self.flush(algo);
+    }
+
+    /// Does this signal's winner neighborhood overlap any deferred plan's?
+    fn conflicts(&self, net: &Network, w: &Winners) -> bool {
+        if self.pending.is_empty() {
+            return false;
+        }
+        // A deferred adapt can only change N(w1) by touching w1 itself, so
+        // the current adjacency is valid for this check.
+        self.touched.is_locked(w.w1)
+            || self.touched.is_locked(w.w2)
+            || net.edges_of(w.w1).iter().any(|e| self.touched.is_locked(e.to))
+    }
+
+    /// Queue an adapt-class signal and mark `{w1, w2} ∪ N(w1)` as touched.
+    fn defer(&mut self, net: &Network, signal: Vec3, w: Winners) {
+        self.touched.try_lock(w.w1);
+        self.touched.try_lock(w.w2);
+        for e in net.edges_of(w.w1) {
+            self.touched.try_lock(e.to);
+        }
+        self.pending.push(Pending { signal, w });
+    }
+
+    /// Plan every deferred signal (in parallel when the batch is worth it)
+    /// and commit the plans in admission order.
+    fn flush(&mut self, algo: &mut dyn GrowingNetwork) {
+        let n = self.pending.len();
+        if n == 0 {
+            return;
+        }
+        if self.plans.len() < n {
+            self.plans.resize_with(n, UpdatePlan::default);
+        }
+        let workers = self.threads.min(n);
+        if workers > 1 && n >= self.flush_threshold {
+            // Read-only plan pass: `&dyn GrowingNetwork` is `Sync`, the
+            // pending neighborhoods are mutually disjoint, and nothing
+            // mutates until the commit pass below.
+            let algo_ro: &dyn GrowingNetwork = &*algo;
+            let chunk = n.div_ceil(workers);
+            let pending = &self.pending[..n];
+            let plans = &mut self.plans[..n];
+            std::thread::scope(|scope| {
+                for (pend, plan) in pending.chunks(chunk).zip(plans.chunks_mut(chunk)) {
+                    scope.spawn(move || {
+                        for (p, out) in pend.iter().zip(plan.iter_mut()) {
+                            algo_ro.plan_update(p.signal, &p.w, out);
+                        }
+                    });
+                }
+            });
+        } else {
+            for i in 0..n {
+                let p = self.pending[i];
+                algo.plan_update(p.signal, &p.w, &mut self.plans[i]);
+            }
+        }
+        // Commit in admission (= permutation) order: the merged log and
+        // the QE stream come out exactly as in the sequential loop.
+        for plan in &self.plans[..n] {
+            algo.commit_update(plan, &mut self.log);
+        }
+        self.pending.clear();
+        self.touched.next_batch();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::findwinners::{BatchRust, FindWinners};
+    use crate::mesh::{benchmark_mesh, BenchmarkShape, SurfaceSampler};
+    use crate::som::{Gwr, GwrParams, Network, Soam, SoamParams};
+
+    #[test]
+    fn inserted_guard_matches_linear_scan() {
+        let mut rng = Rng::seed_from(7);
+        let mut guard = InsertedGuard::new();
+        let mut points = Vec::new();
+        for _ in 0..64 {
+            let p = Vec3::new(rng.f32(), rng.f32(), rng.f32());
+            guard.push(p);
+            points.push(p);
+            for _ in 0..8 {
+                let s = Vec3::new(
+                    rng.f32() * 2.0 - 0.5,
+                    rng.f32() * 2.0 - 0.5,
+                    rng.f32() * 2.0 - 0.5,
+                );
+                let d1_sq = rng.f32() * 0.5;
+                let want = points.iter().any(|p| s.dist2(*p) < d1_sq);
+                assert_eq!(guard.supersedes(s, d1_sq), want);
+            }
+        }
+        guard.clear();
+        assert!(!guard.supersedes(Vec3::ZERO, f32::INFINITY));
+    }
+
+    /// Drive one algorithm to a mature network, then run identical batches
+    /// through a sequential and a parallel executor and compare the full
+    /// network state bit-for-bit.
+    fn batches_match(threads: usize) {
+        let mesh = benchmark_mesh(BenchmarkShape::Blob, 20);
+        let sampler = SurfaceSampler::new(&mesh);
+
+        let run = |update_threads: usize| -> (Network, u64, u64) {
+            let mut rng = Rng::seed_from(11);
+            let mut soam = Soam::new(SoamParams {
+                insertion_threshold: 0.15,
+                ..SoamParams::default()
+            });
+            soam.init(&sampler, &mut rng);
+            let mut fw = BatchRust::default();
+            fw.rebuild(soam.net());
+            let mut exec = BatchExecutor::new(update_threads);
+            // Force the scoped-thread plan pass even on these small
+            // batches — the point is to cover the threaded path.
+            exec.set_flush_threshold(4);
+            let mut signals = Vec::new();
+            let mut winners = Vec::new();
+            let mut discarded = 0u64;
+            let mut applied_signals = 0u64;
+            for _ in 0..400 {
+                let m = crate::coordinator::MSchedule::default().m(soam.net().len());
+                sampler.sample_batch(&mut rng, m, &mut signals);
+                fw.find2_batch(soam.net(), &signals, &mut winners);
+                discarded += exec.run_batch(&mut soam, &mut fw, &signals, &winners, &mut rng);
+                applied_signals += m as u64;
+            }
+            (soam.net().clone(), discarded, applied_signals)
+        };
+
+        let (net_a, disc_a, sig_a) = run(1);
+        let (net_b, disc_b, sig_b) = run(threads);
+        assert_eq!(disc_a, disc_b, "discard decisions diverge");
+        assert_eq!(sig_a, sig_b);
+        assert_eq!(net_a.capacity(), net_b.capacity(), "slab id assignment diverges");
+        assert_eq!(net_a.len(), net_b.len());
+        assert_eq!(net_a.edge_count(), net_b.edge_count());
+        for id in 0..net_a.capacity() as u32 {
+            assert_eq!(net_a.is_alive(id), net_b.is_alive(id), "unit {id}");
+            if !net_a.is_alive(id) {
+                continue;
+            }
+            let (ua, ub) = (net_a.unit(id), net_b.unit(id));
+            assert_eq!(ua.pos.x.to_bits(), ub.pos.x.to_bits(), "unit {id} pos.x");
+            assert_eq!(ua.pos.y.to_bits(), ub.pos.y.to_bits(), "unit {id} pos.y");
+            assert_eq!(ua.pos.z.to_bits(), ub.pos.z.to_bits(), "unit {id} pos.z");
+            assert_eq!(ua.firing.to_bits(), ub.firing.to_bits(), "unit {id} firing");
+            assert_eq!(ua.error.to_bits(), ub.error.to_bits(), "unit {id} error");
+            let mut ea: Vec<(u32, u32)> =
+                net_a.edges_of(id).iter().map(|e| (e.to, e.age.to_bits())).collect();
+            let mut eb: Vec<(u32, u32)> =
+                net_b.edges_of(id).iter().map(|e| (e.to, e.age.to_bits())).collect();
+            ea.sort_unstable();
+            eb.sort_unstable();
+            assert_eq!(ea, eb, "unit {id} edges");
+        }
+    }
+
+    #[test]
+    fn parallel_two_threads_bit_identical_to_sequential() {
+        batches_match(2);
+    }
+
+    #[test]
+    fn parallel_many_threads_bit_identical_to_sequential() {
+        batches_match(5);
+    }
+
+    #[test]
+    fn gwr_classify_agrees_with_update() {
+        // For random mature-network batches, a signal classified Adapt must
+        // produce an update with no insertions/removals and a no-op prune.
+        let mesh = benchmark_mesh(BenchmarkShape::Blob, 20);
+        let sampler = SurfaceSampler::new(&mesh);
+        let mut rng = Rng::seed_from(3);
+        let mut gwr = Gwr::new(GwrParams {
+            insertion_threshold: 0.12,
+            ..GwrParams::default()
+        });
+        gwr.init(&sampler, &mut rng);
+        let mut fw = BatchRust::default();
+        fw.rebuild(gwr.net());
+        let mut log = ChangeLog::default();
+        let mut adapt_seen = 0;
+        let mut structural_seen = 0;
+        for _ in 0..20_000 {
+            let s = sampler.sample(&mut rng);
+            let Some(w) = fw.find2(gwr.net(), s) else { continue };
+            let kind = gwr.classify_update(s, &w);
+            log.clear();
+            gwr.update(s, &w, &mut log);
+            match kind {
+                UpdateKind::Adapt => {
+                    adapt_seen += 1;
+                    assert!(
+                        log.inserted.is_empty() && log.removed.is_empty(),
+                        "Adapt-classified update changed structure"
+                    );
+                }
+                UpdateKind::Structural => structural_seen += 1,
+            }
+        }
+        assert!(adapt_seen > 0, "classification never predicted Adapt");
+        assert!(structural_seen > 0, "classification never predicted Structural");
+    }
+
+    #[test]
+    fn single_element_batch_draws_no_rng() {
+        let mesh = benchmark_mesh(BenchmarkShape::Blob, 20);
+        let sampler = SurfaceSampler::new(&mesh);
+        let mut rng = Rng::seed_from(5);
+        let mut soam = Soam::new(SoamParams::default());
+        soam.init(&sampler, &mut rng);
+        let mut fw = BatchRust::default();
+        fw.rebuild(soam.net());
+        let mut exec = BatchExecutor::new(1);
+        let s = sampler.sample(&mut rng);
+        let w = fw.find2(soam.net(), s);
+        let mut probe = rng.clone();
+        let expected_next = probe.next_u64();
+        exec.run_batch(&mut soam, &mut fw, &[s], &[w], &mut rng);
+        assert_eq!(
+            rng.next_u64(),
+            expected_next,
+            "m=1 batches must not consume RNG (single-signal parity)"
+        );
+    }
+}

@@ -1,22 +1,32 @@
-//! Multi-signal coordination: the winner-lock table, the parallelism
-//! schedule, and the pipelined driver.
+//! Multi-signal coordination: the batch-update executor, the winner-lock
+//! table, the parallelism schedule, and the pipelined driver.
 //!
 //! The paper's §2.2 collision taxonomy (adapt-position / modify-neighborhood
 //! / insert-edge) is resolved by one mechanism — "an implicit lock on the
-//! winner unit" — implemented here as [`LockTable`] and used by both
-//! multi-signal drivers in [`crate::engine`].
+//! winner unit" — implemented here as [`LockTable`] and enforced by
+//! [`executor::BatchExecutor`], the single Update-phase implementation that
+//! every convergence driver in [`crate::engine`] (and
+//! [`pipeline::run_pipelined`]) delegates to. The single-signal drivers are
+//! the degenerate `m = 1` case of the same executor.
 //!
-//! [`pipeline::run_pipelined`] is this reproduction's answer to the paper's
-//! future-work note ("future developments … should aim to the
-//! parallelization of the Update phase as well"): while the Update phase of
-//! batch *k* runs, a sampler thread prefetches the signals of batch *k+1*
-//! through a bounded (backpressure) channel, overlapping the Sample phase
-//! entirely with Update.
+//! Two drivers answer the paper's future-work note ("future developments …
+//! should aim to the parallelization of the Update phase as well"):
+//!
+//! - [`pipeline::run_pipelined`] overlaps the Sample phase of batch *k+1*
+//!   with the Update phase of batch *k* through a bounded (backpressure)
+//!   channel of depth `queue_depth`;
+//! - the `Parallel` driver (executor with `update_threads > 1`) splits the
+//!   Update phase itself into a sequential admission pass and a threaded
+//!   plan pass over conflict-disjoint winner neighborhoods, committing in
+//!   admission order — bit-identical to the sequential driver by
+//!   construction.
 
+pub mod executor;
 pub mod locks;
 pub mod pipeline;
 pub mod schedule;
 
+pub use executor::{BatchExecutor, InsertedGuard};
 pub use locks::LockTable;
 pub use pipeline::run_pipelined;
 pub use schedule::MSchedule;

@@ -27,7 +27,7 @@ use crate::metrics::{Phase, PhaseClock, PhaseTimes};
 use crate::rng::Rng;
 use crate::som::{ChangeLog, GrowingNetwork, Winners};
 
-use super::locks::LockTable;
+use super::executor::BatchExecutor;
 use super::schedule::MSchedule;
 
 /// Run the multi-signal iteration with a pipelined Sample phase.
@@ -48,12 +48,10 @@ pub fn run_pipelined(
     fw.rebuild(algo.net());
 
     let schedule = MSchedule::new(limits.max_parallelism);
-    let mut locks = LockTable::new();
+    // The shared Update-phase implementation (locks, staleness guard,
+    // random order, merged per-batch sync) — see coordinator::executor.
+    let mut executor = BatchExecutor::new(1);
     let mut winners: Vec<Option<Winners>> = Vec::new();
-    let mut order: Vec<u32> = Vec::new();
-    // See engine::run_multi_signal: staleness guard against units inserted
-    // earlier in the same batch.
-    let mut batch_inserted: Vec<Vec3> = Vec::new();
 
     // The sampler thread owns a forked RNG stream; the main thread keeps
     // drawing permutations from `rng`. (This is why the pipelined driver is
@@ -99,36 +97,9 @@ pub fn run_pipelined(
             fw.find2_batch(algo.net(), &signals, &mut winners);
             clock.stop(&mut phase, Phase::FindWinners);
 
-            // 3. Update under winner locks, random order.
+            // 3. Update under winner locks, random order (shared executor).
             let clock = PhaseClock::start();
-            rng.permutation(m, &mut order);
-            locks.next_batch();
-            locks.ensure_capacity(algo.net().capacity());
-            batch_inserted.clear();
-            for &j in &order {
-                let w = match winners[j as usize] {
-                    Some(w) => w,
-                    None => {
-                        report.discarded += 1;
-                        continue;
-                    }
-                };
-                let signal = signals[j as usize];
-                if !algo.net().is_alive(w.w1)
-                    || !algo.net().is_alive(w.w2)
-                    || batch_inserted.iter().any(|p| signal.dist2(*p) < w.d1_sq)
-                    || !locks.try_lock(w.w1)
-                {
-                    report.discarded += 1;
-                    continue;
-                }
-                log.clear();
-                algo.update(signal, &w, &mut log);
-                for &id in &log.inserted {
-                    batch_inserted.push(algo.net().pos(id));
-                }
-                fw.sync(algo.net(), &log);
-            }
+            report.discarded += executor.run_batch(algo, fw, &signals, &winners, rng);
             clock.stop(&mut phase, Phase::Update);
 
             report.signals += m as u64;

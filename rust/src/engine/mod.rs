@@ -1,17 +1,27 @@
-//! Convergence drivers — the paper's four experimental implementations.
+//! Convergence drivers — the paper's four experimental implementations
+//! plus this reproduction's two Update-phase drivers.
 //!
-//! [`run_single_signal`] is the classic basic iteration (one signal per
-//! iteration); [`run_multi_signal`] is the paper's contribution (§2.2): `m`
-//! signals per iteration, batched Find Winners, sequential Update under the
-//! winner-lock collision rule. Both are generic over the
-//! [`FindWinners`] strategy, which yields the paper's grid:
+//! Every driver shares one Update-phase implementation,
+//! [`crate::coordinator::BatchExecutor`] (winner locks, staleness guard,
+//! random order, merged per-batch index sync); the single-signal drivers
+//! are its degenerate `m = 1` case. The six-driver matrix:
 //!
-//! | paper column | driver | strategy |
-//! |---|---|---|
-//! | Single-signal | single | `Scalar` |
-//! | Indexed | single | `Indexed` |
-//! | Multi-signal | multi | `BatchRust` |
-//! | GPU-based | multi | `runtime::PjrtFindWinners` |
+//! | driver | iteration | Find Winners | Update phase |
+//! |---|---|---|---|
+//! | single | basic (m = 1) | `Scalar` exhaustive | executor, m = 1 |
+//! | indexed | basic (m = 1) | `Indexed` spatial hash | executor, m = 1 |
+//! | multi | multi-signal (§2.2) | `BatchRust` batched scan | executor, sequential |
+//! | pjrt | multi-signal (§2.2) | `runtime::PjrtFindWinners` (AOT/PJRT) | executor, sequential |
+//! | pipelined | multi-signal, Sample(k+1) overlaps Update(k) | `BatchRust` | executor, sequential |
+//! | parallel | multi-signal (§2.2) | `BatchRust` | executor, threaded plan pass |
+//!
+//! The first four are the paper's experimental columns (§3.1). `pipelined`
+//! and `parallel` answer its future-work note ("the parallelization of the
+//! Update phase"): the former hides the Sample phase behind Update via a
+//! prefetching sampler thread (`queue_depth` backpressure), the latter
+//! plans conflict-disjoint adapt updates on `update_threads` workers and
+//! commits them in admission order — producing final networks bit-identical
+//! to `multi` for any thread count (`rust/tests/executor_parity.rs`).
 //!
 //! `Multi` and `Pjrt` share every line of driver code and every RNG draw, so
 //! they replicate the paper's property that the multi-signal reference and
@@ -28,6 +38,7 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use crate::config::{Algorithm, Driver, Limits, RunConfig};
+use crate::coordinator::BatchExecutor;
 use crate::findwinners::{BatchRust, FindWinners, Indexed, Scalar};
 use crate::geometry::Vec3;
 use crate::mesh::{Mesh, SurfaceSampler};
@@ -44,7 +55,10 @@ pub fn m_schedule(units: usize, max_parallelism: usize) -> usize {
     crate::coordinator::MSchedule::new(max_parallelism).m(units)
 }
 
-/// Run the single-signal basic iteration to convergence.
+/// Run the single-signal basic iteration to convergence — the degenerate
+/// `m = 1` case of the shared [`BatchExecutor`] (the one-element batch
+/// draws no permutation RNG, its lock always succeeds and its staleness
+/// guard is empty, so this is the classic loop exactly).
 pub fn run_single_signal(
     algo: &mut dyn GrowingNetwork,
     sampler: &SurfaceSampler,
@@ -59,6 +73,8 @@ pub fn run_single_signal(
     algo.init(sampler, rng);
     fw.rebuild(algo.net());
 
+    let mut executor = BatchExecutor::new(1);
+
     loop {
         // 1. Sample.
         let clock = PhaseClock::start();
@@ -70,13 +86,9 @@ pub fn run_single_signal(
         let winners = fw.find2(algo.net(), signal);
         clock.stop(&mut phase, Phase::FindWinners);
 
-        // 3. Update.
+        // 3. Update (shared executor, batch of one).
         let clock = PhaseClock::start();
-        if let Some(w) = winners {
-            log.clear();
-            algo.update(signal, &w, &mut log);
-            fw.sync(algo.net(), &log);
-        }
+        report.discarded += executor.run_batch(algo, fw, &[signal], &[winners], rng);
         clock.stop(&mut phase, Phase::Update);
 
         report.signals += 1;
@@ -105,22 +117,22 @@ pub fn run_single_signal(
     report
 }
 
-/// Run the multi-signal iteration (§2.2) to convergence.
-///
-/// Collision rule: an "implicit lock on the winner unit" — of all signals in
-/// the batch sharing a winner, only the first in a random order is applied;
-/// the rest are discarded and counted. Signals whose winners died earlier in
-/// the same batch (stale winners) are likewise discarded.
-pub fn run_multi_signal(
+/// Shared multi-signal convergence loop: Sample m → batched Find Winners →
+/// Update through the executor → housekeeping. `run_multi_signal` and
+/// `run_parallel` are thin wrappers differing only in the executor's
+/// thread count (and the report's implementation label).
+fn run_batched_loop(
     algo: &mut dyn GrowingNetwork,
     sampler: &SurfaceSampler,
     fw: &mut dyn FindWinners,
     limits: &Limits,
     rng: &mut Rng,
+    impl_name: &str,
+    mut executor: BatchExecutor,
 ) -> RunReport {
     let start = Instant::now();
     let mut phase = PhaseTimes::default();
-    let mut report = RunReport::new(algo.name(), fw.name());
+    let mut report = RunReport::new(algo.name(), impl_name);
     let mut log = ChangeLog::default();
     algo.init(sampler, rng);
     fw.rebuild(algo.net());
@@ -128,15 +140,6 @@ pub fn run_multi_signal(
     // Reused buffers (allocation-free steady state).
     let mut signals: Vec<Vec3> = Vec::new();
     let mut winners: Vec<Option<Winners>> = Vec::new();
-    let mut order: Vec<u32> = Vec::new();
-    // "Implicit lock on the winner unit" (paper §2.2).
-    let mut locks = crate::coordinator::LockTable::new();
-    // Units inserted during the current batch: a later signal whose stale
-    // winners are farther than one of these has effectively been won by the
-    // new unit — apply the paper's staleness policy and discard it
-    // (otherwise several stale winners around one gap each insert a unit
-    // into it and the network over-grows).
-    let mut batch_inserted: Vec<Vec3> = Vec::new();
 
     loop {
         report.iterations += 1;
@@ -152,39 +155,9 @@ pub fn run_multi_signal(
         fw.find2_batch(algo.net(), &signals, &mut winners);
         clock.stop(&mut phase, Phase::FindWinners);
 
-        // 3. Update in random order under winner locks.
+        // 3. Update in random order under winner locks (shared executor).
         let clock = PhaseClock::start();
-        rng.permutation(m, &mut order);
-        locks.next_batch();
-        locks.ensure_capacity(algo.net().capacity());
-        batch_inserted.clear();
-        for &j in &order {
-            let w = match winners[j as usize] {
-                Some(w) => w,
-                None => {
-                    report.discarded += 1;
-                    continue;
-                }
-            };
-            let signal = signals[j as usize];
-            // Stale winners (removed earlier in this batch, or superseded
-            // by a unit inserted earlier in this batch) and locked winners
-            // all discard the signal.
-            if !algo.net().is_alive(w.w1)
-                || !algo.net().is_alive(w.w2)
-                || batch_inserted.iter().any(|p| signal.dist2(*p) < w.d1_sq)
-                || !locks.try_lock(w.w1)
-            {
-                report.discarded += 1;
-                continue;
-            }
-            log.clear();
-            algo.update(signal, &w, &mut log);
-            for &id in &log.inserted {
-                batch_inserted.push(algo.net().pos(id));
-            }
-            fw.sync(algo.net(), &log);
-        }
+        report.discarded += executor.run_batch(algo, fw, &signals, &winners, rng);
         clock.stop(&mut phase, Phase::Update);
 
         report.signals += m as u64;
@@ -210,6 +183,47 @@ pub fn run_multi_signal(
     report
 }
 
+/// Run the multi-signal iteration (§2.2) to convergence.
+///
+/// Collision rule: an "implicit lock on the winner unit" — of all signals in
+/// the batch sharing a winner, only the first in a random order is applied;
+/// the rest are discarded and counted. Signals whose winners died earlier in
+/// the same batch (stale winners) are likewise discarded.
+pub fn run_multi_signal(
+    algo: &mut dyn GrowingNetwork,
+    sampler: &SurfaceSampler,
+    fw: &mut dyn FindWinners,
+    limits: &Limits,
+    rng: &mut Rng,
+) -> RunReport {
+    let name = fw.name();
+    run_batched_loop(algo, sampler, fw, limits, rng, name, BatchExecutor::new(1))
+}
+
+/// Run the multi-signal iteration with the Update phase's adapt plans
+/// computed on `update_threads` workers (0 = auto-detect). Admission,
+/// commit order and every floating-point result match [`run_multi_signal`]
+/// bit-for-bit regardless of the thread count — see
+/// `coordinator::executor` for the protocol.
+pub fn run_parallel(
+    algo: &mut dyn GrowingNetwork,
+    sampler: &SurfaceSampler,
+    fw: &mut dyn FindWinners,
+    limits: &Limits,
+    rng: &mut Rng,
+    update_threads: usize,
+) -> RunReport {
+    run_batched_loop(
+        algo,
+        sampler,
+        fw,
+        limits,
+        rng,
+        "parallel",
+        BatchExecutor::new(update_threads),
+    )
+}
+
 /// Build the algorithm selected by `cfg`.
 pub fn make_algorithm(cfg: &RunConfig) -> Box<dyn GrowingNetwork> {
     match cfg.algorithm {
@@ -225,9 +239,40 @@ pub fn make_findwinners(cfg: &RunConfig) -> Result<Box<dyn FindWinners>> {
     Ok(match cfg.driver {
         Driver::Single => Box::new(Scalar::new()),
         Driver::Indexed => Box::new(Indexed::new(cfg.index_cell)),
-        Driver::Multi => Box::new(BatchRust::new(cfg.batch_tile)),
+        Driver::Multi | Driver::Pipelined | Driver::Parallel => {
+            Box::new(BatchRust::new(cfg.batch_tile))
+        }
         Driver::Pjrt => Box::new(crate::runtime::PjrtFindWinners::from_config(cfg)?),
     })
+}
+
+/// Dispatch to the convergence driver selected by `cfg.driver`, reusing a
+/// caller-built algorithm and Find-Winners strategy (the CLI's
+/// `--save-mesh` re-run needs the algorithm back; [`run`] wraps this).
+pub fn run_convergence(
+    algo: &mut dyn GrowingNetwork,
+    sampler: &SurfaceSampler,
+    fw: &mut dyn FindWinners,
+    cfg: &RunConfig,
+    rng: &mut Rng,
+) -> RunReport {
+    match cfg.driver {
+        Driver::Pipelined => crate::coordinator::run_pipelined(
+            algo,
+            sampler,
+            fw,
+            &cfg.limits,
+            rng,
+            cfg.queue_depth,
+        ),
+        Driver::Parallel => {
+            run_parallel(algo, sampler, fw, &cfg.limits, rng, cfg.update_threads)
+        }
+        Driver::Multi | Driver::Pjrt => run_multi_signal(algo, sampler, fw, &cfg.limits, rng),
+        Driver::Single | Driver::Indexed => {
+            run_single_signal(algo, sampler, fw, &cfg.limits, rng)
+        }
+    }
 }
 
 /// End-to-end convenience: build sampler/algorithm/strategy from `cfg` and
@@ -241,11 +286,7 @@ pub fn run(mesh: &Mesh, driver: Driver, cfg: &RunConfig, rng: &mut Rng) -> Resul
     let sampler = SurfaceSampler::new(mesh);
     let mut algo = make_algorithm(&cfg);
     let mut fw = make_findwinners(&cfg)?;
-    let mut report = if driver.is_multi_signal() {
-        run_multi_signal(algo.as_mut(), &sampler, fw.as_mut(), &cfg.limits, rng)
-    } else {
-        run_single_signal(algo.as_mut(), &sampler, fw.as_mut(), &cfg.limits, rng)
-    };
+    let mut report = run_convergence(algo.as_mut(), &sampler, fw.as_mut(), &cfg, rng);
     report.mesh = Some(cfg.shape.name().to_string());
     Ok(report)
 }
@@ -325,6 +366,37 @@ mod tests {
         assert_eq!(a.connections, b.connections);
         assert_eq!(a.signals, b.signals);
         assert_eq!(a.discarded, b.discarded);
+    }
+
+    #[test]
+    fn parallel_driver_matches_multi_reports() {
+        let mesh = benchmark_mesh(BenchmarkShape::Blob, 20);
+        let mut cfg = quick_cfg(BenchmarkShape::Blob);
+        let mut rng1 = Rng::seed_from(13);
+        let a = run(&mesh, Driver::Multi, &cfg, &mut rng1).unwrap();
+        for update_threads in [0, 1, 3] {
+            cfg.update_threads = update_threads;
+            let mut rng2 = Rng::seed_from(13);
+            let b = run(&mesh, Driver::Parallel, &cfg, &mut rng2).unwrap();
+            assert_eq!(a.units, b.units, "threads={update_threads}");
+            assert_eq!(a.connections, b.connections, "threads={update_threads}");
+            assert_eq!(a.signals, b.signals, "threads={update_threads}");
+            assert_eq!(a.discarded, b.discarded, "threads={update_threads}");
+            assert_eq!(a.iterations, b.iterations, "threads={update_threads}");
+            assert_eq!(a.qe.to_bits(), b.qe.to_bits(), "threads={update_threads}");
+        }
+    }
+
+    #[test]
+    fn pipelined_driver_runs_from_config() {
+        let mesh = benchmark_mesh(BenchmarkShape::Blob, 20);
+        let mut cfg = quick_cfg(BenchmarkShape::Blob);
+        cfg.queue_depth = 3;
+        let mut rng = Rng::seed_from(2);
+        let r = run(&mesh, Driver::Pipelined, &cfg, &mut rng).unwrap();
+        assert_eq!(r.implementation, "pipelined");
+        assert!(r.units > 4);
+        assert!(r.discarded > 0);
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! neighborhood is missed. Index maintenance rides on the Update phase via
 //! [`FindWinners::sync`].
 
+use crate::coordinator::LockTable;
 use crate::geometry::{Aabb, Vec3};
 use crate::index::HashGrid;
 use crate::som::{ChangeLog, Network, Winners};
@@ -19,6 +20,11 @@ pub struct Indexed {
     /// benches; large values mean the cell size is mistuned).
     pub fallbacks: u64,
     pub queries: u64,
+    /// Scratch stamp set for per-batch sync deduplication ([`LockTable`]
+    /// doubles as a generic O(1)-clear id set: `try_lock` =
+    /// insert-if-unseen, `next_batch` = clear — the same reuse the batch
+    /// executor makes for its touched set).
+    seen: LockTable,
 }
 
 impl Indexed {
@@ -28,7 +34,12 @@ impl Indexed {
         // Slightly inflated bounds so adapted units that drift out of
         // [0,1]³ still clamp into a valid boundary cell.
         let bounds = Aabb::new(Vec3::splat(0.0), Vec3::splat(1.0));
-        Self { grid: HashGrid::new(bounds, cell), fallbacks: 0, queries: 0 }
+        Self {
+            grid: HashGrid::new(bounds, cell),
+            fallbacks: 0,
+            queries: 0,
+            seen: LockTable::new(),
+        }
     }
 
     pub fn fallback_rate(&self) -> f64 {
@@ -87,22 +98,36 @@ impl FindWinners for Indexed {
 }
 
 impl Indexed {
-    /// Index maintenance (the Update phase's bookkeeping): `moved` units are
-    /// re-bucketed, `inserted` added, `removed` dropped.
+    /// Index maintenance (the Update phase's bookkeeping).
+    ///
+    /// Drivers hand over one *merged* change log per batch (a single `sync`
+    /// instead of one per signal), so a unit may appear several times and
+    /// in overlapping roles: moved twice, moved then removed, removed and
+    /// its slab slot reused by a later insert. Replaying such a log as
+    /// edits would corrupt the grid, so entries are treated as *membership
+    /// hints*, not edits: every mentioned id is reconciled once against its
+    /// final state (`indexed?` × `alive?` decides insert / re-bucket /
+    /// remove / nothing). This is idempotent, order-independent, and for
+    /// single-signal logs it degenerates to the classic per-entry
+    /// maintenance.
     pub fn sync_with_net(&mut self, net: &Network, changes: &ChangeLog) {
-        for &id in &changes.inserted {
-            self.grid.insert(id, net.pos(id));
-        }
-        for &(id, _old) in &changes.moved {
-            // A unit may have been moved and then removed within the same
-            // signal (orphan pruning); skip those — the removed loop handles
-            // them.
-            if net.is_alive(id) {
-                self.grid.update(id, net.pos(id));
+        self.seen.next_batch();
+        let mentioned = changes
+            .inserted
+            .iter()
+            .copied()
+            .chain(changes.moved.iter().map(|&(id, _)| id))
+            .chain(changes.removed.iter().map(|&(id, _)| id));
+        for id in mentioned {
+            if !self.seen.try_lock(id) {
+                continue;
             }
-        }
-        for &(id, _pos) in &changes.removed {
-            self.grid.remove(id);
+            match (self.grid.contains(id), net.is_alive(id)) {
+                (true, true) => self.grid.update(id, net.pos(id)),
+                (true, false) => self.grid.remove(id),
+                (false, true) => self.grid.insert(id, net.pos(id)),
+                (false, false) => {}
+            }
         }
     }
 
@@ -180,6 +205,71 @@ mod tests {
             let b = scalar.find2(&net, s).unwrap();
             assert!(a.d1_sq >= b.d1_sq - 1e-9);
         }
+    }
+
+    #[test]
+    fn merged_log_with_slot_reuse_reconciles() {
+        // The hard merged-batch case: remove a unit, then insert another
+        // that reuses its slab slot — one merged log mentions the id in
+        // both `removed` and `inserted`. A replay-style sync would
+        // double-bucket; the reconciling sync must land on the final state.
+        let mut net = random_net(50, 31, 0);
+        let mut idx = build_indexed(&net, 0.1);
+        let victim = net.ids().next().unwrap();
+        let mut log = ChangeLog::default();
+
+        let vpos = net.pos(victim);
+        net.remove(victim);
+        log.removed.push((victim, vpos));
+        let reborn = net.insert(Vec3::new(0.9, 0.1, 0.9), 0.1);
+        assert_eq!(reborn, victim, "slab must reuse the slot for this test");
+        log.inserted.push(reborn);
+        // And move it within the same batch for good measure.
+        let old = net.pos(reborn);
+        net.set_pos(reborn, Vec3::new(0.1, 0.9, 0.1));
+        log.moved.push((reborn, old));
+
+        idx.sync_with_net(&net, &log);
+        idx.grid().check_invariants().unwrap();
+        assert_eq!(idx.grid().len(), 50);
+        let mut seen = Vec::new();
+        idx.grid().for_neighborhood(Vec3::new(0.1, 0.9, 0.1), |id| seen.push(id));
+        assert!(seen.contains(&reborn), "reborn unit must sit in its final cell");
+    }
+
+    #[test]
+    fn merged_log_insert_then_remove_is_noop() {
+        let mut net = random_net(20, 33, 0);
+        let mut idx = build_indexed(&net, 0.1);
+        let mut log = ChangeLog::default();
+        let ghost = net.insert(Vec3::new(0.5, 0.5, 0.5), 0.1);
+        log.inserted.push(ghost);
+        let gpos = net.pos(ghost);
+        net.remove(ghost);
+        log.removed.push((ghost, gpos));
+        idx.sync_with_net(&net, &log);
+        idx.grid().check_invariants().unwrap();
+        assert_eq!(idx.grid().len(), 20);
+        assert!(!idx.grid().contains(ghost));
+    }
+
+    #[test]
+    fn merged_log_double_move_lands_on_final_cell() {
+        let mut net = random_net(10, 35, 0);
+        let mut idx = build_indexed(&net, 0.1);
+        let id = net.ids().next().unwrap();
+        let mut log = ChangeLog::default();
+        let p0 = net.pos(id);
+        net.set_pos(id, Vec3::new(0.95, 0.95, 0.95));
+        log.moved.push((id, p0));
+        let p1 = net.pos(id);
+        net.set_pos(id, Vec3::new(0.05, 0.05, 0.05));
+        log.moved.push((id, p1));
+        idx.sync_with_net(&net, &log);
+        idx.grid().check_invariants().unwrap();
+        let mut seen = Vec::new();
+        idx.grid().for_neighborhood(Vec3::new(0.05, 0.05, 0.05), |u| seen.push(u));
+        assert!(seen.contains(&id));
     }
 
     #[test]

@@ -1,12 +1,17 @@
 //! The Find Winners phase — the paper's compute hot-spot — behind one trait
-//! with four implementations matching the paper's four experimental columns:
+//! with four implementations, serving the six-driver matrix of
+//! [`crate::engine`]:
 //!
-//! | paper column | impl | strategy |
+//! | impl | strategy | used by drivers |
 //! |---|---|---|
-//! | Single-signal | [`Scalar`] | exhaustive scan per signal |
-//! | Indexed | [`Indexed`] | spatial hash, 27-cell query, exhaustive fallback |
-//! | Multi-signal | [`BatchRust`] | batched scan, unit-tiled for cache reuse |
-//! | GPU-based | `runtime::PjrtFindWinners` | AOT Pallas/XLA artifact via PJRT |
+//! | [`Scalar`] | exhaustive scan per signal | single |
+//! | [`Indexed`] | spatial hash, 27-cell query, exhaustive fallback | indexed |
+//! | [`BatchRust`] | batched scan, unit-tiled for cache reuse | multi, pipelined, parallel |
+//! | `runtime::PjrtFindWinners` | AOT Pallas/XLA artifact via PJRT | pjrt |
+//!
+//! The first four driver columns are the paper's (§3.1); `pipelined` and
+//! `parallel` are this reproduction's Update-phase drivers and reuse the
+//! `BatchRust` scan unchanged.
 //!
 //! All implementations share *exact* semantics (squared distances in f32 via
 //! the naive difference form, lowest-index tie-break); `Indexed` is the one
@@ -52,6 +57,14 @@ pub trait FindWinners {
     /// Notification that the Update phase changed the network — index-based
     /// implementations maintain their structures here ("the maintenance of
     /// the index … is performed in the Update phase", §3.1).
+    ///
+    /// Contract: drivers call this **once per batch** with the *merged*
+    /// change log of every signal applied in that batch (plus once per
+    /// housekeeping scan). A unit may therefore appear multiple times and
+    /// in several lists at once — moved twice, moved then removed, or
+    /// removed with its slab slot reused by a later insert — and
+    /// implementations must reconcile against the network's final state
+    /// rather than replay entries as edits (see `Indexed::sync_with_net`).
     fn sync(&mut self, _net: &Network, _changes: &ChangeLog) {}
 
     /// (Re)build any internal structure from scratch (called once after

@@ -72,6 +72,23 @@ impl Aabb {
         self.min.x > self.max.x
     }
 
+    /// Squared distance from `p` to the box (0 inside, `+inf` for empty).
+    ///
+    /// Monotonicity note: each per-axis clamp is computed with the same
+    /// correctly-rounded f32 subtractions as a point-to-point `dist2`, so
+    /// `self.dist2(p) <= p.dist2(q)` holds in f32 for every `q` inside the
+    /// box — the property the batch staleness guard's early exit relies on.
+    #[inline]
+    pub fn dist2(&self, p: Vec3) -> f32 {
+        if self.is_empty() {
+            return f32::INFINITY;
+        }
+        let dx = (self.min.x - p.x).max(0.0).max(p.x - self.max.x);
+        let dy = (self.min.y - p.y).max(0.0).max(p.y - self.max.y);
+        let dz = (self.min.z - p.z).max(0.0).max(p.z - self.max.z);
+        dx * dx + dy * dy + dz * dz
+    }
+
     /// Surface area (0 for empty).
     pub fn area(&self) -> f32 {
         if self.is_empty() {
@@ -115,6 +132,36 @@ mod tests {
         let b = Aabb::new(Vec3::ZERO, Vec3::ONE).inflated(0.5);
         assert_eq!(b.min, Vec3::splat(-0.5));
         assert_eq!(b.max, Vec3::splat(1.5));
+    }
+
+    #[test]
+    fn dist2_inside_edge_outside() {
+        let b = Aabb::new(Vec3::ZERO, Vec3::ONE);
+        assert_eq!(b.dist2(Vec3::new(0.5, 0.5, 0.5)), 0.0);
+        assert_eq!(b.dist2(Vec3::new(1.0, 1.0, 1.0)), 0.0);
+        assert_eq!(b.dist2(Vec3::new(2.0, 0.5, 0.5)), 1.0);
+        let d = b.dist2(Vec3::new(-1.0, -1.0, 2.0));
+        assert!((d - 3.0).abs() < 1e-6);
+        assert_eq!(Aabb::EMPTY.dist2(Vec3::ZERO), f32::INFINITY);
+    }
+
+    #[test]
+    fn dist2_lower_bounds_member_points() {
+        let pts = [
+            Vec3::new(0.1, 0.9, 0.4),
+            Vec3::new(0.7, 0.2, 0.8),
+            Vec3::new(0.3, 0.3, 0.1),
+        ];
+        let b = Aabb::from_points(pts.iter());
+        for q in [
+            Vec3::new(-0.5, 0.5, 0.5),
+            Vec3::new(0.5, 0.5, 0.5),
+            Vec3::new(2.0, -1.0, 0.3),
+        ] {
+            for p in &pts {
+                assert!(b.dist2(q) <= q.dist2(*p));
+            }
+        }
     }
 
     #[test]

@@ -127,6 +127,14 @@ impl HashGrid {
         }
     }
 
+    /// Is `id` currently indexed? (Cheap: one `slot_of` probe.)
+    #[inline]
+    pub fn contains(&self, id: UnitId) -> bool {
+        self.slot_of
+            .get(id as usize)
+            .is_some_and(|&s| s != u32::MAX)
+    }
+
     /// Number of indexed units (for invariants/tests).
     pub fn len(&self) -> usize {
         self.slot_of.iter().filter(|&&s| s != u32::MAX).count()

@@ -31,8 +31,8 @@
 //! | [`index`] | uniform spatial hash grid (the paper's *Indexed* variant) |
 //! | [`findwinners`] | `FindWinners` trait: scalar / indexed / batched impls |
 //! | [`runtime`] | PJRT client + AOT artifact registry (the *GPU-based* variant) |
-//! | [`coordinator`] | multi-signal batcher, m-schedule, winner locks, pipeline |
-//! | [`engine`] | convergence drivers for all four paper implementations |
+//! | [`coordinator`] | batch-update executor, m-schedule, winner locks, pipeline |
+//! | [`engine`] | convergence drivers: the paper's four columns + pipelined/parallel |
 //! | [`config`] | config structs, TOML-subset parser, per-mesh presets |
 //! | [`cli`] | argument parsing for the `msgsn` binary |
 //! | [`metrics`] | phase timers, counters, table rendering |

@@ -11,8 +11,7 @@ use anyhow::{bail, Context, Result};
 use msgsn::bench::{self, Scale};
 use msgsn::cli::{parse, Command, Parsed, USAGE};
 use msgsn::config::{parse_config_text, Algorithm, ConfigValue, Driver, RunConfig};
-use msgsn::coordinator::run_pipelined;
-use msgsn::engine::{make_algorithm, make_findwinners, run};
+use msgsn::engine::{make_algorithm, make_findwinners, run, run_convergence};
 use msgsn::mesh::{benchmark_mesh, write_obj, write_off, BenchmarkShape, SurfaceSampler};
 use msgsn::rng::Rng;
 use msgsn::runtime::Registry;
@@ -61,9 +60,8 @@ fn build_config(p: &Parsed) -> Result<RunConfig> {
         cfg.apply_all(&map)?;
     }
     if let Some(d) = p.get("driver") {
-        if d != "pipelined" {
-            cfg.driver = Driver::from_name(d).with_context(|| format!("unknown driver {d:?}"))?;
-        }
+        cfg.driver = Driver::from_name(d)
+            .with_context(|| format!("unknown driver {d:?} (expected {})", Driver::NAMES))?;
     }
     if let Some(a) = p.get("algorithm") {
         cfg.algorithm =
@@ -110,19 +108,7 @@ fn cmd_run(p: &Parsed) -> Result<()> {
         );
     }
     let mut rng = Rng::seed_from(cfg.seed);
-    let report = if p.get("driver") == Some("pipelined") {
-        let sampler = SurfaceSampler::new(&mesh);
-        let mut algo = make_algorithm(&cfg);
-        let mut cfg2 = cfg.clone();
-        cfg2.driver = Driver::Multi;
-        let mut fw = make_findwinners(&cfg2)?;
-        let mut r =
-            run_pipelined(algo.as_mut(), &sampler, fw.as_mut(), &cfg.limits, &mut rng, 2);
-        r.mesh = Some(cfg.shape.name().to_string());
-        r
-    } else {
-        run(&mesh, cfg.driver, &cfg, &mut rng)?
-    };
+    let report = run(&mesh, cfg.driver, &cfg, &mut rng)?;
     if !p.flag("quiet") {
         print!("{}", report.to_table().render());
     }
@@ -144,16 +130,11 @@ fn reconstruct_for_export(
     mesh: &msgsn::mesh::Mesh,
     cfg: &RunConfig,
 ) -> Result<msgsn::mesh::Mesh> {
-    use msgsn::engine::{run_multi_signal, run_single_signal};
     let sampler = SurfaceSampler::new(mesh);
     let mut algo = make_algorithm(cfg);
     let mut fw = make_findwinners(cfg)?;
     let mut rng = Rng::seed_from(cfg.seed);
-    if cfg.driver.is_multi_signal() {
-        run_multi_signal(algo.as_mut(), &sampler, fw.as_mut(), &cfg.limits, &mut rng);
-    } else {
-        run_single_signal(algo.as_mut(), &sampler, fw.as_mut(), &cfg.limits, &mut rng);
-    }
+    run_convergence(algo.as_mut(), &sampler, fw.as_mut(), cfg, &mut rng);
     Ok(algo.net().to_mesh())
 }
 
@@ -199,10 +180,19 @@ fn cmd_reproduce(p: &Parsed) -> Result<()> {
         scale.name,
         shapes.iter().map(|s| s.name()).collect::<Vec<_>>(),
     );
+    // Default: the full six-driver comparison (the paper's four columns
+    // plus pipelined/parallel); `--paper-only` restricts to the paper's
+    // grid — worthwhile at `--scale paper`, where every extra driver is
+    // another hours-long run.
+    let drivers: &[Driver] = if p.flag("paper-only") {
+        &Driver::PAPER_COLUMNS
+    } else {
+        &Driver::ALL
+    };
     let artifacts = PathBuf::from("artifacts");
     let grid = bench::grid::run_grid(
         &shapes,
-        &Driver::ALL,
+        drivers,
         &scale,
         seed,
         Some(artifacts),
@@ -287,8 +277,12 @@ fn cmd_ablate(p: &Parsed) -> Result<()> {
         println!("Ablation: hash-index cube size (Indexed variant)\n");
         println!("{}", bench::ablate_index_cell(seed)?.render());
     }
-    if !matches!(which, "locks" | "schedule" | "cell" | "all") {
-        bail!("--which expects locks|schedule|cell|all");
+    if matches!(which, "executor" | "all") {
+        println!("Ablation: Update-phase execution (multi / pipelined / parallel)\n");
+        println!("{}", bench::ablate_update_executor(max_signals, seed)?.render());
+    }
+    if !matches!(which, "locks" | "schedule" | "cell" | "executor" | "all") {
+        bail!("--which expects locks|schedule|cell|executor|all");
     }
     Ok(())
 }

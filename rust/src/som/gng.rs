@@ -5,6 +5,13 @@
 //! worst-error neighbor. Included for framework completeness (the paper
 //! discusses GNG as the main prior growing network and the GPU baselines
 //! [6], [18] parallelize it) and exercised by the `gng_clustering` example.
+//!
+//! GNG keeps the default `Structural` classification for every update (see
+//! [`super::GrowingNetwork::classify_update`]): its global error decay
+//! (`beta`) touches every unit on every signal and its insertion schedule
+//! depends on the global signal counter, so no update's effects are
+//! confined to the winner's neighborhood. Under the `Parallel` driver GNG
+//! therefore runs sequentially — identical to `Multi` by definition.
 
 use crate::geometry::Vec3;
 use crate::mesh::SurfaceSampler;

@@ -12,7 +12,7 @@ use crate::rng::Rng;
 
 use super::network::{ChangeLog, Network, UnitId};
 use super::params::GwrParams;
-use super::{GrowingNetwork, QeTracker, Winners};
+use super::{GrowingNetwork, QeTracker, UpdateKind, UpdatePlan, Winners};
 
 /// GWR algorithm state.
 pub struct Gwr {
@@ -120,6 +120,115 @@ impl Gwr {
         let b = net.insert(sampler.sample(rng), threshold);
         net.connect(a, b);
     }
+
+    /// Read-only mirror of [`Self::gwr_update`]'s branch structure: predicts
+    /// whether the update would take the insertion branch or whether the
+    /// post-aging edge prune could fire (either one is `Structural`).
+    /// Anything else is the pure adapt branch with a provably no-op prune —
+    /// the winner keeps at least the age-0 `w1`–`w2` edge, so no orphan
+    /// removal can happen either.
+    pub(super) fn gwr_classify(
+        net: &Network,
+        params: &GwrParams,
+        w: &Winners,
+        per_unit_threshold: bool,
+    ) -> UpdateKind {
+        if !net.is_alive(w.w1) || !net.is_alive(w.w2) || w.w1 == w.w2 {
+            // Degenerate (stale winners): let `update` discard it inline.
+            return UpdateKind::Structural;
+        }
+        let d1 = w.d1_sq.sqrt();
+        let threshold = if per_unit_threshold {
+            net.unit(w.w1).threshold
+        } else {
+            params.insertion_threshold
+        };
+        let habituated = params.hab.is_habituated(net.unit(w.w1).firing);
+        if d1 > threshold && habituated && net.len() < params.max_units {
+            return UpdateKind::Structural; // insertion branch
+        }
+        // Prune prediction: `update` ages every edge of w1 by 1.0 and then
+        // drops edges older than max_age; the w1–w2 edge is exempt (connect
+        // resets it to age 0 first). Same float expression as the prune.
+        let will_prune = net
+            .edges_of(w.w1)
+            .iter()
+            .any(|e| e.to != w.w2 && e.age + 1.0 > params.adapt.max_age);
+        if will_prune {
+            UpdateKind::Structural
+        } else {
+            UpdateKind::Adapt
+        }
+    }
+
+    /// Pure-function half of the adapt branch of [`Self::gwr_update`]:
+    /// computes every position and firing write into `plan` without
+    /// mutating the network. Only valid after [`Self::gwr_classify`]
+    /// returned [`UpdateKind::Adapt`] for unchanged state.
+    pub(super) fn gwr_plan(
+        net: &Network,
+        params: &GwrParams,
+        signal: Vec3,
+        w: &Winners,
+        plan: &mut UpdatePlan,
+    ) {
+        plan.clear();
+        plan.w1 = w.w1;
+        plan.w2 = w.w2;
+        plan.d1_sq = w.d1_sq;
+
+        let hw = net.unit(w.w1).firing;
+        let mod_b = if params.adapt.firing_modulation { hw } else { 1.0 };
+        let old = net.pos(w.w1);
+        plan.moves
+            .push((w.w1, old + (signal - old) * (params.adapt.eps_b * mod_b)));
+
+        // Neighbor order must match `update`: the existing adjacency of w1,
+        // plus w2 appended at the end when the competitive-Hebbian connect
+        // would create (not reset) the w1–w2 edge.
+        let mut neighbor = |n: UnitId| {
+            let hn = net.unit(n).firing;
+            let mod_n = if params.adapt.firing_modulation { hn } else { 1.0 };
+            let old_n = net.pos(n);
+            plan.moves
+                .push((n, old_n + (signal - old_n) * (params.adapt.eps_n * mod_n)));
+            plan.firing.push((n, params.hab.fire_neighbor(hn)));
+        };
+        for e in net.edges_of(w.w1) {
+            neighbor(e.to);
+        }
+        if !net.has_edge(w.w1, w.w2) {
+            neighbor(w.w2);
+        }
+        plan.firing.push((w.w1, params.hab.fire_winner(hw)));
+    }
+
+    /// Apply a plan from [`Self::gwr_plan`]: replays aging + connect, then
+    /// the precomputed writes — bit-identical to the adapt branch of
+    /// [`Self::gwr_update`] (whose prune is a no-op by classification).
+    pub(super) fn gwr_commit(
+        net: &mut Network,
+        params: &GwrParams,
+        plan: &UpdatePlan,
+        log: &mut ChangeLog,
+    ) {
+        net.age_edges_of(plan.w1, 1.0);
+        net.connect(plan.w1, plan.w2);
+        for &(id, new_pos) in &plan.moves {
+            let old = net.pos(id);
+            net.set_pos(id, new_pos);
+            log.moved.push((id, old));
+        }
+        for &(id, f) in &plan.firing {
+            net.unit_mut(id).firing = f;
+        }
+        debug_assert!(
+            net.edges_of(plan.w1)
+                .iter()
+                .all(|e| e.age <= params.adapt.max_age),
+            "classified Adapt but the prune would fire"
+        );
+    }
 }
 
 impl GrowingNetwork for Gwr {
@@ -159,6 +268,19 @@ impl GrowingNetwork for Gwr {
 
     fn quantization_error(&self) -> f32 {
         self.qe.value()
+    }
+
+    fn classify_update(&self, _signal: Vec3, w: &Winners) -> UpdateKind {
+        Self::gwr_classify(&self.net, &self.params, w, false)
+    }
+
+    fn plan_update(&self, signal: Vec3, w: &Winners, plan: &mut UpdatePlan) {
+        Self::gwr_plan(&self.net, &self.params, signal, w, plan);
+    }
+
+    fn commit_update(&mut self, plan: &UpdatePlan, log: &mut ChangeLog) {
+        Self::gwr_commit(&mut self.net, &self.params, plan, log);
+        self.qe.push(plan.d1_sq);
     }
 }
 

@@ -36,13 +36,57 @@ pub struct Winners {
     pub d2_sq: f32,
 }
 
+/// Predicted effect class of one update, as reported by
+/// [`GrowingNetwork::classify_update`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UpdateKind {
+    /// Pure adaptation: position / firing / edge-age bookkeeping confined
+    /// to `{w1, w2} ∪ N(w1)`; provably no unit insertion, no unit removal,
+    /// no edge pruning. Safe to plan off-thread and commit later.
+    Adapt,
+    /// May insert or remove units or prune edges — or the algorithm cannot
+    /// cheaply prove it won't. Must run inline on the driver thread (the
+    /// conservative default).
+    Structural,
+}
+
+/// A precomputed `Adapt`-class update: the pure-function half of the
+/// deferred-commit split used by the `Parallel` driver. Produced off-thread
+/// by [`GrowingNetwork::plan_update`], applied in admission order by
+/// [`GrowingNetwork::commit_update`]. Buffers are reused across signals.
+#[derive(Clone, Debug, Default)]
+pub struct UpdatePlan {
+    pub w1: UnitId,
+    pub w2: UnitId,
+    pub d1_sq: f32,
+    /// `(unit, new position)` in the exact order `update` would move them
+    /// (winner first, then the winner's neighbors in adjacency order).
+    pub moves: Vec<(UnitId, Vec3)>,
+    /// `(unit, new firing level)`, winner last — mirrors `update`.
+    pub firing: Vec<(UnitId, f32)>,
+}
+
+impl UpdatePlan {
+    pub fn clear(&mut self) {
+        self.w1 = 0;
+        self.w2 = 0;
+        self.d1_sq = 0.0;
+        self.moves.clear();
+        self.firing.clear();
+    }
+}
+
 /// The Update phase of a growing self-organizing network.
 ///
 /// Implementations must treat `update` as *the single-signal update rule*:
 /// the multi-signal driver reproduces the paper's semantics by calling it
 /// sequentially under the winner-lock discipline (DESIGN.md §4), so any
 /// state an implementation keeps must be valid under interleaved signals.
-pub trait GrowingNetwork {
+///
+/// The `Send + Sync` bound exists for the `Parallel` driver, which shares
+/// `&self` across worker threads during the read-only plan pass; every
+/// implementation here is plain data, so the bound is free.
+pub trait GrowingNetwork: Send + Sync {
     /// Algorithm name, as printed in reports.
     fn name(&self) -> &'static str;
 
@@ -73,6 +117,34 @@ pub trait GrowingNetwork {
     /// Running quantization error (EMA of the squared winner distance) —
     /// the convergence measure of GNG/GWR and a reported metric for SOAM.
     fn quantization_error(&self) -> f32;
+
+    /// Read-only prediction of what `update` would do for this signal in
+    /// the *current* state. Returning [`UpdateKind::Adapt`] is a promise
+    /// that `update` would neither insert nor remove units nor prune edges
+    /// and that every read and write stays inside `{w1, w2} ∪ N(w1)` — the
+    /// `Parallel` driver relies on it to plan such updates off-thread.
+    /// Default: [`UpdateKind::Structural`], which is always safe (the
+    /// driver then degenerates to the sequential `Multi` semantics; GNG
+    /// keeps this default because its global error decay touches every
+    /// unit on every signal).
+    fn classify_update(&self, _signal: Vec3, _w: &Winners) -> UpdateKind {
+        UpdateKind::Structural
+    }
+
+    /// Compute the effect of an `Adapt`-class update without mutating
+    /// anything. Called (possibly from a worker thread) only after
+    /// [`Self::classify_update`] returned `Adapt` and only while the
+    /// touched units are guaranteed unchanged since classification.
+    fn plan_update(&self, _signal: Vec3, _w: &Winners, _plan: &mut UpdatePlan) {
+        unreachable!("plan_update on an algorithm that never classifies Adapt");
+    }
+
+    /// Apply a plan produced by [`Self::plan_update`]. Must leave the
+    /// network (and the algorithm's own state) bit-identical to having
+    /// called `update` directly at this point in the signal order.
+    fn commit_update(&mut self, _plan: &UpdatePlan, _log: &mut ChangeLog) {
+        unreachable!("commit_update on an algorithm that never classifies Adapt");
+    }
 }
 
 /// Shared helper: exponential moving average of the quantization error.

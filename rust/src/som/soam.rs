@@ -26,7 +26,7 @@ use crate::topology::LinkClass;
 use super::gwr::Gwr;
 use super::network::{ChangeLog, Network, UnitId};
 use super::params::{GwrParams, SoamParams};
-use super::{GrowingNetwork, QeTracker, Winners};
+use super::{GrowingNetwork, QeTracker, UpdateKind, UpdatePlan, Winners};
 
 /// Aggregate topological state of the network at the last housekeeping scan.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -229,6 +229,19 @@ impl GrowingNetwork for Soam {
 
     fn quantization_error(&self) -> f32 {
         self.qe.value()
+    }
+
+    fn classify_update(&self, _signal: Vec3, w: &Winners) -> UpdateKind {
+        Gwr::gwr_classify(&self.net, &self.gwr_view, w, true)
+    }
+
+    fn plan_update(&self, signal: Vec3, w: &Winners, plan: &mut UpdatePlan) {
+        Gwr::gwr_plan(&self.net, &self.gwr_view, signal, w, plan);
+    }
+
+    fn commit_update(&mut self, plan: &UpdatePlan, log: &mut ChangeLog) {
+        Gwr::gwr_commit(&mut self.net, &self.gwr_view, plan, log);
+        self.qe.push(plan.d1_sq);
     }
 }
 

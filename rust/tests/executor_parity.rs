@@ -1,0 +1,231 @@
+//! Refactor-parity tests for the unified batch-update executor.
+//!
+//! `reference_multi_signal` below is a line-for-line copy of the
+//! pre-refactor `engine::run_multi_signal` loop (per-signal winner locks,
+//! linear-scan staleness guard, one `fw.sync` per applied signal) — kept
+//! here as the executable specification. The refactored drivers must
+//! reproduce it bit-for-bit:
+//!
+//! - `Driver::Multi` through the shared `BatchExecutor` (merged per-batch
+//!   sync, AABB-early-exit staleness guard) must match the reference on
+//!   every unit position, firing level, edge and report counter;
+//! - `Driver::Parallel` must match `Driver::Multi` for any
+//!   `update_threads`, including auto-detect.
+
+use msgsn::config::Limits;
+use msgsn::coordinator::LockTable;
+use msgsn::engine::{m_schedule, run_multi_signal, run_parallel};
+use msgsn::findwinners::{BatchRust, FindWinners};
+use msgsn::geometry::Vec3;
+use msgsn::mesh::{benchmark_mesh, BenchmarkShape, SurfaceSampler};
+use msgsn::rng::Rng;
+use msgsn::som::{
+    ChangeLog, GrowingNetwork, Gwr, GwrParams, Network, Soam, SoamParams, Winners,
+};
+
+/// The pre-refactor multi-signal driver loop, verbatim (modulo the report
+/// struct: we only track the counters the assertions need).
+#[allow(clippy::too_many_lines)]
+fn reference_multi_signal(
+    algo: &mut dyn GrowingNetwork,
+    sampler: &SurfaceSampler,
+    fw: &mut dyn FindWinners,
+    limits: &Limits,
+    rng: &mut Rng,
+) -> (u64, u64, u64) {
+    let mut log = ChangeLog::default();
+    algo.init(sampler, rng);
+    fw.rebuild(algo.net());
+
+    let mut signals: Vec<Vec3> = Vec::new();
+    let mut winners: Vec<Option<Winners>> = Vec::new();
+    let mut order: Vec<u32> = Vec::new();
+    let mut locks = LockTable::new();
+    let mut batch_inserted: Vec<Vec3> = Vec::new();
+
+    let (mut iterations, mut total_signals, mut discarded) = (0u64, 0u64, 0u64);
+    loop {
+        iterations += 1;
+        let m = m_schedule(algo.net().len(), limits.max_parallelism);
+
+        sampler.sample_batch(rng, m, &mut signals);
+        fw.find2_batch(algo.net(), &signals, &mut winners);
+
+        rng.permutation(m, &mut order);
+        locks.next_batch();
+        locks.ensure_capacity(algo.net().capacity());
+        batch_inserted.clear();
+        for &j in &order {
+            let w = match winners[j as usize] {
+                Some(w) => w,
+                None => {
+                    discarded += 1;
+                    continue;
+                }
+            };
+            let signal = signals[j as usize];
+            if !algo.net().is_alive(w.w1)
+                || !algo.net().is_alive(w.w2)
+                || batch_inserted.iter().any(|p| signal.dist2(*p) < w.d1_sq)
+                || !locks.try_lock(w.w1)
+            {
+                discarded += 1;
+                continue;
+            }
+            log.clear();
+            algo.update(signal, &w, &mut log);
+            for &id in &log.inserted {
+                batch_inserted.push(algo.net().pos(id));
+            }
+            fw.sync(algo.net(), &log);
+        }
+        total_signals += m as u64;
+
+        log.clear();
+        let converged = algo.housekeeping(&mut log);
+        if !log.is_empty() {
+            fw.sync(algo.net(), &log);
+        }
+        if converged {
+            break;
+        }
+        if total_signals >= limits.max_signals {
+            break;
+        }
+    }
+    (iterations, total_signals, discarded)
+}
+
+/// Bitwise network equality: slab layout, aliveness, positions, firing,
+/// error, thresholds and the full aged edge sets.
+fn assert_networks_identical(a: &Network, b: &Network, label: &str) {
+    assert_eq!(a.capacity(), b.capacity(), "{label}: slab capacity");
+    assert_eq!(a.len(), b.len(), "{label}: live units");
+    assert_eq!(a.edge_count(), b.edge_count(), "{label}: edges");
+    for id in 0..a.capacity() as u32 {
+        assert_eq!(a.is_alive(id), b.is_alive(id), "{label}: aliveness of {id}");
+        if !a.is_alive(id) {
+            continue;
+        }
+        let (ua, ub) = (a.unit(id), b.unit(id));
+        for (va, vb, what) in [
+            (ua.pos.x, ub.pos.x, "pos.x"),
+            (ua.pos.y, ub.pos.y, "pos.y"),
+            (ua.pos.z, ub.pos.z, "pos.z"),
+            (ua.firing, ub.firing, "firing"),
+            (ua.error, ub.error, "error"),
+            (ua.threshold, ub.threshold, "threshold"),
+        ] {
+            assert_eq!(va.to_bits(), vb.to_bits(), "{label}: unit {id} {what}");
+        }
+        let mut ea: Vec<(u32, u32)> =
+            a.edges_of(id).iter().map(|e| (e.to, e.age.to_bits())).collect();
+        let mut eb: Vec<(u32, u32)> =
+            b.edges_of(id).iter().map(|e| (e.to, e.age.to_bits())).collect();
+        ea.sort_unstable();
+        eb.sort_unstable();
+        assert_eq!(ea, eb, "{label}: edges of {id}");
+    }
+}
+
+fn limits(max_signals: u64) -> Limits {
+    Limits { max_signals, ..Limits::default() }
+}
+
+fn blob_sampler() -> SurfaceSampler {
+    SurfaceSampler::new(&benchmark_mesh(BenchmarkShape::Blob, 20))
+}
+
+#[test]
+fn multi_through_executor_matches_pre_refactor_reference() {
+    for seed in [1u64, 9, 42] {
+        let sampler = blob_sampler();
+        let lim = limits(30_000);
+
+        let mut soam_a = Soam::new(SoamParams {
+            insertion_threshold: 0.16,
+            ..SoamParams::default()
+        });
+        let mut fw_a = BatchRust::default();
+        let mut rng_a = Rng::seed_from(seed);
+        let (it_a, sig_a, disc_a) =
+            reference_multi_signal(&mut soam_a, &sampler, &mut fw_a, &lim, &mut rng_a);
+
+        let mut soam_b = Soam::new(SoamParams {
+            insertion_threshold: 0.16,
+            ..SoamParams::default()
+        });
+        let mut fw_b = BatchRust::default();
+        let mut rng_b = Rng::seed_from(seed);
+        let r = run_multi_signal(&mut soam_b, &sampler, &mut fw_b, &lim, &mut rng_b);
+
+        assert_eq!(it_a, r.iterations, "seed {seed}: iterations");
+        assert_eq!(sig_a, r.signals, "seed {seed}: signals");
+        assert_eq!(disc_a, r.discarded, "seed {seed}: discarded");
+        assert_networks_identical(
+            soam_a.net(),
+            soam_b.net(),
+            &format!("seed {seed}: multi vs reference"),
+        );
+    }
+}
+
+#[test]
+fn parallel_matches_multi_for_every_thread_count() {
+    for (seed, threads) in [(7u64, 1usize), (7, 2), (7, 4), (7, 0), (21, 3)] {
+        let sampler = blob_sampler();
+        let lim = limits(30_000);
+
+        let mut soam_a = Soam::new(SoamParams {
+            insertion_threshold: 0.16,
+            ..SoamParams::default()
+        });
+        let mut fw_a = BatchRust::default();
+        let mut rng_a = Rng::seed_from(seed);
+        let a = run_multi_signal(&mut soam_a, &sampler, &mut fw_a, &lim, &mut rng_a);
+
+        let mut soam_b = Soam::new(SoamParams {
+            insertion_threshold: 0.16,
+            ..SoamParams::default()
+        });
+        let mut fw_b = BatchRust::default();
+        let mut rng_b = Rng::seed_from(seed);
+        let b = run_parallel(&mut soam_b, &sampler, &mut fw_b, &lim, &mut rng_b, threads);
+
+        assert_eq!(a.iterations, b.iterations, "seed {seed} threads {threads}");
+        assert_eq!(a.signals, b.signals, "seed {seed} threads {threads}");
+        assert_eq!(a.discarded, b.discarded, "seed {seed} threads {threads}");
+        assert_eq!(a.qe.to_bits(), b.qe.to_bits(), "seed {seed} threads {threads}: qe");
+        assert_networks_identical(
+            soam_a.net(),
+            soam_b.net(),
+            &format!("seed {seed} threads {threads}: parallel vs multi"),
+        );
+    }
+}
+
+#[test]
+fn parallel_matches_multi_for_gwr() {
+    let sampler = blob_sampler();
+    let lim = limits(25_000);
+
+    let mut gwr_a = Gwr::new(GwrParams {
+        insertion_threshold: 0.12,
+        ..GwrParams::default()
+    });
+    let mut fw_a = BatchRust::default();
+    let mut rng_a = Rng::seed_from(4);
+    let a = run_multi_signal(&mut gwr_a, &sampler, &mut fw_a, &lim, &mut rng_a);
+
+    let mut gwr_b = Gwr::new(GwrParams {
+        insertion_threshold: 0.12,
+        ..GwrParams::default()
+    });
+    let mut fw_b = BatchRust::default();
+    let mut rng_b = Rng::seed_from(4);
+    let b = run_parallel(&mut gwr_b, &sampler, &mut fw_b, &lim, &mut rng_b, 3);
+
+    assert_eq!(a.discarded, b.discarded);
+    assert_eq!(a.qe.to_bits(), b.qe.to_bits());
+    assert_networks_identical(gwr_a.net(), gwr_b.net(), "gwr: parallel vs multi");
+}

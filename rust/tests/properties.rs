@@ -238,3 +238,110 @@ fn prop_sampler_on_surface() {
         },
     );
 }
+
+/// One merged-`ChangeLog` sync must leave the `Indexed` grid identical to
+/// syncing the same changes one signal at a time — the contract the
+/// batch-update executor's single-sync-per-batch relies on. Ops include
+/// the nasty merged cases: repeated moves, move-then-remove, and removal
+/// followed by an insert that reuses the slab slot.
+#[test]
+fn prop_merged_sync_equals_per_signal_syncs() {
+    use msgsn::som::Network as Net;
+
+    // Probe the grid through its public query surface: the sorted id set
+    // of each of a few dozen 27-cell neighborhoods.
+    fn probe(idx: &Indexed, seed: u64) -> Vec<Vec<u32>> {
+        let mut rng = Rng::seed_from(seed);
+        (0..40)
+            .map(|_| {
+                let p = Vec3::new(rng.f32(), rng.f32(), rng.f32());
+                let mut ids = Vec::new();
+                idx.grid().for_neighborhood(p, |id| ids.push(id));
+                ids.sort_unstable();
+                ids
+            })
+            .collect()
+    }
+
+    Prop::new(60, 8).run(
+        |rng, size| {
+            let units = sized_usize(rng, size, 3, 120);
+            let ops = sized_usize(rng, size, 1, 60);
+            (rng.next_u64(), units, ops)
+        },
+        |&(seed, units, ops)| {
+            let mut rng = Rng::seed_from(seed);
+            // Two identical nets evolve in lockstep; only the sync cadence
+            // differs between the two indexes.
+            let mut net_a = Net::new();
+            for _ in 0..units {
+                net_a.insert(Vec3::new(rng.f32(), rng.f32(), rng.f32()), 0.1);
+            }
+            let mut net_b = net_a.clone();
+            let mut idx_a = Indexed::new(0.11); // per-op syncs
+            let mut idx_b = Indexed::new(0.11); // one merged sync
+            idx_a.rebuild(&net_a);
+            idx_b.rebuild(&net_b);
+
+            let mut merged = ChangeLog::default();
+            let mut op_log = ChangeLog::default();
+            for _ in 0..ops {
+                op_log.clear();
+                let alive: Vec<u32> = net_a.ids().collect();
+                match rng.below(4) {
+                    0 | 1 => {
+                        // Move (the common case).
+                        let id = alive[rng.index(alive.len())];
+                        let old = net_a.pos(id);
+                        let new = Vec3::new(rng.f32(), rng.f32(), rng.f32());
+                        net_a.set_pos(id, new);
+                        net_b.set_pos(id, new);
+                        op_log.moved.push((id, old));
+                    }
+                    2 => {
+                        // Insert (reuses freed slab slots when available).
+                        let p = Vec3::new(rng.f32(), rng.f32(), rng.f32());
+                        let id_a = net_a.insert(p, 0.1);
+                        let id_b = net_b.insert(p, 0.1);
+                        if id_a != id_b {
+                            return Err(format!("slab divergence {id_a} vs {id_b}"));
+                        }
+                        op_log.inserted.push(id_a);
+                    }
+                    _ => {
+                        // Remove (keep at least 3 units alive).
+                        if alive.len() > 3 {
+                            let id = alive[rng.index(alive.len())];
+                            let pos = net_a.pos(id);
+                            net_a.remove(id);
+                            net_b.remove(id);
+                            op_log.removed.push((id, pos));
+                        }
+                    }
+                }
+                // Per-op cadence for A…
+                idx_a.sync_with_net(&net_a, &op_log);
+                // …accumulate for B's single merged sync.
+                merged.moved.extend_from_slice(&op_log.moved);
+                merged.inserted.extend_from_slice(&op_log.inserted);
+                merged.removed.extend_from_slice(&op_log.removed);
+            }
+            idx_b.sync_with_net(&net_b, &merged);
+
+            idx_a.grid().check_invariants().map_err(|e| format!("per-op grid: {e}"))?;
+            idx_b.grid().check_invariants().map_err(|e| format!("merged grid: {e}"))?;
+            if idx_a.grid().len() != idx_b.grid().len() {
+                return Err(format!(
+                    "indexed counts diverge: {} vs {}",
+                    idx_a.grid().len(),
+                    idx_b.grid().len()
+                ));
+            }
+            let (pa, pb) = (probe(&idx_a, seed ^ 0xA5), probe(&idx_b, seed ^ 0xA5));
+            if pa != pb {
+                return Err("neighborhood membership diverges".into());
+            }
+            Ok(())
+        },
+    );
+}
