@@ -49,5 +49,53 @@ fn main() -> anyhow::Result<()> {
         let (text, _) = render_figure10(&grid)?;
         println!("\n{text}");
     }
+
+    // Pooled-vs-sequential end-to-end: the same parallel driver with the
+    // worker pool off (update_threads=1, find_threads=1) and fully on
+    // (auto plan workers + sharded Find Winners on the shared pool).
+    // Results are bit-identical; only wall time may move.
+    println!("\nworker-pool end-to-end (blob, smoke scale):");
+    let mesh = msgsn::mesh::benchmark_mesh(BenchmarkShape::Blob, Scale::SMOKE.mesh_resolution);
+    let mut pool_rows = Vec::new();
+    let pool_runs = [("sequential", 1usize, 1usize), ("pooled", 0usize, 0usize)];
+    for (name, update_threads, find_threads) in pool_runs {
+        let mut cfg = Scale::SMOKE.configure(BenchmarkShape::Blob);
+        cfg.update_threads = update_threads;
+        cfg.find_threads = find_threads;
+        let mut rng = msgsn::rng::Rng::seed_from(42);
+        let t0 = std::time::Instant::now();
+        let r = msgsn::engine::run(&mesh, Driver::Parallel, &cfg, &mut rng)?;
+        let total = t0.elapsed().as_secs_f64();
+        println!(
+            "  {:10} {:>8.3}s  (find {:>7.3}s, update {:>7.3}s, {} units, {} discarded)",
+            name,
+            total,
+            r.phase.find.as_secs_f64(),
+            r.phase.update.as_secs_f64(),
+            r.units,
+            r.discarded,
+        );
+        pool_rows.push(format!(
+            "    {{\"row\": \"{name}\", \"update_threads\": {update_threads}, \
+             \"find_threads\": {find_threads}, \"total_s\": {total:.6}, \
+             \"find_s\": {:.6}, \"update_s\": {:.6}, \"units\": {}, \"discarded\": {}}}",
+            r.phase.find.as_secs_f64(),
+            r.phase.update.as_secs_f64(),
+            r.units,
+            r.discarded,
+        ));
+    }
+
+    let csv = grid.to_csv();
+    let json = format!(
+        "{{\n  \"bench\": \"end_to_end\",\n  \"worker_pool\": [\n{}\n  ],\n  \"grid_csv\": {:?}\n}}\n",
+        pool_rows.join(",\n"),
+        csv,
+    );
+    if let Err(e) = std::fs::write("BENCH_end_to_end.json", &json) {
+        eprintln!("(could not write BENCH_end_to_end.json: {e})");
+    } else {
+        println!("wrote BENCH_end_to_end.json");
+    }
     Ok(())
 }

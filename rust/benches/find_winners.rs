@@ -6,18 +6,26 @@
 //! criterion. Methodology: warm up, then repeat each measurement until
 //! ≥ `MIN_TIME` elapsed, report the best-of-`REPS` per-signal time (best-of
 //! resists scheduler noise on the single-CPU testbed).
+//!
+//! Columns: `exhaust` is the scalar reference scan (`exhaustive_top2`,
+//! pre-PR-2 `single`), `lane` is the lane-blocked SoA kernel (the current
+//! `single`), `multi` the SoA-tiled batch, `multi@N` the same batch sharded
+//! across N pool workers (`find_threads`), `pjrt` the AOT artifact.
+//! Results are written to `BENCH_find_winners.json` for the trajectory.
 
 use std::path::Path;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use msgsn::findwinners::{BatchRust, FindWinners, Indexed, Scalar};
+use msgsn::findwinners::{exhaustive_top2, BatchRust, FindWinners, Indexed, Scalar};
 use msgsn::geometry::Vec3;
 use msgsn::rng::Rng;
-use msgsn::runtime::{PjrtFindWinners, Registry};
+use msgsn::runtime::{PjrtFindWinners, Registry, WorkerPool};
 use msgsn::som::Network;
 
 const REPS: usize = 5;
 const MIN_TIME: Duration = Duration::from_millis(120);
+const POOL_SHARDS: usize = 4;
 
 fn random_net(n: usize, seed: u64) -> Network {
     let mut rng = Rng::seed_from(seed);
@@ -36,7 +44,7 @@ fn random_signals(m: usize, seed: u64) -> Vec<Vec3> {
 /// Best-of-REPS seconds per signal for one batched implementation.
 fn bench_batch(fw: &mut dyn FindWinners, net: &Network, signals: &[Vec3]) -> f64 {
     let mut out = Vec::new();
-    fw.find2_batch(net, signals, &mut out); // warmup (+ PJRT compile)
+    fw.find2_batch(net, signals, &mut out); // warmup (+ PJRT compile / gather)
     let mut best = f64::INFINITY;
     for _ in 0..REPS {
         let mut iters = 0u32;
@@ -51,15 +59,14 @@ fn bench_batch(fw: &mut dyn FindWinners, net: &Network, signals: &[Vec3]) -> f64
     best
 }
 
-/// Best-of-REPS seconds per signal for the per-signal (single) path.
-fn bench_single(fw: &mut dyn FindWinners, net: &Network, signals: &[Vec3]) -> f64 {
+/// Best-of-REPS seconds per signal for a per-signal closure.
+fn bench_single(mut f: impl FnMut(Vec3), signals: &[Vec3]) -> f64 {
     let mut best = f64::INFINITY;
     for _ in 0..REPS {
         let mut done = 0usize;
         let t0 = Instant::now();
         while t0.elapsed() < MIN_TIME {
-            let s = signals[done % signals.len()];
-            std::hint::black_box(fw.find2(net, s));
+            f(signals[done % signals.len()]);
             done += 1;
         }
         best = best.min(t0.elapsed().as_secs_f64() / done as f64);
@@ -71,19 +78,51 @@ fn main() {
     let pjrt_ready = Path::new("artifacts/manifest.json").exists();
     println!("find_winners microbenchmark (best-of-{REPS}, per-signal seconds)");
     println!(
-        "{:>7} {:>7} {:>12} {:>12} {:>12} {:>12} {:>9} {:>9}",
-        "units", "batch", "single", "indexed", "multi", "pjrt", "idx x", "pjrt x"
+        "{:>7} {:>7} {:>12} {:>12} {:>12} {:>12} {:>12} {:>12} {:>7} {:>7}",
+        "units",
+        "batch",
+        "exhaust",
+        "lane",
+        "indexed",
+        "multi",
+        format!("multi@{POOL_SHARDS}"),
+        "pjrt",
+        "lane x",
+        "pool x"
     );
+    let mut json_rows = Vec::new();
     for n in [128usize, 512, 2048, 8192] {
         let net = random_net(n, 1);
         let m = (n + 1).next_power_of_two().min(8192);
         let signals = random_signals(m, 2);
 
-        let single = bench_single(&mut Scalar::new(), &net, &signals);
+        let exhaust = bench_single(
+            |s| {
+                std::hint::black_box(exhaustive_top2(&net, s));
+            },
+            &signals,
+        );
+        let mut scalar = Scalar::new();
+        let lane = bench_single(
+            |s| {
+                std::hint::black_box(scalar.find2(&net, s));
+            },
+            &signals,
+        );
         let mut idx = Indexed::new(0.08);
         idx.rebuild(&net);
-        let indexed = bench_single(&mut idx, &net, &signals);
+        let indexed = bench_single(
+            |s| {
+                std::hint::black_box(idx.find2(&net, s));
+            },
+            &signals,
+        );
         let multi = bench_batch(&mut BatchRust::default(), &net, &signals);
+        let pooled = {
+            let mut fw = BatchRust::default();
+            fw.attach_pool(Arc::new(WorkerPool::new(POOL_SHARDS)), POOL_SHARDS);
+            bench_batch(&mut fw, &net, &signals)
+        };
         let pjrt = if pjrt_ready {
             // Flavor override for A/B runs: MSGSN_FLAVOR=pallas|scan.
             let flavor = std::env::var("MSGSN_FLAVOR").ok();
@@ -93,19 +132,36 @@ fn main() {
             f64::NAN
         };
         println!(
-            "{:>7} {:>7} {:>12.3e} {:>12.3e} {:>12.3e} {:>12.3e} {:>9.1} {:>9.1}",
+            "{:>7} {:>7} {:>12.3e} {:>12.3e} {:>12.3e} {:>12.3e} {:>12.3e} {:>12.3e} {:>7.1} {:>7.1}",
             n,
             m,
-            single,
+            exhaust,
+            lane,
             indexed,
             multi,
+            pooled,
             pjrt,
-            single / indexed,
-            single / pjrt
+            exhaust / lane,
+            multi / pooled,
         );
+        json_rows.push(format!(
+            "    {{\"units\": {n}, \"m\": {m}, \"exhaustive_s\": {exhaust:e}, \
+             \"lane_s\": {lane:e}, \"indexed_s\": {indexed:e}, \"multi_s\": {multi:e}, \
+             \"multi_pool{POOL_SHARDS}_s\": {pooled:e}, \"pjrt_s\": {}}}",
+            if pjrt.is_nan() { "null".to_string() } else { format!("{pjrt:e}") }
+        ));
     }
     if !pjrt_ready {
         println!("(pjrt column skipped: run `make artifacts`)");
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"find_winners\",\n  \"per_signal_seconds\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n")
+    );
+    if let Err(e) = std::fs::write("BENCH_find_winners.json", &json) {
+        eprintln!("(could not write BENCH_find_winners.json: {e})");
+    } else {
+        println!("\nwrote BENCH_find_winners.json");
     }
     println!(
         "\npaper shape (Fig 9b): speedups grow with the unit count; the \

@@ -2,14 +2,16 @@
 //! time-consuming" phase once Find Winners is accelerated, and leave its
 //! parallelization as future work. This bench quantifies the Update rule
 //! itself (SOAM adapt/insert/prune path) and the winner-lock overhead, and
-//! measures the pipelined driver's overlap win (our answer to that future
-//! work).
+//! measures the pipelined overlap, the pooled plan pass (vs the sequential
+//! plan — the old per-flush scoped spawn is gone entirely), and the
+//! `find_threads` sharding on the shared pool. Driver rows are written to
+//! `BENCH_update_phase.json` for the trajectory.
 
 use std::time::{Duration, Instant};
 
-use msgsn::config::Limits;
+use msgsn::config::{Driver, Limits, RunConfig};
 use msgsn::coordinator::{run_pipelined, LockTable};
-use msgsn::engine::{run_multi_signal, run_parallel};
+use msgsn::engine::run_multi_signal;
 use msgsn::findwinners::{BatchRust, FindWinners, Scalar};
 use msgsn::mesh::{benchmark_mesh, BenchmarkShape, SurfaceSampler};
 use msgsn::rng::Rng;
@@ -89,33 +91,72 @@ fn main() {
     }
 
     // 3. Update-phase drivers: plain multi vs pipelined (Sample/Update
-    //    overlap) vs parallel (threaded plan pass).
+    //    overlap) vs parallel with a sequential plan (update_threads=1) vs
+    //    the pooled plan pass (auto threads) vs pooled plan + sharded Find
+    //    Winners on the same pool. The parallel rows are bit-identical to
+    //    multi by construction — only the time columns may move.
     println!("\nupdate-phase drivers (300k signals, blob):");
-    for name in ["multi", "pipelined", "parallel"] {
+    let rows: [(&str, Driver, usize, usize); 5] = [
+        ("multi", Driver::Multi, 1, 1),
+        ("pipelined", Driver::Pipelined, 1, 1),
+        ("par seq-plan", Driver::Parallel, 1, 1),
+        ("par pooled", Driver::Parallel, 0, 1),
+        ("par pool+find", Driver::Parallel, 0, 0),
+    ];
+    let mut json_rows = Vec::new();
+    for (name, driver, update_threads, find_threads) in rows {
         let mut rng = Rng::seed_from(5);
-        let mut soam = Soam::new(SoamParams {
-            insertion_threshold: 0.1,
-            ..SoamParams::default()
-        });
+        let mut cfg = RunConfig::preset(BenchmarkShape::Blob);
+        cfg.soam.insertion_threshold = 0.1;
+        cfg.driver = driver;
+        cfg.update_threads = update_threads;
+        cfg.find_threads = find_threads;
+        cfg.limits = Limits { max_signals: 300_000, ..Limits::default() };
+        let mut soam = Soam::new(cfg.soam);
         let mut fw = BatchRust::default();
-        let limits = Limits { max_signals: 300_000, ..Limits::default() };
         let t0 = Instant::now();
-        let r = match name {
-            "multi" => run_multi_signal(&mut soam, &sampler, &mut fw, &limits, &mut rng),
-            "pipelined" => run_pipelined(&mut soam, &sampler, &mut fw, &limits, &mut rng, 2),
-            _ => run_parallel(&mut soam, &sampler, &mut fw, &limits, &mut rng, 0),
+        let r = match driver {
+            Driver::Pipelined => {
+                run_pipelined(&mut soam, &sampler, &mut fw, &cfg.limits, &mut rng, 2)
+            }
+            Driver::Multi => {
+                run_multi_signal(&mut soam, &sampler, &mut fw, &cfg.limits, &mut rng)
+            }
+            _ => msgsn::engine::run_convergence(&mut soam, &sampler, &mut fw, &cfg, &mut rng),
         };
+        let total = t0.elapsed().as_secs_f64();
         println!(
-            "  {:10} {:>8.3}s total  sample {:>7.3}s  find {:>7.3}s  update {:>7.3}s ({} units, {} discarded)",
+            "  {:14} {:>8.3}s total  sample {:>7.3}s  find {:>7.3}s  update {:>7.3}s ({} units, {} discarded)",
             name,
-            t0.elapsed().as_secs_f64(),
+            total,
             r.phase.sample.as_secs_f64(),
             r.phase.find.as_secs_f64(),
             r.phase.update.as_secs_f64(),
             r.units,
             r.discarded,
         );
+        json_rows.push(format!(
+            "    {{\"row\": \"{name}\", \"driver\": \"{}\", \"update_threads\": {update_threads}, \
+             \"find_threads\": {find_threads}, \"total_s\": {total:.6}, \
+             \"sample_s\": {:.6}, \"find_s\": {:.6}, \"update_s\": {:.6}, \
+             \"units\": {}, \"discarded\": {}}}",
+            driver.name(),
+            r.phase.sample.as_secs_f64(),
+            r.phase.find.as_secs_f64(),
+            r.phase.update.as_secs_f64(),
+            r.units,
+            r.discarded,
+        ));
     }
     println!("\n(pipelined: the Sample row is residual wait time — overlap hides the rest;");
-    println!(" parallel: identical units/discards to multi by construction)");
+    println!(" parallel rows: identical units/discards to multi by construction)");
+    let json = format!(
+        "{{\n  \"bench\": \"update_phase\",\n  \"drivers\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n")
+    );
+    if let Err(e) = std::fs::write("BENCH_update_phase.json", &json) {
+        eprintln!("(could not write BENCH_update_phase.json: {e})");
+    } else {
+        println!("wrote BENCH_update_phase.json");
+    }
 }

@@ -184,39 +184,54 @@ pub fn ablate_m_schedule(max_signals: u64, seed: u64) -> Table {
 
 /// Ablation 4: the Update-phase execution strategy — the same multi-signal
 /// semantics run sequentially (`multi`), with the Sample phase prefetched
-/// (`pipelined`), and with the threaded plan/commit split (`parallel`).
-/// Units/connections/discards must agree for `multi` vs `parallel` (bit
-/// parity by construction); the Update column shows where the time goes.
+/// (`pipelined`), with the pooled plan/commit split (`parallel`), and with
+/// Find Winners sharded across the same pool (`find_threads`).
+/// Units/connections/discards must agree across every row except
+/// `pipelined` (bit parity by construction); the Find/Update columns show
+/// where the time goes.
 pub fn ablate_update_executor(max_signals: u64, seed: u64) -> Result<Table> {
     let mesh = benchmark_mesh(BenchmarkShape::Blob, 32);
     let mut cfg = RunConfig::preset(BenchmarkShape::Blob);
     cfg.soam.insertion_threshold = 0.15;
     cfg.limits.max_signals = max_signals;
     let mut t = Table::new(&[
-        "driver", "threads", "converged", "units", "connections", "discarded",
-        "update_s", "total_s",
+        "driver",
+        "upd threads",
+        "find threads",
+        "converged",
+        "units",
+        "connections",
+        "discarded",
+        "find_s",
+        "update_s",
+        "total_s",
     ]);
-    let runs: [(Driver, usize); 4] = [
-        (Driver::Multi, 1),
-        (Driver::Pipelined, 1),
-        (Driver::Parallel, 1),
-        (Driver::Parallel, 0), // auto-detect
+    let fmt_threads = |n: usize| match n {
+        0 => "auto".to_string(),
+        n => n.to_string(),
+    };
+    let runs: [(Driver, usize, usize); 6] = [
+        (Driver::Multi, 1, 1),
+        (Driver::Multi, 1, 0), // sharded find, sequential update
+        (Driver::Pipelined, 1, 1),
+        (Driver::Parallel, 1, 1),
+        (Driver::Parallel, 0, 1), // pooled plan pass only
+        (Driver::Parallel, 0, 0), // shared pool: plan pass + sharded find
     ];
-    for (driver, update_threads) in runs {
+    for (driver, update_threads, find_threads) in runs {
         cfg.update_threads = update_threads;
+        cfg.find_threads = find_threads;
         let mut rng = Rng::seed_from(seed);
         let r = crate::engine::run(&mesh, driver, &cfg, &mut rng)?;
         t.row(vec![
             driver.name().into(),
-            if driver == Driver::Parallel && update_threads == 0 {
-                "auto".into()
-            } else {
-                update_threads.to_string()
-            },
+            fmt_threads(update_threads),
+            fmt_threads(find_threads),
             r.converged.to_string(),
             r.units.to_string(),
             r.connections.to_string(),
             r.discarded.to_string(),
+            format!("{:.3}", r.phase.find.as_secs_f64()),
             format!("{:.3}", r.phase.update.as_secs_f64()),
             format!("{:.3}", r.total.as_secs_f64()),
         ]);

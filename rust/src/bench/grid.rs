@@ -17,6 +17,11 @@ use super::scale::Scale;
 pub struct GridCell {
     pub shape: BenchmarkShape,
     pub driver: Driver,
+    /// Thread knobs the cell ran with (`update_threads`/`find_threads`
+    /// from the scale's config — 0 = auto-detect), recorded so the CSV
+    /// rows are self-describing.
+    pub update_threads: usize,
+    pub find_threads: usize,
     pub report: RunReport,
 }
 
@@ -51,12 +56,12 @@ impl Grid {
         let mut out = String::from(
             "mesh,driver,scale,seed,iterations,signals,discarded,units,\
              connections,converged,total_s,sample_s,find_s,update_s,\
-             time_per_signal,find_per_signal,qe\n",
+             time_per_signal,find_per_signal,qe,update_threads,find_threads\n",
         );
         for c in &self.cells {
             let r = &c.report;
             out.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.6},{:.6e},{:.6e},{:.6e}\n",
+                "{},{},{},{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.6},{:.6e},{:.6e},{:.6e},{},{}\n",
                 c.shape.name(),
                 c.driver.name(),
                 self.scale.name,
@@ -74,6 +79,8 @@ impl Grid {
                 r.time_per_signal(),
                 r.find_per_signal(),
                 r.qe,
+                c.update_threads,
+                c.find_threads,
             ));
         }
         out
@@ -124,7 +131,13 @@ pub fn run_grid(
                 report.discarded,
                 if report.converged { "converged" } else { "CAP HIT" },
             ));
-            cells.push(GridCell { shape, driver, report });
+            cells.push(GridCell {
+                shape,
+                driver,
+                update_threads: cfg.update_threads,
+                find_threads: cfg.find_threads,
+                report,
+            });
         }
     }
     Ok(Grid { scale: *scale, seed, cells })

@@ -43,7 +43,8 @@ USAGE:
       --seed <N>                                               [42]
       --config <file.toml>       load config file
       --set <key=value>          override any config key (repeatable;
-                                 e.g. queue_depth=4, update_threads=8)
+                                 e.g. queue_depth=4, update_threads=8,
+                                 find_threads=8 — 0 = auto-detect)
       --max-signals <N>          safety cap
       --trace                    record trace points
       --save-mesh <out.obj>      write the reconstructed network mesh

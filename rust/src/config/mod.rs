@@ -169,6 +169,14 @@ pub struct RunConfig {
     /// (0 = auto-detect, 1 = sequential; results are identical for any
     /// value by construction).
     pub update_threads: usize,
+    /// Worker shards for the batched Find Winners scan: `find2_batch`
+    /// signals are split across the run's persistent worker pool (shared
+    /// with the Update plan pass). 0 = auto-detect, 1 = sequential
+    /// (default). Each signal is computed independently, so results are
+    /// bit-identical for any value; only wall time changes. Applies to the
+    /// drivers whose scan runs in `BatchRust` (multi/pipelined/parallel);
+    /// the pjrt scan runs inside the XLA executable and ignores it.
+    pub find_threads: usize,
     /// Where the AOT artifacts live.
     pub artifacts_dir: PathBuf,
     /// Artifact flavor override (`pallas` / `scan`; None = manifest default).
@@ -226,6 +234,7 @@ impl RunConfig {
             "batch_tile" => self.batch_tile = int()? as usize,
             "queue_depth" => self.queue_depth = (int()? as usize).max(1),
             "update_threads" => self.update_threads = int()? as usize,
+            "find_threads" => self.find_threads = int()? as usize,
             "artifacts_dir" => {
                 self.artifacts_dir = value
                     .as_str()
@@ -406,5 +415,14 @@ mod tests {
         assert_eq!(cfg.queue_depth, 1, "depth clamps to >= 1");
         cfg.apply("update_threads", &ConfigValue::Num(8.0)).unwrap();
         assert_eq!(cfg.update_threads, 8);
+        assert_eq!(cfg.find_threads, 1, "sharded find is opt-in");
+        cfg.apply("find_threads", &ConfigValue::Num(4.0)).unwrap();
+        assert_eq!(cfg.find_threads, 4);
+        cfg.apply("find_threads", &ConfigValue::Num(0.0)).unwrap();
+        assert_eq!(cfg.find_threads, 0, "0 = auto-detect");
+        assert!(matches!(
+            cfg.apply("find_threads", &ConfigValue::Num(1.5)),
+            Err(ConfigError::Type(_, _))
+        ));
     }
 }

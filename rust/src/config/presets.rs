@@ -48,6 +48,11 @@ pub fn preset(shape: BenchmarkShape) -> RunConfig {
         batch_tile: 512,
         queue_depth: 2,
         update_threads: 0, // auto-detect
+        // Sharded Find Winners is opt-in (`--set find_threads=N|0`): the
+        // paper's Multi column is explicitly "without any actual
+        // parallelization", so the default keeps that semantics-preserving
+        // baseline single-threaded.
+        find_threads: 1,
         artifacts_dir: PathBuf::from("artifacts"),
         flavor: None,
         soam,

@@ -37,19 +37,22 @@
 //! algorithm won't certify) force a flush of the deferred plans and run
 //! inline, preserving slab-id assignment order exactly.
 
+use std::sync::{Arc, Mutex};
+
 use crate::findwinners::FindWinners;
 use crate::geometry::{Aabb, Vec3};
 use crate::rng::Rng;
+use crate::runtime::{resolve_threads, WorkerPool};
 use crate::som::{ChangeLog, GrowingNetwork, Network, UpdateKind, UpdatePlan, Winners};
 
 use super::locks::LockTable;
 
-/// Deferred plan passes shorter than this are computed inline. Each
-/// parallel flush spawns scoped OS threads (tens of µs each), so it only
-/// pays for itself on large flushes — typically the big steady-state
-/// batches of a mature network (m up to 8192). A persistent worker pool
-/// would lower this break-even point; see ROADMAP "Open items".
-const MIN_PARALLEL_FLUSH: usize = 512;
+/// Deferred plan passes shorter than this are computed inline. A pooled
+/// handoff is one mutex/condvar round-trip (≈ a few µs), far below the
+/// tens of µs the old per-flush `thread::scope` spawn cost, so the
+/// break-even sits well under the big steady-state batches of a mature
+/// network (m up to 8192).
+const MIN_PARALLEL_FLUSH: usize = 128;
 
 /// Staleness guard: positions of units inserted earlier in the current
 /// batch. A signal whose (stale) winner distance exceeds its distance to
@@ -114,13 +117,17 @@ struct Pending {
     w: Winners,
 }
 
+/// One worker's scoped work item in the pooled plan pass: its pending
+/// chunk and the matching plan-output chunk.
+type PlanJob<'a> = Mutex<Option<(&'a [Pending], &'a mut [UpdatePlan])>>;
+
 /// The unified Update-phase executor (see module docs).
 pub struct BatchExecutor {
     /// Resolved worker count (≥ 1).
     threads: usize,
-    /// Minimum pending-plan count before a flush spawns worker threads
-    /// ([`MIN_PARALLEL_FLUSH`]; lowered by tests to exercise the threaded
-    /// path on small batches).
+    /// Minimum pending-plan count before a flush is handed to the worker
+    /// pool ([`MIN_PARALLEL_FLUSH`]; lowered by tests to exercise the
+    /// pooled path on small batches).
     flush_threshold: usize,
     locks: LockTable,
     /// Stamp set of units whose state the deferred plans read or write.
@@ -130,17 +137,36 @@ pub struct BatchExecutor {
     guard: InsertedGuard,
     pending: Vec<Pending>,
     plans: Vec<UpdatePlan>,
+    /// Persistent workers for the plan pass — created once per engine run
+    /// (never per flush), possibly shared with Find-Winners sharding.
+    pool: Option<Arc<WorkerPool>>,
 }
 
 impl BatchExecutor {
     /// `update_threads`: 0 = auto-detect, 1 = sequential (the exact `Multi`
-    /// loop), n > 1 = parallel plan pass with n workers. The final network
-    /// is identical for every value.
+    /// loop), n > 1 = parallel plan pass with n persistent workers. The
+    /// final network is identical for every value.
     pub fn new(update_threads: usize) -> Self {
-        let threads = if update_threads == 0 {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        } else {
-            update_threads
+        Self::with_pool(update_threads, None)
+    }
+
+    /// Like [`Self::new`], but reusing a caller-provided worker pool (the
+    /// engine shares one pool between the plan pass and `find_threads`
+    /// sharding). When `pool` is `None` and the resolved thread count
+    /// exceeds 1, a dedicated pool is created here — once per executor,
+    /// which the drivers construct once per run.
+    pub fn with_pool(update_threads: usize, pool: Option<Arc<WorkerPool>>) -> Self {
+        let mut threads = resolve_threads(update_threads);
+        let pool = match pool {
+            Some(p) => {
+                // Never plan more chunks than the pool has workers: excess
+                // chunk pairs would silently go untaken and their default/
+                // stale plans would be committed.
+                threads = threads.min(p.size());
+                Some(p)
+            }
+            None if threads > 1 => Some(Arc::new(WorkerPool::new(threads))),
+            None => None,
         };
         Self {
             threads,
@@ -152,6 +178,7 @@ impl BatchExecutor {
             guard: InsertedGuard::new(),
             pending: Vec::new(),
             plans: Vec::new(),
+            pool,
         }
     }
 
@@ -349,21 +376,25 @@ impl BatchExecutor {
             self.plans.resize_with(n, UpdatePlan::default);
         }
         let workers = self.threads.min(n);
-        if workers > 1 && n >= self.flush_threshold {
-            // Read-only plan pass: `&dyn GrowingNetwork` is `Sync`, the
-            // pending neighborhoods are mutually disjoint, and nothing
-            // mutates until the commit pass below.
+        if let (Some(pool), true) = (&self.pool, workers > 1 && n >= self.flush_threshold) {
+            // Read-only plan pass on the persistent pool: `&dyn
+            // GrowingNetwork` is `Sync`, the pending neighborhoods are
+            // mutually disjoint, and nothing mutates until the commit pass
+            // below. Each worker takes exactly its chunk pair; `pool.run`
+            // returns only after every active worker acked, so the borrows
+            // stay scoped.
             let algo_ro: &dyn GrowingNetwork = &*algo;
             let chunk = n.div_ceil(workers);
-            let pending = &self.pending[..n];
-            let plans = &mut self.plans[..n];
-            std::thread::scope(|scope| {
-                for (pend, plan) in pending.chunks(chunk).zip(plans.chunks_mut(chunk)) {
-                    scope.spawn(move || {
-                        for (p, out) in pend.iter().zip(plan.iter_mut()) {
-                            algo_ro.plan_update(p.signal, &p.w, out);
-                        }
-                    });
+            let pairs: Vec<PlanJob<'_>> = self.pending[..n]
+                .chunks(chunk)
+                .zip(self.plans[..n].chunks_mut(chunk))
+                .map(|pair| Mutex::new(Some(pair)))
+                .collect();
+            pool.run(pairs.len(), &|w| {
+                if let Some((pend, plan)) = pairs[w].lock().unwrap().take() {
+                    for (p, out) in pend.iter().zip(plan.iter_mut()) {
+                        algo_ro.plan_update(p.signal, &p.w, out);
+                    }
                 }
             });
         } else {

@@ -16,9 +16,11 @@
 //!   with the Update phase of batch *k* through a bounded (backpressure)
 //!   channel of depth `queue_depth`;
 //! - the `Parallel` driver (executor with `update_threads > 1`) splits the
-//!   Update phase itself into a sequential admission pass and a threaded
-//!   plan pass over conflict-disjoint winner neighborhoods, committing in
-//!   admission order — bit-identical to the sequential driver by
+//!   Update phase itself into a sequential admission pass and a plan pass
+//!   over conflict-disjoint winner neighborhoods — executed on the run's
+//!   persistent [`crate::runtime::WorkerPool`] (shared with `find_threads`
+//!   Find-Winners sharding; no per-flush thread spawning) — committing in
+//!   admission order, bit-identical to the sequential driver by
 //!   construction.
 
 pub mod executor;

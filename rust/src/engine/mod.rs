@@ -8,12 +8,16 @@
 //!
 //! | driver | iteration | Find Winners | Update phase |
 //! |---|---|---|---|
-//! | single | basic (m = 1) | `Scalar` exhaustive | executor, m = 1 |
+//! | single | basic (m = 1) | `Scalar` lane-blocked exhaustive | executor, m = 1 |
 //! | indexed | basic (m = 1) | `Indexed` spatial hash | executor, m = 1 |
-//! | multi | multi-signal (§2.2) | `BatchRust` batched scan | executor, sequential |
+//! | multi | multi-signal (§2.2) | `BatchRust` SoA-tiled scan (`find_threads` sharding) | executor, sequential |
 //! | pjrt | multi-signal (§2.2) | `runtime::PjrtFindWinners` (AOT/PJRT) | executor, sequential |
 //! | pipelined | multi-signal, Sample(k+1) overlaps Update(k) | `BatchRust` | executor, sequential |
-//! | parallel | multi-signal (§2.2) | `BatchRust` | executor, threaded plan pass |
+//! | parallel | multi-signal (§2.2) | `BatchRust` | executor, pooled plan pass |
+//!
+//! The batched drivers share one persistent [`WorkerPool`] per run (created
+//! in [`run_convergence`]): the `Parallel` executor plans on it and
+//! `BatchRust` shards `find2_batch` signals across it (`find_threads`).
 //!
 //! The first four are the paper's experimental columns (§3.1). `pipelined`
 //! and `parallel` answer its future-work note ("the parallelization of the
@@ -33,6 +37,7 @@ mod report;
 
 pub use report::{RunReport, TracePoint};
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -44,6 +49,7 @@ use crate::geometry::Vec3;
 use crate::mesh::{Mesh, SurfaceSampler};
 use crate::metrics::{Phase, PhaseClock, PhaseTimes};
 use crate::rng::Rng;
+use crate::runtime::{resolve_threads, WorkerPool};
 use crate::som::{ChangeLog, Gng, GrowingNetwork, Gwr, Soam, Winners};
 
 /// The paper's parallelism schedule (§3.1): "the level of parallelism m at
@@ -249,6 +255,13 @@ pub fn make_findwinners(cfg: &RunConfig) -> Result<Box<dyn FindWinners>> {
 /// Dispatch to the convergence driver selected by `cfg.driver`, reusing a
 /// caller-built algorithm and Find-Winners strategy (the CLI's
 /// `--save-mesh` re-run needs the algorithm back; [`run`] wraps this).
+///
+/// This is where the run's one persistent [`WorkerPool`] is created: sized
+/// for `max(update_threads, find_threads)`, attached to the Find-Winners
+/// strategy for `find_threads` signal sharding and handed to the
+/// `Parallel` driver's executor for the plan pass. Workers are created
+/// once here and live for the whole run — no driver spawns threads per
+/// flush.
 pub fn run_convergence(
     algo: &mut dyn GrowingNetwork,
     sampler: &SurfaceSampler,
@@ -256,6 +269,26 @@ pub fn run_convergence(
     cfg: &RunConfig,
     rng: &mut Rng,
 ) -> RunReport {
+    // `find_threads` only applies to the drivers whose batched scan runs
+    // in `BatchRust` (single-signal drivers have no batch to shard; the
+    // pjrt scan runs inside the XLA executable, so sharding it here would
+    // only spawn an idle pool).
+    let find_threads = match cfg.driver {
+        Driver::Multi | Driver::Pipelined | Driver::Parallel => {
+            resolve_threads(cfg.find_threads)
+        }
+        Driver::Single | Driver::Indexed | Driver::Pjrt => 1,
+    };
+    let update_threads = match cfg.driver {
+        Driver::Parallel => resolve_threads(cfg.update_threads),
+        _ => 1,
+    };
+    let pool = (find_threads > 1 || update_threads > 1)
+        .then(|| Arc::new(WorkerPool::new(find_threads.max(update_threads))));
+    if find_threads > 1 {
+        let pool = pool.as_ref().expect("pool sized for find_threads");
+        fw.attach_pool(Arc::clone(pool), find_threads);
+    }
     match cfg.driver {
         Driver::Pipelined => crate::coordinator::run_pipelined(
             algo,
@@ -265,9 +298,15 @@ pub fn run_convergence(
             rng,
             cfg.queue_depth,
         ),
-        Driver::Parallel => {
-            run_parallel(algo, sampler, fw, &cfg.limits, rng, cfg.update_threads)
-        }
+        Driver::Parallel => run_batched_loop(
+            algo,
+            sampler,
+            fw,
+            &cfg.limits,
+            rng,
+            "parallel",
+            BatchExecutor::with_pool(update_threads, pool),
+        ),
         Driver::Multi | Driver::Pjrt => run_multi_signal(algo, sampler, fw, &cfg.limits, rng),
         Driver::Single | Driver::Indexed => {
             run_single_signal(algo, sampler, fw, &cfg.limits, rng)
@@ -384,6 +423,35 @@ mod tests {
             assert_eq!(a.discarded, b.discarded, "threads={update_threads}");
             assert_eq!(a.iterations, b.iterations, "threads={update_threads}");
             assert_eq!(a.qe.to_bits(), b.qe.to_bits(), "threads={update_threads}");
+        }
+    }
+
+    #[test]
+    fn find_threads_does_not_change_results() {
+        // Sharding Find Winners across the pool computes each signal
+        // independently — any shard count must reproduce the sequential
+        // run exactly, for both the multi and parallel drivers.
+        let mesh = benchmark_mesh(BenchmarkShape::Blob, 20);
+        let mut cfg = quick_cfg(BenchmarkShape::Blob);
+        let mut rng = Rng::seed_from(17);
+        let a = run(&mesh, Driver::Multi, &cfg, &mut rng).unwrap();
+        for (driver, find_threads, update_threads) in [
+            (Driver::Multi, 2, 1),
+            (Driver::Multi, 7, 1),
+            (Driver::Parallel, 2, 3),
+            (Driver::Parallel, 0, 0),
+        ] {
+            cfg.find_threads = find_threads;
+            cfg.update_threads = update_threads;
+            let mut rng2 = Rng::seed_from(17);
+            let b = run(&mesh, driver, &cfg, &mut rng2).unwrap();
+            let label = format!("{} find={find_threads} upd={update_threads}", driver.name());
+            assert_eq!(a.units, b.units, "{label}");
+            assert_eq!(a.connections, b.connections, "{label}");
+            assert_eq!(a.signals, b.signals, "{label}");
+            assert_eq!(a.discarded, b.discarded, "{label}");
+            assert_eq!(a.iterations, b.iterations, "{label}");
+            assert_eq!(a.qe.to_bits(), b.qe.to_bits(), "{label}");
         }
     }
 

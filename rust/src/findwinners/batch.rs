@@ -1,26 +1,70 @@
 //! `BatchRust`: the paper's **Multi-signal** reference implementation —
-//! batched Find Winners with the same semantics as `Scalar`, "but without
-//! any actual parallelization, in terms of execution" (§3.1).
+//! batched Find Winners with the same semantics as `Scalar`, vectorized and
+//! (optionally) sharded, never approximated.
 //!
-//! The scan is *unit-tiled*: a tile of unit positions is gathered into a
-//! dense scratch buffer once and streamed over all signals, mirroring the
-//! CUDA kernel's shared-memory staging (and the Pallas kernel's VMEM tiles)
-//! on the CPU cache. Results are exactly those of `Scalar` (same distance
-//! expression, same lowest-index tie-break) — the running merge visits
-//! units in ascending id order.
+//! The scan is *unit-tiled*: live units are gathered into lane-padded SoA
+//! tiles (mirroring the CUDA kernel's shared-memory staging and the Pallas
+//! kernel's VMEM tiles on the CPU cache) and each tile is streamed over all
+//! signals with the lane-blocked kernel ([`super::lanes`]). Three
+//! performance layers, all invisible to semantics:
+//!
+//! 1. **Tile cache**: the gather runs once and is reused across consecutive
+//!    `find2_batch` calls; `sync`/`rebuild` invalidate it (the drivers'
+//!    once-per-batch sync contract makes that exact). Aliveness comes from
+//!    `Network::is_alive`, not a coordinate comparison — a unit that
+//!    legitimately sits at `x = DEAD_POS.x` is still scanned.
+//! 2. **Lane-blocked kernel**: per-lane running top-2 plus one horizontal
+//!    reduce per tile, bit-identical to `exhaustive_top2` (see `lanes`).
+//! 3. **Signal sharding**: with an attached [`WorkerPool`] (`find_threads`
+//!    knob), large batches are split across persistent workers; each signal
+//!    is computed independently, so any shard count yields the same bits.
+//!
+//! Results are exactly those of `Scalar` (same distance expression, same
+//! lowest-index tie-break): tiles ascend in id order and tile candidates
+//! merge into the running top-2 in lexicographic order, which preserves the
+//! sequential scan's tie-break exactly.
+
+use std::sync::{Arc, Mutex};
 
 use crate::geometry::Vec3;
-use crate::som::{Network, Winners, DEAD_POS};
+use crate::runtime::WorkerPool;
+use crate::som::{ChangeLog, Network, Winners, DEAD_POS};
 
-use super::{exhaustive_top2, FindWinners};
+use super::lanes::{self, LANES};
+use super::FindWinners;
 
-/// Cache-tiled batched Find Winners.
+/// Running-state sentinel: a signal's top-2 before any unit was merged.
+const PENDING: Winners =
+    Winners { w1: u32::MAX, w2: u32::MAX, d1_sq: f32::INFINITY, d2_sq: f32::INFINITY };
+
+/// Below this many signals per shard, sharding overhead (one pool handoff)
+/// outweighs the work; the batch runs inline instead.
+const MIN_SHARD_SIGNALS: usize = 64;
+
+/// One worker's scoped work item: its signal chunk and output chunk.
+type ShardJob<'a> = Mutex<Option<(&'a [Vec3], &'a mut [Option<Winners>])>>;
+
+/// Cache-tiled, lane-blocked batched Find Winners.
 pub struct BatchRust {
-    /// Units per tile (tuned so a tile fits in L1/L2: 3 f32 + id per unit).
+    /// Units per tile (tuned so a tile fits in L1/L2: 3 f32 + id per unit;
+    /// rounded up to the lane width internally).
     pub tile: usize,
-    // Scratch (reused across calls).
-    tile_pos: Vec<Vec3>,
-    tile_ids: Vec<u32>,
+    // Cached gather of the live units: lane-padded SoA tiles + id map,
+    // ascending slab order (so tile-merge order preserves the tie-break).
+    xs: Vec<f32>,
+    ys: Vec<f32>,
+    zs: Vec<f32>,
+    ids: Vec<u32>,
+    /// `(start, end)` ranges into the SoA buffers, one per tile; every
+    /// range length is a multiple of `LANES`.
+    tiles: Vec<(usize, usize)>,
+    cache_valid: bool,
+    cached_capacity: usize,
+    cached_live: usize,
+    /// Shared persistent pool + shard count for `find_threads` (None/1 =
+    /// inline).
+    pool: Option<Arc<WorkerPool>>,
+    shards: usize,
 }
 
 impl Default for BatchRust {
@@ -32,7 +76,116 @@ impl Default for BatchRust {
 impl BatchRust {
     pub fn new(tile: usize) -> Self {
         assert!(tile > 0);
-        Self { tile, tile_pos: Vec::new(), tile_ids: Vec::new() }
+        Self {
+            tile,
+            xs: Vec::new(),
+            ys: Vec::new(),
+            zs: Vec::new(),
+            ids: Vec::new(),
+            tiles: Vec::new(),
+            cache_valid: false,
+            cached_capacity: 0,
+            cached_live: 0,
+            pool: None,
+            shards: 1,
+        }
+    }
+
+    /// Gather live units into lane-padded SoA tiles (ascending slab order).
+    fn rebuild_cache(&mut self, net: &Network) {
+        self.xs.clear();
+        self.ys.clear();
+        self.zs.clear();
+        self.ids.clear();
+        self.tiles.clear();
+        let eff_tile = self.tile.next_multiple_of(LANES);
+        let mut start = 0usize;
+        for (slot, p) in net.positions().iter().enumerate() {
+            // Exact aliveness test (not `p.x != DEAD_POS.x`): a unit that
+            // legitimately sits at x = 1e30 must still be scanned.
+            if !net.is_alive(slot as u32) {
+                continue;
+            }
+            self.xs.push(p.x);
+            self.ys.push(p.y);
+            self.zs.push(p.z);
+            self.ids.push(slot as u32);
+            if self.ids.len() - start == eff_tile {
+                self.tiles.push((start, self.ids.len()));
+                start = self.ids.len();
+            }
+        }
+        if self.ids.len() > start {
+            // Lane-pad the final partial tile with poison (cannot win) and
+            // an id that is never read (poison entries never become
+            // candidates).
+            while (self.ids.len() - start) % LANES != 0 {
+                self.xs.push(DEAD_POS.x);
+                self.ys.push(DEAD_POS.y);
+                self.zs.push(DEAD_POS.z);
+                self.ids.push(u32::MAX);
+            }
+            self.tiles.push((start, self.ids.len()));
+        }
+        self.cache_valid = true;
+        self.cached_capacity = net.capacity();
+        self.cached_live = net.len();
+    }
+
+    fn ensure_cache(&mut self, net: &Network) {
+        // `sync`/`rebuild` clear the flag; capacity/live-count drift guards
+        // against structural changes a caller applied without honoring the
+        // sync contract.
+        if !self.cache_valid
+            || self.cached_capacity != net.capacity()
+            || self.cached_live != net.len()
+        {
+            self.rebuild_cache(net);
+        }
+    }
+}
+
+/// Merge one candidate into a signal's running top-2 with strict `<` — the
+/// exhaustive scan's insertion rule. Candidates arrive tile by tile in
+/// ascending id order (and in lexicographic order within a tile), which
+/// preserves the lowest-index tie-break exactly.
+#[inline]
+fn merge_push(w: &mut Winners, d: f32, id: u32) {
+    if d < w.d1_sq {
+        w.d2_sq = w.d1_sq;
+        w.w2 = w.w1;
+        w.d1_sq = d;
+        w.w1 = id;
+    } else if d < w.d2_sq {
+        w.d2_sq = d;
+        w.w2 = id;
+    }
+}
+
+/// Stream every cached tile over one shard of signals (tiles outer for
+/// cache reuse, exactly the staging pattern of the CUDA kernel).
+fn scan_shard(
+    xs: &[f32],
+    ys: &[f32],
+    zs: &[f32],
+    ids: &[u32],
+    tiles: &[(usize, usize)],
+    signals: &[Vec3],
+    out: &mut [Option<Winners>],
+) {
+    for &(start, end) in tiles {
+        let (bx, by, bz) = (&xs[start..end], &ys[start..end], &zs[start..end]);
+        let bids = &ids[start..end];
+        for (s, slot) in signals.iter().zip(out.iter_mut()) {
+            let t = lanes::lane_block_top2(bx, by, bz, *s);
+            let w = slot.as_mut().unwrap();
+            if t.w1 != u32::MAX {
+                merge_push(w, t.d1, bids[t.w1 as usize]);
+            }
+            if t.w2 != u32::MAX {
+                merge_push(w, t.d2, bids[t.w2 as usize]);
+            }
+        }
     }
 }
 
@@ -42,7 +195,7 @@ impl FindWinners for BatchRust {
     }
 
     fn find2(&mut self, net: &Network, signal: Vec3) -> Option<Winners> {
-        exhaustive_top2(net, signal)
+        lanes::lane_top2(net, signal)
     }
 
     fn find2_batch(
@@ -52,55 +205,57 @@ impl FindWinners for BatchRust {
         out: &mut Vec<Option<Winners>>,
     ) {
         out.clear();
-        out.resize(
-            signals.len(),
-            Some(Winners { w1: u32::MAX, w2: u32::MAX, d1_sq: f32::INFINITY, d2_sq: f32::INFINITY }),
-        );
+        out.resize(signals.len(), Some(PENDING));
+        if signals.is_empty() {
+            return;
+        }
+        self.ensure_cache(net);
 
-        let positions = net.positions();
-        let mut next_slot = 0usize;
-        loop {
-            // Gather the next tile of live units from the dense mirror
-            // (dead slots hold DEAD_POS and are skipped at gather time so
-            // the inner loop stays branch-free).
-            self.tile_pos.clear();
-            self.tile_ids.clear();
-            while next_slot < positions.len() && self.tile_ids.len() < self.tile {
-                let p = positions[next_slot];
-                if p.x != DEAD_POS.x {
-                    self.tile_ids.push(next_slot as u32);
-                    self.tile_pos.push(p);
+        let pool = self.pool.clone();
+        let shards = pool.as_ref().map_or(1, |p| self.shards.min(p.size()));
+        let chunk = signals.len().div_ceil(shards.max(1)).max(MIN_SHARD_SIGNALS);
+        let jobs = signals.len().div_ceil(chunk);
+        if jobs > 1 {
+            let pool = pool.as_ref().unwrap();
+            // Scoped handoff: each worker takes exactly its (signals, out)
+            // chunk pair; the SoA cache is shared read-only.
+            let (xs, ys, zs) = (&self.xs, &self.ys, &self.zs);
+            let (ids, tiles) = (&self.ids, &self.tiles);
+            let pairs: Vec<ShardJob<'_>> = signals
+                .chunks(chunk)
+                .zip(out.chunks_mut(chunk))
+                .map(|pair| Mutex::new(Some(pair)))
+                .collect();
+            pool.run(pairs.len(), &|w| {
+                if let Some((sig, dst)) = pairs[w].lock().unwrap().take() {
+                    scan_shard(xs, ys, zs, ids, tiles, sig, dst);
                 }
-                next_slot += 1;
-            }
-            if self.tile_ids.is_empty() {
-                break;
-            }
-            // Stream every signal over the tile, merging into the running
-            // top-2. Ids ascend across tiles, so strict `<` keeps the
-            // lowest-index tie-break.
-            for (s, slot) in signals.iter().zip(out.iter_mut()) {
-                let w = slot.as_mut().unwrap();
-                for (k, &p) in self.tile_pos.iter().enumerate() {
-                    let d = s.dist2(p);
-                    if d < w.d1_sq {
-                        w.d2_sq = w.d1_sq;
-                        w.w2 = w.w1;
-                        w.d1_sq = d;
-                        w.w1 = self.tile_ids[k];
-                    } else if d < w.d2_sq {
-                        w.d2_sq = d;
-                        w.w2 = self.tile_ids[k];
-                    }
-                }
-            }
+            });
+        } else {
+            scan_shard(&self.xs, &self.ys, &self.zs, &self.ids, &self.tiles, signals, out);
         }
 
         for slot in out.iter_mut() {
-            if slot.as_ref().unwrap().w2 == u32::MAX {
+            let w = slot.as_ref().unwrap();
+            if w.w2 == u32::MAX || w.d2_sq == f32::INFINITY {
                 *slot = None;
             }
         }
+    }
+
+    fn sync(&mut self, _net: &Network, changes: &ChangeLog) {
+        if !changes.is_empty() {
+            self.cache_valid = false;
+        }
+    }
+
+    fn rebuild(&mut self, net: &Network) {
+        self.rebuild_cache(net);
+    }
+
+    fn attach_pool(&mut self, pool: Arc<WorkerPool>, shards: usize) {
+        self.shards = shards.max(1);
+        self.pool = if self.shards > 1 { Some(pool) } else { None };
     }
 }
 
@@ -151,5 +306,79 @@ mod tests {
         let mut got = vec![None; 3];
         BatchRust::default().find2_batch(&net, &[], &mut got);
         assert!(got.is_empty());
+    }
+
+    #[test]
+    fn unit_on_dead_pos_axis_is_still_found() {
+        // The fragile pre-SoA gather tested `p.x != DEAD_POS.x` and would
+        // have dropped a unit that legitimately sits at x = 1e30.
+        let mut net = crate::som::Network::new();
+        let far_a = net.insert(Vec3::new(DEAD_POS.x, 0.0, 0.0), 0.1);
+        let far_b = net.insert(Vec3::new(DEAD_POS.x, 3.0, 0.0), 0.1);
+        let _near = net.insert(Vec3::new(0.2, 0.0, 0.0), 0.1);
+        // A signal on the far axis has finite distances only to the two far
+        // units — both of which the old gather would have dropped.
+        let s = Vec3::new(DEAD_POS.x, 1.0, 0.0);
+        let mut batch = BatchRust::default();
+        let mut got = Vec::new();
+        batch.find2_batch(&net, &[s], &mut got);
+        let w = got[0].expect("two finite candidates");
+        assert_eq!(w.w1, far_a, "units at x = DEAD_POS.x must be scanned");
+        assert_eq!(w.w2, far_b);
+        assert_eq!(w.d1_sq, 1.0);
+        assert_eq!(w.d2_sq, 4.0);
+        assert_eq!(got[0], Scalar::new().find2(&net, s));
+    }
+
+    #[test]
+    fn cache_reused_until_sync_then_rebuilt() {
+        let mut net = random_net(100, 41, 0);
+        let signals = random_signals(16, 42);
+        let mut batch = BatchRust::new(32);
+        let mut got = Vec::new();
+        batch.find2_batch(&net, &signals, &mut got);
+        assert!(batch.cache_valid);
+        let tiles_before = batch.tiles.len();
+
+        // No changes: a second batch reuses the gather.
+        batch.find2_batch(&net, &signals, &mut got);
+        assert_eq!(batch.tiles.len(), tiles_before);
+
+        // A position move reported via sync invalidates, and the next
+        // batch sees the new position.
+        let id = net.ids().next().unwrap();
+        let old = net.pos(id);
+        net.set_pos(id, Vec3::new(0.5, 0.5, 0.5));
+        let mut log = ChangeLog::default();
+        log.moved.push((id, old));
+        batch.sync(&net, &log);
+        assert!(!batch.cache_valid);
+        batch.find2_batch(&net, &[Vec3::new(0.5, 0.5, 0.5)], &mut got);
+        assert_eq!(got[0].unwrap().w1, id);
+
+        // Structural drift without sync is caught by the capacity/live
+        // guard (defense against contract violations).
+        net.insert(Vec3::new(0.49, 0.5, 0.5), 0.1);
+        batch.find2_batch(&net, &[Vec3::new(0.49, 0.5, 0.5)], &mut got);
+        assert_eq!(
+            got[0],
+            Scalar::new().find2(&net, Vec3::new(0.49, 0.5, 0.5)),
+            "insert without sync must still be visible via the guard"
+        );
+    }
+
+    #[test]
+    fn sharded_batch_identical_for_any_find_threads() {
+        let net = random_net(500, 51, 9);
+        let signals = random_signals(1000, 52);
+        let mut base = Vec::new();
+        BatchRust::default().find2_batch(&net, &signals, &mut base);
+        for shards in [2usize, 3, 7] {
+            let mut batch = BatchRust::default();
+            batch.attach_pool(Arc::new(WorkerPool::new(shards)), shards);
+            let mut got = Vec::new();
+            batch.find2_batch(&net, &signals, &mut got);
+            assert_eq!(got, base, "shards {shards}");
+        }
     }
 }

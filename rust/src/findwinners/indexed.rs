@@ -189,7 +189,7 @@ mod tests {
         let removed_id = net.ids().nth(1).unwrap();
         let mut log = ChangeLog::default();
         let old = net.pos(moved_id);
-        net.unit_mut(moved_id).pos = Vec3::new(0.99, 0.99, 0.99);
+        net.set_pos(moved_id, Vec3::new(0.99, 0.99, 0.99));
         log.moved.push((moved_id, old));
         let new_id = net.insert(Vec3::new(0.01, 0.5, 0.5), 0.1);
         log.inserted.push(new_id);

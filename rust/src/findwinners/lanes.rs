@@ -1,0 +1,244 @@
+//! The lane-blocked Find-Winners kernel: the CPU counterpart of the Pallas
+//! tile kernel, written so stable-Rust LLVM auto-vectorizes it (fixed-width
+//! `[f32; LANES]` accumulators, branchless select updates, `chunks_exact`
+//! blocks — no nightly features, no intrinsics, no new dependencies).
+//!
+//! ## Exactness
+//!
+//! [`super::exhaustive_top2`]'s sequential scan with strict `<` comparisons
+//! computes exactly the two **lexicographically smallest `(distance, id)`
+//! pairs**: an equal distance never displaces an earlier (lower-id) entry,
+//! so ties resolve to the lowest index. The lane kernel computes the same
+//! set a different way — per-lane running top-2 (ids ascend within a lane,
+//! so strict `<` keeps the lane-local lex order) followed by one horizontal
+//! reduce per block that merges the `2·LANES` lane candidates under the
+//! explicit lexicographic order. Both reductions are exact in f32 (no
+//! reassociation of the distance arithmetic, same `dx·dx + dy·dy + dz·dz`
+//! expression as [`crate::geometry::Vec3::dist2`]), so the result is
+//! bit-identical to the exhaustive scan — including the lowest-index
+//! tie-break and the `None` answer for networks with fewer than two units.
+//!
+//! Dead and padding slots hold [`crate::som::DEAD_POS`], whose squared
+//! distance overflows to `+inf`; `+inf < +inf` is false, so they can never
+//! enter an accumulator.
+
+use crate::geometry::Vec3;
+use crate::som::{Network, Winners, SOA_LANES};
+
+/// Lane width of the blocked scan (one AVX2 f32 register). Fixed at the
+/// SoA mirror's padding width so blocks need no scalar tail.
+pub const LANES: usize = SOA_LANES;
+
+/// `(d_a, i_a) < (d_b, i_b)` in the lexicographic order that encodes the
+/// lowest-index tie-break. Distances are never NaN here (worst case `+inf`).
+#[inline]
+fn lex_less(d_a: f32, i_a: u32, d_b: f32, i_b: u32) -> bool {
+    d_a < d_b || (d_a == d_b && i_a < i_b)
+}
+
+/// Running top-2 of `(distance, index)` pairs under the lexicographic
+/// order. Indices are block-local; callers map them through their id table
+/// (the mapping is monotone, so block-local lex order == global lex order).
+#[derive(Clone, Copy, Debug)]
+pub struct Top2 {
+    pub w1: u32,
+    pub w2: u32,
+    pub d1: f32,
+    pub d2: f32,
+}
+
+impl Top2 {
+    pub const EMPTY: Top2 =
+        Top2 { w1: u32::MAX, w2: u32::MAX, d1: f32::INFINITY, d2: f32::INFINITY };
+
+    /// Insert one candidate under the full lexicographic order (order of
+    /// insertion does not matter — used by the horizontal reduce, where
+    /// lane candidates arrive in arbitrary id order).
+    #[inline]
+    fn lex_push(&mut self, d: f32, id: u32) {
+        if lex_less(d, id, self.d1, self.w1) {
+            self.d2 = self.d1;
+            self.w2 = self.w1;
+            self.d1 = d;
+            self.w1 = id;
+        } else if lex_less(d, id, self.d2, self.w2) {
+            self.d2 = d;
+            self.w2 = id;
+        }
+    }
+
+    /// The exhaustive scan's `None` rule: fewer than two finite candidates.
+    #[inline]
+    pub fn winners(self) -> Option<Winners> {
+        if self.w2 == u32::MAX || self.d2 == f32::INFINITY {
+            None
+        } else {
+            Some(Winners { w1: self.w1, w2: self.w2, d1_sq: self.d1, d2_sq: self.d2 })
+        }
+    }
+}
+
+/// Lane-blocked top-2 over one lane-padded SoA block: `LANES` per-lane
+/// running minima through the whole block, one horizontal reduce at the
+/// end. Returns block-local indices ([`Top2::EMPTY`] when nothing finite).
+///
+/// `xs`/`ys`/`zs` must have equal lengths that are a multiple of [`LANES`]
+/// (the SoA mirror and the batch gather both guarantee this).
+#[inline]
+pub fn lane_block_top2(xs: &[f32], ys: &[f32], zs: &[f32], signal: Vec3) -> Top2 {
+    debug_assert_eq!(xs.len(), ys.len());
+    debug_assert_eq!(xs.len(), zs.len());
+    debug_assert_eq!(xs.len() % LANES, 0, "SoA block not lane-padded");
+
+    let mut d1 = [f32::INFINITY; LANES];
+    let mut d2 = [f32::INFINITY; LANES];
+    let mut w1 = [u32::MAX; LANES];
+    let mut w2 = [u32::MAX; LANES];
+
+    let mut base = 0u32;
+    for ((cx, cy), cz) in xs
+        .chunks_exact(LANES)
+        .zip(ys.chunks_exact(LANES))
+        .zip(zs.chunks_exact(LANES))
+    {
+        for l in 0..LANES {
+            let dx = signal.x - cx[l];
+            let dy = signal.y - cy[l];
+            let dz = signal.z - cz[l];
+            // Exactly Vec3::dist2 — no reassociation, no FMA contraction
+            // surprises (rustc does not contract without fast-math).
+            let d = dx * dx + dy * dy + dz * dz;
+            let idx = base + l as u32;
+            // Branchless two-slot insert: strict `<` keeps the lane-local
+            // lowest-index tie-break (ids ascend within a lane).
+            let better1 = d < d1[l];
+            let better2 = d < d2[l];
+            d2[l] = if better1 {
+                d1[l]
+            } else if better2 {
+                d
+            } else {
+                d2[l]
+            };
+            w2[l] = if better1 {
+                w1[l]
+            } else if better2 {
+                idx
+            } else {
+                w2[l]
+            };
+            d1[l] = if better1 { d } else { d1[l] };
+            w1[l] = if better1 { idx } else { w1[l] };
+        }
+        base += LANES as u32;
+    }
+
+    // One horizontal reduce per block: merge the 2·LANES lane candidates
+    // under the explicit lexicographic order (lane ids interleave, so the
+    // strict-< shortcut is not enough here).
+    let mut acc = Top2::EMPTY;
+    for l in 0..LANES {
+        acc.lex_push(d1[l], w1[l]);
+        acc.lex_push(d2[l], w2[l]);
+    }
+    acc
+}
+
+/// Lane-blocked top-2 over the network's SoA position mirror — the
+/// vectorized drop-in for [`super::exhaustive_top2`] (block-local indices
+/// == slab ids for the identity mapping).
+#[inline]
+pub fn lane_top2(net: &Network, signal: Vec3) -> Option<Winners> {
+    let (xs, ys, zs) = net.soa();
+    lane_block_top2(xs, ys, zs, signal).winners()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::exhaustive_top2;
+    use super::super::testutil::{random_net, random_signals};
+    use super::*;
+    use crate::rng::Rng;
+
+    fn assert_bit_identical(net: &Network, signal: Vec3, label: &str) {
+        let want = exhaustive_top2(net, signal);
+        let got = lane_top2(net, signal);
+        match (want, got) {
+            (None, None) => {}
+            (Some(a), Some(b)) => {
+                assert_eq!(a.w1, b.w1, "{label}: w1");
+                assert_eq!(a.w2, b.w2, "{label}: w2");
+                assert_eq!(a.d1_sq.to_bits(), b.d1_sq.to_bits(), "{label}: d1");
+                assert_eq!(a.d2_sq.to_bits(), b.d2_sq.to_bits(), "{label}: d2");
+            }
+            (a, b) => panic!("{label}: {a:?} vs {b:?}"),
+        }
+    }
+
+    #[test]
+    fn matches_exhaustive_on_random_nets() {
+        // Sizes straddle lane boundaries; kill_every exercises dead slots.
+        for (n, kill) in [(1, 0), (2, 0), (7, 0), (8, 0), (9, 0), (64, 3), (131, 5)] {
+            let net = random_net(n, n as u64, kill);
+            for (k, s) in random_signals(40, 99 + n as u64).into_iter().enumerate() {
+                assert_bit_identical(&net, s, &format!("n={n} kill={kill} sig={k}"));
+            }
+        }
+    }
+
+    #[test]
+    fn ties_resolve_to_lowest_index() {
+        // Many units at few distinct grid positions force exact distance
+        // ties across lanes.
+        let mut rng = Rng::seed_from(5);
+        let mut net = Network::new();
+        for _ in 0..50 {
+            let p = Vec3::new(
+                rng.index(3) as f32 * 0.5,
+                rng.index(3) as f32 * 0.5,
+                rng.index(3) as f32 * 0.5,
+            );
+            net.insert(p, 0.1);
+        }
+        for k in 0..30 {
+            let s = Vec3::new(
+                rng.index(5) as f32 * 0.25,
+                rng.index(5) as f32 * 0.25,
+                rng.index(5) as f32 * 0.25,
+            );
+            assert_bit_identical(&net, s, &format!("tie sig={k}"));
+        }
+    }
+
+    #[test]
+    fn tiny_and_empty_nets_yield_none() {
+        let empty = Network::new();
+        assert!(lane_top2(&empty, Vec3::ZERO).is_none());
+        let one = random_net(1, 3, 0);
+        assert!(lane_top2(&one, Vec3::ZERO).is_none());
+        // Two inserted, one removed: a single live unit across a dead slot.
+        let mut net = Network::new();
+        let a = net.insert(Vec3::ZERO, 0.1);
+        net.insert(Vec3::ONE, 0.1);
+        net.remove(a);
+        assert!(lane_top2(&net, Vec3::ZERO).is_none());
+    }
+
+    #[test]
+    fn block_indices_map_through_id_tables() {
+        // A gathered tile with non-identity ids: block-local lex order must
+        // survive the (monotone) mapping.
+        let xs = [0.0, 1.0, 2.0, 0.0, 1e30, 1e30, 1e30, 1e30];
+        let ys = [0.0; 8];
+        let zs = [0.0; 8];
+        let ids = [10u32, 20, 30, 40, u32::MAX, u32::MAX, u32::MAX, u32::MAX];
+        let t = lane_block_top2(&xs, &ys, &zs, Vec3::ZERO);
+        // Distance 0 twice (locals 0 and 3): lowest local index wins slot 1.
+        assert_eq!(t.w1, 0);
+        assert_eq!(t.w2, 3);
+        assert_eq!(ids[t.w1 as usize], 10);
+        assert_eq!(ids[t.w2 as usize], 40);
+        assert_eq!(t.d1, 0.0);
+        assert_eq!(t.d2, 0.0);
+    }
+}

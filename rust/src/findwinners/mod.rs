@@ -2,16 +2,18 @@
 //! with four implementations, serving the six-driver matrix of
 //! [`crate::engine`]:
 //!
-//! | impl | strategy | used by drivers |
-//! |---|---|---|
-//! | [`Scalar`] | exhaustive scan per signal | single |
-//! | [`Indexed`] | spatial hash, 27-cell query, exhaustive fallback | indexed |
-//! | [`BatchRust`] | batched scan, unit-tiled for cache reuse | multi, pipelined, parallel |
-//! | `runtime::PjrtFindWinners` | AOT Pallas/XLA artifact via PJRT | pjrt |
+//! | impl | strategy | data layout / kernel | used by drivers |
+//! |---|---|---|---|
+//! | [`Scalar`] | one scan per signal | SoA mirror, lane-blocked ([`lanes`]) | single |
+//! | [`Indexed`] | spatial hash, 27-cell query, exhaustive fallback | AoS mirror | indexed |
+//! | [`BatchRust`] | batched scan, unit-tiled for cache reuse | cached SoA tiles, lane-blocked, optional [`crate::runtime::WorkerPool`] sharding (`find_threads`) | multi, pipelined, parallel |
+//! | `runtime::PjrtFindWinners` | AOT Pallas/XLA artifact via PJRT | VMEM tiles | pjrt |
 //!
 //! The first four driver columns are the paper's (§3.1); `pipelined` and
 //! `parallel` are this reproduction's Update-phase drivers and reuse the
-//! `BatchRust` scan unchanged.
+//! `BatchRust` scan unchanged. The lane-blocked kernel is bit-identical to
+//! [`exhaustive_top2`] (see `lanes` module docs for the argument), so the
+//! layout/kernel column is pure performance — semantics never change.
 //!
 //! All implementations share *exact* semantics (squared distances in f32 via
 //! the naive difference form, lowest-index tie-break); `Indexed` is the one
@@ -21,13 +23,17 @@
 
 mod batch;
 mod indexed;
+pub mod lanes;
 mod scalar;
+
+use std::sync::Arc;
 
 pub use batch::BatchRust;
 pub use indexed::Indexed;
 pub use scalar::Scalar;
 
 use crate::geometry::Vec3;
+use crate::runtime::WorkerPool;
 use crate::som::{ChangeLog, Network, Winners};
 
 /// Strategy for the Find Winners phase.
@@ -70,13 +76,21 @@ pub trait FindWinners {
     /// (Re)build any internal structure from scratch (called once after
     /// `init`).
     fn rebuild(&mut self, _net: &Network) {}
+
+    /// Offer a shared persistent worker pool for sharding `find2_batch`
+    /// across `shards` workers (the engine calls this once per run, with
+    /// the same pool the Update plan pass uses). Default: ignored —
+    /// sharding is an implementation-private optimization and results must
+    /// be identical with or without it.
+    fn attach_pool(&mut self, _pool: Arc<WorkerPool>, _shards: usize) {}
 }
 
 /// Shared exhaustive top-2 core: scans live slots in id order (lowest-index
-/// tie-break via strict `<`). This is the semantic reference for every other
-/// implementation.
+/// tie-break via strict `<`). This is the semantic reference every other
+/// implementation — including the lane-blocked kernel in [`lanes`] — must
+/// match bit-for-bit (public so benches and property tests can pin it).
 #[inline]
-pub(crate) fn exhaustive_top2(net: &Network, signal: Vec3) -> Option<Winners> {
+pub fn exhaustive_top2(net: &Network, signal: Vec3) -> Option<Winners> {
     let mut w1 = u32::MAX;
     let mut w2 = u32::MAX;
     let mut d1 = f32::INFINITY;

@@ -1,5 +1,6 @@
-//! PJRT runtime — executes the AOT Find-Winners artifacts from the rust
-//! request path (the paper's **GPU-based** column).
+//! Execution runtimes: the PJRT client for the AOT Find-Winners artifacts
+//! (the paper's **GPU-based** column) and the persistent CPU worker pool
+//! shared by the Update plan pass and `find_threads` sharding.
 //!
 //! `python/compile/aot.py` lowers the Layer-1/2 JAX+Pallas computation to
 //! HLO **text** per size bucket; this module loads the text
@@ -10,11 +11,13 @@
 mod fw;
 mod json;
 mod manifest;
+pub mod pool;
 mod registry;
 
 pub use fw::PjrtFindWinners;
 pub use json::{parse_json, Json, JsonError};
 pub use manifest::{ArtifactEntry, Manifest};
+pub use pool::{resolve_threads, WorkerPool};
 pub use registry::{ExecStats, Registry};
 
 /// Padding sentinel for unit slots; `PAD_VALUE²` overflows f32 to `+inf`,

@@ -1,0 +1,302 @@
+//! A persistent worker pool: OS threads created once per engine run,
+//! parked between jobs, with generation-stamped job handoff.
+//!
+//! PR-1 parallelized the Update plan pass with `std::thread::scope`, which
+//! spawns (and joins) fresh OS threads on **every flush** — tens of µs per
+//! flush that push the parallel break-even up to batches of ~512. This pool
+//! replaces that: workers live for the whole run and a job handoff is one
+//! mutex/condvar round-trip. Both users — the `Parallel` driver's plan pass
+//! (`coordinator::executor`) and the `find_threads` sharding of
+//! `BatchRust::find2_batch` — share one pool per engine run.
+//!
+//! ## Protocol
+//!
+//! A job is a lifetime-erased `&dyn Fn(usize)` plus a monotonically
+//! increasing generation stamp. [`WorkerPool::run`] publishes the job under
+//! the mutex, wakes the workers, then blocks until every **active** worker
+//! (index `< active`) has acknowledged that generation; inactive workers
+//! neither run nor ack, so a handoff costs O(active). Only active workers
+//! can touch the closure, and all of them ack before `run` returns — that
+//! barrier is what makes the lifetime erasure sound: no worker can still
+//! be touching the closure (or anything it borrows) once `run` returns, so
+//! borrowing stack data of the caller is safe exactly as with scoped
+//! threads. Worker panics are caught, survive the barrier, and are
+//! re-raised by `run` — a bug in a job crashes the caller (as
+//! `thread::scope` would), never a silent deadlock.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Resolve a thread-count knob: `0` = auto-detect the machine's available
+/// parallelism, anything else is taken literally (minimum 1).
+pub fn resolve_threads(n: usize) -> usize {
+    if n == 0 {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    } else {
+        n
+    }
+}
+
+/// One published job (see module docs).
+struct Job {
+    /// Generation stamp; workers execute a job exactly once per bump.
+    generation: u64,
+    /// Lifetime-erased task. Only valid between `run` publishing it and the
+    /// matching all-ack barrier; `run` clears it before returning.
+    task: Option<&'static (dyn Fn(usize) + Sync)>,
+    /// Workers with index `< active` call the task this generation.
+    active: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    size: usize,
+    job: Mutex<Job>,
+    wake: Condvar,
+    /// `(generation, acks)` — reset by the first acker of each generation.
+    /// Only workers with index `< active` ack, so a job handoff costs
+    /// O(active), not O(pool size).
+    done: Mutex<(u64, usize)>,
+    all_done: Condvar,
+    /// First panic payload caught on a worker this job; re-raised by `run`
+    /// after the barrier (scoped-thread semantics — a worker panic must
+    /// crash the caller, not deadlock it).
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+/// Persistent worker pool (see module docs). Dropping joins the workers.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    /// Serializes `run` callers: the pool is shared between the Update plan
+    /// pass and Find-Winners sharding (never concurrent today, but the gate
+    /// makes that a property of the pool rather than of its callers).
+    gate: Mutex<()>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` parked threads (≥ 1).
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let shared = Arc::new(Shared {
+            size: workers,
+            job: Mutex::new(Job { generation: 0, task: None, active: 0, shutdown: false }),
+            wake: Condvar::new(),
+            done: Mutex::new((0, 0)),
+            all_done: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+        let handles = (0..workers)
+            .map(|index| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("msgsn-worker-{index}"))
+                    .spawn(move || worker_loop(&shared, index))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self { shared, handles, gate: Mutex::new(()) }
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.shared.size
+    }
+
+    /// Execute `f(w)` on workers `w ∈ 0..min(active, size)` and block until
+    /// every *active* worker has finished with this job. `f` may freely
+    /// borrow the caller's stack (scoped-thread semantics — see module
+    /// docs). A panic on a worker is caught, the barrier still completes,
+    /// and the payload is re-raised here — exactly as `thread::scope`
+    /// would on join.
+    pub fn run(&self, active: usize, f: &(dyn Fn(usize) + Sync)) {
+        let active = active.min(self.shared.size);
+        if active == 0 {
+            return;
+        }
+        let _gate = self.gate.lock().unwrap();
+        let generation = {
+            let mut job = self.shared.job.lock().unwrap();
+            job.generation += 1;
+            // SAFETY: pure lifetime erasure. The all-ack wait below does
+            // not return until every active worker is done with this
+            // generation, and `task` is cleared before `run` returns, so
+            // the borrow never escapes this call.
+            job.task = Some(unsafe {
+                std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(
+                    f,
+                )
+            });
+            job.active = active;
+            self.shared.wake.notify_all();
+            job.generation
+        };
+        let mut done = self.shared.done.lock().unwrap();
+        while done.0 != generation || done.1 != active {
+            done = self.shared.all_done.wait(done).unwrap();
+        }
+        drop(done);
+        self.shared.job.lock().unwrap().task = None;
+        let payload = self.shared.panic.lock().unwrap().take();
+        // Release every lock (including the caller gate) before re-raising,
+        // so a propagated job panic cannot poison the pool's mutexes.
+        drop(_gate);
+        if let Some(payload) = payload {
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut job = self.shared.job.lock().unwrap();
+            job.shutdown = true;
+            self.shared.wake.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, index: usize) {
+    let mut seen = 0u64;
+    loop {
+        let (task, generation, active) = {
+            let mut job = shared.job.lock().unwrap();
+            loop {
+                if job.shutdown {
+                    return;
+                }
+                if job.generation != seen {
+                    break;
+                }
+                job = shared.wake.wait(job).unwrap();
+            }
+            seen = job.generation;
+            (job.task, job.generation, job.active)
+        };
+        // Inactive workers neither run the task nor ack — the handoff
+        // barrier costs O(active), and they simply pick up the next
+        // generation whenever they wake.
+        if index >= active {
+            continue;
+        }
+        if let Some(f) = task {
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(index)));
+            if let Err(payload) = result {
+                shared.panic.lock().unwrap().get_or_insert(payload);
+            }
+        }
+        let mut done = shared.done.lock().unwrap();
+        if done.0 != generation {
+            *done = (generation, 0);
+        }
+        done.1 += 1;
+        if done.1 == active {
+            shared.all_done.notify_one();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_every_active_worker_exactly_once() {
+        let pool = WorkerPool::new(4);
+        let hits: [AtomicUsize; 4] = std::array::from_fn(|_| AtomicUsize::new(0));
+        pool.run(4, &|w| {
+            hits[w].fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.map(|h| h.into_inner()), [1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn inactive_workers_do_not_run() {
+        let pool = WorkerPool::new(4);
+        let hits = AtomicUsize::new(0);
+        let max_index = AtomicUsize::new(0);
+        pool.run(2, &|w| {
+            hits.fetch_add(1, Ordering::SeqCst);
+            max_index.fetch_max(w, Ordering::SeqCst);
+        });
+        assert_eq!(hits.into_inner(), 2);
+        assert!(max_index.into_inner() < 2);
+    }
+
+    #[test]
+    fn reusable_across_many_generations_with_borrowed_state() {
+        let pool = WorkerPool::new(3);
+        let mut total = 0usize;
+        for round in 0..200 {
+            // Borrow a fresh stack buffer each round (the scoped-thread
+            // property the lifetime erasure must preserve).
+            let out: Vec<AtomicUsize> = (0..3).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(3, &|w| {
+                out[w].store(round + w, Ordering::SeqCst);
+            });
+            total += out.iter().map(|v| v.load(Ordering::SeqCst)).sum::<usize>();
+        }
+        assert_eq!(total, (0..200).map(|r| 3 * r + 3).sum::<usize>());
+    }
+
+    #[test]
+    fn active_count_clamps_to_size_and_zero_is_noop() {
+        let pool = WorkerPool::new(2);
+        let hits = AtomicUsize::new(0);
+        pool.run(100, &|_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+        pool.run(0, &|_| {
+            hits.fetch_add(100, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let pool = WorkerPool::new(2);
+        pool.run(2, &|_| {});
+        drop(pool); // must not hang or panic
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn worker_panic_propagates_to_caller() {
+        // A panicking job must crash the caller (like thread::scope's
+        // join), never deadlock the barrier.
+        let pool = WorkerPool::new(2);
+        pool.run(2, &|w| {
+            if w == 1 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn pool_survives_a_panicked_job() {
+        let pool = WorkerPool::new(2);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(1, &|_| panic!("transient"));
+        }));
+        assert!(caught.is_err());
+        // Workers caught the panic themselves, so the pool still works.
+        let hits = AtomicUsize::new(0);
+        pool.run(2, &|_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.into_inner(), 2);
+    }
+
+    #[test]
+    fn resolve_threads_auto_detects() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(1), 1);
+        assert_eq!(resolve_threads(7), 7);
+    }
+}

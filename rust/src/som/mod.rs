@@ -17,7 +17,7 @@ mod soam;
 pub use gng::Gng;
 pub use gwr::Gwr;
 pub use habituation::Habituation;
-pub use network::{ChangeLog, Edge, Network, Unit, UnitId, DEAD_POS};
+pub use network::{ChangeLog, Edge, Network, Unit, UnitId, DEAD_POS, SOA_LANES};
 pub use params::{AdaptParams, GngParams, GwrParams, SoamParams};
 pub use soam::{Soam, SoamState};
 

@@ -61,6 +61,13 @@ impl ChangeLog {
 /// `+inf` and they can never win a Find-Winners scan.
 pub const DEAD_POS: Vec3 = Vec3 { x: 1e30, y: 1e30, z: 1e30 };
 
+/// Lane width of the structure-of-arrays position mirror. The SoA arrays
+/// are always padded to a multiple of this, so the lane-blocked Find
+/// Winners kernel (`findwinners::lanes`, fixed `LANES = SOA_LANES`) can use
+/// `chunks_exact` with no scalar tail. 8 f32 lanes = one AVX2 register; on
+/// narrower targets LLVM simply unrolls.
+pub const SOA_LANES: usize = 8;
+
 /// Slab-allocated unit graph.
 #[derive(Clone, Debug, Default)]
 pub struct Network {
@@ -75,6 +82,13 @@ pub struct Network {
     /// (~1.6× on the memory-bound scan), and `fill_positions` for the PJRT
     /// marshalling is a straight copy of it.
     positions: Vec<Vec3>,
+    /// Structure-of-arrays mirror of `positions` for the lane-blocked
+    /// Find-Winners kernel: one coordinate stream per axis, padded to a
+    /// multiple of [`SOA_LANES`], dead and padding slots poisoned with the
+    /// [`DEAD_POS`] coordinates so their distances overflow to `+inf`.
+    xs: Vec<f32>,
+    ys: Vec<f32>,
+    zs: Vec<f32>,
 }
 
 impl Network {
@@ -134,6 +148,7 @@ impl Network {
         debug_assert!(self.is_alive(id));
         self.units[id as usize].pos = p;
         self.positions[id as usize] = p;
+        self.soa_write(id as usize, p);
     }
 
     /// The dense position mirror (len == `capacity()`, dead slots =
@@ -141,6 +156,30 @@ impl Network {
     #[inline]
     pub fn positions(&self) -> &[Vec3] {
         &self.positions
+    }
+
+    /// The SoA position mirror `(xs, ys, zs)`: one coordinate stream per
+    /// axis, length `capacity()` rounded up to a multiple of [`SOA_LANES`],
+    /// dead and padding slots poisoned with the [`DEAD_POS`] coordinates.
+    /// This is the view the lane-blocked Find-Winners kernel consumes.
+    #[inline]
+    pub fn soa(&self) -> (&[f32], &[f32], &[f32]) {
+        (&self.xs, &self.ys, &self.zs)
+    }
+
+    /// Write one slot of the SoA mirror, growing it (poison-filled) to the
+    /// next lane multiple when `i` is a fresh slab slot.
+    #[inline]
+    fn soa_write(&mut self, i: usize, p: Vec3) {
+        if i >= self.xs.len() {
+            let len = (i + 1).next_multiple_of(SOA_LANES);
+            self.xs.resize(len, DEAD_POS.x);
+            self.ys.resize(len, DEAD_POS.y);
+            self.zs.resize(len, DEAD_POS.z);
+        }
+        self.xs[i] = p.x;
+        self.ys[i] = p.y;
+        self.zs[i] = p.z;
     }
 
     /// Iterate live unit ids (slab order — deterministic).
@@ -173,13 +212,16 @@ impl Network {
         if let Some(id) = self.free.pop() {
             self.units[id as usize] = unit;
             self.positions[id as usize] = pos;
+            self.soa_write(id as usize, pos);
             debug_assert!(self.adjacency[id as usize].is_empty());
             id
         } else {
             self.units.push(unit);
             self.positions.push(pos);
             self.adjacency.push(Vec::new());
-            (self.units.len() - 1) as UnitId
+            let id = self.units.len() - 1;
+            self.soa_write(id, pos);
+            id as UnitId
         }
     }
 
@@ -192,6 +234,7 @@ impl Network {
         }
         self.units[id as usize].alive = false;
         self.positions[id as usize] = DEAD_POS;
+        self.soa_write(id as usize, DEAD_POS);
         self.alive -= 1;
         self.free.push(id);
     }
@@ -371,6 +414,22 @@ impl Network {
                 return Err(format!("dead slot {i} not DEAD_POS in mirror"));
             }
         }
+        let soa_len = self.positions.len().next_multiple_of(SOA_LANES);
+        if self.xs.len() != soa_len || self.ys.len() != soa_len || self.zs.len() != soa_len {
+            return Err(format!(
+                "SoA mirror lens {}/{}/{} != padded capacity {soa_len}",
+                self.xs.len(),
+                self.ys.len(),
+                self.zs.len()
+            ));
+        }
+        for i in 0..soa_len {
+            let want = self.positions.get(i).copied().unwrap_or(DEAD_POS);
+            let got = Vec3::new(self.xs[i], self.ys[i], self.zs[i]);
+            if got != want {
+                return Err(format!("SoA mirror diverged at slot {i}: {got:?} != {want:?}"));
+            }
+        }
         let mut free_seen = std::collections::HashSet::new();
         for &f in &self.free {
             if self.units[f as usize].alive {
@@ -519,6 +578,36 @@ mod tests {
         let m = n.to_mesh();
         assert_eq!(m.faces.len(), 1);
         assert_eq!(m.vertices.len(), 3);
+    }
+
+    #[test]
+    fn soa_mirror_tracks_mutations_and_pads_to_lanes() {
+        let mut n = Network::new();
+        let mut ids = Vec::new();
+        // Cross a lane boundary so both the padded tail and a full lane
+        // block are exercised.
+        for k in 0..SOA_LANES + 3 {
+            ids.push(n.insert(v(k as f32), 1.0));
+        }
+        n.check_invariants().unwrap();
+        let (xs, ys, zs) = n.soa();
+        assert_eq!(xs.len(), 2 * SOA_LANES);
+        assert_eq!(ys.len(), 2 * SOA_LANES);
+        assert_eq!(zs.len(), 2 * SOA_LANES);
+        assert_eq!(xs[3], 3.0);
+        assert_eq!(xs[2 * SOA_LANES - 1], DEAD_POS.x, "padding poisoned");
+
+        n.set_pos(ids[2], Vec3::new(7.0, 8.0, 9.0));
+        n.remove(ids[4]);
+        n.check_invariants().unwrap();
+        let (xs, ys, zs) = n.soa();
+        assert_eq!((xs[2], ys[2], zs[2]), (7.0, 8.0, 9.0));
+        assert_eq!(xs[4], DEAD_POS.x, "dead slot poisoned");
+
+        let reused = n.insert(v(42.0), 1.0);
+        assert_eq!(reused, ids[4], "slot reuse");
+        n.check_invariants().unwrap();
+        assert_eq!(n.soa().0[4], 42.0);
     }
 
     #[test]

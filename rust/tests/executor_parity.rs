@@ -205,6 +205,48 @@ fn parallel_matches_multi_for_every_thread_count() {
 }
 
 #[test]
+fn pooled_plan_and_sharded_find_match_multi_bitwise() {
+    // The full engine path: one shared worker pool per run (created in
+    // run_convergence), plan pass pooled, Find Winners sharded — the final
+    // network must still match the sequential multi driver bit-for-bit for
+    // every (update_threads, find_threads) combination.
+    use msgsn::config::{Driver, RunConfig};
+    use msgsn::engine::run_convergence;
+
+    let sampler = blob_sampler();
+    let mut cfg = RunConfig::preset(BenchmarkShape::Blob);
+    cfg.soam.insertion_threshold = 0.16;
+    cfg.limits.max_signals = 30_000;
+
+    let mut soam_a = Soam::new(SoamParams {
+        insertion_threshold: 0.16,
+        ..SoamParams::default()
+    });
+    let mut fw_a = BatchRust::default();
+    let mut rng_a = Rng::seed_from(15);
+    let a = run_multi_signal(&mut soam_a, &sampler, &mut fw_a, &cfg.limits, &mut rng_a);
+
+    for (update_threads, find_threads) in [(1usize, 2usize), (3, 7), (2, 2), (0, 0)] {
+        cfg.driver = Driver::Parallel;
+        cfg.update_threads = update_threads;
+        cfg.find_threads = find_threads;
+        let mut soam_b = Soam::new(SoamParams {
+            insertion_threshold: 0.16,
+            ..SoamParams::default()
+        });
+        let mut fw_b = BatchRust::default();
+        let mut rng_b = Rng::seed_from(15);
+        let b = run_convergence(&mut soam_b, &sampler, &mut fw_b, &cfg, &mut rng_b);
+        let label = format!("upd={update_threads} find={find_threads}");
+        assert_eq!(a.iterations, b.iterations, "{label}");
+        assert_eq!(a.signals, b.signals, "{label}");
+        assert_eq!(a.discarded, b.discarded, "{label}");
+        assert_eq!(a.qe.to_bits(), b.qe.to_bits(), "{label}");
+        assert_networks_identical(soam_a.net(), soam_b.net(), &label);
+    }
+}
+
+#[test]
 fn parallel_matches_multi_for_gwr() {
     let sampler = blob_sampler();
     let lim = limits(25_000);

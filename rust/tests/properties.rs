@@ -345,3 +345,91 @@ fn prop_merged_sync_equals_per_signal_syncs() {
         },
     );
 }
+
+/// PR-2 — the lane-blocked SIMD kernel is bit-identical to the exhaustive
+/// reference scan. The generator covers every tricky regime by
+/// construction: live counts that are not a multiple of the lane width,
+/// dead slots interleaved through the slab, exact distance ties (quantized
+/// coordinates), and networks with fewer than two live units.
+#[test]
+fn prop_lane_kernel_bit_identical_to_exhaustive() {
+    use msgsn::findwinners::{exhaustive_top2, lanes};
+    Prop::new(150, 9).run(
+        |rng, size| {
+            let units = sized_usize(rng, size, 0, 211);
+            let mut net = Network::new();
+            let mut ids = Vec::new();
+            for _ in 0..units {
+                // Quantized coordinates force exact distance ties.
+                let p = Vec3::new(
+                    rng.index(4) as f32 * 0.25,
+                    rng.index(4) as f32 * 0.25,
+                    rng.index(4) as f32 * 0.25,
+                );
+                ids.push(net.insert(p, 0.1));
+            }
+            for &id in &ids {
+                if rng.index(5) == 0 {
+                    net.remove(id);
+                }
+            }
+            let sigs: Vec<Vec3> = (0..20)
+                .map(|_| {
+                    Vec3::new(
+                        rng.index(5) as f32 * 0.2,
+                        rng.index(5) as f32 * 0.2,
+                        rng.index(5) as f32 * 0.2,
+                    )
+                })
+                .collect();
+            (net, sigs)
+        },
+        |(net, sigs)| {
+            net.check_invariants().map_err(|e| format!("generator: {e}"))?;
+            for (k, s) in sigs.iter().enumerate() {
+                let want = exhaustive_top2(net, *s);
+                let got = lanes::lane_top2(net, *s);
+                let same = match (want, got) {
+                    (None, None) => true,
+                    (Some(a), Some(b)) => {
+                        a.w1 == b.w1
+                            && a.w2 == b.w2
+                            && a.d1_sq.to_bits() == b.d1_sq.to_bits()
+                            && a.d2_sq.to_bits() == b.d2_sq.to_bits()
+                    }
+                    _ => false,
+                };
+                if !same {
+                    return Err(format!(
+                        "signal {k}: exhaustive {want:?} vs lane-blocked {got:?}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// PR-2 — sharding `find2_batch` across the persistent worker pool must not
+/// change a single bit of any `Winners` for any `find_threads`.
+#[test]
+fn pool_sharded_batch_identical_for_find_threads_1_2_7() {
+    use msgsn::runtime::WorkerPool;
+    use std::sync::Arc;
+    let mut rng = Rng::seed_from(77);
+    let net = random_net(&mut rng, 700);
+    // Enough signals that the per-shard minimum engages for every count.
+    let sigs: Vec<Vec3> = (0..1000)
+        .map(|_| Vec3::new(rng.f32(), rng.f32(), rng.f32()))
+        .collect();
+    let mut base = Vec::new();
+    BatchRust::default().find2_batch(&net, &sigs, &mut base);
+    assert!(base.iter().all(|w| w.is_some()));
+    for find_threads in [1usize, 2, 7] {
+        let mut fw = BatchRust::default();
+        fw.attach_pool(Arc::new(WorkerPool::new(find_threads)), find_threads);
+        let mut got = Vec::new();
+        fw.find2_batch(&net, &sigs, &mut got);
+        assert_eq!(got, base, "find_threads {find_threads}");
+    }
+}
