@@ -2,20 +2,32 @@
 //! time-consuming" phase once Find Winners is accelerated, and leave its
 //! parallelization as future work. This bench quantifies the Update rule
 //! itself (SOAM adapt/insert/prune path) and the winner-lock overhead, and
-//! measures the pipelined overlap, the pooled plan pass (vs the sequential
-//! plan — the old per-flush scoped spawn is gone entirely), and the
+//! measures the pipelined overlap (now composed with the pooled Update
+//! split), the pooled plan pass + concurrent commit, and the
 //! `find_threads` sharding on the shared pool. Driver rows are written to
-//! `BENCH_update_phase.json` for the trajectory.
+//! `BENCH_update_phase.json`; the PR 3 additions — the eager-vs-lazy GNG
+//! decay microbench and the GNG driver rows the lazy decay made possible —
+//! go to `BENCH_PR3.json`.
+//!
+//! `MSGSN_BENCH_SIGNALS` scales the driver-row workloads (default
+//! 300_000) so CI can run a shortened pass for the regression diff.
 
 use std::time::{Duration, Instant};
 
-use msgsn::config::{Driver, Limits, RunConfig};
-use msgsn::coordinator::{run_pipelined, LockTable};
+use msgsn::config::{Algorithm, Driver, Limits, RunConfig};
+use msgsn::coordinator::LockTable;
 use msgsn::engine::run_multi_signal;
 use msgsn::findwinners::{BatchRust, FindWinners, Scalar};
 use msgsn::mesh::{benchmark_mesh, BenchmarkShape, SurfaceSampler};
 use msgsn::rng::Rng;
 use msgsn::som::{ChangeLog, GrowingNetwork, Soam, SoamParams};
+
+fn bench_signals() -> u64 {
+    std::env::var("MSGSN_BENCH_SIGNALS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(300_000)
+}
 
 fn grown_soam(sampler: &SurfaceSampler, threshold: f32, grow_signals: u64) -> Soam {
     let mut rng = Rng::seed_from(3);
@@ -95,10 +107,12 @@ fn main() {
     //    the pooled plan pass (auto threads) vs pooled plan + sharded Find
     //    Winners on the same pool. The parallel rows are bit-identical to
     //    multi by construction — only the time columns may move.
-    println!("\nupdate-phase drivers (300k signals, blob):");
-    let rows: [(&str, Driver, usize, usize); 5] = [
+    let signals = bench_signals();
+    println!("\nupdate-phase drivers ({signals} signals, blob):");
+    let rows: [(&str, Driver, usize, usize); 6] = [
         ("multi", Driver::Multi, 1, 1),
         ("pipelined", Driver::Pipelined, 1, 1),
+        ("pipe pooled", Driver::Pipelined, 0, 1),
         ("par seq-plan", Driver::Parallel, 1, 1),
         ("par pooled", Driver::Parallel, 0, 1),
         ("par pool+find", Driver::Parallel, 0, 0),
@@ -111,14 +125,15 @@ fn main() {
         cfg.driver = driver;
         cfg.update_threads = update_threads;
         cfg.find_threads = find_threads;
-        cfg.limits = Limits { max_signals: 300_000, ..Limits::default() };
+        cfg.limits = Limits { max_signals: signals, ..Limits::default() };
         let mut soam = Soam::new(cfg.soam);
         let mut fw = BatchRust::default();
         let t0 = Instant::now();
+        // Everything except the bare multi reference goes through
+        // run_convergence: it resolves the thread knobs and builds the
+        // pipelined/parallel executors exactly as production runs do
+        // (queue_depth comes from the preset, 2).
         let r = match driver {
-            Driver::Pipelined => {
-                run_pipelined(&mut soam, &sampler, &mut fw, &cfg.limits, &mut rng, 2)
-            }
             Driver::Multi => {
                 run_multi_signal(&mut soam, &sampler, &mut fw, &cfg.limits, &mut rng)
             }
@@ -151,12 +166,133 @@ fn main() {
     println!("\n(pipelined: the Sample row is residual wait time — overlap hides the rest;");
     println!(" parallel rows: identical units/discards to multi by construction)");
     let json = format!(
-        "{{\n  \"bench\": \"update_phase\",\n  \"drivers\": [\n{}\n  ]\n}}\n",
+        "{{\n  \"bench\": \"update_phase\",\n  \"signals\": {signals},\n  \"drivers\": [\n{}\n  ]\n}}\n",
         json_rows.join(",\n")
     );
     if let Err(e) = std::fs::write("BENCH_update_phase.json", &json) {
         eprintln!("(could not write BENCH_update_phase.json: {e})");
     } else {
         println!("wrote BENCH_update_phase.json");
+    }
+
+    // 4. GNG error-decay bookkeeping: the eager per-signal O(N) sweep vs
+    //    the lazy epoch scheme (one counter bump per signal + a
+    //    repeated-multiply ladder on the ~|N(w1)|+1 units actually read).
+    //    This is the sequential tail the lazy decay removed; the sweep
+    //    cost grows linearly with the network while the lazy cost is flat.
+    println!("\nGNG decay bookkeeping (ns/signal, winner + 6 neighbors touched per signal):");
+    let mut decay_rows = Vec::new();
+    for n in [1_000usize, 10_000, 100_000] {
+        let d = 1.0f32 - 0.0005;
+        let mut rng = Rng::seed_from(17);
+        let touched: Vec<usize> = (0..4096).map(|_| rng.index(n)).collect();
+
+        // Eager: multiply every unit's error once per signal.
+        let mut errors = vec![1.0f32; n];
+        let t0 = Instant::now();
+        let mut eager_signals = 0u64;
+        while t0.elapsed() < Duration::from_millis(250) {
+            for e in errors.iter_mut() {
+                *e *= d;
+            }
+            eager_signals += 1;
+        }
+        std::hint::black_box(&errors);
+        let eager_ns = t0.elapsed().as_secs_f64() / eager_signals as f64 * 1e9;
+
+        // Lazy: bump the epoch; materialize only the touched units.
+        let mut errors = vec![1.0f32; n];
+        let mut epochs = vec![0u64; n];
+        let mut epoch = 0u64;
+        let t0 = Instant::now();
+        let mut lazy_signals = 0u64;
+        let mut cursor = 0usize;
+        while t0.elapsed() < Duration::from_millis(250) {
+            epoch += 1;
+            // A winner read-modify-write plus six neighbor reads.
+            for k in 0..7 {
+                let i = touched[(cursor + k) % touched.len()];
+                let mut e = errors[i];
+                let mut steps = epoch - epochs[i];
+                while steps > 0 {
+                    let next = e * d;
+                    if next.to_bits() == e.to_bits() {
+                        break;
+                    }
+                    e = next;
+                    steps -= 1;
+                }
+                errors[i] = e;
+                epochs[i] = epoch;
+            }
+            errors[touched[cursor % touched.len()]] += 0.01;
+            cursor += 7;
+            lazy_signals += 1;
+        }
+        let lazy_ns = t0.elapsed().as_secs_f64() / lazy_signals as f64 * 1e9;
+        std::hint::black_box(&errors);
+
+        println!(
+            "  n={n:>6}: eager sweep {eager_ns:>10.1} ns/signal   lazy epochs {lazy_ns:>8.1} ns/signal   ({:.1}x)",
+            eager_ns / lazy_ns
+        );
+        decay_rows.push(format!(
+            "    {{\"units\": {n}, \"eager_ns_per_signal\": {eager_ns:.2}, \
+             \"lazy_ns_per_signal\": {lazy_ns:.2}}}"
+        ));
+    }
+
+    // 5. GNG through the drivers — rows that were meaningless before the
+    //    lazy decay (GNG always classified Structural, so `parallel`
+    //    degenerated to sequential by definition).
+    println!("\nGNG drivers ({signals} signals, eight):");
+    let gng_mesh = benchmark_mesh(BenchmarkShape::Eight, 48);
+    let mut gng_rows = Vec::new();
+    for (name, driver, update_threads, find_threads) in [
+        ("gng multi", Driver::Multi, 1usize, 1usize),
+        ("gng par pooled", Driver::Parallel, 0, 1),
+        ("gng pool+find", Driver::Parallel, 0, 0),
+    ] {
+        let mut cfg = RunConfig::preset(BenchmarkShape::Eight);
+        cfg.algorithm = Algorithm::Gng;
+        cfg.driver = driver;
+        cfg.update_threads = update_threads;
+        cfg.find_threads = find_threads;
+        cfg.limits = Limits { max_signals: signals, ..Limits::default() };
+        let mut rng = Rng::seed_from(5);
+        let t0 = Instant::now();
+        let r = msgsn::engine::run(&gng_mesh, driver, &cfg, &mut rng).expect("gng bench run");
+        let total = t0.elapsed().as_secs_f64();
+        println!(
+            "  {:14} {:>8.3}s total  find {:>7.3}s  update {:>7.3}s ({} units, {} discarded)",
+            name,
+            total,
+            r.phase.find.as_secs_f64(),
+            r.phase.update.as_secs_f64(),
+            r.units,
+            r.discarded,
+        );
+        gng_rows.push(format!(
+            "    {{\"row\": \"{name}\", \"driver\": \"{}\", \"update_threads\": {update_threads}, \
+             \"find_threads\": {find_threads}, \"total_s\": {total:.6}, \
+             \"find_s\": {:.6}, \"update_s\": {:.6}, \"units\": {}, \"discarded\": {}}}",
+            driver.name(),
+            r.phase.find.as_secs_f64(),
+            r.phase.update.as_secs_f64(),
+            r.units,
+            r.discarded,
+        ));
+    }
+    println!("(gng parallel rows: identical units/discards to gng multi by construction)");
+
+    let pr3 = format!(
+        "{{\n  \"bench\": \"pr3\",\n  \"signals\": {signals},\n  \"decay_microbench\": [\n{}\n  ],\n  \"gng_drivers\": [\n{}\n  ]\n}}\n",
+        decay_rows.join(",\n"),
+        gng_rows.join(",\n")
+    );
+    if let Err(e) = std::fs::write("BENCH_PR3.json", &pr3) {
+        eprintln!("(could not write BENCH_PR3.json: {e})");
+    } else {
+        println!("wrote BENCH_PR3.json");
     }
 }

@@ -184,17 +184,24 @@ pub fn ablate_m_schedule(max_signals: u64, seed: u64) -> Table {
 
 /// Ablation 4: the Update-phase execution strategy — the same multi-signal
 /// semantics run sequentially (`multi`), with the Sample phase prefetched
-/// (`pipelined`), with the pooled plan/commit split (`parallel`), and with
-/// Find Winners sharded across the same pool (`find_threads`).
-/// Units/connections/discards must agree across every row except
-/// `pipelined` (bit parity by construction); the Find/Update columns show
-/// where the time goes.
+/// (`pipelined`, now composed with the pooled Update split), with the
+/// pooled plan + concurrent-commit split (`parallel`), and with Find
+/// Winners sharded across the same pool (`find_threads`). The GNG rows
+/// exist because the lazy error decay removed the per-signal O(N) sweep
+/// that used to classify every GNG update as Structural — before PR 3 the
+/// `parallel` driver degenerated to sequential for GNG by definition.
+/// Units/connections/discards must agree across every row of one algorithm
+/// except `pipelined` (bit parity by construction); the Find/Update
+/// columns show where the time goes.
 pub fn ablate_update_executor(max_signals: u64, seed: u64) -> Result<Table> {
+    use crate::config::Algorithm;
     let mesh = benchmark_mesh(BenchmarkShape::Blob, 32);
     let mut cfg = RunConfig::preset(BenchmarkShape::Blob);
     cfg.soam.insertion_threshold = 0.15;
+    cfg.gng.lambda = 100;
     cfg.limits.max_signals = max_signals;
     let mut t = Table::new(&[
+        "algo",
         "driver",
         "upd threads",
         "find threads",
@@ -210,20 +217,27 @@ pub fn ablate_update_executor(max_signals: u64, seed: u64) -> Result<Table> {
         0 => "auto".to_string(),
         n => n.to_string(),
     };
-    let runs: [(Driver, usize, usize); 6] = [
-        (Driver::Multi, 1, 1),
-        (Driver::Multi, 1, 0), // sharded find, sequential update
-        (Driver::Pipelined, 1, 1),
-        (Driver::Parallel, 1, 1),
-        (Driver::Parallel, 0, 1), // pooled plan pass only
-        (Driver::Parallel, 0, 0), // shared pool: plan pass + sharded find
+    let runs: [(Algorithm, Driver, usize, usize); 10] = [
+        (Algorithm::Soam, Driver::Multi, 1, 1),
+        (Algorithm::Soam, Driver::Multi, 1, 0), // sharded find, sequential update
+        (Algorithm::Soam, Driver::Pipelined, 1, 1),
+        (Algorithm::Soam, Driver::Pipelined, 0, 1), // prefetch + pooled update
+        (Algorithm::Soam, Driver::Parallel, 1, 1),
+        (Algorithm::Soam, Driver::Parallel, 0, 1), // pooled plan + commit
+        (Algorithm::Soam, Driver::Parallel, 0, 0), // shared pool: + sharded find
+        // GNG under the parallel executor — enabled by the lazy decay.
+        (Algorithm::Gng, Driver::Multi, 1, 1),
+        (Algorithm::Gng, Driver::Parallel, 0, 1),
+        (Algorithm::Gng, Driver::Parallel, 0, 0),
     ];
-    for (driver, update_threads, find_threads) in runs {
+    for (algorithm, driver, update_threads, find_threads) in runs {
+        cfg.algorithm = algorithm;
         cfg.update_threads = update_threads;
         cfg.find_threads = find_threads;
         let mut rng = Rng::seed_from(seed);
         let r = crate::engine::run(&mesh, driver, &cfg, &mut rng)?;
         t.row(vec![
+            algorithm.name().into(),
             driver.name().into(),
             fmt_threads(update_threads),
             fmt_threads(find_threads),

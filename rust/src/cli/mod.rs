@@ -44,7 +44,9 @@ USAGE:
       --config <file.toml>       load config file
       --set <key=value>          override any config key (repeatable;
                                  e.g. queue_depth=4, update_threads=8,
-                                 find_threads=8 — 0 = auto-detect)
+                                 find_threads=8 — 0 = auto-detect;
+                                 update_threads drives the pooled Update
+                                 split of parallel AND pipelined)
       --max-signals <N>          safety cap
       --trace                    record trace points
       --save-mesh <out.obj>      write the reconstructed network mesh

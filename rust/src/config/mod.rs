@@ -28,11 +28,14 @@ pub enum Driver {
     /// artifact on the PJRT runtime (the paper's GPU-based column).
     Pjrt,
     /// Multi-signal with the Sample phase of batch k+1 prefetched on a
-    /// sampler thread while batch k updates (`queue_depth` backpressure).
+    /// sampler thread while batch k updates (`queue_depth` backpressure),
+    /// composed with the same pooled Update split as [`Driver::Parallel`]
+    /// (`update_threads`).
     Pipelined,
     /// Multi-signal with the Update phase split into a sequential admission
-    /// pass and a multi-threaded plan pass over conflict-disjoint winner
-    /// groups (`update_threads` workers, deterministic by construction).
+    /// pass, a multi-threaded plan pass over conflict-disjoint winner
+    /// groups and a concurrent commit of their network writes
+    /// (`update_threads` workers, deterministic by construction).
     Parallel,
 }
 
@@ -165,9 +168,9 @@ pub struct RunConfig {
     /// Sampler prefetch depth for the `Pipelined` driver (how many batches
     /// the sampler thread may run ahead; ≥ 1).
     pub queue_depth: usize,
-    /// Worker threads for the `Parallel` driver's Update plan pass
-    /// (0 = auto-detect, 1 = sequential; results are identical for any
-    /// value by construction).
+    /// Worker threads for the Update plan pass + concurrent commit of the
+    /// `Parallel` and `Pipelined` drivers (0 = auto-detect, 1 =
+    /// sequential; results are identical for any value by construction).
     pub update_threads: usize,
     /// Worker shards for the batched Find Winners scan: `find2_batch`
     /// signals are split across the run's persistent worker pool (shared

@@ -24,25 +24,41 @@
 //! accelerated (§3.3) — into:
 //!
 //! 1. a **sequential admission pass** in permutation order (locks,
-//!    staleness, aliveness: exactly the paper's collision semantics);
-//! 2. a **parallel plan pass**: admitted signals whose updates are
-//!    provably pure adaptation ([`UpdateKind::Adapt`]) and whose winner
-//!    neighborhoods are conflict-disjoint are planned off-thread via the
-//!    read-only [`GrowingNetwork::plan_update`];
-//! 3. an **in-order commit pass**: plans are applied on the driver thread
-//!    in admission order, so the final network is bit-identical to the
-//!    sequential `Multi` driver for any thread count.
-//!
-//! Structural updates (insertions, removals, edge prunes — or anything an
-//! algorithm won't certify) force a flush of the deferred plans and run
-//! inline, preserving slab-id assignment order exactly.
+//!    staleness, aliveness: exactly the paper's collision semantics).
+//!    Admitted signals whose updates are provably pure adaptation
+//!    ([`UpdateKind::Adapt`], classified against `signals_seen +
+//!    pending_commits` so even GNG's global insertion schedule is decided
+//!    exactly) and whose winner neighborhoods are conflict-disjoint are
+//!    deferred; everything else flushes the deferral queue and runs
+//!    inline, preserving slab-id assignment order exactly;
+//! 2. a **parallel plan pass**: deferred signals are planned off-thread
+//!    via the read-only [`GrowingNetwork::plan_update`], in work-stealing
+//!    chunks claimed from the run's persistent [`WorkerPool`];
+//! 3. a **shard-local concurrent commit**: the network writes of every
+//!    plan (edge aging, the competitive-Hebbian connect, position moves,
+//!    firing levels) are applied *in parallel* through
+//!    [`crate::som::ShardWriter`] — sound because deferred plans have
+//!    pairwise-disjoint touched sets (`{w1, w2} ∪ N(w1)`), enforced by the
+//!    conflict check at deferral time, and allocation determinism is the
+//!    slab's own property (sharded free lists with a global LIFO pop
+//!    order). Commit chunks are conflict-disjoint groups cut from the
+//!    admission order (deterministically — chunk boundaries depend only on
+//!    the pending count and worker count, never on scheduling);
+//! 4. a **sequential scalar replay** in admission order on the driver
+//!    thread: change-log entries (from the pre-move positions the writers
+//!    captured), the shared undirected-edge counter, and each algorithm's
+//!    per-signal scalars ([`GrowingNetwork::commit_scalars`]: the QE
+//!    stream, GNG's signal counter / lazily-decayed winner error / decay
+//!    epoch). Every order-sensitive f32 accumulation lives here, so the
+//!    final state is bit-identical to the sequential `Multi` driver for
+//!    any thread count and any work-stealing schedule.
 
 use std::sync::{Arc, Mutex};
 
 use crate::findwinners::FindWinners;
 use crate::geometry::{Aabb, Vec3};
 use crate::rng::Rng;
-use crate::runtime::{resolve_threads, WorkerPool};
+use crate::runtime::{resolve_threads, steal_chunk, WorkerPool};
 use crate::som::{ChangeLog, GrowingNetwork, Network, UpdateKind, UpdatePlan, Winners};
 
 use super::locks::LockTable;
@@ -53,6 +69,11 @@ use super::locks::LockTable;
 /// break-even sits well under the big steady-state batches of a mature
 /// network (m up to 8192).
 const MIN_PARALLEL_FLUSH: usize = 128;
+
+/// Floor (in plans) of one work-stealing chunk in the plan pass and the
+/// concurrent commit: below this the atomic claim + mutex take overhead
+/// beats the ≈100–300 ns of work per plan.
+const MIN_STEAL_CHUNK: usize = 32;
 
 /// Staleness guard: positions of units inserted earlier in the current
 /// batch. A signal whose (stale) winner distance exceeds its distance to
@@ -117,9 +138,15 @@ struct Pending {
     w: Winners,
 }
 
-/// One worker's scoped work item in the pooled plan pass: its pending
-/// chunk and the matching plan-output chunk.
+/// One claimable work item in the pooled plan pass: a pending chunk and
+/// the matching plan-output chunk. Chunks are claimed through the pool's
+/// work-stealing index; the `Mutex<Option<…>>` hands the `&mut` chunk to
+/// exactly one claimant.
 type PlanJob<'a> = Mutex<Option<(&'a [Pending], &'a mut [UpdatePlan])>>;
+
+/// One claimable commit group in the concurrent commit pass: a contiguous,
+/// conflict-disjoint slice of plans in admission order.
+type CommitJob<'a> = Mutex<Option<&'a mut [UpdatePlan]>>;
 
 /// The unified Update-phase executor (see module docs).
 pub struct BatchExecutor {
@@ -159,9 +186,11 @@ impl BatchExecutor {
         let mut threads = resolve_threads(update_threads);
         let pool = match pool {
             Some(p) => {
-                // Never plan more chunks than the pool has workers: excess
-                // chunk pairs would silently go untaken and their default/
-                // stale plans would be committed.
+                // Sizing only (not a correctness guard): `run_indexed`
+                // claims every job index no matter the worker count, but
+                // activating more workers than the pool has would just be
+                // clamped inside `WorkerPool::run` anyway — keep the two
+                // counts honest here so chunk sizing sees the real width.
                 threads = threads.min(p.size());
                 Some(p)
             }
@@ -329,7 +358,7 @@ impl BatchExecutor {
             if self.conflicts(algo.net(), &w) {
                 self.flush(algo);
             }
-            match algo.classify_update(signal, &w) {
+            match algo.classify_update(signal, &w, self.pending.len()) {
                 UpdateKind::Structural => {
                     // Inserts/removals must happen at this exact point in
                     // the permutation order (slab-id assignment, staleness
@@ -365,8 +394,10 @@ impl BatchExecutor {
         self.pending.push(Pending { signal, w });
     }
 
-    /// Plan every deferred signal (in parallel when the batch is worth it)
-    /// and commit the plans in admission order.
+    /// Plan every deferred signal, apply the network writes (both in
+    /// parallel when the flush is worth it), then replay the shared
+    /// scalars in admission order — see the module docs for why each pass
+    /// lands where it does.
     fn flush(&mut self, algo: &mut dyn GrowingNetwork) {
         let n = self.pending.len();
         if n == 0 {
@@ -376,22 +407,24 @@ impl BatchExecutor {
             self.plans.resize_with(n, UpdatePlan::default);
         }
         let workers = self.threads.min(n);
-        if let (Some(pool), true) = (&self.pool, workers > 1 && n >= self.flush_threshold) {
-            // Read-only plan pass on the persistent pool: `&dyn
-            // GrowingNetwork` is `Sync`, the pending neighborhoods are
-            // mutually disjoint, and nothing mutates until the commit pass
-            // below. Each worker takes exactly its chunk pair; `pool.run`
-            // returns only after every active worker acked, so the borrows
-            // stay scoped.
+        let pooled = workers > 1 && n >= self.flush_threshold && self.pool.is_some();
+
+        // 1. Plan pass (read-only). `&dyn GrowingNetwork` is `Sync`, the
+        // pending neighborhoods are mutually disjoint, and nothing mutates
+        // until the commit below. Chunks are claimed work-stealing-style;
+        // `run_indexed` returns only after every active worker acked, so
+        // the borrows stay scoped.
+        if pooled {
+            let pool = self.pool.as_ref().unwrap();
             let algo_ro: &dyn GrowingNetwork = &*algo;
-            let chunk = n.div_ceil(workers);
+            let chunk = steal_chunk(n, workers, MIN_STEAL_CHUNK);
             let pairs: Vec<PlanJob<'_>> = self.pending[..n]
                 .chunks(chunk)
                 .zip(self.plans[..n].chunks_mut(chunk))
                 .map(|pair| Mutex::new(Some(pair)))
                 .collect();
-            pool.run(pairs.len(), &|w| {
-                if let Some((pend, plan)) = pairs[w].lock().unwrap().take() {
+            pool.run_indexed(workers, pairs.len(), &|j| {
+                if let Some((pend, plan)) = pairs[j].lock().unwrap().take() {
                     for (p, out) in pend.iter().zip(plan.iter_mut()) {
                         algo_ro.plan_update(p.signal, &p.w, out);
                     }
@@ -403,10 +436,45 @@ impl BatchExecutor {
                 algo.plan_update(p.signal, &p.w, &mut self.plans[i]);
             }
         }
-        // Commit in admission (= permutation) order: the merged log and
-        // the QE stream come out exactly as in the sequential loop.
+
+        // 2. Concurrent commit of the network writes: the deferred plans'
+        // touched sets are pairwise disjoint (that is what `conflicts`
+        // guards at deferral time), so conflict-disjoint groups — cut
+        // deterministically from the admission order — commit in parallel
+        // through the raw `ShardWriter` view. Which worker commits which
+        // group is racy; the written bits are not a function of it.
+        let writer = algo.net_mut().shard_writer();
+        if pooled {
+            let pool = self.pool.as_ref().unwrap();
+            let chunk = steal_chunk(n, workers, MIN_STEAL_CHUNK);
+            let groups: Vec<CommitJob<'_>> = self.plans[..n]
+                .chunks_mut(chunk)
+                .map(|group| Mutex::new(Some(group)))
+                .collect();
+            pool.run_indexed(workers, groups.len(), &|j| {
+                if let Some(group) = groups[j].lock().unwrap().take() {
+                    for plan in group.iter_mut() {
+                        writer.commit_adapt(plan);
+                    }
+                }
+            });
+        } else {
+            for plan in &mut self.plans[..n] {
+                writer.commit_adapt(plan);
+            }
+        }
+
+        // 3. Sequential scalar replay in admission (= permutation) order:
+        // the merged log, the edge counter and each algorithm's per-signal
+        // scalars (QE, GNG's counter/error/epoch) come out exactly as in
+        // the sequential loop.
         for plan in &self.plans[..n] {
-            algo.commit_update(plan, &mut self.log);
+            debug_assert_eq!(plan.old_pos.len(), plan.moves.len());
+            for (k, &(id, _)) in plan.moves.iter().enumerate() {
+                self.log.moved.push((id, plan.old_pos[k]));
+            }
+            algo.net_mut().note_edges_created(plan.new_edges as usize);
+            algo.commit_scalars(plan, &mut self.log);
         }
         self.pending.clear();
         self.touched.next_batch();
@@ -516,6 +584,70 @@ mod tests {
         batches_match(5);
     }
 
+    /// Same bit-parity harness for GNG — possible at all only because the
+    /// lazy error decay removed the per-signal O(N) sweep that used to
+    /// classify every GNG update as Structural. Exercises the pending-aware
+    /// insertion-schedule classification and the error/epoch scalar replay.
+    fn gng_batches_match(threads: usize) {
+        use crate::som::{Gng, GngParams};
+        let mesh = benchmark_mesh(BenchmarkShape::Eight, 20);
+        let sampler = SurfaceSampler::new(&mesh);
+
+        let run = |update_threads: usize| -> (Network, u64) {
+            let mut rng = Rng::seed_from(23);
+            let mut gng = Gng::new(GngParams { lambda: 60, ..GngParams::default() });
+            gng.init(&sampler, &mut rng);
+            let mut fw = BatchRust::default();
+            fw.rebuild(gng.net());
+            let mut exec = BatchExecutor::new(update_threads);
+            exec.set_flush_threshold(4);
+            let mut signals = Vec::new();
+            let mut winners = Vec::new();
+            let mut discarded = 0u64;
+            for _ in 0..400 {
+                let m = crate::coordinator::MSchedule::default().m(gng.net().len());
+                sampler.sample_batch(&mut rng, m, &mut signals);
+                fw.find2_batch(gng.net(), &signals, &mut winners);
+                discarded += exec.run_batch(&mut gng, &mut fw, &signals, &winners, &mut rng);
+            }
+            // No materialization needed before comparing: when a unit's
+            // error materializes is itself part of the deterministic
+            // operation sequence (winner reads, insertion scans), so the
+            // stored error/epoch state is bit-identical across runs.
+            (gng.net().clone(), discarded)
+        };
+
+        let (net_a, disc_a) = run(1);
+        let (net_b, disc_b) = run(threads);
+        assert_eq!(disc_a, disc_b, "discard decisions diverge");
+        assert_eq!(net_a.capacity(), net_b.capacity(), "slab id assignment diverges");
+        assert_eq!(net_a.len(), net_b.len());
+        assert_eq!(net_a.edge_count(), net_b.edge_count());
+        for id in 0..net_a.capacity() as u32 {
+            assert_eq!(net_a.is_alive(id), net_b.is_alive(id), "unit {id}");
+            if !net_a.is_alive(id) {
+                continue;
+            }
+            let (ua, ub) = (net_a.unit(id), net_b.unit(id));
+            assert_eq!(ua.pos.x.to_bits(), ub.pos.x.to_bits(), "unit {id} pos.x");
+            assert_eq!(ua.pos.y.to_bits(), ub.pos.y.to_bits(), "unit {id} pos.y");
+            assert_eq!(ua.pos.z.to_bits(), ub.pos.z.to_bits(), "unit {id} pos.z");
+            assert_eq!(ua.error.to_bits(), ub.error.to_bits(), "unit {id} error");
+            let mut ea: Vec<(u32, u32)> =
+                net_a.edges_of(id).iter().map(|e| (e.to, e.age.to_bits())).collect();
+            let mut eb: Vec<(u32, u32)> =
+                net_b.edges_of(id).iter().map(|e| (e.to, e.age.to_bits())).collect();
+            ea.sort_unstable();
+            eb.sort_unstable();
+            assert_eq!(ea, eb, "unit {id} edges");
+        }
+    }
+
+    #[test]
+    fn gng_parallel_bit_identical_to_sequential() {
+        gng_batches_match(3);
+    }
+
     #[test]
     fn gwr_classify_agrees_with_update() {
         // For random mature-network batches, a signal classified Adapt must
@@ -536,7 +668,7 @@ mod tests {
         for _ in 0..20_000 {
             let s = sampler.sample(&mut rng);
             let Some(w) = fw.find2(gwr.net(), s) else { continue };
-            let kind = gwr.classify_update(s, &w);
+            let kind = gwr.classify_update(s, &w, 0);
             log.clear();
             gwr.update(s, &w, &mut log);
             match kind {

@@ -14,14 +14,18 @@
 //!
 //! - [`pipeline::run_pipelined`] overlaps the Sample phase of batch *k+1*
 //!   with the Update phase of batch *k* through a bounded (backpressure)
-//!   channel of depth `queue_depth`;
+//!   channel of depth `queue_depth` — composed, since PR 3, with the same
+//!   pooled Update split as the `Parallel` driver;
 //! - the `Parallel` driver (executor with `update_threads > 1`) splits the
-//!   Update phase itself into a sequential admission pass and a plan pass
-//!   over conflict-disjoint winner neighborhoods — executed on the run's
-//!   persistent [`crate::runtime::WorkerPool`] (shared with `find_threads`
-//!   Find-Winners sharding; no per-flush thread spawning) — committing in
-//!   admission order, bit-identical to the sequential driver by
-//!   construction.
+//!   Update phase itself into a sequential admission pass, a plan pass
+//!   over conflict-disjoint winner neighborhoods and a **shard-local
+//!   concurrent commit** of the planned network writes — both executed in
+//!   work-stealing chunks on the run's persistent
+//!   [`crate::runtime::WorkerPool`] (shared with `find_threads`
+//!   Find-Winners sharding; no per-flush thread spawning) — then replays
+//!   the shared scalars in admission order, bit-identical to the
+//!   sequential driver by construction (see `executor` for the full
+//!   four-pass discipline).
 
 pub mod executor;
 pub mod locks;

@@ -14,6 +14,14 @@
 //! batch relative to `run_multi_signal`; everything else — winner locks,
 //! random update order, update rule — is identical. Batches are recycled
 //! through a return channel, so the steady state allocates nothing.
+//!
+//! The Update phase itself is whatever [`BatchExecutor`] the caller hands
+//! in: `BatchExecutor::new(1)` reproduces the historical sequential-update
+//! pipelining, while an executor with `update_threads > 1` (built by
+//! `engine::run_convergence` on the run's shared worker pool) composes the
+//! Sample prefetch with the pooled plan pass and the concurrent commit —
+//! results are bit-identical for any executor thread count, so the knobs
+//! move wall time only.
 
 use std::sync::mpsc;
 use std::time::Instant;
@@ -30,7 +38,9 @@ use crate::som::{ChangeLog, GrowingNetwork, Winners};
 use super::executor::BatchExecutor;
 use super::schedule::MSchedule;
 
-/// Run the multi-signal iteration with a pipelined Sample phase.
+/// Run the multi-signal iteration with a pipelined Sample phase, updating
+/// through the caller-built `executor` (see the module docs for how the
+/// executor's `update_threads` composes with the prefetch).
 pub fn run_pipelined(
     algo: &mut dyn GrowingNetwork,
     sampler: &SurfaceSampler,
@@ -38,6 +48,7 @@ pub fn run_pipelined(
     limits: &Limits,
     rng: &mut Rng,
     queue_depth: usize,
+    mut executor: BatchExecutor,
 ) -> RunReport {
     assert!(queue_depth >= 1);
     let start = Instant::now();
@@ -48,9 +59,6 @@ pub fn run_pipelined(
     fw.rebuild(algo.net());
 
     let schedule = MSchedule::new(limits.max_parallelism);
-    // The shared Update-phase implementation (locks, staleness guard,
-    // random order, merged per-batch sync) — see coordinator::executor.
-    let mut executor = BatchExecutor::new(1);
     let mut winners: Vec<Option<Winners>> = Vec::new();
 
     // The sampler thread owns a forked RNG stream; the main thread keeps
@@ -135,7 +143,7 @@ mod tests {
     use crate::mesh::{benchmark_mesh, BenchmarkShape};
     use crate::som::{Soam, SoamParams};
 
-    fn quick_run(queue_depth: usize, seed: u64) -> RunReport {
+    fn quick_run_threads(queue_depth: usize, seed: u64, update_threads: usize) -> RunReport {
         let mesh = benchmark_mesh(BenchmarkShape::Blob, 20);
         let sampler = SurfaceSampler::new(&mesh);
         let mut rng = Rng::seed_from(seed);
@@ -145,7 +153,19 @@ mod tests {
         });
         let mut fw = BatchRust::default();
         let limits = Limits { max_signals: 30_000, ..Limits::default() };
-        run_pipelined(&mut soam, &sampler, &mut fw, &limits, &mut rng, queue_depth)
+        run_pipelined(
+            &mut soam,
+            &sampler,
+            &mut fw,
+            &limits,
+            &mut rng,
+            queue_depth,
+            BatchExecutor::new(update_threads),
+        )
+    }
+
+    fn quick_run(queue_depth: usize, seed: u64) -> RunReport {
+        quick_run_threads(queue_depth, seed, 1)
     }
 
     #[test]
@@ -174,5 +194,22 @@ mod tests {
         assert_eq!(a.units, b.units);
         assert_eq!(a.iterations, b.iterations);
         assert_eq!(a.discarded, b.discarded);
+    }
+
+    #[test]
+    fn update_threads_do_not_change_pipelined_results() {
+        // Prefetch composed with the pooled plan pass + concurrent commit:
+        // report-level identity for every (queue_depth, update_threads)
+        // pairing (network-level bit parity lives in
+        // rust/tests/executor_parity.rs).
+        let base = quick_run_threads(2, 7, 1);
+        for (queue_depth, update_threads) in [(2usize, 3usize), (2, 0), (4, 2)] {
+            let r = quick_run_threads(queue_depth, 7, update_threads);
+            let label = format!("qd={queue_depth} upd={update_threads}");
+            assert_eq!(base.units, r.units, "{label}");
+            assert_eq!(base.iterations, r.iterations, "{label}");
+            assert_eq!(base.discarded, r.discarded, "{label}");
+            assert_eq!(base.qe.to_bits(), r.qe.to_bits(), "{label}");
+        }
     }
 }

@@ -12,20 +12,24 @@
 //! | indexed | basic (m = 1) | `Indexed` spatial hash | executor, m = 1 |
 //! | multi | multi-signal (§2.2) | `BatchRust` SoA-tiled scan (`find_threads` sharding) | executor, sequential |
 //! | pjrt | multi-signal (§2.2) | `runtime::PjrtFindWinners` (AOT/PJRT) | executor, sequential |
-//! | pipelined | multi-signal, Sample(k+1) overlaps Update(k) | `BatchRust` | executor, sequential |
-//! | parallel | multi-signal (§2.2) | `BatchRust` | executor, pooled plan pass |
+//! | pipelined | multi-signal, Sample(k+1) overlaps Update(k) | `BatchRust` | executor, pooled (`update_threads`) |
+//! | parallel | multi-signal (§2.2) | `BatchRust` | executor, pooled (`update_threads`) |
 //!
 //! The batched drivers share one persistent [`WorkerPool`] per run (created
-//! in [`run_convergence`]): the `Parallel` executor plans on it and
-//! `BatchRust` shards `find2_batch` signals across it (`find_threads`).
+//! in [`run_convergence`]): the `Parallel` and `Pipelined` executors plan
+//! and commit on it and `BatchRust` shards `find2_batch` signals across it
+//! (`find_threads`), all through work-stealing chunk claims.
 //!
 //! The first four are the paper's experimental columns (§3.1). `pipelined`
 //! and `parallel` answer its future-work note ("the parallelization of the
 //! Update phase"): the former hides the Sample phase behind Update via a
-//! prefetching sampler thread (`queue_depth` backpressure), the latter
-//! plans conflict-disjoint adapt updates on `update_threads` workers and
-//! commits them in admission order — producing final networks bit-identical
-//! to `multi` for any thread count (`rust/tests/executor_parity.rs`).
+//! prefetching sampler thread (`queue_depth` backpressure) — composed, as
+//! of PR 3, with the same pooled Update split as `parallel` — the latter
+//! plans conflict-disjoint adapt updates on `update_threads` workers,
+//! commits their network writes concurrently through the sharded slab and
+//! replays the shared scalars in admission order — producing final
+//! networks bit-identical to `multi` for any thread count
+//! (`rust/tests/executor_parity.rs`).
 //!
 //! `Multi` and `Pjrt` share every line of driver code and every RNG draw, so
 //! they replicate the paper's property that the multi-signal reference and
@@ -259,9 +263,9 @@ pub fn make_findwinners(cfg: &RunConfig) -> Result<Box<dyn FindWinners>> {
 /// This is where the run's one persistent [`WorkerPool`] is created: sized
 /// for `max(update_threads, find_threads)`, attached to the Find-Winners
 /// strategy for `find_threads` signal sharding and handed to the
-/// `Parallel` driver's executor for the plan pass. Workers are created
-/// once here and live for the whole run — no driver spawns threads per
-/// flush.
+/// `Parallel`/`Pipelined` drivers' executor for the plan pass and the
+/// concurrent commit. Workers are created once here and live for the
+/// whole run — no driver spawns threads per flush.
 pub fn run_convergence(
     algo: &mut dyn GrowingNetwork,
     sampler: &SurfaceSampler,
@@ -280,7 +284,7 @@ pub fn run_convergence(
         Driver::Single | Driver::Indexed | Driver::Pjrt => 1,
     };
     let update_threads = match cfg.driver {
-        Driver::Parallel => resolve_threads(cfg.update_threads),
+        Driver::Parallel | Driver::Pipelined => resolve_threads(cfg.update_threads),
         _ => 1,
     };
     let pool = (find_threads > 1 || update_threads > 1)
@@ -297,6 +301,7 @@ pub fn run_convergence(
             &cfg.limits,
             rng,
             cfg.queue_depth,
+            BatchExecutor::with_pool(update_threads, pool),
         ),
         Driver::Parallel => run_batched_loop(
             algo,

@@ -16,8 +16,12 @@
 //! 2. **Lane-blocked kernel**: per-lane running top-2 plus one horizontal
 //!    reduce per tile, bit-identical to `exhaustive_top2` (see `lanes`).
 //! 3. **Signal sharding**: with an attached [`WorkerPool`] (`find_threads`
-//!    knob), large batches are split across persistent workers; each signal
-//!    is computed independently, so any shard count yields the same bits.
+//!    knob), large batches are split into work-stealing chunks claimed by
+//!    the persistent workers (a worker finishing a cheap chunk immediately
+//!    claims the next, so a skewed chunk no longer idles the rest); each
+//!    signal is computed independently and each chunk's outputs live at
+//!    fixed offsets, so any shard count *and any claim schedule* yields
+//!    the same bits.
 //!
 //! Results are exactly those of `Scalar` (same distance expression, same
 //! lowest-index tie-break): tiles ascend in id order and tile candidates
@@ -37,8 +41,9 @@ use super::FindWinners;
 const PENDING: Winners =
     Winners { w1: u32::MAX, w2: u32::MAX, d1_sq: f32::INFINITY, d2_sq: f32::INFINITY };
 
-/// Below this many signals per shard, sharding overhead (one pool handoff)
-/// outweighs the work; the batch runs inline instead.
+/// Below this many signals per chunk, sharding overhead (one pool handoff)
+/// outweighs the work; the batch runs inline instead. Also the chunk-size
+/// floor for the work-stealing split.
 const MIN_SHARD_SIGNALS: usize = 64;
 
 /// One worker's scoped work item: its signal chunk and output chunk.
@@ -213,12 +218,16 @@ impl FindWinners for BatchRust {
 
         let pool = self.pool.clone();
         let shards = pool.as_ref().map_or(1, |p| self.shards.min(p.size()));
-        let chunk = signals.len().div_ceil(shards.max(1)).max(MIN_SHARD_SIGNALS);
+        // Work-stealing split: more chunks than workers (floored at
+        // MIN_SHARD_SIGNALS), claimed through the pool's shared index, so a
+        // worker that lands on a cheap chunk immediately picks up another
+        // instead of idling behind a skewed one.
+        let chunk = crate::runtime::steal_chunk(signals.len(), shards, MIN_SHARD_SIGNALS);
         let jobs = signals.len().div_ceil(chunk);
-        if jobs > 1 {
+        if jobs > 1 && shards > 1 {
             let pool = pool.as_ref().unwrap();
-            // Scoped handoff: each worker takes exactly its (signals, out)
-            // chunk pair; the SoA cache is shared read-only.
+            // Scoped handoff: each claimed index maps to exactly one
+            // (signals, out) chunk pair; the SoA cache is shared read-only.
             let (xs, ys, zs) = (&self.xs, &self.ys, &self.zs);
             let (ids, tiles) = (&self.ids, &self.tiles);
             let pairs: Vec<ShardJob<'_>> = signals
@@ -226,8 +235,8 @@ impl FindWinners for BatchRust {
                 .zip(out.chunks_mut(chunk))
                 .map(|pair| Mutex::new(Some(pair)))
                 .collect();
-            pool.run(pairs.len(), &|w| {
-                if let Some((sig, dst)) = pairs[w].lock().unwrap().take() {
+            pool.run_indexed(shards, pairs.len(), &|j| {
+                if let Some((sig, dst)) = pairs[j].lock().unwrap().take() {
                     scan_shard(xs, ys, zs, ids, tiles, sig, dst);
                 }
             });

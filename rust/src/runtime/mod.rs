@@ -17,7 +17,7 @@ mod registry;
 pub use fw::PjrtFindWinners;
 pub use json::{parse_json, Json, JsonError};
 pub use manifest::{ArtifactEntry, Manifest};
-pub use pool::{resolve_threads, WorkerPool};
+pub use pool::{resolve_threads, steal_chunk, WorkerPool};
 pub use registry::{ExecStats, Registry};
 
 /// Padding sentinel for unit slots; `PAD_VALUE²` overflows f32 to `+inf`,

@@ -24,6 +24,7 @@
 //! re-raised by `run` — a bug in a job crashes the caller (as
 //! `thread::scope` would), never a silent deadlock.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
@@ -145,6 +146,41 @@ impl WorkerPool {
             std::panic::resume_unwind(payload);
         }
     }
+
+    /// Work-stealing variant of [`Self::run`]: execute `f(j)` exactly once
+    /// for every job index `j ∈ 0..jobs`, with up to `workers` active
+    /// workers *claiming* indices through a shared atomic counter instead of
+    /// being handed a fixed slice each. A worker that finishes a cheap job
+    /// immediately claims the next unclaimed one, so one skewed job no
+    /// longer idles the rest of the pool — the caller just has to cut the
+    /// work into more jobs than workers (a 2–4× factor is plenty).
+    ///
+    /// Job indices are only an *assignment* mechanism: which worker runs
+    /// which job is racy, but as long as `f`'s output locations are a pure
+    /// function of the index (the chunk-pair pattern used by the plan pass
+    /// and `find2_batch`), results are identical for any schedule.
+    pub fn run_indexed(&self, workers: usize, jobs: usize, f: &(dyn Fn(usize) + Sync)) {
+        if jobs == 0 {
+            return;
+        }
+        let next = AtomicUsize::new(0);
+        self.run(workers.max(1).min(jobs), &|_| loop {
+            let j = next.fetch_add(1, Ordering::Relaxed);
+            if j >= jobs {
+                break;
+            }
+            f(j);
+        });
+    }
+}
+
+/// Split `n` work items into chunk jobs for [`WorkerPool::run_indexed`]:
+/// small enough that claiming balances skew (≈ 4 jobs per worker), never
+/// below `min_chunk` items (the per-handoff overhead floor). Returns the
+/// chunk length; `n.div_ceil(chunk)` is the job count.
+pub fn steal_chunk(n: usize, workers: usize, min_chunk: usize) -> usize {
+    debug_assert!(n > 0 && workers > 0 && min_chunk > 0);
+    n.div_ceil(workers.max(1) * 4).max(min_chunk)
 }
 
 impl Drop for WorkerPool {
@@ -291,6 +327,47 @@ mod tests {
             hits.fetch_add(1, Ordering::SeqCst);
         });
         assert_eq!(hits.into_inner(), 2);
+    }
+
+    #[test]
+    fn run_indexed_claims_every_job_exactly_once() {
+        let pool = WorkerPool::new(3);
+        for jobs in [0usize, 1, 2, 3, 17, 64] {
+            let hits: Vec<AtomicUsize> = (0..jobs).map(|_| AtomicUsize::new(0)).collect();
+            pool.run_indexed(3, jobs, &|j| {
+                hits[j].fetch_add(1, Ordering::SeqCst);
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::SeqCst) == 1),
+                "jobs={jobs}: some job not run exactly once"
+            );
+        }
+    }
+
+    #[test]
+    fn run_indexed_balances_a_skewed_job() {
+        // One job sleeps; the other workers must drain the remaining jobs
+        // meanwhile (with static slicing the skewed worker's whole slice
+        // would wait behind the sleep).
+        let pool = WorkerPool::new(2);
+        let done = AtomicUsize::new(0);
+        pool.run_indexed(2, 8, &|j| {
+            if j == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(30));
+            }
+            done.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(done.into_inner(), 8);
+    }
+
+    #[test]
+    fn steal_chunk_respects_floor_and_splits() {
+        assert_eq!(steal_chunk(100, 4, 16), 16, "floor wins on small n");
+        assert_eq!(steal_chunk(8192, 4, 16), 512, "≈4 jobs per worker");
+        assert_eq!(steal_chunk(7, 4, 16), 16, "chunk may exceed n (1 job)");
+        let n = 10_000;
+        let chunk = steal_chunk(n, 8, 32);
+        assert!(n.div_ceil(chunk) >= 8, "at least one job per worker");
     }
 
     #[test]

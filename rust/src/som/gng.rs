@@ -6,12 +6,36 @@
 //! discusses GNG as the main prior growing network and the GPU baselines
 //! [6], [18] parallelize it) and exercised by the `gng_clustering` example.
 //!
-//! GNG keeps the default `Structural` classification for every update (see
-//! [`super::GrowingNetwork::classify_update`]): its global error decay
-//! (`beta`) touches every unit on every signal and its insertion schedule
-//! depends on the global signal counter, so no update's effects are
-//! confined to the winner's neighborhood. Under the `Parallel` driver GNG
-//! therefore runs sequentially — identical to `Multi` by definition.
+//! ## Lazy multiplicative error decay
+//!
+//! Fritzke's rule decays **every** unit's accumulated error by `1 - beta`
+//! on **every** signal — an `O(N)` sweep that used to classify every GNG
+//! update as `Structural` and lock the algorithm out of the executor's
+//! parallel plan pass entirely. The sweep is now *lazy*: a global
+//! [`Gng::decay_epoch`] counts applied signals, each slab slot carries the
+//! epoch its stored error is exact for (`error_epoch`), and reads
+//! materialize `error · (1-beta)^(epoch - error_epoch)` through a
+//! **repeated-multiply ladder** — one `f32` multiply per elapsed epoch, the
+//! exact operation sequence of the eager sweep, so materialized values are
+//! **bit-identical** to it (a `powf` would round differently). The ladder
+//! short-circuits at multiplicative fixed points (`e·d == e`, reached at
+//! `0.0` and in the subnormal tail), and the only full-network
+//! materialization sits on an `O(N)`-anyway path: the error `max_by` scan
+//! of a scheduled insertion (housekeeping deliberately does *not* sweep —
+//! a per-batch sweep would re-accumulate the eager cost). Nothing `O(N)`
+//! is left in the per-signal or per-batch path, so `classify_update` can
+//! return [`UpdateKind::Adapt`] for non-insertion signals and GNG joins
+//! the parallel plan pass like GWR/SOAM. Total multiply count never
+//! exceeds eager's: each unit pays exactly its elapsed epochs, in bursts
+//! when next read, and the fixed-point exit caps a long-dormant unit's
+//! burst at the steps its error needs to underflow to zero.
+//!
+//! The one global input to classification — does this signal hit the
+//! `lambda` insertion schedule? — is resolved through the executor's
+//! `pending_commits` argument: deferred adapt signals are guaranteed to
+//! commit (each bumping `signals_seen`) before the signal being classified
+//! applies, so `signals_seen + pending_commits + 1` is exactly the
+//! sequential counter value.
 
 use crate::geometry::Vec3;
 use crate::mesh::SurfaceSampler;
@@ -19,7 +43,7 @@ use crate::rng::Rng;
 
 use super::network::{ChangeLog, Network, UnitId};
 use super::params::GngParams;
-use super::{GrowingNetwork, QeTracker, Winners};
+use super::{GrowingNetwork, QeTracker, UpdateKind, UpdatePlan, Winners};
 
 /// GNG algorithm state.
 pub struct Gng {
@@ -28,6 +52,15 @@ pub struct Gng {
     qe: QeTracker,
     signals_seen: u64,
     orphan_buf: Vec<UnitId>,
+    /// Global decay epoch: the number of applied signals whose `1 - beta`
+    /// decay has been *scheduled* (incremented once per applied signal
+    /// while `beta > 0`; never incremented when `beta == 0`).
+    decay_epoch: u64,
+    /// Per-slab-slot epoch stamp: `units[i].error` is exact as of
+    /// `error_epoch[i]`; the pending decays are `decay_epoch -
+    /// error_epoch[i]` ladder steps. Slots are (re)stamped on insertion,
+    /// so slab reuse never inherits a stale stamp.
+    error_epoch: Vec<u64>,
 }
 
 impl Gng {
@@ -38,6 +71,68 @@ impl Gng {
             qe: QeTracker::new(0.001),
             signals_seen: 0,
             orphan_buf: Vec::new(),
+            decay_epoch: 0,
+            error_epoch: Vec::new(),
+        }
+    }
+
+    /// Apply `steps` eager decay multiplications to `e` — the exact `f32`
+    /// sequence `((e·d)·d)·…` of the per-signal sweep, short-circuited at
+    /// multiplicative fixed points (`0.0`, and the subnormal floor where
+    /// rounding makes `e·d == e`), where every further step is the
+    /// identity bit pattern.
+    #[inline]
+    fn decay_ladder(mut e: f32, d: f32, mut steps: u64) -> f32 {
+        while steps > 0 {
+            let next = e * d;
+            if next.to_bits() == e.to_bits() {
+                return e;
+            }
+            e = next;
+            steps -= 1;
+        }
+        e
+    }
+
+    /// Stamp a (newly inserted) slot as exact at the current epoch.
+    fn stamp(&mut self, id: UnitId) {
+        let i = id as usize;
+        if i >= self.error_epoch.len() {
+            self.error_epoch.resize(i + 1, 0);
+        }
+        self.error_epoch[i] = self.decay_epoch;
+    }
+
+    /// Bring one unit's stored error up to the current epoch in place.
+    fn materialize(&mut self, id: UnitId) {
+        let i = id as usize;
+        debug_assert!(i < self.error_epoch.len(), "unstamped slot {id}");
+        let steps = self.decay_epoch - self.error_epoch[i];
+        if steps > 0 {
+            let d = 1.0 - self.params.beta;
+            let u = self.net.unit_mut(id);
+            u.error = Self::decay_ladder(u.error, d, steps);
+            self.error_epoch[i] = self.decay_epoch;
+        }
+    }
+
+    /// The unit's error as the eager sweep would store it right now —
+    /// read-only materialization (used by reporting and the parity tests).
+    pub fn materialized_error(&self, id: UnitId) -> f32 {
+        let steps = self.decay_epoch - self.error_epoch[id as usize];
+        Self::decay_ladder(self.net.unit(id).error, 1.0 - self.params.beta, steps)
+    }
+
+    /// Materialize every live unit — only called where an `O(N)` error
+    /// scan happens anyway (the insertion `max_by`). Never on a per-batch
+    /// cadence: that would re-accumulate the eager sweep's total cost.
+    fn materialize_all(&mut self) {
+        if self.decay_epoch == 0 {
+            return;
+        }
+        let ids: Vec<UnitId> = self.net.ids().collect();
+        for id in ids {
+            self.materialize(id);
         }
     }
 
@@ -46,6 +141,8 @@ impl Gng {
         if self.net.len() >= self.params.max_units {
             return;
         }
+        // The error comparisons below must see eager-exact values.
+        self.materialize_all();
         // Unit q with the largest accumulated error.
         let q = match self
             .net
@@ -78,6 +175,7 @@ impl Gng {
         };
         let pos = (self.net.pos(q) + self.net.pos(f)) * 0.5;
         let r = self.net.insert(pos, 0.0);
+        self.stamp(r);
         self.net.disconnect(q, f);
         self.net.connect(q, r);
         self.net.connect(r, f);
@@ -106,7 +204,9 @@ impl GrowingNetwork for Gng {
 
     fn init(&mut self, sampler: &SurfaceSampler, rng: &mut Rng) {
         let a = self.net.insert(sampler.sample(rng), 0.0);
+        self.stamp(a);
         let b = self.net.insert(sampler.sample(rng), 0.0);
+        self.stamp(b);
         self.net.connect(a, b);
     }
 
@@ -117,8 +217,10 @@ impl GrowingNetwork for Gng {
         self.signals_seen += 1;
         self.qe.push(w.d1_sq);
 
-        // Standard GNG update.
+        // Standard GNG update (winner error read-modify-write materializes
+        // its pending decays first, so the add lands on the eager value).
         self.net.age_edges_of(w.w1, 1.0);
+        self.materialize(w.w1);
         self.net.unit_mut(w.w1).error += w.d1_sq;
         let old = self.net.pos(w.w1);
         let new = old + (signal - old) * self.params.adapt.eps_b;
@@ -145,25 +247,89 @@ impl GrowingNetwork for Gng {
             }
         }
 
-        // Scheduled insertion + global error decay.
+        // Scheduled insertion + (lazy) global error decay: instead of the
+        // eager O(N) sweep, one epoch bump schedules this signal's
+        // `1 - beta` factor for every unit.
         if self.signals_seen % self.params.lambda == 0 {
             self.insert_scheduled(log);
         }
-        let beta = self.params.beta;
-        if beta > 0.0 {
-            let ids: Vec<UnitId> = self.net.ids().collect();
-            for id in ids {
-                self.net.unit_mut(id).error *= 1.0 - beta;
-            }
+        if self.params.beta > 0.0 {
+            self.decay_epoch += 1;
         }
     }
 
     fn housekeeping(&mut self, _log: &mut ChangeLog) -> bool {
+        // Deliberately does NOT materialize errors: the multi-signal
+        // drivers call housekeeping once per batch, so a sweep here would
+        // redo the eager per-signal sweep's total multiply count and undo
+        // the lazy scheme's win. Nothing below needs errors (the
+        // convergence test reads only the QE EMA); external readers use
+        // `materialized_error`, and the insertion scan materializes on its
+        // own O(N) path.
         self.qe.value() < self.params.target_qe
     }
 
     fn quantization_error(&self) -> f32 {
         self.qe.value()
+    }
+
+    fn classify_update(&self, _signal: Vec3, w: &Winners, pending_commits: usize) -> UpdateKind {
+        if !self.net.is_alive(w.w1) || !self.net.is_alive(w.w2) || w.w1 == w.w2 {
+            // Degenerate (stale winners): let `update` discard it inline.
+            return UpdateKind::Structural;
+        }
+        // Insertion schedule: the deferred adapts commit (and count) before
+        // this signal applies, so it will be applied signal number
+        // `signals_seen + pending_commits + 1`.
+        if (self.signals_seen + pending_commits as u64 + 1) % self.params.lambda == 0 {
+            return UpdateKind::Structural;
+        }
+        // Prune prediction: `update` ages every edge of w1 by 1.0 and then
+        // drops edges older than max_age; the w1–w2 edge is exempt (connect
+        // resets it to age 0 first). Same float expression as the prune.
+        let will_prune = self
+            .net
+            .edges_of(w.w1)
+            .iter()
+            .any(|e| e.to != w.w2 && e.age + 1.0 > self.params.adapt.max_age);
+        if will_prune {
+            UpdateKind::Structural
+        } else {
+            UpdateKind::Adapt
+        }
+    }
+
+    fn plan_update(&self, signal: Vec3, w: &Winners, plan: &mut UpdatePlan) {
+        plan.clear();
+        plan.w1 = w.w1;
+        plan.w2 = w.w2;
+        plan.d1_sq = w.d1_sq;
+        // Winner first, then the *pre-connect* neighbors — GNG connects
+        // w1–w2 after adaptation, so (unlike GWR) a fresh w2 does not move
+        // on the signal that creates its edge.
+        let old = self.net.pos(w.w1);
+        plan.moves
+            .push((w.w1, old + (signal - old) * self.params.adapt.eps_b));
+        for e in self.net.edges_of(w.w1) {
+            let old_n = self.net.pos(e.to);
+            plan.moves
+                .push((e.to, old_n + (signal - old_n) * self.params.adapt.eps_n));
+        }
+        // No firing writes: GNG has no habituation.
+    }
+
+    fn commit_scalars(&mut self, plan: &UpdatePlan, _log: &mut ChangeLog) {
+        self.signals_seen += 1;
+        debug_assert!(
+            self.signals_seen % self.params.lambda != 0,
+            "classified Adapt on an insertion-schedule signal"
+        );
+        self.qe.push(plan.d1_sq);
+        self.materialize(plan.w1);
+        self.net.unit_mut(plan.w1).error += plan.d1_sq;
+        if self.params.beta > 0.0 {
+            self.decay_epoch += 1;
+        }
     }
 }
 
@@ -172,6 +338,7 @@ mod tests {
     use super::*;
     use crate::findwinners::{FindWinners, Scalar};
     use crate::mesh::{benchmark_mesh, BenchmarkShape};
+    use crate::proptest::{sized_usize, Prop};
 
     fn run_gng(signals: u64, lambda: u64) -> Gng {
         let mesh = benchmark_mesh(BenchmarkShape::Eight, 24);
@@ -202,9 +369,15 @@ mod tests {
     #[test]
     fn error_accumulates_on_winner() {
         let mut gng = run_gng(50, 1_000_000); // no insertion
-        let total_error: f32 = gng.net().ids().map(|i| gng.net().unit(i).error).sum();
+        let total_error: f32 = gng.net().ids().map(|i| gng.materialized_error(i)).sum();
         assert!(total_error > 0.0);
+        // Housekeeping must NOT sweep the errors (that would re-accumulate
+        // the eager cost per batch) — the lazy state is untouched by it.
+        let epoch_before = gng.decay_epoch;
         let _ = gng.housekeeping(&mut ChangeLog::default());
+        assert_eq!(gng.decay_epoch, epoch_before);
+        let after: f32 = gng.net().ids().map(|i| gng.materialized_error(i)).sum();
+        assert_eq!(after.to_bits(), total_error.to_bits());
     }
 
     #[test]
@@ -212,5 +385,207 @@ mod tests {
         let early = run_gng(500, 100).quantization_error();
         let late = run_gng(10_000, 100).quantization_error();
         assert!(late < early, "late {late} vs early {early}");
+    }
+
+    #[test]
+    fn decay_ladder_fixed_points_terminate() {
+        // 0.0 is a fixed point; huge step counts must return immediately
+        // with the identical bit pattern.
+        assert_eq!(Gng::decay_ladder(0.0, 0.9995, u64::MAX).to_bits(), 0.0f32.to_bits());
+        // The subnormal floor is reached and then held exactly.
+        let tiny = Gng::decay_ladder(1.0, 0.5, 200);
+        assert_eq!(tiny.to_bits(), 0.0f32.to_bits(), "1.0 · 0.5^200 underflows to zero");
+        // Finite ladders match the literal loop.
+        let mut e = 0.7f32;
+        for _ in 0..13 {
+            e *= 0.9995;
+        }
+        assert_eq!(Gng::decay_ladder(0.7, 0.9995, 13).to_bits(), e.to_bits());
+    }
+
+    /// The pre-refactor update rule, verbatim — kept as the executable
+    /// specification of the eager per-signal sweep. The only difference
+    /// from [`Gng::update`] is the trailing decay: the eager twin keeps
+    /// `decay_epoch` at 0 forever (so every materialization inside the
+    /// shared helpers is a no-op on it) and multiplies every unit's stored
+    /// error by `1 - beta` inline.
+    fn eager_update(g: &mut Gng, signal: Vec3, w: &Winners, log: &mut ChangeLog) {
+        if !g.net.is_alive(w.w1) || !g.net.is_alive(w.w2) || w.w1 == w.w2 {
+            return;
+        }
+        g.signals_seen += 1;
+        g.qe.push(w.d1_sq);
+
+        g.net.age_edges_of(w.w1, 1.0);
+        g.net.unit_mut(w.w1).error += w.d1_sq;
+        let old = g.net.pos(w.w1);
+        let new = old + (signal - old) * g.params.adapt.eps_b;
+        g.net.set_pos(w.w1, new);
+        log.moved.push((w.w1, old));
+        let nbrs: Vec<UnitId> = g.net.edges_of(w.w1).iter().map(|e| e.to).collect();
+        for n in nbrs {
+            let old_n = g.net.pos(n);
+            let new_n = old_n + (signal - old_n) * g.params.adapt.eps_n;
+            g.net.set_pos(n, new_n);
+            log.moved.push((n, old_n));
+        }
+        g.net.connect(w.w1, w.w2);
+
+        g.orphan_buf.clear();
+        g.net
+            .prune_old_edges(w.w1, g.params.adapt.max_age, &mut g.orphan_buf);
+        for i in 0..g.orphan_buf.len() {
+            let o = g.orphan_buf[i];
+            if g.net.is_alive(o) && g.net.degree(o) == 0 && g.net.len() > 2 {
+                let pos = g.net.pos(o);
+                g.net.remove(o);
+                log.removed.push((o, pos));
+            }
+        }
+
+        if g.signals_seen % g.params.lambda == 0 {
+            g.insert_scheduled(log);
+        }
+        let beta = g.params.beta;
+        if beta > 0.0 {
+            let ids: Vec<UnitId> = g.net.ids().collect();
+            for id in ids {
+                g.net.unit_mut(id).error *= 1.0 - beta;
+            }
+        }
+    }
+
+    /// Property: across random signal counts, betas, insertion schedules
+    /// (slab-slot reuse through orphan removal, insertions that reset unit
+    /// error), the lazy materialization is bit-identical to the eager
+    /// per-signal sweep — on every unit, at every probe point.
+    #[test]
+    fn prop_lazy_decay_matches_eager_sweep_bitwise() {
+        let mesh = benchmark_mesh(BenchmarkShape::Eight, 16);
+        let sampler = SurfaceSampler::new(&mesh);
+        Prop::new(20, 31).run(
+            |rng, size| {
+                let steps = sized_usize(rng, size, 50, 2_500);
+                let lambda = sized_usize(rng, size, 5, 400) as u64;
+                // Include beta = 0 (decay disabled) and aggressive decay.
+                let beta = match rng.below(4) {
+                    0 => 0.0,
+                    1 => 0.01,
+                    2 => 0.0005,
+                    _ => 0.1,
+                };
+                (rng.next_u64(), steps, lambda, beta)
+            },
+            |&(seed, steps, lambda, beta)| {
+                let params = GngParams {
+                    lambda,
+                    beta,
+                    // Tight max_age provokes prunes → orphan removals →
+                    // slab-slot reuse by later insertions.
+                    adapt: crate::som::AdaptParams {
+                        max_age: 40.0,
+                        ..crate::som::AdaptParams::default()
+                    },
+                    ..GngParams::default()
+                };
+                let mut lazy = Gng::new(params);
+                let mut eager = Gng::new(params);
+                let mut rng_a = Rng::seed_from(seed);
+                let mut rng_b = Rng::seed_from(seed);
+                lazy.init(&sampler, &mut rng_a);
+                eager.init(&sampler, &mut rng_b);
+                let mut fw = Scalar::new();
+                let mut log = ChangeLog::default();
+                for k in 0..steps {
+                    let s = sampler.sample(&mut rng_a);
+                    let s_b = sampler.sample(&mut rng_b);
+                    assert_eq!(s, s_b, "sampler streams diverged");
+                    // Winners from the lazy net; identical nets ⇒ identical
+                    // winners (checked below).
+                    let w = fw.find2(lazy.net(), s).unwrap();
+                    log.clear();
+                    lazy.update(s, &w, &mut log);
+                    log.clear();
+                    eager_update(&mut eager, s, &w, &mut log);
+                    if k % 97 == 0 || k + 1 == steps {
+                        compare(&lazy, &eager).map_err(|e| format!("after {k}: {e}"))?;
+                    }
+                }
+                // Final bit-exactness on every unit (also covered at the
+                // probes above, incl. the k + 1 == steps probe).
+                compare(&lazy, &eager).map_err(|e| format!("final: {e}"))?;
+                lazy.net().check_invariants()?;
+                Ok(())
+            },
+        );
+
+        fn compare(lazy: &Gng, eager: &Gng) -> Result<(), String> {
+            if lazy.net().capacity() != eager.net().capacity() {
+                return Err(format!(
+                    "slab divergence: {} vs {}",
+                    lazy.net().capacity(),
+                    eager.net().capacity()
+                ));
+            }
+            if lazy.signals_seen != eager.signals_seen {
+                return Err("signal counters diverged".into());
+            }
+            for id in 0..lazy.net().capacity() as UnitId {
+                if lazy.net().is_alive(id) != eager.net().is_alive(id) {
+                    return Err(format!("aliveness of {id} diverged"));
+                }
+                if !lazy.net().is_alive(id) {
+                    continue;
+                }
+                let (a, b) = (lazy.materialized_error(id), eager.net().unit(id).error);
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("materialized error of {id}: {a:e} vs {b:e}"));
+                }
+                let (pa, pb) = (lazy.net().pos(id), eager.net().pos(id));
+                if pa != pb {
+                    return Err(format!("position of {id} diverged"));
+                }
+            }
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn classify_agrees_with_update_for_gng() {
+        // Adapt-classified signals must produce structure-free updates and
+        // never land on the insertion schedule.
+        let mesh = benchmark_mesh(BenchmarkShape::Eight, 20);
+        let sampler = SurfaceSampler::new(&mesh);
+        let mut rng = Rng::seed_from(11);
+        let mut gng = Gng::new(GngParams { lambda: 50, ..GngParams::default() });
+        gng.init(&sampler, &mut rng);
+        let mut fw = Scalar::new();
+        let mut log = ChangeLog::default();
+        let (mut adapt_seen, mut structural_seen) = (0u32, 0u32);
+        for _ in 0..20_000 {
+            let s = sampler.sample(&mut rng);
+            let Some(w) = fw.find2(gng.net(), s) else { continue };
+            let kind = gng.classify_update(s, &w, 0);
+            log.clear();
+            gng.update(s, &w, &mut log);
+            match kind {
+                UpdateKind::Adapt => {
+                    adapt_seen += 1;
+                    assert!(
+                        log.inserted.is_empty() && log.removed.is_empty(),
+                        "Adapt-classified GNG update changed structure"
+                    );
+                }
+                UpdateKind::Structural => structural_seen += 1,
+            }
+        }
+        assert!(adapt_seen > 0, "GNG never classified Adapt");
+        assert!(structural_seen > 0, "GNG never classified Structural");
+        // With lambda = 50, roughly 1 in 50 applied signals is structural —
+        // the vast majority must now be plannable off-thread.
+        assert!(
+            adapt_seen > structural_seen * 10,
+            "adapt {adapt_seen} vs structural {structural_seen}"
+        );
     }
 }

@@ -203,25 +203,11 @@ impl Gwr {
         plan.firing.push((w.w1, params.hab.fire_winner(hw)));
     }
 
-    /// Apply a plan from [`Self::gwr_plan`]: replays aging + connect, then
-    /// the precomputed writes — bit-identical to the adapt branch of
-    /// [`Self::gwr_update`] (whose prune is a no-op by classification).
-    pub(super) fn gwr_commit(
-        net: &mut Network,
-        params: &GwrParams,
-        plan: &UpdatePlan,
-        log: &mut ChangeLog,
-    ) {
-        net.age_edges_of(plan.w1, 1.0);
-        net.connect(plan.w1, plan.w2);
-        for &(id, new_pos) in &plan.moves {
-            let old = net.pos(id);
-            net.set_pos(id, new_pos);
-            log.moved.push((id, old));
-        }
-        for &(id, f) in &plan.firing {
-            net.unit_mut(id).firing = f;
-        }
+    /// Debug check shared by the GWR-family scalar replays: by the time
+    /// `commit_scalars` runs, [`super::ShardWriter::commit_adapt`] has
+    /// replayed the aging + connect, so an `Adapt` classification implies
+    /// no edge of the winner can be over age.
+    pub(super) fn debug_check_no_prune(net: &Network, params: &GwrParams, plan: &UpdatePlan) {
         debug_assert!(
             net.edges_of(plan.w1)
                 .iter()
@@ -270,7 +256,7 @@ impl GrowingNetwork for Gwr {
         self.qe.value()
     }
 
-    fn classify_update(&self, _signal: Vec3, w: &Winners) -> UpdateKind {
+    fn classify_update(&self, _signal: Vec3, w: &Winners, _pending_commits: usize) -> UpdateKind {
         Self::gwr_classify(&self.net, &self.params, w, false)
     }
 
@@ -278,8 +264,8 @@ impl GrowingNetwork for Gwr {
         Self::gwr_plan(&self.net, &self.params, signal, w, plan);
     }
 
-    fn commit_update(&mut self, plan: &UpdatePlan, log: &mut ChangeLog) {
-        Self::gwr_commit(&mut self.net, &self.params, plan, log);
+    fn commit_scalars(&mut self, plan: &UpdatePlan, _log: &mut ChangeLog) {
+        Self::debug_check_no_prune(&self.net, &self.params, plan);
         self.qe.push(plan.d1_sq);
     }
 }

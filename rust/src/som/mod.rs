@@ -17,7 +17,9 @@ mod soam;
 pub use gng::Gng;
 pub use gwr::Gwr;
 pub use habituation::Habituation;
-pub use network::{ChangeLog, Edge, Network, Unit, UnitId, DEAD_POS, SOA_LANES};
+pub use network::{
+    ChangeLog, Edge, Network, ShardWriter, Unit, UnitId, DEAD_POS, FREE_SHARDS, SOA_LANES,
+};
 pub use params::{AdaptParams, GngParams, GwrParams, SoamParams};
 pub use soam::{Soam, SoamState};
 
@@ -52,8 +54,11 @@ pub enum UpdateKind {
 
 /// A precomputed `Adapt`-class update: the pure-function half of the
 /// deferred-commit split used by the `Parallel` driver. Produced off-thread
-/// by [`GrowingNetwork::plan_update`], applied in admission order by
-/// [`GrowingNetwork::commit_update`]. Buffers are reused across signals.
+/// by [`GrowingNetwork::plan_update`]; its network writes are applied
+/// (possibly concurrently, touched-sets disjoint) by
+/// [`ShardWriter::commit_adapt`], and its shared-scalar residue is replayed
+/// in admission order by [`GrowingNetwork::commit_scalars`]. Buffers are
+/// reused across signals.
 #[derive(Clone, Debug, Default)]
 pub struct UpdatePlan {
     pub w1: UnitId,
@@ -64,6 +69,14 @@ pub struct UpdatePlan {
     pub moves: Vec<(UnitId, Vec3)>,
     /// `(unit, new firing level)`, winner last — mirrors `update`.
     pub firing: Vec<(UnitId, f32)>,
+    /// Pre-move positions, one per entry of `moves` in the same order —
+    /// filled by [`ShardWriter::commit_adapt`] so the sequential replay can
+    /// emit the change-log entries without re-reading racing state.
+    pub old_pos: Vec<Vec3>,
+    /// Whether the competitive-Hebbian connect created (1) or only
+    /// age-reset (0) the `w1`–`w2` edge — filled by `commit_adapt`, folded
+    /// into the shared edge counter during the sequential replay.
+    pub new_edges: u32,
 }
 
 impl UpdatePlan {
@@ -73,6 +86,8 @@ impl UpdatePlan {
         self.d1_sq = 0.0;
         self.moves.clear();
         self.firing.clear();
+        self.old_pos.clear();
+        self.new_edges = 0;
     }
 }
 
@@ -121,13 +136,21 @@ pub trait GrowingNetwork: Send + Sync {
     /// Read-only prediction of what `update` would do for this signal in
     /// the *current* state. Returning [`UpdateKind::Adapt`] is a promise
     /// that `update` would neither insert nor remove units nor prune edges
-    /// and that every read and write stays inside `{w1, w2} ∪ N(w1)` — the
-    /// `Parallel` driver relies on it to plan such updates off-thread.
+    /// and that every read and write stays inside `{w1, w2} ∪ N(w1)` plus
+    /// the algorithm's own per-signal scalars — the `Parallel` driver
+    /// relies on it to plan such updates off-thread.
+    ///
+    /// `pending_commits` is the number of already-admitted `Adapt` signals
+    /// the executor has deferred but not yet committed; they are guaranteed
+    /// to commit (in admission order) before this signal applies.
+    /// Algorithms whose classification depends on a global signal counter
+    /// (GNG's `lambda` insertion schedule) must classify against
+    /// `signals_seen + pending_commits`; neighborhood-local rules ignore
+    /// it.
+    ///
     /// Default: [`UpdateKind::Structural`], which is always safe (the
-    /// driver then degenerates to the sequential `Multi` semantics; GNG
-    /// keeps this default because its global error decay touches every
-    /// unit on every signal).
-    fn classify_update(&self, _signal: Vec3, _w: &Winners) -> UpdateKind {
+    /// driver then degenerates to the sequential `Multi` semantics).
+    fn classify_update(&self, _signal: Vec3, _w: &Winners, _pending_commits: usize) -> UpdateKind {
         UpdateKind::Structural
     }
 
@@ -139,11 +162,17 @@ pub trait GrowingNetwork: Send + Sync {
         unreachable!("plan_update on an algorithm that never classifies Adapt");
     }
 
-    /// Apply a plan produced by [`Self::plan_update`]. Must leave the
-    /// network (and the algorithm's own state) bit-identical to having
-    /// called `update` directly at this point in the signal order.
-    fn commit_update(&mut self, _plan: &UpdatePlan, _log: &mut ChangeLog) {
-        unreachable!("commit_update on an algorithm that never classifies Adapt");
+    /// Replay the shared-scalar residue of a committed plan, in admission
+    /// order on the driver thread. The network writes were already applied
+    /// by [`ShardWriter::commit_adapt`] (possibly on a worker thread) and
+    /// the change-log/edge-count replay is the executor's; what remains is
+    /// the algorithm's own per-signal state — the QE stream, and for GNG
+    /// the signal counter, the winner's lazily-decayed error and the decay
+    /// epoch. Together the three steps must leave everything bit-identical
+    /// to having called `update` directly at this point in the signal
+    /// order.
+    fn commit_scalars(&mut self, _plan: &UpdatePlan, _log: &mut ChangeLog) {
+        unreachable!("commit_scalars on an algorithm that never classifies Adapt");
     }
 }
 

@@ -1,14 +1,30 @@
 //! The network store shared by all growing self-organizing algorithms.
 //!
-//! Units live in a slab with a free list so unit ids stay stable across
-//! removals (ids are what the winner-lock table, the hash index and the AOT
-//! batch buffers key on). Adjacency is a per-unit edge vector with ages —
-//! growing networks create, reset, age and destroy edges constantly, and the
-//! neighbor sets are small (≈6 on a 2-manifold), so linear scans beat hash
-//! sets here.
+//! Units live in a slab with sharded free lists so unit ids stay stable
+//! across removals (ids are what the winner-lock table, the hash index and
+//! the AOT batch buffers key on). Adjacency is a per-unit edge vector with
+//! ages — growing networks create, reset, age and destroy edges constantly,
+//! and the neighbor sets are small (≈6 on a 2-manifold), so linear scans
+//! beat hash sets here.
+//!
+//! Two concurrency seams live here for the batch-update executor:
+//!
+//! - the free list is split into [`FREE_SHARDS`] per-shard stacks keyed by
+//!   `slot % FREE_SHARDS`, each entry stamped with a global free counter;
+//!   allocation pops the globally most-recent stamp, which reproduces the
+//!   old single-stack LIFO order *exactly* (same unit ids for any caller),
+//!   while giving conflict-disjoint commit groups distinct stacks to drain
+//!   once structural commits move off the driver thread;
+//! - [`ShardWriter`] is the raw-access view the executor's concurrent
+//!   commit pass writes through: workers apply touched-disjoint
+//!   [`super::UpdatePlan`]s (positions, firing, edge ages, the competitive
+//!   Hebbian connect) in parallel, deferring every shared scalar (edge
+//!   count, QE, GNG error/epoch) to the sequential replay.
 
 use crate::geometry::Vec3;
 use crate::topology::{classify_link, LinkClass};
+
+use super::UpdatePlan;
 
 /// Stable unit identifier (slab slot).
 pub type UnitId = u32;
@@ -68,12 +84,29 @@ pub const DEAD_POS: Vec3 = Vec3 { x: 1e30, y: 1e30, z: 1e30 };
 /// narrower targets LLVM simply unrolls.
 pub const SOA_LANES: usize = 8;
 
+/// Number of free-list shards. A freed slot always lands in shard
+/// `slot % FREE_SHARDS`, so membership is a pure function of the id —
+/// deterministic no matter which thread (or commit group) frees it.
+pub const FREE_SHARDS: usize = 8;
+
+/// One freed slab slot: the slot id plus the global free-order stamp that
+/// lets allocation reproduce the single-stack LIFO order across shards.
+#[derive(Clone, Copy, Debug)]
+struct FreeSlot {
+    slot: UnitId,
+    stamp: u64,
+}
+
 /// Slab-allocated unit graph.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct Network {
     units: Vec<Unit>,
     adjacency: Vec<Vec<Edge>>,
-    free: Vec<UnitId>,
+    /// Sharded free lists (see module docs): `free_shards[s]` holds freed
+    /// slots with `slot % FREE_SHARDS == s`, each a stack in free order.
+    free_shards: Vec<Vec<FreeSlot>>,
+    /// Monotone stamp source for [`FreeSlot::stamp`].
+    free_stamp: u64,
     alive: usize,
     edges: usize,
     /// Dense position mirror (one row per slab slot, dead slots = DEAD_POS).
@@ -89,6 +122,23 @@ pub struct Network {
     xs: Vec<f32>,
     ys: Vec<f32>,
     zs: Vec<f32>,
+}
+
+impl Default for Network {
+    fn default() -> Self {
+        Self {
+            units: Vec::new(),
+            adjacency: Vec::new(),
+            free_shards: vec![Vec::new(); FREE_SHARDS],
+            free_stamp: 0,
+            alive: 0,
+            edges: 0,
+            positions: Vec::new(),
+            xs: Vec::new(),
+            ys: Vec::new(),
+            zs: Vec::new(),
+        }
+    }
 }
 
 impl Network {
@@ -205,11 +255,27 @@ impl Network {
         self.adjacency[a as usize].iter().any(|e| e.to == b)
     }
 
-    /// Insert a unit, reusing a free slot when available.
+    /// Pop the most recently freed slot across all shards (the exact pop
+    /// order of the pre-shard single free stack), or `None` when every
+    /// shard is empty. O(FREE_SHARDS) top-of-stack scan.
+    fn pop_most_recent_free(&mut self) -> Option<UnitId> {
+        let best = self
+            .free_shards
+            .iter()
+            .enumerate()
+            .filter_map(|(s, shard)| shard.last().map(|f| (f.stamp, s)))
+            .max_by_key(|&(stamp, _)| stamp)?;
+        Some(self.free_shards[best.1].pop().unwrap().slot)
+    }
+
+    /// Insert a unit, reusing a free slot when available. Allocation order
+    /// is deterministic (global LIFO over the sharded free lists), so unit
+    /// ids are a pure function of the insert/remove sequence — never of
+    /// thread counts or commit grouping.
     pub fn insert(&mut self, pos: Vec3, threshold: f32) -> UnitId {
         let unit = Unit { pos, firing: 1.0, error: 0.0, threshold, alive: true };
         self.alive += 1;
-        if let Some(id) = self.free.pop() {
+        if let Some(id) = self.pop_most_recent_free() {
             self.units[id as usize] = unit;
             self.positions[id as usize] = pos;
             self.soa_write(id as usize, pos);
@@ -225,7 +291,8 @@ impl Network {
         }
     }
 
-    /// Remove a unit and all its edges.
+    /// Remove a unit and all its edges. The slot joins its home free-list
+    /// shard (`id % FREE_SHARDS`) stamped with the global free order.
     pub fn remove(&mut self, id: UnitId) {
         debug_assert!(self.is_alive(id));
         let nbrs: Vec<UnitId> = self.adjacency[id as usize].iter().map(|e| e.to).collect();
@@ -236,7 +303,16 @@ impl Network {
         self.positions[id as usize] = DEAD_POS;
         self.soa_write(id as usize, DEAD_POS);
         self.alive -= 1;
-        self.free.push(id);
+        self.free_stamp += 1;
+        let stamp = self.free_stamp;
+        self.free_shards[id as usize % FREE_SHARDS].push(FreeSlot { slot: id, stamp });
+    }
+
+    /// Fold freshly created edge halves into the undirected edge count —
+    /// the sequential-replay half of [`ShardWriter::connect`], which cannot
+    /// touch this shared counter from worker threads.
+    pub(crate) fn note_edges_created(&mut self, n: usize) {
+        self.edges += n;
     }
 
     /// Create the edge `a`–`b` (age 0) or reset its age if present.
@@ -430,16 +506,236 @@ impl Network {
                 return Err(format!("SoA mirror diverged at slot {i}: {got:?} != {want:?}"));
             }
         }
+        // Sharded free lists: every entry dead, in its home shard, stamped
+        // within bounds and in stack order; no slot listed twice across
+        // *any* pair of shards; no stamp reused; and no dead slot missing
+        // from every list (a leaked slot would never be reallocated).
+        if self.free_shards.len() != FREE_SHARDS {
+            return Err(format!(
+                "{} free shards != FREE_SHARDS ({FREE_SHARDS})",
+                self.free_shards.len()
+            ));
+        }
         let mut free_seen = std::collections::HashSet::new();
-        for &f in &self.free {
-            if self.units[f as usize].alive {
-                return Err(format!("free slot {f} is alive"));
-            }
-            if !free_seen.insert(f) {
-                return Err(format!("slot {f} twice in free list"));
+        let mut stamps_seen = std::collections::HashSet::new();
+        let mut free_total = 0usize;
+        for (s, shard) in self.free_shards.iter().enumerate() {
+            let mut prev_stamp = 0u64;
+            for f in shard {
+                free_total += 1;
+                if f.slot as usize >= self.units.len() {
+                    return Err(format!("free slot {} beyond slab", f.slot));
+                }
+                if f.slot as usize % FREE_SHARDS != s {
+                    return Err(format!("free slot {} in foreign shard {s}", f.slot));
+                }
+                if self.units[f.slot as usize].alive {
+                    return Err(format!("free slot {} is alive", f.slot));
+                }
+                if !free_seen.insert(f.slot) {
+                    return Err(format!("slot {} twice across free shards", f.slot));
+                }
+                if f.stamp == 0 || f.stamp > self.free_stamp {
+                    return Err(format!(
+                        "free slot {} stamp {} outside (0, {}]",
+                        f.slot, f.stamp, self.free_stamp
+                    ));
+                }
+                if !stamps_seen.insert(f.stamp) {
+                    return Err(format!("free stamp {} reused", f.stamp));
+                }
+                if f.stamp <= prev_stamp {
+                    return Err(format!(
+                        "shard {s} not in stack order at slot {}",
+                        f.slot
+                    ));
+                }
+                prev_stamp = f.stamp;
             }
         }
+        let dead = self.units.len() - self.alive;
+        if free_total != dead {
+            return Err(format!(
+                "{free_total} free-list entries != {dead} dead slots (leak)"
+            ));
+        }
         Ok(())
+    }
+
+    /// Raw-access commit view for the executor's concurrent commit pass
+    /// (see [`ShardWriter`]). Taking `&mut self` proves the caller holds
+    /// exclusive access when the writer is created; the writer itself is
+    /// lifetime-erased so the executor can share it across pool workers.
+    pub fn shard_writer(&mut self) -> ShardWriter {
+        ShardWriter {
+            units: self.units.as_mut_ptr(),
+            positions: self.positions.as_mut_ptr(),
+            xs: self.xs.as_mut_ptr(),
+            ys: self.ys.as_mut_ptr(),
+            zs: self.zs.as_mut_ptr(),
+            adjacency: self.adjacency.as_mut_ptr(),
+            len: self.units.len(),
+        }
+    }
+}
+
+/// The network view of the executor's **concurrent commit** pass: plans
+/// whose touched sets (`{w1, w2} ∪ N(w1)`) are pairwise disjoint — the
+/// invariant the executor's conflict check enforces before deferring — are
+/// applied by pool workers in parallel through this writer.
+///
+/// # Safety contract
+///
+/// The writer holds raw pointers into the slab buffers, so between
+/// [`Network::shard_writer`] and the last use:
+///
+/// - the `Network` must not be touched through any other path (no inserts,
+///   removals, or reads — structural changes would reallocate the buffers
+///   under the pointers);
+/// - concurrent calls must target disjoint unit sets: every write and read
+///   goes to `{w1, w2} ∪ N(w1)` of the plan being committed, and the
+///   executor only defers plans whose touched sets are mutually disjoint;
+/// - all ids must be live slab slots (`< capacity()` and alive).
+///
+/// Shared scalars (the undirected edge count, QE, GNG's error/epoch state)
+/// are *not* reachable through the writer — [`Self::connect`] reports
+/// created edges back through the plan and the executor folds them in
+/// during the sequential scalar replay ([`Network::note_edges_created`]).
+/// The worker-pool barrier (`WorkerPool::run` returns only after every
+/// active worker acked) is what publishes these writes to the driver
+/// thread before the replay reads anything.
+pub struct ShardWriter {
+    units: *mut Unit,
+    positions: *mut Vec3,
+    xs: *mut f32,
+    ys: *mut f32,
+    zs: *mut f32,
+    adjacency: *mut Vec<Edge>,
+    len: usize,
+}
+
+// SAFETY: the writer is only a capability to perform element-disjoint
+// writes; disjointness and the no-structural-change window are the
+// caller's contract (see the type docs).
+unsafe impl Send for ShardWriter {}
+unsafe impl Sync for ShardWriter {}
+
+impl ShardWriter {
+    #[inline]
+    fn check(&self, id: UnitId) -> usize {
+        let i = id as usize;
+        debug_assert!(i < self.len, "ShardWriter id {id} beyond slab");
+        i
+    }
+
+    /// Current position of a live unit (pre-write read for the change log).
+    #[inline]
+    pub fn pos(&self, id: UnitId) -> Vec3 {
+        let i = self.check(id);
+        unsafe { *self.positions.add(i) }
+    }
+
+    /// Mirror-coherent position write (`Unit::pos`, dense mirror, SoA
+    /// lanes) — the writer twin of [`Network::set_pos`]. Never grows the
+    /// SoA arrays: commits move existing units only.
+    #[inline]
+    pub fn set_pos(&self, id: UnitId, p: Vec3) {
+        let i = self.check(id);
+        unsafe {
+            (*self.units.add(i)).pos = p;
+            *self.positions.add(i) = p;
+            *self.xs.add(i) = p.x;
+            *self.ys.add(i) = p.y;
+            *self.zs.add(i) = p.z;
+        }
+    }
+
+    #[inline]
+    pub fn set_firing(&self, id: UnitId, firing: f32) {
+        let i = self.check(id);
+        unsafe { (*self.units.add(i)).firing = firing };
+    }
+
+    #[inline]
+    #[allow(clippy::mut_from_ref)] // the whole point of the writer; see type docs
+    unsafe fn adj_mut(&self, id: UnitId) -> &mut Vec<Edge> {
+        let i = self.check(id);
+        unsafe { &mut *self.adjacency.add(i) }
+    }
+
+    /// Age every edge incident to `id` by `amount`, both halves — the
+    /// writer twin of [`Network::age_edges_of`]. Neighbors of `id` are in
+    /// the plan's touched set, so the back-half writes stay disjoint.
+    pub fn age_edges_of(&self, id: UnitId, amount: f32) {
+        unsafe {
+            for half in self.adj_mut(id).iter_mut() {
+                half.age += amount;
+                // `half.to != id` (no self edges), so this second raw-derived
+                // view targets a different element of the adjacency slab.
+                for e in self.adj_mut(half.to).iter_mut() {
+                    if e.to == id {
+                        e.age += amount;
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Create or age-reset the edge `a`–`b` — the writer twin of
+    /// [`Network::connect`], except the shared undirected edge counter is
+    /// *not* bumped here (workers cannot touch it): the return value says
+    /// whether a new edge was created, for the sequential replay to fold in
+    /// via [`Network::note_edges_created`].
+    pub fn connect(&self, a: UnitId, b: UnitId) -> bool {
+        debug_assert!(a != b, "self edge on {a}");
+        unsafe {
+            let mut found = false;
+            for e in self.adj_mut(a).iter_mut() {
+                if e.to == b {
+                    e.age = 0.0;
+                    found = true;
+                    break;
+                }
+            }
+            if found {
+                for e in self.adj_mut(b).iter_mut() {
+                    if e.to == a {
+                        e.age = 0.0;
+                        break;
+                    }
+                }
+                false
+            } else {
+                self.adj_mut(a).push(Edge { to: b, age: 0.0 });
+                self.adj_mut(b).push(Edge { to: a, age: 0.0 });
+                true
+            }
+        }
+    }
+
+    /// Apply the network-write half of one `Adapt`-class plan: edge aging
+    /// on the winner, the competitive-Hebbian connect, the precomputed
+    /// position moves and firing levels. Algorithm-independent — every
+    /// adapt rule in this crate (GWR, SOAM, GNG) is exactly this shape,
+    /// with the differences (which units move, whether firing changes)
+    /// already encoded in the plan by `plan_update`.
+    ///
+    /// Fills `plan.old_pos` (pre-move positions, for the change-log replay)
+    /// and `plan.new_edges` (for the edge-count replay); everything else an
+    /// update does — QE, per-algorithm counters, GNG's lazy error decay —
+    /// belongs to `GrowingNetwork::commit_scalars`.
+    pub fn commit_adapt(&self, plan: &mut UpdatePlan) {
+        self.age_edges_of(plan.w1, 1.0);
+        plan.new_edges = u32::from(self.connect(plan.w1, plan.w2));
+        plan.old_pos.clear();
+        for &(id, new_pos) in &plan.moves {
+            plan.old_pos.push(self.pos(id));
+            self.set_pos(id, new_pos);
+        }
+        for &(id, firing) in &plan.firing {
+            self.set_firing(id, firing);
+        }
     }
 }
 
@@ -608,6 +904,143 @@ mod tests {
         assert_eq!(reused, ids[4], "slot reuse");
         n.check_invariants().unwrap();
         assert_eq!(n.soa().0[4], 42.0);
+    }
+
+    #[test]
+    fn sharded_free_lists_reproduce_global_lifo_order() {
+        // Free slots landing in different home shards must still be
+        // reallocated in exact reverse-free order (the old single stack's
+        // pop order — what keeps unit ids driver-independent).
+        let mut n = Network::new();
+        let ids: Vec<UnitId> = (0..2 * FREE_SHARDS as u32 + 3)
+            .map(|k| n.insert(v(k as f32), 1.0))
+            .collect();
+        // Remove a spread of slots across shards, in a scrambled order.
+        let freed = [
+            ids[3],
+            ids[FREE_SHARDS + 3], // same home shard as ids[3]
+            ids[0],
+            ids[7 % ids.len()],
+            ids[FREE_SHARDS - 1],
+        ];
+        let mut freed_in_order = Vec::new();
+        for &id in &freed {
+            // Skip duplicates in the scrambled pick (already removed).
+            if n.is_alive(id) {
+                n.remove(id);
+                freed_in_order.push(id);
+            }
+        }
+        n.check_invariants().unwrap();
+        // Reinsert: must pop most-recently-freed first, across shards.
+        for &want in freed_in_order.iter().rev() {
+            let got = n.insert(v(99.0), 1.0);
+            assert_eq!(got, want, "global LIFO order across shards");
+        }
+        n.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn check_invariants_rejects_corrupt_free_lists() {
+        let base = {
+            let mut n = Network::new();
+            let a = n.insert(v(0.0), 1.0);
+            let b = n.insert(v(1.0), 1.0);
+            let _c = n.insert(v(2.0), 1.0);
+            n.connect(a, b);
+            n.remove(b);
+            n.check_invariants().unwrap();
+            n
+        };
+
+        // Alive entry in a shard list.
+        let mut n = base.clone();
+        let alive_id = n.ids().next().unwrap();
+        n.free_stamp += 1;
+        let stamp = n.free_stamp;
+        n.free_shards[alive_id as usize % FREE_SHARDS].push(FreeSlot { slot: alive_id, stamp });
+        assert!(n.check_invariants().unwrap_err().contains("alive"));
+
+        // The same dead slot listed twice, across two different shards.
+        let mut n = base.clone();
+        let dead = n.free_shards.iter().flatten().next().unwrap().slot;
+        n.free_stamp += 1;
+        let stamp = n.free_stamp;
+        let foreign = (dead as usize + 1) % FREE_SHARDS;
+        n.free_shards[foreign].push(FreeSlot { slot: dead, stamp });
+        let err = n.check_invariants().unwrap_err();
+        assert!(
+            err.contains("foreign") || err.contains("twice"),
+            "cross-shard duplicate must be rejected: {err}"
+        );
+
+        // A dead slot missing from every list (leak).
+        let mut n = base.clone();
+        for shard in &mut n.free_shards {
+            shard.clear();
+        }
+        assert!(n.check_invariants().unwrap_err().contains("leak"));
+
+        // Reused stamp across shards.
+        let mut n = base.clone();
+        let d = n.insert(v(5.0), 1.0); // reuses the freed slot
+        let e = n.insert(v(6.0), 1.0);
+        n.remove(d);
+        n.remove(e);
+        if d as usize % FREE_SHARDS != e as usize % FREE_SHARDS {
+            // Force both shards' stamps equal.
+            let s = n.free_shards[d as usize % FREE_SHARDS].last().unwrap().stamp;
+            n.free_shards[e as usize % FREE_SHARDS].last_mut().unwrap().stamp = s;
+            let err = n.check_invariants().unwrap_err();
+            assert!(err.contains("reused") || err.contains("stack order"), "{err}");
+        }
+    }
+
+    #[test]
+    fn shard_writer_matches_network_mutators() {
+        // The raw writer's aging/connect/moves/firing must be bit-identical
+        // to the safe Network mutators (modulo the deferred edge counter).
+        let build = || {
+            let mut n = Network::new();
+            let a = n.insert(v(0.0), 1.0);
+            let b = n.insert(v(1.0), 1.0);
+            let c = n.insert(v(2.0), 1.0);
+            n.connect(a, b);
+            n.connect(a, c);
+            (n, a, b, c)
+        };
+        let (mut safe, a, b, c) = build();
+        let (mut raw, _, _, _) = build();
+
+        safe.age_edges_of(a, 1.5);
+        safe.connect(a, b); // age reset, no new edge
+        safe.connect(b, c); // new edge
+        safe.set_pos(c, Vec3::new(9.0, 8.0, 7.0));
+        safe.unit_mut(b).firing = 0.25;
+
+        let w = raw.shard_writer();
+        w.age_edges_of(a, 1.5);
+        assert!(!w.connect(a, b), "existing edge only resets");
+        assert!(w.connect(b, c), "new edge reported for the replay");
+        w.set_pos(c, Vec3::new(9.0, 8.0, 7.0));
+        w.set_firing(b, 0.25);
+        raw.note_edges_created(1);
+
+        assert_eq!(safe.edge_count(), raw.edge_count());
+        for id in [a, b, c] {
+            assert_eq!(safe.pos(id), raw.pos(id));
+            assert_eq!(safe.unit(id).firing.to_bits(), raw.unit(id).firing.to_bits());
+            let mut ea: Vec<(u32, u32)> =
+                safe.edges_of(id).iter().map(|e| (e.to, e.age.to_bits())).collect();
+            let mut eb: Vec<(u32, u32)> =
+                raw.edges_of(id).iter().map(|e| (e.to, e.age.to_bits())).collect();
+            ea.sort_unstable();
+            eb.sort_unstable();
+            assert_eq!(ea, eb, "edges of {id}");
+        }
+        raw.check_invariants().unwrap();
+        // The SoA mirror followed the raw set_pos too.
+        assert_eq!(raw.soa().0[c as usize], 9.0);
     }
 
     #[test]

@@ -61,7 +61,10 @@ pub struct GngParams {
     pub lambda: u64,
     /// Error decay applied to the split units at insertion.
     pub alpha: f32,
-    /// Global error decay per signal.
+    /// Global error decay per signal: every unit's accumulated error is
+    /// multiplied by `1 - beta` once per applied signal. Applied *lazily*
+    /// (epoch-stamped, materialized on read — see `som::gng` module docs),
+    /// bit-identical to the eager per-signal sweep. `0.0` disables decay.
     pub beta: f32,
     pub max_units: usize,
     /// Converged when the quantization-error EMA drops below this.

@@ -231,7 +231,7 @@ impl GrowingNetwork for Soam {
         self.qe.value()
     }
 
-    fn classify_update(&self, _signal: Vec3, w: &Winners) -> UpdateKind {
+    fn classify_update(&self, _signal: Vec3, w: &Winners, _pending_commits: usize) -> UpdateKind {
         Gwr::gwr_classify(&self.net, &self.gwr_view, w, true)
     }
 
@@ -239,8 +239,8 @@ impl GrowingNetwork for Soam {
         Gwr::gwr_plan(&self.net, &self.gwr_view, signal, w, plan);
     }
 
-    fn commit_update(&mut self, plan: &UpdatePlan, log: &mut ChangeLog) {
-        Gwr::gwr_commit(&mut self.net, &self.gwr_view, plan, log);
+    fn commit_scalars(&mut self, plan: &UpdatePlan, _log: &mut ChangeLog) {
+        Gwr::debug_check_no_prune(&self.net, &self.gwr_view, plan);
         self.qe.push(plan.d1_sq);
     }
 }

@@ -10,7 +10,13 @@
 //!   sync, AABB-early-exit staleness guard) must match the reference on
 //!   every unit position, firing level, edge and report counter;
 //! - `Driver::Parallel` must match `Driver::Multi` for any
-//!   `update_threads`, including auto-detect.
+//!   `update_threads`, including auto-detect — for SOAM, GWR **and GNG**
+//!   (possible since PR 3's lazy error decay; the GNG case covers the
+//!   pending-aware insertion-schedule classification, the concurrent
+//!   commit, and deterministic slab-id assignment on the sharded free
+//!   lists);
+//! - `Driver::Pipelined` must be invariant in `update_threads` for any
+//!   `queue_depth` (the prefetch composed with the pooled Update split).
 
 use msgsn::config::Limits;
 use msgsn::coordinator::LockTable;
@@ -243,6 +249,88 @@ fn pooled_plan_and_sharded_find_match_multi_bitwise() {
         assert_eq!(a.discarded, b.discarded, "{label}");
         assert_eq!(a.qe.to_bits(), b.qe.to_bits(), "{label}");
         assert_networks_identical(soam_a.net(), soam_b.net(), &label);
+    }
+}
+
+/// Acceptance (PR 3): GNG under the `Parallel` driver is bit-identical to
+/// the sequential `Multi` driver for any `(update_threads, find_threads)`
+/// — including unit ids (deterministic shard-local allocation) and the
+/// lazily decayed per-unit errors (when a unit materializes is itself part
+/// of the deterministic operation sequence, so the stored error bits and
+/// epoch stamps match across drivers without any final sweep).
+#[test]
+fn gng_parallel_bit_identical_to_multi_for_every_thread_combo() {
+    use msgsn::config::{Algorithm, Driver, RunConfig};
+    use msgsn::engine::run_convergence;
+    use msgsn::som::{Gng, GngParams};
+
+    let mesh = benchmark_mesh(BenchmarkShape::Eight, 20);
+    let sampler = SurfaceSampler::new(&mesh);
+    let mut cfg = RunConfig::preset(BenchmarkShape::Eight);
+    cfg.algorithm = Algorithm::Gng;
+    cfg.gng = GngParams { lambda: 60, ..cfg.gng };
+    cfg.limits.max_signals = 25_000;
+    cfg.find_threads = 1;
+    cfg.update_threads = 1;
+
+    cfg.driver = Driver::Multi;
+    let mut gng_a = Gng::new(cfg.gng);
+    let mut fw_a = BatchRust::default();
+    let mut rng_a = Rng::seed_from(29);
+    let a = run_convergence(&mut gng_a, &sampler, &mut fw_a, &cfg, &mut rng_a);
+
+    for (update_threads, find_threads) in [(2usize, 1usize), (1, 2), (3, 7), (0, 0)] {
+        cfg.driver = Driver::Parallel;
+        cfg.update_threads = update_threads;
+        cfg.find_threads = find_threads;
+        let mut gng_b = Gng::new(cfg.gng);
+        let mut fw_b = BatchRust::default();
+        let mut rng_b = Rng::seed_from(29);
+        let b = run_convergence(&mut gng_b, &sampler, &mut fw_b, &cfg, &mut rng_b);
+        let label = format!("gng upd={update_threads} find={find_threads}");
+        assert_eq!(a.iterations, b.iterations, "{label}");
+        assert_eq!(a.signals, b.signals, "{label}");
+        assert_eq!(a.discarded, b.discarded, "{label}");
+        assert_eq!(a.qe.to_bits(), b.qe.to_bits(), "{label}");
+        assert_networks_identical(gng_a.net(), gng_b.net(), &label);
+    }
+}
+
+/// Satellite (PR 3): the pipelined driver composed with the pooled Update
+/// split — the final network must be invariant in `update_threads` for
+/// every `queue_depth` (and across queue depths, as before).
+#[test]
+fn pipelined_bit_identical_across_queue_depth_and_update_threads() {
+    use msgsn::coordinator::{run_pipelined, BatchExecutor};
+
+    let run = |queue_depth: usize, update_threads: usize| -> (Soam, u64, u64) {
+        let sampler = blob_sampler();
+        let lim = limits(30_000);
+        let mut soam = Soam::new(SoamParams {
+            insertion_threshold: 0.16,
+            ..SoamParams::default()
+        });
+        let mut fw = BatchRust::default();
+        let mut rng = Rng::seed_from(33);
+        let r = run_pipelined(
+            &mut soam,
+            &sampler,
+            &mut fw,
+            &lim,
+            &mut rng,
+            queue_depth,
+            BatchExecutor::new(update_threads),
+        );
+        (soam, r.discarded, r.signals)
+    };
+
+    let (ref_soam, ref_disc, ref_sig) = run(2, 1);
+    for (queue_depth, update_threads) in [(1usize, 2usize), (2, 3), (2, 0), (4, 2)] {
+        let (soam, disc, sig) = run(queue_depth, update_threads);
+        let label = format!("pipelined qd={queue_depth} upd={update_threads}");
+        assert_eq!(ref_disc, disc, "{label}");
+        assert_eq!(ref_sig, sig, "{label}");
+        assert_networks_identical(ref_soam.net(), soam.net(), &label);
     }
 }
 

@@ -1,0 +1,130 @@
+#!/usr/bin/env python3
+"""Diff freshly produced BENCH_*.json files against committed baselines.
+
+Usage: compare_bench.py --baseline DIR --fresh DIR [--threshold 0.10]
+
+For every BENCH_*.json in the fresh directory:
+
+- no committed counterpart                       -> skipped (new bench)
+- counterpart has "status": "instrumented-not-measured"
+                                                 -> skipped (placeholder:
+                                                    no real numbers yet)
+- both carry a "signals" workload stamp and they differ
+                                                 -> skipped (different
+                                                    workload scales are not
+                                                    comparable)
+- otherwise every timing field of every matching row is compared and the
+  script fails (exit 1) when fresh > committed * (1 + threshold).
+
+Rows are dicts inside any JSON array, matched across files by their "row"
+key (driver rows) or "units" key (microbench rows). Timing fields are the
+numeric entries whose name ends in "_s" or "_ns_per_signal". Speedups are
+reported but never fail the run.
+"""
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+
+def rows_by_key(node, out):
+    """Collect keyed row-dicts from arbitrarily nested JSON."""
+    if isinstance(node, dict):
+        key = None
+        if "row" in node:
+            key = ("row", str(node["row"]))
+        elif "units" in node and "m" in node:
+            key = ("units", f"{node['units']}/m={node['m']}")
+        elif "units" in node:
+            key = ("units", str(node["units"]))
+        if key is not None:
+            out[key] = node
+        for v in node.values():
+            rows_by_key(v, out)
+    elif isinstance(node, list):
+        for v in node:
+            rows_by_key(v, out)
+    return out
+
+
+def timing_fields(row):
+    for name, value in row.items():
+        if isinstance(value, (int, float)) and (
+            name.endswith("_s") or name.endswith("_ns_per_signal")
+        ):
+            yield name, float(value)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--fresh", required=True)
+    ap.add_argument("--threshold", type=float, default=0.10)
+    args = ap.parse_args()
+
+    failures = []
+    compared_any = False
+    for fresh_path in sorted(glob.glob(os.path.join(args.fresh, "BENCH_*.json"))):
+        name = os.path.basename(fresh_path)
+        base_path = os.path.join(args.baseline, name)
+        if not os.path.exists(base_path):
+            print(f"{name}: no committed baseline — skipped")
+            continue
+        with open(fresh_path) as f:
+            fresh = json.load(f)
+        with open(base_path) as f:
+            base = json.load(f)
+        if base.get("status") == "instrumented-not-measured":
+            print(f"{name}: baseline is a placeholder (no real numbers) — skipped")
+            continue
+        if "signals" in base and "signals" in fresh and base["signals"] != fresh["signals"]:
+            print(
+                f"{name}: WARNING — workload mismatch (baseline recorded at "
+                f"{base['signals']} signals, fresh run at {fresh['signals']}); "
+                f"the regression gate is DISARMED for this file. Re-record the "
+                f"baseline with MSGSN_BENCH_SIGNALS={fresh['signals']} "
+                f"(the value CI runs with) and commit it."
+            )
+            continue
+        base_rows = rows_by_key(base, {})
+        fresh_rows = rows_by_key(fresh, {})
+        for key, fresh_row in sorted(fresh_rows.items()):
+            base_row = base_rows.get(key)
+            if base_row is None:
+                print(f"{name} {key[1]}: new row — skipped")
+                continue
+            for field, fresh_v in timing_fields(fresh_row):
+                base_v = base_row.get(field)
+                if not isinstance(base_v, (int, float)) or base_v <= 0:
+                    continue
+                compared_any = True
+                ratio = fresh_v / float(base_v)
+                verdict = "ok"
+                if ratio > 1.0 + args.threshold:
+                    verdict = "REGRESSION"
+                    failures.append(
+                        f"{name} [{key[1]}] {field}: {base_v:.4g} -> {fresh_v:.4g} "
+                        f"({ratio:.2f}x)"
+                    )
+                print(
+                    f"{name} [{key[1]}] {field}: {base_v:.4g} -> {fresh_v:.4g} "
+                    f"({ratio:.2f}x) {verdict}"
+                )
+
+    if failures:
+        print(f"\n{len(failures)} timing regression(s) beyond "
+              f"{100 * args.threshold:.0f}%:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    if not compared_any:
+        print("\nno comparable real numbers yet — nothing to diff")
+    else:
+        print("\nno regressions beyond the threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
