@@ -57,11 +57,19 @@ fn main() -> anyhow::Result<()> {
     println!("\nworker-pool end-to-end (blob, smoke scale):");
     let mesh = msgsn::mesh::benchmark_mesh(BenchmarkShape::Blob, Scale::SMOKE.mesh_resolution);
     let mut pool_rows = Vec::new();
-    let pool_runs = [("sequential", 1usize, 1usize), ("pooled", 0usize, 0usize)];
-    for (name, update_threads, find_threads) in pool_runs {
+    let pool_runs = [
+        ("sequential", 1usize, 1usize, 1usize),
+        ("pooled", 0usize, 0usize, 1usize),
+        // PR 4: the full region-sharded path (region Find Winners + the
+        // region-aware executor schedule) on top of the pool. Identical
+        // results to the rows above by construction.
+        ("pooled+regions", 0usize, 0usize, 64usize),
+    ];
+    for (name, update_threads, find_threads, regions) in pool_runs {
         let mut cfg = Scale::SMOKE.configure(BenchmarkShape::Blob);
         cfg.update_threads = update_threads;
         cfg.find_threads = find_threads;
+        cfg.regions = regions;
         let mut rng = msgsn::rng::Rng::seed_from(42);
         let t0 = std::time::Instant::now();
         let r = msgsn::engine::run(&mesh, Driver::Parallel, &cfg, &mut rng)?;
@@ -77,7 +85,8 @@ fn main() -> anyhow::Result<()> {
         );
         pool_rows.push(format!(
             "    {{\"row\": \"{name}\", \"update_threads\": {update_threads}, \
-             \"find_threads\": {find_threads}, \"total_s\": {total:.6}, \
+             \"find_threads\": {find_threads}, \"regions\": {regions}, \
+             \"total_s\": {total:.6}, \
              \"find_s\": {:.6}, \"update_s\": {:.6}, \"units\": {}, \"discarded\": {}}}",
             r.phase.find.as_secs_f64(),
             r.phase.update.as_secs_f64(),

@@ -10,7 +10,9 @@
 //! Columns: `exhaust` is the scalar reference scan (`exhaustive_top2`,
 //! pre-PR-2 `single`), `lane` is the lane-blocked SoA kernel (the current
 //! `single`), `multi` the SoA-tiled batch, `multi@N` the same batch sharded
-//! across N pool workers (`find_threads`), `pjrt` the AOT artifact.
+//! across N pool workers (`find_threads`), `regionR` the batch with the
+//! region-neighborhood scan over an R-region grid (`regions` knob — exact,
+//! falls back to the tiles near boundaries), `pjrt` the AOT artifact.
 //! Results are written to `BENCH_find_winners.json` for the trajectory.
 
 use std::path::Path;
@@ -18,14 +20,16 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use msgsn::findwinners::{exhaustive_top2, BatchRust, FindWinners, Indexed, Scalar};
-use msgsn::geometry::Vec3;
+use msgsn::geometry::{Aabb, Vec3};
 use msgsn::rng::Rng;
 use msgsn::runtime::{PjrtFindWinners, Registry, WorkerPool};
-use msgsn::som::Network;
+use msgsn::som::{Network, RegionMap};
 
 const REPS: usize = 5;
 const MIN_TIME: Duration = Duration::from_millis(120);
 const POOL_SHARDS: usize = 4;
+/// Region count for the region-neighborhood scan row (the `regions` knob).
+const REGIONS: usize = 64;
 
 fn random_net(n: usize, seed: u64) -> Network {
     let mut rng = Rng::seed_from(seed);
@@ -78,7 +82,7 @@ fn main() {
     let pjrt_ready = Path::new("artifacts/manifest.json").exists();
     println!("find_winners microbenchmark (best-of-{REPS}, per-signal seconds)");
     println!(
-        "{:>7} {:>7} {:>12} {:>12} {:>12} {:>12} {:>12} {:>12} {:>7} {:>7}",
+        "{:>7} {:>7} {:>12} {:>12} {:>12} {:>12} {:>12} {:>12} {:>12} {:>7} {:>7}",
         "units",
         "batch",
         "exhaust",
@@ -86,6 +90,7 @@ fn main() {
         "indexed",
         "multi",
         format!("multi@{POOL_SHARDS}"),
+        format!("region{REGIONS}"),
         "pjrt",
         "lane x",
         "pool x"
@@ -123,6 +128,14 @@ fn main() {
             fw.attach_pool(Arc::new(WorkerPool::new(POOL_SHARDS)), POOL_SHARDS);
             bench_batch(&mut fw, &net, &signals)
         };
+        let region = {
+            // Units and signals live in the unit cube, so the region grid
+            // covers it (the engine derives the same box from the mesh).
+            let mut fw = BatchRust::default();
+            fw.attach_regions(RegionMap::new(Aabb::new(Vec3::ZERO, Vec3::ONE), REGIONS));
+            fw.rebuild(&net);
+            bench_batch(&mut fw, &net, &signals)
+        };
         let pjrt = if pjrt_ready {
             // Flavor override for A/B runs: MSGSN_FLAVOR=pallas|scan.
             let flavor = std::env::var("MSGSN_FLAVOR").ok();
@@ -132,7 +145,7 @@ fn main() {
             f64::NAN
         };
         println!(
-            "{:>7} {:>7} {:>12.3e} {:>12.3e} {:>12.3e} {:>12.3e} {:>12.3e} {:>12.3e} {:>7.1} {:>7.1}",
+            "{:>7} {:>7} {:>12.3e} {:>12.3e} {:>12.3e} {:>12.3e} {:>12.3e} {:>12.3e} {:>12.3e} {:>7.1} {:>7.1}",
             n,
             m,
             exhaust,
@@ -140,6 +153,7 @@ fn main() {
             indexed,
             multi,
             pooled,
+            region,
             pjrt,
             exhaust / lane,
             multi / pooled,
@@ -147,7 +161,8 @@ fn main() {
         json_rows.push(format!(
             "    {{\"units\": {n}, \"m\": {m}, \"exhaustive_s\": {exhaust:e}, \
              \"lane_s\": {lane:e}, \"indexed_s\": {indexed:e}, \"multi_s\": {multi:e}, \
-             \"multi_pool{POOL_SHARDS}_s\": {pooled:e}, \"pjrt_s\": {}}}",
+             \"multi_pool{POOL_SHARDS}_s\": {pooled:e}, \
+             \"region{REGIONS}_s\": {region:e}, \"pjrt_s\": {}}}",
             if pjrt.is_nan() { "null".to_string() } else { format!("{pjrt:e}") }
         ));
     }

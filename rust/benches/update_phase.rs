@@ -109,22 +109,27 @@ fn main() {
     //    multi by construction — only the time columns may move.
     let signals = bench_signals();
     println!("\nupdate-phase drivers ({signals} signals, blob):");
-    let rows: [(&str, Driver, usize, usize); 6] = [
-        ("multi", Driver::Multi, 1, 1),
-        ("pipelined", Driver::Pipelined, 1, 1),
-        ("pipe pooled", Driver::Pipelined, 0, 1),
-        ("par seq-plan", Driver::Parallel, 1, 1),
-        ("par pooled", Driver::Parallel, 0, 1),
-        ("par pool+find", Driver::Parallel, 0, 0),
+    let rows: [(&str, Driver, usize, usize, usize); 8] = [
+        ("multi", Driver::Multi, 1, 1, 1),
+        ("pipelined", Driver::Pipelined, 1, 1, 1),
+        ("pipe pooled", Driver::Pipelined, 0, 1, 1),
+        ("par seq-plan", Driver::Parallel, 1, 1, 1),
+        ("par pooled", Driver::Parallel, 0, 1, 1),
+        ("par pool+find", Driver::Parallel, 0, 0, 1),
+        // PR 4: region-sharded convergence (region-neighborhood Find
+        // Winners + region-aware schedule with deferred insert commits).
+        ("multi regions", Driver::Multi, 1, 1, 64),
+        ("par regions", Driver::Parallel, 0, 0, 64),
     ];
     let mut json_rows = Vec::new();
-    for (name, driver, update_threads, find_threads) in rows {
+    for (name, driver, update_threads, find_threads, regions) in rows {
         let mut rng = Rng::seed_from(5);
         let mut cfg = RunConfig::preset(BenchmarkShape::Blob);
         cfg.soam.insertion_threshold = 0.1;
         cfg.driver = driver;
         cfg.update_threads = update_threads;
         cfg.find_threads = find_threads;
+        cfg.regions = regions;
         cfg.limits = Limits { max_signals: signals, ..Limits::default() };
         let mut soam = Soam::new(cfg.soam);
         let mut fw = BatchRust::default();
@@ -134,7 +139,10 @@ fn main() {
         // pipelined/parallel executors exactly as production runs do
         // (queue_depth comes from the preset, 2).
         let r = match driver {
-            Driver::Multi => {
+            // The bare multi reference row bypasses run_convergence; the
+            // region row must go through it (that is where the region map
+            // is built and attached).
+            Driver::Multi if regions == 1 => {
                 run_multi_signal(&mut soam, &sampler, &mut fw, &cfg.limits, &mut rng)
             }
             _ => msgsn::engine::run_convergence(&mut soam, &sampler, &mut fw, &cfg, &mut rng),
@@ -152,7 +160,7 @@ fn main() {
         );
         json_rows.push(format!(
             "    {{\"row\": \"{name}\", \"driver\": \"{}\", \"update_threads\": {update_threads}, \
-             \"find_threads\": {find_threads}, \"total_s\": {total:.6}, \
+             \"find_threads\": {find_threads}, \"regions\": {regions}, \"total_s\": {total:.6}, \
              \"sample_s\": {:.6}, \"find_s\": {:.6}, \"update_s\": {:.6}, \
              \"units\": {}, \"discarded\": {}}}",
             driver.name(),

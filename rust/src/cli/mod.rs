@@ -46,7 +46,13 @@ USAGE:
                                  e.g. queue_depth=4, update_threads=8,
                                  find_threads=8 — 0 = auto-detect;
                                  update_threads drives the pooled Update
-                                 split of parallel AND pipelined)
+                                 split of parallel AND pipelined;
+                                 regions=R partitions the volume into R
+                                 spatial regions for the region-sharded
+                                 Find Winners + Update schedule of the
+                                 multi/pipelined/parallel drivers — 1
+                                 disables; results are bit-identical for
+                                 any R)
       --max-signals <N>          safety cap
       --trace                    record trace points
       --save-mesh <out.obj>      write the reconstructed network mesh

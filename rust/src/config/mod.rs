@@ -180,6 +180,16 @@ pub struct RunConfig {
     /// drivers whose scan runs in `BatchRust` (multi/pipelined/parallel);
     /// the pjrt scan runs inside the XLA executable and ignores it.
     pub find_threads: usize,
+    /// Spatial regions the bounding volume is partitioned into (target
+    /// count; the grid rounds up to a near-isotropic factorization).
+    /// `1` (default) disables the partition. With `> 1`, the batched Find
+    /// Winners scans only each signal's region neighborhood (exact, with a
+    /// global fallback) and the parallel executors run the region-aware
+    /// admission/plan/commit schedule in which insertion-only structural
+    /// updates commit concurrently. Results are bit-identical for any
+    /// value; only wall time changes. Applies to the `BatchRust` drivers
+    /// (multi/pipelined/parallel).
+    pub regions: usize,
     /// Where the AOT artifacts live.
     pub artifacts_dir: PathBuf,
     /// Artifact flavor override (`pallas` / `scan`; None = manifest default).
@@ -238,6 +248,7 @@ impl RunConfig {
             "queue_depth" => self.queue_depth = (int()? as usize).max(1),
             "update_threads" => self.update_threads = int()? as usize,
             "find_threads" => self.find_threads = int()? as usize,
+            "regions" => self.regions = (int()? as usize).max(1),
             "artifacts_dir" => {
                 self.artifacts_dir = value
                     .as_str()
@@ -425,6 +436,15 @@ mod tests {
         assert_eq!(cfg.find_threads, 0, "0 = auto-detect");
         assert!(matches!(
             cfg.apply("find_threads", &ConfigValue::Num(1.5)),
+            Err(ConfigError::Type(_, _))
+        ));
+        assert_eq!(cfg.regions, 1, "region partition is opt-in");
+        cfg.apply("regions", &ConfigValue::Num(64.0)).unwrap();
+        assert_eq!(cfg.regions, 64);
+        cfg.apply("regions", &ConfigValue::Num(0.0)).unwrap();
+        assert_eq!(cfg.regions, 1, "regions clamp to >= 1");
+        assert!(matches!(
+            cfg.apply("regions", &ConfigValue::Num(2.5)),
             Err(ConfigError::Type(_, _))
         ));
     }

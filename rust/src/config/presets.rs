@@ -53,6 +53,10 @@ pub fn preset(shape: BenchmarkShape) -> RunConfig {
         // parallelization", so the default keeps that semantics-preserving
         // baseline single-threaded.
         find_threads: 1,
+        // The spatial region partition is likewise opt-in
+        // (`--set regions=R`): results are bit-identical either way, and
+        // the paper's columns have no region decomposition.
+        regions: 1,
         artifacts_dir: PathBuf::from("artifacts"),
         flavor: None,
         soam,

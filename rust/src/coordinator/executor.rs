@@ -52,6 +52,36 @@
 //!    epoch). Every order-sensitive f32 accumulation lives here, so the
 //!    final state is bit-identical to the sequential `Multi` driver for
 //!    any thread count and any work-stealing schedule.
+//!
+//! ## The region schedule (`regions > 1`)
+//!
+//! With a [`RegionMap`] attached ([`BatchExecutor::set_regions`]) the
+//! admission/plan/commit schedule becomes **region-aware**:
+//!
+//! - conflict domains move from unit granularity to *region* granularity:
+//!   a deferred plan marks the regions of its touched units
+//!   (`{w1, w2} ∪ N(w1)`, mapped through their current positions — stable
+//!   within a flush window), and a signal conflicts iff one of its touched
+//!   regions is marked. Region overlap is implied by unit overlap, so this
+//!   is a sound coarsening: it can only flush *earlier*, and flush timing
+//!   is invisible in the results (what is planned and committed per signal
+//!   never changes — even GNG's `pending_commits` classification is a
+//!   flush-invariant of the admission order, since `signals_seen +
+//!   pending` counts every admitted signal exactly once either way);
+//! - signals landing in **disjoint region neighborhoods flow through plan
+//!   *and* structural commit concurrently**: an [`UpdateKind::Insert`]
+//!   update no longer flushes the deferral queue. Its slab allocation runs
+//!   sequentially at admission ([`GrowingNetwork::begin_insert`] — the
+//!   sharded free lists' global-LIFO pop keeps unit ids bit-identical to
+//!   the sequential driver, which subsumes the earlier plan of
+//!   per-commit-group home-shard allocation: allocation is off the commit
+//!   path entirely), the staleness-guard entry is pushed at the same
+//!   admission position the sequential driver would, and the edge work
+//!   commits concurrently with the adapt plans through
+//!   [`crate::som::ShardWriter::commit_insert`].
+//!
+//! Without a region map (`regions = 1`), `Insert` degenerates to
+//! `Structural` and the schedule is exactly the pre-region behavior.
 
 use std::sync::{Arc, Mutex};
 
@@ -59,7 +89,9 @@ use crate::findwinners::FindWinners;
 use crate::geometry::{Aabb, Vec3};
 use crate::rng::Rng;
 use crate::runtime::{resolve_threads, steal_chunk, WorkerPool};
-use crate::som::{ChangeLog, GrowingNetwork, Network, UpdateKind, UpdatePlan, Winners};
+use crate::som::{
+    ChangeLog, GrowingNetwork, Network, PlanKind, RegionMap, UpdateKind, UpdatePlan, Winners,
+};
 
 use super::locks::LockTable;
 
@@ -131,11 +163,15 @@ impl InsertedGuard {
     }
 }
 
-/// One admitted-but-deferred adapt-class signal awaiting its plan/commit.
+/// One admitted-but-deferred signal awaiting its plan/commit: an
+/// adapt-class signal still to be planned, or an insert-class signal whose
+/// plan was already built at admission (`Insert` plans carry the
+/// sequentially pre-allocated unit and are skipped by the plan pass).
 #[derive(Clone, Copy, Debug)]
 struct Pending {
     signal: Vec3,
     w: Winners,
+    kind: PlanKind,
 }
 
 /// One claimable work item in the pooled plan pass: a pending chunk and
@@ -157,8 +193,25 @@ pub struct BatchExecutor {
     /// pooled path on small batches).
     flush_threshold: usize,
     locks: LockTable,
-    /// Stamp set of units whose state the deferred plans read or write.
+    /// Stamp set of units whose state the deferred plans read or write
+    /// (unit-granular conflict domains; unused when a region map is
+    /// attached).
     touched: LockTable,
+    /// Region-granular conflict domains (see the module docs): stamp set
+    /// of regions touched by the deferred plans.
+    region_touched: LockTable,
+    /// Region geometry for the region-aware schedule (None = unit-granular
+    /// conflicts, inserts flush inline — the pre-region behavior).
+    region_map: Option<RegionMap>,
+    /// Insert-class signals deferred through the region schedule (stat for
+    /// benches and the engagement assertions in tests).
+    inserts_deferred: u64,
+    /// Region ids of the current signal's touched set `{w1, w2} ∪ N(w1)`
+    /// — computed once per admission ([`Self::fill_region_scratch`]) and
+    /// shared by the conflict check and the deferral marks (refreshed
+    /// after a flush, whose commits may move the touched units across
+    /// region boundaries).
+    region_scratch: Vec<u32>,
     order: Vec<u32>,
     log: ChangeLog,
     guard: InsertedGuard,
@@ -202,6 +255,10 @@ impl BatchExecutor {
             flush_threshold: MIN_PARALLEL_FLUSH,
             locks: LockTable::new(),
             touched: LockTable::new(),
+            region_touched: LockTable::new(),
+            region_map: None,
+            inserts_deferred: 0,
+            region_scratch: Vec::new(),
             order: Vec::new(),
             log: ChangeLog::default(),
             guard: InsertedGuard::new(),
@@ -214,6 +271,20 @@ impl BatchExecutor {
     /// Resolved worker count (≥ 1).
     pub fn update_threads(&self) -> usize {
         self.threads
+    }
+
+    /// Attach the region geometry: conflict domains become region-granular
+    /// and `Insert`-class updates join the deferred plan/commit flow (see
+    /// the module docs). Results are bit-identical with or without a map —
+    /// only flush timing and where work runs change.
+    pub fn set_regions(&mut self, map: RegionMap) {
+        self.region_map = Some(map);
+    }
+
+    /// Insert-class signals that flowed through the deferred commit (0
+    /// without a region map).
+    pub fn inserts_deferred(&self) -> u64 {
+        self.inserts_deferred
     }
 
     /// Lower the thread-spawn break-even for tests (results are identical
@@ -333,6 +404,10 @@ impl BatchExecutor {
         self.pending.clear();
         self.touched.next_batch();
         self.touched.ensure_capacity(algo.net().capacity());
+        if let Some(map) = &self.region_map {
+            self.region_touched.next_batch();
+            self.region_touched.ensure_capacity(map.region_count());
+        }
 
         let m = self.order.len();
         for idx in 0..m {
@@ -355,8 +430,17 @@ impl BatchExecutor {
             // Classification and planning read the winner's neighborhood;
             // flush first if any deferred plan touches it, so both see
             // exactly the state the sequential loop would.
+            let region_mode = self.region_map.is_some();
+            if region_mode {
+                self.fill_region_scratch(algo.net(), &w);
+            }
             if self.conflicts(algo.net(), &w) {
                 self.flush(algo);
+                if region_mode {
+                    // The flushed commits may have moved touched units
+                    // across region boundaries: recompute before marking.
+                    self.fill_region_scratch(algo.net(), &w);
+                }
             }
             match algo.classify_update(signal, &w, self.pending.len()) {
                 UpdateKind::Structural => {
@@ -366,32 +450,98 @@ impl BatchExecutor {
                     self.flush(algo);
                     self.apply_inline(algo, signal, &w);
                 }
-                UpdateKind::Adapt => self.defer(algo.net(), signal, w),
+                UpdateKind::Insert if self.region_map.is_some() => {
+                    // Region schedule: allocate the unit sequentially NOW
+                    // (identical slab ids — global-LIFO free lists), push
+                    // the staleness-guard entry at this exact admission
+                    // position, and defer the edge work to the concurrent
+                    // commit. No flush: disjoint region neighborhoods keep
+                    // flowing.
+                    let idx = self.pending.len();
+                    if self.plans.len() <= idx {
+                        self.plans.resize_with(idx + 1, UpdatePlan::default);
+                    }
+                    algo.begin_insert(signal, &w, &mut self.plans[idx]);
+                    debug_assert_eq!(self.plans[idx].kind, PlanKind::Insert);
+                    let new_unit = self.plans[idx].new_unit;
+                    self.guard.push(algo.net().pos(new_unit));
+                    // Mark the new unit's own region too: its slot can be a
+                    // *reused* one (freed by an inline removal earlier in
+                    // this batch), so a later same-window signal whose
+                    // precomputed winners still name this slot would pass
+                    // the aliveness check and read the half-committed unit
+                    // — the mark forces that signal to flush first, exactly
+                    // like the sequential order requires.
+                    let map = self.region_map.as_ref().expect("region mode");
+                    self.region_scratch.push(map.region_of(algo.net().pos(new_unit)));
+                    self.inserts_deferred += 1;
+                    self.defer(algo.net(), signal, w, PlanKind::Insert);
+                }
+                UpdateKind::Insert => {
+                    // No region map: the pre-region behavior, inline.
+                    self.flush(algo);
+                    self.apply_inline(algo, signal, &w);
+                }
+                UpdateKind::Adapt => self.defer(algo.net(), signal, w, PlanKind::Adapt),
             }
         }
         self.flush(algo);
     }
 
+    /// Compute the region ids of `{w1, w2} ∪ N(w1)` into the scratch
+    /// buffer — once per admission; the conflict check and the deferral
+    /// marks both read it (region → unit lookups through current
+    /// positions, stable within a flush window because nothing commits
+    /// until the flush).
+    fn fill_region_scratch(&mut self, net: &Network, w: &Winners) {
+        let map = self.region_map.as_ref().expect("region mode");
+        self.region_scratch.clear();
+        self.region_scratch.push(map.region_of(net.pos(w.w1)));
+        self.region_scratch.push(map.region_of(net.pos(w.w2)));
+        for e in net.edges_of(w.w1) {
+            self.region_scratch.push(map.region_of(net.pos(e.to)));
+        }
+    }
+
     /// Does this signal's winner neighborhood overlap any deferred plan's?
+    /// Unit-granular by default; region-granular with a map attached (a
+    /// sound coarsening — unit overlap implies region overlap). In region
+    /// mode the caller has just filled [`Self::fill_region_scratch`] for
+    /// this signal.
     fn conflicts(&self, net: &Network, w: &Winners) -> bool {
         if self.pending.is_empty() {
             return false;
         }
-        // A deferred adapt can only change N(w1) by touching w1 itself, so
-        // the current adjacency is valid for this check.
-        self.touched.is_locked(w.w1)
-            || self.touched.is_locked(w.w2)
-            || net.edges_of(w.w1).iter().any(|e| self.touched.is_locked(e.to))
+        // A deferred adapt can only change N(w1) by touching w1 itself, and
+        // a deferred insert's new edges appear only at commit, so the
+        // current adjacency is valid for this check.
+        if self.region_map.is_some() {
+            self.region_scratch.iter().any(|&r| self.region_touched.is_locked(r))
+        } else {
+            self.touched.is_locked(w.w1)
+                || self.touched.is_locked(w.w2)
+                || net.edges_of(w.w1).iter().any(|e| self.touched.is_locked(e.to))
+        }
     }
 
-    /// Queue an adapt-class signal and mark `{w1, w2} ∪ N(w1)` as touched.
-    fn defer(&mut self, net: &Network, signal: Vec3, w: Winners) {
-        self.touched.try_lock(w.w1);
-        self.touched.try_lock(w.w2);
-        for e in net.edges_of(w.w1) {
-            self.touched.try_lock(e.to);
+    /// Queue a deferred signal and mark its touched set — `{w1, w2} ∪
+    /// N(w1)` as units, or as their regions (from the scratch the caller
+    /// just filled, post any flush, plus the new unit's region for insert
+    /// plans — a reused slot can be named by a later signal's precomputed
+    /// winners) under the region schedule.
+    fn defer(&mut self, net: &Network, signal: Vec3, w: Winners, kind: PlanKind) {
+        if self.region_map.is_some() {
+            for &r in &self.region_scratch {
+                self.region_touched.try_lock(r);
+            }
+        } else {
+            self.touched.try_lock(w.w1);
+            self.touched.try_lock(w.w2);
+            for e in net.edges_of(w.w1) {
+                self.touched.try_lock(e.to);
+            }
         }
-        self.pending.push(Pending { signal, w });
+        self.pending.push(Pending { signal, w, kind });
     }
 
     /// Plan every deferred signal, apply the network writes (both in
@@ -413,7 +563,8 @@ impl BatchExecutor {
         // pending neighborhoods are mutually disjoint, and nothing mutates
         // until the commit below. Chunks are claimed work-stealing-style;
         // `run_indexed` returns only after every active worker acked, so
-        // the borrows stay scoped.
+        // the borrows stay scoped. Insert plans were already built (and
+        // their units allocated) at admission — the pass skips them.
         if pooled {
             let pool = self.pool.as_ref().unwrap();
             let algo_ro: &dyn GrowingNetwork = &*algo;
@@ -426,20 +577,25 @@ impl BatchExecutor {
             pool.run_indexed(workers, pairs.len(), &|j| {
                 if let Some((pend, plan)) = pairs[j].lock().unwrap().take() {
                     for (p, out) in pend.iter().zip(plan.iter_mut()) {
-                        algo_ro.plan_update(p.signal, &p.w, out);
+                        if p.kind == PlanKind::Adapt {
+                            algo_ro.plan_update(p.signal, &p.w, out);
+                        }
                     }
                 }
             });
         } else {
             for i in 0..n {
                 let p = self.pending[i];
-                algo.plan_update(p.signal, &p.w, &mut self.plans[i]);
+                if p.kind == PlanKind::Adapt {
+                    algo.plan_update(p.signal, &p.w, &mut self.plans[i]);
+                }
             }
         }
 
         // 2. Concurrent commit of the network writes: the deferred plans'
         // touched sets are pairwise disjoint (that is what `conflicts`
-        // guards at deferral time), so conflict-disjoint groups — cut
+        // guards at deferral time — insert plans' fresh units are disjoint
+        // by construction), so conflict-disjoint groups — cut
         // deterministically from the admission order — commit in parallel
         // through the raw `ShardWriter` view. Which worker commits which
         // group is racy; the written bits are not a function of it.
@@ -454,13 +610,19 @@ impl BatchExecutor {
             pool.run_indexed(workers, groups.len(), &|j| {
                 if let Some(group) = groups[j].lock().unwrap().take() {
                     for plan in group.iter_mut() {
-                        writer.commit_adapt(plan);
+                        match plan.kind {
+                            PlanKind::Adapt => writer.commit_adapt(plan),
+                            PlanKind::Insert => writer.commit_insert(plan),
+                        }
                     }
                 }
             });
         } else {
             for plan in &mut self.plans[..n] {
-                writer.commit_adapt(plan);
+                match plan.kind {
+                    PlanKind::Adapt => writer.commit_adapt(plan),
+                    PlanKind::Insert => writer.commit_insert(plan),
+                }
             }
         }
 
@@ -473,11 +635,18 @@ impl BatchExecutor {
             for (k, &(id, _)) in plan.moves.iter().enumerate() {
                 self.log.moved.push((id, plan.old_pos[k]));
             }
+            if plan.kind == PlanKind::Insert {
+                self.log.inserted.push(plan.new_unit);
+            }
             algo.net_mut().note_edges_created(plan.new_edges as usize);
+            algo.net_mut().note_edges_removed(plan.removed_edges as usize);
             algo.commit_scalars(plan, &mut self.log);
         }
         self.pending.clear();
         self.touched.next_batch();
+        if self.region_map.is_some() {
+            self.region_touched.next_batch();
+        }
     }
 }
 
@@ -584,6 +753,93 @@ mod tests {
         batches_match(5);
     }
 
+    /// Region schedule: for any (threads, regions) the final network must
+    /// be bit-identical to the sequential no-region executor, and — the PR
+    /// 4 acceptance point — insert-class updates must actually flow
+    /// through the deferred concurrent commit instead of flushing it.
+    fn region_batches_match(threads: usize, regions: usize) {
+        use crate::som::RegionMap;
+        let mesh = benchmark_mesh(BenchmarkShape::Blob, 20);
+        let bounds = mesh.bounds();
+        let sampler = SurfaceSampler::new(&mesh);
+
+        let run = |update_threads: usize, regions: usize| -> (Network, u64, u64) {
+            let mut rng = Rng::seed_from(11);
+            let mut soam = Soam::new(SoamParams {
+                insertion_threshold: 0.15,
+                ..SoamParams::default()
+            });
+            soam.init(&sampler, &mut rng);
+            let mut fw = BatchRust::default();
+            fw.rebuild(soam.net());
+            let mut exec = BatchExecutor::new(update_threads);
+            if regions > 1 {
+                exec.set_regions(RegionMap::new(bounds, regions));
+            }
+            exec.set_flush_threshold(4);
+            let mut signals = Vec::new();
+            let mut winners = Vec::new();
+            let mut discarded = 0u64;
+            for _ in 0..400 {
+                let m = crate::coordinator::MSchedule::default().m(soam.net().len());
+                sampler.sample_batch(&mut rng, m, &mut signals);
+                fw.find2_batch(soam.net(), &signals, &mut winners);
+                discarded += exec.run_batch(&mut soam, &mut fw, &signals, &winners, &mut rng);
+            }
+            (soam.net().clone(), discarded, exec.inserts_deferred())
+        };
+
+        let (net_a, disc_a, deferred_a) = run(1, 1);
+        assert_eq!(deferred_a, 0, "no region map, nothing defers");
+        let (net_b, disc_b, deferred_b) = run(threads, regions);
+        assert_eq!(disc_a, disc_b, "discard decisions diverge");
+        if threads > 1 && regions > 1 {
+            assert!(
+                deferred_b > 0,
+                "region schedule never deferred an insert (threads={threads}, regions={regions})"
+            );
+        }
+        assert_eq!(net_a.capacity(), net_b.capacity(), "slab id assignment diverges");
+        assert_eq!(net_a.len(), net_b.len());
+        assert_eq!(net_a.edge_count(), net_b.edge_count());
+        for id in 0..net_a.capacity() as u32 {
+            assert_eq!(net_a.is_alive(id), net_b.is_alive(id), "unit {id}");
+            if !net_a.is_alive(id) {
+                continue;
+            }
+            let (ua, ub) = (net_a.unit(id), net_b.unit(id));
+            assert_eq!(ua.pos.x.to_bits(), ub.pos.x.to_bits(), "unit {id} pos.x");
+            assert_eq!(ua.pos.y.to_bits(), ub.pos.y.to_bits(), "unit {id} pos.y");
+            assert_eq!(ua.pos.z.to_bits(), ub.pos.z.to_bits(), "unit {id} pos.z");
+            assert_eq!(ua.firing.to_bits(), ub.firing.to_bits(), "unit {id} firing");
+            assert_eq!(ua.threshold.to_bits(), ub.threshold.to_bits(), "unit {id} threshold");
+            let mut ea: Vec<(u32, u32)> =
+                net_a.edges_of(id).iter().map(|e| (e.to, e.age.to_bits())).collect();
+            let mut eb: Vec<(u32, u32)> =
+                net_b.edges_of(id).iter().map(|e| (e.to, e.age.to_bits())).collect();
+            ea.sort_unstable();
+            eb.sort_unstable();
+            assert_eq!(ea, eb, "unit {id} edges");
+        }
+        net_b.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn region_schedule_bit_identical_coarse_grid() {
+        region_batches_match(3, 8);
+    }
+
+    #[test]
+    fn region_schedule_bit_identical_fine_grid() {
+        region_batches_match(4, 64);
+    }
+
+    #[test]
+    fn region_schedule_single_region_degenerates() {
+        // regions = 1 (no map attached): exactly the pre-region behavior.
+        region_batches_match(3, 1);
+    }
+
     /// Same bit-parity harness for GNG — possible at all only because the
     /// lazy error decay removed the per-signal O(N) sweep that used to
     /// classify every GNG update as Structural. Exercises the pending-aware
@@ -650,8 +906,9 @@ mod tests {
 
     #[test]
     fn gwr_classify_agrees_with_update() {
-        // For random mature-network batches, a signal classified Adapt must
-        // produce an update with no insertions/removals and a no-op prune.
+        // For random mature-network batches: Adapt-classified signals must
+        // produce structure-free updates; Insert-classified signals must
+        // produce exactly one insertion and nothing else.
         let mesh = benchmark_mesh(BenchmarkShape::Blob, 20);
         let sampler = SurfaceSampler::new(&mesh);
         let mut rng = Rng::seed_from(3);
@@ -664,6 +921,7 @@ mod tests {
         fw.rebuild(gwr.net());
         let mut log = ChangeLog::default();
         let mut adapt_seen = 0;
+        let mut insert_seen = 0;
         let mut structural_seen = 0;
         for _ in 0..20_000 {
             let s = sampler.sample(&mut rng);
@@ -679,10 +937,19 @@ mod tests {
                         "Adapt-classified update changed structure"
                     );
                 }
+                UpdateKind::Insert => {
+                    insert_seen += 1;
+                    assert_eq!(log.inserted.len(), 1, "Insert must insert exactly once");
+                    assert!(
+                        log.removed.is_empty(),
+                        "Insert-classified update removed a unit"
+                    );
+                }
                 UpdateKind::Structural => structural_seen += 1,
             }
         }
         assert!(adapt_seen > 0, "classification never predicted Adapt");
+        assert!(insert_seen > 0, "classification never predicted Insert");
         assert!(structural_seen > 0, "classification never predicted Structural");
     }
 

@@ -26,6 +26,20 @@
 //!   the shared scalars in admission order, bit-identical to the
 //!   sequential driver by construction (see `executor` for the full
 //!   four-pass discipline).
+//!
+//! With the run's region partition attached (`regions` knob,
+//! [`executor::BatchExecutor::set_regions`]) the schedule additionally
+//! becomes **region-aware**: conflict domains are tracked per spatial
+//! region of [`crate::som::regions::RegionMap`] instead of per unit, and
+//! signals landing in disjoint region neighborhoods flow through the plan
+//! *and* the structural commit concurrently — insertion-only updates
+//! allocate their unit sequentially at admission (identical slab ids) and
+//! commit their edge work on the pool alongside the adapt plans, so
+//! insertions no longer serialize the concurrent commit. The sequential
+//! scalar replay stays global and sequential on purpose: it is the one
+//! place every order-sensitive f32 accumulation (QE, errors, the merged
+//! log) happens, which is what keeps any `(regions, update_threads,
+//! find_threads, queue_depth)` combination bit-identical to `Multi`.
 
 pub mod executor;
 pub mod locks;

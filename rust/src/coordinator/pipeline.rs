@@ -20,8 +20,9 @@
 //! pipelining, while an executor with `update_threads > 1` (built by
 //! `engine::run_convergence` on the run's shared worker pool) composes the
 //! Sample prefetch with the pooled plan pass and the concurrent commit —
-//! results are bit-identical for any executor thread count, so the knobs
-//! move wall time only.
+//! and, with a region map attached, with the region-aware schedule
+//! (deferred insert commits). Results are bit-identical for any executor
+//! thread or region count, so the knobs move wall time only.
 
 use std::sync::mpsc;
 use std::time::Instant;

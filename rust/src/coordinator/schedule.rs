@@ -1,5 +1,10 @@
 //! The parallelism schedule (paper §3.1): `m` = the least power of two
 //! strictly greater than the current unit count, capped.
+//!
+//! Interplay with the region schedule: a larger `m` spreads the batch's
+//! signals over more of the surface, so more of them land in pairwise
+//! disjoint region neighborhoods — the deferral window the region-aware
+//! executor exploits grows with the very batch size this schedule grows.
 
 /// Batch-size schedule for the multi-signal drivers.
 #[derive(Clone, Copy, Debug)]

@@ -18,7 +18,14 @@
 //! The batched drivers share one persistent [`WorkerPool`] per run (created
 //! in [`run_convergence`]): the `Parallel` and `Pipelined` executors plan
 //! and commit on it and `BatchRust` shards `find2_batch` signals across it
-//! (`find_threads`), all through work-stealing chunk claims.
+//! (`find_threads`), all through work-stealing chunk claims. They also
+//! share the run's optional region partition (`regions` knob, built in
+//! [`run_convergence`] over the sampler's bounding volume): `BatchRust`
+//! scans only each signal's region neighborhood (exact, global fallback)
+//! and the executors run the region-aware admission/plan/commit schedule
+//! in which insertion-only structural updates commit concurrently —
+//! bit-identical to `multi` for any region count
+//! (`rust/tests/executor_parity.rs`).
 //!
 //! The first four are the paper's experimental columns (§3.1). `pipelined`
 //! and `parallel` answer its future-work note ("the parallelization of the
@@ -54,7 +61,7 @@ use crate::mesh::{Mesh, SurfaceSampler};
 use crate::metrics::{Phase, PhaseClock, PhaseTimes};
 use crate::rng::Rng;
 use crate::runtime::{resolve_threads, WorkerPool};
-use crate::som::{ChangeLog, Gng, GrowingNetwork, Gwr, Soam, Winners};
+use crate::som::{ChangeLog, Gng, GrowingNetwork, Gwr, RegionMap, Soam, Winners};
 
 /// The paper's parallelism schedule (§3.1): "the level of parallelism m at
 /// each iteration … is set to the minimum power of two greater than the
@@ -266,6 +273,12 @@ pub fn make_findwinners(cfg: &RunConfig) -> Result<Box<dyn FindWinners>> {
 /// `Parallel`/`Pipelined` drivers' executor for the plan pass and the
 /// concurrent commit. Workers are created once here and live for the
 /// whole run — no driver spawns threads per flush.
+///
+/// It is also where the run's region partition (`cfg.regions > 1`) is
+/// built — one [`RegionMap`] over the sampler's bounding volume, shared by
+/// the Find-Winners region scan and the executors' region-aware schedule —
+/// for the same driver set as `find_threads` (the scan lives in
+/// `BatchRust`; pjrt scans inside the XLA executable).
 pub fn run_convergence(
     algo: &mut dyn GrowingNetwork,
     sampler: &SurfaceSampler,
@@ -287,12 +300,32 @@ pub fn run_convergence(
         Driver::Parallel | Driver::Pipelined => resolve_threads(cfg.update_threads),
         _ => 1,
     };
+    let region_map = match cfg.driver {
+        Driver::Multi | Driver::Pipelined | Driver::Parallel if cfg.regions > 1 => {
+            // Degenerate bounds collapse the grid to one region — in that
+            // case attach nothing (a one-region schedule would coarsen
+            // every conflict to "always", flushing per signal).
+            let map = RegionMap::new(sampler.bounds(), cfg.regions);
+            (map.region_count() > 1).then_some(map)
+        }
+        _ => None,
+    };
+    if let Some(map) = &region_map {
+        fw.attach_regions(map.clone());
+    }
     let pool = (find_threads > 1 || update_threads > 1)
         .then(|| Arc::new(WorkerPool::new(find_threads.max(update_threads))));
     if find_threads > 1 {
         let pool = pool.as_ref().expect("pool sized for find_threads");
         fw.attach_pool(Arc::clone(pool), find_threads);
     }
+    let make_executor = |pool: Option<Arc<WorkerPool>>| {
+        let mut exec = BatchExecutor::with_pool(update_threads, pool);
+        if let Some(map) = region_map.clone() {
+            exec.set_regions(map);
+        }
+        exec
+    };
     match cfg.driver {
         Driver::Pipelined => crate::coordinator::run_pipelined(
             algo,
@@ -301,7 +334,7 @@ pub fn run_convergence(
             &cfg.limits,
             rng,
             cfg.queue_depth,
-            BatchExecutor::with_pool(update_threads, pool),
+            make_executor(pool),
         ),
         Driver::Parallel => run_batched_loop(
             algo,
@@ -310,7 +343,7 @@ pub fn run_convergence(
             &cfg.limits,
             rng,
             "parallel",
-            BatchExecutor::with_pool(update_threads, pool),
+            make_executor(pool),
         ),
         Driver::Multi | Driver::Pjrt => run_multi_signal(algo, sampler, fw, &cfg.limits, rng),
         Driver::Single | Driver::Indexed => {
@@ -451,6 +484,39 @@ mod tests {
             let mut rng2 = Rng::seed_from(17);
             let b = run(&mesh, driver, &cfg, &mut rng2).unwrap();
             let label = format!("{} find={find_threads} upd={update_threads}", driver.name());
+            assert_eq!(a.units, b.units, "{label}");
+            assert_eq!(a.connections, b.connections, "{label}");
+            assert_eq!(a.signals, b.signals, "{label}");
+            assert_eq!(a.discarded, b.discarded, "{label}");
+            assert_eq!(a.iterations, b.iterations, "{label}");
+            assert_eq!(a.qe.to_bits(), b.qe.to_bits(), "{label}");
+        }
+    }
+
+    #[test]
+    fn regions_do_not_change_results() {
+        // The region partition gates both the Find Winners scan (exact
+        // with fallback) and the executor schedule (flush timing only) —
+        // any region count must reproduce the no-region run exactly, for
+        // the multi AND parallel drivers.
+        let mesh = benchmark_mesh(BenchmarkShape::Blob, 20);
+        let mut cfg = quick_cfg(BenchmarkShape::Blob);
+        let mut rng = Rng::seed_from(23);
+        let a = run(&mesh, Driver::Multi, &cfg, &mut rng).unwrap();
+        // (Pipelined is not a bit-replica of multi — its m-schedule lags a
+        // batch — so its invariance in `regions` is covered by
+        // rust/tests/executor_parity.rs instead.)
+        for (driver, regions, update_threads) in [
+            (Driver::Multi, 8usize, 1usize),
+            (Driver::Multi, 64, 1),
+            (Driver::Parallel, 8, 3),
+            (Driver::Parallel, 64, 0),
+        ] {
+            cfg.regions = regions;
+            cfg.update_threads = update_threads;
+            let mut rng2 = Rng::seed_from(23);
+            let b = run(&mesh, driver, &cfg, &mut rng2).unwrap();
+            let label = format!("{} regions={regions} upd={update_threads}", driver.name());
             assert_eq!(a.units, b.units, "{label}");
             assert_eq!(a.connections, b.connections, "{label}");
             assert_eq!(a.signals, b.signals, "{label}");

@@ -32,10 +32,10 @@ use std::sync::{Arc, Mutex};
 
 use crate::geometry::Vec3;
 use crate::runtime::WorkerPool;
-use crate::som::{ChangeLog, Network, Winners, DEAD_POS};
+use crate::som::{ChangeLog, Network, RegionGrid, RegionMap, Winners, DEAD_POS};
 
 use super::lanes::{self, LANES};
-use super::FindWinners;
+use super::{region_top2, FindWinners};
 
 /// Running-state sentinel: a signal's top-2 before any unit was merged.
 const PENDING: Winners =
@@ -70,6 +70,11 @@ pub struct BatchRust {
     /// inline).
     pool: Option<Arc<WorkerPool>>,
     shards: usize,
+    /// Region rosters for the `regions` knob: signals whose top-2 provably
+    /// lies inside their 3×3×3 region neighborhood skip the global scan
+    /// entirely ([`region_top2`]); the rest fall back to the tiles.
+    /// Maintained through the same sync contract as the tile cache.
+    grid: Option<RegionGrid>,
 }
 
 impl Default for BatchRust {
@@ -93,6 +98,7 @@ impl BatchRust {
             cached_live: 0,
             pool: None,
             shards: 1,
+            grid: None,
         }
     }
 
@@ -140,11 +146,19 @@ impl BatchRust {
     fn ensure_cache(&mut self, net: &Network) {
         // `sync`/`rebuild` clear the flag; capacity/live-count drift guards
         // against structural changes a caller applied without honoring the
-        // sync contract.
-        if !self.cache_valid
-            || self.cached_capacity != net.capacity()
-            || self.cached_live != net.len()
-        {
+        // sync contract. The region grid carries its own last-seen
+        // counters (advanced by its `sync`), so a violation is caught even
+        // when it lands *after* an honest sync already cleared the tile
+        // flag — while honest syncs keep the rosters incremental (no
+        // per-batch rebuild). Like the tile guard, pure position moves
+        // without a sync stay undetectable.
+        if let Some(grid) = &mut self.grid {
+            if grid.is_stale(net) {
+                grid.rebuild(net);
+            }
+        }
+        let drift = self.cached_capacity != net.capacity() || self.cached_live != net.len();
+        if !self.cache_valid || drift {
             self.rebuild_cache(net);
         }
     }
@@ -167,9 +181,15 @@ fn merge_push(w: &mut Winners, d: f32, id: u32) {
     }
 }
 
-/// Stream every cached tile over one shard of signals (tiles outer for
-/// cache reuse, exactly the staging pattern of the CUDA kernel).
+/// One shard of signals. With a region grid: resolve each signal from its
+/// region neighborhood when exact ([`region_top2`]), then stream the
+/// cached tiles over only the fallback signals. Without: stream every tile
+/// over every signal (tiles outer for cache reuse, exactly the staging
+/// pattern of the CUDA kernel).
+#[allow(clippy::too_many_arguments)] // one flat hot-path view per buffer
 fn scan_shard(
+    grid: Option<&RegionGrid>,
+    positions: &[Vec3],
     xs: &[f32],
     ys: &[f32],
     zs: &[f32],
@@ -178,6 +198,38 @@ fn scan_shard(
     signals: &[Vec3],
     out: &mut [Option<Winners>],
 ) {
+    if let Some(grid) = grid {
+        // Lazy: `Vec::new` does not allocate, so a shard whose signals all
+        // resolve locally costs nothing. Shards with fallbacks pay one
+        // small allocation per call — per-worker scratch reuse would save
+        // it but would have to thread buffers through the shard jobs;
+        // revisit if the microbench ever shows it.
+        let mut fallback: Vec<usize> = Vec::new();
+        for (k, s) in signals.iter().enumerate() {
+            match region_top2(grid, positions, *s) {
+                Some(w) => out[k] = Some(w),
+                None => fallback.push(k),
+            }
+        }
+        if fallback.is_empty() {
+            return;
+        }
+        for &(start, end) in tiles {
+            let (bx, by, bz) = (&xs[start..end], &ys[start..end], &zs[start..end]);
+            let bids = &ids[start..end];
+            for &k in &fallback {
+                let t = lanes::lane_block_top2(bx, by, bz, signals[k]);
+                let w = out[k].as_mut().unwrap();
+                if t.w1 != u32::MAX {
+                    merge_push(w, t.d1, bids[t.w1 as usize]);
+                }
+                if t.w2 != u32::MAX {
+                    merge_push(w, t.d2, bids[t.w2 as usize]);
+                }
+            }
+        }
+        return;
+    }
     for &(start, end) in tiles {
         let (bx, by, bz) = (&xs[start..end], &ys[start..end], &zs[start..end]);
         let bids = &ids[start..end];
@@ -227,9 +279,12 @@ impl FindWinners for BatchRust {
         if jobs > 1 && shards > 1 {
             let pool = pool.as_ref().unwrap();
             // Scoped handoff: each claimed index maps to exactly one
-            // (signals, out) chunk pair; the SoA cache is shared read-only.
+            // (signals, out) chunk pair; the SoA cache, the position
+            // mirror and the region rosters are shared read-only.
             let (xs, ys, zs) = (&self.xs, &self.ys, &self.zs);
             let (ids, tiles) = (&self.ids, &self.tiles);
+            let grid = self.grid.as_ref();
+            let positions = net.positions();
             let pairs: Vec<ShardJob<'_>> = signals
                 .chunks(chunk)
                 .zip(out.chunks_mut(chunk))
@@ -237,11 +292,21 @@ impl FindWinners for BatchRust {
                 .collect();
             pool.run_indexed(shards, pairs.len(), &|j| {
                 if let Some((sig, dst)) = pairs[j].lock().unwrap().take() {
-                    scan_shard(xs, ys, zs, ids, tiles, sig, dst);
+                    scan_shard(grid, positions, xs, ys, zs, ids, tiles, sig, dst);
                 }
             });
         } else {
-            scan_shard(&self.xs, &self.ys, &self.zs, &self.ids, &self.tiles, signals, out);
+            scan_shard(
+                self.grid.as_ref(),
+                net.positions(),
+                &self.xs,
+                &self.ys,
+                &self.zs,
+                &self.ids,
+                &self.tiles,
+                signals,
+                out,
+            );
         }
 
         for slot in out.iter_mut() {
@@ -252,19 +317,32 @@ impl FindWinners for BatchRust {
         }
     }
 
-    fn sync(&mut self, _net: &Network, changes: &ChangeLog) {
+    fn sync(&mut self, net: &Network, changes: &ChangeLog) {
         if !changes.is_empty() {
             self.cache_valid = false;
+            if let Some(grid) = &mut self.grid {
+                grid.sync(net, changes);
+            }
         }
     }
 
     fn rebuild(&mut self, net: &Network) {
+        if let Some(grid) = &mut self.grid {
+            grid.rebuild(net);
+        }
         self.rebuild_cache(net);
     }
 
     fn attach_pool(&mut self, pool: Arc<WorkerPool>, shards: usize) {
         self.shards = shards.max(1);
         self.pool = if self.shards > 1 { Some(pool) } else { None };
+    }
+
+    fn attach_regions(&mut self, map: RegionMap) {
+        // Rosters fill at the next `rebuild` (the drivers rebuild once
+        // after `init`); until then every signal falls back to the global
+        // scan, which is always exact.
+        self.grid = (map.region_count() > 1).then(|| RegionGrid::new(map));
     }
 }
 
@@ -374,6 +452,69 @@ mod tests {
             Scalar::new().find2(&net, Vec3::new(0.49, 0.5, 0.5)),
             "insert without sync must still be visible via the guard"
         );
+    }
+
+    #[test]
+    fn region_batch_identical_to_global_scan() {
+        use crate::geometry::Aabb;
+        let bounds = Aabb::new(Vec3::ZERO, Vec3::ONE);
+        let net = random_net(400, 61, 7);
+        let signals = random_signals(500, 62);
+        let mut base = Vec::new();
+        BatchRust::default().find2_batch(&net, &signals, &mut base);
+        for regions in [2usize, 8, 64, 343] {
+            let mut fw = BatchRust::default();
+            fw.attach_regions(RegionMap::new(bounds, regions));
+            fw.rebuild(&net);
+            let mut got = Vec::new();
+            fw.find2_batch(&net, &signals, &mut got);
+            assert_eq!(got, base, "regions {regions}");
+
+            // Composed with pool sharding: still bit-identical.
+            let mut fw = BatchRust::default();
+            fw.attach_regions(RegionMap::new(bounds, regions));
+            fw.attach_pool(Arc::new(WorkerPool::new(3)), 3);
+            fw.rebuild(&net);
+            let mut got = Vec::new();
+            fw.find2_batch(&net, &signals, &mut got);
+            assert_eq!(got, base, "regions {regions} sharded");
+        }
+    }
+
+    #[test]
+    fn region_rosters_follow_sync() {
+        use crate::geometry::Aabb;
+        // Drive moves (incl. boundary crossings), removals and slot-reusing
+        // insertions through the sync contract; the region path must stay
+        // exact against a fresh scalar scan after every merged log.
+        let mut net = random_net(120, 63, 0);
+        let mut fw = BatchRust::default();
+        fw.attach_regions(RegionMap::new(Aabb::new(Vec3::ZERO, Vec3::ONE), 27));
+        fw.rebuild(&net);
+        let mut scalar = Scalar::new();
+        for round in 0..6u64 {
+            let mut log = ChangeLog::default();
+            let ids: Vec<u32> = net.ids().collect();
+            let mover = ids[(round as usize * 7) % ids.len()];
+            let old = net.pos(mover);
+            net.set_pos(mover, Vec3::ONE - old); // mirror: crosses regions
+            log.moved.push((mover, old));
+            let gone = ids[(round as usize * 13 + 1) % ids.len()];
+            if gone != mover && net.len() > 2 {
+                let pos = net.pos(gone);
+                net.remove(gone);
+                log.removed.push((gone, pos));
+                let reborn = net.insert(Vec3::new(0.31 * round as f32 % 1.0, 0.5, 0.7), 0.1);
+                log.inserted.push(reborn);
+            }
+            fw.sync(&net, &log);
+            let signals = random_signals(64, 100 + round);
+            let mut got = Vec::new();
+            fw.find2_batch(&net, &signals, &mut got);
+            for (s, g) in signals.iter().zip(&got) {
+                assert_eq!(*g, scalar.find2(&net, *s), "round {round}");
+            }
+        }
     }
 
     #[test]

@@ -53,9 +53,10 @@ impl Top2 {
 
     /// Insert one candidate under the full lexicographic order (order of
     /// insertion does not matter — used by the horizontal reduce, where
-    /// lane candidates arrive in arbitrary id order).
+    /// lane candidates arrive in arbitrary id order, and by the
+    /// region-neighborhood scan, where roster order is arbitrary).
     #[inline]
-    fn lex_push(&mut self, d: f32, id: u32) {
+    pub fn lex_push(&mut self, d: f32, id: u32) {
         if lex_less(d, id, self.d1, self.w1) {
             self.d2 = self.d1;
             self.w2 = self.w1;

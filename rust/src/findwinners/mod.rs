@@ -6,7 +6,7 @@
 //! |---|---|---|---|
 //! | [`Scalar`] | one scan per signal | SoA mirror, lane-blocked ([`lanes`]) | single |
 //! | [`Indexed`] | spatial hash, 27-cell query, exhaustive fallback | AoS mirror | indexed |
-//! | [`BatchRust`] | batched scan, unit-tiled for cache reuse | cached SoA tiles, lane-blocked, optional [`crate::runtime::WorkerPool`] sharding (`find_threads`) | multi, pipelined, parallel |
+//! | [`BatchRust`] | batched scan, unit-tiled for cache reuse; optional region-neighborhood scan (`regions`, exact with global fallback) | cached SoA tiles, lane-blocked, optional [`crate::runtime::WorkerPool`] sharding (`find_threads`) | multi, pipelined, parallel |
 //! | `runtime::PjrtFindWinners` | AOT Pallas/XLA artifact via PJRT | VMEM tiles | pjrt |
 //!
 //! The first four driver columns are the paper's (§3.1); `pipelined` and
@@ -34,7 +34,7 @@ pub use scalar::Scalar;
 
 use crate::geometry::Vec3;
 use crate::runtime::WorkerPool;
-use crate::som::{ChangeLog, Network, Winners};
+use crate::som::{ChangeLog, Network, RegionGrid, RegionMap, Winners};
 
 /// Strategy for the Find Winners phase.
 pub trait FindWinners {
@@ -83,6 +83,55 @@ pub trait FindWinners {
     /// sharding is an implementation-private optimization and results must
     /// be identical with or without it.
     fn attach_pool(&mut self, _pool: Arc<WorkerPool>, _shards: usize) {}
+
+    /// Offer the run's region geometry (`regions` knob > 1): batched
+    /// implementations may then scan only a signal's region neighborhood,
+    /// falling back to their global scan whenever a top-2 candidate could
+    /// lie across a region boundary (see [`region_top2`]). Default:
+    /// ignored — like pool sharding, the region scan is exact by
+    /// construction and results must be identical with or without it.
+    fn attach_regions(&mut self, _map: RegionMap) {}
+}
+
+/// Region-neighborhood top-2: scan only the rosters of the 3×3×3 cell
+/// block around `signal`, merging candidates under the explicit
+/// lexicographic `(distance, id)` order (roster order is arbitrary, so the
+/// sequential scan's implicit tie-break must be made explicit — same trick
+/// as the lane kernel's horizontal reduce).
+///
+/// Returns `Some` **only when the local result is provably the global
+/// one**: the second-best local distance must be strictly below
+/// [`RegionMap::outside_dist2`], the f32 lower bound on any unscanned
+/// unit's distance — strict, so not even an exact distance tie with a
+/// lower-id unit outside the block can be missed. Otherwise (`None`) the
+/// caller falls back to its global scan; exactness never depends on the
+/// grid resolution, only the fallback rate does.
+///
+/// `positions` must be the network's dense position mirror (the rosters
+/// hold only live ids, so no aliveness test is needed here).
+#[inline]
+pub fn region_top2(grid: &RegionGrid, positions: &[Vec3], signal: Vec3) -> Option<Winners> {
+    let map = grid.map();
+    let (lo, hi) = map.neighborhood(signal);
+    let mut acc = lanes::Top2::EMPTY;
+    for cx in lo[0]..=hi[0] {
+        for cy in lo[1]..=hi[1] {
+            for cz in lo[2]..=hi[2] {
+                let region = map.index([cx, cy, cz]);
+                for &id in grid.roster(region) {
+                    let d = signal.dist2(positions[id as usize]);
+                    acc.lex_push(d, id);
+                }
+            }
+        }
+    }
+    // `d2 = +inf` (fewer than two local candidates) can never pass the
+    // strict test, so sparse neighborhoods fall back automatically.
+    if acc.d2 < map.outside_dist2(lo, hi, signal) {
+        acc.winners()
+    } else {
+        None
+    }
 }
 
 /// Shared exhaustive top-2 core: scans live slots in id order (lowest-index
@@ -179,6 +228,75 @@ mod tests {
             assert!(net.is_alive(w.w1));
             assert!(net.is_alive(w.w2));
         }
+    }
+
+    /// Satellite (PR 4): across random point clouds, region counts and
+    /// boundary-straddling signals, the region-neighborhood scan must
+    /// either fall back (`None`) or return the **bit-identical** top-2 of
+    /// the exhaustive scan — indices, distances and the lowest-index
+    /// tie-break included.
+    #[test]
+    fn prop_region_top2_bit_identical_to_exhaustive() {
+        use crate::geometry::Aabb;
+        use crate::proptest::{sized_usize, Prop};
+        use crate::rng::Rng;
+        use crate::som::{RegionGrid, RegionMap};
+
+        let total_exact = std::cell::Cell::new(0u64);
+        Prop::new(40, 0xA11CE).run(
+            |rng, size| {
+                let n = sized_usize(rng, size, 2, 400);
+                let regions = [1usize, 2, 3, 8, 27, 64, 125][rng.index(7)];
+                let kill = [0usize, 3, 5][rng.index(3)];
+                (rng.next_u64(), n, regions, kill)
+            },
+            |&(seed, n, regions, kill)| {
+                let net = random_net(n, seed, kill);
+                let map = RegionMap::new(Aabb::new(Vec3::ZERO, Vec3::ONE), regions);
+                let dims = map.dims();
+                let mut grid = RegionGrid::new(map);
+                grid.rebuild(&net);
+                grid.check_invariants(&net)?;
+                let mut rng = Rng::seed_from(seed ^ 0xBEEF);
+                for k in 0..120 {
+                    // Mix interior signals, signals snapped exactly onto
+                    // the split planes (boundary-straddling: ties across
+                    // the block edge), and out-of-bounds signals.
+                    let coord = |rng: &mut Rng, a: usize| match rng.below(5) {
+                        0 => {
+                            // Exactly on a plane: k · (extent / dims), the
+                            // map's own plane expression for the unit cube.
+                            let cell = 1.0f32 / dims[a] as f32;
+                            rng.index(dims[a] + 1) as f32 * cell
+                        }
+                        1 => rng.f32() * 3.0 - 1.0, // often out of bounds
+                        _ => rng.f32(),
+                    };
+                    let s = Vec3::new(coord(&mut rng, 0), coord(&mut rng, 1), coord(&mut rng, 2));
+                    let want = exhaustive_top2(&net, s);
+                    if let Some(got) = region_top2(&grid, net.positions(), s) {
+                        total_exact.set(total_exact.get() + 1);
+                        let Some(want) = want else {
+                            return Err(format!(
+                                "sig {k}: region scan found winners, exhaustive none"
+                            ));
+                        };
+                        if got.w1 != want.w1
+                            || got.w2 != want.w2
+                            || got.d1_sq.to_bits() != want.d1_sq.to_bits()
+                            || got.d2_sq.to_bits() != want.d2_sq.to_bits()
+                        {
+                            return Err(format!("sig {k} (regions {regions}): {got:?} != {want:?}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+        assert!(
+            total_exact.get() > 0,
+            "the region scan never resolved locally — the early exit is dead"
+        );
     }
 
     #[test]

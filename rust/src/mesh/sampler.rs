@@ -6,7 +6,7 @@
 //! the cumulative area table), then a uniform point inside it (square-root
 //! barycentric trick in `geometry::Triangle`).
 
-use crate::geometry::Vec3;
+use crate::geometry::{Aabb, Vec3};
 use crate::rng::Rng;
 
 use super::Mesh;
@@ -17,6 +17,10 @@ pub struct SurfaceSampler {
     /// Cumulative areas; `cdf[i]` = total area of faces `0..=i`.
     cdf: Vec<f64>,
     total_area: f64,
+    /// Bounding box of the sampled surface — every sample (and every unit
+    /// position derived from samples by convex combination) lies inside.
+    /// This is the bounding volume the `regions` partition cuts up.
+    bounds: Aabb,
 }
 
 impl SurfaceSampler {
@@ -31,11 +35,16 @@ impl SurfaceSampler {
             cdf.push(acc);
         }
         assert!(acc > 0.0, "cannot sample a zero-area mesh");
-        Self { triangles, cdf, total_area: acc }
+        Self { triangles, cdf, total_area: acc, bounds: mesh.bounds() }
     }
 
     pub fn total_area(&self) -> f64 {
         self.total_area
+    }
+
+    /// Bounding box of the surface being sampled.
+    pub fn bounds(&self) -> Aabb {
+        self.bounds
     }
 
     /// One uniform sample from the surface.

@@ -280,7 +280,10 @@ impl GrowingNetwork for Gng {
         }
         // Insertion schedule: the deferred adapts commit (and count) before
         // this signal applies, so it will be applied signal number
-        // `signals_seen + pending_commits + 1`.
+        // `signals_seen + pending_commits + 1`. GNG never classifies
+        // `Insert`: its scheduled insertion reads *global* state (the
+        // error max_by scan), so it cannot be confined to a winner
+        // neighborhood and always runs inline.
         if (self.signals_seen + pending_commits as u64 + 1) % self.params.lambda == 0 {
             return UpdateKind::Structural;
         }
@@ -575,6 +578,9 @@ mod tests {
                         log.inserted.is_empty() && log.removed.is_empty(),
                         "Adapt-classified GNG update changed structure"
                     );
+                }
+                UpdateKind::Insert => {
+                    panic!("GNG must never classify Insert (global insertion scan)")
                 }
                 UpdateKind::Structural => structural_seen += 1,
             }

@@ -12,7 +12,7 @@ use crate::rng::Rng;
 
 use super::network::{ChangeLog, Network, UnitId};
 use super::params::GwrParams;
-use super::{GrowingNetwork, QeTracker, UpdateKind, UpdatePlan, Winners};
+use super::{GrowingNetwork, PlanKind, QeTracker, UpdateKind, UpdatePlan, Winners};
 
 /// GWR algorithm state.
 pub struct Gwr {
@@ -121,12 +121,20 @@ impl Gwr {
         net.connect(a, b);
     }
 
-    /// Read-only mirror of [`Self::gwr_update`]'s branch structure: predicts
-    /// whether the update would take the insertion branch or whether the
-    /// post-aging edge prune could fire (either one is `Structural`).
-    /// Anything else is the pure adapt branch with a provably no-op prune —
-    /// the winner keeps at least the age-0 `w1`–`w2` edge, so no orphan
-    /// removal can happen either.
+    /// Read-only mirror of [`Self::gwr_update`]'s branch structure:
+    /// predicts which branch the update would take in the *current* state.
+    ///
+    /// - Insertion branch with a provably no-op post-insert prune →
+    ///   [`UpdateKind::Insert`]: the whole update is confined to
+    ///   `{w1, w2, new unit} ∪ N(w1)` (the winner keeps its fresh age-0
+    ///   edge to the new unit, so no orphan removal either) and splits
+    ///   into a sequential allocation + a deferrable edge commit. The
+    ///   `w1`–`w2` edge is exempt from the prune prediction here because
+    ///   the insertion branch *disconnects* it before the prune runs.
+    /// - Insertion branch whose prune could fire → `Structural`.
+    /// - Adapt branch with a provably no-op prune → `Adapt` (the winner
+    ///   keeps at least the age-0 `w1`–`w2` edge, so no orphan removal).
+    /// - Anything else (a possible prune, stale winners) → `Structural`.
     pub(super) fn gwr_classify(
         net: &Network,
         params: &GwrParams,
@@ -137,6 +145,15 @@ impl Gwr {
             // Degenerate (stale winners): let `update` discard it inline.
             return UpdateKind::Structural;
         }
+        // Prune prediction: `update` ages every edge of w1 by 1.0 and then
+        // drops edges older than max_age; the w1–w2 edge is exempt on
+        // *both* branches (the adapt branch resets its age to 0, the
+        // insertion branch disconnects it). Same float expression as the
+        // prune.
+        let will_prune = net
+            .edges_of(w.w1)
+            .iter()
+            .any(|e| e.to != w.w2 && e.age + 1.0 > params.adapt.max_age);
         let d1 = w.d1_sq.sqrt();
         let threshold = if per_unit_threshold {
             net.unit(w.w1).threshold
@@ -145,16 +162,13 @@ impl Gwr {
         };
         let habituated = params.hab.is_habituated(net.unit(w.w1).firing);
         if d1 > threshold && habituated && net.len() < params.max_units {
-            return UpdateKind::Structural; // insertion branch
-        }
-        // Prune prediction: `update` ages every edge of w1 by 1.0 and then
-        // drops edges older than max_age; the w1–w2 edge is exempt (connect
-        // resets it to age 0 first). Same float expression as the prune.
-        let will_prune = net
-            .edges_of(w.w1)
-            .iter()
-            .any(|e| e.to != w.w2 && e.age + 1.0 > params.adapt.max_age);
-        if will_prune {
+            // Insertion branch.
+            if will_prune {
+                UpdateKind::Structural
+            } else {
+                UpdateKind::Insert
+            }
+        } else if will_prune {
             UpdateKind::Structural
         } else {
             UpdateKind::Adapt
@@ -203,10 +217,40 @@ impl Gwr {
         plan.firing.push((w.w1, params.hab.fire_winner(hw)));
     }
 
+    /// Sequential half of an `Insert`-class update: allocate the new unit
+    /// now (slab-id order is admission order — identical ids to the
+    /// sequential driver by the free lists' global-LIFO property) and fill
+    /// `plan` with the edge work the concurrent commit applies later
+    /// ([`super::ShardWriter::commit_insert`]). The position and threshold
+    /// expressions are verbatim from [`Self::gwr_update`]'s insertion
+    /// branch, so the stored bits match the inline path exactly.
+    pub(super) fn gwr_begin_insert(
+        net: &mut Network,
+        params: &GwrParams,
+        signal: Vec3,
+        w: &Winners,
+        plan: &mut UpdatePlan,
+        per_unit_threshold: bool,
+    ) {
+        plan.clear();
+        plan.kind = PlanKind::Insert;
+        plan.w1 = w.w1;
+        plan.w2 = w.w2;
+        plan.d1_sq = w.d1_sq;
+        let pos = (net.pos(w.w1) + signal) * 0.5;
+        let new_threshold = if per_unit_threshold {
+            (net.unit(w.w1).threshold + net.unit(w.w2).threshold) * 0.5
+        } else {
+            params.insertion_threshold
+        };
+        plan.new_unit = net.insert(pos, new_threshold);
+    }
+
     /// Debug check shared by the GWR-family scalar replays: by the time
-    /// `commit_scalars` runs, [`super::ShardWriter::commit_adapt`] has
-    /// replayed the aging + connect, so an `Adapt` classification implies
-    /// no edge of the winner can be over age.
+    /// `commit_scalars` runs, [`super::ShardWriter::commit_adapt`] /
+    /// [`super::ShardWriter::commit_insert`] has
+    /// replayed the aging + connect, so an `Adapt`/`Insert` classification
+    /// implies no edge of the winner can be over age.
     pub(super) fn debug_check_no_prune(net: &Network, params: &GwrParams, plan: &UpdatePlan) {
         debug_assert!(
             net.edges_of(plan.w1)
@@ -262,6 +306,11 @@ impl GrowingNetwork for Gwr {
 
     fn plan_update(&self, signal: Vec3, w: &Winners, plan: &mut UpdatePlan) {
         Self::gwr_plan(&self.net, &self.params, signal, w, plan);
+    }
+
+    fn begin_insert(&mut self, signal: Vec3, w: &Winners, plan: &mut UpdatePlan) {
+        let params = self.params;
+        Self::gwr_begin_insert(&mut self.net, &params, signal, w, plan, false);
     }
 
     fn commit_scalars(&mut self, plan: &UpdatePlan, _log: &mut ChangeLog) {

@@ -1,17 +1,34 @@
-//! Growing self-organizing networks: the shared store, the three algorithms
-//! (GNG, GWR, SOAM) and the update-rule trait the drivers run against.
+//! Growing self-organizing networks: the shared store, the spatial region
+//! partition, the three algorithms (GNG, GWR, SOAM) and the update-rule
+//! trait the drivers run against.
 //!
 //! The split mirrors the paper's §2.1: a growing network is the *basic
 //! iteration* `Sample → Find Winners → Update` where Sample and Find Winners
 //! are algorithm-independent (they live in [`crate::engine`] /
 //! [`crate::findwinners`]) and Update is the algorithm: aging + competitive
 //! Hebbian edges + adaptation + insertion/removal, `O(1)` per signal.
+//!
+//! ## Region topology (what is per-region, what stays global)
+//!
+//! [`regions`] partitions the bounding volume into spatial cells. The
+//! partition is an *overlay*, never a source of truth:
+//!
+//! - **per-region**: the alive-unit rosters ([`regions::RegionGrid`]) that
+//!   let Find Winners scan only a signal's 3×3×3 cell neighborhood, and the
+//!   executor's conflict domains (signals whose touched regions are
+//!   disjoint flow through plan *and* structural commit concurrently);
+//! - **global**: the slab itself (unit ids, the sharded free lists and
+//!   their LIFO allocation order), the adjacency, the SoA mirrors, every
+//!   shared scalar (edge count, QE, GNG error/epoch) and the sequential
+//!   scalar replay — the bit-parity spine that keeps `regions = R` results
+//!   identical to `regions = 1` for every `R`.
 
 mod gng;
 mod gwr;
 pub mod habituation;
 mod network;
 mod params;
+pub mod regions;
 mod soam;
 
 pub use gng::Gng;
@@ -21,6 +38,7 @@ pub use network::{
     ChangeLog, Edge, Network, ShardWriter, Unit, UnitId, DEAD_POS, FREE_SHARDS, SOA_LANES,
 };
 pub use params::{AdaptParams, GngParams, GwrParams, SoamParams};
+pub use regions::{RegionGrid, RegionMap};
 pub use soam::{Soam, SoamState};
 
 use crate::geometry::Vec3;
@@ -46,21 +64,45 @@ pub enum UpdateKind {
     /// to `{w1, w2} ∪ N(w1)`; provably no unit insertion, no unit removal,
     /// no edge pruning. Safe to plan off-thread and commit later.
     Adapt,
+    /// Provably **insertion-only** structural update: exactly one new unit
+    /// is created, every other effect (edge aging, the Hebbian
+    /// connect/disconnect) stays inside `{w1, w2, new unit} ∪ N(w1)`, and
+    /// the post-insert prune is a no-op. The executor's region schedule
+    /// splits such updates into a *sequential allocation* at admission
+    /// ([`GrowingNetwork::begin_insert`] — slab ids keep their global LIFO
+    /// order) and a *deferred edge commit* that runs concurrently with
+    /// other touched-disjoint plans. Without a region map attached the
+    /// executor treats this exactly like [`UpdateKind::Structural`].
+    Insert,
     /// May insert or remove units or prune edges — or the algorithm cannot
     /// cheaply prove it won't. Must run inline on the driver thread (the
     /// conservative default).
     Structural,
 }
 
-/// A precomputed `Adapt`-class update: the pure-function half of the
-/// deferred-commit split used by the `Parallel` driver. Produced off-thread
-/// by [`GrowingNetwork::plan_update`]; its network writes are applied
-/// (possibly concurrently, touched-sets disjoint) by
-/// [`ShardWriter::commit_adapt`], and its shared-scalar residue is replayed
-/// in admission order by [`GrowingNetwork::commit_scalars`]. Buffers are
-/// reused across signals.
+/// What a deferred [`UpdatePlan`] commits as: a pure adaptation
+/// ([`ShardWriter::commit_adapt`]) or the edge half of an insertion-only
+/// update ([`ShardWriter::commit_insert`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PlanKind {
+    #[default]
+    Adapt,
+    Insert,
+}
+
+/// A deferred update: the pure-function half of the deferred-commit split
+/// used by the `Parallel` driver. `Adapt` plans are produced off-thread by
+/// [`GrowingNetwork::plan_update`]; `Insert` plans are produced on the
+/// driver thread by [`GrowingNetwork::begin_insert`] (which also performs
+/// the sequential unit allocation). Either way the network writes are
+/// applied (possibly concurrently, touched-sets disjoint) by
+/// [`ShardWriter::commit_adapt`] / [`ShardWriter::commit_insert`], and the
+/// shared-scalar residue is replayed in admission order by
+/// [`GrowingNetwork::commit_scalars`]. Buffers are reused across signals.
 #[derive(Clone, Debug, Default)]
 pub struct UpdatePlan {
+    /// Which commit routine applies this plan's network writes.
+    pub kind: PlanKind,
     pub w1: UnitId,
     pub w2: UnitId,
     pub d1_sq: f32,
@@ -73,21 +115,31 @@ pub struct UpdatePlan {
     /// filled by [`ShardWriter::commit_adapt`] so the sequential replay can
     /// emit the change-log entries without re-reading racing state.
     pub old_pos: Vec<Vec3>,
-    /// Whether the competitive-Hebbian connect created (1) or only
-    /// age-reset (0) the `w1`–`w2` edge — filled by `commit_adapt`, folded
-    /// into the shared edge counter during the sequential replay.
+    /// [`PlanKind::Insert`] only: the slab slot allocated (sequentially, at
+    /// admission) by [`GrowingNetwork::begin_insert`] — the deferred commit
+    /// wires its edges, the replay logs it as inserted.
+    pub new_unit: UnitId,
+    /// Undirected edges the commit created — filled by
+    /// `commit_adapt`/`commit_insert`, folded into the shared edge counter
+    /// during the sequential replay.
     pub new_edges: u32,
+    /// Undirected edges the commit removed (the insertion path's
+    /// `w1`–`w2` disconnect) — replayed like `new_edges`.
+    pub removed_edges: u32,
 }
 
 impl UpdatePlan {
     pub fn clear(&mut self) {
+        self.kind = PlanKind::Adapt;
         self.w1 = 0;
         self.w2 = 0;
         self.d1_sq = 0.0;
         self.moves.clear();
         self.firing.clear();
         self.old_pos.clear();
+        self.new_unit = 0;
         self.new_edges = 0;
+        self.removed_edges = 0;
     }
 }
 
@@ -162,9 +214,29 @@ pub trait GrowingNetwork: Send + Sync {
         unreachable!("plan_update on an algorithm that never classifies Adapt");
     }
 
+    /// Apply the *sequential half* of an [`UpdateKind::Insert`]-class
+    /// update now — allocate the new unit (slab ids must be assigned in
+    /// admission order, so this runs on the driver thread at the signal's
+    /// exact position in the permutation) — and fill `plan` with the
+    /// deferrable edge work ([`PlanKind::Insert`]). Called only after
+    /// [`Self::classify_update`] returned `Insert`, with no deferred plan
+    /// touching `{w1, w2} ∪ N(w1)` (the executor flushes first), so every
+    /// value read here equals the sequential driver's.
+    ///
+    /// The network writes left to the deferred commit
+    /// ([`ShardWriter::commit_insert`]): edge aging on the winner, the
+    /// net effect of the Hebbian connect + insertion-path disconnect of
+    /// `w1`–`w2`, and the new unit's two edges. The shared-scalar residue
+    /// (QE) stays in [`Self::commit_scalars`], and the executor replays
+    /// the change-log entry and the edge-count deltas in admission order.
+    fn begin_insert(&mut self, _signal: Vec3, _w: &Winners, _plan: &mut UpdatePlan) {
+        unreachable!("begin_insert on an algorithm that never classifies Insert");
+    }
+
     /// Replay the shared-scalar residue of a committed plan, in admission
     /// order on the driver thread. The network writes were already applied
-    /// by [`ShardWriter::commit_adapt`] (possibly on a worker thread) and
+    /// by [`ShardWriter::commit_adapt`] / [`ShardWriter::commit_insert`]
+    /// (possibly on a worker thread) and
     /// the change-log/edge-count replay is the executor's; what remains is
     /// the algorithm's own per-signal state — the QE stream, and for GNG
     /// the signal counter, the winner's lazily-decayed error and the decay

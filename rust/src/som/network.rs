@@ -315,6 +315,13 @@ impl Network {
         self.edges += n;
     }
 
+    /// Fold concurrently removed edges into the undirected edge count —
+    /// the sequential-replay half of [`ShardWriter::disconnect`].
+    pub(crate) fn note_edges_removed(&mut self, n: usize) {
+        debug_assert!(n <= self.edges, "removing {n} of {} edges", self.edges);
+        self.edges -= n;
+    }
+
     /// Create the edge `a`–`b` (age 0) or reset its age if present.
     /// This is the competitive-Hebbian step of the Update phase.
     pub fn connect(&mut self, a: UnitId, b: UnitId) {
@@ -593,8 +600,11 @@ impl Network {
 ///   removals, or reads — structural changes would reallocate the buffers
 ///   under the pointers);
 /// - concurrent calls must target disjoint unit sets: every write and read
-///   goes to `{w1, w2} ∪ N(w1)` of the plan being committed, and the
-///   executor only defers plans whose touched sets are mutually disjoint;
+///   goes to `{w1, w2} ∪ N(w1)` of the plan being committed (plus the
+///   freshly allocated `new_unit` for insert plans — which no other plan
+///   can touch, since it was not a winner of any same-batch signal), and
+///   the executor only defers plans whose touched sets are mutually
+///   disjoint;
 /// - all ids must be live slab slots (`< capacity()` and alive).
 ///
 /// Shared scalars (the undirected edge count, QE, GNG's error/epoch state)
@@ -714,6 +724,25 @@ impl ShardWriter {
         }
     }
 
+    /// Remove the edge `a`–`b` if present, both halves — the writer twin
+    /// of [`Network::disconnect`], except the shared undirected edge
+    /// counter is *not* decremented here (workers cannot touch it): the
+    /// return value says whether an edge was removed, for the sequential
+    /// replay to fold in via [`Network::note_edges_removed`].
+    pub fn disconnect(&self, a: UnitId, b: UnitId) -> bool {
+        unsafe {
+            let la = self.adj_mut(a);
+            let before = la.len();
+            la.retain(|e| e.to != b);
+            if la.len() != before {
+                self.adj_mut(b).retain(|e| e.to != a);
+                true
+            } else {
+                false
+            }
+        }
+    }
+
     /// Apply the network-write half of one `Adapt`-class plan: edge aging
     /// on the winner, the competitive-Hebbian connect, the precomputed
     /// position moves and firing levels. Algorithm-independent — every
@@ -728,6 +757,7 @@ impl ShardWriter {
     pub fn commit_adapt(&self, plan: &mut UpdatePlan) {
         self.age_edges_of(plan.w1, 1.0);
         plan.new_edges = u32::from(self.connect(plan.w1, plan.w2));
+        plan.removed_edges = 0;
         plan.old_pos.clear();
         for &(id, new_pos) in &plan.moves {
             plan.old_pos.push(self.pos(id));
@@ -736,6 +766,38 @@ impl ShardWriter {
         for &(id, firing) in &plan.firing {
             self.set_firing(id, firing);
         }
+    }
+
+    /// Apply the network-write half of one `Insert`-class plan. The unit
+    /// itself (`plan.new_unit`) was already allocated — position, firing,
+    /// threshold, mirrors — sequentially at admission by
+    /// `GrowingNetwork::begin_insert`; what remains is exactly the
+    /// insertion branch's edge work, whose final state is bit-identical to
+    /// the sequential `age → connect(w1,w2) → insert → connect(r,w1) →
+    /// connect(r,w2) → disconnect(w1,w2)` sequence:
+    ///
+    /// - aging first (the new unit's edges do not exist yet, so they are
+    ///   not aged — as in the sequential order);
+    /// - the sequential connect-then-disconnect of `w1`–`w2` nets to
+    ///   *removing the edge if it was present* (the age reset is destroyed
+    ///   by the removal), and `retain` preserves the relative order of the
+    ///   surviving adjacency entries, so a plain disconnect leaves the
+    ///   same lists;
+    /// - the new unit's adjacency is empty, so both connects always
+    ///   create.
+    ///
+    /// Fills `plan.new_edges`/`plan.removed_edges` for the edge-count
+    /// replay; the change-log entry is the executor's replay, the QE push
+    /// is `commit_scalars`.
+    pub fn commit_insert(&self, plan: &mut UpdatePlan) {
+        self.age_edges_of(plan.w1, 1.0);
+        plan.removed_edges = u32::from(self.disconnect(plan.w1, plan.w2));
+        let a = self.connect(plan.new_unit, plan.w1);
+        let b = self.connect(plan.new_unit, plan.w2);
+        debug_assert!(a && b, "fresh unit {} had edges", plan.new_unit);
+        plan.new_edges = 2;
+        plan.old_pos.clear();
+        debug_assert!(plan.moves.is_empty() && plan.firing.is_empty());
     }
 }
 
@@ -1041,6 +1103,69 @@ mod tests {
         raw.check_invariants().unwrap();
         // The SoA mirror followed the raw set_pos too.
         assert_eq!(raw.soa().0[c as usize], 9.0);
+    }
+
+    #[test]
+    fn shard_writer_commit_insert_matches_sequential_insertion() {
+        use crate::som::PlanKind;
+        // The raw insert commit must be bit-identical to the sequential
+        // insertion branch: age → connect(w1,w2) → insert → connect(r,w1)
+        // → connect(r,w2) → disconnect(w1,w2) — with and without a
+        // pre-existing w1–w2 edge.
+        for preconnected in [true, false] {
+            let build = |wired: bool| {
+                let mut n = Network::new();
+                let a = n.insert(v(0.0), 1.0);
+                let b = n.insert(v(1.0), 1.0);
+                let c = n.insert(v(2.0), 1.0);
+                if wired {
+                    n.connect(a, b);
+                }
+                n.connect(a, c);
+                (n, a, b, c)
+            };
+            let (mut safe, a, b, _c) = build(preconnected);
+            let (mut raw, ra, rb, _rc) = build(preconnected);
+            let mid = Vec3::new(0.5, 0.0, 0.0);
+
+            safe.age_edges_of(a, 1.0);
+            safe.connect(a, b);
+            let r = safe.insert(mid, 0.7);
+            safe.connect(r, a);
+            safe.connect(r, b);
+            safe.disconnect(a, b);
+
+            let r2 = raw.insert(mid, 0.7);
+            assert_eq!(r2, r);
+            let mut plan = UpdatePlan {
+                kind: PlanKind::Insert,
+                w1: ra,
+                w2: rb,
+                new_unit: r2,
+                ..UpdatePlan::default()
+            };
+            let w = raw.shard_writer();
+            w.commit_insert(&mut plan);
+            assert_eq!(plan.new_edges, 2);
+            assert_eq!(plan.removed_edges, u32::from(preconnected));
+            raw.note_edges_created(plan.new_edges as usize);
+            raw.note_edges_removed(plan.removed_edges as usize);
+
+            assert_eq!(safe.edge_count(), raw.edge_count(), "pre={preconnected}");
+            for id in 0..safe.capacity() as UnitId {
+                assert_eq!(safe.is_alive(id), raw.is_alive(id));
+                if !safe.is_alive(id) {
+                    continue;
+                }
+                assert_eq!(safe.pos(id), raw.pos(id));
+                let ea: Vec<(u32, u32)> =
+                    safe.edges_of(id).iter().map(|e| (e.to, e.age.to_bits())).collect();
+                let eb: Vec<(u32, u32)> =
+                    raw.edges_of(id).iter().map(|e| (e.to, e.age.to_bits())).collect();
+                assert_eq!(ea, eb, "edges of {id} (pre={preconnected})");
+            }
+            raw.check_invariants().unwrap();
+        }
     }
 
     #[test]

@@ -1,0 +1,639 @@
+//! Spatial region partition of the bounding volume — the structural step
+//! toward sharding Find Winners + Update across regions (and, later,
+//! across whole networks/backends).
+//!
+//! Two layers, split by what they need to stay exact:
+//!
+//! - [`RegionMap`] is pure, immutable geometry: the bounding volume cut
+//!   into `dims[0]·dims[1]·dims[2]` axis-aligned cells by per-axis plane
+//!   arrays. Cell membership is decided by **binary search over the stored
+//!   `f32` planes**, never by re-deriving the cell from a division — that
+//!   is what makes the neighborhood scan's early exit provable in `f32`
+//!   (see *Exactness* below). The map is cheap to clone and shared by both
+//!   consumers: the region-neighborhood Find Winners scan
+//!   ([`crate::findwinners::region_top2`]) and the executor's
+//!   region-granular conflict domains
+//!   ([`crate::coordinator::BatchExecutor::set_regions`]).
+//! - [`RegionGrid`] adds the mutable state: a per-region roster of alive
+//!   unit ids plus the inverse `slot → region` table, maintained
+//!   incrementally from the drivers' merged per-batch [`ChangeLog`]s
+//!   (insert / remove / move — reconciled against the network's *final*
+//!   state, the same contract `findwinners::Indexed` follows), with a
+//!   region-crossing counter for bookkeeping.
+//!
+//! ## Exactness
+//!
+//! The region scan reads only the rosters of the 3×3×3 cell block around a
+//! signal and must still return **exactly** the exhaustive scan's top-2
+//! (bit-identical distances, lowest-index tie-break). The argument hinges
+//! on two invariants of the plane-search cell assignment (`planes[a]` is
+//! non-decreasing; `cell = clamp(upper_bound(planes, x) - 1)`):
+//!
+//! 1. a position in a cell `c < lo` on some axis satisfies
+//!    `x < planes[lo]` (it is below every plane of the scanned block);
+//! 2. a position in a cell `c > hi` satisfies `x ≥ planes[hi + 1]`.
+//!
+//! For a signal `s` inside the block, `t = s − planes[lo]` (resp.
+//! `planes[hi+1] − s`) is a non-negative `f32` with `|s − x| ≥ t` for
+//! every unit `x` outside the block on that axis — rounding is monotone,
+//! so the ordering survives each correctly-rounded subtraction — and the
+//! squared-distance expression `dx·dx + dy·dy + dz·dz` only ever rounds
+//! sums of non-negative terms, so `dist²(s, x) ≥ t·t` holds in `f32`
+//! exactly ([`RegionMap::outside_dist2`] returns the minimum such `t·t`
+//! over the block's interior faces; faces at the grid border contribute
+//! `+inf` because border cells swallow everything beyond the bounds).
+//! Whenever the local second-best distance is `< outside_dist2` strictly,
+//! no unscanned unit can enter the top-2 — not even on an exact distance
+//! tie — and the local result is the global result. Otherwise the scan
+//! falls back to the exhaustive path; correctness never depends on the
+//! grid resolution, only the fallback rate does.
+
+use crate::geometry::{Aabb, Vec3};
+
+use super::network::{ChangeLog, Network, UnitId};
+
+/// `slot_region` value for slots that are dead (or beyond the tracked
+/// range): the unit is in no roster.
+pub const NO_REGION: u32 = u32::MAX;
+
+/// Hard cap on the region count (a runaway `regions` knob must not
+/// allocate an absurd roster table).
+const MAX_REGIONS: usize = 1 << 20;
+
+/// Immutable region geometry: per-axis split planes over a bounding
+/// volume. See the module docs for the exactness contract.
+#[derive(Clone, Debug)]
+pub struct RegionMap {
+    dims: [usize; 3],
+    /// `planes[a]` has `dims[a] + 1` non-decreasing entries; cell `c` on
+    /// axis `a` nominally spans `[planes[a][c], planes[a][c+1])`, with the
+    /// first and last cells extended to ±∞ by the clamped lookup.
+    planes: [Vec<f32>; 3],
+}
+
+impl RegionMap {
+    /// Cut `bounds` into at least `regions` cells (capped at
+    /// [`MAX_REGIONS`]): the axis with the largest current cell extent is
+    /// split one step at a time, so the cells stay near-isotropic for any
+    /// target count. Degenerate bounds collapse to a single region.
+    pub fn new(bounds: Aabb, regions: usize) -> Self {
+        let regions = regions.clamp(1, MAX_REGIONS);
+        let mut dims = [1usize; 3];
+        let ext = if bounds.is_empty() {
+            [0.0f32; 3]
+        } else {
+            let e = bounds.extent();
+            [e.x.max(0.0), e.y.max(0.0), e.z.max(0.0)]
+        };
+        if ext.iter().any(|v| v.is_finite() && *v > 0.0) {
+            while dims[0] * dims[1] * dims[2] < regions {
+                // Axis with the widest current cell; ties break to the
+                // lowest axis index (deterministic).
+                let mut axis = 0;
+                let mut widest = f32::MIN;
+                for a in 0..3 {
+                    let cell = ext[a] / dims[a] as f32;
+                    if cell.is_finite() && cell > widest {
+                        widest = cell;
+                        axis = a;
+                    }
+                }
+                dims[axis] += 1;
+            }
+        }
+        let min = if bounds.is_empty() { Vec3::ZERO } else { bounds.min };
+        let lo = [min.x, min.y, min.z];
+        let planes: [Vec<f32>; 3] = std::array::from_fn(|a| {
+            let cell = ext[a] / dims[a] as f32;
+            (0..=dims[a]).map(|k| lo[a] + k as f32 * cell).collect()
+        });
+        Self { dims, planes }
+    }
+
+    /// Total number of regions (`≥ 1`).
+    pub fn region_count(&self) -> usize {
+        self.dims[0] * self.dims[1] * self.dims[2]
+    }
+
+    /// Per-axis cell counts.
+    pub fn dims(&self) -> [usize; 3] {
+        self.dims
+    }
+
+    /// Cell index on one axis: `upper_bound(planes, x) - 1`, clamped into
+    /// `[0, dims - 1]` so out-of-bounds positions land in a border cell
+    /// (growing networks adapt toward surface signals, but an f32 step can
+    /// overshoot the bounds by an ulp).
+    #[inline]
+    fn axis_cell(&self, a: usize, x: f32) -> usize {
+        let pp = self.planes[a].partition_point(|p| *p <= x);
+        pp.saturating_sub(1).min(self.dims[a] - 1)
+    }
+
+    /// Flatten per-axis cell coordinates to a region id.
+    #[inline]
+    pub fn index(&self, c: [usize; 3]) -> u32 {
+        ((c[0] * self.dims[1] + c[1]) * self.dims[2] + c[2]) as u32
+    }
+
+    /// Region containing `p` (total: every position maps somewhere).
+    #[inline]
+    pub fn region_of(&self, p: Vec3) -> u32 {
+        self.index([
+            self.axis_cell(0, p.x),
+            self.axis_cell(1, p.y),
+            self.axis_cell(2, p.z),
+        ])
+    }
+
+    /// Per-axis `[lo, hi]` cell ranges of the 3×3×3 neighborhood block
+    /// around `p`'s cell, clamped to the grid.
+    #[inline]
+    pub fn neighborhood(&self, p: Vec3) -> ([usize; 3], [usize; 3]) {
+        let c = [
+            self.axis_cell(0, p.x),
+            self.axis_cell(1, p.y),
+            self.axis_cell(2, p.z),
+        ];
+        let lo = [
+            c[0].saturating_sub(1),
+            c[1].saturating_sub(1),
+            c[2].saturating_sub(1),
+        ];
+        let hi = [
+            (c[0] + 1).min(self.dims[0] - 1),
+            (c[1] + 1).min(self.dims[1] - 1),
+            (c[2] + 1).min(self.dims[2] - 1),
+        ];
+        (lo, hi)
+    }
+
+    /// Lower bound (in exact `f32`, see the module docs) on the squared
+    /// distance from `s` — which must lie inside the block — to any
+    /// position whose cell lies outside the block `[lo, hi]`. Faces at the
+    /// grid border contribute `+inf` (border cells extend to infinity).
+    pub fn outside_dist2(&self, lo: [usize; 3], hi: [usize; 3], s: Vec3) -> f32 {
+        let sv = [s.x, s.y, s.z];
+        let mut best = f32::INFINITY;
+        for a in 0..3 {
+            if lo[a] > 0 {
+                let t = (sv[a] - self.planes[a][lo[a]]).max(0.0);
+                best = best.min(t * t);
+            }
+            if hi[a] + 1 < self.dims[a] {
+                let t = (self.planes[a][hi[a] + 1] - sv[a]).max(0.0);
+                best = best.min(t * t);
+            }
+        }
+        best
+    }
+}
+
+/// Region grid with per-region alive-unit rosters (see module docs).
+#[derive(Clone, Debug)]
+pub struct RegionGrid {
+    map: RegionMap,
+    /// `rosters[r]` holds the alive unit ids currently assigned to region
+    /// `r`, in arbitrary order (the scan merges candidates under the
+    /// explicit lexicographic order, so roster order never matters).
+    rosters: Vec<Vec<UnitId>>,
+    /// Inverse table: the region each slab slot is rostered in
+    /// ([`NO_REGION`] for dead slots).
+    slot_region: Vec<u32>,
+    /// How many roster moves crossed a region boundary (a live unit
+    /// reassigned from one region to another) — the region-crossing
+    /// bookkeeping used by benches and diagnostics.
+    crossings: u64,
+    /// Slab capacity / live count as of the last `rebuild`/`sync` — the
+    /// staleness guard for callers that mutate the network structurally
+    /// without honoring the sync contract (see [`Self::is_stale`]).
+    seen_capacity: usize,
+    seen_live: usize,
+    /// Reused id scratch for `sync` (dedup of the merged change log).
+    scratch: Vec<UnitId>,
+}
+
+impl RegionGrid {
+    pub fn new(map: RegionMap) -> Self {
+        let regions = map.region_count();
+        Self {
+            map,
+            rosters: vec![Vec::new(); regions],
+            slot_region: Vec::new(),
+            crossings: 0,
+            seen_capacity: 0,
+            seen_live: 0,
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Has the network changed structurally since this grid last saw it
+    /// (`rebuild`/`sync`)? True means some caller violated the sync
+    /// contract — the rosters can no longer be trusted and must be
+    /// rebuilt. The same best-effort guard the tile cache uses: pure
+    /// position moves without a sync stay undetectable for both.
+    pub fn is_stale(&self, net: &Network) -> bool {
+        self.seen_capacity != net.capacity() || self.seen_live != net.len()
+    }
+
+    /// The shared geometry.
+    pub fn map(&self) -> &RegionMap {
+        &self.map
+    }
+
+    /// Roster of one region (alive unit ids, arbitrary order).
+    #[inline]
+    pub fn roster(&self, region: u32) -> &[UnitId] {
+        &self.rosters[region as usize]
+    }
+
+    /// Live units whose roster assignment crossed a region boundary so far.
+    pub fn crossings(&self) -> u64 {
+        self.crossings
+    }
+
+    /// Rebuild every roster from scratch (after `init`, or as the defense
+    /// path when a caller mutated the network without honoring the sync
+    /// contract). Does not count crossings.
+    pub fn rebuild(&mut self, net: &Network) {
+        for r in &mut self.rosters {
+            r.clear();
+        }
+        self.slot_region.clear();
+        self.slot_region.resize(net.capacity(), NO_REGION);
+        for id in net.ids() {
+            let r = self.map.region_of(net.pos(id));
+            self.rosters[r as usize].push(id);
+            self.slot_region[id as usize] = r;
+        }
+        self.seen_capacity = net.capacity();
+        self.seen_live = net.len();
+    }
+
+    /// Apply one merged per-batch change log: every unit mentioned in any
+    /// list is reconciled against the network's **final** state (a unit may
+    /// appear several times and in several lists — moved twice, moved then
+    /// removed, removed with its slot reused by a later insert).
+    pub fn sync(&mut self, net: &Network, changes: &ChangeLog) {
+        let mut ids = std::mem::take(&mut self.scratch);
+        ids.clear();
+        ids.extend(changes.moved.iter().map(|&(id, _)| id));
+        ids.extend(changes.inserted.iter().copied());
+        ids.extend(changes.removed.iter().map(|&(id, _)| id));
+        ids.sort_unstable();
+        ids.dedup();
+        if self.slot_region.len() < net.capacity() {
+            self.slot_region.resize(net.capacity(), NO_REGION);
+        }
+        for &id in &ids {
+            self.reconcile(net, id);
+        }
+        self.scratch = ids;
+        self.seen_capacity = net.capacity();
+        self.seen_live = net.len();
+    }
+
+    /// Reconcile one slot against the network's current state.
+    fn reconcile(&mut self, net: &Network, id: UnitId) {
+        let i = id as usize;
+        debug_assert!(i < self.slot_region.len(), "unsized slot {id}");
+        let want = if net.is_alive(id) {
+            self.map.region_of(net.pos(id))
+        } else {
+            NO_REGION
+        };
+        let have = self.slot_region[i];
+        if have == want {
+            return;
+        }
+        if have != NO_REGION {
+            let roster = &mut self.rosters[have as usize];
+            if let Some(at) = roster.iter().position(|&u| u == id) {
+                roster.swap_remove(at);
+            } else {
+                debug_assert!(false, "unit {id} missing from roster {have}");
+            }
+            if want != NO_REGION {
+                self.crossings += 1;
+            }
+        }
+        if want != NO_REGION {
+            self.rosters[want as usize].push(id);
+        }
+        self.slot_region[i] = want;
+    }
+
+    /// Roster invariants (the region analogue of
+    /// [`Network::check_invariants`], which cannot see this grid): every
+    /// live unit rostered exactly once, in the region of its current
+    /// position; no dead, duplicate, foreign or leaked entries; the inverse
+    /// table consistent with the rosters.
+    pub fn check_invariants(&self, net: &Network) -> Result<(), String> {
+        if self.rosters.len() != self.map.region_count() {
+            return Err(format!(
+                "{} rosters != {} regions",
+                self.rosters.len(),
+                self.map.region_count()
+            ));
+        }
+        if self.slot_region.len() < net.capacity() {
+            return Err(format!(
+                "slot_region len {} < slab capacity {}",
+                self.slot_region.len(),
+                net.capacity()
+            ));
+        }
+        let mut seen = std::collections::HashSet::new();
+        let mut total = 0usize;
+        for (r, roster) in self.rosters.iter().enumerate() {
+            for &id in roster {
+                total += 1;
+                if !net.is_alive(id) {
+                    return Err(format!("dead unit {id} in roster {r}"));
+                }
+                if !seen.insert(id) {
+                    return Err(format!("unit {id} rostered twice"));
+                }
+                let want = self.map.region_of(net.pos(id));
+                if want as usize != r {
+                    return Err(format!(
+                        "unit {id} rostered in {r} but positioned in {want}"
+                    ));
+                }
+                if self.slot_region[id as usize] != r as u32 {
+                    return Err(format!(
+                        "slot_region[{id}] = {} but rostered in {r}",
+                        self.slot_region[id as usize]
+                    ));
+                }
+            }
+        }
+        if total != net.len() {
+            return Err(format!("{total} rostered units != {} live (leak)", net.len()));
+        }
+        for (i, &r) in self.slot_region.iter().enumerate() {
+            if r == NO_REGION {
+                if net.is_alive(i as UnitId) {
+                    return Err(format!("live unit {i} has NO_REGION"));
+                }
+            } else if !net.is_alive(i as UnitId) {
+                return Err(format!("dead slot {i} stamped with region {r}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn cube() -> Aabb {
+        Aabb::new(Vec3::ZERO, Vec3::ONE)
+    }
+
+    fn random_net(n: usize, seed: u64, kill_every: usize) -> Network {
+        let mut rng = Rng::seed_from(seed);
+        let mut net = Network::new();
+        let mut ids = Vec::new();
+        for _ in 0..n {
+            ids.push(net.insert(Vec3::new(rng.f32(), rng.f32(), rng.f32()), 0.1));
+        }
+        if kill_every > 0 {
+            for (k, &id) in ids.iter().enumerate() {
+                if k % kill_every == kill_every - 1 && net.len() > 2 {
+                    net.remove(id);
+                }
+            }
+        }
+        net
+    }
+
+    #[test]
+    fn map_reaches_target_and_stays_near_isotropic() {
+        for regions in [1usize, 2, 3, 8, 27, 64, 100, 1000] {
+            let map = RegionMap::new(cube(), regions);
+            assert!(map.region_count() >= regions, "target {regions}");
+            assert!(map.region_count() <= 2 * regions.max(1), "overshoot {regions}");
+            let d = map.dims();
+            let (lo, hi) = (d.iter().min().copied().unwrap(), d.iter().max().copied().unwrap());
+            // Greedy widest-axis splitting on a cube never lets one axis
+            // run more than one split ahead.
+            assert!(hi - lo <= 1, "dims {d:?} for target {regions}");
+        }
+    }
+
+    #[test]
+    fn degenerate_bounds_collapse_to_one_region() {
+        assert_eq!(RegionMap::new(Aabb::EMPTY, 64).region_count(), 1);
+        let flat = Aabb::new(Vec3::ZERO, Vec3::new(1.0, 0.0, 0.0));
+        let map = RegionMap::new(flat, 8);
+        // Only the x axis has extent: every split lands there.
+        assert_eq!(map.dims(), [8, 1, 1]);
+        let point = Aabb::new(Vec3::ONE, Vec3::ONE);
+        assert_eq!(RegionMap::new(point, 16).region_count(), 1);
+    }
+
+    #[test]
+    fn region_of_is_total_and_clamps() {
+        let map = RegionMap::new(cube(), 27);
+        let n = map.region_count() as u32;
+        let mut rng = Rng::seed_from(5);
+        for _ in 0..2000 {
+            // Include far-out-of-bounds and boundary-ish points.
+            let p = Vec3::new(
+                rng.f32() * 4.0 - 1.5,
+                rng.f32() * 4.0 - 1.5,
+                rng.f32() * 4.0 - 1.5,
+            );
+            assert!(map.region_of(p) < n);
+        }
+        assert!(map.region_of(Vec3::splat(f32::INFINITY)) < n);
+        assert!(map.region_of(Vec3::splat(f32::NEG_INFINITY)) < n);
+        assert!(map.region_of(Vec3::splat(f32::NAN)) < n, "NaN maps somewhere");
+    }
+
+    #[test]
+    fn neighborhood_contains_own_cell_and_clamps() {
+        let map = RegionMap::new(cube(), 64);
+        let mut rng = Rng::seed_from(7);
+        for _ in 0..500 {
+            let p = Vec3::new(rng.f32(), rng.f32(), rng.f32());
+            let (lo, hi) = map.neighborhood(p);
+            let r = map.region_of(p);
+            let d = map.dims();
+            // Recover per-axis coords of r and check block membership.
+            let c = [
+                r as usize / (d[1] * d[2]),
+                (r as usize / d[2]) % d[1],
+                r as usize % d[2],
+            ];
+            for a in 0..3 {
+                assert!(lo[a] <= c[a] && c[a] <= hi[a]);
+                assert!(hi[a] < d[a]);
+                assert!(hi[a] - lo[a] <= 2);
+            }
+        }
+    }
+
+    #[test]
+    fn outside_dist2_lower_bounds_out_of_block_units() {
+        // The load-bearing property: for every unit in a cell outside the
+        // block, dist²(s, unit) >= outside_dist2 — in f32, not just in
+        // reals. Exercised with points ON the split planes.
+        let map = RegionMap::new(cube(), 64);
+        let mut rng = Rng::seed_from(11);
+        for _ in 0..300 {
+            let snap = |rng: &mut Rng| {
+                let raw = rng.f32();
+                if rng.below(4) == 0 {
+                    // Snap to a plane-aligned coordinate (boundary case).
+                    (raw * 4.0).floor() / 4.0
+                } else {
+                    raw
+                }
+            };
+            let s = Vec3::new(snap(&mut rng), snap(&mut rng), snap(&mut rng));
+            let (lo, hi) = map.neighborhood(s);
+            let bound = map.outside_dist2(lo, hi, s);
+            for _ in 0..64 {
+                let u = Vec3::new(snap(&mut rng), snap(&mut rng), snap(&mut rng));
+                let r = map.region_of(u);
+                let d = map.dims();
+                let c = [
+                    r as usize / (d[1] * d[2]),
+                    (r as usize / d[2]) % d[1],
+                    r as usize % d[2],
+                ];
+                let inside = (0..3).all(|a| lo[a] <= c[a] && c[a] <= hi[a]);
+                if !inside {
+                    assert!(
+                        s.dist2(u) >= bound,
+                        "unit {u:?} outside block but closer ({} < {bound}) to {s:?}",
+                        s.dist2(u)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rebuild_and_invariants() {
+        let net = random_net(200, 3, 7);
+        let mut grid = RegionGrid::new(RegionMap::new(cube(), 27));
+        grid.rebuild(&net);
+        grid.check_invariants(&net).unwrap();
+        assert_eq!(grid.crossings(), 0);
+        let total: usize = (0..grid.map().region_count())
+            .map(|r| grid.roster(r as u32).len())
+            .sum();
+        assert_eq!(total, net.len());
+    }
+
+    #[test]
+    fn sync_reconciles_merged_logs() {
+        let mut net = random_net(64, 9, 0);
+        let mut grid = RegionGrid::new(RegionMap::new(cube(), 27));
+        grid.rebuild(&net);
+
+        // One merged log: a move within the cell, a boundary-crossing move,
+        // a removal, a removal whose slot is reused, and a fresh insert.
+        let ids: Vec<UnitId> = net.ids().collect();
+        let mut log = ChangeLog::default();
+
+        let stay = ids[0];
+        let old = net.pos(stay);
+        net.set_pos(stay, old); // no-op move (same region by construction)
+        log.moved.push((stay, old));
+
+        let cross = ids[1];
+        let old = net.pos(cross);
+        net.set_pos(cross, Vec3::ONE - old); // mirror: almost surely crosses
+        log.moved.push((cross, old));
+
+        let gone = ids[2];
+        let pos = net.pos(gone);
+        net.remove(gone);
+        log.removed.push((gone, pos));
+
+        let reused_src = ids[3];
+        let pos = net.pos(reused_src);
+        net.remove(reused_src);
+        log.removed.push((reused_src, pos));
+        let reborn = net.insert(Vec3::new(0.9, 0.9, 0.9), 0.1);
+        assert_eq!(reborn, reused_src, "slot reuse");
+        log.inserted.push(reborn);
+
+        let fresh = net.insert(Vec3::new(0.05, 0.5, 0.95), 0.1);
+        log.inserted.push(fresh);
+
+        grid.sync(&net, &log);
+        grid.check_invariants(&net).unwrap();
+        assert!(!net.is_alive(gone));
+        assert_eq!(grid.slot_region[gone as usize], NO_REGION, "removed unit left a roster entry");
+        // A second sync of the same (now stale) log must be a no-op.
+        let crossings = grid.crossings();
+        grid.sync(&net, &log);
+        grid.check_invariants(&net).unwrap();
+        assert_eq!(grid.crossings(), crossings);
+    }
+
+    #[test]
+    fn crossings_count_boundary_moves_only() {
+        let mut net = Network::new();
+        let a = net.insert(Vec3::new(0.1, 0.1, 0.1), 0.1);
+        let b = net.insert(Vec3::new(0.9, 0.9, 0.9), 0.1);
+        let mut grid = RegionGrid::new(RegionMap::new(cube(), 8));
+        grid.rebuild(&net);
+
+        // In-region wiggle: no crossing.
+        let mut log = ChangeLog::default();
+        let old = net.pos(a);
+        net.set_pos(a, Vec3::new(0.12, 0.1, 0.1));
+        log.moved.push((a, old));
+        grid.sync(&net, &log);
+        assert_eq!(grid.crossings(), 0);
+
+        // Boundary-crossing move: one crossing.
+        let mut log = ChangeLog::default();
+        let old = net.pos(b);
+        net.set_pos(b, Vec3::new(0.1, 0.9, 0.9));
+        log.moved.push((b, old));
+        grid.sync(&net, &log);
+        assert_eq!(grid.crossings(), 1);
+        grid.check_invariants(&net).unwrap();
+    }
+
+    #[test]
+    fn check_invariants_rejects_corruption() {
+        let net = random_net(32, 21, 5);
+        let build = || {
+            let mut g = RegionGrid::new(RegionMap::new(cube(), 27));
+            g.rebuild(&net);
+            g
+        };
+
+        // Duplicate roster entry.
+        let mut g = build();
+        let id = net.ids().next().unwrap();
+        let r = g.slot_region[id as usize];
+        g.rosters[r as usize].push(id);
+        assert!(g.check_invariants(&net).unwrap_err().contains("twice"));
+
+        // Entry in a foreign roster.
+        let mut g = build();
+        let foreign = (r as usize + 1) % g.map().region_count();
+        let at = g.rosters[r as usize].iter().position(|&u| u == id).unwrap();
+        g.rosters[r as usize].swap_remove(at);
+        g.rosters[foreign].push(id);
+        let err = g.check_invariants(&net).unwrap_err();
+        assert!(err.contains("positioned in") || err.contains("slot_region"), "{err}");
+
+        // Leaked (missing) unit.
+        let mut g = build();
+        let at = g.rosters[r as usize].iter().position(|&u| u == id).unwrap();
+        g.rosters[r as usize].swap_remove(at);
+        assert!(g.check_invariants(&net).unwrap_err().contains("leak"));
+    }
+}

@@ -239,6 +239,18 @@ impl GrowingNetwork for Soam {
         Gwr::gwr_plan(&self.net, &self.gwr_view, signal, w, plan);
     }
 
+    fn begin_insert(&mut self, signal: Vec3, w: &Winners, plan: &mut UpdatePlan) {
+        let view = self.gwr_view;
+        Gwr::gwr_begin_insert(
+            &mut self.net,
+            &view,
+            signal,
+            w,
+            plan,
+            true, // per-unit thresholds: the SOAM LFS mechanism
+        );
+    }
+
     fn commit_scalars(&mut self, plan: &UpdatePlan, _log: &mut ChangeLog) {
         Gwr::debug_check_no_prune(&self.net, &self.gwr_view, plan);
         self.qe.push(plan.d1_sq);

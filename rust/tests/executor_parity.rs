@@ -16,7 +16,17 @@
 //!   commit, and deterministic slab-id assignment on the sharded free
 //!   lists);
 //! - `Driver::Pipelined` must be invariant in `update_threads` for any
-//!   `queue_depth` (the prefetch composed with the pooled Update split).
+//!   `queue_depth` (the prefetch composed with the pooled Update split);
+//! - with `regions > 1` (PR 4) the region-sharded schedule — the
+//!   region-neighborhood Find Winners scan plus the executor's
+//!   region-granular conflict domains and deferred insert commits — must
+//!   be bit-identical to `Multi` for any `(regions, update_threads,
+//!   find_threads, queue_depth)` combination.
+//!
+//! The CI correctness matrix injects extra combinations through
+//! `MSGSN_TEST_UPDATE_THREADS` / `MSGSN_TEST_FIND_THREADS` /
+//! `MSGSN_TEST_REGIONS` / `MSGSN_TEST_QUEUE_DEPTH` (see
+//! `.github/workflows/ci.yml`); unset, the in-repo combinations run alone.
 
 use msgsn::config::Limits;
 use msgsn::coordinator::LockTable;
@@ -142,6 +152,23 @@ fn blob_sampler() -> SurfaceSampler {
     SurfaceSampler::new(&benchmark_mesh(BenchmarkShape::Blob, 20))
 }
 
+/// One knob of the CI correctness matrix (unset / unparsable = None).
+fn env_knob(name: &str) -> Option<usize> {
+    std::env::var(name).ok()?.parse().ok()
+}
+
+/// Extra `(update_threads, find_threads, regions)` combination injected by
+/// the CI matrix; unset knobs default to the sequential value.
+fn env_combo() -> Option<(usize, usize, usize)> {
+    let upd = env_knob("MSGSN_TEST_UPDATE_THREADS");
+    let find = env_knob("MSGSN_TEST_FIND_THREADS");
+    let regions = env_knob("MSGSN_TEST_REGIONS");
+    if upd.is_none() && find.is_none() && regions.is_none() {
+        return None;
+    }
+    Some((upd.unwrap_or(1), find.unwrap_or(1), regions.unwrap_or(1)))
+}
+
 #[test]
 fn multi_through_executor_matches_pre_refactor_reference() {
     for seed in [1u64, 9, 42] {
@@ -232,10 +259,23 @@ fn pooled_plan_and_sharded_find_match_multi_bitwise() {
     let mut rng_a = Rng::seed_from(15);
     let a = run_multi_signal(&mut soam_a, &sampler, &mut fw_a, &cfg.limits, &mut rng_a);
 
-    for (update_threads, find_threads) in [(1usize, 2usize), (3, 7), (2, 2), (0, 0)] {
+    let mut combos = vec![
+        (1usize, 2usize, 1usize),
+        (3, 7, 1),
+        (2, 2, 1),
+        (0, 0, 1),
+        // PR 4 acceptance: the region-sharded schedule is bit-identical
+        // for any (regions, update_threads, find_threads).
+        (1, 1, 8),
+        (3, 2, 27),
+        (0, 0, 64),
+    ];
+    combos.extend(env_combo());
+    for (update_threads, find_threads, regions) in combos {
         cfg.driver = Driver::Parallel;
         cfg.update_threads = update_threads;
         cfg.find_threads = find_threads;
+        cfg.regions = regions;
         let mut soam_b = Soam::new(SoamParams {
             insertion_threshold: 0.16,
             ..SoamParams::default()
@@ -243,7 +283,7 @@ fn pooled_plan_and_sharded_find_match_multi_bitwise() {
         let mut fw_b = BatchRust::default();
         let mut rng_b = Rng::seed_from(15);
         let b = run_convergence(&mut soam_b, &sampler, &mut fw_b, &cfg, &mut rng_b);
-        let label = format!("upd={update_threads} find={find_threads}");
+        let label = format!("upd={update_threads} find={find_threads} regions={regions}");
         assert_eq!(a.iterations, b.iterations, "{label}");
         assert_eq!(a.signals, b.signals, "{label}");
         assert_eq!(a.discarded, b.discarded, "{label}");
@@ -279,15 +319,28 @@ fn gng_parallel_bit_identical_to_multi_for_every_thread_combo() {
     let mut rng_a = Rng::seed_from(29);
     let a = run_convergence(&mut gng_a, &sampler, &mut fw_a, &cfg, &mut rng_a);
 
-    for (update_threads, find_threads) in [(2usize, 1usize), (1, 2), (3, 7), (0, 0)] {
+    let mut combos = vec![
+        (2usize, 1usize, 1usize),
+        (1, 2, 1),
+        (3, 7, 1),
+        (0, 0, 1),
+        // GNG under the region schedule: its inserts stay inline (global
+        // error scan), but the region conflict domains and the region
+        // Find Winners scan must still be invisible in the results.
+        (2, 2, 27),
+        (0, 0, 64),
+    ];
+    combos.extend(env_combo());
+    for (update_threads, find_threads, regions) in combos {
         cfg.driver = Driver::Parallel;
         cfg.update_threads = update_threads;
         cfg.find_threads = find_threads;
+        cfg.regions = regions;
         let mut gng_b = Gng::new(cfg.gng);
         let mut fw_b = BatchRust::default();
         let mut rng_b = Rng::seed_from(29);
         let b = run_convergence(&mut gng_b, &sampler, &mut fw_b, &cfg, &mut rng_b);
-        let label = format!("gng upd={update_threads} find={find_threads}");
+        let label = format!("gng upd={update_threads} find={find_threads} regions={regions}");
         assert_eq!(a.iterations, b.iterations, "{label}");
         assert_eq!(a.signals, b.signals, "{label}");
         assert_eq!(a.discarded, b.discarded, "{label}");
@@ -296,14 +349,16 @@ fn gng_parallel_bit_identical_to_multi_for_every_thread_combo() {
     }
 }
 
-/// Satellite (PR 3): the pipelined driver composed with the pooled Update
-/// split — the final network must be invariant in `update_threads` for
-/// every `queue_depth` (and across queue depths, as before).
+/// Satellite (PR 3, extended in PR 4): the pipelined driver composed with
+/// the pooled Update split and the region schedule — the final network
+/// must be invariant in `update_threads` AND `regions` for every
+/// `queue_depth` (and across queue depths, as before).
 #[test]
-fn pipelined_bit_identical_across_queue_depth_and_update_threads() {
+fn pipelined_bit_identical_across_queue_depth_update_threads_and_regions() {
     use msgsn::coordinator::{run_pipelined, BatchExecutor};
+    use msgsn::som::RegionMap;
 
-    let run = |queue_depth: usize, update_threads: usize| -> (Soam, u64, u64) {
+    let run = |queue_depth: usize, update_threads: usize, regions: usize| -> (Soam, u64, u64) {
         let sampler = blob_sampler();
         let lim = limits(30_000);
         let mut soam = Soam::new(SoamParams {
@@ -311,27 +366,75 @@ fn pipelined_bit_identical_across_queue_depth_and_update_threads() {
             ..SoamParams::default()
         });
         let mut fw = BatchRust::default();
+        let mut exec = BatchExecutor::new(update_threads);
+        if regions > 1 {
+            let map = RegionMap::new(sampler.bounds(), regions);
+            fw.attach_regions(map.clone());
+            exec.set_regions(map);
+        }
         let mut rng = Rng::seed_from(33);
-        let r = run_pipelined(
-            &mut soam,
-            &sampler,
-            &mut fw,
-            &lim,
-            &mut rng,
-            queue_depth,
-            BatchExecutor::new(update_threads),
-        );
+        let r = run_pipelined(&mut soam, &sampler, &mut fw, &lim, &mut rng, queue_depth, exec);
         (soam, r.discarded, r.signals)
     };
 
-    let (ref_soam, ref_disc, ref_sig) = run(2, 1);
-    for (queue_depth, update_threads) in [(1usize, 2usize), (2, 3), (2, 0), (4, 2)] {
-        let (soam, disc, sig) = run(queue_depth, update_threads);
-        let label = format!("pipelined qd={queue_depth} upd={update_threads}");
+    let (ref_soam, ref_disc, ref_sig) = run(2, 1, 1);
+    let mut combos = vec![
+        (1usize, 2usize, 1usize),
+        (2, 3, 1),
+        (2, 0, 1),
+        (4, 2, 1),
+        (2, 3, 27),
+        (4, 0, 64),
+    ];
+    if let Some((upd, _, regions)) = env_combo() {
+        let qd = env_knob("MSGSN_TEST_QUEUE_DEPTH").unwrap_or(2);
+        combos.push((qd, upd, regions));
+    }
+    for (queue_depth, update_threads, regions) in combos {
+        let (soam, disc, sig) = run(queue_depth, update_threads, regions);
+        let label = format!("pipelined qd={queue_depth} upd={update_threads} regions={regions}");
         assert_eq!(ref_disc, disc, "{label}");
         assert_eq!(ref_sig, sig, "{label}");
         assert_networks_identical(ref_soam.net(), soam.net(), &label);
     }
+}
+
+/// Acceptance (PR 4): with a region map attached, insertion-class updates
+/// flow through the deferred concurrent commit instead of flushing the
+/// deferral queue — structural commits no longer serialize the concurrent
+/// commit. (Bit-parity of the same configuration is covered by
+/// `pooled_plan_and_sharded_find_match_multi_bitwise` above.)
+#[test]
+fn region_schedule_defers_insert_commits() {
+    use msgsn::coordinator::{BatchExecutor, MSchedule};
+    use msgsn::som::RegionMap;
+
+    let sampler = blob_sampler();
+    let mut soam = Soam::new(SoamParams {
+        insertion_threshold: 0.16,
+        ..SoamParams::default()
+    });
+    let mut rng = Rng::seed_from(41);
+    soam.init(&sampler, &mut rng);
+    let mut fw = BatchRust::default();
+    fw.attach_regions(RegionMap::new(sampler.bounds(), 64));
+    fw.rebuild(soam.net());
+    let mut exec = BatchExecutor::new(4);
+    exec.set_regions(RegionMap::new(sampler.bounds(), 64));
+    let mut signals = Vec::new();
+    let mut winners = Vec::new();
+    let schedule = MSchedule::default();
+    for _ in 0..300 {
+        let m = schedule.m(soam.net().len());
+        sampler.sample_batch(&mut rng, m, &mut signals);
+        fw.find2_batch(soam.net(), &signals, &mut winners);
+        exec.run_batch(&mut soam, &mut fw, &signals, &winners, &mut rng);
+    }
+    assert!(
+        exec.inserts_deferred() > 0,
+        "no insert-class update ever took the deferred commit path"
+    );
+    soam.net().check_invariants().unwrap();
 }
 
 #[test]
@@ -358,4 +461,25 @@ fn parallel_matches_multi_for_gwr() {
     assert_eq!(a.discarded, b.discarded);
     assert_eq!(a.qe.to_bits(), b.qe.to_bits());
     assert_networks_identical(gwr_a.net(), gwr_b.net(), "gwr: parallel vs multi");
+
+    // PR 4: the GWR-specific deferred-insert path — `begin_insert` with the
+    // *global* insertion threshold (every other region combo in this suite
+    // runs SOAM, whose per-unit-threshold branch is the other half).
+    use msgsn::config::{Driver, RunConfig};
+    use msgsn::engine::run_convergence;
+    let mut cfg = RunConfig::preset(BenchmarkShape::Blob);
+    cfg.gwr.insertion_threshold = 0.12;
+    cfg.driver = Driver::Parallel;
+    cfg.update_threads = 3;
+    cfg.find_threads = 2;
+    cfg.regions = 27;
+    cfg.limits = lim;
+    let mut gwr_c = Gwr::new(cfg.gwr);
+    let mut fw_c = BatchRust::default();
+    let mut rng_c = Rng::seed_from(4);
+    let c = run_convergence(&mut gwr_c, &sampler, &mut fw_c, &cfg, &mut rng_c);
+
+    assert_eq!(a.discarded, c.discarded, "gwr regions");
+    assert_eq!(a.qe.to_bits(), c.qe.to_bits(), "gwr regions");
+    assert_networks_identical(gwr_a.net(), gwr_c.net(), "gwr: regions vs multi");
 }

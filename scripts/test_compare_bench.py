@@ -1,0 +1,148 @@
+"""Unit tests for the bench regression gate (scripts/compare_bench.py).
+
+The gate is load-bearing CI: a silent mis-skip would let regressions land,
+a spurious failure would block every PR. These tests pin its contract:
+
+- a committed placeholder ("instrumented-not-measured") is skipped;
+- a workload-scale mismatch disarms the diff with a loud warning;
+- a timing regression beyond the threshold fails (exit 1);
+- within-threshold drift and speedups pass;
+- a fresh file with no committed counterpart is skipped.
+
+Runnable with the stdlib alone (`python3 -m unittest discover -s scripts`)
+or with pytest.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import unittest
+
+SCRIPT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "compare_bench.py")
+
+
+def run_compare(baseline, fresh, threshold=0.10):
+    return subprocess.run(
+        [
+            sys.executable,
+            SCRIPT,
+            "--baseline",
+            baseline,
+            "--fresh",
+            fresh,
+            "--threshold",
+            str(threshold),
+        ],
+        capture_output=True,
+        text=True,
+        check=False,
+    )
+
+
+def bench_payload(signals=60000, total_s=1.0, row="multi"):
+    return {
+        "bench": "update_phase",
+        "signals": signals,
+        "drivers": [
+            {"row": row, "driver": "multi", "total_s": total_s, "units": 300}
+        ],
+    }
+
+
+class CompareBenchCase(unittest.TestCase):
+    def setUp(self):
+        self._tmp = tempfile.TemporaryDirectory()
+        self.baseline = os.path.join(self._tmp.name, "baseline")
+        self.fresh = os.path.join(self._tmp.name, "fresh")
+        os.makedirs(self.baseline)
+        os.makedirs(self.fresh)
+
+    def tearDown(self):
+        self._tmp.cleanup()
+
+    def write(self, where, name, payload):
+        with open(os.path.join(where, name), "w") as f:
+            json.dump(payload, f)
+
+    def test_placeholder_baseline_is_skipped(self):
+        self.write(
+            self.baseline,
+            "BENCH_update_phase.json",
+            {"status": "instrumented-not-measured", "bench": "update_phase"},
+        )
+        self.write(self.fresh, "BENCH_update_phase.json", bench_payload(total_s=99.0))
+        r = run_compare(self.baseline, self.fresh)
+        self.assertEqual(r.returncode, 0, r.stdout + r.stderr)
+        self.assertIn("placeholder", r.stdout)
+        self.assertIn("nothing to diff", r.stdout)
+
+    def test_workload_scale_mismatch_disarms_the_gate(self):
+        self.write(
+            self.baseline, "BENCH_update_phase.json", bench_payload(signals=300000)
+        )
+        # A huge regression at the wrong scale must NOT fail — but must warn.
+        self.write(
+            self.fresh,
+            "BENCH_update_phase.json",
+            bench_payload(signals=60000, total_s=50.0),
+        )
+        r = run_compare(self.baseline, self.fresh)
+        self.assertEqual(r.returncode, 0, r.stdout + r.stderr)
+        self.assertIn("DISARMED", r.stdout)
+        self.assertIn("MSGSN_BENCH_SIGNALS=60000", r.stdout)
+
+    def test_regression_beyond_threshold_fails(self):
+        self.write(self.baseline, "BENCH_update_phase.json", bench_payload(total_s=1.0))
+        self.write(self.fresh, "BENCH_update_phase.json", bench_payload(total_s=1.2))
+        r = run_compare(self.baseline, self.fresh, threshold=0.10)
+        self.assertEqual(r.returncode, 1, r.stdout + r.stderr)
+        self.assertIn("REGRESSION", r.stdout)
+        self.assertIn("regression(s) beyond", r.stderr)
+
+    def test_within_threshold_passes(self):
+        self.write(self.baseline, "BENCH_update_phase.json", bench_payload(total_s=1.0))
+        self.write(self.fresh, "BENCH_update_phase.json", bench_payload(total_s=1.05))
+        r = run_compare(self.baseline, self.fresh, threshold=0.10)
+        self.assertEqual(r.returncode, 0, r.stdout + r.stderr)
+        self.assertIn("no regressions beyond the threshold", r.stdout)
+
+    def test_speedups_never_fail(self):
+        self.write(self.baseline, "BENCH_update_phase.json", bench_payload(total_s=1.0))
+        self.write(self.fresh, "BENCH_update_phase.json", bench_payload(total_s=0.2))
+        r = run_compare(self.baseline, self.fresh)
+        self.assertEqual(r.returncode, 0, r.stdout + r.stderr)
+
+    def test_missing_baseline_file_is_skipped(self):
+        self.write(self.fresh, "BENCH_new_bench.json", bench_payload(total_s=9.0))
+        r = run_compare(self.baseline, self.fresh)
+        self.assertEqual(r.returncode, 0, r.stdout + r.stderr)
+        self.assertIn("no committed baseline", r.stdout)
+
+    def test_new_row_in_fresh_file_is_skipped(self):
+        # A fresh file may gain rows (e.g. the PR 4 region rows) without
+        # disarming the diff of the rows both files share.
+        self.write(self.baseline, "BENCH_update_phase.json", bench_payload(total_s=1.0))
+        fresh = bench_payload(total_s=1.0)
+        fresh["drivers"].append(
+            {"row": "par regions", "driver": "parallel", "regions": 64, "total_s": 0.5}
+        )
+        self.write(self.fresh, "BENCH_update_phase.json", fresh)
+        r = run_compare(self.baseline, self.fresh)
+        self.assertEqual(r.returncode, 0, r.stdout + r.stderr)
+        self.assertIn("new row", r.stdout)
+        self.assertIn("no regressions beyond the threshold", r.stdout)
+
+    def test_non_timing_fields_are_ignored(self):
+        # `units`, counters etc. must never trip the gate.
+        self.write(self.baseline, "BENCH_update_phase.json", bench_payload(total_s=1.0))
+        fresh = bench_payload(total_s=1.0)
+        fresh["drivers"][0]["units"] = 9999
+        self.write(self.fresh, "BENCH_update_phase.json", fresh)
+        r = run_compare(self.baseline, self.fresh)
+        self.assertEqual(r.returncode, 0, r.stdout + r.stderr)
+
+
+if __name__ == "__main__":
+    unittest.main()
