@@ -6,7 +6,8 @@
 //! ```
 
 use msgsn::config::{Driver, RunConfig};
-use msgsn::engine::run;
+use msgsn::engine::{run, ConvergenceSession};
+use msgsn::fleet::snapshot;
 use msgsn::mesh::{benchmark_mesh, BenchmarkShape};
 use msgsn::rng::Rng;
 
@@ -47,5 +48,37 @@ fn main() -> anyhow::Result<()> {
     } else {
         println!("\nhit the signal cap before topological convergence.");
     }
+
+    // 4. Checkpoint/resume (the fleet subsystem): a run is a resumable
+    //    ConvergenceSession — step it, snapshot it at any batch boundary,
+    //    kill it, and a restored session finishes bit-identically to never
+    //    having stopped. (`msgsn fleet --jobs examples/fleet.json
+    //    --checkpoint-every 64` does this for N concurrent jobs.)
+    let mut demo_cfg = cfg.clone();
+    demo_cfg.limits.max_signals = 60_000;
+    demo_cfg.driver = Driver::Multi;
+
+    let mut session = ConvergenceSession::new(&demo_cfg, &mesh, None)?;
+    session.step(40); // run 40 batches…
+    let checkpoint = snapshot::snapshot_session(&session); // …snapshot…
+    drop(session); // …and "crash".
+
+    let mut resumed = ConvergenceSession::new(&demo_cfg, &mesh, None)?;
+    snapshot::restore_session(&mut resumed, &checkpoint)
+        .map_err(anyhow::Error::msg)?;
+    let resumed_report = resumed.run_to_end();
+
+    let mut uninterrupted = ConvergenceSession::new(&demo_cfg, &mesh, None)?;
+    let straight_report = uninterrupted.run_to_end();
+    println!(
+        "\ncheckpoint/resume demo: resumed run {} units / qe {:e}, \
+         uninterrupted {} units / qe {:e} — bit-identical: {}",
+        resumed_report.units,
+        resumed_report.qe,
+        straight_report.units,
+        straight_report.qe,
+        resumed_report.units == straight_report.units
+            && resumed_report.qe.to_bits() == straight_report.qe.to_bits(),
+    );
     Ok(())
 }

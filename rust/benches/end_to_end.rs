@@ -95,10 +95,63 @@ fn main() -> anyhow::Result<()> {
         ));
     }
 
+    // Fleet: N independent networks multiplexed over ONE shared worker
+    // pool (round-robin at batch granularity) vs the same N specs run
+    // back-to-back through the classic blocking path. Results are
+    // bit-identical (rust/tests/fleet.rs); this row pair measures the
+    // orchestration overhead / interleaving benefit. The rows carry a
+    // "jobs" field so scripts/compare_bench.py keys them per fleet size.
+    println!("\nfleet end-to-end ({} jobs, smoke scale):", 2);
+    let fleet_specs = || {
+        [BenchmarkShape::Blob, BenchmarkShape::Eight]
+            .into_iter()
+            .enumerate()
+            .map(|(k, shape)| {
+                let mut cfg = Scale::SMOKE.configure(shape);
+                cfg.driver = Driver::Parallel;
+                cfg.update_threads = 0;
+                cfg.seed = 42 + k as u64;
+                msgsn::fleet::JobSpec::from_config(format!("{}-{k}", shape.name()), cfg)
+            })
+            .collect::<Vec<_>>()
+    };
+    let mut fleet_rows = Vec::new();
+    {
+        let t0 = std::time::Instant::now();
+        let mut fleet = msgsn::fleet::Fleet::new(fleet_specs())?;
+        let report = fleet.run(&msgsn::fleet::FleetOptions::default(), |_| {})?;
+        let total = t0.elapsed().as_secs_f64();
+        let signals: u64 = report.jobs.iter().map(|(_, r)| r.signals).sum();
+        println!("  {:18} {total:>8.3}s  ({signals} signals total)", "fleet-concurrent");
+        fleet_rows.push(format!(
+            "    {{\"row\": \"fleet-concurrent\", \"jobs\": 2, \"total_s\": {total:.6}, \
+             \"signals_total\": {signals}}}"
+        ));
+    }
+    {
+        let t0 = std::time::Instant::now();
+        let mut signals = 0u64;
+        for spec in fleet_specs() {
+            let mesh =
+                msgsn::mesh::benchmark_mesh(spec.cfg.shape, spec.cfg.mesh_resolution);
+            let mut rng = msgsn::rng::Rng::seed_from(spec.cfg.seed);
+            let r = msgsn::engine::run(&mesh, spec.cfg.driver, &spec.cfg, &mut rng)?;
+            signals += r.signals;
+        }
+        let total = t0.elapsed().as_secs_f64();
+        println!("  {:18} {total:>8.3}s  ({signals} signals total)", "fleet-sequential");
+        fleet_rows.push(format!(
+            "    {{\"row\": \"fleet-sequential\", \"jobs\": 2, \"total_s\": {total:.6}, \
+             \"signals_total\": {signals}}}"
+        ));
+    }
+
     let csv = grid.to_csv();
     let json = format!(
-        "{{\n  \"bench\": \"end_to_end\",\n  \"worker_pool\": [\n{}\n  ],\n  \"grid_csv\": {:?}\n}}\n",
+        "{{\n  \"bench\": \"end_to_end\",\n  \"worker_pool\": [\n{}\n  ],\n  \
+         \"fleet\": [\n{}\n  ],\n  \"grid_csv\": {:?}\n}}\n",
         pool_rows.join(",\n"),
+        fleet_rows.join(",\n"),
         csv,
     );
     if let Err(e) = std::fs::write("BENCH_end_to_end.json", &json) {

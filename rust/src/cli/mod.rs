@@ -3,6 +3,7 @@
 //!
 //! ```text
 //! msgsn run        --mesh eight --driver pjrt [--seed N] [--set k=v]…
+//! msgsn fleet      --jobs jobs.json [--checkpoint-every N] [--resume]
 //! msgsn reproduce  [--table N]… [--figure N]… [--all] [--scale quick|paper]
 //! msgsn mesh       --shape hand [--resolution N] [--out hand.obj]
 //! msgsn artifacts  [--dir artifacts] [--warmup-n 4096]
@@ -20,6 +21,9 @@ use std::fmt;
 pub enum Command {
     /// One reconstruction run, printing the paper-style report table.
     Run(Parsed),
+    /// N concurrent reconstructions from a jobs manifest, with resumable
+    /// checkpointing (the fleet subsystem).
+    Fleet(Parsed),
     /// Regenerate paper tables/figures.
     Reproduce(Parsed),
     /// Generate / inspect benchmark meshes.
@@ -57,6 +61,18 @@ USAGE:
       --trace                    record trace points
       --save-mesh <out.obj>      write the reconstructed network mesh
       --quiet                    suppress the report table
+
+  msgsn fleet [OPTIONS]          N concurrent reconstructions, one process
+      --jobs <jobs.json>         jobs manifest (required; see README for
+                                 the schema: per-job mesh/algorithm/driver/
+                                 seed plus any config key)
+      --checkpoint-every <N>     snapshot each job every N scheduler turns
+                                 (bit-exact resume; 0 = off)    [0]
+      --checkpoint-dir <dir>     where *.msgsnap checkpoints live
+                                                               [checkpoints]
+      --resume                   resume jobs from their checkpoints
+      --stride <N>               batches per job per round-robin turn  [1]
+      --quiet                    suppress progress lines
 
   msgsn reproduce [OPTIONS]      regenerate the paper's evaluation
       --table <1|2|3|4>          one table (repeatable)
@@ -101,6 +117,11 @@ pub fn parse(args: &[String]) -> Result<Command, ArgError> {
             ],
             &["trace", "quiet"],
         )?)),
+        "fleet" => Ok(Command::Fleet(parser::parse_flags(
+            rest,
+            &["jobs", "checkpoint-every", "checkpoint-dir", "stride"],
+            &["resume", "quiet"],
+        )?)),
         "reproduce" => Ok(Command::Reproduce(parser::parse_flags(
             rest,
             &["table", "figure", "scale", "out", "seed", "set"],
@@ -130,6 +151,7 @@ impl fmt::Display for Command {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             Command::Run(_) => write!(f, "run"),
+            Command::Fleet(_) => write!(f, "fleet"),
             Command::Reproduce(_) => write!(f, "reproduce"),
             Command::Mesh(_) => write!(f, "mesh"),
             Command::Artifacts(_) => write!(f, "artifacts"),
@@ -162,6 +184,20 @@ mod tests {
             panic!()
         };
         assert_eq!(p.get_all("set"), vec!["a=1", "b=2"]);
+    }
+
+    #[test]
+    fn parses_fleet_command() {
+        let cmd = parse(&argv(
+            "fleet --jobs jobs.json --checkpoint-every 64 --checkpoint-dir ck --resume",
+        ))
+        .unwrap();
+        let Command::Fleet(p) = cmd else { panic!("not fleet") };
+        assert_eq!(p.get("jobs"), Some("jobs.json"));
+        assert_eq!(p.get("checkpoint-every"), Some("64"));
+        assert_eq!(p.get("checkpoint-dir"), Some("ck"));
+        assert!(p.flag("resume"));
+        assert!(!p.flag("quiet"));
     }
 
     #[test]

@@ -43,25 +43,30 @@
 //! the accelerated implementation "reach exactly the same final
 //! configuration, since they are meant to replicate the same behavior by
 //! design" (§3.1) — enforced by `rust/tests/parity.rs`.
+//!
+//! Since PR 5 every entrypoint above is a thin wrapper over the resumable
+//! [`SessionCore`] loop (see [`session`](self::ConvergenceSession)): the
+//! same iteration bodies, steppable at batch granularity — which is what
+//! the fleet scheduler ([`crate::fleet`]) multiplexes and the snapshot
+//! format ([`crate::fleet::snapshot`]) checkpoints bit-exactly.
 
 mod report;
+mod session;
 
 pub use report::{RunReport, TracePoint};
+pub use session::{ConvergenceSession, SessionCore, SessionMode};
 
 use std::sync::Arc;
-use std::time::Instant;
 
 use anyhow::{bail, Result};
 
 use crate::config::{Algorithm, Driver, Limits, RunConfig};
 use crate::coordinator::BatchExecutor;
 use crate::findwinners::{BatchRust, FindWinners, Indexed, Scalar};
-use crate::geometry::Vec3;
 use crate::mesh::{Mesh, SurfaceSampler};
-use crate::metrics::{Phase, PhaseClock, PhaseTimes};
 use crate::rng::Rng;
 use crate::runtime::{resolve_threads, WorkerPool};
-use crate::som::{ChangeLog, Gng, GrowingNetwork, Gwr, RegionMap, Soam, Winners};
+use crate::som::{Gng, GrowingNetwork, Gwr, RegionMap, Soam};
 
 /// The paper's parallelism schedule (§3.1): "the level of parallelism m at
 /// each iteration … is set to the minimum power of two greater than the
@@ -75,7 +80,8 @@ pub fn m_schedule(units: usize, max_parallelism: usize) -> usize {
 /// Run the single-signal basic iteration to convergence — the degenerate
 /// `m = 1` case of the shared [`BatchExecutor`] (the one-element batch
 /// draws no permutation RNG, its lock always succeeds and its staleness
-/// guard is empty, so this is the classic loop exactly).
+/// guard is empty, so this is the classic loop exactly). A thin wrapper
+/// over [`SessionCore`] in `SingleSignal` mode.
 pub fn run_single_signal(
     algo: &mut dyn GrowingNetwork,
     sampler: &SurfaceSampler,
@@ -83,61 +89,26 @@ pub fn run_single_signal(
     limits: &Limits,
     rng: &mut Rng,
 ) -> RunReport {
-    let start = Instant::now();
-    let mut phase = PhaseTimes::default();
-    let mut report = RunReport::new(algo.name(), fw.name());
-    let mut log = ChangeLog::default();
-    algo.init(sampler, rng);
-    fw.rebuild(algo.net());
-
-    let mut executor = BatchExecutor::new(1);
-
-    loop {
-        // 1. Sample.
-        let clock = PhaseClock::start();
-        let signal = sampler.sample(rng);
-        clock.stop(&mut phase, Phase::Sample);
-
-        // 2. Find Winners.
-        let clock = PhaseClock::start();
-        let winners = fw.find2(algo.net(), signal);
-        clock.stop(&mut phase, Phase::FindWinners);
-
-        // 3. Update (shared executor, batch of one).
-        let clock = PhaseClock::start();
-        report.discarded += executor.run_batch(algo, fw, &[signal], &[winners], rng);
-        clock.stop(&mut phase, Phase::Update);
-
-        report.signals += 1;
-        report.iterations += 1;
-
-        if report.signals % limits.check_interval == 0 {
-            log.clear();
-            let converged = algo.housekeeping(&mut log);
-            if !log.is_empty() {
-                fw.sync(algo.net(), &log);
-            }
-            if limits.trace {
-                report.push_trace(algo, &phase);
-            }
-            if converged {
-                report.converged = true;
-                break;
-            }
-        }
-        if report.signals >= limits.max_signals {
-            break;
-        }
-    }
-
-    report.finish(algo, phase, start.elapsed());
-    report
+    let impl_name = fw.name();
+    let mut core = SessionCore::start(
+        SessionMode::SingleSignal,
+        impl_name,
+        BatchExecutor::new(1),
+        *limits,
+        algo,
+        sampler,
+        fw,
+        rng,
+    );
+    core.run_to_end(algo, sampler, fw, rng);
+    core.finish(algo)
 }
 
 /// Shared multi-signal convergence loop: Sample m → batched Find Winners →
 /// Update through the executor → housekeeping. `run_multi_signal` and
 /// `run_parallel` are thin wrappers differing only in the executor's
-/// thread count (and the report's implementation label).
+/// thread count (and the report's implementation label) — both drive one
+/// [`SessionCore`] in `Batched` mode to completion.
 fn run_batched_loop(
     algo: &mut dyn GrowingNetwork,
     sampler: &SurfaceSampler,
@@ -145,59 +116,20 @@ fn run_batched_loop(
     limits: &Limits,
     rng: &mut Rng,
     impl_name: &str,
-    mut executor: BatchExecutor,
+    executor: BatchExecutor,
 ) -> RunReport {
-    let start = Instant::now();
-    let mut phase = PhaseTimes::default();
-    let mut report = RunReport::new(algo.name(), impl_name);
-    let mut log = ChangeLog::default();
-    algo.init(sampler, rng);
-    fw.rebuild(algo.net());
-
-    // Reused buffers (allocation-free steady state).
-    let mut signals: Vec<Vec3> = Vec::new();
-    let mut winners: Vec<Option<Winners>> = Vec::new();
-
-    loop {
-        report.iterations += 1;
-        let m = m_schedule(algo.net().len(), limits.max_parallelism);
-
-        // 1. Sample m signals.
-        let clock = PhaseClock::start();
-        sampler.sample_batch(rng, m, &mut signals);
-        clock.stop(&mut phase, Phase::Sample);
-
-        // 2. Batched Find Winners.
-        let clock = PhaseClock::start();
-        fw.find2_batch(algo.net(), &signals, &mut winners);
-        clock.stop(&mut phase, Phase::FindWinners);
-
-        // 3. Update in random order under winner locks (shared executor).
-        let clock = PhaseClock::start();
-        report.discarded += executor.run_batch(algo, fw, &signals, &winners, rng);
-        clock.stop(&mut phase, Phase::Update);
-
-        report.signals += m as u64;
-
-        log.clear();
-        let converged = algo.housekeeping(&mut log);
-        if !log.is_empty() {
-            fw.sync(algo.net(), &log);
-        }
-        if limits.trace {
-            report.push_trace(algo, &phase);
-        }
-        if converged {
-            report.converged = true;
-            break;
-        }
-        if report.signals >= limits.max_signals {
-            break;
-        }
-    }
-
-    report.finish(algo, phase, start.elapsed());
-    report
+    let mut core = SessionCore::start(
+        SessionMode::Batched,
+        impl_name,
+        executor,
+        *limits,
+        algo,
+        sampler,
+        fw,
+        rng,
+    );
+    core.run_to_end(algo, sampler, fw, rng);
+    core.finish(algo)
 }
 
 /// Run the multi-signal iteration (§2.2) to convergence.
@@ -239,6 +171,43 @@ pub fn run_parallel(
         "parallel",
         BatchExecutor::new(update_threads),
     )
+}
+
+/// Resolved `(find_threads, update_threads)` worker widths for a config —
+/// the single source of the driver → thread mapping, shared by
+/// [`run_convergence`], [`ConvergenceSession`] and the fleet's shared-pool
+/// sizing (`fleet::Fleet::new`). `find_threads` only applies to the
+/// drivers whose batched scan runs in `BatchRust` (single-signal drivers
+/// have no batch to shard; the pjrt scan runs inside the XLA executable),
+/// `update_threads` only to the drivers with a pooled Update split.
+pub fn resolve_run_threads(cfg: &RunConfig) -> (usize, usize) {
+    let find_threads = match cfg.driver {
+        Driver::Multi | Driver::Pipelined | Driver::Parallel => {
+            resolve_threads(cfg.find_threads)
+        }
+        Driver::Single | Driver::Indexed | Driver::Pjrt => 1,
+    };
+    let update_threads = match cfg.driver {
+        Driver::Parallel | Driver::Pipelined => resolve_threads(cfg.update_threads),
+        _ => 1,
+    };
+    (find_threads, update_threads)
+}
+
+/// The run's region partition for a config over `bounds` — the single
+/// source of the driver/knob → region gating (shared like
+/// [`resolve_run_threads`]). `None` when the driver has no `BatchRust`
+/// scan, the knob is off, or degenerate bounds collapse the grid to one
+/// region (a one-region schedule would coarsen every conflict to
+/// "always", flushing per signal).
+pub fn build_region_map(cfg: &RunConfig, bounds: crate::geometry::Aabb) -> Option<RegionMap> {
+    match cfg.driver {
+        Driver::Multi | Driver::Pipelined | Driver::Parallel if cfg.regions > 1 => {
+            let map = RegionMap::new(bounds, cfg.regions);
+            (map.region_count() > 1).then_some(map)
+        }
+        _ => None,
+    }
 }
 
 /// Build the algorithm selected by `cfg`.
@@ -286,30 +255,8 @@ pub fn run_convergence(
     cfg: &RunConfig,
     rng: &mut Rng,
 ) -> RunReport {
-    // `find_threads` only applies to the drivers whose batched scan runs
-    // in `BatchRust` (single-signal drivers have no batch to shard; the
-    // pjrt scan runs inside the XLA executable, so sharding it here would
-    // only spawn an idle pool).
-    let find_threads = match cfg.driver {
-        Driver::Multi | Driver::Pipelined | Driver::Parallel => {
-            resolve_threads(cfg.find_threads)
-        }
-        Driver::Single | Driver::Indexed | Driver::Pjrt => 1,
-    };
-    let update_threads = match cfg.driver {
-        Driver::Parallel | Driver::Pipelined => resolve_threads(cfg.update_threads),
-        _ => 1,
-    };
-    let region_map = match cfg.driver {
-        Driver::Multi | Driver::Pipelined | Driver::Parallel if cfg.regions > 1 => {
-            // Degenerate bounds collapse the grid to one region — in that
-            // case attach nothing (a one-region schedule would coarsen
-            // every conflict to "always", flushing per signal).
-            let map = RegionMap::new(sampler.bounds(), cfg.regions);
-            (map.region_count() > 1).then_some(map)
-        }
-        _ => None,
-    };
+    let (find_threads, update_threads) = resolve_run_threads(cfg);
+    let region_map = build_region_map(cfg, sampler.bounds());
     if let Some(map) = &region_map {
         fw.attach_regions(map.clone());
     }

@@ -1,0 +1,679 @@
+//! Resumable convergence sessions — the loop body of every driver in
+//! [`crate::engine`], factored into a state machine that can stop at any
+//! batch boundary and continue later (or in another process, via
+//! [`crate::fleet::snapshot`]) bit-identically.
+//!
+//! Two layers:
+//!
+//! - [`SessionCore`] owns the *loop state*: the [`BatchExecutor`], the
+//!   progress counters ([`RunReport`] in the making), phase clocks, the
+//!   reused signal/winner buffers, and the mode-specific extras (the
+//!   pipelined sampler stream and its lagged batch size). Long-lived
+//!   resources — algorithm, sampler, Find-Winners backend, RNG — are
+//!   passed into [`SessionCore::step`], which lets the classic borrowed
+//!   `run_*` entrypoints and the owning session share one implementation.
+//! - [`ConvergenceSession`] owns everything: algorithm, sampler, backend,
+//!   RNG and core, wired from a [`RunConfig`] exactly as
+//!   [`super::run_convergence`] wires a run (one shared [`WorkerPool`],
+//!   one [`crate::som::RegionMap`]). This is the unit the fleet scheduler
+//!   multiplexes and the snapshot format captures.
+//!
+//! ## Modes
+//!
+//! | mode | one `step(1)` is | housekeeping | used by drivers |
+//! |---|---|---|---|
+//! | `SingleSignal` | one signal | every `check_interval` signals | single, indexed |
+//! | `Batched` | one m-schedule batch | every batch | multi, pjrt, parallel |
+//! | `Pipelined` | one batch, lagged m | every batch | pipelined (fleet) |
+//!
+//! `Pipelined` here is the *synchronous equivalent* of
+//! [`crate::coordinator::run_pipelined`]: the sampler thread's forked RNG
+//! stream and the one-batch m-schedule lag are reproduced inline, without
+//! the thread. The threaded driver's results are a pure function of the
+//! request sequence (its own `queue_depth`-invariance property), so the
+//! two are bit-identical — enforced by `rust/tests/fleet.rs` — while the
+//! synchronous form can stop between any two batches.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::config::{Driver, Limits, RunConfig};
+use crate::coordinator::BatchExecutor;
+use crate::findwinners::FindWinners;
+use crate::geometry::Vec3;
+use crate::mesh::{Mesh, SurfaceSampler};
+use crate::metrics::{Phase, PhaseClock, PhaseTimes};
+use crate::rng::Rng;
+use crate::runtime::bytes::{ByteReader, ByteWriter};
+use crate::runtime::WorkerPool;
+use crate::som::{ChangeLog, GrowingNetwork, Winners};
+
+use super::report::RunReport;
+use super::{
+    build_region_map, m_schedule, make_algorithm, make_findwinners, resolve_run_threads,
+};
+
+/// Iteration cadence of a session (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SessionMode {
+    /// One signal per iteration; housekeeping every `check_interval`.
+    SingleSignal,
+    /// One multi-signal batch per iteration (m from the current unit count).
+    Batched,
+    /// One batch per iteration with the pipelined driver's semantics: the
+    /// batch size lags one iteration and signals come from a forked
+    /// sampler stream.
+    Pipelined,
+}
+
+impl SessionMode {
+    /// The cadence a driver runs at.
+    pub fn for_driver(driver: Driver) -> SessionMode {
+        match driver {
+            Driver::Single | Driver::Indexed => SessionMode::SingleSignal,
+            Driver::Multi | Driver::Pjrt | Driver::Parallel => SessionMode::Batched,
+            Driver::Pipelined => SessionMode::Pipelined,
+        }
+    }
+}
+
+/// The resumable loop state shared by every driver (see module docs).
+pub struct SessionCore {
+    mode: SessionMode,
+    executor: BatchExecutor,
+    limits: Limits,
+    report: RunReport,
+    phase: PhaseTimes,
+    log: ChangeLog,
+    signals: Vec<Vec3>,
+    winners: Vec<Option<Winners>>,
+    /// `Pipelined`: the prefetching sampler's forked RNG stream.
+    sampler_rng: Option<Rng>,
+    /// `Pipelined`: the batch size requested before the previous Update
+    /// (the one-batch m-schedule lag of the threaded driver).
+    next_m: usize,
+    /// Wall time accumulated across `start`/`step` calls (a resumed
+    /// session restarts this at the snapshot's value).
+    elapsed: Duration,
+    done: bool,
+}
+
+impl SessionCore {
+    /// Initialize the run exactly as the classic drivers do: seed the
+    /// algorithm, build the Find-Winners structures, and (pipelined) fork
+    /// the sampler stream and request the first batch size.
+    #[allow(clippy::too_many_arguments)] // the run's full resource set, by design
+    pub fn start(
+        mode: SessionMode,
+        impl_name: &str,
+        executor: BatchExecutor,
+        limits: Limits,
+        algo: &mut dyn GrowingNetwork,
+        sampler: &SurfaceSampler,
+        fw: &mut dyn FindWinners,
+        rng: &mut Rng,
+    ) -> Self {
+        let t0 = Instant::now();
+        let report = RunReport::new(algo.name(), impl_name);
+        algo.init(sampler, rng);
+        fw.rebuild(algo.net());
+        let (sampler_rng, next_m) = if mode == SessionMode::Pipelined {
+            (Some(rng.fork()), m_schedule(algo.net().len(), limits.max_parallelism))
+        } else {
+            (None, 0)
+        };
+        Self {
+            mode,
+            executor,
+            limits,
+            report,
+            phase: PhaseTimes::default(),
+            log: ChangeLog::default(),
+            signals: Vec::new(),
+            winners: Vec::new(),
+            sampler_rng,
+            next_m,
+            elapsed: t0.elapsed(),
+            done: false,
+        }
+    }
+
+    pub fn mode(&self) -> SessionMode {
+        self.mode
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    /// Progress counters so far (finalized values come from
+    /// [`Self::finish`]).
+    pub fn report_so_far(&self) -> &RunReport {
+        &self.report
+    }
+
+    /// Run up to `iterations` loop iterations (signals or batches,
+    /// depending on the mode), stopping early on convergence or the signal
+    /// cap. Returns `true` while the run has more work.
+    pub fn step(
+        &mut self,
+        algo: &mut dyn GrowingNetwork,
+        sampler: &SurfaceSampler,
+        fw: &mut dyn FindWinners,
+        rng: &mut Rng,
+        iterations: u64,
+    ) -> bool {
+        if self.done {
+            return false;
+        }
+        let t0 = Instant::now();
+        for _ in 0..iterations {
+            match self.mode {
+                SessionMode::SingleSignal => self.step_single(algo, sampler, fw, rng),
+                SessionMode::Batched | SessionMode::Pipelined => {
+                    self.step_batched(algo, sampler, fw, rng)
+                }
+            }
+            if self.done {
+                break;
+            }
+        }
+        self.elapsed += t0.elapsed();
+        !self.done
+    }
+
+    /// Drive the run to termination (the classic blocking entrypoints).
+    pub fn run_to_end(
+        &mut self,
+        algo: &mut dyn GrowingNetwork,
+        sampler: &SurfaceSampler,
+        fw: &mut dyn FindWinners,
+        rng: &mut Rng,
+    ) {
+        while self.step(algo, sampler, fw, rng, u64::MAX) {}
+    }
+
+    /// Finalize the report (units, connections, QE, timings). The core
+    /// stays usable for inspection but steps no further.
+    pub fn finish(&mut self, algo: &dyn GrowingNetwork) -> RunReport {
+        self.done = true;
+        let mut report = self.report.clone();
+        report.finish(algo, self.phase, self.elapsed);
+        report
+    }
+
+    /// One single-signal iteration — the exact pre-session
+    /// `run_single_signal` loop body.
+    fn step_single(
+        &mut self,
+        algo: &mut dyn GrowingNetwork,
+        sampler: &SurfaceSampler,
+        fw: &mut dyn FindWinners,
+        rng: &mut Rng,
+    ) {
+        let clock = PhaseClock::start();
+        let signal = sampler.sample(rng);
+        clock.stop(&mut self.phase, Phase::Sample);
+
+        let clock = PhaseClock::start();
+        let winners = fw.find2(algo.net(), signal);
+        clock.stop(&mut self.phase, Phase::FindWinners);
+
+        let clock = PhaseClock::start();
+        self.report.discarded +=
+            self.executor.run_batch(algo, fw, &[signal], &[winners], rng);
+        clock.stop(&mut self.phase, Phase::Update);
+
+        self.report.signals += 1;
+        self.report.iterations += 1;
+
+        if self.report.signals % self.limits.check_interval == 0 {
+            self.log.clear();
+            let converged = algo.housekeeping(&mut self.log);
+            if !self.log.is_empty() {
+                fw.sync(algo.net(), &self.log);
+            }
+            if self.limits.trace {
+                self.report.push_trace(algo, &self.phase);
+            }
+            if converged {
+                self.report.converged = true;
+                self.done = true;
+            }
+        }
+        if self.report.signals >= self.limits.max_signals {
+            self.done = true;
+        }
+    }
+
+    /// One batched iteration — the exact pre-session `run_batched_loop`
+    /// body, with the pipelined lag folded in for `SessionMode::Pipelined`.
+    fn step_batched(
+        &mut self,
+        algo: &mut dyn GrowingNetwork,
+        sampler: &SurfaceSampler,
+        fw: &mut dyn FindWinners,
+        rng: &mut Rng,
+    ) {
+        self.report.iterations += 1;
+        let m = if self.mode == SessionMode::Pipelined {
+            // The threaded driver samples batch k from the forked stream at
+            // the size requested BEFORE batch k-1's update, then requests
+            // batch k+1 at the pre-update unit count — reproduced inline.
+            let m = self.next_m;
+            let clock = PhaseClock::start();
+            let srng = self.sampler_rng.as_mut().expect("pipelined sampler stream");
+            sampler.sample_batch(srng, m, &mut self.signals);
+            clock.stop(&mut self.phase, Phase::Sample);
+            self.next_m = m_schedule(algo.net().len(), self.limits.max_parallelism);
+            m
+        } else {
+            let m = m_schedule(algo.net().len(), self.limits.max_parallelism);
+            let clock = PhaseClock::start();
+            sampler.sample_batch(rng, m, &mut self.signals);
+            clock.stop(&mut self.phase, Phase::Sample);
+            m
+        };
+
+        let clock = PhaseClock::start();
+        fw.find2_batch(algo.net(), &self.signals, &mut self.winners);
+        clock.stop(&mut self.phase, Phase::FindWinners);
+
+        let clock = PhaseClock::start();
+        self.report.discarded +=
+            self.executor.run_batch(algo, fw, &self.signals, &self.winners, rng);
+        clock.stop(&mut self.phase, Phase::Update);
+
+        self.report.signals += m as u64;
+
+        self.log.clear();
+        let converged = algo.housekeeping(&mut self.log);
+        if !self.log.is_empty() {
+            fw.sync(algo.net(), &self.log);
+        }
+        if self.limits.trace {
+            self.report.push_trace(algo, &self.phase);
+        }
+        if converged {
+            self.report.converged = true;
+            self.done = true;
+        } else if self.report.signals >= self.limits.max_signals {
+            self.done = true;
+        }
+    }
+
+    /// Serialize the resumable loop state (counters, pipelined stream,
+    /// termination flag). The executor, buffers and phase breakdown are
+    /// reconstructed — the executor holds no cross-batch semantic state
+    /// and the timing breakdown restarts (wall totals carry over).
+    pub fn write_state(&self, w: &mut ByteWriter) {
+        w.bool(self.done);
+        w.bool(self.report.converged);
+        w.u64(self.report.iterations);
+        w.u64(self.report.signals);
+        w.u64(self.report.discarded);
+        w.u64(self.next_m as u64);
+        match &self.sampler_rng {
+            Some(r) => {
+                w.bool(true);
+                for s in r.state() {
+                    w.u64(s);
+                }
+            }
+            None => w.bool(false),
+        }
+        w.u64(self.elapsed.as_nanos().min(u128::from(u64::MAX)) as u64);
+    }
+
+    /// Restore [`Self::write_state`] into a freshly started core. Only
+    /// valid right after [`Self::start`] with the same configuration (the
+    /// caller re-runs the deterministic init, then overwrites algorithm
+    /// and RNG state from the snapshot).
+    ///
+    /// Termination is *recomputed* against the current limits rather than
+    /// trusted from the snapshot: `done` is only ever a function of
+    /// convergence and the signal cap, so a run that stopped at
+    /// `max_signals` resumes — and continues bit-identically to an
+    /// uninterrupted run under the larger cap — when the restored config
+    /// raises it (the "give the job a bigger budget" serving knob).
+    pub fn read_state(&mut self, r: &mut ByteReader) -> Result<(), String> {
+        let _stored_done = r.bool().map_err(|e| e.to_string())?;
+        self.report.converged = r.bool().map_err(|e| e.to_string())?;
+        self.report.iterations = r.u64().map_err(|e| e.to_string())?;
+        self.report.signals = r.u64().map_err(|e| e.to_string())?;
+        self.report.discarded = r.u64().map_err(|e| e.to_string())?;
+        self.next_m = r.u64().map_err(|e| e.to_string())? as usize;
+        // m_schedule never exceeds max_parallelism, so a larger value is a
+        // corrupt snapshot — reject it here instead of letting the first
+        // step drive an absurd sample_batch allocation.
+        if self.next_m > self.limits.max_parallelism.max(2) {
+            return Err(format!(
+                "snapshot batch size {} exceeds max_parallelism {}",
+                self.next_m, self.limits.max_parallelism
+            ));
+        }
+        let has_stream = r.bool().map_err(|e| e.to_string())?;
+        if has_stream != (self.mode == SessionMode::Pipelined) {
+            return Err(format!(
+                "snapshot sampler stream ({has_stream}) does not match mode {:?}",
+                self.mode
+            ));
+        }
+        if has_stream {
+            let mut s = [0u64; 4];
+            for slot in &mut s {
+                *slot = r.u64().map_err(|e| e.to_string())?;
+            }
+            self.sampler_rng = Some(Rng::from_state(s).map_err(|e| e.to_string())?);
+        }
+        self.elapsed = Duration::from_nanos(r.u64().map_err(|e| e.to_string())?);
+        self.report.trace.clear(); // trace points do not survive a resume
+        self.done =
+            self.report.converged || self.report.signals >= self.limits.max_signals;
+        Ok(())
+    }
+}
+
+/// A fully-owned resumable run: algorithm + sampler + Find-Winners backend
+/// + RNG + [`SessionCore`], wired from a [`RunConfig`] exactly as
+/// [`super::run_convergence`] wires a blocking run. This is the unit the
+/// fleet scheduler multiplexes over one shared [`WorkerPool`] and the unit
+/// [`crate::fleet::snapshot`] checkpoints.
+pub struct ConvergenceSession {
+    driver: Driver,
+    seed: u64,
+    /// FNV-1a digest of the semantics-affecting configuration + mesh
+    /// identity (see [`semantic_fingerprint`]) — pinned by the snapshot
+    /// header so a restore into a *different* run fails loudly.
+    fingerprint: u64,
+    algo: Box<dyn GrowingNetwork>,
+    sampler: SurfaceSampler,
+    fw: Box<dyn FindWinners>,
+    rng: Rng,
+    core: SessionCore,
+}
+
+/// Digest the parts of a run that change its *results*: the sampled
+/// surface (area + bounds — the mesh identity as the sampler sees it) and
+/// every semantics-carrying parameter of the active algorithm, plus the
+/// housekeeping cadence and the m-schedule cap. Deliberately **excluded**:
+/// `max_signals` (raising the cap and resuming is the serving knob — see
+/// [`SessionCore::read_state`]), `trace`, and the semantics-free
+/// performance knobs (`update_threads`, `find_threads`, `regions`,
+/// `queue_depth`, `batch_tile` — all proven bit-invisible by the parity
+/// suites). Floats are digested by bit pattern.
+fn semantic_fingerprint(cfg: &RunConfig, sampler: &SurfaceSampler) -> u64 {
+    // FNV-1a, 64-bit: tiny, dependency-free, stable across builds (unlike
+    // `DefaultHasher`, whose algorithm is unspecified).
+    struct Fnv(u64);
+    impl Fnv {
+        fn eat(&mut self, bytes: &[u8]) {
+            for &b in bytes {
+                self.0 ^= u64::from(b);
+                self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+            }
+        }
+        fn f32s(&mut self, vals: &[f32]) {
+            for v in vals {
+                self.eat(&v.to_bits().to_le_bytes());
+            }
+        }
+        fn u64v(&mut self, v: u64) {
+            self.eat(&v.to_le_bytes());
+        }
+        fn adapt(&mut self, a: &crate::som::AdaptParams) {
+            self.f32s(&[a.eps_b, a.eps_n, a.max_age]);
+            self.eat(&[u8::from(a.firing_modulation)]);
+        }
+        fn hab(&mut self, h: &crate::som::Habituation) {
+            self.f32s(&[h.alpha, h.tau_b, h.tau_n, h.threshold]);
+        }
+    }
+    let mut fnv = Fnv(0xcbf2_9ce4_8422_2325);
+    fnv.u64v(sampler.total_area().to_bits());
+    let b = sampler.bounds();
+    fnv.f32s(&[b.min.x, b.min.y, b.min.z, b.max.x, b.max.y, b.max.z]);
+    fnv.u64v(cfg.limits.check_interval);
+    fnv.u64v(cfg.limits.max_parallelism as u64);
+    match cfg.algorithm {
+        crate::config::Algorithm::Soam => {
+            let p = &cfg.soam;
+            fnv.adapt(&p.adapt);
+            fnv.hab(&p.hab);
+            fnv.f32s(&[p.insertion_threshold, p.threshold_decay, p.threshold_floor_frac]);
+            fnv.u64v(p.max_units as u64);
+        }
+        crate::config::Algorithm::Gwr => {
+            let p = &cfg.gwr;
+            fnv.adapt(&p.adapt);
+            fnv.hab(&p.hab);
+            fnv.f32s(&[p.insertion_threshold, p.target_qe]);
+            fnv.u64v(p.max_units as u64);
+        }
+        crate::config::Algorithm::Gng => {
+            let p = &cfg.gng;
+            fnv.adapt(&p.adapt);
+            fnv.u64v(p.lambda);
+            fnv.f32s(&[p.alpha, p.beta, p.target_qe]);
+            fnv.u64v(p.max_units as u64);
+        }
+    }
+    // The Indexed driver's cube size changes its (approximate) results.
+    if cfg.driver == Driver::Indexed {
+        fnv.f32s(&[cfg.index_cell]);
+    }
+    fnv.0
+}
+
+impl ConvergenceSession {
+    /// Build a session for `cfg` over `mesh`. `shared_pool` is the fleet's
+    /// one worker pool (sized for the widest job); `None` makes the
+    /// session create its own when the resolved thread counts need one —
+    /// the exact wiring of [`super::run_convergence`], so a solo session
+    /// is bit-identical to the blocking entrypoint.
+    pub fn new(cfg: &RunConfig, mesh: &Mesh, shared_pool: Option<Arc<WorkerPool>>) -> Result<Self> {
+        if mesh.is_empty() {
+            bail!("cannot run on an empty mesh");
+        }
+        if mesh.total_area() <= 0.0 {
+            bail!("cannot sample a zero-area mesh");
+        }
+        let sampler = SurfaceSampler::new(mesh);
+        let mut algo = make_algorithm(cfg);
+        let mut fw = make_findwinners(cfg)?;
+        let mut rng = Rng::seed_from(cfg.seed);
+
+        // Thread/region wiring — the same resolvers `run_convergence` uses
+        // (one source of truth; see `engine::resolve_run_threads`).
+        let (find_threads, update_threads) = resolve_run_threads(cfg);
+        let region_map = build_region_map(cfg, sampler.bounds());
+        if let Some(map) = &region_map {
+            fw.attach_regions(map.clone());
+        }
+        let pool = if find_threads > 1 || update_threads > 1 {
+            Some(shared_pool.unwrap_or_else(|| {
+                Arc::new(WorkerPool::new(find_threads.max(update_threads)))
+            }))
+        } else {
+            None
+        };
+        if find_threads > 1 {
+            let pool = pool.as_ref().expect("pool sized for find_threads");
+            fw.attach_pool(Arc::clone(pool), find_threads);
+        }
+        let mut executor = BatchExecutor::with_pool(update_threads, pool);
+        if let Some(map) = region_map {
+            executor.set_regions(map);
+        }
+
+        let mode = SessionMode::for_driver(cfg.driver);
+        let impl_name = match cfg.driver {
+            Driver::Parallel => "parallel",
+            Driver::Pipelined => "pipelined",
+            _ => fw.name(),
+        };
+        let core = SessionCore::start(
+            mode,
+            impl_name,
+            executor,
+            cfg.limits,
+            algo.as_mut(),
+            &sampler,
+            fw.as_mut(),
+            &mut rng,
+        );
+        let fingerprint = semantic_fingerprint(cfg, &sampler);
+        Ok(Self {
+            driver: cfg.driver,
+            seed: cfg.seed,
+            fingerprint,
+            algo,
+            sampler,
+            fw,
+            rng,
+            core,
+        })
+    }
+
+    /// Run up to `iterations` loop iterations (batches for the batched
+    /// modes, signals for single-signal). Returns `true` while more work
+    /// remains.
+    pub fn step(&mut self, iterations: u64) -> bool {
+        self.core.step(
+            self.algo.as_mut(),
+            &self.sampler,
+            self.fw.as_mut(),
+            &mut self.rng,
+            iterations,
+        )
+    }
+
+    /// Drive to termination and return the finalized report.
+    pub fn run_to_end(&mut self) -> RunReport {
+        self.core
+            .run_to_end(self.algo.as_mut(), &self.sampler, self.fw.as_mut(), &mut self.rng);
+        self.finish()
+    }
+
+    /// Finalize the report (idempotent; the session steps no further).
+    pub fn finish(&mut self) -> RunReport {
+        self.core.finish(self.algo.as_ref())
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.core.is_done()
+    }
+
+    pub fn driver(&self) -> Driver {
+        self.driver
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Digest of the semantics-affecting config + mesh identity (see
+    /// [`semantic_fingerprint`]'s doc for what is in and what is
+    /// deliberately out). Pinned by the snapshot header.
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    /// The algorithm (and through it the network) — read access for parity
+    /// tests and reporting.
+    pub fn algo(&self) -> &dyn GrowingNetwork {
+        self.algo.as_ref()
+    }
+
+    pub fn report_so_far(&self) -> &RunReport {
+        self.core.report_so_far()
+    }
+
+    /// Serialize the session's complete resumable state: loop counters,
+    /// driver RNG, algorithm + network. (The snapshot file format with its
+    /// header/validation lives in [`crate::fleet::snapshot`].)
+    pub fn write_state(&self, w: &mut ByteWriter) {
+        self.core.write_state(w);
+        for s in self.rng.state() {
+            w.u64(s);
+        }
+        self.algo.save_state(w);
+    }
+
+    /// Restore [`Self::write_state`] bytes into this freshly-built session
+    /// (same config + mesh). The Find-Winners structures are rebuilt from
+    /// the restored network, so the next `step` continues bit-identically.
+    pub fn read_state(&mut self, r: &mut ByteReader) -> Result<(), String> {
+        self.core.read_state(r)?;
+        let mut s = [0u64; 4];
+        for slot in &mut s {
+            *slot = r.u64().map_err(|e| e.to_string())?;
+        }
+        self.rng = Rng::from_state(s).map_err(|e| e.to_string())?;
+        self.algo.load_state(r)?;
+        self.fw.rebuild(self.algo.net());
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Algorithm;
+    use crate::mesh::{benchmark_mesh, BenchmarkShape};
+
+    fn quick_cfg(driver: Driver) -> RunConfig {
+        let mut cfg = RunConfig::preset(BenchmarkShape::Blob);
+        cfg.driver = driver;
+        cfg.soam.insertion_threshold = 0.15;
+        cfg.limits.max_signals = 20_000;
+        cfg.seed = 11;
+        cfg
+    }
+
+    /// Stepping a session in arbitrary chunks must equal the blocking
+    /// driver bit-for-bit (same config, same seed).
+    #[test]
+    fn chunked_stepping_matches_blocking_run() {
+        for driver in [Driver::Multi, Driver::Parallel, Driver::Single] {
+            let cfg = quick_cfg(driver);
+            let mesh = benchmark_mesh(cfg.shape, 20);
+            let blocking = {
+                let mut rng = Rng::seed_from(cfg.seed);
+                super::super::run(&mesh, driver, &cfg, &mut rng).unwrap()
+            };
+            let mut session = ConvergenceSession::new(&cfg, &mesh, None).unwrap();
+            let mut chunk = 1u64;
+            while session.step(chunk) {
+                chunk = (chunk * 3 + 1) % 17 + 1; // irregular chunking
+            }
+            let r = session.finish();
+            let label = format!("driver {}", driver.name());
+            assert_eq!(blocking.iterations, r.iterations, "{label}");
+            assert_eq!(blocking.signals, r.signals, "{label}");
+            assert_eq!(blocking.discarded, r.discarded, "{label}");
+            assert_eq!(blocking.units, r.units, "{label}");
+            assert_eq!(blocking.connections, r.connections, "{label}");
+            assert_eq!(blocking.qe.to_bits(), r.qe.to_bits(), "{label}");
+            assert_eq!(blocking.converged, r.converged, "{label}");
+        }
+    }
+
+    #[test]
+    fn session_reports_driver_metadata() {
+        let mut cfg = quick_cfg(Driver::Multi);
+        cfg.algorithm = Algorithm::Gng;
+        cfg.limits.max_signals = 3_000;
+        let mesh = benchmark_mesh(cfg.shape, 20);
+        let mut session = ConvergenceSession::new(&cfg, &mesh, None).unwrap();
+        assert_eq!(session.driver(), Driver::Multi);
+        assert_eq!(session.seed(), 11);
+        assert!(!session.is_done());
+        let r = session.run_to_end();
+        assert!(session.is_done());
+        assert_eq!(r.algorithm, "gng");
+        assert!(r.signals >= 3_000);
+    }
+}

@@ -1,0 +1,355 @@
+//! Fleet — multi-network orchestration: N independent growing-network
+//! reconstructions multiplexed over **one** shared [`WorkerPool`], with
+//! resumable sessions and bit-exact checkpoint/restore.
+//!
+//! The ROADMAP's step after PR 4's region sharding is "multiple *networks*
+//! per process (one region grid each)": a serving system runs many
+//! concurrent reconstruction workloads, and restarting a half-converged
+//! network from scratch is not acceptable. The fleet is that seam:
+//!
+//! - [`JobSpec`] (`spec`): one job = point-cloud source + full
+//!   [`crate::config::RunConfig`], parsed from a JSON jobs manifest;
+//! - [`Fleet`]: builds one [`ConvergenceSession`] per job — each with its
+//!   own sampler, Find-Winners backend, region grid, RNG stream and
+//!   executor — and schedules them **work-conserving round-robin at batch
+//!   granularity** over a single worker pool sized for the widest job.
+//!   Jobs share only compute, never state, so a fleet-of-N is
+//!   bit-identical to N solo runs (`rust/tests/fleet.rs`);
+//! - [`snapshot`]: the versioned checkpoint format; kill-and-resume is
+//!   bit-identical to an uninterrupted run (`rust/tests/executor_parity.rs`
+//!   covers the full knob matrix).
+//!
+//! Scheduling is deliberately cooperative and deterministic: one round
+//! steps every live job `stride` iterations in manifest order. The pool's
+//! caller gate serializes the *parallel sections* of different jobs
+//! anyway (plan/commit/find shards), so interleaving at batch granularity
+//! is work-conserving — whenever any job has work, the pool has work —
+//! while per-job results stay a pure function of the job's own spec.
+
+pub mod snapshot;
+mod spec;
+
+pub use spec::{parse_manifest, JobSpec, MANIFEST_VERSION};
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::engine::{resolve_run_threads, ConvergenceSession, RunReport};
+use crate::metrics::{fmt_secs, Table};
+use crate::runtime::WorkerPool;
+
+/// Scheduler options.
+#[derive(Clone, Debug)]
+pub struct FleetOptions {
+    /// Iterations (batches; signals for single-signal drivers) each live
+    /// job advances per round-robin turn.
+    pub stride: u64,
+    /// Checkpoint a job every this many of its own turns (0 = never).
+    pub checkpoint_every: u64,
+    /// Where checkpoint files (`<job>.msgsnap`) live.
+    pub checkpoint_dir: Option<PathBuf>,
+}
+
+impl Default for FleetOptions {
+    fn default() -> Self {
+        Self { stride: 1, checkpoint_every: 0, checkpoint_dir: None }
+    }
+}
+
+/// One scheduled job: its spec, its session, and checkpoint bookkeeping.
+pub struct FleetJob {
+    spec: JobSpec,
+    session: ConvergenceSession,
+    turns_since_checkpoint: u64,
+    report: Option<RunReport>,
+}
+
+impl FleetJob {
+    pub fn spec(&self) -> &JobSpec {
+        &self.spec
+    }
+
+    pub fn session(&self) -> &ConvergenceSession {
+        &self.session
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.session.is_done()
+    }
+
+    /// The finalized report (None while the job is still running).
+    pub fn report(&self) -> Option<&RunReport> {
+        self.report.as_ref()
+    }
+
+    fn checkpoint_path(&self, dir: &std::path::Path) -> PathBuf {
+        dir.join(format!("{}.msgsnap", self.spec.file_stem()))
+    }
+}
+
+/// Aggregated result of a fleet run: one [`RunReport`] per job, in
+/// manifest order.
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    pub jobs: Vec<(String, RunReport)>,
+}
+
+impl FleetReport {
+    /// One summary row per job (name, algorithm, driver, signals, units,
+    /// connections, converged, wall time).
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(&[
+            "job", "algorithm", "driver", "signals", "discarded", "units", "connections",
+            "converged", "time",
+        ]);
+        for (name, r) in &self.jobs {
+            t.row(vec![
+                name.clone(),
+                r.algorithm.clone(),
+                r.implementation.clone(),
+                r.signals.to_string(),
+                r.discarded.to_string(),
+                r.units.to_string(),
+                r.connections.to_string(),
+                r.converged.to_string(),
+                fmt_secs(r.total),
+            ]);
+        }
+        t
+    }
+}
+
+/// The multi-network scheduler (see module docs).
+pub struct Fleet {
+    jobs: Vec<FleetJob>,
+    /// The one shared pool (None when every job is single-threaded).
+    pool: Option<Arc<WorkerPool>>,
+}
+
+impl Fleet {
+    /// Build every job's session. One worker pool is created, sized for
+    /// the **widest** job (`max` over each job's resolved
+    /// `find_threads`/`update_threads`), and shared by all of them — a
+    /// narrower job simply activates fewer workers per handoff.
+    pub fn new(specs: Vec<JobSpec>) -> Result<Fleet> {
+        // Checkpoint files are named by the sanitized stem, so two jobs
+        // whose *names* differ but whose stems collide (e.g. "scan a" and
+        // "scan_a") would silently share — and cross-restore — one
+        // checkpoint file. Reject up front.
+        for i in 0..specs.len() {
+            for j in i + 1..specs.len() {
+                if specs[i].file_stem() == specs[j].file_stem() {
+                    bail!(
+                        "jobs {:?} and {:?} both checkpoint as {:?} — rename one",
+                        specs[i].name,
+                        specs[j].name,
+                        specs[i].file_stem()
+                    );
+                }
+            }
+        }
+        let width = specs.iter().map(pool_width).max().unwrap_or(1);
+        let pool = (width > 1).then(|| Arc::new(WorkerPool::new(width)));
+        let mut jobs = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let mesh = spec
+                .build_mesh()
+                .with_context(|| format!("job {:?}: building mesh", spec.name))?;
+            let session = ConvergenceSession::new(&spec.cfg, &mesh, pool.clone())
+                .with_context(|| format!("job {:?}", spec.name))?;
+            jobs.push(FleetJob {
+                spec,
+                session,
+                turns_since_checkpoint: 0,
+                report: None,
+            });
+        }
+        Ok(Fleet { jobs, pool })
+    }
+
+    pub fn jobs(&self) -> &[FleetJob] {
+        &self.jobs
+    }
+
+    /// Width of the shared pool (1 = no pool).
+    pub fn pool_width(&self) -> usize {
+        self.pool.as_ref().map_or(1, |p| p.size())
+    }
+
+    /// Resume every job that has a checkpoint in `dir` (jobs without one
+    /// start fresh). Returns the resumed job names.
+    pub fn resume_from(&mut self, dir: &std::path::Path) -> Result<Vec<String>> {
+        let mut resumed = Vec::new();
+        for job in &mut self.jobs {
+            let path = job.checkpoint_path(dir);
+            if !path.exists() {
+                continue;
+            }
+            snapshot::load_from(&path, &mut job.session)
+                .map_err(anyhow::Error::msg)
+                .with_context(|| format!("job {:?}", job.spec.name))?;
+            if job.session.is_done() {
+                job.report = Some(job.session.finish());
+            }
+            resumed.push(job.spec.name.clone());
+        }
+        Ok(resumed)
+    }
+
+    /// Run every job to termination, round-robin (see module docs).
+    /// `progress` receives one line per job completion and per checkpoint.
+    pub fn run(
+        &mut self,
+        opts: &FleetOptions,
+        mut progress: impl FnMut(&str),
+    ) -> Result<FleetReport> {
+        let stride = opts.stride.max(1);
+        loop {
+            let mut live = 0usize;
+            for job in &mut self.jobs {
+                if job.session.is_done() {
+                    continue;
+                }
+                live += 1;
+                let running = job.session.step(stride);
+                job.turns_since_checkpoint += 1;
+                // Checkpoint on the cadence and once more at termination
+                // (a kill right after the final batch must also resume to
+                // the finished state, not re-run the tail).
+                let due = opts.checkpoint_every > 0
+                    && (job.turns_since_checkpoint >= opts.checkpoint_every || !running);
+                if let Some(dir) = opts.checkpoint_dir.as_ref().filter(|_| due) {
+                    std::fs::create_dir_all(dir)
+                        .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+                    let path = job.checkpoint_path(dir);
+                    snapshot::save_to(&path, &job.session)
+                        .with_context(|| format!("writing checkpoint {}", path.display()))?;
+                    job.turns_since_checkpoint = 0;
+                    progress(&format!(
+                        "checkpoint {} @ {} signals",
+                        path.display(),
+                        job.session.report_so_far().signals
+                    ));
+                }
+                if !running {
+                    let report = job.session.finish();
+                    progress(&format!(
+                        "job {} finished: {} units, {} signals, converged={}",
+                        job.spec.name, report.units, report.signals, report.converged
+                    ));
+                    job.report = Some(report);
+                }
+            }
+            if live == 0 {
+                break;
+            }
+        }
+        Ok(FleetReport {
+            jobs: self
+                .jobs
+                .iter_mut()
+                .map(|j| {
+                    let report =
+                        j.report.get_or_insert_with(|| j.session.finish()).clone();
+                    (j.spec.name.clone(), report)
+                })
+                .collect(),
+        })
+    }
+}
+
+/// Worker threads a job's spec can put to use — the engine's own
+/// resolution rules ([`resolve_run_threads`], the single source of the
+/// driver → thread mapping), collapsed to a width for pool sizing.
+fn pool_width(spec: &JobSpec) -> usize {
+    let (find, update) = resolve_run_threads(&spec.cfg);
+    find.max(update)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Algorithm, Driver, RunConfig};
+    use crate::mesh::BenchmarkShape;
+
+    fn quick_spec(name: &str, shape: BenchmarkShape, algorithm: Algorithm, seed: u64) -> JobSpec {
+        let mut cfg = RunConfig::preset(shape);
+        cfg.driver = Driver::Multi;
+        cfg.algorithm = algorithm;
+        cfg.seed = seed;
+        cfg.soam.insertion_threshold = 0.16;
+        cfg.gwr.insertion_threshold = 0.16;
+        cfg.limits.max_signals = 8_000;
+        JobSpec::from_config(name, cfg)
+    }
+
+    #[test]
+    fn fleet_runs_all_jobs_to_completion() {
+        let specs = vec![
+            quick_spec("a", BenchmarkShape::Blob, Algorithm::Soam, 1),
+            quick_spec("b", BenchmarkShape::Eight, Algorithm::Gng, 2),
+        ];
+        let mut fleet = Fleet::new(specs).unwrap();
+        assert_eq!(fleet.pool_width(), 1, "multi driver, no threads: no pool");
+        let mut events = Vec::new();
+        let report = fleet.run(&FleetOptions::default(), |line| events.push(line.to_string()))
+            .unwrap();
+        assert_eq!(report.jobs.len(), 2);
+        assert_eq!(report.jobs[0].0, "a");
+        assert!(report.jobs[0].1.signals >= 8_000);
+        assert_eq!(report.jobs[1].1.algorithm, "gng");
+        assert_eq!(events.len(), 2, "one completion line per job");
+        let rendered = report.to_table().render();
+        assert!(rendered.contains("gng") && rendered.contains("soam"), "{rendered}");
+    }
+
+    #[test]
+    fn colliding_checkpoint_stems_rejected() {
+        // Distinct names, same sanitized checkpoint stem: must not build
+        // (the jobs would silently share one .msgsnap file).
+        let a = quick_spec("scan a", BenchmarkShape::Blob, Algorithm::Soam, 1);
+        let b = quick_spec("scan_a", BenchmarkShape::Blob, Algorithm::Soam, 2);
+        let err = Fleet::new(vec![a, b]).unwrap_err().to_string();
+        assert!(err.contains("scan_a"), "{err}");
+    }
+
+    #[test]
+    fn pool_sized_for_the_widest_job() {
+        let mut wide = quick_spec("wide", BenchmarkShape::Blob, Algorithm::Soam, 3);
+        wide.cfg.driver = Driver::Parallel;
+        wide.cfg.update_threads = 3;
+        wide.cfg.limits.max_signals = 2_000;
+        let narrow = quick_spec("narrow", BenchmarkShape::Blob, Algorithm::Soam, 4);
+        let fleet = Fleet::new(vec![wide, narrow]).unwrap();
+        assert_eq!(fleet.pool_width(), 3);
+    }
+
+    #[test]
+    fn checkpoint_files_are_written_and_resumable() {
+        let dir = std::env::temp_dir().join("msgsn_fleet_ckpt_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let spec = quick_spec("ckpt-job", BenchmarkShape::Blob, Algorithm::Soam, 5);
+        let mut fleet = Fleet::new(vec![spec.clone()]).unwrap();
+        let opts = FleetOptions {
+            stride: 1,
+            checkpoint_every: 3,
+            checkpoint_dir: Some(dir.clone()),
+        };
+        let a = fleet.run(&opts, |_| {}).unwrap();
+        let path = dir.join("ckpt-job.msgsnap");
+        assert!(path.exists(), "checkpoint file missing");
+
+        // A brand-new fleet resuming from the final checkpoint reports the
+        // finished run without redoing it.
+        let mut fleet2 = Fleet::new(vec![spec]).unwrap();
+        let resumed = fleet2.resume_from(&dir).unwrap();
+        assert_eq!(resumed, vec!["ckpt-job".to_string()]);
+        let b = fleet2.run(&opts, |_| {}).unwrap();
+        assert_eq!(a.jobs[0].1.signals, b.jobs[0].1.signals);
+        assert_eq!(a.jobs[0].1.units, b.jobs[0].1.units);
+        assert_eq!(a.jobs[0].1.qe.to_bits(), b.jobs[0].1.qe.to_bits());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,284 @@
+//! Versioned, bit-exact checkpoint format for [`ConvergenceSession`]s.
+//!
+//! A snapshot captures everything a later process needs to continue a
+//! half-converged run **bit-identically to never having stopped**:
+//!
+//! - the network slab — unit scalars, adjacency **in list order** (it
+//!   drives the f32 operation order of later updates), the sharded free
+//!   lists with their global-LIFO stamps (allocation order of future unit
+//!   ids), via [`crate::som::Network::write_state`];
+//! - the algorithm's scalars: the QE EMA, GNG's `signals_seen`,
+//!   `decay_epoch` and per-slot `error_epoch` stamps (stored errors are
+//!   only meaningful together with their stamps — materializing before
+//!   saving would change *when* each decay ladder runs), SOAM's strike
+//!   tables;
+//! - the driver RNG state (and, for pipelined sessions, the forked
+//!   sampler stream) via [`crate::rng::Rng::state`];
+//! - the session counters (iterations, signals, discards, the pipelined
+//!   m-schedule lag, termination flags).
+//!
+//! What is deliberately **not** stored: the mesh/sampler (rebuilt
+//! deterministically from the [`super::JobSpec`]), the Find-Winners
+//! structures (rebuilt from the restored network — they are derived
+//! state), the executor (it holds no cross-batch semantic state), phase
+//! timings and trace points (reporting only). Restoring therefore
+//! requires the *same spec* the snapshot was taken under; the header
+//! pins algorithm, driver, seed and a semantic fingerprint of the mesh +
+//! every results-affecting parameter, and the restore fails loudly on
+//! any mismatch rather than continuing a subtly different run (only
+//! `max_signals` — the raise-the-budget knob — and the bit-invisible
+//! performance knobs may change across a resume).
+//!
+//! Snapshots are only taken at iteration boundaries (between two
+//! `step` calls), where every transient buffer is empty — the property
+//! that makes the captured state complete.
+
+use std::path::Path;
+
+use crate::engine::ConvergenceSession;
+use crate::runtime::bytes::{ByteReader, ByteWriter};
+
+/// File magic ("MSGSN" + "FLT" for fleet).
+pub const MAGIC: &[u8; 8] = b"MSGSNFLT";
+
+/// Current snapshot format version. Bump on any layout change; readers
+/// reject other versions instead of mis-parsing.
+pub const SNAPSHOT_VERSION: u32 = 1;
+
+/// Serialize a session checkpoint. The header pins algorithm, driver,
+/// seed AND the session's semantic fingerprint (mesh identity + every
+/// results-affecting parameter — see
+/// [`ConvergenceSession::fingerprint`]), so a restore under an edited
+/// spec fails instead of continuing a subtly different run. `max_signals`
+/// and the performance knobs are deliberately outside the fingerprint.
+pub fn snapshot_session(session: &ConvergenceSession) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.raw(MAGIC);
+    w.u32(SNAPSHOT_VERSION);
+    w.str(session.algo().name());
+    w.str(session.driver().name());
+    w.u64(session.seed());
+    w.u64(session.fingerprint());
+    session.write_state(&mut w);
+    w.into_inner()
+}
+
+/// Restore a checkpoint into a freshly built session (same spec: same
+/// mesh, same `RunConfig`). Validates the header against the session
+/// before touching any state.
+pub fn restore_session(session: &mut ConvergenceSession, bytes: &[u8]) -> Result<(), String> {
+    let mut r = ByteReader::new(bytes);
+    r.expect_raw(MAGIC).map_err(|e| e.to_string())?;
+    let version = r.u32().map_err(|e| e.to_string())?;
+    if version != SNAPSHOT_VERSION {
+        return Err(format!(
+            "snapshot version {version} (this build reads version {SNAPSHOT_VERSION})"
+        ));
+    }
+    let algo = r.str().map_err(|e| e.to_string())?;
+    if algo != session.algo().name() {
+        return Err(format!(
+            "snapshot is a {algo:?} run, the job spec builds {:?}",
+            session.algo().name()
+        ));
+    }
+    let driver = r.str().map_err(|e| e.to_string())?;
+    if driver != session.driver().name() {
+        return Err(format!(
+            "snapshot driver {driver:?} != spec driver {:?}",
+            session.driver().name()
+        ));
+    }
+    let seed = r.u64().map_err(|e| e.to_string())?;
+    if seed != session.seed() {
+        return Err(format!("snapshot seed {seed} != spec seed {}", session.seed()));
+    }
+    let fingerprint = r.u64().map_err(|e| e.to_string())?;
+    if fingerprint != session.fingerprint() {
+        return Err(format!(
+            "snapshot config fingerprint {fingerprint:#x} != the spec's {:#x} — the mesh \
+             or a results-affecting parameter changed since the checkpoint (only \
+             max_signals and the performance knobs may differ across a resume)",
+            session.fingerprint()
+        ));
+    }
+    session.read_state(&mut r)?;
+    r.expect_end().map_err(|e| e.to_string())?;
+    Ok(())
+}
+
+/// Write a checkpoint file (atomic-ish: temp file + rename, so a crash
+/// mid-write never leaves a truncated checkpoint under the final name).
+pub fn save_to(path: &Path, session: &ConvergenceSession) -> std::io::Result<()> {
+    let bytes = snapshot_session(session);
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, &bytes)?;
+    std::fs::rename(&tmp, path)
+}
+
+/// Read a checkpoint file into a freshly built session.
+pub fn load_from(path: &Path, session: &mut ConvergenceSession) -> Result<(), String> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| format!("reading checkpoint {}: {e}", path.display()))?;
+    restore_session(session, &bytes)
+        .map_err(|e| format!("checkpoint {}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Algorithm, Driver, RunConfig};
+    use crate::mesh::{benchmark_mesh, BenchmarkShape};
+
+    fn cfg(driver: Driver, algorithm: Algorithm, seed: u64) -> RunConfig {
+        let mut cfg = RunConfig::preset(BenchmarkShape::Blob);
+        cfg.driver = driver;
+        cfg.algorithm = algorithm;
+        cfg.seed = seed;
+        cfg.soam.insertion_threshold = 0.15;
+        cfg.gwr.insertion_threshold = 0.15;
+        cfg.limits.max_signals = 15_000;
+        cfg
+    }
+
+    /// Kill-and-resume must be bit-identical to an uninterrupted session
+    /// (the full matrix against the Multi reference lives in
+    /// `rust/tests/executor_parity.rs`; this is the format's own test).
+    #[test]
+    fn roundtrip_resume_matches_uninterrupted() {
+        for (driver, algorithm) in [
+            (Driver::Multi, Algorithm::Soam),
+            (Driver::Multi, Algorithm::Gng),
+            (Driver::Pipelined, Algorithm::Soam),
+            (Driver::Single, Algorithm::Gwr),
+        ] {
+            let cfg = cfg(driver, algorithm, 19);
+            let mesh = benchmark_mesh(cfg.shape, 20);
+
+            let mut uninterrupted = ConvergenceSession::new(&cfg, &mesh, None).unwrap();
+            let a = uninterrupted.run_to_end();
+
+            let mut first = ConvergenceSession::new(&cfg, &mesh, None).unwrap();
+            // Step a prefix (batches for batched modes, signals for single).
+            let prefix = if driver == Driver::Single { 4_000 } else { 12 };
+            first.step(prefix);
+            let bytes = snapshot_session(&first);
+            drop(first);
+
+            let mut resumed = ConvergenceSession::new(&cfg, &mesh, None).unwrap();
+            restore_session(&mut resumed, &bytes).unwrap();
+            let b = resumed.run_to_end();
+
+            let label = format!("{}/{}", driver.name(), a.algorithm);
+            assert_eq!(a.iterations, b.iterations, "{label}");
+            assert_eq!(a.signals, b.signals, "{label}");
+            assert_eq!(a.discarded, b.discarded, "{label}");
+            assert_eq!(a.units, b.units, "{label}");
+            assert_eq!(a.connections, b.connections, "{label}");
+            assert_eq!(a.qe.to_bits(), b.qe.to_bits(), "{label}");
+            let (na, nb) = (uninterrupted.algo().net(), resumed.algo().net());
+            assert_eq!(na.capacity(), nb.capacity(), "{label}: slab");
+            for id in 0..na.capacity() as u32 {
+                assert_eq!(na.is_alive(id), nb.is_alive(id), "{label}: unit {id}");
+                if !na.is_alive(id) {
+                    continue;
+                }
+                let (ua, ub) = (na.unit(id), nb.unit(id));
+                assert_eq!(ua.pos.x.to_bits(), ub.pos.x.to_bits(), "{label}: unit {id}");
+                assert_eq!(ua.firing.to_bits(), ub.firing.to_bits(), "{label}: unit {id}");
+                assert_eq!(ua.error.to_bits(), ub.error.to_bits(), "{label}: unit {id}");
+                let ea: Vec<(u32, u32)> =
+                    na.edges_of(id).iter().map(|e| (e.to, e.age.to_bits())).collect();
+                let eb: Vec<(u32, u32)> =
+                    nb.edges_of(id).iter().map(|e| (e.to, e.age.to_bits())).collect();
+                assert_eq!(ea, eb, "{label}: edges of {id}");
+            }
+        }
+    }
+
+    #[test]
+    fn header_mismatches_are_rejected() {
+        let cfg_a = cfg(Driver::Multi, Algorithm::Soam, 1);
+        let mesh = benchmark_mesh(cfg_a.shape, 20);
+        let mut session = ConvergenceSession::new(&cfg_a, &mesh, None).unwrap();
+        session.step(3);
+        let bytes = snapshot_session(&session);
+
+        // Wrong algorithm.
+        let mut other = ConvergenceSession::new(
+            &cfg(Driver::Multi, Algorithm::Gng, 1),
+            &mesh,
+            None,
+        )
+        .unwrap();
+        assert!(restore_session(&mut other, &bytes).unwrap_err().contains("gng"));
+
+        // Wrong driver.
+        let mut other =
+            ConvergenceSession::new(&cfg(Driver::Parallel, Algorithm::Soam, 1), &mesh, None)
+                .unwrap();
+        assert!(restore_session(&mut other, &bytes).unwrap_err().contains("driver"));
+
+        // Wrong seed.
+        let mut other =
+            ConvergenceSession::new(&cfg(Driver::Multi, Algorithm::Soam, 2), &mesh, None)
+                .unwrap();
+        assert!(restore_session(&mut other, &bytes).unwrap_err().contains("seed"));
+
+        // Same algorithm/driver/seed but an edited results-affecting
+        // parameter: the fingerprint must reject it.
+        let mut edited_cfg = cfg(Driver::Multi, Algorithm::Soam, 1);
+        edited_cfg.soam.insertion_threshold = 0.11;
+        let mut other = ConvergenceSession::new(&edited_cfg, &mesh, None).unwrap();
+        assert!(
+            restore_session(&mut other, &bytes).unwrap_err().contains("fingerprint"),
+            "edited insertion_threshold must be rejected"
+        );
+
+        // …while raising only max_signals (the resume-budget knob) passes
+        // the header and restores cleanly.
+        let mut raised_cfg = cfg(Driver::Multi, Algorithm::Soam, 1);
+        raised_cfg.limits.max_signals *= 2;
+        let mut other = ConvergenceSession::new(&raised_cfg, &mesh, None).unwrap();
+        restore_session(&mut other, &bytes).unwrap();
+
+        // Truncation anywhere errors, never panics.
+        let mut fresh =
+            ConvergenceSession::new(&cfg_a, &mesh, None).unwrap();
+        for cut in [0, 4, MAGIC.len(), bytes.len() / 2, bytes.len() - 1] {
+            assert!(
+                restore_session(&mut fresh, &bytes[..cut]).is_err(),
+                "cut at {cut} must fail"
+            );
+            fresh = ConvergenceSession::new(&cfg_a, &mesh, None).unwrap();
+        }
+
+        // Bad version.
+        let mut bad = bytes.clone();
+        bad[8] = 0xFF;
+        assert!(restore_session(&mut fresh, &bad).unwrap_err().contains("version"));
+
+        // Trailing garbage.
+        let mut bad = bytes.clone();
+        bad.push(0);
+        let mut fresh = ConvergenceSession::new(&cfg_a, &mesh, None).unwrap();
+        assert!(restore_session(&mut fresh, &bad).unwrap_err().contains("trailing"));
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let cfg = cfg(Driver::Multi, Algorithm::Soam, 5);
+        let mesh = benchmark_mesh(cfg.shape, 20);
+        let mut session = ConvergenceSession::new(&cfg, &mesh, None).unwrap();
+        session.step(5);
+        let path = std::env::temp_dir().join("msgsn_test_snapshot.msgsnap");
+        save_to(&path, &session).unwrap();
+        let a = session.run_to_end();
+        let mut resumed = ConvergenceSession::new(&cfg, &mesh, None).unwrap();
+        load_from(&path, &mut resumed).unwrap();
+        let b = resumed.run_to_end();
+        assert_eq!(a.units, b.units);
+        assert_eq!(a.qe.to_bits(), b.qe.to_bits());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,284 @@
+//! Fleet job specifications and the JSON jobs-manifest parser.
+//!
+//! A manifest describes N independent reconstruction jobs — each with its
+//! own point-cloud source (a benchmark shape or an OBJ/OFF file), its own
+//! algorithm/driver/seed and any [`RunConfig`] knob — that the
+//! [`super::Fleet`] scheduler multiplexes over one worker pool:
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "jobs": [
+//!     {
+//!       "name": "blob-soam",
+//!       "mesh": "blob",
+//!       "algorithm": "soam",
+//!       "driver": "parallel",
+//!       "seed": 7,
+//!       "config": { "regions": 64, "max_signals": 400000 }
+//!     },
+//!     { "name": "scan", "mesh": "clouds/scan.obj", "driver": "multi" }
+//!   ]
+//! }
+//! ```
+//!
+//! `mesh` accepts a benchmark-shape name (`blob|eight|hand|heptoroid`) or a
+//! path to an OBJ/OFF file; `config` keys go through the same
+//! [`RunConfig::apply`] the CLI's `--set` and config files use, so every
+//! knob (thresholds, thread counts, regions, limits, …) is available per
+//! job. Parsing reuses the in-repo JSON parser (`runtime::json`, via
+//! [`crate::runtime::parse_json`]); unknown keys are errors — a typo must
+//! not silently run a default job.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{Algorithm, ConfigValue, Driver, RunConfig};
+use crate::mesh::{benchmark_mesh, read_obj, read_off, BenchmarkShape, Mesh};
+use crate::runtime::{parse_json, Json};
+
+/// Supported manifest schema version.
+pub const MANIFEST_VERSION: u64 = 1;
+
+/// One fleet job: a point-cloud source plus a full run configuration.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    /// Unique job name (report rows, checkpoint file names).
+    pub name: String,
+    /// Mesh file to load instead of the benchmark shape in `cfg.shape`.
+    pub mesh_path: Option<PathBuf>,
+    /// Full run configuration (driver, algorithm, seed, every knob).
+    pub cfg: RunConfig,
+}
+
+impl JobSpec {
+    /// A spec over a benchmark shape, named after shape + algorithm.
+    pub fn from_config(name: impl Into<String>, cfg: RunConfig) -> Self {
+        Self { name: name.into(), mesh_path: None, cfg }
+    }
+
+    /// Materialize the job's point-cloud source.
+    pub fn build_mesh(&self) -> Result<Mesh> {
+        match &self.mesh_path {
+            None => Ok(benchmark_mesh(self.cfg.shape, self.cfg.mesh_resolution)),
+            Some(path) => {
+                let mesh = match path.extension().and_then(|e| e.to_str()) {
+                    Some("off") => read_off(path)?,
+                    _ => read_obj(path)?,
+                };
+                if mesh.is_empty() {
+                    bail!("mesh {} has no faces", path.display());
+                }
+                Ok(mesh)
+            }
+        }
+    }
+
+    /// Checkpoint-safe file stem: the job name with every non
+    /// `[A-Za-z0-9._-]` byte replaced by `_` (names come from user
+    /// manifests and become file names).
+    pub fn file_stem(&self) -> String {
+        self.name
+            .chars()
+            .map(|c| {
+                if c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-') {
+                    c
+                } else {
+                    '_'
+                }
+            })
+            .collect()
+    }
+}
+
+/// Parse a jobs manifest (see module docs). Job names must be unique;
+/// missing names default to `job<N>`.
+pub fn parse_manifest(text: &str) -> Result<Vec<JobSpec>> {
+    let doc = parse_json(text).context("jobs manifest is not valid JSON")?;
+    let version = doc
+        .get("version")
+        .and_then(Json::as_u64)
+        .context("manifest needs a numeric \"version\"")?;
+    if version != MANIFEST_VERSION {
+        bail!("manifest version {version} (this build reads version {MANIFEST_VERSION})");
+    }
+    let jobs = doc
+        .get("jobs")
+        .and_then(Json::as_arr)
+        .context("manifest needs a \"jobs\" array")?;
+    if jobs.is_empty() {
+        bail!("manifest has an empty \"jobs\" array");
+    }
+    let mut specs = Vec::with_capacity(jobs.len());
+    for (k, job) in jobs.iter().enumerate() {
+        let spec = parse_job(job, k).with_context(|| format!("jobs[{k}]"))?;
+        specs.push(spec);
+    }
+    for i in 0..specs.len() {
+        for j in i + 1..specs.len() {
+            if specs[i].name == specs[j].name {
+                bail!("duplicate job name {:?} (jobs[{i}] and jobs[{j}])", specs[i].name);
+            }
+        }
+    }
+    Ok(specs)
+}
+
+fn parse_job(job: &Json, index: usize) -> Result<JobSpec> {
+    let Json::Obj(map) = job else { bail!("job entry must be an object") };
+    for key in map.keys() {
+        if !matches!(key.as_str(), "name" | "mesh" | "algorithm" | "driver" | "seed" | "config") {
+            bail!("unknown job key {key:?} (expected name|mesh|algorithm|driver|seed|config)");
+        }
+    }
+
+    let name = match job.get("name") {
+        None => format!("job{index}"),
+        Some(v) => v.as_str().context("\"name\" must be a string")?.to_string(),
+    };
+    if name.is_empty() {
+        bail!("job name must not be empty");
+    }
+
+    // Mesh source first: a shape name selects the preset the remaining
+    // knobs override (the CLI's behavior); a path keeps the default preset.
+    let (shape, mesh_path) = match job.get("mesh") {
+        None => (BenchmarkShape::Blob, None),
+        Some(v) => {
+            let s = v.as_str().context("\"mesh\" must be a string")?;
+            match BenchmarkShape::from_name(s) {
+                Some(shape) => (shape, None),
+                None => {
+                    let path = Path::new(s);
+                    match path.extension().and_then(|e| e.to_str()) {
+                        Some("obj" | "off") => (BenchmarkShape::Blob, Some(path.to_path_buf())),
+                        _ => bail!(
+                            "\"mesh\" {s:?} is neither a benchmark shape \
+                             (blob|eight|hand|heptoroid) nor an .obj/.off path"
+                        ),
+                    }
+                }
+            }
+        }
+    };
+    let mut cfg = RunConfig::preset(shape);
+
+    if let Some(v) = job.get("algorithm") {
+        let s = v.as_str().context("\"algorithm\" must be a string")?;
+        cfg.algorithm =
+            Algorithm::from_name(s).with_context(|| format!("unknown algorithm {s:?}"))?;
+    }
+    if let Some(v) = job.get("driver") {
+        let s = v.as_str().context("\"driver\" must be a string")?;
+        cfg.driver = Driver::from_name(s)
+            .with_context(|| format!("unknown driver {s:?} (expected {})", Driver::NAMES))?;
+    }
+    if let Some(v) = job.get("seed") {
+        cfg.seed = v.as_u64().context("\"seed\" must be a non-negative integer")?;
+    }
+    if let Some(config) = job.get("config") {
+        let Json::Obj(map) = config else { bail!("\"config\" must be an object") };
+        for (key, value) in map {
+            let value = json_to_config_value(value)
+                .with_context(|| format!("config key {key:?} has a non-scalar value"))?;
+            cfg.apply(key, &value).with_context(|| format!("config key {key:?}"))?;
+        }
+    }
+    Ok(JobSpec { name, mesh_path, cfg })
+}
+
+/// Manifest values reuse the config-file scalar domain.
+fn json_to_config_value(v: &Json) -> Option<ConfigValue> {
+    match v {
+        Json::Num(x) => Some(ConfigValue::Num(*x)),
+        Json::Str(s) => Some(ConfigValue::Str(s.clone())),
+        Json::Bool(b) => Some(ConfigValue::Bool(*b)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST: &str = r#"{
+      "version": 1,
+      "jobs": [
+        {
+          "name": "blob-soam",
+          "mesh": "blob",
+          "algorithm": "soam",
+          "driver": "parallel",
+          "seed": 7,
+          "config": { "regions": 64, "max_signals": 150000, "update_threads": 3 }
+        },
+        { "mesh": "eight", "algorithm": "gng", "driver": "multi", "seed": 9 }
+      ]
+    }"#;
+
+    #[test]
+    fn parses_jobs_with_overrides_and_default_names() {
+        let specs = parse_manifest(MANIFEST).unwrap();
+        assert_eq!(specs.len(), 2);
+        let a = &specs[0];
+        assert_eq!(a.name, "blob-soam");
+        assert_eq!(a.cfg.shape, BenchmarkShape::Blob);
+        assert_eq!(a.cfg.driver, Driver::Parallel);
+        assert_eq!(a.cfg.algorithm, Algorithm::Soam);
+        assert_eq!(a.cfg.seed, 7);
+        assert_eq!(a.cfg.regions, 64);
+        assert_eq!(a.cfg.update_threads, 3);
+        assert_eq!(a.cfg.limits.max_signals, 150_000);
+        let b = &specs[1];
+        assert_eq!(b.name, "job1", "missing names default to the index");
+        assert_eq!(b.cfg.shape, BenchmarkShape::Eight);
+        assert_eq!(b.cfg.algorithm, Algorithm::Gng);
+        assert_eq!(b.cfg.driver, Driver::Multi);
+    }
+
+    #[test]
+    fn mesh_paths_are_detected_by_extension() {
+        let text = r#"{"version": 1, "jobs": [{"name": "scan", "mesh": "clouds/a.off"}]}"#;
+        let specs = parse_manifest(text).unwrap();
+        assert_eq!(specs[0].mesh_path.as_deref(), Some(Path::new("clouds/a.off")));
+        let text = r#"{"version": 1, "jobs": [{"name": "scan", "mesh": "clouds/a.xyz"}]}"#;
+        assert!(parse_manifest(text).is_err(), "unknown extension rejected");
+    }
+
+    #[test]
+    fn rejects_bad_manifests() {
+        assert!(parse_manifest("not json").is_err());
+        assert!(parse_manifest(r#"{"jobs": []}"#).is_err(), "missing version");
+        assert!(parse_manifest(r#"{"version": 2, "jobs": [{}]}"#).is_err(), "future version");
+        assert!(parse_manifest(r#"{"version": 1, "jobs": []}"#).is_err(), "no jobs");
+        assert!(
+            parse_manifest(r#"{"version": 1, "jobs": [{"driver": "warp9"}]}"#).is_err(),
+            "unknown driver"
+        );
+        assert!(
+            parse_manifest(r#"{"version": 1, "jobs": [{"frobnicate": 1}]}"#).is_err(),
+            "unknown job key"
+        );
+        assert!(
+            parse_manifest(
+                r#"{"version": 1, "jobs": [{"config": {"nonesuch": 1}}]}"#
+            )
+            .is_err(),
+            "unknown config key"
+        );
+        assert!(
+            parse_manifest(
+                r#"{"version": 1, "jobs": [{"name": "a"}, {"name": "a"}]}"#
+            )
+            .is_err(),
+            "duplicate names"
+        );
+    }
+
+    #[test]
+    fn file_stem_sanitizes() {
+        let spec = JobSpec::from_config("job/../weird name", RunConfig::default());
+        assert_eq!(spec.file_stem(), "job_.._weird_name");
+    }
+}

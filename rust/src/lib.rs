@@ -32,7 +32,8 @@
 //! | [`findwinners`] | `FindWinners` trait: scalar / indexed / batched impls |
 //! | [`runtime`] | PJRT client + AOT artifact registry (the *GPU-based* variant) |
 //! | [`coordinator`] | batch-update executor, m-schedule, winner locks, pipeline |
-//! | [`engine`] | convergence drivers: the paper's four columns + pipelined/parallel |
+//! | [`engine`] | convergence drivers + resumable [`engine::ConvergenceSession`]s |
+//! | [`fleet`] | multi-network orchestration: jobs manifest, shared-pool scheduler, bit-exact checkpoint/restore |
 //! | [`config`] | config structs, TOML-subset parser, per-mesh presets |
 //! | [`cli`] | argument parsing for the `msgsn` binary |
 //! | [`metrics`] | phase timers, counters, table rendering |
@@ -45,6 +46,7 @@ pub mod config;
 pub mod coordinator;
 pub mod engine;
 pub mod findwinners;
+pub mod fleet;
 pub mod geometry;
 pub mod implicit;
 pub mod index;

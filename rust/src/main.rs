@@ -12,6 +12,7 @@ use msgsn::bench::{self, Scale};
 use msgsn::cli::{parse, Command, Parsed, USAGE};
 use msgsn::config::{parse_config_text, Algorithm, ConfigValue, Driver, RunConfig};
 use msgsn::engine::{make_algorithm, make_findwinners, run, run_convergence};
+use msgsn::fleet::{parse_manifest, Fleet, FleetOptions};
 use msgsn::mesh::{benchmark_mesh, write_obj, write_off, BenchmarkShape, SurfaceSampler};
 use msgsn::rng::Rng;
 use msgsn::runtime::Registry;
@@ -31,6 +32,7 @@ fn main() -> ExitCode {
             Ok(())
         }
         Command::Run(p) => cmd_run(&p),
+        Command::Fleet(p) => cmd_fleet(&p),
         Command::Reproduce(p) => cmd_reproduce(&p),
         Command::Mesh(p) => cmd_mesh(&p),
         Command::Artifacts(p) => cmd_artifacts(&p),
@@ -122,6 +124,51 @@ fn cmd_run(p: &Parsed) -> Result<()> {
         }
         println!("wrote reconstruction to {}", path.display());
     }
+    Ok(())
+}
+
+/// Run a jobs manifest: N concurrent reconstructions round-robin over one
+/// worker pool, with optional bit-exact checkpointing (`fleet` subsystem).
+fn cmd_fleet(p: &Parsed) -> Result<()> {
+    let manifest_path = p
+        .get("jobs")
+        .context("--jobs <jobs.json> is required (see `msgsn help` for the schema)")?;
+    let text = std::fs::read_to_string(manifest_path)
+        .with_context(|| format!("reading jobs manifest {manifest_path}"))?;
+    let specs = parse_manifest(&text)?;
+    let quiet = p.flag("quiet");
+
+    let opts = FleetOptions {
+        stride: p.get_parsed("stride", 1u64, "integer")?.max(1),
+        checkpoint_every: p.get_parsed("checkpoint-every", 0u64, "integer")?,
+        checkpoint_dir: Some(PathBuf::from(p.get("checkpoint-dir").unwrap_or("checkpoints"))),
+    };
+
+    let mut fleet = Fleet::new(specs)?;
+    if !quiet {
+        println!(
+            "fleet: {} jobs, shared worker pool width {}",
+            fleet.jobs().len(),
+            fleet.pool_width()
+        );
+    }
+    if p.flag("resume") {
+        let dir = opts.checkpoint_dir.as_deref().expect("checkpoint dir defaulted");
+        let resumed = fleet.resume_from(dir)?;
+        if !quiet {
+            if resumed.is_empty() {
+                println!("resume: no checkpoints under {} — starting fresh", dir.display());
+            } else {
+                println!("resume: restored {}", resumed.join(", "));
+            }
+        }
+    }
+    let report = fleet.run(&opts, |line| {
+        if !quiet {
+            println!("{line}");
+        }
+    })?;
+    print!("{}", report.to_table().render());
     Ok(())
 }
 

@@ -12,6 +12,12 @@ use crate::geometry::Vec3;
 
 use super::Mesh;
 
+/// Cap on up-front `Vec` reservations from parsed counts: a corrupt or
+/// hostile counts line must not drive a huge allocation before any actual
+/// data is validated (the vectors still grow to whatever the file really
+/// contains).
+const MAX_RESERVE: usize = 1 << 20;
+
 /// Read a Wavefront OBJ (v/f lines; polygons are fan-triangulated;
 /// `v/vt/vn` face syntax accepted, negative indices resolved).
 pub fn read_obj(path: &Path) -> Result<Mesh> {
@@ -20,7 +26,10 @@ pub fn read_obj(path: &Path) -> Result<Mesh> {
     parse_obj(&text)
 }
 
-pub(crate) fn parse_obj(text: &str) -> Result<Mesh> {
+/// Parse OBJ text. Total on arbitrary input: malformed, truncated or
+/// non-finite (NaN/inf coordinate) documents return `Err`, never panic —
+/// property-tested over a mutation corpus in `rust/tests/properties.rs`.
+pub fn parse_obj(text: &str) -> Result<Mesh> {
     let mut vertices = Vec::new();
     let mut faces = Vec::new();
     for (lineno, line) in text.lines().enumerate() {
@@ -29,10 +38,15 @@ pub(crate) fn parse_obj(text: &str) -> Result<Mesh> {
         match it.next() {
             Some("v") => {
                 let mut coord = |what| -> Result<f32> {
-                    it.next()
+                    let v: f32 = it
+                        .next()
                         .with_context(|| format!("line {}: missing {what}", lineno + 1))?
                         .parse()
-                        .with_context(|| format!("line {}: bad {what}", lineno + 1))
+                        .with_context(|| format!("line {}: bad {what}", lineno + 1))?;
+                    if !v.is_finite() {
+                        bail!("line {}: non-finite {what} ({v})", lineno + 1);
+                    }
+                    Ok(v)
                 };
                 let (x, y, z) = (coord("x")?, coord("y")?, coord("z")?);
                 vertices.push(Vec3::new(x, y, z));
@@ -88,7 +102,12 @@ pub fn read_off(path: &Path) -> Result<Mesh> {
     parse_off(&text)
 }
 
-pub(crate) fn parse_off(text: &str) -> Result<Mesh> {
+/// Parse OFF text. Total on arbitrary input: malformed, truncated or
+/// non-finite (NaN/inf coordinate) documents return `Err`, never panic —
+/// counts from the header are bounded before any reservation, so a corrupt
+/// counts line cannot drive a huge allocation either. Property-tested over
+/// a mutation corpus in `rust/tests/properties.rs`.
+pub fn parse_off(text: &str) -> Result<Mesh> {
     let mut tokens = text
         .lines()
         .filter(|l| !l.trim_start().starts_with('#'))
@@ -115,18 +134,35 @@ pub(crate) fn parse_off(text: &str) -> Result<Mesh> {
         pos += 1;
         Ok(t)
     };
-    let mut vertices = Vec::with_capacity(nv);
+    // Counts are only trusted up to the token budget actually present: a
+    // header claiming 10^18 vertices fails on the first missing token, so
+    // reservations are clamped (the vectors still grow as far as real
+    // tokens carry them).
+    if nv.saturating_mul(3) > rest.len() {
+        bail!("OFF: header claims {nv} vertices but only {} tokens follow", rest.len());
+    }
+    let mut vertices = Vec::with_capacity(nv.min(MAX_RESERVE));
     for _ in 0..nv {
-        let x: f32 = take("x")?.parse().context("OFF: bad x")?;
-        let y: f32 = take("y")?.parse().context("OFF: bad y")?;
-        let z: f32 = take("z")?.parse().context("OFF: bad z")?;
+        let parse_coord = |tok: &str, what: &str| -> Result<f32> {
+            let v: f32 = tok.parse().with_context(|| format!("OFF: bad {what}"))?;
+            if !v.is_finite() {
+                bail!("OFF: non-finite {what} ({v})");
+            }
+            Ok(v)
+        };
+        let x = parse_coord(take("x")?, "x")?;
+        let y = parse_coord(take("y")?, "y")?;
+        let z = parse_coord(take("z")?, "z")?;
         vertices.push(Vec3::new(x, y, z));
     }
-    let mut faces = Vec::with_capacity(nf);
+    let mut faces = Vec::with_capacity(nf.min(MAX_RESERVE));
     for _ in 0..nf {
         let k: usize = take("face arity")?.parse().context("OFF: bad arity")?;
         if k < 3 {
             bail!("OFF: face with {k} vertices");
+        }
+        if k > rest.len() {
+            bail!("OFF: face arity {k} exceeds the file's token count");
         }
         let mut idx = Vec::with_capacity(k);
         for _ in 0..k {
@@ -220,5 +256,25 @@ mod tests {
         let text = "OFF\n# a comment\n3 1 0\n0 0 0\n1 0 0\n0 1 0\n3 0 1 2\n";
         let m = parse_off(text).unwrap();
         assert_eq!(m.faces, vec![[0, 1, 2]]);
+    }
+
+    #[test]
+    fn non_finite_coordinates_rejected() {
+        for bad in ["nan", "NaN", "inf", "-inf", "1e999"] {
+            let obj = format!("v {bad} 0 0\nv 1 0 0\nv 0 1 0\nf 1 2 3\n");
+            assert!(parse_obj(&obj).is_err(), "OBJ accepted {bad}");
+            let off = format!("OFF\n3 1 0\n{bad} 0 0\n1 0 0\n0 1 0\n3 0 1 2\n");
+            assert!(parse_off(&off).is_err(), "OFF accepted {bad}");
+        }
+    }
+
+    #[test]
+    fn absurd_counts_error_without_allocating() {
+        // A counts line claiming ~10^18 elements must fail fast (token
+        // budget check), not reserve terabytes.
+        assert!(parse_off("OFF\n999999999999999999 1 0\n0 0 0\n").is_err());
+        assert!(parse_off("OFF\n3 999999999999999999 0\n0 0 0\n1 0 0\n0 1 0\n").is_err());
+        // Huge face arity likewise.
+        assert!(parse_off("OFF\n3 1 0\n0 0 0\n1 0 0\n0 1 0\n999999999 0 1 2\n").is_err());
     }
 }

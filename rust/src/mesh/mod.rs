@@ -7,7 +7,7 @@ pub mod lfs;
 mod sampler;
 
 pub use core::{Mesh, MeshStats};
-pub use io::{read_obj, read_off, write_obj, write_off};
+pub use io::{parse_obj, parse_off, read_obj, read_off, write_obj, write_off};
 pub use lfs::{estimate_lfs, LfsStats};
 pub use sampler::SurfaceSampler;
 

@@ -53,6 +53,24 @@ impl Rng {
         Rng::seed_from(self.next_u64())
     }
 
+    /// Export the full generator state — the fleet snapshot format stores
+    /// this so a resumed session draws the *exact* continuation of the
+    /// interrupted stream (bit-identical signals, permutations, forks).
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator from an exported [`Self::state`]. The all-zero
+    /// state is xoshiro's one invalid fixed point (the stream would be
+    /// constant zero); it cannot be produced by `seed_from`/`state`, so a
+    /// snapshot carrying it is corrupt.
+    pub fn from_state(s: [u64; 4]) -> Result<Self, &'static str> {
+        if s == [0; 4] {
+            return Err("all-zero xoshiro state");
+        }
+        Ok(Self { s })
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
@@ -166,6 +184,19 @@ mod tests {
         let h: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
         let g: Vec<u64> = (0..8).map(|_| fork.next_u64()).collect();
         assert_ne!(h, g);
+    }
+
+    #[test]
+    fn state_roundtrip_continues_the_stream() {
+        let mut a = Rng::seed_from(77);
+        for _ in 0..100 {
+            a.next_u64();
+        }
+        let mut b = Rng::from_state(a.state()).unwrap();
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        assert!(Rng::from_state([0; 4]).is_err(), "all-zero state is invalid");
     }
 
     #[test]

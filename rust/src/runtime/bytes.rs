@@ -1,0 +1,271 @@
+//! Little-endian byte codec for the fleet snapshot format (the vendored
+//! crate set has no `serde`/`bincode`).
+//!
+//! The contract that matters is **bit-exactness**: every `f32` travels as
+//! its raw bit pattern (`to_bits`/`from_bits`), so a snapshot/restore
+//! round-trip reproduces the exact float the network held — including
+//! negative zeros, subnormals from GNG's decay ladder, and any NaN payload
+//! a corrupted file might carry (the reader never interprets the value,
+//! only the caller's invariant checks do).
+//!
+//! The reader is total: every accessor returns `Err` on truncation instead
+//! of panicking, and length-prefixed reads validate the prefix against the
+//! remaining buffer *before* allocating, so a corrupt length cannot drive
+//! a huge `Vec::with_capacity`.
+
+use std::fmt;
+
+/// Append-only snapshot writer.
+#[derive(Debug, Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn into_inner(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    #[inline]
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    #[inline]
+    pub fn bool(&mut self, v: bool) {
+        self.u8(v as u8);
+    }
+
+    #[inline]
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Raw bit pattern — the bit-exactness contract (see module docs).
+    #[inline]
+    pub fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Raw bytes, no prefix (magic headers).
+    pub fn raw(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+}
+
+/// Snapshot read error: byte offset + message.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ByteError {
+    pub offset: usize,
+    pub message: String,
+}
+
+impl fmt::Display for ByteError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "snapshot byte {}: {}", self.offset, self.message)
+    }
+}
+
+impl std::error::Error for ByteError {}
+
+/// Cursor over a snapshot buffer. Every accessor is total (`Err` on
+/// truncation, never a panic).
+#[derive(Clone, Debug)]
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn err(&self, msg: impl Into<String>) -> ByteError {
+        ByteError { offset: self.pos, message: msg.into() }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ByteError> {
+        if self.remaining() < n {
+            return Err(self.err(format!("truncated: need {n} bytes, have {}", self.remaining())));
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, ByteError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn bool(&mut self) -> Result<bool, ByteError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => Err(self.err(format!("bad bool byte {other}"))),
+        }
+    }
+
+    pub fn u32(&mut self) -> Result<u32, ByteError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, ByteError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    pub fn f32(&mut self) -> Result<f32, ByteError> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    /// Length-prefixed UTF-8 string; the prefix is validated against the
+    /// remaining bytes before anything is copied.
+    pub fn str(&mut self) -> Result<String, ByteError> {
+        let len = self.u32()? as usize;
+        if len > self.remaining() {
+            return Err(self.err(format!("string length {len} exceeds remaining bytes")));
+        }
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| self.err("string is not UTF-8"))
+    }
+
+    /// Read a `u32` element count, rejecting any count that could not
+    /// possibly fit in the remaining bytes at `min_elem_bytes` each — the
+    /// guard that keeps a corrupt prefix from driving a huge allocation.
+    pub fn len_prefix(&mut self, min_elem_bytes: usize) -> Result<usize, ByteError> {
+        let n = self.u32()? as usize;
+        let need = n.saturating_mul(min_elem_bytes.max(1));
+        if need > self.remaining() {
+            return Err(self.err(format!(
+                "length prefix {n} needs {need} bytes, only {} remain",
+                self.remaining()
+            )));
+        }
+        Ok(n)
+    }
+
+    /// Expect an exact magic byte sequence.
+    pub fn expect_raw(&mut self, magic: &[u8]) -> Result<(), ByteError> {
+        let got = self.take(magic.len())?;
+        if got != magic {
+            return Err(ByteError {
+                offset: self.pos - magic.len(),
+                message: format!("bad magic {got:?} (expected {magic:?})"),
+            });
+        }
+        Ok(())
+    }
+
+    /// Fail if unread bytes remain (trailing garbage in a snapshot file).
+    pub fn expect_end(&self) -> Result<(), ByteError> {
+        if self.remaining() != 0 {
+            return Err(self.err(format!("{} trailing bytes", self.remaining())));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_scalars_and_strings() {
+        let mut w = ByteWriter::new();
+        w.u8(7);
+        w.bool(true);
+        w.u32(0xDEAD_BEEF);
+        w.u64(u64::MAX - 3);
+        w.f32(-0.0);
+        w.f32(f32::from_bits(1)); // smallest subnormal
+        w.str("fleet/job-1");
+        let buf = w.into_inner();
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert!(r.bool().unwrap());
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.f32().unwrap().to_bits(), (-0.0f32).to_bits());
+        assert_eq!(r.f32().unwrap().to_bits(), 1);
+        assert_eq!(r.str().unwrap(), "fleet/job-1");
+        r.expect_end().unwrap();
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let mut w = ByteWriter::new();
+        w.u64(42);
+        let buf = w.into_inner();
+        let mut r = ByteReader::new(&buf[..5]);
+        assert!(r.u64().is_err());
+        let mut r = ByteReader::new(&[]);
+        assert!(r.u8().is_err());
+        assert!(r.str().is_err());
+    }
+
+    #[test]
+    fn corrupt_length_prefix_rejected_before_allocation() {
+        let mut w = ByteWriter::new();
+        w.u32(u32::MAX); // absurd element count
+        let buf = w.into_inner();
+        let mut r = ByteReader::new(&buf);
+        assert!(r.len_prefix(4).is_err());
+        // A string prefix beyond the buffer is equally rejected.
+        let mut w = ByteWriter::new();
+        w.u32(1_000_000);
+        w.raw(b"abc");
+        let buf = w.into_inner();
+        let mut r = ByteReader::new(&buf);
+        assert!(r.str().is_err());
+    }
+
+    #[test]
+    fn magic_and_trailing_garbage() {
+        let mut w = ByteWriter::new();
+        w.raw(b"MSGSNAP1");
+        w.u8(9);
+        let buf = w.into_inner();
+        let mut r = ByteReader::new(&buf);
+        r.expect_raw(b"MSGSNAP1").unwrap();
+        assert!(r.expect_end().is_err(), "unread byte must be flagged");
+        assert_eq!(r.u8().unwrap(), 9);
+        r.expect_end().unwrap();
+        let mut r = ByteReader::new(&buf);
+        assert!(r.expect_raw(b"MSGSNAPX").is_err());
+    }
+
+    #[test]
+    fn bad_bool_rejected() {
+        let mut r = ByteReader::new(&[2]);
+        assert!(r.bool().is_err());
+    }
+}

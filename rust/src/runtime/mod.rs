@@ -8,12 +8,14 @@
 //! PJRT CPU client, caches the executable, and marshals network state in
 //! and winners out. Python never runs here.
 
+pub mod bytes;
 mod fw;
 mod json;
 mod manifest;
 pub mod pool;
 mod registry;
 
+pub use bytes::{ByteError, ByteReader, ByteWriter};
 pub use fw::PjrtFindWinners;
 pub use json::{parse_json, Json, JsonError};
 pub use manifest::{ArtifactEntry, Manifest};

@@ -40,6 +40,7 @@
 use crate::geometry::Vec3;
 use crate::mesh::SurfaceSampler;
 use crate::rng::Rng;
+use crate::runtime::bytes::{ByteReader, ByteWriter};
 
 use super::network::{ChangeLog, Network, UnitId};
 use super::params::GngParams;
@@ -333,6 +334,53 @@ impl GrowingNetwork for Gng {
         if self.params.beta > 0.0 {
             self.decay_epoch += 1;
         }
+    }
+
+    fn save_state(&self, w: &mut ByteWriter) {
+        w.str("gng");
+        let (ema, samples) = self.qe.raw();
+        w.f32(ema);
+        w.u64(samples);
+        w.u64(self.signals_seen);
+        // The lazy-decay state: stored errors are only meaningful together
+        // with their epoch stamps (error · (1-beta)^(epoch - stamp)), so
+        // both travel — materializing before saving would change WHEN each
+        // unit's ladder runs and thus the bits of later reads.
+        w.u64(self.decay_epoch);
+        w.u32(self.error_epoch.len() as u32);
+        for &e in &self.error_epoch {
+            w.u64(e);
+        }
+        self.net.write_state(w);
+    }
+
+    fn load_state(&mut self, r: &mut ByteReader) -> Result<(), String> {
+        let tag = r.str().map_err(|e| e.to_string())?;
+        if tag != "gng" {
+            return Err(format!("snapshot algorithm {tag:?} is not gng"));
+        }
+        let ema = r.f32().map_err(|e| e.to_string())?;
+        let samples = r.u64().map_err(|e| e.to_string())?;
+        self.qe.restore(ema, samples);
+        self.signals_seen = r.u64().map_err(|e| e.to_string())?;
+        self.decay_epoch = r.u64().map_err(|e| e.to_string())?;
+        let n = r.len_prefix(8).map_err(|e| e.to_string())?;
+        self.error_epoch.clear();
+        for _ in 0..n {
+            let e = r.u64().map_err(|e| e.to_string())?;
+            if e > self.decay_epoch {
+                return Err(format!("error epoch {e} beyond decay epoch {}", self.decay_epoch));
+            }
+            self.error_epoch.push(e);
+        }
+        self.net = Network::read_state(r)?;
+        for id in self.net.ids() {
+            if id as usize >= self.error_epoch.len() {
+                return Err(format!("live unit {id} has no error-epoch stamp"));
+            }
+        }
+        self.orphan_buf.clear();
+        Ok(())
     }
 }
 

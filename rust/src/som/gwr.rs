@@ -9,6 +9,7 @@
 use crate::geometry::Vec3;
 use crate::mesh::SurfaceSampler;
 use crate::rng::Rng;
+use crate::runtime::bytes::{ByteReader, ByteWriter};
 
 use super::network::{ChangeLog, Network, UnitId};
 use super::params::GwrParams;
@@ -316,6 +317,27 @@ impl GrowingNetwork for Gwr {
     fn commit_scalars(&mut self, plan: &UpdatePlan, _log: &mut ChangeLog) {
         Self::debug_check_no_prune(&self.net, &self.params, plan);
         self.qe.push(plan.d1_sq);
+    }
+
+    fn save_state(&self, w: &mut ByteWriter) {
+        w.str("gwr");
+        let (ema, samples) = self.qe.raw();
+        w.f32(ema);
+        w.u64(samples);
+        self.net.write_state(w);
+    }
+
+    fn load_state(&mut self, r: &mut ByteReader) -> Result<(), String> {
+        let tag = r.str().map_err(|e| e.to_string())?;
+        if tag != "gwr" {
+            return Err(format!("snapshot algorithm {tag:?} is not gwr"));
+        }
+        let ema = r.f32().map_err(|e| e.to_string())?;
+        let samples = r.u64().map_err(|e| e.to_string())?;
+        self.qe.restore(ema, samples);
+        self.net = Network::read_state(r)?;
+        self.orphan_buf.clear();
+        Ok(())
     }
 }
 

@@ -44,6 +44,7 @@ pub use soam::{Soam, SoamState};
 use crate::geometry::Vec3;
 use crate::mesh::SurfaceSampler;
 use crate::rng::Rng;
+use crate::runtime::bytes::{ByteReader, ByteWriter};
 
 /// Result of the Find Winners phase for one signal: the two nearest units
 /// and their *squared* distances (squared to stay bit-compatible with the
@@ -246,6 +247,23 @@ pub trait GrowingNetwork: Send + Sync {
     fn commit_scalars(&mut self, _plan: &UpdatePlan, _log: &mut ChangeLog) {
         unreachable!("commit_scalars on an algorithm that never classifies Adapt");
     }
+
+    /// Serialize the algorithm's **complete** state — the network slab
+    /// (via [`Network::write_state`]) plus every per-algorithm scalar a
+    /// later update reads (QE tracker, counters, GNG's decay epochs,
+    /// SOAM's strike tables) — for the fleet snapshot format
+    /// (`fleet::snapshot`). The contract is bit-exactness: restoring into
+    /// a freshly constructed instance (same params) and continuing must be
+    /// bit-identical to never having stopped.
+    fn save_state(&self, w: &mut ByteWriter);
+
+    /// Restore [`Self::save_state`] bytes into `self` (freshly constructed
+    /// with the same parameters). Transient per-update buffers need not
+    /// round-trip — they are empty at every batch boundary, the only
+    /// points snapshots are taken at. Returns `Err` on any structural or
+    /// tag mismatch; `self` may be left partially overwritten then (the
+    /// caller discards it).
+    fn load_state(&mut self, r: &mut ByteReader) -> Result<(), String>;
 }
 
 /// Shared helper: exponential moving average of the quantization error.
@@ -278,6 +296,18 @@ impl QeTracker {
     #[allow(dead_code)]
     pub fn samples(&self) -> u64 {
         self.samples
+    }
+
+    /// Snapshot the mutable half `(ema, samples)` — `beta` is a construction
+    /// parameter and comes back from the restored instance's own config.
+    pub fn raw(&self) -> (f32, u64) {
+        (self.ema, self.samples)
+    }
+
+    /// Restore [`Self::raw`] state bit-exactly.
+    pub fn restore(&mut self, ema: f32, samples: u64) {
+        self.ema = ema;
+        self.samples = samples;
     }
 }
 

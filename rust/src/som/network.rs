@@ -22,6 +22,7 @@
 //!   count, QE, GNG error/epoch) to the sequential replay.
 
 use crate::geometry::Vec3;
+use crate::runtime::bytes::{ByteReader, ByteWriter};
 use crate::topology::{classify_link, LinkClass};
 
 use super::UpdatePlan;
@@ -567,6 +568,97 @@ impl Network {
             ));
         }
         Ok(())
+    }
+
+    /// Serialize the complete slab state for the fleet snapshot format:
+    /// every slot (alive or dead) with its scalars and adjacency **in list
+    /// order** — adjacency order drives neighbor iteration and therefore
+    /// the f32 operation order of every later update, so it must survive
+    /// the round trip exactly — plus the sharded free lists with their
+    /// stamps (allocation order of future insertions). The dense and SoA
+    /// position mirrors are derived state and are rebuilt on read.
+    pub fn write_state(&self, w: &mut ByteWriter) {
+        w.u32(self.units.len() as u32);
+        for (i, u) in self.units.iter().enumerate() {
+            w.bool(u.alive);
+            w.f32(u.pos.x);
+            w.f32(u.pos.y);
+            w.f32(u.pos.z);
+            w.f32(u.firing);
+            w.f32(u.error);
+            w.f32(u.threshold);
+            let adj = &self.adjacency[i];
+            w.u32(adj.len() as u32);
+            for e in adj {
+                w.u32(e.to);
+                w.f32(e.age);
+            }
+        }
+        w.u64(self.free_stamp);
+        for shard in &self.free_shards {
+            w.u32(shard.len() as u32);
+            for f in shard {
+                w.u32(f.slot);
+                w.u64(f.stamp);
+            }
+        }
+    }
+
+    /// Rebuild a network from [`Self::write_state`] bytes. The mirrors
+    /// (dense positions, SoA lanes) and counters (alive, edges) are
+    /// re-derived, then [`Self::check_invariants`] validates the whole
+    /// store — a corrupt snapshot comes back as `Err`, never as a network
+    /// that fails later.
+    pub fn read_state(r: &mut ByteReader) -> Result<Network, String> {
+        let cap = r.len_prefix(28).map_err(|e| e.to_string())?;
+        let mut net = Network::new();
+        let mut halves = 0usize;
+        for _ in 0..cap {
+            let alive = r.bool().map_err(|e| e.to_string())?;
+            let pos = Vec3::new(
+                r.f32().map_err(|e| e.to_string())?,
+                r.f32().map_err(|e| e.to_string())?,
+                r.f32().map_err(|e| e.to_string())?,
+            );
+            let firing = r.f32().map_err(|e| e.to_string())?;
+            let error = r.f32().map_err(|e| e.to_string())?;
+            let threshold = r.f32().map_err(|e| e.to_string())?;
+            let deg = r.len_prefix(8).map_err(|e| e.to_string())?;
+            let mut adj = Vec::with_capacity(deg);
+            for _ in 0..deg {
+                let to = r.u32().map_err(|e| e.to_string())?;
+                let age = r.f32().map_err(|e| e.to_string())?;
+                if to as usize >= cap {
+                    return Err(format!("edge target {to} beyond slab {cap}"));
+                }
+                adj.push(Edge { to, age });
+            }
+            halves += adj.len();
+            let slot = net.units.len();
+            net.units.push(Unit { pos, firing, error, threshold, alive });
+            net.positions.push(if alive { pos } else { DEAD_POS });
+            net.soa_write(slot, if alive { pos } else { DEAD_POS });
+            net.adjacency.push(adj);
+            if alive {
+                net.alive += 1;
+            }
+        }
+        if halves % 2 != 0 {
+            return Err(format!("odd edge-half count {halves}"));
+        }
+        net.edges = halves / 2;
+        net.free_stamp = r.u64().map_err(|e| e.to_string())?;
+        for s in 0..FREE_SHARDS {
+            let n = r.len_prefix(12).map_err(|e| e.to_string())?;
+            for _ in 0..n {
+                let slot = r.u32().map_err(|e| e.to_string())?;
+                let stamp = r.u64().map_err(|e| e.to_string())?;
+                net.free_shards[s].push(FreeSlot { slot, stamp });
+            }
+        }
+        net.check_invariants()
+            .map_err(|e| format!("restored network fails invariants: {e}"))?;
+        Ok(net)
     }
 
     /// Raw-access commit view for the executor's concurrent commit pass
@@ -1166,6 +1258,88 @@ mod tests {
             }
             raw.check_invariants().unwrap();
         }
+    }
+
+    #[test]
+    fn state_roundtrip_is_bit_exact() {
+        // Build a network with every tricky feature: removals (sharded free
+        // lists, stamps), slab reuse, aged edges in a specific adjacency
+        // order, and f32 values that would not survive a lossy round trip.
+        let mut n = Network::new();
+        let ids: Vec<UnitId> = (0..2 * FREE_SHARDS as u32 + 5)
+            .map(|k| n.insert(v(k as f32 * 0.37), 0.1 + k as f32 * 1e-3))
+            .collect();
+        for win in ids.windows(2) {
+            n.connect(win[0], win[1]);
+        }
+        n.connect(ids[0], ids[4]);
+        n.age_edges_of(ids[2], 1.5);
+        n.remove(ids[3]);
+        n.remove(ids[FREE_SHARDS + 3]);
+        n.remove(ids[7]);
+        let reused = n.insert(v(42.0), 0.5);
+        assert_eq!(reused, ids[7], "global LIFO reuse");
+        n.unit_mut(ids[1]).error = f32::from_bits(0x0000_0001); // subnormal
+        n.unit_mut(ids[1]).firing = -0.0;
+        n.check_invariants().unwrap();
+
+        let mut w = ByteWriter::new();
+        n.write_state(&mut w);
+        let buf = w.into_inner();
+        let mut r = ByteReader::new(&buf);
+        let back = Network::read_state(&mut r).unwrap();
+        r.expect_end().unwrap();
+
+        assert_eq!(back.capacity(), n.capacity());
+        assert_eq!(back.len(), n.len());
+        assert_eq!(back.edge_count(), n.edge_count());
+        for id in 0..n.capacity() as UnitId {
+            assert_eq!(back.is_alive(id), n.is_alive(id), "unit {id}");
+            if !n.is_alive(id) {
+                continue;
+            }
+            let (a, b) = (n.unit(id), back.unit(id));
+            assert_eq!(a.pos.x.to_bits(), b.pos.x.to_bits());
+            assert_eq!(a.firing.to_bits(), b.firing.to_bits());
+            assert_eq!(a.error.to_bits(), b.error.to_bits());
+            assert_eq!(a.threshold.to_bits(), b.threshold.to_bits());
+            // Adjacency LIST ORDER (not just the set) must survive: it
+            // decides neighbor iteration order in every later update.
+            let ea: Vec<(u32, u32)> =
+                n.edges_of(id).iter().map(|e| (e.to, e.age.to_bits())).collect();
+            let eb: Vec<(u32, u32)> =
+                back.edges_of(id).iter().map(|e| (e.to, e.age.to_bits())).collect();
+            assert_eq!(ea, eb, "adjacency order of {id}");
+        }
+        // Future allocations must pop the same slots: drain both free lists.
+        let mut n2 = n.clone();
+        let mut b2 = back;
+        for _ in 0..2 {
+            assert_eq!(n2.insert(v(9.0), 0.1), b2.insert(v(9.0), 0.1));
+        }
+        b2.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn read_state_rejects_corruption() {
+        let mut n = Network::new();
+        let a = n.insert(v(0.0), 1.0);
+        let b = n.insert(v(1.0), 1.0);
+        n.connect(a, b);
+        n.remove(b);
+        let mut w = ByteWriter::new();
+        n.write_state(&mut w);
+        let buf = w.into_inner();
+        // Truncation at every prefix must error, never panic.
+        for cut in 0..buf.len() {
+            let mut r = ByteReader::new(&buf[..cut]);
+            assert!(Network::read_state(&mut r).is_err(), "cut at {cut}");
+        }
+        // A flipped aliveness byte breaks the free-list invariants.
+        let mut bad = buf.clone();
+        bad[4] ^= 1; // first slot's alive flag
+        let mut r = ByteReader::new(&bad);
+        assert!(Network::read_state(&mut r).is_err());
     }
 
     #[test]

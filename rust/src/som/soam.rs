@@ -21,6 +21,7 @@
 use crate::geometry::Vec3;
 use crate::mesh::SurfaceSampler;
 use crate::rng::Rng;
+use crate::runtime::bytes::{ByteReader, ByteWriter};
 use crate::topology::LinkClass;
 
 use super::gwr::Gwr;
@@ -254,6 +255,78 @@ impl GrowingNetwork for Soam {
     fn commit_scalars(&mut self, plan: &UpdatePlan, _log: &mut ChangeLog) {
         Gwr::debug_check_no_prune(&self.net, &self.gwr_view, plan);
         self.qe.push(plan.d1_sq);
+    }
+
+    fn save_state(&self, w: &mut ByteWriter) {
+        w.str("soam");
+        let (ema, samples) = self.qe.raw();
+        w.f32(ema);
+        w.u64(samples);
+        // The strike tables are *cross-scan* memory: a unit two strikes
+        // from removal must stay two strikes from removal after a resume.
+        w.u32(self.strikes.len() as u32);
+        for &s in &self.strikes {
+            w.u8(s);
+        }
+        w.u32(self.nm_strikes.len() as u32);
+        for &s in &self.nm_strikes {
+            w.u8(s);
+        }
+        // The cached topological state of the last housekeeping scan
+        // (reporting only, but kept for report fidelity across resumes).
+        w.u64(self.state.units as u64);
+        w.u64(self.state.disks as u64);
+        w.u64(self.state.half_disks as u64);
+        w.u64(self.state.non_manifold as u64);
+        w.u64(self.state.dust_or_isolated as u64);
+        w.u64(self.state.habituated as u64);
+        w.bool(self.state.stable);
+        self.net.write_state(w);
+    }
+
+    fn load_state(&mut self, r: &mut ByteReader) -> Result<(), String> {
+        let tag = r.str().map_err(|e| e.to_string())?;
+        if tag != "soam" {
+            return Err(format!("snapshot algorithm {tag:?} is not soam"));
+        }
+        let ema = r.f32().map_err(|e| e.to_string())?;
+        let samples = r.u64().map_err(|e| e.to_string())?;
+        self.qe.restore(ema, samples);
+        let n = r.len_prefix(1).map_err(|e| e.to_string())?;
+        self.strikes.clear();
+        for _ in 0..n {
+            self.strikes.push(r.u8().map_err(|e| e.to_string())?);
+        }
+        let n = r.len_prefix(1).map_err(|e| e.to_string())?;
+        self.nm_strikes.clear();
+        for _ in 0..n {
+            self.nm_strikes.push(r.u8().map_err(|e| e.to_string())?);
+        }
+        self.state = SoamState {
+            units: r.u64().map_err(|e| e.to_string())? as usize,
+            disks: r.u64().map_err(|e| e.to_string())? as usize,
+            half_disks: r.u64().map_err(|e| e.to_string())? as usize,
+            non_manifold: r.u64().map_err(|e| e.to_string())? as usize,
+            dust_or_isolated: r.u64().map_err(|e| e.to_string())? as usize,
+            habituated: r.u64().map_err(|e| e.to_string())? as usize,
+            stable: r.bool().map_err(|e| e.to_string())?,
+        };
+        self.net = Network::read_state(r)?;
+        // The strike tables may legitimately lag the slab (they resize at
+        // the next scan, and missing entries mean zero strikes — exactly
+        // the running process's implicit value), but they can never
+        // exceed it: that marks a snapshot whose tables and slab are not
+        // from the same run.
+        let cap = self.net.capacity();
+        if self.strikes.len() > cap || self.nm_strikes.len() > cap {
+            return Err(format!(
+                "strike tables ({}/{}) exceed the slab ({cap})",
+                self.strikes.len(),
+                self.nm_strikes.len()
+            ));
+        }
+        self.orphan_buf.clear();
+        Ok(())
     }
 }
 

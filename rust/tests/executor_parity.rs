@@ -27,6 +27,13 @@
 //! `MSGSN_TEST_UPDATE_THREADS` / `MSGSN_TEST_FIND_THREADS` /
 //! `MSGSN_TEST_REGIONS` / `MSGSN_TEST_QUEUE_DEPTH` (see
 //! `.github/workflows/ci.yml`); unset, the in-repo combinations run alone.
+//!
+//! PR 5 adds the **snapshot/resume** acceptance tests: a
+//! [`msgsn::engine::ConvergenceSession`] killed at random batch boundaries
+//! (serialize → drop → rebuild from the spec → restore) must finish
+//! bit-identical to the uninterrupted `Multi` reference, for SOAM, GWR and
+//! GNG across the same knob matrix — and the pipelined session mode must
+//! match the threaded `run_pipelined` driver under kill/resume too.
 
 use msgsn::config::Limits;
 use msgsn::coordinator::LockTable;
@@ -435,6 +442,149 @@ fn region_schedule_defers_insert_commits() {
         "no insert-class update ever took the deferred commit path"
     );
     soam.net().check_invariants().unwrap();
+}
+
+/// Acceptance (PR 5): kill-and-resume at random batch boundaries, under
+/// random `(regions, update_threads, find_threads)` combos, is
+/// bit-identical to the uninterrupted sequential `Multi` reference — for
+/// SOAM, GWR and GNG. Every chunk boundary is a kill: the session is
+/// serialized, dropped, rebuilt fresh from the config and restored, so the
+/// snapshot must carry *everything* (slab + free-list stamps, adjacency
+/// order, algorithm scalars, GNG epochs, RNG state, counters).
+#[test]
+fn snapshot_resume_bit_identical_across_knob_matrix() {
+    use msgsn::config::{Algorithm, Driver, RunConfig};
+    use msgsn::engine::{make_algorithm, run_convergence, ConvergenceSession};
+    use msgsn::fleet::snapshot::{restore_session, snapshot_session};
+
+    let mut chunk_rng = Rng::seed_from(0x5EED_CAFE);
+    let mut combos: Vec<(Algorithm, usize, usize, usize)> = vec![
+        (Algorithm::Soam, 1, 1, 1),
+        (Algorithm::Soam, 3, 2, 27),
+        (Algorithm::Gwr, 2, 7, 8),
+        (Algorithm::Gng, 0, 0, 64),
+    ];
+    if let Some((upd, find, regions)) = env_combo() {
+        for algorithm in [Algorithm::Soam, Algorithm::Gwr, Algorithm::Gng] {
+            combos.push((algorithm, upd, find, regions));
+        }
+    }
+    for (algorithm, update_threads, find_threads, regions) in combos {
+        let shape = match algorithm {
+            Algorithm::Gng => BenchmarkShape::Eight,
+            _ => BenchmarkShape::Blob,
+        };
+        let mesh = benchmark_mesh(shape, 20);
+        let sampler = SurfaceSampler::new(&mesh);
+        let mut cfg = RunConfig::preset(shape);
+        cfg.algorithm = algorithm;
+        cfg.soam.insertion_threshold = 0.16;
+        cfg.gwr.insertion_threshold = 0.12;
+        cfg.gng.lambda = 60;
+        cfg.limits.max_signals = 18_000;
+        cfg.seed = 31;
+
+        // Reference: uninterrupted sequential Multi (all knobs off).
+        cfg.driver = Driver::Multi;
+        cfg.update_threads = 1;
+        cfg.find_threads = 1;
+        cfg.regions = 1;
+        let mut ref_algo = make_algorithm(&cfg);
+        let mut ref_fw = BatchRust::default();
+        let mut ref_rng = Rng::seed_from(cfg.seed);
+        let a = run_convergence(ref_algo.as_mut(), &sampler, &mut ref_fw, &cfg, &mut ref_rng);
+
+        // Session: parallel driver with the combo knobs, killed at every
+        // chunk boundary.
+        cfg.driver = Driver::Parallel;
+        cfg.update_threads = update_threads;
+        cfg.find_threads = find_threads;
+        cfg.regions = regions;
+        let mut session = ConvergenceSession::new(&cfg, &mesh, None).unwrap();
+        let mut kills = 0u32;
+        loop {
+            let chunk = chunk_rng.below(15) + 1;
+            if !session.step(chunk) {
+                break;
+            }
+            let bytes = snapshot_session(&session);
+            drop(session);
+            session = ConvergenceSession::new(&cfg, &mesh, None).unwrap();
+            restore_session(&mut session, &bytes).unwrap();
+            kills += 1;
+        }
+        let b = session.finish();
+
+        let label = format!(
+            "{} upd={update_threads} find={find_threads} regions={regions} ({kills} kills)",
+            match algorithm {
+                Algorithm::Soam => "soam",
+                Algorithm::Gwr => "gwr",
+                Algorithm::Gng => "gng",
+            }
+        );
+        assert!(kills > 0, "{label}: the kill loop never engaged");
+        assert_eq!(a.iterations, b.iterations, "{label}");
+        assert_eq!(a.signals, b.signals, "{label}");
+        assert_eq!(a.discarded, b.discarded, "{label}");
+        assert_eq!(a.qe.to_bits(), b.qe.to_bits(), "{label}");
+        assert_networks_identical(ref_algo.net(), session.algo().net(), &label);
+    }
+}
+
+/// Acceptance (PR 5): the pipelined session mode — the synchronous,
+/// checkpointable equivalent of the threaded `run_pipelined` driver — is
+/// bit-identical to the threaded driver for any `queue_depth`, including
+/// under kill/resume (the snapshot carries the forked sampler stream and
+/// the one-batch m-schedule lag).
+#[test]
+fn pipelined_session_resume_matches_threaded_driver() {
+    use msgsn::config::{Driver, RunConfig};
+    use msgsn::engine::{run_convergence, ConvergenceSession};
+    use msgsn::fleet::snapshot::{restore_session, snapshot_session};
+
+    let sampler = blob_sampler();
+    let mesh = benchmark_mesh(BenchmarkShape::Blob, 20);
+    let mut cfg = RunConfig::preset(BenchmarkShape::Blob);
+    cfg.driver = Driver::Pipelined;
+    cfg.soam.insertion_threshold = 0.16;
+    cfg.limits.max_signals = 20_000;
+    cfg.seed = 33;
+    cfg.queue_depth = env_knob("MSGSN_TEST_QUEUE_DEPTH").unwrap_or(2);
+    if let Some((upd, find, regions)) = env_combo() {
+        cfg.update_threads = upd;
+        cfg.find_threads = find;
+        cfg.regions = regions;
+    } else {
+        cfg.update_threads = 2;
+        cfg.find_threads = 1;
+        cfg.regions = 8;
+    }
+
+    // Threaded reference (sampler thread + bounded channels).
+    let mut soam_a = Soam::new(SoamParams {
+        insertion_threshold: 0.16,
+        ..SoamParams::default()
+    });
+    let mut fw_a = BatchRust::default();
+    let mut rng_a = Rng::seed_from(cfg.seed);
+    let a = run_convergence(&mut soam_a, &sampler, &mut fw_a, &cfg, &mut rng_a);
+
+    // Synchronous session, killed every few batches.
+    let mut session = ConvergenceSession::new(&cfg, &mesh, None).unwrap();
+    let mut chunk_rng = Rng::seed_from(0xF1EE7);
+    while session.step(chunk_rng.below(9) + 1) {
+        let bytes = snapshot_session(&session);
+        session = ConvergenceSession::new(&cfg, &mesh, None).unwrap();
+        restore_session(&mut session, &bytes).unwrap();
+    }
+    let b = session.finish();
+
+    assert_eq!(a.iterations, b.iterations, "pipelined session vs threaded");
+    assert_eq!(a.signals, b.signals);
+    assert_eq!(a.discarded, b.discarded);
+    assert_eq!(a.qe.to_bits(), b.qe.to_bits());
+    assert_networks_identical(soam_a.net(), session.algo().net(), "pipelined session");
 }
 
 #[test]

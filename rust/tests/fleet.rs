@@ -1,0 +1,209 @@
+//! Fleet integration tests — the PR 5 acceptance points that live at the
+//! subsystem boundary:
+//!
+//! - **`fleet_determinism`**: a fleet of N jobs multiplexed over ONE shared
+//!   worker pool must produce networks bit-identical to N solo runs of the
+//!   same specs through the classic `run_convergence` path. Jobs share
+//!   only compute (the pool), never state — any leak (a shared RNG draw, a
+//!   pool generation bleeding across jobs, a region grid reused between
+//!   networks) breaks the bit comparison.
+//! - **checkpointed fleets**: interrupting a fleet mid-flight (checkpoint
+//!   all jobs, drop the fleet, rebuild from the manifest, resume) finishes
+//!   bit-identical to the uninterrupted fleet.
+//!
+//! The CI parity matrix re-runs this suite under the `MSGSN_TEST_*` knob
+//! combinations (same contract as `rust/tests/executor_parity.rs`).
+
+use msgsn::config::{Algorithm, Driver, RunConfig};
+use msgsn::engine::{make_algorithm, make_findwinners, run_convergence};
+use msgsn::fleet::{Fleet, FleetOptions, JobSpec};
+use msgsn::mesh::{BenchmarkShape, SurfaceSampler};
+use msgsn::rng::Rng;
+use msgsn::som::Network;
+
+/// Bitwise network equality (same contract as executor_parity's helper).
+fn assert_networks_identical(a: &Network, b: &Network, label: &str) {
+    assert_eq!(a.capacity(), b.capacity(), "{label}: slab capacity");
+    assert_eq!(a.len(), b.len(), "{label}: live units");
+    assert_eq!(a.edge_count(), b.edge_count(), "{label}: edges");
+    for id in 0..a.capacity() as u32 {
+        assert_eq!(a.is_alive(id), b.is_alive(id), "{label}: aliveness of {id}");
+        if !a.is_alive(id) {
+            continue;
+        }
+        let (ua, ub) = (a.unit(id), b.unit(id));
+        for (va, vb, what) in [
+            (ua.pos.x, ub.pos.x, "pos.x"),
+            (ua.pos.y, ub.pos.y, "pos.y"),
+            (ua.pos.z, ub.pos.z, "pos.z"),
+            (ua.firing, ub.firing, "firing"),
+            (ua.error, ub.error, "error"),
+            (ua.threshold, ub.threshold, "threshold"),
+        ] {
+            assert_eq!(va.to_bits(), vb.to_bits(), "{label}: unit {id} {what}");
+        }
+        let ea: Vec<(u32, u32)> =
+            a.edges_of(id).iter().map(|e| (e.to, e.age.to_bits())).collect();
+        let eb: Vec<(u32, u32)> =
+            b.edges_of(id).iter().map(|e| (e.to, e.age.to_bits())).collect();
+        assert_eq!(ea, eb, "{label}: edges of {id}");
+    }
+}
+
+/// Extra knob combination injected by the CI matrix (same env contract as
+/// executor_parity).
+fn env_combo() -> Option<(usize, usize, usize)> {
+    let knob = |name: &str| std::env::var(name).ok()?.parse().ok();
+    let upd = knob("MSGSN_TEST_UPDATE_THREADS");
+    let find = knob("MSGSN_TEST_FIND_THREADS");
+    let regions = knob("MSGSN_TEST_REGIONS");
+    if upd.is_none() && find.is_none() && regions.is_none() {
+        return None;
+    }
+    Some((upd.unwrap_or(1), find.unwrap_or(1), regions.unwrap_or(1)))
+}
+
+fn spec(
+    name: &str,
+    shape: BenchmarkShape,
+    algorithm: Algorithm,
+    driver: Driver,
+    seed: u64,
+    knobs: (usize, usize, usize),
+) -> JobSpec {
+    let mut cfg = RunConfig::preset(shape);
+    cfg.algorithm = algorithm;
+    cfg.driver = driver;
+    cfg.seed = seed;
+    cfg.soam.insertion_threshold = 0.16;
+    cfg.gwr.insertion_threshold = 0.12;
+    cfg.gng.lambda = 60;
+    cfg.limits.max_signals = 15_000;
+    (cfg.update_threads, cfg.find_threads, cfg.regions) = knobs;
+    JobSpec::from_config(name, cfg)
+}
+
+/// Solo reference: the classic blocking path (`run_convergence` with its
+/// own pool wiring), keeping the algorithm so its network can be compared.
+fn solo_network(spec: &JobSpec) -> (Network, u64, u64) {
+    let mesh = spec.build_mesh().unwrap();
+    let sampler = SurfaceSampler::new(&mesh);
+    let mut algo = make_algorithm(&spec.cfg);
+    let mut fw = make_findwinners(&spec.cfg).unwrap();
+    let mut rng = Rng::seed_from(spec.cfg.seed);
+    let r = run_convergence(algo.as_mut(), &sampler, fw.as_mut(), &spec.cfg, &mut rng);
+    (algo.net().clone(), r.signals, r.discarded)
+}
+
+/// Acceptance: fleet-of-N ≡ N solo runs, bit for bit — across algorithms,
+/// drivers and the knob matrix, with genuinely interleaved scheduling.
+#[test]
+fn fleet_determinism() {
+    let mut combos = vec![(3usize, 2usize, 27usize)];
+    combos.extend(env_combo());
+    for knobs in combos {
+        let specs = vec![
+            spec("soam-par", BenchmarkShape::Blob, Algorithm::Soam, Driver::Parallel, 7, knobs),
+            spec("gng-multi", BenchmarkShape::Eight, Algorithm::Gng, Driver::Multi, 9, knobs),
+            spec("gwr-par", BenchmarkShape::Blob, Algorithm::Gwr, Driver::Parallel, 11, knobs),
+        ];
+        let mut fleet = Fleet::new(specs.clone()).unwrap();
+        let report = fleet.run(&FleetOptions::default(), |_| {}).unwrap();
+        assert_eq!(report.jobs.len(), 3);
+
+        for (k, spec) in specs.iter().enumerate() {
+            let (net, signals, discarded) = solo_network(spec);
+            let label = format!(
+                "job {} knobs {:?}: fleet vs solo",
+                spec.name,
+                (spec.cfg.update_threads, spec.cfg.find_threads, spec.cfg.regions)
+            );
+            assert_eq!(report.jobs[k].1.signals, signals, "{label}");
+            assert_eq!(report.jobs[k].1.discarded, discarded, "{label}");
+            assert_networks_identical(&net, fleet.jobs()[k].session().algo().net(), &label);
+        }
+    }
+}
+
+/// The pipelined driver rides the fleet through the session's synchronous
+/// prefetch equivalent — a fleet pipelined job must equal the threaded solo
+/// driver bitwise.
+#[test]
+fn fleet_pipelined_job_matches_threaded_driver() {
+    let knobs = env_combo().unwrap_or((2, 1, 8));
+    let job = spec(
+        "pipe",
+        BenchmarkShape::Blob,
+        Algorithm::Soam,
+        Driver::Pipelined,
+        13,
+        knobs,
+    );
+    let (net, signals, discarded) = solo_network(&job);
+    let mut fleet = Fleet::new(vec![job]).unwrap();
+    let report = fleet.run(&FleetOptions::default(), |_| {}).unwrap();
+    assert_eq!(report.jobs[0].1.signals, signals);
+    assert_eq!(report.jobs[0].1.discarded, discarded);
+    assert_networks_identical(
+        &net,
+        fleet.jobs()[0].session().algo().net(),
+        "fleet pipelined vs threaded solo",
+    );
+}
+
+/// Interrupting a whole fleet (checkpoint every turn, drop, rebuild from
+/// the same specs, resume) must finish bit-identical to the uninterrupted
+/// fleet.
+#[test]
+fn fleet_checkpoint_resume_matches_uninterrupted() {
+    let dir = std::env::temp_dir().join("msgsn_fleet_resume_test");
+    std::fs::remove_dir_all(&dir).ok();
+    let mk_specs = || {
+        vec![
+            spec("a", BenchmarkShape::Blob, Algorithm::Soam, Driver::Multi, 3, (1, 1, 1)),
+            spec("b", BenchmarkShape::Eight, Algorithm::Gng, Driver::Multi, 5, (1, 1, 8)),
+        ]
+    };
+
+    // Uninterrupted.
+    let mut fleet = Fleet::new(mk_specs()).unwrap();
+    let a = fleet.run(&FleetOptions::default(), |_| {}).unwrap();
+
+    // "Interrupted": run the same specs under a LOW signal cap with
+    // checkpointing on — the fleet stops mid-flight at ~4k signals and its
+    // final checkpoints capture that state. Resuming those checkpoints
+    // under the real caps must continue bit-identically (termination is
+    // recomputed against the restored limits, so raising the budget
+    // resumes the run).
+    let opts = FleetOptions {
+        stride: 4,
+        checkpoint_every: 1,
+        checkpoint_dir: Some(dir.clone()),
+    };
+    let mut capped_specs = mk_specs();
+    for s in &mut capped_specs {
+        s.cfg.limits.max_signals = 4_000;
+    }
+    let mut capped = Fleet::new(capped_specs).unwrap();
+    capped.run(&opts, |_| {}).unwrap();
+    assert!(dir.join("a.msgsnap").exists() && dir.join("b.msgsnap").exists());
+
+    // Resume under the REAL caps: jobs continue from ~4k signals.
+    let mut resumed = Fleet::new(mk_specs()).unwrap();
+    let names = resumed.resume_from(&dir).unwrap();
+    assert_eq!(names.len(), 2);
+    let b = resumed.run(&FleetOptions::default(), |_| {}).unwrap();
+
+    for k in 0..2 {
+        let label = format!("job {k}: resumed fleet vs uninterrupted");
+        assert_eq!(a.jobs[k].1.signals, b.jobs[k].1.signals, "{label}");
+        assert_eq!(a.jobs[k].1.discarded, b.jobs[k].1.discarded, "{label}");
+        assert_eq!(a.jobs[k].1.qe.to_bits(), b.jobs[k].1.qe.to_bits(), "{label}");
+        assert_networks_identical(
+            fleet.jobs()[k].session().algo().net(),
+            resumed.jobs()[k].session().algo().net(),
+            &label,
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -410,6 +410,117 @@ fn prop_lane_kernel_bit_identical_to_exhaustive() {
     );
 }
 
+/// Satellite (PR 5) — the OBJ/OFF parsers are *total*: truncated, spliced,
+/// token-mutated and NaN/inf-injected documents come back as `Err` (or as a
+/// valid mesh when the mutation happened to be harmless), never as a panic
+/// — and a non-finite coordinate is never accepted into a mesh.
+#[test]
+fn prop_mesh_parsers_total_on_malformed_input() {
+    use msgsn::mesh::{parse_obj, parse_off};
+
+    const OBJ: &str = "# corpus\nv 0 0 0\nv 1 0 0\nv 1 1 0\nv 0 1 0\nv 0 0 1\n\
+                       f 1 2 3 4\nf 1/1/1 2/2 -1\nf 1 2 5\n";
+    const OFF: &str = "OFF\n# corpus\n5 3 0\n0 0 0\n1 0 0\n1 1 0\n0 1 0\n0 0 1\n\
+                       3 0 1 2\n4 0 1 2 3\n3 0 1 4\n";
+    // ASCII-only: the truncation mutation cuts at raw byte offsets, which
+    // is only a char boundary because the whole corpus stays ASCII.
+    const GARBAGE: [&str; 14] = [
+        "nan", "NaN", "inf", "-inf", "1e999", "-1", "0x10", "", "f", "v", "OFF",
+        "999999999999999999999", "18446744073709551615", "1/2/3/4",
+    ];
+
+    // The unmutated corpus must parse — otherwise every mutation case is
+    // vacuous.
+    assert!(parse_obj(OBJ).is_ok());
+    assert!(parse_off(OFF).is_ok());
+
+    Prop::new(400, 0xF00D).run(
+        |rng, _size| {
+            let base = if rng.below(2) == 0 { OBJ } else { OFF };
+            let mut text = base.to_string();
+            for _ in 0..rng.below(3) + 1 {
+                match rng.below(5) {
+                    0 => {
+                        // Truncate at a random byte (corpus is ASCII, so
+                        // every cut is a char boundary).
+                        text.truncate(rng.index(text.len() + 1));
+                    }
+                    1 => {
+                        // Replace one whitespace-delimited token.
+                        let tokens: Vec<&str> = text.split_whitespace().collect();
+                        if !tokens.is_empty() {
+                            let victim = tokens[rng.index(tokens.len())].to_string();
+                            let sub = GARBAGE[rng.index(GARBAGE.len())];
+                            text = text.replacen(&victim, sub, 1);
+                        }
+                    }
+                    2 => {
+                        // Insert a garbage line at a random line position.
+                        let mut lines: Vec<String> =
+                            text.lines().map(|l| l.to_string()).collect();
+                        let line = format!(
+                            "{} {} {}",
+                            GARBAGE[rng.index(GARBAGE.len())],
+                            GARBAGE[rng.index(GARBAGE.len())],
+                            GARBAGE[rng.index(GARBAGE.len())],
+                        );
+                        lines.insert(rng.index(lines.len() + 1), line);
+                        text = lines.join("\n");
+                    }
+                    3 => {
+                        // Delete a random line (drops counts/vertices out
+                        // from under OFF's header).
+                        let mut lines: Vec<String> =
+                            text.lines().map(|l| l.to_string()).collect();
+                        if !lines.is_empty() {
+                            lines.remove(rng.index(lines.len()));
+                            text = lines.join("\n");
+                        }
+                    }
+                    _ => {
+                        // Duplicate a random line (duplicate headers,
+                        // inflated counts).
+                        let mut lines: Vec<String> =
+                            text.lines().map(|l| l.to_string()).collect();
+                        if !lines.is_empty() {
+                            let l = lines[rng.index(lines.len())].clone();
+                            lines.insert(rng.index(lines.len() + 1), l);
+                            text = lines.join("\n");
+                        }
+                    }
+                }
+            }
+            text
+        },
+        |text| {
+            // Feed the mutant to BOTH parsers (an OBJ mutant is a malformed
+            // OFF document and vice versa — twice the coverage per case).
+            let outcome = std::panic::catch_unwind(|| {
+                let results = [parse_obj(text), parse_off(text)];
+                for r in results {
+                    if let Ok(mesh) = r {
+                        for v in &mesh.vertices {
+                            if !v.is_finite() {
+                                return Err(format!("accepted non-finite vertex {v:?}"));
+                            }
+                        }
+                        for f in &mesh.faces {
+                            if f.iter().any(|&i| i as usize >= mesh.vertices.len()) {
+                                return Err(format!("accepted out-of-range face {f:?}"));
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            });
+            match outcome {
+                Err(_) => Err("parser panicked".into()),
+                Ok(verdict) => verdict,
+            }
+        },
+    );
+}
+
 /// PR-2 — sharding `find2_batch` across the persistent worker pool must not
 /// change a single bit of any `Winners` for any `find_threads`.
 #[test]

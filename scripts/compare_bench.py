@@ -17,7 +17,11 @@ For every BENCH_*.json in the fresh directory:
   script fails (exit 1) when fresh > committed * (1 + threshold).
 
 Rows are dicts inside any JSON array, matched across files by their "row"
-key (driver rows) or "units" key (microbench rows). Timing fields are the
+key (driver rows) or "units" key (microbench rows). Fleet rows (the
+end_to_end "fleet-concurrent"/"fleet-sequential" pair) additionally carry
+a "jobs" field that becomes part of the key, so the same row name recorded
+at different fleet sizes never collides — re-sizing the fleet bench shows
+up as a new row (skipped) instead of a bogus diff. Timing fields are the
 numeric entries whose name ends in "_s" or "_ns_per_signal". Speedups are
 reported but never fail the run.
 """
@@ -33,7 +37,11 @@ def rows_by_key(node, out):
     """Collect keyed row-dicts from arbitrarily nested JSON."""
     if isinstance(node, dict):
         key = None
-        if "row" in node:
+        if "row" in node and "jobs" in node:
+            # Fleet rows: the same row name at a different fleet size is a
+            # different workload, not a comparable measurement.
+            key = ("row", f"{node['row']}/jobs={node['jobs']}")
+        elif "row" in node:
             key = ("row", str(node["row"]))
         elif "units" in node and "m" in node:
             key = ("units", f"{node['units']}/m={node['m']}")

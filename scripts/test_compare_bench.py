@@ -7,7 +7,10 @@ a spurious failure would block every PR. These tests pin its contract:
 - a workload-scale mismatch disarms the diff with a loud warning;
 - a timing regression beyond the threshold fails (exit 1);
 - within-threshold drift and speedups pass;
-- a fresh file with no committed counterpart is skipped.
+- a fresh file with no committed counterpart is skipped;
+- fleet rows key on (row, jobs): a regression at the same fleet size
+  fails, while the same row name at a different fleet size is a new row
+  (skipped), never a cross-size diff.
 
 Runnable with the stdlib alone (`python3 -m unittest discover -s scripts`)
 or with pytest.
@@ -47,6 +50,16 @@ def bench_payload(signals=60000, total_s=1.0, row="multi"):
         "signals": signals,
         "drivers": [
             {"row": row, "driver": "multi", "total_s": total_s, "units": 300}
+        ],
+    }
+
+
+def fleet_payload(jobs=2, concurrent_s=1.0, sequential_s=2.0):
+    return {
+        "bench": "end_to_end",
+        "fleet": [
+            {"row": "fleet-concurrent", "jobs": jobs, "total_s": concurrent_s},
+            {"row": "fleet-sequential", "jobs": jobs, "total_s": sequential_s},
         ],
     }
 
@@ -132,6 +145,38 @@ class CompareBenchCase(unittest.TestCase):
         r = run_compare(self.baseline, self.fresh)
         self.assertEqual(r.returncode, 0, r.stdout + r.stderr)
         self.assertIn("new row", r.stdout)
+        self.assertIn("no regressions beyond the threshold", r.stdout)
+
+    def test_fleet_row_regression_fails_at_same_size(self):
+        self.write(self.baseline, "BENCH_end_to_end.json", fleet_payload(concurrent_s=1.0))
+        self.write(self.fresh, "BENCH_end_to_end.json", fleet_payload(concurrent_s=1.5))
+        r = run_compare(self.baseline, self.fresh)
+        self.assertEqual(r.returncode, 1, r.stdout + r.stderr)
+        self.assertIn("fleet-concurrent/jobs=2", r.stdout)
+        self.assertIn("REGRESSION", r.stdout)
+
+    def test_fleet_rows_at_different_sizes_never_diff(self):
+        # Re-sizing the fleet bench is a new workload: a huge "regression"
+        # between jobs=2 and jobs=8 rows must be a new-row skip, not a
+        # failure.
+        self.write(self.baseline, "BENCH_end_to_end.json", fleet_payload(jobs=2))
+        self.write(
+            self.fresh,
+            "BENCH_end_to_end.json",
+            fleet_payload(jobs=8, concurrent_s=50.0, sequential_s=99.0),
+        )
+        r = run_compare(self.baseline, self.fresh)
+        self.assertEqual(r.returncode, 0, r.stdout + r.stderr)
+        self.assertIn("new row", r.stdout)
+
+    def test_fleet_jobs_count_is_not_a_timing_field(self):
+        # "jobs" is key material, never a compared metric.
+        self.write(self.baseline, "BENCH_end_to_end.json", fleet_payload())
+        fresh = fleet_payload()
+        fresh["fleet"][0]["jobs"] = 2  # unchanged key, same rows
+        self.write(self.fresh, "BENCH_end_to_end.json", fresh)
+        r = run_compare(self.baseline, self.fresh)
+        self.assertEqual(r.returncode, 0, r.stdout + r.stderr)
         self.assertIn("no regressions beyond the threshold", r.stdout)
 
     def test_non_timing_fields_are_ignored(self):
