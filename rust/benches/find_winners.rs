@@ -14,12 +14,19 @@
 //! region-neighborhood scan over an R-region grid (`regions` knob — exact,
 //! falls back to the tiles near boundaries), `pjrt` the AOT artifact.
 //! Results are written to `BENCH_find_winners.json` for the trajectory.
+//!
+//! Additionally one `multi` row per *supported* SIMD dispatch tier
+//! (`findwinners::simd`) is recorded, forced through the same
+//! `set_override` path the `fw_isa` knob uses. Those JSON rows carry an
+//! `"isa"` field that is part of the `compare_bench.py` row key, so
+//! baselines recorded on hosts with different ISA support never
+//! cross-diff (an absent tier is a skipped row, not a regression).
 
 use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use msgsn::findwinners::{exhaustive_top2, BatchRust, FindWinners, Indexed, Scalar};
+use msgsn::findwinners::{exhaustive_top2, simd, BatchRust, FindWinners, FwIsa, Indexed, Scalar};
 use msgsn::geometry::{Aabb, Vec3};
 use msgsn::rng::Rng;
 use msgsn::runtime::{PjrtFindWinners, Registry, WorkerPool};
@@ -144,6 +151,18 @@ fn main() {
         } else {
             f64::NAN
         };
+        // One dispatched-batch measurement per supported SIMD tier, forced
+        // through the same `set_override` path the `fw_isa` knob uses.
+        // Every tier is bit-identical; only the wall time differs.
+        let mut isa_times = Vec::new();
+        for isa in FwIsa::ALL {
+            if !isa.is_supported() {
+                continue;
+            }
+            simd::set_override(Some(isa)).unwrap();
+            isa_times.push((isa, bench_batch(&mut BatchRust::default(), &net, &signals)));
+        }
+        simd::set_override(None).unwrap();
         println!(
             "{:>7} {:>7} {:>12.3e} {:>12.3e} {:>12.3e} {:>12.3e} {:>12.3e} {:>12.3e} {:>12.3e} {:>7.1} {:>7.1}",
             n,
@@ -158,6 +177,11 @@ fn main() {
             exhaust / lane,
             multi / pooled,
         );
+        let isa_cols: Vec<String> = isa_times
+            .iter()
+            .map(|(isa, t)| format!("{}={t:.3e}", isa.name()))
+            .collect();
+        println!("{:>15} isa-forced multi: {}", "", isa_cols.join("  "));
         json_rows.push(format!(
             "    {{\"units\": {n}, \"m\": {m}, \"exhaustive_s\": {exhaust:e}, \
              \"lane_s\": {lane:e}, \"indexed_s\": {indexed:e}, \"multi_s\": {multi:e}, \
@@ -165,6 +189,14 @@ fn main() {
              \"region{REGIONS}_s\": {region:e}, \"pjrt_s\": {}}}",
             if pjrt.is_nan() { "null".to_string() } else { format!("{pjrt:e}") }
         ));
+        for (isa, t) in &isa_times {
+            // The "isa" field is part of the compare_bench.py row key:
+            // hosts with different ISA support never cross-diff.
+            json_rows.push(format!(
+                "    {{\"units\": {n}, \"m\": {m}, \"isa\": \"{}\", \"multi_s\": {t:e}}}",
+                isa.name()
+            ));
+        }
     }
     if !pjrt_ready {
         println!("(pjrt column skipped: run `make artifacts`)");

@@ -2,7 +2,7 @@
 //! vendored crate set has no `clap`).
 //!
 //! ```text
-//! msgsn run        --mesh eight --driver pjrt [--seed N] [--set k=v]…
+//! msgsn run        --mesh eight --driver multi [--seed N] [--set k=v]…
 //! msgsn fleet      --jobs jobs.json [--checkpoint-every N] [--resume]
 //! msgsn reproduce  [--table N]… [--figure N]… [--all] [--scale quick|paper]
 //! msgsn mesh       --shape hand [--resolution N] [--out hand.obj]
@@ -42,7 +42,9 @@ msgsn — multi-signal growing self-organizing networks (paper reproduction)
 USAGE:
   msgsn run [OPTIONS]            one reconstruction run, report to stdout
       --mesh <blob|eight|hand|heptoroid>   benchmark cloud     [blob]
-      --driver <single|indexed|multi|pjrt|pipelined|parallel>  [single]
+      --driver <single|indexed|multi|pipelined|parallel>       [single]
+                                 (pjrt is quarantined: not wired to the
+                                 unified executor — programmatic use only)
       --algorithm <soam|gwr|gng>                               [soam]
       --seed <N>                                               [42]
       --config <file.toml>       load config file
@@ -56,7 +58,11 @@ USAGE:
                                  Find Winners + Update schedule of the
                                  multi/pipelined/parallel drivers — 1
                                  disables; results are bit-identical for
-                                 any R)
+                                 any R;
+                                 fw_isa=auto|fallback|avx2|avx512|neon
+                                 forces the SIMD Find-Winners tier —
+                                 bit-identical on every tier, env
+                                 MSGSN_FW_ISA is the auto-mode hint)
       --max-signals <N>          safety cap
       --trace                    record trace points
       --save-mesh <out.obj>      write the reconstructed network mesh
@@ -171,10 +177,10 @@ mod tests {
 
     #[test]
     fn parses_run_command() {
-        let cmd = parse(&argv("run --mesh eight --driver pjrt --seed 7")).unwrap();
+        let cmd = parse(&argv("run --mesh eight --driver multi --seed 7")).unwrap();
         let Command::Run(p) = cmd else { panic!("not run") };
         assert_eq!(p.get("mesh"), Some("eight"));
-        assert_eq!(p.get("driver"), Some("pjrt"));
+        assert_eq!(p.get("driver"), Some("multi"));
         assert_eq!(p.get("seed"), Some("7"));
     }
 

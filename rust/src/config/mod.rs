@@ -10,8 +10,20 @@ pub use parse::{parse_config_text, ConfigError, ConfigValue};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 
+use crate::findwinners::FwIsa;
 use crate::mesh::BenchmarkShape;
 use crate::som::{GngParams, GwrParams, SoamParams};
+
+/// Why `driver = "pjrt"` is refused at config level since PR 6: the
+/// ROADMAP's "make pjrt real" decision went the CPU way (runtime-dispatched
+/// explicit-SIMD Find Winners — see the `fw_isa` knob), and an accelerator
+/// column that silently under-delivers is worse than a loud error.
+/// Programmatic use (`Driver::Pjrt` built in code — parity tests, benches
+/// with AOT artifacts) remains supported.
+pub const PJRT_QUARANTINE: &str = "driver \"pjrt\" is quarantined: the PJRT/XLA \
+     offload is not wired to the unified executor; use the hardware-limit CPU \
+     path instead (multi/pipelined/parallel + the fw_isa knob). Programmatic \
+     `Driver::Pjrt` (tests/benches with AOT artifacts) is unaffected";
 
 /// The four experimental columns of the paper (§3.1) plus this
 /// reproduction's two Update-phase drivers (the paper's named future work:
@@ -86,6 +98,18 @@ impl Driver {
             "pipelined" => Some(Driver::Pipelined),
             "parallel" => Some(Driver::Parallel),
             _ => None,
+        }
+    }
+
+    /// [`Driver::from_name`] for *configuration surfaces* (config files,
+    /// `--set`, `--driver`, fleet manifests): parses the same names but
+    /// refuses the quarantined `pjrt` driver with [`PJRT_QUARANTINE`].
+    /// `Ok(None)` means the name is unknown (callers keep their own
+    /// unknown-name error with the expected-names list).
+    pub fn from_config_name(s: &str) -> Result<Option<Driver>, String> {
+        match Driver::from_name(s) {
+            Some(Driver::Pjrt) => Err(PJRT_QUARANTINE.to_string()),
+            other => Ok(other),
         }
     }
 
@@ -180,6 +204,15 @@ pub struct RunConfig {
     /// drivers whose scan runs in `BatchRust` (multi/pipelined/parallel);
     /// the pjrt scan runs inside the XLA executable and ignores it.
     pub find_threads: usize,
+    /// Find-Winners SIMD tier override (`fw_isa` knob): `None` = auto
+    /// (the `MSGSN_FW_ISA` env request, else the widest tier the host
+    /// supports), `Some(tier)` forces that tier — rejected at
+    /// [`crate::engine::make_findwinners`] when the host cannot execute
+    /// it. Every tier returns bit-identical results (property-tested), so
+    /// this knob only moves wall time; the dispatch state is
+    /// process-global (last-built run wins — harmless for the same
+    /// reason).
+    pub fw_isa: Option<FwIsa>,
     /// Spatial regions the bounding volume is partitioned into (target
     /// count; the grid rounds up to a near-isotropic factorization).
     /// `1` (default) disables the partition. With `> 1`, the batched Find
@@ -230,10 +263,25 @@ impl RunConfig {
                     .ok_or_else(|| ConfigError::Type(key.into(), "soam|gwr|gng"))?;
             }
             "driver" => {
-                self.driver = value
+                let s = value
                     .as_str()
-                    .and_then(Driver::from_name)
                     .ok_or_else(|| ConfigError::Type(key.into(), Driver::NAMES))?;
+                self.driver = Driver::from_config_name(s)
+                    .map_err(|why| ConfigError::Unsupported(key.into(), why))?
+                    .ok_or_else(|| ConfigError::Type(key.into(), Driver::NAMES))?;
+            }
+            "fw_isa" => {
+                let s = value
+                    .as_str()
+                    .ok_or_else(|| ConfigError::Type(key.into(), FwIsa::CONFIG_NAMES))?;
+                self.fw_isa = if s == "auto" {
+                    None
+                } else {
+                    Some(
+                        FwIsa::from_name(s)
+                            .ok_or_else(|| ConfigError::Type(key.into(), FwIsa::CONFIG_NAMES))?,
+                    )
+                };
             }
             "mesh" | "shape" => {
                 self.shape = value
@@ -358,14 +406,64 @@ mod tests {
     #[test]
     fn apply_overrides() {
         let mut cfg = RunConfig::default();
-        cfg.apply("driver", &ConfigValue::Str("pjrt".into())).unwrap();
-        assert_eq!(cfg.driver, Driver::Pjrt);
+        cfg.apply("driver", &ConfigValue::Str("multi".into())).unwrap();
+        assert_eq!(cfg.driver, Driver::Multi);
         cfg.apply("insertion_threshold", &ConfigValue::Num(0.123)).unwrap();
         assert!((cfg.soam.insertion_threshold - 0.123).abs() < 1e-6);
         cfg.apply("seed", &ConfigValue::Num(9.0)).unwrap();
         assert_eq!(cfg.seed, 9);
         cfg.apply("trace", &ConfigValue::Bool(true)).unwrap();
         assert!(cfg.limits.trace);
+    }
+
+    #[test]
+    fn pjrt_driver_quarantined_at_config_level() {
+        // Acceptance (PR 6): `driver = "pjrt"` fails loudly at parse time
+        // instead of silently degrading — from every config surface that
+        // funnels through `apply`/`from_config_name` (config files, --set,
+        // --driver, fleet manifests).
+        let mut cfg = RunConfig::default();
+        let before = cfg.driver;
+        for name in ["pjrt", "gpu"] {
+            let err = cfg.apply("driver", &ConfigValue::Str(name.into())).unwrap_err();
+            match &err {
+                ConfigError::Unsupported(key, why) => {
+                    assert_eq!(key, "driver");
+                    assert!(why.contains("not wired to the unified executor"), "{why}");
+                }
+                other => panic!("expected Unsupported, got {other:?}"),
+            }
+            assert!(err.to_string().contains("quarantined"), "{err}");
+            assert_eq!(cfg.driver, before, "failed apply must not change the config");
+        }
+        // Programmatic use keeps parsing (parity tests, benches).
+        assert_eq!(Driver::from_name("pjrt"), Some(Driver::Pjrt));
+        // Unknown names still get the expected-names Type error.
+        assert!(matches!(
+            cfg.apply("driver", &ConfigValue::Str("warp".into())),
+            Err(ConfigError::Type(_, _))
+        ));
+    }
+
+    #[test]
+    fn fw_isa_knob_applies() {
+        use crate::findwinners::FwIsa;
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.fw_isa, None, "default is auto-dispatch");
+        cfg.apply("fw_isa", &ConfigValue::Str("fallback".into())).unwrap();
+        assert_eq!(cfg.fw_isa, Some(FwIsa::Fallback));
+        cfg.apply("fw_isa", &ConfigValue::Str("avx512".into())).unwrap();
+        assert_eq!(cfg.fw_isa, Some(FwIsa::Avx512), "parse-time accepts any tier");
+        cfg.apply("fw_isa", &ConfigValue::Str("auto".into())).unwrap();
+        assert_eq!(cfg.fw_isa, None, "auto resets to dispatch");
+        assert!(matches!(
+            cfg.apply("fw_isa", &ConfigValue::Str("sse9".into())),
+            Err(ConfigError::Type(_, FwIsa::CONFIG_NAMES))
+        ));
+        assert!(matches!(
+            cfg.apply("fw_isa", &ConfigValue::Num(2.0)),
+            Err(ConfigError::Type(_, _))
+        ));
     }
 
     #[test]

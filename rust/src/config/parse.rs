@@ -5,7 +5,7 @@
 //! ```toml
 //! # comment
 //! key = 1.5            # number
-//! name = "pjrt"        # string (double quotes)
+//! name = "multi"       # string (double quotes)
 //! flag = true          # bool
 //! [section]            # keys below become "section.key" …
 //! inner = 2            # … except the conventional [run] section, which is
@@ -54,6 +54,10 @@ pub enum ConfigError {
     UnknownKey(String),
     /// `(key, expected type)`
     Type(String, &'static str),
+    /// `(key, reason)` — the value parses but names a feature this build
+    /// deliberately refuses at config level (e.g. the quarantined `pjrt`
+    /// driver).
+    Unsupported(String, String),
 }
 
 impl fmt::Display for ConfigError {
@@ -62,6 +66,7 @@ impl fmt::Display for ConfigError {
             ConfigError::Parse(line, msg) => write!(f, "config line {line}: {msg}"),
             ConfigError::UnknownKey(k) => write!(f, "unknown config key {k:?}"),
             ConfigError::Type(k, want) => write!(f, "config key {k:?} expects {want}"),
+            ConfigError::Unsupported(k, why) => write!(f, "config key {k:?}: {why}"),
         }
     }
 }

@@ -53,6 +53,10 @@ pub fn preset(shape: BenchmarkShape) -> RunConfig {
         // parallelization", so the default keeps that semantics-preserving
         // baseline single-threaded.
         find_threads: 1,
+        // Auto-dispatch the widest supported SIMD Find-Winners tier
+        // (`--set fw_isa=fallback|avx2|avx512|neon` forces one; every tier
+        // is bit-identical, so this only moves wall time).
+        fw_isa: None,
         // The spatial region partition is likewise opt-in
         // (`--set regions=R`): results are bit-identical either way, and
         // the paper's columns have no region decomposition.

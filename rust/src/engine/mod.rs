@@ -8,12 +8,17 @@
 //!
 //! | driver | iteration | Find Winners | Update phase |
 //! |---|---|---|---|
-//! | single | basic (m = 1) | `Scalar` lane-blocked exhaustive | executor, m = 1 |
+//! | single | basic (m = 1) | `Scalar` dispatched-SIMD exhaustive | executor, m = 1 |
 //! | indexed | basic (m = 1) | `Indexed` spatial hash | executor, m = 1 |
 //! | multi | multi-signal (§2.2) | `BatchRust` SoA-tiled scan (`find_threads` sharding) | executor, sequential |
-//! | pjrt | multi-signal (§2.2) | `runtime::PjrtFindWinners` (AOT/PJRT) | executor, sequential |
+//! | pjrt | multi-signal (§2.2) | `runtime::PjrtFindWinners` (AOT/PJRT) — quarantined at config level, programmatic only | executor, sequential |
 //! | pipelined | multi-signal, Sample(k+1) overlaps Update(k) | `BatchRust` | executor, pooled (`update_threads`) |
 //! | parallel | multi-signal (§2.2) | `BatchRust` | executor, pooled (`update_threads`) |
+//!
+//! The `Scalar`/`BatchRust` scans run on the runtime-dispatched
+//! explicit-SIMD block kernel (`fw_isa` knob, resolved in
+//! [`make_findwinners`]; see [`crate::findwinners::simd`]) — every tier
+//! bit-identical, so the dispatch never shows up in results.
 //!
 //! The batched drivers share one persistent [`WorkerPool`] per run (created
 //! in [`run_convergence`]): the `Parallel` and `Pipelined` executors plan
@@ -58,7 +63,7 @@ pub use session::{ConvergenceSession, SessionCore, SessionMode};
 
 use std::sync::Arc;
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::config::{Algorithm, Driver, Limits, RunConfig};
 use crate::coordinator::BatchExecutor;
@@ -221,7 +226,14 @@ pub fn make_algorithm(cfg: &RunConfig) -> Box<dyn GrowingNetwork> {
 
 /// Build the Find-Winners strategy selected by `cfg` (Pjrt requires the AOT
 /// artifacts; fails with a pointer to `make artifacts` when missing).
+///
+/// Also resolves the Find-Winners SIMD dispatch tier (`cfg.fw_isa`) before
+/// any kernel runs: a forced tier the host cannot execute fails the build
+/// loudly instead of hitting undefined behavior later. Every construction
+/// path — [`run`], [`ConvergenceSession::new`], fleet jobs — funnels
+/// through here, so the knob applies everywhere.
 pub fn make_findwinners(cfg: &RunConfig) -> Result<Box<dyn FindWinners>> {
+    crate::findwinners::simd::set_override(cfg.fw_isa).map_err(|e| anyhow!(e))?;
     Ok(match cfg.driver {
         Driver::Single => Box::new(Scalar::new()),
         Driver::Indexed => Box::new(Indexed::new(cfg.index_cell)),

@@ -5,16 +5,18 @@
 //! The scan is *unit-tiled*: live units are gathered into lane-padded SoA
 //! tiles (mirroring the CUDA kernel's shared-memory staging and the Pallas
 //! kernel's VMEM tiles on the CPU cache) and each tile is streamed over all
-//! signals with the lane-blocked kernel ([`super::lanes`]). Three
-//! performance layers, all invisible to semantics:
+//! signals with the runtime-dispatched SIMD block kernel ([`super::simd`]).
+//! Three performance layers, all invisible to semantics:
 //!
 //! 1. **Tile cache**: the gather runs once and is reused across consecutive
 //!    `find2_batch` calls; `sync`/`rebuild` invalidate it (the drivers'
 //!    once-per-batch sync contract makes that exact). Aliveness comes from
 //!    `Network::is_alive`, not a coordinate comparison — a unit that
 //!    legitimately sits at `x = DEAD_POS.x` is still scanned.
-//! 2. **Lane-blocked kernel**: per-lane running top-2 plus one horizontal
-//!    reduce per tile, bit-identical to `exhaustive_top2` (see `lanes`).
+//! 2. **Dispatched SIMD block kernel**: per-lane running top-2 plus one
+//!    horizontal reduce per tile, on the widest ISA the host supports
+//!    (AVX-512F/AVX2/NEON, portable `lanes` fallback) — every tier
+//!    bit-identical to `exhaustive_top2` (see `simd`).
 //! 3. **Signal sharding**: with an attached [`WorkerPool`] (`find_threads`
 //!    knob), large batches are split into work-stealing chunks claimed by
 //!    the persistent workers (a worker finishing a cheap chunk immediately
@@ -34,8 +36,8 @@ use crate::geometry::Vec3;
 use crate::runtime::WorkerPool;
 use crate::som::{ChangeLog, Network, RegionGrid, RegionMap, Winners, DEAD_POS};
 
-use super::lanes::{self, LANES};
-use super::{region_top2, FindWinners};
+use super::lanes::LANES;
+use super::{region_top2, simd, FindWinners};
 
 /// Running-state sentinel: a signal's top-2 before any unit was merged.
 const PENDING: Winners =
@@ -218,7 +220,7 @@ fn scan_shard(
             let (bx, by, bz) = (&xs[start..end], &ys[start..end], &zs[start..end]);
             let bids = &ids[start..end];
             for &k in &fallback {
-                let t = lanes::lane_block_top2(bx, by, bz, signals[k]);
+                let t = simd::block_top2(bx, by, bz, signals[k]);
                 let w = out[k].as_mut().unwrap();
                 if t.w1 != u32::MAX {
                     merge_push(w, t.d1, bids[t.w1 as usize]);
@@ -234,7 +236,7 @@ fn scan_shard(
         let (bx, by, bz) = (&xs[start..end], &ys[start..end], &zs[start..end]);
         let bids = &ids[start..end];
         for (s, slot) in signals.iter().zip(out.iter_mut()) {
-            let t = lanes::lane_block_top2(bx, by, bz, *s);
+            let t = simd::block_top2(bx, by, bz, *s);
             let w = slot.as_mut().unwrap();
             if t.w1 != u32::MAX {
                 merge_push(w, t.d1, bids[t.w1 as usize]);
@@ -252,7 +254,7 @@ impl FindWinners for BatchRust {
     }
 
     fn find2(&mut self, net: &Network, signal: Vec3) -> Option<Winners> {
-        lanes::lane_top2(net, signal)
+        simd::top2(net, signal)
     }
 
     fn find2_batch(

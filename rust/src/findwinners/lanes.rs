@@ -3,6 +3,12 @@
 //! `[f32; LANES]` accumulators, branchless select updates, `chunks_exact`
 //! blocks — no nightly features, no intrinsics, no new dependencies).
 //!
+//! Since PR 6 this is the **portable fallback tier** of the runtime ISA
+//! dispatch in [`super::simd`] (which adds explicit AVX-512F/AVX2/NEON
+//! kernels); it also remains the semantic model the explicit kernels
+//! mirror — same per-lane update rule, same [`Top2::lex_push`] horizontal
+//! reduce.
+//!
 //! ## Exactness
 //!
 //! [`super::exhaustive_top2`]'s sequential scan with strict `<` comparisons
@@ -25,8 +31,9 @@
 use crate::geometry::Vec3;
 use crate::som::{Network, Winners, SOA_LANES};
 
-/// Lane width of the blocked scan (one AVX2 f32 register). Fixed at the
-/// SoA mirror's padding width so blocks need no scalar tail.
+/// Lane width of the blocked scan. Fixed at the SoA mirror's padding width
+/// (one AVX-512 f32 register; two AVX2 registers on narrower hosts, where
+/// LLVM simply unrolls) so blocks need no scalar tail on any dispatch tier.
 pub const LANES: usize = SOA_LANES;
 
 /// `(d_a, i_a) < (d_b, i_b)` in the lexicographic order that encodes the
@@ -229,10 +236,12 @@ mod tests {
     fn block_indices_map_through_id_tables() {
         // A gathered tile with non-identity ids: block-local lex order must
         // survive the (monotone) mapping.
-        let xs = [0.0, 1.0, 2.0, 0.0, 1e30, 1e30, 1e30, 1e30];
-        let ys = [0.0; 8];
-        let zs = [0.0; 8];
-        let ids = [10u32, 20, 30, 40, u32::MAX, u32::MAX, u32::MAX, u32::MAX];
+        let mut xs = [1e30f32; LANES];
+        let ys = [0.0; LANES];
+        let zs = [0.0; LANES];
+        xs[..4].copy_from_slice(&[0.0, 1.0, 2.0, 0.0]);
+        let mut ids = [u32::MAX; LANES];
+        ids[..4].copy_from_slice(&[10, 20, 30, 40]);
         let t = lane_block_top2(&xs, &ys, &zs, Vec3::ZERO);
         // Distance 0 twice (locals 0 and 3): lowest local index wins slot 1.
         assert_eq!(t.w1, 0);

@@ -4,16 +4,20 @@
 //!
 //! | impl | strategy | data layout / kernel | used by drivers |
 //! |---|---|---|---|
-//! | [`Scalar`] | one scan per signal | SoA mirror, lane-blocked ([`lanes`]) | single |
+//! | [`Scalar`] | one scan per signal | SoA mirror, dispatched SIMD block scan ([`simd`]) | single |
 //! | [`Indexed`] | spatial hash, 27-cell query, exhaustive fallback | AoS mirror | indexed |
-//! | [`BatchRust`] | batched scan, unit-tiled for cache reuse; optional region-neighborhood scan (`regions`, exact with global fallback) | cached SoA tiles, lane-blocked, optional [`crate::runtime::WorkerPool`] sharding (`find_threads`) | multi, pipelined, parallel |
-//! | `runtime::PjrtFindWinners` | AOT Pallas/XLA artifact via PJRT | VMEM tiles | pjrt |
+//! | [`BatchRust`] | batched scan, unit-tiled for cache reuse; optional region-neighborhood scan (`regions`, exact with global fallback) | cached SoA tiles, dispatched SIMD block scan, optional [`crate::runtime::WorkerPool`] sharding (`find_threads`) | multi, pipelined, parallel |
+//! | `runtime::PjrtFindWinners` | AOT Pallas/XLA artifact via PJRT | VMEM tiles | pjrt (quarantined at config level — programmatic use only) |
 //!
 //! The first four driver columns are the paper's (§3.1); `pipelined` and
 //! `parallel` are this reproduction's Update-phase drivers and reuse the
-//! `BatchRust` scan unchanged. The lane-blocked kernel is bit-identical to
-//! [`exhaustive_top2`] (see `lanes` module docs for the argument), so the
-//! layout/kernel column is pure performance — semantics never change.
+//! `BatchRust` scan unchanged. The block scan runs on a runtime-dispatched
+//! explicit-SIMD kernel — AVX-512F, AVX2 or NEON, with the auto-vectorized
+//! [`lanes`] kernel as the portable fallback (`fw_isa` knob /
+//! `MSGSN_FW_ISA` env override; see [`simd`]) — every tier bit-identical
+//! to [`exhaustive_top2`] (see the `simd` and `lanes` module docs for the
+//! argument), so the layout/kernel column is pure performance — semantics
+//! never change.
 //!
 //! All implementations share *exact* semantics (squared distances in f32 via
 //! the naive difference form, lowest-index tie-break); `Indexed` is the one
@@ -25,12 +29,14 @@ mod batch;
 mod indexed;
 pub mod lanes;
 mod scalar;
+pub mod simd;
 
 use std::sync::Arc;
 
 pub use batch::BatchRust;
 pub use indexed::Indexed;
 pub use scalar::Scalar;
+pub use simd::FwIsa;
 
 use crate::geometry::Vec3;
 use crate::runtime::WorkerPool;

@@ -1,14 +1,14 @@
 //! `Scalar`: the paper's **Single-signal** reference implementation — one
 //! exhaustive O(N) scan per signal, no auxiliary structure. The scan runs
-//! on the lane-blocked kernel over the network's SoA mirror, which is
-//! bit-identical to [`super::exhaustive_top2`] (see [`super::lanes`]), so
-//! the baseline semantics are untouched — it is just no longer slower than
-//! the hardware requires.
+//! on the runtime-dispatched SIMD block kernel over the network's SoA
+//! mirror, which is bit-identical to [`super::exhaustive_top2`] on every
+//! tier (see [`super::simd`]), so the baseline semantics are untouched —
+//! it is just no longer slower than the hardware requires.
 
 use crate::geometry::Vec3;
 use crate::som::{Network, Winners};
 
-use super::{lanes, FindWinners};
+use super::{simd, FindWinners};
 
 /// Exhaustive per-signal Find Winners (the baseline every speedup in
 /// Figs. 9–10 is measured against).
@@ -28,7 +28,7 @@ impl FindWinners for Scalar {
 
     #[inline]
     fn find2(&mut self, net: &Network, signal: Vec3) -> Option<Winners> {
-        lanes::lane_top2(net, signal)
+        simd::top2(net, signal)
     }
 }
 

@@ -1,0 +1,631 @@
+//! Explicit-SIMD Find-Winners kernels with runtime ISA dispatch — the
+//! hardware-limit CPU answer to the ROADMAP's "make pjrt real" decision
+//! (the accelerator stub stays quarantined; this path pushes the paper's
+//! dominant kernel to peak on every x86 and ARM host instead).
+//!
+//! ## Dispatch tiers
+//!
+//! | tier | `std::arch` kernel | width | detected via |
+//! |---|---|---|---|
+//! | `avx512` | AVX-512F, `__mmask16` index blends | f32×16 | `is_x86_feature_detected!("avx512f")` |
+//! | `avx2` | AVX2, `blendv` index blends | f32×8 | `is_x86_feature_detected!("avx2")` |
+//! | `neon` | NEON, `vbsl` index blends | f32×4 | `is_aarch64_feature_detected!("neon")` |
+//! | `fallback` | [`super::lanes`] auto-vectorized blocks | f32×[`SOA_LANES`] | always available |
+//!
+//! The best supported tier is detected once (first use) and cached in an
+//! atomic; every tier is selectable explicitly through the `fw_isa`
+//! RunConfig knob or the `MSGSN_FW_ISA` environment variable (resolution
+//! order: knob > env > detection — see [`set_override`]). The choice is
+//! process-global, which is safe precisely because every tier returns the
+//! same bits — switching tiers can only change wall time, never results.
+//!
+//! ## Exactness
+//!
+//! Each kernel is a **fused single pass**: squared distance and candidate
+//! id travel together through the in-register top-2 update, so there is no
+//! separate tie-break fixup to get wrong. The argument that every tier is
+//! bit-identical to [`super::exhaustive_top2`]:
+//!
+//! 1. **No f32 reassociation.** The distance is computed with explicit
+//!    `mul`/`add` intrinsics in exactly [`crate::geometry::Vec3::dist2`]'s
+//!    association, `(dx·dx + dy·dy) + dz·dz` — never an FMA contraction
+//!    (which would round once instead of twice), never a reordered sum.
+//!    Each lane therefore produces the same f32 distance bits as the
+//!    scalar scan.
+//! 2. **Per-lane lex order for free.** Within a lane, candidate ids
+//!    strictly ascend (lane `l` sees ids `l, l+W, l+2W, …`), so the strict
+//!    `<` compare-masked blends (`d2' = m1 ? d1 : (m2 ? d : d2)`, ids
+//!    blended by the same masks) keep the lane-local running top-2 in
+//!    lexicographic `(distance, id)` order — identical to the update rule
+//!    of [`super::lanes::lane_block_top2`], just with the select in a
+//!    register instead of per element.
+//! 3. **Width-invariant horizontal merge.** The `2·W` lane candidates are
+//!    merged through the existing exact [`Top2::lex_push`] reduce, which
+//!    orders by the full `(distance, id)` pair. That merge is invariant to
+//!    how candidates were partitioned into lanes, so any width (4, 8, 16,
+//!    [`SOA_LANES`]) yields the same two winners with the same distance
+//!    bits — including exact ties (lowest index wins) and the `None` rule
+//!    (dead/padding slots hold [`crate::som::DEAD_POS`], whose squared
+//!    distance overflows to `+inf` and never passes a strict `<`).
+//!
+//! Every compiled-and-detected tier is property-tested bit-identical to
+//! the exhaustive scan (random clouds, forced ties, dead and padded
+//! slots) in this module's tests; `rust/tests/executor_parity.rs` runs
+//! whole convergence runs fallback-vs-dispatched.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+use crate::geometry::Vec3;
+use crate::som::{Network, Winners, SOA_LANES};
+
+use super::lanes::{self, Top2};
+
+// Every kernel width must divide the SoA padding width, so no tier ever
+// needs a scalar tail over the mirror or the batch tiles.
+const _: () = assert!(SOA_LANES % 16 == 0);
+
+/// One Find-Winners kernel tier. All variants exist on every target so
+/// config files parse everywhere; [`FwIsa::is_supported`] reports whether
+/// the running host can actually execute a tier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FwIsa {
+    /// The portable auto-vectorized lane kernel ([`super::lanes`]).
+    Fallback = 1,
+    /// AVX2 f32×8 (x86_64).
+    Avx2 = 2,
+    /// AVX-512F f32×16 with per-lane `u32` index blends (x86_64).
+    Avx512 = 3,
+    /// NEON f32×4 (aarch64).
+    Neon = 4,
+}
+
+impl FwIsa {
+    pub const ALL: [FwIsa; 4] = [FwIsa::Fallback, FwIsa::Avx2, FwIsa::Avx512, FwIsa::Neon];
+
+    /// Accepted values for the `fw_isa` config knob / `MSGSN_FW_ISA` env.
+    pub const CONFIG_NAMES: &'static str = "auto|fallback|avx2|avx512|neon";
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FwIsa::Fallback => "fallback",
+            FwIsa::Avx2 => "avx2",
+            FwIsa::Avx512 => "avx512",
+            FwIsa::Neon => "neon",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<FwIsa> {
+        match s {
+            "fallback" => Some(FwIsa::Fallback),
+            "avx2" => Some(FwIsa::Avx2),
+            "avx512" | "avx512f" => Some(FwIsa::Avx512),
+            "neon" => Some(FwIsa::Neon),
+            _ => None,
+        }
+    }
+
+    /// Can the running host execute this tier? (Compile-target gate plus
+    /// runtime feature detection.)
+    pub fn is_supported(self) -> bool {
+        match self {
+            FwIsa::Fallback => true,
+            #[cfg(target_arch = "x86_64")]
+            FwIsa::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+            #[cfg(target_arch = "x86_64")]
+            FwIsa::Avx512 => std::arch::is_x86_feature_detected!("avx512f"),
+            #[cfg(target_arch = "aarch64")]
+            FwIsa::Neon => std::arch::is_aarch64_feature_detected!("neon"),
+            #[allow(unreachable_patterns)] // reachable for foreign-arch tiers
+            _ => false,
+        }
+    }
+
+    /// The widest tier the running host supports.
+    pub fn detect_best() -> FwIsa {
+        for isa in [FwIsa::Avx512, FwIsa::Avx2, FwIsa::Neon] {
+            if isa.is_supported() {
+                return isa;
+            }
+        }
+        FwIsa::Fallback
+    }
+}
+
+/// Process-global active tier; 0 = not yet resolved. Every tier returns
+/// identical bits, so relaxed ordering (and last-writer-wins between
+/// concurrent runs) can only perturb wall time, never results.
+static ACTIVE: AtomicU8 = AtomicU8::new(0);
+
+fn from_code(code: u8) -> Option<FwIsa> {
+    FwIsa::ALL.into_iter().find(|isa| *isa as u8 == code)
+}
+
+/// `MSGSN_FW_ISA` request, read once per process. Empty or `auto` means
+/// unset; unknown or unsupported values warn once and fall back to
+/// detection (an env override must never abort a run the default would
+/// have completed).
+fn env_request() -> Option<FwIsa> {
+    static ENV: OnceLock<Option<FwIsa>> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        let raw = std::env::var("MSGSN_FW_ISA").ok()?;
+        let raw = raw.trim();
+        if raw.is_empty() || raw == "auto" {
+            return None;
+        }
+        match FwIsa::from_name(raw) {
+            Some(isa) if isa.is_supported() => Some(isa),
+            Some(isa) => {
+                eprintln!(
+                    "MSGSN_FW_ISA={}: not supported on this host — using {}",
+                    isa.name(),
+                    FwIsa::detect_best().name()
+                );
+                None
+            }
+            None => {
+                eprintln!(
+                    "MSGSN_FW_ISA={raw:?}: unknown tier (expected {}) — using {}",
+                    FwIsa::CONFIG_NAMES,
+                    FwIsa::detect_best().name()
+                );
+                None
+            }
+        }
+    })
+}
+
+fn default_isa() -> FwIsa {
+    env_request().unwrap_or_else(FwIsa::detect_best)
+}
+
+/// The tier [`block_top2`]/[`top2`] currently dispatch to. Resolved on
+/// first use (env request, else detection) and after every
+/// [`set_override`]. Always a supported tier.
+pub fn active_isa() -> FwIsa {
+    match from_code(ACTIVE.load(Ordering::Relaxed)) {
+        Some(isa) => isa,
+        None => {
+            let isa = default_isa();
+            ACTIVE.store(isa as u8, Ordering::Relaxed);
+            isa
+        }
+    }
+}
+
+/// Apply the `fw_isa` knob: `Some(tier)` forces that tier (error when the
+/// host cannot execute it — a *config* request, unlike the env hint, must
+/// fail loudly), `None` re-resolves the default (env request, else
+/// detection). Returns the tier now active. The engine calls this from
+/// `make_findwinners`, so the knob flows through every driver, session and
+/// fleet job.
+pub fn set_override(request: Option<FwIsa>) -> Result<FwIsa, String> {
+    let isa = match request {
+        Some(isa) if !isa.is_supported() => {
+            return Err(format!(
+                "fw_isa \"{}\" is not supported on this host (detected best: \"{}\")",
+                isa.name(),
+                FwIsa::detect_best().name()
+            ));
+        }
+        Some(isa) => isa,
+        None => default_isa(),
+    };
+    ACTIVE.store(isa as u8, Ordering::Relaxed);
+    Ok(isa)
+}
+
+/// Dispatched top-2 over one lane-padded SoA block (the drop-in for
+/// [`lanes::lane_block_top2`] at every call site). Returns block-local
+/// indices; `xs`/`ys`/`zs` must have equal lengths that are a multiple of
+/// [`SOA_LANES`] (the SoA mirror and the batch gather both guarantee
+/// this — and every kernel width divides `SOA_LANES`, so no tier needs a
+/// scalar tail).
+#[inline]
+pub fn block_top2(xs: &[f32], ys: &[f32], zs: &[f32], signal: Vec3) -> Top2 {
+    // `active_isa()` only ever holds supported tiers, so the unsafe
+    // target-feature calls below are sound.
+    dispatch(active_isa(), xs, ys, zs, signal)
+}
+
+/// [`block_top2`] on an explicitly forced tier — the property-test and
+/// per-ISA bench entry. Panics when the host cannot execute `isa` (callers
+/// gate on [`FwIsa::is_supported`]).
+pub fn block_top2_with(isa: FwIsa, xs: &[f32], ys: &[f32], zs: &[f32], signal: Vec3) -> Top2 {
+    assert!(isa.is_supported(), "{} not supported on this host", isa.name());
+    dispatch(isa, xs, ys, zs, signal)
+}
+
+/// Dispatched top-2 over the network's SoA position mirror — the
+/// vectorized drop-in for [`super::exhaustive_top2`] (block-local indices
+/// == slab ids for the identity mapping).
+#[inline]
+pub fn top2(net: &Network, signal: Vec3) -> Option<Winners> {
+    let (xs, ys, zs) = net.soa();
+    block_top2(xs, ys, zs, signal).winners()
+}
+
+#[inline]
+fn dispatch(isa: FwIsa, xs: &[f32], ys: &[f32], zs: &[f32], signal: Vec3) -> Top2 {
+    debug_assert_eq!(xs.len(), ys.len());
+    debug_assert_eq!(xs.len(), zs.len());
+    debug_assert_eq!(xs.len() % SOA_LANES, 0, "SoA block not lane-padded");
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `isa.is_supported()` held (checked by the caller or by
+        // the `active_isa` invariant), so the required CPU feature is
+        // present.
+        FwIsa::Avx2 => unsafe { avx2_block_top2(xs, ys, zs, signal) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above, avx512f is present.
+        FwIsa::Avx512 => unsafe { avx512_block_top2(xs, ys, zs, signal) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: as above, neon is present.
+        FwIsa::Neon => unsafe { neon_block_top2(xs, ys, zs, signal) },
+        _ => lanes::lane_block_top2(xs, ys, zs, signal),
+    }
+}
+
+/// Merge the `2·W` per-lane candidates under the full lexicographic
+/// order — the same width-invariant horizontal reduce as the portable
+/// kernel ([`Top2::lex_push`] ignores the `(+inf, u32::MAX)` sentinels).
+#[inline]
+fn reduce_lanes<const W: usize>(
+    d1: [f32; W],
+    w1: [u32; W],
+    d2: [f32; W],
+    w2: [u32; W],
+) -> Top2 {
+    let mut acc = Top2::EMPTY;
+    for l in 0..W {
+        acc.lex_push(d1[l], w1[l]);
+        acc.lex_push(d2[l], w2[l]);
+    }
+    acc
+}
+
+/// AVX2 f32×8 fused distance + top-2 pass. Index vectors ride through
+/// `blendv` selects on the float-compare masks (a pure bitwise lane
+/// select — integer bit patterns pass through untouched).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn avx2_block_top2(xs: &[f32], ys: &[f32], zs: &[f32], signal: Vec3) -> Top2 {
+    use std::arch::x86_64::*;
+    const W: usize = 8;
+    let sx = _mm256_set1_ps(signal.x);
+    let sy = _mm256_set1_ps(signal.y);
+    let sz = _mm256_set1_ps(signal.z);
+    let mut d1 = _mm256_set1_ps(f32::INFINITY);
+    let mut d2 = _mm256_set1_ps(f32::INFINITY);
+    let mut w1 = _mm256_set1_epi32(-1);
+    let mut w2 = _mm256_set1_epi32(-1);
+    let mut idx = _mm256_setr_epi32(0, 1, 2, 3, 4, 5, 6, 7);
+    let step = _mm256_set1_epi32(W as i32);
+    for base in (0..xs.len()).step_by(W) {
+        let dx = _mm256_sub_ps(sx, _mm256_loadu_ps(xs.as_ptr().add(base)));
+        let dy = _mm256_sub_ps(sy, _mm256_loadu_ps(ys.as_ptr().add(base)));
+        let dz = _mm256_sub_ps(sz, _mm256_loadu_ps(zs.as_ptr().add(base)));
+        // (dx·dx + dy·dy) + dz·dz — explicit mul/add in Vec3::dist2's
+        // association; deliberately NOT an FMA (different rounding).
+        let d = _mm256_add_ps(
+            _mm256_add_ps(_mm256_mul_ps(dx, dx), _mm256_mul_ps(dy, dy)),
+            _mm256_mul_ps(dz, dz),
+        );
+        let m1 = _mm256_cmp_ps::<_CMP_LT_OQ>(d, d1);
+        let m2 = _mm256_cmp_ps::<_CMP_LT_OQ>(d, d2);
+        // d2' = m1 ? d1 : (m2 ? d : d2); the id lanes follow the same
+        // masks, keeping (distance, id) fused through the update.
+        let d2n = _mm256_blendv_ps(_mm256_blendv_ps(d2, d, m2), d1, m1);
+        let w2n = _mm256_castps_si256(_mm256_blendv_ps(
+            _mm256_blendv_ps(_mm256_castsi256_ps(w2), _mm256_castsi256_ps(idx), m2),
+            _mm256_castsi256_ps(w1),
+            m1,
+        ));
+        d1 = _mm256_blendv_ps(d1, d, m1);
+        w1 = _mm256_castps_si256(_mm256_blendv_ps(
+            _mm256_castsi256_ps(w1),
+            _mm256_castsi256_ps(idx),
+            m1,
+        ));
+        d2 = d2n;
+        w2 = w2n;
+        idx = _mm256_add_epi32(idx, step);
+    }
+    let (mut hd1, mut hd2) = ([0.0f32; W], [0.0f32; W]);
+    let (mut hw1, mut hw2) = ([0u32; W], [0u32; W]);
+    _mm256_storeu_ps(hd1.as_mut_ptr(), d1);
+    _mm256_storeu_ps(hd2.as_mut_ptr(), d2);
+    _mm256_storeu_si256(hw1.as_mut_ptr().cast(), w1);
+    _mm256_storeu_si256(hw2.as_mut_ptr().cast(), w2);
+    reduce_lanes(hd1, hw1, hd2, hw2)
+}
+
+/// AVX-512F f32×16 fused distance + top-2 pass: compare-to-`__mmask16`,
+/// then masked blends keep the `u32` id lanes fused with their distances
+/// in-register (`_mm512_mask_blend_*`: `k ? b : a`).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f")]
+unsafe fn avx512_block_top2(xs: &[f32], ys: &[f32], zs: &[f32], signal: Vec3) -> Top2 {
+    use std::arch::x86_64::*;
+    const W: usize = 16;
+    let sx = _mm512_set1_ps(signal.x);
+    let sy = _mm512_set1_ps(signal.y);
+    let sz = _mm512_set1_ps(signal.z);
+    let mut d1 = _mm512_set1_ps(f32::INFINITY);
+    let mut d2 = _mm512_set1_ps(f32::INFINITY);
+    let mut w1 = _mm512_set1_epi32(-1);
+    let mut w2 = _mm512_set1_epi32(-1);
+    let mut idx = _mm512_setr_epi32(0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15);
+    let step = _mm512_set1_epi32(W as i32);
+    for base in (0..xs.len()).step_by(W) {
+        let dx = _mm512_sub_ps(sx, _mm512_loadu_ps(xs.as_ptr().add(base)));
+        let dy = _mm512_sub_ps(sy, _mm512_loadu_ps(ys.as_ptr().add(base)));
+        let dz = _mm512_sub_ps(sz, _mm512_loadu_ps(zs.as_ptr().add(base)));
+        // Explicit mul/add (no FMA), Vec3::dist2's association.
+        let d = _mm512_add_ps(
+            _mm512_add_ps(_mm512_mul_ps(dx, dx), _mm512_mul_ps(dy, dy)),
+            _mm512_mul_ps(dz, dz),
+        );
+        let m1 = _mm512_cmp_ps_mask::<_CMP_LT_OQ>(d, d1);
+        let m2 = _mm512_cmp_ps_mask::<_CMP_LT_OQ>(d, d2);
+        let d2n = _mm512_mask_blend_ps(m1, _mm512_mask_blend_ps(m2, d2, d), d1);
+        let w2n = _mm512_mask_blend_epi32(m1, _mm512_mask_blend_epi32(m2, w2, idx), w1);
+        d1 = _mm512_mask_blend_ps(m1, d1, d);
+        w1 = _mm512_mask_blend_epi32(m1, w1, idx);
+        d2 = d2n;
+        w2 = w2n;
+        idx = _mm512_add_epi32(idx, step);
+    }
+    let (mut hd1, mut hd2) = ([0.0f32; W], [0.0f32; W]);
+    let (mut hw1, mut hw2) = ([0u32; W], [0u32; W]);
+    _mm512_storeu_ps(hd1.as_mut_ptr(), d1);
+    _mm512_storeu_ps(hd2.as_mut_ptr(), d2);
+    _mm512_storeu_si512(hw1.as_mut_ptr().cast(), w1);
+    _mm512_storeu_si512(hw2.as_mut_ptr().cast(), w2);
+    reduce_lanes(hd1, hw1, hd2, hw2)
+}
+
+/// NEON f32×4 fused distance + top-2 pass. `vbslq` is a per-bit select
+/// (`mask ? a : b`), so the `u32` id lanes blend on the same `vcltq_f32`
+/// masks as the distances.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn neon_block_top2(xs: &[f32], ys: &[f32], zs: &[f32], signal: Vec3) -> Top2 {
+    use std::arch::aarch64::*;
+    const W: usize = 4;
+    let sx = vdupq_n_f32(signal.x);
+    let sy = vdupq_n_f32(signal.y);
+    let sz = vdupq_n_f32(signal.z);
+    let mut d1 = vdupq_n_f32(f32::INFINITY);
+    let mut d2 = vdupq_n_f32(f32::INFINITY);
+    let mut w1 = vdupq_n_u32(u32::MAX);
+    let mut w2 = vdupq_n_u32(u32::MAX);
+    let lane_ids: [u32; W] = [0, 1, 2, 3];
+    let mut idx = vld1q_u32(lane_ids.as_ptr());
+    let step = vdupq_n_u32(W as u32);
+    for base in (0..xs.len()).step_by(W) {
+        let dx = vsubq_f32(sx, vld1q_f32(xs.as_ptr().add(base)));
+        let dy = vsubq_f32(sy, vld1q_f32(ys.as_ptr().add(base)));
+        let dz = vsubq_f32(sz, vld1q_f32(zs.as_ptr().add(base)));
+        // Explicit mul/add (no vfmaq fusion), Vec3::dist2's association.
+        let d = vaddq_f32(
+            vaddq_f32(vmulq_f32(dx, dx), vmulq_f32(dy, dy)),
+            vmulq_f32(dz, dz),
+        );
+        let m1 = vcltq_f32(d, d1);
+        let m2 = vcltq_f32(d, d2);
+        let d2n = vbslq_f32(m1, d1, vbslq_f32(m2, d, d2));
+        let w2n = vbslq_u32(m1, w1, vbslq_u32(m2, idx, w2));
+        d1 = vbslq_f32(m1, d, d1);
+        w1 = vbslq_u32(m1, idx, w1);
+        d2 = d2n;
+        w2 = w2n;
+        idx = vaddq_u32(idx, step);
+    }
+    let (mut hd1, mut hd2) = ([0.0f32; W], [0.0f32; W]);
+    let (mut hw1, mut hw2) = ([0u32; W], [0u32; W]);
+    vst1q_f32(hd1.as_mut_ptr(), d1);
+    vst1q_f32(hd2.as_mut_ptr(), d2);
+    vst1q_u32(hw1.as_mut_ptr(), w1);
+    vst1q_u32(hw2.as_mut_ptr(), w2);
+    reduce_lanes(hd1, hw1, hd2, hw2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::exhaustive_top2;
+    use super::super::testutil::{random_net, random_signals};
+    use super::*;
+    use crate::rng::Rng;
+
+    /// Tiers the host can actually execute, with a skip note for the rest
+    /// (satellite: skip-with-note when the ISA is absent).
+    fn testable_isas() -> Vec<FwIsa> {
+        let mut isas = Vec::new();
+        for isa in FwIsa::ALL {
+            if isa.is_supported() {
+                isas.push(isa);
+            } else {
+                println!("note: {} not supported on this host — skipped", isa.name());
+            }
+        }
+        isas
+    }
+
+    fn compare(isa: FwIsa, net: &Network, signal: Vec3, label: &str) -> Result<(), String> {
+        let (xs, ys, zs) = net.soa();
+        let want = exhaustive_top2(net, signal);
+        let got = block_top2_with(isa, xs, ys, zs, signal).winners();
+        match (want, got) {
+            (None, None) => Ok(()),
+            (Some(a), Some(b))
+                if a.w1 == b.w1
+                    && a.w2 == b.w2
+                    && a.d1_sq.to_bits() == b.d1_sq.to_bits()
+                    && a.d2_sq.to_bits() == b.d2_sq.to_bits() =>
+            {
+                Ok(())
+            }
+            (a, b) => Err(format!("{label} [{}]: {a:?} vs {b:?}", isa.name())),
+        }
+    }
+
+    #[test]
+    fn every_supported_isa_matches_exhaustive_on_random_nets() {
+        let isas = testable_isas();
+        // Sizes straddle every kernel width (4/8/16); kill_every exercises
+        // dead slots (poisoned with DEAD_POS in the mirror).
+        for (n, kill) in [(1, 0), (2, 0), (7, 0), (15, 0), (16, 0), (17, 0), (64, 3), (131, 5)] {
+            let net = random_net(n, n as u64, kill);
+            for (k, s) in random_signals(40, 99 + n as u64).into_iter().enumerate() {
+                for &isa in &isas {
+                    compare(isa, &net, s, &format!("n={n} kill={kill} sig={k}")).unwrap();
+                }
+            }
+        }
+    }
+
+    /// Satellite (PR 6): over random clouds with forced exact distance
+    /// ties and dead/padded slots, every compiled-and-detected tier is
+    /// bit-identical to the exhaustive scan — tie-breaks, poisoning and
+    /// the `None` rule included.
+    #[test]
+    fn prop_every_supported_isa_bit_identical_to_exhaustive() {
+        use crate::proptest::{sized_usize, Prop};
+        let isas = testable_isas();
+        Prop::new(48, 0x51D).run(
+            |rng, size| {
+                let n = sized_usize(rng, size, 1, 300);
+                let kill = [0usize, 2, 3, 7][rng.index(4)];
+                // Half the cases snap everything to a coarse grid, forcing
+                // many exact distance ties across lanes and blocks.
+                let snap = rng.below(2) == 0;
+                (rng.next_u64(), n, kill, snap)
+            },
+            |&(seed, n, kill, snap)| {
+                let net = if snap {
+                    let mut rng = Rng::seed_from(seed);
+                    let mut net = Network::new();
+                    let mut ids = Vec::new();
+                    for _ in 0..n {
+                        let p = Vec3::new(
+                            rng.index(3) as f32 * 0.5,
+                            rng.index(3) as f32 * 0.5,
+                            rng.index(3) as f32 * 0.5,
+                        );
+                        ids.push(net.insert(p, 0.1));
+                    }
+                    if kill > 0 {
+                        for (k, &id) in ids.iter().enumerate() {
+                            if k % kill == kill - 1 && net.len() > 2 {
+                                net.remove(id);
+                            }
+                        }
+                    }
+                    net
+                } else {
+                    random_net(n, seed, kill)
+                };
+                let mut rng = Rng::seed_from(seed ^ 0xC0FFEE);
+                for k in 0..40 {
+                    let s = if snap {
+                        Vec3::new(
+                            rng.index(5) as f32 * 0.25,
+                            rng.index(5) as f32 * 0.25,
+                            rng.index(5) as f32 * 0.25,
+                        )
+                    } else {
+                        Vec3::new(rng.f32(), rng.f32(), rng.f32())
+                    };
+                    for &isa in &isas {
+                        compare(isa, &net, s, &format!("snap={snap} sig={k}"))?;
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn gathered_tile_indices_map_through_id_tables_on_every_isa() {
+        // A batch-gather tile with non-identity ids and poisoned padding
+        // (u32::MAX ids are never read: poison never becomes a candidate).
+        let mut xs = [1e30f32; SOA_LANES];
+        let ys = [0.0f32; SOA_LANES];
+        let zs = [0.0f32; SOA_LANES];
+        xs[..4].copy_from_slice(&[0.0, 1.0, 2.0, 0.0]);
+        let mut ids = [u32::MAX; SOA_LANES];
+        ids[..4].copy_from_slice(&[10, 20, 30, 40]);
+        for isa in testable_isas() {
+            let t = block_top2_with(isa, &xs, &ys, &zs, Vec3::ZERO);
+            // Distance 0 twice (locals 0 and 3): lowest local index wins.
+            assert_eq!(t.w1, 0, "{}", isa.name());
+            assert_eq!(t.w2, 3, "{}", isa.name());
+            assert_eq!(ids[t.w1 as usize], 10);
+            assert_eq!(ids[t.w2 as usize], 40);
+            assert_eq!(t.d1, 0.0);
+            assert_eq!(t.d2, 0.0);
+        }
+    }
+
+    #[test]
+    fn tiny_and_empty_nets_yield_none_on_every_isa() {
+        let isas = testable_isas();
+        let empty = Network::new();
+        let one = random_net(1, 3, 0);
+        // Two inserted, one removed: a single live unit across a dead slot.
+        let mut lone = Network::new();
+        let a = lone.insert(Vec3::ZERO, 0.1);
+        lone.insert(Vec3::ONE, 0.1);
+        lone.remove(a);
+        for &isa in &isas {
+            for (net, label) in [(&empty, "empty"), (&one, "one"), (&lone, "lone")] {
+                let (xs, ys, zs) = net.soa();
+                assert!(
+                    block_top2_with(isa, xs, ys, zs, Vec3::ZERO).winners().is_none(),
+                    "{label} [{}]",
+                    isa.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn names_roundtrip_and_unknown_rejected() {
+        for isa in FwIsa::ALL {
+            assert_eq!(FwIsa::from_name(isa.name()), Some(isa));
+        }
+        assert_eq!(FwIsa::from_name("avx512f"), Some(FwIsa::Avx512));
+        assert_eq!(FwIsa::from_name("sse9"), None);
+        assert_eq!(FwIsa::from_name("auto"), None, "auto is the knob's None");
+        // Every advertised config name except `auto` parses.
+        for name in FwIsa::CONFIG_NAMES.split('|').filter(|n| *n != "auto") {
+            assert!(FwIsa::from_name(name).is_some(), "{name}");
+        }
+    }
+
+    /// The only test that touches the process-global dispatch state (the
+    /// others force tiers per call), keeping intra-process races out.
+    #[test]
+    fn override_resolution_and_dispatch() {
+        // Forcing the always-supported fallback must stick…
+        assert_eq!(set_override(Some(FwIsa::Fallback)), Ok(FwIsa::Fallback));
+        assert_eq!(active_isa(), FwIsa::Fallback);
+        let net = random_net(37, 7, 3);
+        let s = Vec3::new(0.3, 0.4, 0.5);
+        assert_eq!(top2(&net, s), exhaustive_top2(&net, s));
+        // …an unsupported tier must error without disturbing the state…
+        if let Some(&foreign) = FwIsa::ALL.iter().find(|isa| !isa.is_supported()) {
+            assert!(set_override(Some(foreign)).unwrap_err().contains(foreign.name()));
+            assert_eq!(active_isa(), FwIsa::Fallback);
+        }
+        // …and None re-resolves the default (no MSGSN_FW_ISA in the test
+        // env ⇒ detection; with it, the env request — supported either
+        // way).
+        let restored = set_override(None).unwrap();
+        assert!(restored.is_supported());
+        assert_eq!(active_isa(), restored);
+        assert_eq!(top2(&net, s), exhaustive_top2(&net, s));
+    }
+}

@@ -171,7 +171,8 @@ fn parse_job(job: &Json, index: usize) -> Result<JobSpec> {
     }
     if let Some(v) = job.get("driver") {
         let s = v.as_str().context("\"driver\" must be a string")?;
-        cfg.driver = Driver::from_name(s)
+        cfg.driver = Driver::from_config_name(s)
+            .map_err(|why| anyhow::anyhow!(why))?
             .with_context(|| format!("unknown driver {s:?} (expected {})", Driver::NAMES))?;
     }
     if let Some(v) = job.get("seed") {

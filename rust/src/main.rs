@@ -62,7 +62,8 @@ fn build_config(p: &Parsed) -> Result<RunConfig> {
         cfg.apply_all(&map)?;
     }
     if let Some(d) = p.get("driver") {
-        cfg.driver = Driver::from_name(d)
+        cfg.driver = Driver::from_config_name(d)
+            .map_err(|why| anyhow::anyhow!(why))?
             .with_context(|| format!("unknown driver {d:?} (expected {})", Driver::NAMES))?;
     }
     if let Some(a) = p.get("algorithm") {

@@ -79,11 +79,14 @@ impl ChangeLog {
 pub const DEAD_POS: Vec3 = Vec3 { x: 1e30, y: 1e30, z: 1e30 };
 
 /// Lane width of the structure-of-arrays position mirror. The SoA arrays
-/// are always padded to a multiple of this, so the lane-blocked Find
-/// Winners kernel (`findwinners::lanes`, fixed `LANES = SOA_LANES`) can use
-/// `chunks_exact` with no scalar tail. 8 f32 lanes = one AVX2 register; on
-/// narrower targets LLVM simply unrolls.
-pub const SOA_LANES: usize = 8;
+/// are always padded to a multiple of this, poisoned with [`DEAD_POS`], so
+/// every Find Winners block kernel scans whole blocks with no scalar tail:
+/// the portable lane kernel (`findwinners::lanes`, fixed
+/// `LANES = SOA_LANES`) *and* every explicit-SIMD dispatch tier
+/// (`findwinners::simd` — widths 4/8/16 all divide this). 16 f32 lanes =
+/// one AVX-512 register, the widest dispatched kernel; on narrower hosts
+/// LLVM simply unrolls.
+pub const SOA_LANES: usize = 16;
 
 /// Number of free-list shards. A freed slot always lands in shard
 /// `slot % FREE_SHARDS`, so membership is a pure function of the id —
@@ -1045,7 +1048,14 @@ mod tests {
         assert_eq!(ys.len(), 2 * SOA_LANES);
         assert_eq!(zs.len(), 2 * SOA_LANES);
         assert_eq!(xs[3], 3.0);
-        assert_eq!(xs[2 * SOA_LANES - 1], DEAD_POS.x, "padding poisoned");
+        // The widest dispatched kernel (16 f32 lanes) reads the whole pad:
+        // every slot past the slab must be poisoned on all three axes.
+        assert!(SOA_LANES >= 16, "pad must cover the widest SIMD tier");
+        for slot in SOA_LANES + 3..2 * SOA_LANES {
+            assert_eq!(xs[slot], DEAD_POS.x, "padding poisoned (x, slot {slot})");
+            assert_eq!(ys[slot], DEAD_POS.y, "padding poisoned (y, slot {slot})");
+            assert_eq!(zs[slot], DEAD_POS.z, "padding poisoned (z, slot {slot})");
+        }
 
         n.set_pos(ids[2], Vec3::new(7.0, 8.0, 9.0));
         n.remove(ids[4]);

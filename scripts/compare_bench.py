@@ -21,7 +21,11 @@ key (driver rows) or "units" key (microbench rows). Fleet rows (the
 end_to_end "fleet-concurrent"/"fleet-sequential" pair) additionally carry
 a "jobs" field that becomes part of the key, so the same row name recorded
 at different fleet sizes never collides — re-sizing the fleet bench shows
-up as a new row (skipped) instead of a bogus diff. Timing fields are the
+up as a new row (skipped) instead of a bogus diff. Likewise the per-ISA
+find_winners rows carry an "isa" field that becomes part of the key, so a
+baseline recorded on an AVX-512 host never cross-diffs against a fresh run
+on an AVX2-only host — a tier the host lacks is a skipped/new row, never a
+bogus regression. Timing fields are the
 numeric entries whose name ends in "_s" or "_ns_per_signal". Speedups are
 reported but never fail the run.
 """
@@ -43,6 +47,10 @@ def rows_by_key(node, out):
             key = ("row", f"{node['row']}/jobs={node['jobs']}")
         elif "row" in node:
             key = ("row", str(node["row"]))
+        elif "units" in node and "m" in node and "isa" in node:
+            # Per-ISA find_winners rows: keyed by tier so hosts with
+            # different ISA support never cross-diff.
+            key = ("units", f"{node['units']}/m={node['m']}/isa={node['isa']}")
         elif "units" in node and "m" in node:
             key = ("units", f"{node['units']}/m={node['m']}")
         elif "units" in node:

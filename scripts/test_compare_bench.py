@@ -10,7 +10,11 @@ a spurious failure would block every PR. These tests pin its contract:
 - a fresh file with no committed counterpart is skipped;
 - fleet rows key on (row, jobs): a regression at the same fleet size
   fails, while the same row name at a different fleet size is a new row
-  (skipped), never a cross-size diff.
+  (skipped), never a cross-size diff;
+- per-ISA find_winners rows key on (units, m, isa): a regression on the
+  same tier fails, while a tier only one host supports is a new row
+  (skipped) — baselines from hosts with different ISA support never
+  cross-diff.
 
 Runnable with the stdlib alone (`python3 -m unittest discover -s scripts`)
 or with pytest.
@@ -60,6 +64,16 @@ def fleet_payload(jobs=2, concurrent_s=1.0, sequential_s=2.0):
         "fleet": [
             {"row": "fleet-concurrent", "jobs": jobs, "total_s": concurrent_s},
             {"row": "fleet-sequential", "jobs": jobs, "total_s": sequential_s},
+        ],
+    }
+
+
+def isa_payload(rows):
+    """find_winners-style payload; rows = [(units, m, isa, multi_s), …]."""
+    return {
+        "bench": "find_winners",
+        "per_signal_seconds": [
+            {"units": n, "m": m, "isa": isa, "multi_s": t} for n, m, isa, t in rows
         ],
     }
 
@@ -178,6 +192,41 @@ class CompareBenchCase(unittest.TestCase):
         r = run_compare(self.baseline, self.fresh)
         self.assertEqual(r.returncode, 0, r.stdout + r.stderr)
         self.assertIn("no regressions beyond the threshold", r.stdout)
+
+    def test_isa_row_regression_fails_on_same_tier(self):
+        self.write(
+            self.baseline,
+            "BENCH_find_winners.json",
+            isa_payload([(8192, 8192, "avx2", 1.0e-7)]),
+        )
+        self.write(
+            self.fresh,
+            "BENCH_find_winners.json",
+            isa_payload([(8192, 8192, "avx2", 2.0e-7)]),
+        )
+        r = run_compare(self.baseline, self.fresh)
+        self.assertEqual(r.returncode, 1, r.stdout + r.stderr)
+        self.assertIn("8192/m=8192/isa=avx2", r.stdout)
+        self.assertIn("REGRESSION", r.stdout)
+
+    def test_isa_rows_from_different_hosts_never_cross_diff(self):
+        # Baseline recorded on an AVX-512 host, fresh run on an AVX2-only
+        # host: the avx512 row simply has no fresh counterpart and the
+        # fresh avx2 row is new — neither may fail, even with times that
+        # would be a huge "regression" under a tier-blind (units, m) key.
+        self.write(
+            self.baseline,
+            "BENCH_find_winners.json",
+            isa_payload([(8192, 8192, "avx512", 1.0e-8)]),
+        )
+        self.write(
+            self.fresh,
+            "BENCH_find_winners.json",
+            isa_payload([(8192, 8192, "avx2", 5.0e-7)]),
+        )
+        r = run_compare(self.baseline, self.fresh)
+        self.assertEqual(r.returncode, 0, r.stdout + r.stderr)
+        self.assertIn("new row", r.stdout)
 
     def test_non_timing_fields_are_ignored(self):
         # `units`, counters etc. must never trip the gate.
