@@ -121,7 +121,8 @@ fn main() -> anyhow::Result<()> {
         let mut fleet = msgsn::fleet::Fleet::new(fleet_specs())?;
         let report = fleet.run(&msgsn::fleet::FleetOptions::default(), |_| {})?;
         let total = t0.elapsed().as_secs_f64();
-        let signals: u64 = report.jobs.iter().map(|(_, r)| r.signals).sum();
+        let signals: u64 =
+            report.rows.iter().filter_map(|row| row.report.as_ref()).map(|r| r.signals).sum();
         println!("  {:18} {total:>8.3}s  ({signals} signals total)", "fleet-concurrent");
         fleet_rows.push(format!(
             "    {{\"row\": \"fleet-concurrent\", \"jobs\": 2, \"total_s\": {total:.6}, \

@@ -71,14 +71,29 @@ USAGE:
   msgsn fleet [OPTIONS]          N concurrent reconstructions, one process
       --jobs <jobs.json>         jobs manifest (required; see README for
                                  the schema: per-job mesh/algorithm/driver/
-                                 seed plus any config key)
+                                 seed/retries plus any config key)
       --checkpoint-every <N>     snapshot each job every N scheduler turns
                                  (bit-exact resume; 0 = off)    [0]
-      --checkpoint-dir <dir>     where *.msgsnap checkpoints live
+      --checkpoint-secs <S>      also snapshot a job when S wall-clock
+                                 seconds passed since its last checkpoint
+                                 (fractional ok; composes with the turn
+                                 cadence)
+      --checkpoint-dir <dir>     where *.msgsnap checkpoints (and their
+                                 retained *.msgsnap.prev generations) live
                                                                [checkpoints]
-      --resume                   resume jobs from their checkpoints
+      --resume                   resume jobs from their checkpoints; a torn
+                                 or corrupt latest falls back per job to
+                                 the previous generation
       --stride <N>               batches per job per round-robin turn  [1]
+      --max-retries <N>          restore-from-last-good retries before a
+                                 crashed job is quarantined (per-job
+                                 \"retries\" manifest key overrides)  [2]
+      --faults <spec,...>        arm deterministic fault injection (testing;
+                                 same grammar as env MSGSN_FAULTS, e.g.
+                                 checkpoint_write:truncate@2,job:panic@turn=7)
       --quiet                    suppress progress lines
+      exit code: 0 all jobs succeeded, 2 some quarantined, 3 all
+      quarantined (1 = usage/config errors)
 
   msgsn reproduce [OPTIONS]      regenerate the paper's evaluation
       --table <1|2|3|4>          one table (repeatable)
@@ -125,7 +140,15 @@ pub fn parse(args: &[String]) -> Result<Command, ArgError> {
         )?)),
         "fleet" => Ok(Command::Fleet(parser::parse_flags(
             rest,
-            &["jobs", "checkpoint-every", "checkpoint-dir", "stride"],
+            &[
+                "jobs",
+                "checkpoint-every",
+                "checkpoint-secs",
+                "checkpoint-dir",
+                "stride",
+                "max-retries",
+                "faults",
+            ],
             &["resume", "quiet"],
         )?)),
         "reproduce" => Ok(Command::Reproduce(parser::parse_flags(
@@ -204,6 +227,22 @@ mod tests {
         assert_eq!(p.get("checkpoint-dir"), Some("ck"));
         assert!(p.flag("resume"));
         assert!(!p.flag("quiet"));
+    }
+
+    #[test]
+    fn parses_fleet_durability_flags() {
+        let cmd = parse(&argv(
+            "fleet --jobs j.json --checkpoint-secs 2.5 --max-retries 4 \
+             --faults checkpoint_write:truncate@2,job:panic@turn=7",
+        ))
+        .unwrap();
+        let Command::Fleet(p) = cmd else { panic!("not fleet") };
+        assert_eq!(p.get("checkpoint-secs"), Some("2.5"));
+        assert_eq!(p.get("max-retries"), Some("4"));
+        assert_eq!(
+            p.get("faults"),
+            Some("checkpoint_write:truncate@2,job:panic@turn=7")
+        );
     }
 
     #[test]

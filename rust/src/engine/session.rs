@@ -393,6 +393,11 @@ pub struct ConvergenceSession {
     fw: Box<dyn FindWinners>,
     rng: Rng,
     core: SessionCore,
+    /// Diagnostic identity (the fleet sets the job name): names this
+    /// session at the `session_step` fault point and in crash reports.
+    /// Deliberately **not** part of the fingerprint or the snapshot — a
+    /// rename must never invalidate a checkpoint.
+    label: Option<String>,
 }
 
 /// Digest the parts of a run that change its *results*: the sampled
@@ -534,13 +539,29 @@ impl ConvergenceSession {
             fw,
             rng,
             core,
+            label: None,
         })
+    }
+
+    /// Set the diagnostic label (see the `label` field). The fleet passes
+    /// the job name so a `session_step` fault scope targets one job.
+    pub fn set_label(&mut self, label: impl Into<String>) {
+        self.label = Some(label.into());
     }
 
     /// Run up to `iterations` loop iterations (batches for the batched
     /// modes, signals for single-signal). Returns `true` while more work
     /// remains.
     pub fn step(&mut self, iterations: u64) -> bool {
+        // The poison-input simulation point: scope = the fleet job name
+        // (None for solo sessions), turn = the session's own monotone
+        // iteration counter, so `session_step/<job>:panic@turn=N` crashes
+        // deterministically at the same point on every retry.
+        crate::runtime::fault::maybe_panic(
+            crate::runtime::fault::FaultPoint::SessionStep,
+            self.label.as_deref(),
+            Some(self.core.report_so_far().iterations),
+        );
         self.core.step(
             self.algo.as_mut(),
             &self.sampler,

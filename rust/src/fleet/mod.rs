@@ -1,6 +1,7 @@
 //! Fleet — multi-network orchestration: N independent growing-network
 //! reconstructions multiplexed over **one** shared [`WorkerPool`], with
-//! resumable sessions and bit-exact checkpoint/restore.
+//! resumable sessions, durable bit-exact checkpoint/restore, and per-job
+//! failure isolation.
 //!
 //! The ROADMAP's step after PR 4's region sharding is "multiple *networks*
 //! per process (one region grid each)": a serving system runs many
@@ -15,9 +16,13 @@
 //!   granularity** over a single worker pool sized for the widest job.
 //!   Jobs share only compute, never state, so a fleet-of-N is
 //!   bit-identical to N solo runs (`rust/tests/fleet.rs`);
-//! - [`snapshot`]: the versioned checkpoint format; kill-and-resume is
-//!   bit-identical to an uninterrupted run (`rust/tests/executor_parity.rs`
-//!   covers the full knob matrix).
+//! - [`snapshot`]: the versioned, CRC-trailed checkpoint format with
+//!   durable two-generation writes (tmp + fsync + rename, `.prev`
+//!   retained); kill-and-resume is bit-identical to an uninterrupted run
+//!   (`rust/tests/executor_parity.rs` covers the full knob matrix,
+//!   `rust/tests/fleet.rs` the torn-write recovery at every byte offset);
+//! - [`writer`]: the background checkpoint writer — encoding stays on the
+//!   scheduler thread, fsync + rotation + rename happen off it.
 //!
 //! Scheduling is deliberately cooperative and deterministic: one round
 //! steps every live job `stride` iterations in manifest order. The pool's
@@ -25,20 +30,42 @@
 //! anyway (plan/commit/find shards), so interleaving at batch granularity
 //! is work-conserving — whenever any job has work, the pool has work —
 //! while per-job results stay a pure function of the job's own spec.
+//!
+//! ## Failure isolation
+//!
+//! Every `step` runs under `catch_unwind`: a panicking job (a poison
+//! input, an injected `session_step` fault) is marked [`JobStatus::Failed`]
+//! and its session discarded, while the other N−1 jobs keep converging
+//! bit-identically to a fleet that never contained it. A failed job is
+//! retried after a turn-based exponential backoff by rebuilding its
+//! session and restoring the **last good checkpoint generation** (latest,
+//! then `.prev`, then from scratch); because restore is bit-exact, a
+//! retry that succeeds is indistinguishable from a run that never
+//! crashed. After `max_retries` failed attempts (per-job override:
+//! [`JobSpec::retries`]) the job is [`JobStatus::Quarantined`] — reported,
+//! counted, never silently dropped. [`FleetReport::outcome`] folds the
+//! statuses into the process exit code: all succeeded ≠ partial failure ≠
+//! total failure.
 
 pub mod snapshot;
 mod spec;
+mod writer;
 
 pub use spec::{parse_manifest, JobSpec, MANIFEST_VERSION};
+pub use writer::{CheckpointWriter, WriteOutcome};
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
 use crate::engine::{resolve_run_threads, ConvergenceSession, RunReport};
+use crate::mesh::Mesh;
 use crate::metrics::{fmt_secs, Table};
 use crate::runtime::WorkerPool;
+
+use writer::panic_message;
 
 /// Scheduler options.
 #[derive(Clone, Debug)]
@@ -48,21 +75,83 @@ pub struct FleetOptions {
     pub stride: u64,
     /// Checkpoint a job every this many of its own turns (0 = never).
     pub checkpoint_every: u64,
-    /// Where checkpoint files (`<job>.msgsnap`) live.
+    /// Checkpoint a job when this much wall-clock time has passed since
+    /// its last checkpoint (fractional seconds; `None` = turns only).
+    /// Either cadence being due queues a write; both compose.
+    pub checkpoint_secs: Option<f64>,
+    /// Where checkpoint files (`<job>.msgsnap` + `.prev`) live.
     pub checkpoint_dir: Option<PathBuf>,
+    /// Restore-from-last-good retries a crashed job gets before it is
+    /// quarantined (see module docs). Per-job override: [`JobSpec::retries`].
+    pub max_retries: u32,
+    /// Base of the turn-based exponential backoff: a job's k-th failure
+    /// delays its retry by `backoff_rounds · 2^(k−1)` scheduler rounds
+    /// (deterministic — rounds, not wall clock).
+    pub backoff_rounds: u64,
 }
 
 impl Default for FleetOptions {
     fn default() -> Self {
-        Self { stride: 1, checkpoint_every: 0, checkpoint_dir: None }
+        Self {
+            stride: 1,
+            checkpoint_every: 0,
+            checkpoint_secs: None,
+            checkpoint_dir: None,
+            max_retries: 2,
+            backoff_rounds: 2,
+        }
     }
 }
 
-/// One scheduled job: its spec, its session, and checkpoint bookkeeping.
+/// Lifecycle state of a fleet job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobStatus {
+    /// Converging (or waiting for its next round-robin turn).
+    Running,
+    /// Terminated normally; its [`RunReport`] is final.
+    Done,
+    /// Crashed; waiting out its backoff before a restore-and-retry.
+    Failed,
+    /// Crashed more than its retry budget allows; permanently stopped.
+    Quarantined,
+}
+
+impl JobStatus {
+    pub fn name(self) -> &'static str {
+        match self {
+            JobStatus::Running => "running",
+            JobStatus::Done => "done",
+            JobStatus::Failed => "failed",
+            JobStatus::Quarantined => "quarantined",
+        }
+    }
+}
+
+impl std::fmt::Display for JobStatus {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One scheduled job: its spec, its (possibly discarded) session, and
+/// checkpoint/failure bookkeeping.
 pub struct FleetJob {
     spec: JobSpec,
-    session: ConvergenceSession,
+    /// The materialized point cloud, kept so a crashed session can be
+    /// rebuilt without re-reading mesh files mid-run.
+    mesh: Mesh,
+    /// `None` after a crash (a panicking step may leave the session in a
+    /// torn state — it is discarded, never reused) until the retry
+    /// rebuilds it.
+    session: Option<ConvergenceSession>,
+    status: JobStatus,
     turns_since_checkpoint: u64,
+    last_checkpoint: Instant,
+    /// Failures so far (== restore attempts consumed).
+    attempts: u32,
+    /// Scheduler round at which a Failed job may retry.
+    retry_at_round: u64,
+    last_error: Option<String>,
     report: Option<RunReport>,
 }
 
@@ -71,51 +160,176 @@ impl FleetJob {
         &self.spec
     }
 
-    pub fn session(&self) -> &ConvergenceSession {
-        &self.session
+    /// The live session (`None` while crashed/quarantined).
+    pub fn session(&self) -> Option<&ConvergenceSession> {
+        self.session.as_ref()
+    }
+
+    pub fn status(&self) -> JobStatus {
+        self.status
     }
 
     pub fn is_done(&self) -> bool {
-        self.session.is_done()
+        self.status == JobStatus::Done
     }
 
-    /// The finalized report (None while the job is still running).
+    /// Failures so far (retry attempts consumed).
+    pub fn attempts(&self) -> u32 {
+        self.attempts
+    }
+
+    /// The most recent crash/restore error, if any.
+    pub fn last_error(&self) -> Option<&str> {
+        self.last_error.as_deref()
+    }
+
+    /// The finalized report (None while the job is still running — or
+    /// quarantined before finishing).
     pub fn report(&self) -> Option<&RunReport> {
         self.report.as_ref()
     }
 
-    fn checkpoint_path(&self, dir: &std::path::Path) -> PathBuf {
+    fn checkpoint_path(&self, dir: &Path) -> PathBuf {
         dir.join(format!("{}.msgsnap", self.spec.file_stem()))
     }
 }
 
-/// Aggregated result of a fleet run: one [`RunReport`] per job, in
+/// Where a rebuilt job's state came from.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RestoreSource {
+    /// The latest checkpoint generation restored cleanly.
+    Latest,
+    /// The latest was torn/corrupt/unreadable; the retained `.prev`
+    /// generation restored (and was promoted back to the latest name).
+    Previous,
+    /// No usable checkpoint; started from scratch. Carries the restore
+    /// errors when checkpoints existed but were rejected.
+    Scratch(Option<String>),
+}
+
+impl RestoreSource {
+    pub fn describe(&self) -> String {
+        match self {
+            RestoreSource::Latest => "latest checkpoint".to_string(),
+            RestoreSource::Previous => "previous checkpoint generation".to_string(),
+            RestoreSource::Scratch(None) => "scratch (no checkpoint)".to_string(),
+            RestoreSource::Scratch(Some(why)) => {
+                format!("scratch (checkpoints unusable: {why})")
+            }
+        }
+    }
+}
+
+/// One [`Fleet::resume_from`] result: which job resumed from what.
+#[derive(Clone, Debug)]
+pub struct ResumeOutcome {
+    pub name: String,
+    pub source: RestoreSource,
+}
+
+/// Final state of one job in the [`FleetReport`].
+#[derive(Clone, Debug)]
+pub struct FleetRow {
+    pub name: String,
+    pub status: JobStatus,
+    /// Failures/restore attempts the job consumed (0 = clean run).
+    pub attempts: u32,
+    /// Last crash/restore error (quarantined jobs always carry one).
+    pub error: Option<String>,
+    /// `None` for jobs quarantined before finishing.
+    pub report: Option<RunReport>,
+}
+
+/// Process-level outcome of a fleet run, for the CLI exit code.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FleetOutcome {
+    AllSucceeded,
+    /// Some — not all — jobs were quarantined: the survivors' reports are
+    /// valid, but the run is not a success.
+    PartialFailure,
+    AllFailed,
+}
+
+impl FleetOutcome {
+    /// `msgsn fleet` exit code: 0 success, 2 partial failure, 3 total
+    /// failure (1 is the generic CLI error path).
+    pub fn exit_code(self) -> u8 {
+        match self {
+            FleetOutcome::AllSucceeded => 0,
+            FleetOutcome::PartialFailure => 2,
+            FleetOutcome::AllFailed => 3,
+        }
+    }
+}
+
+/// Aggregated result of a fleet run: one [`FleetRow`] per job, in
 /// manifest order.
 #[derive(Clone, Debug)]
 pub struct FleetReport {
-    pub jobs: Vec<(String, RunReport)>,
+    pub rows: Vec<FleetRow>,
 }
 
 impl FleetReport {
-    /// One summary row per job (name, algorithm, driver, signals, units,
-    /// connections, converged, wall time).
+    /// Fold job statuses into the process-level outcome.
+    pub fn outcome(&self) -> FleetOutcome {
+        let quarantined =
+            self.rows.iter().filter(|r| r.status == JobStatus::Quarantined).count();
+        if quarantined == 0 {
+            FleetOutcome::AllSucceeded
+        } else if quarantined == self.rows.len() {
+            FleetOutcome::AllFailed
+        } else {
+            FleetOutcome::PartialFailure
+        }
+    }
+
+    /// One summary row per job (name, status, attempts, algorithm, driver,
+    /// signals, units, connections, converged, wall time). Quarantined
+    /// jobs without a report render `-` in the report columns.
     pub fn to_table(&self) -> Table {
         let mut t = Table::new(&[
-            "job", "algorithm", "driver", "signals", "discarded", "units", "connections",
-            "converged", "time",
+            "job",
+            "status",
+            "attempts",
+            "algorithm",
+            "driver",
+            "signals",
+            "discarded",
+            "units",
+            "connections",
+            "converged",
+            "time",
         ]);
-        for (name, r) in &self.jobs {
-            t.row(vec![
-                name.clone(),
-                r.algorithm.clone(),
-                r.implementation.clone(),
-                r.signals.to_string(),
-                r.discarded.to_string(),
-                r.units.to_string(),
-                r.connections.to_string(),
-                r.converged.to_string(),
-                fmt_secs(r.total),
-            ]);
+        for row in &self.rows {
+            let cells = match &row.report {
+                Some(r) => vec![
+                    row.name.clone(),
+                    row.status.to_string(),
+                    row.attempts.to_string(),
+                    r.algorithm.clone(),
+                    r.implementation.clone(),
+                    r.signals.to_string(),
+                    r.discarded.to_string(),
+                    r.units.to_string(),
+                    r.connections.to_string(),
+                    r.converged.to_string(),
+                    fmt_secs(r.total),
+                ],
+                None => vec![
+                    row.name.clone(),
+                    row.status.to_string(),
+                    row.attempts.to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                ],
+            };
+            t.row(cells);
         }
         t
     }
@@ -126,6 +340,56 @@ pub struct Fleet {
     jobs: Vec<FleetJob>,
     /// The one shared pool (None when every job is single-threaded).
     pool: Option<Arc<WorkerPool>>,
+}
+
+/// Build a fresh session for `spec` over `mesh` and restore the best
+/// available checkpoint generation: latest, then `.prev` (promoting it
+/// back to the latest name so the next rotation cannot shift the corrupt
+/// file over it), else scratch. A fresh session is built **per attempt**
+/// — a failed restore may leave the session partially overwritten
+/// ([`ConvergenceSession::read_state`]'s contract), so it is never
+/// reused. `Err` only on session *build* failure.
+fn rebuild_and_restore(
+    spec: &JobSpec,
+    mesh: &Mesh,
+    pool: &Option<Arc<WorkerPool>>,
+    dir: Option<&Path>,
+) -> Result<(ConvergenceSession, RestoreSource)> {
+    let fresh = || -> Result<ConvergenceSession> {
+        let mut s = ConvergenceSession::new(&spec.cfg, mesh, pool.clone())
+            .with_context(|| format!("job {:?}", spec.name))?;
+        s.set_label(&spec.name);
+        Ok(s)
+    };
+    let Some(dir) = dir else {
+        return Ok((fresh()?, RestoreSource::Scratch(None)));
+    };
+    let latest = dir.join(format!("{}.msgsnap", spec.file_stem()));
+    let prev = snapshot::prev_path(&latest);
+    let mut errors = Vec::new();
+    if latest.exists() {
+        let mut s = fresh()?;
+        match snapshot::load_from(&latest, &mut s) {
+            Ok(()) => return Ok((s, RestoreSource::Latest)),
+            Err(e) => errors.push(e),
+        }
+    }
+    if prev.exists() {
+        let mut s = fresh()?;
+        match snapshot::load_from(&prev, &mut s) {
+            Ok(()) => {
+                // Promote the good generation: if the corrupt latest stayed
+                // in place, the *next* checkpoint write would rotate it over
+                // this file and destroy the only good state on disk.
+                std::fs::remove_file(&latest).ok();
+                std::fs::rename(&prev, &latest).ok();
+                return Ok((s, RestoreSource::Previous));
+            }
+            Err(e) => errors.push(e),
+        }
+    }
+    let detail = (!errors.is_empty()).then(|| errors.join("; "));
+    Ok((fresh()?, RestoreSource::Scratch(detail)))
 }
 
 impl Fleet {
@@ -157,12 +421,19 @@ impl Fleet {
             let mesh = spec
                 .build_mesh()
                 .with_context(|| format!("job {:?}: building mesh", spec.name))?;
-            let session = ConvergenceSession::new(&spec.cfg, &mesh, pool.clone())
+            let mut session = ConvergenceSession::new(&spec.cfg, &mesh, pool.clone())
                 .with_context(|| format!("job {:?}", spec.name))?;
+            session.set_label(&spec.name);
             jobs.push(FleetJob {
                 spec,
-                session,
+                mesh,
+                session: Some(session),
+                status: JobStatus::Running,
                 turns_since_checkpoint: 0,
+                last_checkpoint: Instant::now(),
+                attempts: 0,
+                retry_at_round: 0,
+                last_error: None,
                 report: None,
             });
         }
@@ -178,85 +449,247 @@ impl Fleet {
         self.pool.as_ref().map_or(1, |p| p.size())
     }
 
-    /// Resume every job that has a checkpoint in `dir` (jobs without one
-    /// start fresh). Returns the resumed job names.
-    pub fn resume_from(&mut self, dir: &std::path::Path) -> Result<Vec<String>> {
-        let mut resumed = Vec::new();
+    /// Resume every job that has a checkpoint (either generation) in
+    /// `dir`; jobs without one start fresh and are not listed. A torn or
+    /// corrupt latest falls back **per job** to the retained `.prev`
+    /// generation instead of aborting the whole fleet; a job whose
+    /// generations are all unusable restarts from scratch (reported as
+    /// [`RestoreSource::Scratch`] with the errors). `Err` only on session
+    /// build failure.
+    pub fn resume_from(&mut self, dir: &Path) -> Result<Vec<ResumeOutcome>> {
+        let mut outcomes = Vec::new();
+        let pool = self.pool.clone();
         for job in &mut self.jobs {
-            let path = job.checkpoint_path(dir);
-            if !path.exists() {
+            let latest = job.checkpoint_path(dir);
+            if !latest.exists() && !snapshot::prev_path(&latest).exists() {
                 continue;
             }
-            snapshot::load_from(&path, &mut job.session)
-                .map_err(anyhow::Error::msg)
-                .with_context(|| format!("job {:?}", job.spec.name))?;
-            if job.session.is_done() {
-                job.report = Some(job.session.finish());
+            let (mut session, source) =
+                rebuild_and_restore(&job.spec, &job.mesh, &pool, Some(dir))?;
+            if session.is_done() {
+                job.report = Some(session.finish());
+                job.status = JobStatus::Done;
+            } else {
+                job.status = JobStatus::Running;
             }
-            resumed.push(job.spec.name.clone());
+            job.session = Some(session);
+            outcomes.push(ResumeOutcome { name: job.spec.name.clone(), source });
         }
-        Ok(resumed)
+        Ok(outcomes)
     }
 
-    /// Run every job to termination, round-robin (see module docs).
-    /// `progress` receives one line per job completion and per checkpoint.
+    /// Run every job to termination or quarantine, round-robin (see
+    /// module docs). `progress` receives one line per job completion,
+    /// queued checkpoint, failure, retry, and failed checkpoint write.
     pub fn run(
         &mut self,
         opts: &FleetOptions,
         mut progress: impl FnMut(&str),
     ) -> Result<FleetReport> {
         let stride = opts.stride.max(1);
+        let checkpointing = opts.checkpoint_dir.is_some()
+            && (opts.checkpoint_every > 0 || opts.checkpoint_secs.is_some());
+        let mut ckpt = None;
+        if checkpointing {
+            let dir = opts.checkpoint_dir.as_deref().expect("checkpointing implies a dir");
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+            ckpt = Some(CheckpointWriter::new());
+        }
+
+        let mut round = 0u64;
         loop {
+            // Surface landed checkpoint outcomes (failures are progress
+            // lines, not fleet errors: a failed write costs at most one
+            // recovery generation).
+            if let Some(w) = ckpt.as_mut() {
+                for o in w.poll() {
+                    note_write(&o, &mut progress);
+                }
+            }
             let mut live = 0usize;
-            for job in &mut self.jobs {
-                if job.session.is_done() {
-                    continue;
+            for idx in 0..self.jobs.len() {
+                match self.jobs[idx].status {
+                    JobStatus::Done | JobStatus::Quarantined => continue,
+                    JobStatus::Failed => {
+                        live += 1;
+                        if round >= self.jobs[idx].retry_at_round {
+                            self.retry_job(idx, opts, ckpt.as_mut(), &mut progress);
+                        }
+                        continue;
+                    }
+                    JobStatus::Running => {}
                 }
                 live += 1;
-                let running = job.session.step(stride);
+                let job = &mut self.jobs[idx];
+                let session = job.session.as_mut().expect("running job has a session");
+                let stepped = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    session.step(stride)
+                }));
+                let running = match stepped {
+                    Ok(running) => running,
+                    Err(payload) => {
+                        fail_job(job, payload, round, opts, &mut progress);
+                        continue;
+                    }
+                };
                 job.turns_since_checkpoint += 1;
-                // Checkpoint on the cadence and once more at termination
+                // Checkpoint on either cadence and once more at termination
                 // (a kill right after the final batch must also resume to
                 // the finished state, not re-run the tail).
-                let due = opts.checkpoint_every > 0
-                    && (job.turns_since_checkpoint >= opts.checkpoint_every || !running);
-                if let Some(dir) = opts.checkpoint_dir.as_ref().filter(|_| due) {
-                    std::fs::create_dir_all(dir)
-                        .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+                let turns_due = opts.checkpoint_every > 0
+                    && job.turns_since_checkpoint >= opts.checkpoint_every;
+                let wall_due = opts
+                    .checkpoint_secs
+                    .is_some_and(|s| job.last_checkpoint.elapsed().as_secs_f64() >= s);
+                if checkpointing && (turns_due || wall_due || !running) {
+                    let dir = opts.checkpoint_dir.as_deref().expect("checkpointing dir");
+                    // Encode on the scheduler thread (the bytes are the
+                    // boundary), write durably on the writer thread.
+                    let bytes = snapshot::snapshot_session(session);
                     let path = job.checkpoint_path(dir);
-                    snapshot::save_to(&path, &job.session)
-                        .with_context(|| format!("writing checkpoint {}", path.display()))?;
-                    job.turns_since_checkpoint = 0;
                     progress(&format!(
                         "checkpoint {} @ {} signals",
                         path.display(),
-                        job.session.report_so_far().signals
+                        session.report_so_far().signals
                     ));
+                    ckpt.as_mut()
+                        .expect("writer exists while checkpointing")
+                        .enqueue(&job.spec.name, path, bytes);
+                    job.turns_since_checkpoint = 0;
+                    job.last_checkpoint = Instant::now();
                 }
                 if !running {
-                    let report = job.session.finish();
+                    let report = session.finish();
                     progress(&format!(
                         "job {} finished: {} units, {} signals, converged={}",
                         job.spec.name, report.units, report.signals, report.converged
                     ));
                     job.report = Some(report);
+                    job.status = JobStatus::Done;
                 }
             }
             if live == 0 {
                 break;
             }
+            round += 1;
+        }
+        // Every queued write must land before the run reports back (the
+        // "last good generation" durability statement is about disk).
+        if let Some(w) = ckpt.as_mut() {
+            for o in w.drain() {
+                note_write(&o, &mut progress);
+            }
         }
         Ok(FleetReport {
-            jobs: self
+            rows: self
                 .jobs
                 .iter_mut()
                 .map(|j| {
-                    let report =
-                        j.report.get_or_insert_with(|| j.session.finish()).clone();
-                    (j.spec.name.clone(), report)
+                    if j.status == JobStatus::Done && j.report.is_none() {
+                        if let Some(s) = j.session.as_mut() {
+                            j.report = Some(s.finish());
+                        }
+                    }
+                    FleetRow {
+                        name: j.spec.name.clone(),
+                        status: j.status,
+                        attempts: j.attempts,
+                        error: j.last_error.clone(),
+                        report: j.report.clone(),
+                    }
                 })
                 .collect(),
         })
+    }
+
+    /// Restore a Failed job whose backoff has elapsed: drain pending
+    /// checkpoint writes (the last good generation must be *on disk*
+    /// before we look for it), rebuild the session, restore the best
+    /// generation. A session build failure quarantines the job rather
+    /// than aborting the fleet.
+    fn retry_job(
+        &mut self,
+        idx: usize,
+        opts: &FleetOptions,
+        mut ckpt: Option<&mut CheckpointWriter>,
+        progress: &mut impl FnMut(&str),
+    ) {
+        if let Some(w) = ckpt.take() {
+            for o in w.drain() {
+                note_write(&o, progress);
+            }
+        }
+        let pool = self.pool.clone();
+        let job = &mut self.jobs[idx];
+        match rebuild_and_restore(&job.spec, &job.mesh, &pool, opts.checkpoint_dir.as_deref()) {
+            Ok((mut session, source)) => {
+                progress(&format!(
+                    "job {} retrying from {} (attempt {})",
+                    job.spec.name,
+                    source.describe(),
+                    job.attempts
+                ));
+                if session.is_done() {
+                    job.report = Some(session.finish());
+                    job.status = JobStatus::Done;
+                } else {
+                    job.status = JobStatus::Running;
+                }
+                job.session = Some(session);
+            }
+            Err(e) => {
+                job.status = JobStatus::Quarantined;
+                job.last_error = Some(e.to_string());
+                progress(&format!(
+                    "job {} QUARANTINED: session rebuild failed: {e}",
+                    job.spec.name
+                ));
+            }
+        }
+    }
+}
+
+/// Mark a crashed job Failed (with backoff) or Quarantined (budget
+/// exhausted). The torn session is discarded — a panicking step may leave
+/// it in any state.
+fn fail_job(
+    job: &mut FleetJob,
+    payload: Box<dyn std::any::Any + Send>,
+    round: u64,
+    opts: &FleetOptions,
+    progress: &mut impl FnMut(&str),
+) {
+    job.session = None;
+    job.attempts += 1;
+    let msg = panic_message(payload.as_ref());
+    job.last_error = Some(msg.clone());
+    let budget = job.spec.retries.unwrap_or(opts.max_retries);
+    if job.attempts > budget {
+        job.status = JobStatus::Quarantined;
+        progress(&format!(
+            "job {} QUARANTINED after {} attempts: {msg}",
+            job.spec.name, job.attempts
+        ));
+    } else {
+        job.status = JobStatus::Failed;
+        let backoff = opts
+            .backoff_rounds
+            .max(1)
+            .saturating_mul(1u64 << u64::from((job.attempts - 1).min(16)));
+        job.retry_at_round = round.saturating_add(backoff);
+        progress(&format!(
+            "job {} failed (attempt {}/{}): {msg} — retry in {backoff} rounds",
+            job.spec.name,
+            job.attempts,
+            budget + 1
+        ));
+    }
+}
+
+fn note_write(o: &WriteOutcome, progress: &mut impl FnMut(&str)) {
+    if let Err(e) = &o.result {
+        progress(&format!("checkpoint {} FAILED for job {}: {e}", o.path.display(), o.job));
     }
 }
 
@@ -285,6 +718,14 @@ mod tests {
         JobSpec::from_config(name, cfg)
     }
 
+    /// Unique per-test checkpoint dir: parallel `cargo test` processes
+    /// (and parallel tests within one) must never share on-disk state.
+    fn scratch_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("msgsn_{}_{}", std::process::id(), name));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
     #[test]
     fn fleet_runs_all_jobs_to_completion() {
         let specs = vec![
@@ -296,13 +737,19 @@ mod tests {
         let mut events = Vec::new();
         let report = fleet.run(&FleetOptions::default(), |line| events.push(line.to_string()))
             .unwrap();
-        assert_eq!(report.jobs.len(), 2);
-        assert_eq!(report.jobs[0].0, "a");
-        assert!(report.jobs[0].1.signals >= 8_000);
-        assert_eq!(report.jobs[1].1.algorithm, "gng");
+        assert_eq!(report.rows.len(), 2);
+        assert_eq!(report.rows[0].name, "a");
+        assert_eq!(report.rows[0].status, JobStatus::Done);
+        assert_eq!(report.rows[0].attempts, 0);
+        let a = report.rows[0].report.as_ref().unwrap();
+        assert!(a.signals >= 8_000);
+        assert_eq!(report.rows[1].report.as_ref().unwrap().algorithm, "gng");
+        assert_eq!(report.outcome(), FleetOutcome::AllSucceeded);
+        assert_eq!(report.outcome().exit_code(), 0);
         assert_eq!(events.len(), 2, "one completion line per job");
         let rendered = report.to_table().render();
         assert!(rendered.contains("gng") && rendered.contains("soam"), "{rendered}");
+        assert!(rendered.contains("done"), "{rendered}");
     }
 
     #[test]
@@ -328,28 +775,74 @@ mod tests {
 
     #[test]
     fn checkpoint_files_are_written_and_resumable() {
-        let dir = std::env::temp_dir().join("msgsn_fleet_ckpt_test");
-        std::fs::remove_dir_all(&dir).ok();
+        let dir = scratch_dir("fleet_ckpt");
         let spec = quick_spec("ckpt-job", BenchmarkShape::Blob, Algorithm::Soam, 5);
         let mut fleet = Fleet::new(vec![spec.clone()]).unwrap();
         let opts = FleetOptions {
             stride: 1,
             checkpoint_every: 3,
             checkpoint_dir: Some(dir.clone()),
+            ..FleetOptions::default()
         };
         let a = fleet.run(&opts, |_| {}).unwrap();
         let path = dir.join("ckpt-job.msgsnap");
         assert!(path.exists(), "checkpoint file missing");
+        assert!(
+            snapshot::prev_path(&path).exists(),
+            "previous generation retained after ≥2 checkpoints"
+        );
 
         // A brand-new fleet resuming from the final checkpoint reports the
         // finished run without redoing it.
         let mut fleet2 = Fleet::new(vec![spec]).unwrap();
         let resumed = fleet2.resume_from(&dir).unwrap();
-        assert_eq!(resumed, vec!["ckpt-job".to_string()]);
+        assert_eq!(resumed.len(), 1);
+        assert_eq!(resumed[0].name, "ckpt-job");
+        assert_eq!(resumed[0].source, RestoreSource::Latest);
         let b = fleet2.run(&opts, |_| {}).unwrap();
-        assert_eq!(a.jobs[0].1.signals, b.jobs[0].1.signals);
-        assert_eq!(a.jobs[0].1.units, b.jobs[0].1.units);
-        assert_eq!(a.jobs[0].1.qe.to_bits(), b.jobs[0].1.qe.to_bits());
+        let (ra, rb) =
+            (a.rows[0].report.as_ref().unwrap(), b.rows[0].report.as_ref().unwrap());
+        assert_eq!(ra.signals, rb.signals);
+        assert_eq!(ra.units, rb.units);
+        assert_eq!(ra.qe.to_bits(), rb.qe.to_bits());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wall_clock_cadence_checkpoints_without_turn_cadence() {
+        let dir = scratch_dir("fleet_wallclock");
+        let spec = quick_spec("wall-job", BenchmarkShape::Blob, Algorithm::Soam, 6);
+        let mut fleet = Fleet::new(vec![spec]).unwrap();
+        let opts = FleetOptions {
+            stride: 1,
+            checkpoint_every: 0,
+            // Zero interval: every turn is wall-due — the cadence works
+            // without any turn-based checkpointing configured.
+            checkpoint_secs: Some(0.0),
+            checkpoint_dir: Some(dir.clone()),
+            ..FleetOptions::default()
+        };
+        let mut checkpoints = 0usize;
+        fleet.run(&opts, |line| {
+            if line.starts_with("checkpoint ") {
+                checkpoints += 1;
+            }
+        })
+        .unwrap();
+        assert!(checkpoints > 1, "wall-clock cadence must checkpoint repeatedly");
+        assert!(dir.join("wall-job.msgsnap").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resume_from_ignores_jobs_without_checkpoints() {
+        let dir = scratch_dir("fleet_no_ckpt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let spec = quick_spec("fresh", BenchmarkShape::Blob, Algorithm::Soam, 7);
+        let mut fleet = Fleet::new(vec![spec]).unwrap();
+        let resumed = fleet.resume_from(&dir).unwrap();
+        assert!(resumed.is_empty());
+        assert_eq!(fleet.jobs()[0].status(), JobStatus::Running);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,4 +1,5 @@
-//! Versioned, bit-exact checkpoint format for [`ConvergenceSession`]s.
+//! Versioned, bit-exact, **durable** checkpoint format for
+//! [`ConvergenceSession`]s.
 //!
 //! A snapshot captures everything a later process needs to continue a
 //! half-converged run **bit-identically to never having stopped**:
@@ -32,18 +33,38 @@
 //! Snapshots are only taken at iteration boundaries (between two
 //! `step` calls), where every transient buffer is empty — the property
 //! that makes the captured state complete.
+//!
+//! ## Durability (format v2)
+//!
+//! Version 2 appends a CRC-32 trailer (little-endian, over every
+//! preceding byte — see [`crate::runtime::bytes::crc32`]), so a torn or
+//! bit-rotted file is *detected* at restore instead of mis-parsed.
+//! Version 1 files (no trailer) are still restorable.
+//!
+//! [`write_durable`] makes the on-disk story survive `kill -9` at any
+//! byte: the new snapshot goes to a temp file, is fsync'd, and only then
+//! renamed over the final name — and the previous generation is retained
+//! as `<file>.prev` (rotated immediately before the rename), so even a
+//! filesystem that breaks rename atomicity, or a fault-injected torn
+//! write, leaves a restorable last-good generation on disk.
+//! [`super::Fleet::resume_from`] falls back to it per job.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use crate::engine::ConvergenceSession;
-use crate::runtime::bytes::{ByteReader, ByteWriter};
+use crate::runtime::bytes::{crc32, ByteReader, ByteWriter};
+use crate::runtime::fault::{self, FaultAction, FaultPoint};
 
 /// File magic ("MSGSN" + "FLT" for fleet).
 pub const MAGIC: &[u8; 8] = b"MSGSNFLT";
 
-/// Current snapshot format version. Bump on any layout change; readers
-/// reject other versions instead of mis-parsing.
-pub const SNAPSHOT_VERSION: u32 = 1;
+/// Current snapshot format version (CRC-32 trailer). Bump on any layout
+/// change; readers reject unknown versions instead of mis-parsing.
+pub const SNAPSHOT_VERSION: u32 = 2;
+
+/// The pre-checksum format (PR 5): same layout, no trailer. Still
+/// restorable so existing checkpoint dirs survive the upgrade.
+pub const LEGACY_VERSION: u32 = 1;
 
 /// Serialize a session checkpoint. The header pins algorithm, driver,
 /// seed AND the session's semantic fingerprint (mesh identity + every
@@ -51,6 +72,7 @@ pub const SNAPSHOT_VERSION: u32 = 1;
 /// [`ConvergenceSession::fingerprint`]), so a restore under an edited
 /// spec fails instead of continuing a subtly different run. `max_signals`
 /// and the performance knobs are deliberately outside the fingerprint.
+/// The final 4 bytes are the CRC-32 of everything before them.
 pub fn snapshot_session(session: &ConvergenceSession) -> Vec<u8> {
     let mut w = ByteWriter::new();
     w.raw(MAGIC);
@@ -60,21 +82,51 @@ pub fn snapshot_session(session: &ConvergenceSession) -> Vec<u8> {
     w.u64(session.seed());
     w.u64(session.fingerprint());
     session.write_state(&mut w);
-    w.into_inner()
+    let mut bytes = w.into_inner();
+    let crc = crc32(&bytes);
+    bytes.extend_from_slice(&crc.to_le_bytes());
+    bytes
 }
 
 /// Restore a checkpoint into a freshly built session (same spec: same
-/// mesh, same `RunConfig`). Validates the header against the session
-/// before touching any state.
+/// mesh, same `RunConfig`). The checksum (v2) is verified over the whole
+/// buffer **before** any state is decoded; the header is then validated
+/// against the session before any state is touched. On `Err` the session
+/// may be partially overwritten — callers rebuild a fresh one per
+/// attempt (see [`super::Fleet::resume_from`]).
 pub fn restore_session(session: &mut ConvergenceSession, bytes: &[u8]) -> Result<(), String> {
-    let mut r = ByteReader::new(bytes);
+    // Probe magic + version first: whether a CRC trailer exists depends on
+    // the version, and the version bytes sit before the trailer.
+    let mut probe = ByteReader::new(bytes);
+    probe.expect_raw(MAGIC).map_err(|e| e.to_string())?;
+    let version = probe.u32().map_err(|e| e.to_string())?;
+    let body: &[u8] = match version {
+        LEGACY_VERSION => bytes,
+        SNAPSHOT_VERSION => {
+            if bytes.len() < MAGIC.len() + 8 {
+                return Err("snapshot too short for its checksum trailer".to_string());
+            }
+            let (body, trailer) = bytes.split_at(bytes.len() - 4);
+            let stored = u32::from_le_bytes([trailer[0], trailer[1], trailer[2], trailer[3]]);
+            let computed = crc32(body);
+            if stored != computed {
+                return Err(format!(
+                    "checksum mismatch (stored {stored:#010x}, computed {computed:#010x}) — \
+                     the checkpoint is torn or corrupt"
+                ));
+            }
+            body
+        }
+        other => {
+            return Err(format!(
+                "snapshot version {other} (this build reads versions \
+                 {LEGACY_VERSION} and {SNAPSHOT_VERSION})"
+            ))
+        }
+    };
+    let mut r = ByteReader::new(body);
     r.expect_raw(MAGIC).map_err(|e| e.to_string())?;
-    let version = r.u32().map_err(|e| e.to_string())?;
-    if version != SNAPSHOT_VERSION {
-        return Err(format!(
-            "snapshot version {version} (this build reads version {SNAPSHOT_VERSION})"
-        ));
-    }
+    let _version = r.u32().map_err(|e| e.to_string())?;
     let algo = r.str().map_err(|e| e.to_string())?;
     if algo != session.algo().name() {
         return Err(format!(
@@ -107,17 +159,95 @@ pub fn restore_session(session: &mut ConvergenceSession, bytes: &[u8]) -> Result
     Ok(())
 }
 
-/// Write a checkpoint file (atomic-ish: temp file + rename, so a crash
-/// mid-write never leaves a truncated checkpoint under the final name).
-pub fn save_to(path: &Path, session: &ConvergenceSession) -> std::io::Result<()> {
-    let bytes = snapshot_session(session);
+/// The retained previous generation for a checkpoint path:
+/// `a.msgsnap` → `a.msgsnap.prev`. (Note the appended — not replaced —
+/// extension: `a.msgsnap.prev`'s file *stem* is therefore `a.msgsnap`,
+/// which is also its fault-injection scope at the `snapshot_decode`
+/// point, so tests can target latest and previous separately.)
+pub fn prev_path(path: &Path) -> PathBuf {
+    let mut name = path.as_os_str().to_owned();
+    name.push(".prev");
+    PathBuf::from(name)
+}
+
+/// Rotate the current latest generation (if any) to its `.prev` name.
+fn rotate_to_prev(path: &Path) -> std::io::Result<()> {
+    if path.exists() {
+        std::fs::rename(path, prev_path(path))?;
+    }
+    Ok(())
+}
+
+/// Durably write checkpoint `bytes` to `path`, retaining the previous
+/// generation:
+///
+/// 1. write to `<path minus extension>.tmp` and **fsync** it (a rename
+///    can survive a crash its data didn't);
+/// 2. rotate the existing latest to [`prev_path`];
+/// 3. atomically rename the temp file over `path`;
+/// 4. best-effort fsync of the parent directory (makes the rename itself
+///    durable where supported).
+///
+/// Fault point [`FaultPoint::CheckpointWrite`] (scope = the file stem):
+/// `truncate` simulates a kill mid-write of a *non-atomic* writer — the
+/// rotation still happens, then the truncated prefix is written directly
+/// over the final path, bypassing the temp+rename dance. That is exactly
+/// the torn file the two-generation layout must recover from. `err`
+/// returns an injected I/O error with nothing written.
+pub fn write_durable(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    use std::io::Write;
+    let scope = path.file_stem().and_then(|s| s.to_str()).map(str::to_owned);
+    match fault::fire(FaultPoint::CheckpointWrite, scope.as_deref(), None) {
+        Some(FaultAction::Truncate(n)) => {
+            rotate_to_prev(path)?;
+            let cut = (n as usize).min(bytes.len());
+            return std::fs::write(path, &bytes[..cut]);
+        }
+        Some(FaultAction::Error) => {
+            return Err(std::io::Error::other("injected checkpoint write error"));
+        }
+        Some(FaultAction::Panic) => {
+            panic!("injected fault: checkpoint_write panic ({})", path.display())
+        }
+        None => {}
+    }
     let tmp = path.with_extension("tmp");
-    std::fs::write(&tmp, &bytes)?;
-    std::fs::rename(&tmp, path)
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+    }
+    rotate_to_prev(path)?;
+    std::fs::rename(&tmp, path)?;
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            if let Ok(d) = std::fs::File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Snapshot a session and write it durably (see [`write_durable`]).
+pub fn save_to(path: &Path, session: &ConvergenceSession) -> std::io::Result<()> {
+    write_durable(path, &snapshot_session(session))
 }
 
 /// Read a checkpoint file into a freshly built session.
+///
+/// Fault point [`FaultPoint::SnapshotDecode`] (scope = the file stem;
+/// `.prev` generations decode under the stem `<job>.msgsnap` — see
+/// [`prev_path`]): any armed action injects a decode failure (`panic`
+/// panics), simulating corruption the CRC cannot model.
 pub fn load_from(path: &Path, session: &mut ConvergenceSession) -> Result<(), String> {
+    let scope = path.file_stem().and_then(|s| s.to_str()).map(str::to_owned);
+    if let Some(action) = fault::fire(FaultPoint::SnapshotDecode, scope.as_deref(), None) {
+        if action == FaultAction::Panic {
+            panic!("injected fault: snapshot_decode panic ({})", path.display());
+        }
+        return Err(format!("checkpoint {}: injected snapshot decode fault", path.display()));
+    }
     let bytes = std::fs::read(path)
         .map_err(|e| format!("reading checkpoint {}: {e}", path.display()))?;
     restore_session(session, &bytes)
@@ -139,6 +269,12 @@ mod tests {
         cfg.gwr.insertion_threshold = 0.15;
         cfg.limits.max_signals = 15_000;
         cfg
+    }
+
+    /// Unique per-test scratch path: parallel `cargo test` processes (and
+    /// parallel tests within one) must never share on-disk state.
+    fn scratch_path(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("msgsn_{}_{}", std::process::id(), name))
     }
 
     /// Kill-and-resume must be bit-identical to an uninterrupted session
@@ -242,7 +378,9 @@ mod tests {
         let mut other = ConvergenceSession::new(&raised_cfg, &mesh, None).unwrap();
         restore_session(&mut other, &bytes).unwrap();
 
-        // Truncation anywhere errors, never panics.
+        // Truncation anywhere errors, never panics (the cuts past the
+        // header land in the CRC check: a truncated v2 body can never
+        // carry a matching trailer).
         let mut fresh =
             ConvergenceSession::new(&cfg_a, &mesh, None).unwrap();
         for cut in [0, 4, MAGIC.len(), bytes.len() / 2, bytes.len() - 1] {
@@ -253,16 +391,142 @@ mod tests {
             fresh = ConvergenceSession::new(&cfg_a, &mesh, None).unwrap();
         }
 
-        // Bad version.
+        // Bad version byte: rejected by the version probe (before any CRC
+        // interpretation — an unknown version's trailer layout is unknown).
         let mut bad = bytes.clone();
         bad[8] = 0xFF;
         assert!(restore_session(&mut fresh, &bad).unwrap_err().contains("version"));
 
-        // Trailing garbage.
+        // Trailing garbage appended after a valid file shifts the trailer:
+        // the checksum catches it.
         let mut bad = bytes.clone();
         bad.push(0);
         let mut fresh = ConvergenceSession::new(&cfg_a, &mesh, None).unwrap();
-        assert!(restore_session(&mut fresh, &bad).unwrap_err().contains("trailing"));
+        assert!(restore_session(&mut fresh, &bad).unwrap_err().contains("checksum"));
+
+        // Trailing garbage *inside* a correctly-checksummed envelope (a
+        // buggy writer, not corruption) is still flagged by the body parse.
+        let mut forged = bytes[..bytes.len() - 4].to_vec();
+        forged.push(0);
+        let crc = crate::runtime::bytes::crc32(&forged);
+        forged.extend_from_slice(&crc.to_le_bytes());
+        let mut fresh = ConvergenceSession::new(&cfg_a, &mesh, None).unwrap();
+        assert!(restore_session(&mut fresh, &forged).unwrap_err().contains("trailing"));
+    }
+
+    #[test]
+    fn legacy_v1_snapshots_still_restore() {
+        let cfg = cfg(Driver::Multi, Algorithm::Soam, 23);
+        let mesh = benchmark_mesh(cfg.shape, 20);
+        let mut session = ConvergenceSession::new(&cfg, &mesh, None).unwrap();
+        session.step(6);
+        let a = {
+            let mut s = ConvergenceSession::new(&cfg, &mesh, None).unwrap();
+            restore_session(&mut s, &snapshot_session(&session)).unwrap();
+            s.run_to_end()
+        };
+        // Re-create the PR 5 on-disk format from the v2 bytes: strip the
+        // 4-byte trailer, patch the version field back to 1 (the body
+        // layout is unchanged between the versions).
+        let v2 = snapshot_session(&session);
+        let mut v1 = v2[..v2.len() - 4].to_vec();
+        v1[8..12].copy_from_slice(&LEGACY_VERSION.to_le_bytes());
+        let mut resumed = ConvergenceSession::new(&cfg, &mesh, None).unwrap();
+        restore_session(&mut resumed, &v1).unwrap();
+        let b = resumed.run_to_end();
+        assert_eq!(a.units, b.units);
+        assert_eq!(a.qe.to_bits(), b.qe.to_bits());
+    }
+
+    #[test]
+    fn any_single_bit_flip_is_a_checksum_error() {
+        let cfg = cfg(Driver::Multi, Algorithm::Gng, 7);
+        let mesh = benchmark_mesh(cfg.shape, 20);
+        let mut session = ConvergenceSession::new(&cfg, &mesh, None).unwrap();
+        session.step(4);
+        let bytes = snapshot_session(&session);
+        // Sampled offsets here (every offset × a session rebuild would be
+        // slow); the exhaustive sweep lives in rust/tests/properties.rs.
+        let mut fresh = ConvergenceSession::new(&cfg, &mesh, None).unwrap();
+        for byte in [9, 13, bytes.len() / 3, bytes.len() / 2, bytes.len() - 2] {
+            let mut flipped = bytes.clone();
+            flipped[byte] ^= 0x10;
+            let err = restore_session(&mut fresh, &flipped)
+                .expect_err(&format!("flip at byte {byte} must fail"));
+            // Flips inside the magic fail on the magic itself; everything
+            // after it is caught by the checksum before decoding.
+            assert!(
+                err.contains("checksum") || err.contains("magic") || err.contains("version"),
+                "flip at byte {byte}: unexpected error {err:?}"
+            );
+            fresh = ConvergenceSession::new(&cfg, &mesh, None).unwrap();
+        }
+    }
+
+    #[test]
+    fn durable_write_retains_the_previous_generation() {
+        let cfg = cfg(Driver::Multi, Algorithm::Soam, 31);
+        let mesh = benchmark_mesh(cfg.shape, 20);
+        let mut session = ConvergenceSession::new(&cfg, &mesh, None).unwrap();
+        let path = scratch_path("snapshot_rotation.msgsnap");
+        let prev = prev_path(&path);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&prev).ok();
+
+        session.step(3);
+        let gen1 = snapshot_session(&session);
+        write_durable(&path, &gen1).unwrap();
+        assert!(path.exists());
+        assert!(!prev.exists(), "first generation has no predecessor");
+
+        session.step(3);
+        let gen2 = snapshot_session(&session);
+        write_durable(&path, &gen2).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), gen2, "latest is the new generation");
+        assert_eq!(std::fs::read(&prev).unwrap(), gen1, "previous generation retained");
+        // No temp file left behind.
+        assert!(!path.with_extension("tmp").exists());
+
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&prev).ok();
+    }
+
+    #[test]
+    fn injected_torn_write_clobbers_latest_but_not_prev() {
+        let _guard = fault::test_lock();
+        let cfg = cfg(Driver::Multi, Algorithm::Soam, 37);
+        let mesh = benchmark_mesh(cfg.shape, 20);
+        let mut session = ConvergenceSession::new(&cfg, &mesh, None).unwrap();
+        let path = scratch_path("snapshot_torn.msgsnap");
+        let prev = prev_path(&path);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&prev).ok();
+
+        session.step(3);
+        let gen1 = snapshot_session(&session);
+        write_durable(&path, &gen1).unwrap();
+
+        // Second write is torn at 10 bytes, written non-atomically. The
+        // scope is the file stem (pid-unique here), so a concurrent test's
+        // checkpoint writes can never consume this spec.
+        let stem = path.file_stem().unwrap().to_str().unwrap();
+        fault::install(
+            fault::parse_faults(&format!("checkpoint_write/{stem}:truncate=10@1")).unwrap(),
+        );
+        session.step(3);
+        let gen2 = snapshot_session(&session);
+        write_durable(&path, &gen2).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), &gen2[..10], "latest is torn");
+        assert_eq!(std::fs::read(&prev).unwrap(), gen1, "prev holds the last good bytes");
+
+        // The torn latest is rejected, the retained generation restores.
+        let mut fresh = ConvergenceSession::new(&cfg, &mesh, None).unwrap();
+        assert!(load_from(&path, &mut fresh).is_err());
+        let mut fresh = ConvergenceSession::new(&cfg, &mesh, None).unwrap();
+        load_from(&prev, &mut fresh).unwrap();
+
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&prev).ok();
     }
 
     #[test]
@@ -271,7 +535,7 @@ mod tests {
         let mesh = benchmark_mesh(cfg.shape, 20);
         let mut session = ConvergenceSession::new(&cfg, &mesh, None).unwrap();
         session.step(5);
-        let path = std::env::temp_dir().join("msgsn_test_snapshot.msgsnap");
+        let path = scratch_path("snapshot_roundtrip.msgsnap");
         save_to(&path, &session).unwrap();
         let a = session.run_to_end();
         let mut resumed = ConvergenceSession::new(&cfg, &mesh, None).unwrap();
@@ -279,6 +543,7 @@ mod tests {
         let b = resumed.run_to_end();
         assert_eq!(a.units, b.units);
         assert_eq!(a.qe.to_bits(), b.qe.to_bits());
-        std::fs::remove_file(path).ok();
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(prev_path(&path)).ok();
     }
 }

@@ -50,12 +50,17 @@ pub struct JobSpec {
     pub mesh_path: Option<PathBuf>,
     /// Full run configuration (driver, algorithm, seed, every knob).
     pub cfg: RunConfig,
+    /// Per-job override of the fleet's retry budget (crash-isolation
+    /// restore attempts before the job is quarantined —
+    /// [`super::FleetOptions::max_retries`]). `Some(0)` quarantines on the
+    /// first failure.
+    pub retries: Option<u32>,
 }
 
 impl JobSpec {
     /// A spec over a benchmark shape, named after shape + algorithm.
     pub fn from_config(name: impl Into<String>, cfg: RunConfig) -> Self {
-        Self { name: name.into(), mesh_path: None, cfg }
+        Self { name: name.into(), mesh_path: None, cfg, retries: None }
     }
 
     /// Materialize the job's point-cloud source.
@@ -128,8 +133,13 @@ pub fn parse_manifest(text: &str) -> Result<Vec<JobSpec>> {
 fn parse_job(job: &Json, index: usize) -> Result<JobSpec> {
     let Json::Obj(map) = job else { bail!("job entry must be an object") };
     for key in map.keys() {
-        if !matches!(key.as_str(), "name" | "mesh" | "algorithm" | "driver" | "seed" | "config") {
-            bail!("unknown job key {key:?} (expected name|mesh|algorithm|driver|seed|config)");
+        if !matches!(
+            key.as_str(),
+            "name" | "mesh" | "algorithm" | "driver" | "seed" | "config" | "retries"
+        ) {
+            bail!(
+                "unknown job key {key:?} (expected name|mesh|algorithm|driver|seed|config|retries)"
+            );
         }
     }
 
@@ -186,7 +196,14 @@ fn parse_job(job: &Json, index: usize) -> Result<JobSpec> {
             cfg.apply(key, &value).with_context(|| format!("config key {key:?}"))?;
         }
     }
-    Ok(JobSpec { name, mesh_path, cfg })
+    let retries = match job.get("retries") {
+        None => None,
+        Some(v) => {
+            let n = v.as_u64().context("\"retries\" must be a non-negative integer")?;
+            Some(u32::try_from(n).context("\"retries\" out of range")?)
+        }
+    };
+    Ok(JobSpec { name, mesh_path, cfg, retries })
 }
 
 /// Manifest values reuse the config-file scalar domain.
@@ -236,6 +253,22 @@ mod tests {
         assert_eq!(b.cfg.shape, BenchmarkShape::Eight);
         assert_eq!(b.cfg.algorithm, Algorithm::Gng);
         assert_eq!(b.cfg.driver, Driver::Multi);
+        assert_eq!(a.retries, None, "retry budget defaults to the fleet-wide option");
+    }
+
+    #[test]
+    fn per_job_retry_budget_parses() {
+        let text = r#"{"version": 1, "jobs": [
+          {"name": "fragile", "retries": 0},
+          {"name": "tough", "retries": 5},
+          {"name": "default"}
+        ]}"#;
+        let specs = parse_manifest(text).unwrap();
+        assert_eq!(specs[0].retries, Some(0));
+        assert_eq!(specs[1].retries, Some(5));
+        assert_eq!(specs[2].retries, None);
+        let bad = r#"{"version": 1, "jobs": [{"name": "x", "retries": "lots"}]}"#;
+        assert!(parse_manifest(bad).is_err(), "non-integer retries rejected");
     }
 
     #[test]

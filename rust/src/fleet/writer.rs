@@ -1,0 +1,239 @@
+//! Asynchronous checkpoint write-out: one dedicated writer thread takes
+//! encoded snapshot bytes off the scheduler's hands so durable I/O
+//! (fsync + rotation + rename — see [`super::snapshot::write_durable`])
+//! never stalls convergence stepping.
+//!
+//! The split of labor is deliberate: *encoding* stays on the scheduler
+//! thread (it borrows the live session; the bytes are the intergeneration
+//! boundary), *writing* moves here. The channel carries owned byte
+//! buffers, so the scheduler is free to mutate the session the moment
+//! `enqueue` returns — the snapshot is already immutable.
+//!
+//! Failure model: a write that errors (or panics, e.g. under an injected
+//! `checkpoint_write:panic` fault) is reported as a [`WriteOutcome`] on
+//! the result channel and the writer thread *keeps running* — a failed
+//! checkpoint must cost at most one recovery generation, never the
+//! write-out path for every other job. The scheduler polls outcomes each
+//! round and surfaces failures as progress lines; [`CheckpointWriter::drain`]
+//! blocks until every queued write has landed (called before restore
+//! fallbacks and at end of run, so "last good generation" is on disk, not
+//! in a queue).
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::thread::JoinHandle;
+
+use super::snapshot::write_durable;
+
+struct WriteRequest {
+    job: String,
+    path: PathBuf,
+    bytes: Vec<u8>,
+}
+
+/// Result of one queued checkpoint write, reported back to the scheduler.
+#[derive(Debug)]
+pub struct WriteOutcome {
+    /// Fleet job name the checkpoint belongs to.
+    pub job: String,
+    /// Final checkpoint path.
+    pub path: PathBuf,
+    /// `Err` carries the I/O error (or caught panic) message.
+    pub result: Result<(), String>,
+}
+
+/// Background durable-checkpoint writer (see module docs). Dropping it
+/// finishes every queued write, then joins the thread.
+pub struct CheckpointWriter {
+    tx: Option<Sender<WriteRequest>>,
+    outcomes: Receiver<WriteOutcome>,
+    handle: Option<JoinHandle<()>>,
+    in_flight: usize,
+}
+
+impl CheckpointWriter {
+    pub fn new() -> Self {
+        let (tx, rx) = channel::<WriteRequest>();
+        let (out_tx, out_rx) = channel::<WriteOutcome>();
+        let handle = std::thread::Builder::new()
+            .name("msgsn-ckpt-writer".to_string())
+            .spawn(move || {
+                for req in rx {
+                    // An injected panic in write_durable must not kill the
+                    // writer: convert it to an Err outcome and keep serving
+                    // the other jobs' checkpoints.
+                    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        write_durable(&req.path, &req.bytes)
+                    }));
+                    let result = match result {
+                        Ok(Ok(())) => Ok(()),
+                        Ok(Err(e)) => Err(e.to_string()),
+                        Err(payload) => Err(format!(
+                            "checkpoint write panicked: {}",
+                            panic_message(&payload)
+                        )),
+                    };
+                    // The scheduler may already be gone (drop order at end
+                    // of run); losing the outcome then is fine.
+                    let _ = out_tx.send(WriteOutcome { job: req.job, path: req.path, result });
+                }
+            })
+            .expect("spawn checkpoint writer");
+        Self { tx: Some(tx), outcomes: out_rx, handle: Some(handle), in_flight: 0 }
+    }
+
+    /// Queue one encoded snapshot for durable write-out. Returns
+    /// immediately; the outcome arrives via [`Self::poll`] /
+    /// [`Self::drain`].
+    pub fn enqueue(&mut self, job: &str, path: PathBuf, bytes: Vec<u8>) {
+        let req = WriteRequest { job: job.to_string(), path, bytes };
+        self.tx
+            .as_ref()
+            .expect("writer channel open while not dropping")
+            .send(req)
+            .expect("checkpoint writer thread alive");
+        self.in_flight += 1;
+    }
+
+    /// Collect every outcome that has landed so far, without blocking.
+    pub fn poll(&mut self) -> Vec<WriteOutcome> {
+        let mut out = Vec::new();
+        loop {
+            match self.outcomes.try_recv() {
+                Ok(o) => {
+                    self.in_flight -= 1;
+                    out.push(o);
+                }
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        out
+    }
+
+    /// Block until every queued write has landed, returning the outcomes.
+    /// Called before a restore-from-last-good fallback (the "last good"
+    /// generation must be on disk, not in the queue) and at end of run.
+    pub fn drain(&mut self) -> Vec<WriteOutcome> {
+        let mut out = Vec::new();
+        while self.in_flight > 0 {
+            match self.outcomes.recv() {
+                Ok(o) => {
+                    self.in_flight -= 1;
+                    out.push(o);
+                }
+                // Writer gone with requests unanswered: nothing more will
+                // arrive (only reachable if the writer thread was killed
+                // externally — the catch_unwind keeps panics from doing it).
+                Err(_) => break,
+            }
+        }
+        out
+    }
+}
+
+impl Default for CheckpointWriter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for CheckpointWriter {
+    fn drop(&mut self) {
+        // Closing the request channel ends the writer's loop *after* it
+        // has served everything already queued — pending checkpoints
+        // complete even when the fleet is dropped mid-run.
+        self.tx = None;
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Best-effort human-readable panic payload (panics carry `&str` or
+/// `String` in practice).
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::fault;
+
+    fn scratch(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("msgsn_{}_{}", std::process::id(), name))
+    }
+
+    #[test]
+    fn writes_land_and_outcomes_report() {
+        let mut w = CheckpointWriter::new();
+        let p1 = scratch("writer_a.msgsnap");
+        let p2 = scratch("writer_b.msgsnap");
+        w.enqueue("a", p1.clone(), vec![1, 2, 3]);
+        w.enqueue("b", p2.clone(), vec![4, 5]);
+        let outcomes = w.drain();
+        assert_eq!(outcomes.len(), 2);
+        assert!(outcomes.iter().all(|o| o.result.is_ok()), "{outcomes:?}");
+        assert_eq!(std::fs::read(&p1).unwrap(), vec![1, 2, 3]);
+        assert_eq!(std::fs::read(&p2).unwrap(), vec![4, 5]);
+        assert!(w.poll().is_empty(), "drain consumed everything");
+        for p in [p1, p2] {
+            std::fs::remove_file(&p).ok();
+            std::fs::remove_file(crate::fleet::snapshot::prev_path(&p)).ok();
+        }
+    }
+
+    #[test]
+    fn drop_completes_queued_writes() {
+        let p = scratch("writer_drop.msgsnap");
+        std::fs::remove_file(&p).ok();
+        let mut w = CheckpointWriter::new();
+        w.enqueue("d", p.clone(), vec![9; 64]);
+        drop(w);
+        assert_eq!(std::fs::read(&p).unwrap(), vec![9; 64]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn writer_survives_injected_panic_and_reports_it() {
+        let _guard = fault::test_lock();
+        let p_bad = scratch("writer_panic.msgsnap");
+        let p_good = scratch("writer_after.msgsnap");
+        let stem = p_bad.file_stem().unwrap().to_str().unwrap();
+        fault::install(fault::parse_faults(&format!("checkpoint_write/{stem}:panic")).unwrap());
+
+        let mut w = CheckpointWriter::new();
+        w.enqueue("bad", p_bad.clone(), vec![1]);
+        w.enqueue("good", p_good.clone(), vec![2]);
+        let outcomes = w.drain();
+        assert_eq!(outcomes.len(), 2, "writer must survive the panic");
+        let bad = outcomes.iter().find(|o| o.job == "bad").unwrap();
+        let err = bad.result.as_ref().unwrap_err();
+        assert!(err.contains("panicked"), "panic surfaced as Err: {err}");
+        assert!(outcomes.iter().find(|o| o.job == "good").unwrap().result.is_ok());
+        assert_eq!(std::fs::read(&p_good).unwrap(), vec![2]);
+
+        std::fs::remove_file(&p_bad).ok();
+        std::fs::remove_file(&p_good).ok();
+    }
+
+    #[test]
+    fn injected_write_error_is_an_outcome_not_a_crash() {
+        let _guard = fault::test_lock();
+        let p = scratch("writer_err.msgsnap");
+        let stem = p.file_stem().unwrap().to_str().unwrap();
+        fault::install(fault::parse_faults(&format!("checkpoint_write/{stem}:err")).unwrap());
+        let mut w = CheckpointWriter::new();
+        w.enqueue("e", p.clone(), vec![7]);
+        let outcomes = w.drain();
+        assert_eq!(outcomes.len(), 1);
+        assert!(outcomes[0].result.as_ref().unwrap_err().contains("injected"));
+        assert!(!p.exists(), "err action writes nothing");
+    }
+}

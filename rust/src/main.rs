@@ -12,7 +12,7 @@ use msgsn::bench::{self, Scale};
 use msgsn::cli::{parse, Command, Parsed, USAGE};
 use msgsn::config::{parse_config_text, Algorithm, ConfigValue, Driver, RunConfig};
 use msgsn::engine::{make_algorithm, make_findwinners, run, run_convergence};
-use msgsn::fleet::{parse_manifest, Fleet, FleetOptions};
+use msgsn::fleet::{parse_manifest, Fleet, FleetOptions, FleetOutcome};
 use msgsn::mesh::{benchmark_mesh, write_obj, write_off, BenchmarkShape, SurfaceSampler};
 use msgsn::rng::Rng;
 use msgsn::runtime::Registry;
@@ -32,7 +32,18 @@ fn main() -> ExitCode {
             Ok(())
         }
         Command::Run(p) => cmd_run(&p),
-        Command::Fleet(p) => cmd_fleet(&p),
+        // The fleet maps job statuses to its own exit codes (0 success,
+        // 2 partial failure, 3 total failure) — handled apart from the
+        // generic Ok/Err → 0/1 fold below.
+        Command::Fleet(p) => {
+            return match cmd_fleet(&p) {
+                Ok(code) => code,
+                Err(e) => {
+                    eprintln!("error: {e:#}");
+                    ExitCode::FAILURE
+                }
+            }
+        }
         Command::Reproduce(p) => cmd_reproduce(&p),
         Command::Mesh(p) => cmd_mesh(&p),
         Command::Artifacts(p) => cmd_artifacts(&p),
@@ -129,8 +140,10 @@ fn cmd_run(p: &Parsed) -> Result<()> {
 }
 
 /// Run a jobs manifest: N concurrent reconstructions round-robin over one
-/// worker pool, with optional bit-exact checkpointing (`fleet` subsystem).
-fn cmd_fleet(p: &Parsed) -> Result<()> {
+/// worker pool, with durable bit-exact checkpointing, per-job crash
+/// isolation with retry/quarantine, and status-bearing exit codes
+/// (`fleet` subsystem).
+fn cmd_fleet(p: &Parsed) -> Result<ExitCode> {
     let manifest_path = p
         .get("jobs")
         .context("--jobs <jobs.json> is required (see `msgsn help` for the schema)")?;
@@ -139,10 +152,25 @@ fn cmd_fleet(p: &Parsed) -> Result<()> {
     let specs = parse_manifest(&text)?;
     let quiet = p.flag("quiet");
 
+    if let Some(profile) = p.get("faults") {
+        let specs = msgsn::runtime::fault::parse_faults(profile)
+            .map_err(anyhow::Error::msg)
+            .context("--faults")?;
+        msgsn::runtime::fault::install(specs);
+    }
+
     let opts = FleetOptions {
         stride: p.get_parsed("stride", 1u64, "integer")?.max(1),
         checkpoint_every: p.get_parsed("checkpoint-every", 0u64, "integer")?,
+        checkpoint_secs: p
+            .get("checkpoint-secs")
+            .map(|s| {
+                s.parse::<f64>().context("--checkpoint-secs expects seconds (fractional ok)")
+            })
+            .transpose()?,
         checkpoint_dir: Some(PathBuf::from(p.get("checkpoint-dir").unwrap_or("checkpoints"))),
+        max_retries: p.get_parsed("max-retries", 2u32, "integer")?,
+        ..FleetOptions::default()
     };
 
     let mut fleet = Fleet::new(specs)?;
@@ -160,7 +188,9 @@ fn cmd_fleet(p: &Parsed) -> Result<()> {
             if resumed.is_empty() {
                 println!("resume: no checkpoints under {} — starting fresh", dir.display());
             } else {
-                println!("resume: restored {}", resumed.join(", "));
+                for o in &resumed {
+                    println!("resume: {} from {}", o.name, o.source.describe());
+                }
             }
         }
     }
@@ -170,7 +200,15 @@ fn cmd_fleet(p: &Parsed) -> Result<()> {
         }
     })?;
     print!("{}", report.to_table().render());
-    Ok(())
+    let outcome = report.outcome();
+    match outcome {
+        FleetOutcome::AllSucceeded => {}
+        FleetOutcome::PartialFailure => {
+            eprintln!("fleet: partial failure — some jobs quarantined (exit 2)")
+        }
+        FleetOutcome::AllFailed => eprintln!("fleet: all jobs quarantined (exit 3)"),
+    }
+    Ok(ExitCode::from(outcome.exit_code()))
 }
 
 /// Re-run (same seed) keeping the network, then export its triangulation.

@@ -1,0 +1,547 @@
+//! Deterministic fault injection — the harness every durability claim in
+//! the fleet layer is tested with.
+//!
+//! A *fault point* is a named hook compiled into a real code path (the
+//! checkpoint write, the snapshot decode, the session step, the pool
+//! job). A *fault spec* arms one point with an action (torn write, panic,
+//! injected error) and a deterministic trigger (the n-th evaluation, or
+//! the first evaluation at/after a turn counter). Specs come from the
+//! `MSGSN_FAULTS` environment variable (the CI fault profile), the
+//! `msgsn fleet --faults` flag, or [`install`] in tests — all three share
+//! one grammar:
+//!
+//! ```text
+//! MSGSN_FAULTS = spec ("," spec)*
+//! spec         = point ["/" scope] ":" action ["@" trigger]
+//! point        = "checkpoint_write" | "snapshot_decode"
+//!              | "session_step" | "job"            (alias) | "pool_job"
+//! action       = "truncate" "@" BYTES              (torn write, 1st hit)
+//!              | "truncate" "=" BYTES ["@" trigger]
+//!              | "panic"    ["@" trigger]
+//!              | "err"      ["@" trigger]
+//! trigger      = "turn=" N      (first evaluation whose turn ≥ N)
+//!              | N              (the N-th evaluation; default 1)
+//! ```
+//!
+//! Examples: `checkpoint_write:truncate@2` (first checkpoint write is cut
+//! to 2 bytes, written *non-atomically* over the final path — the torn
+//! write the two-generation layout defends against),
+//! `job:panic@turn=7` (the first session step at iteration ≥ 7 panics),
+//! `checkpoint_write/scan-a:truncate=100@2` (job `scan-a`'s second
+//! checkpoint write is cut at 100 bytes).
+//!
+//! **Scopes**: `session_step` matches the fleet job *name* (solo sessions
+//! have none); `checkpoint_write`/`snapshot_decode` match the checkpoint
+//! *file stem* (`a.msgsnap` → `a`; the retained generation `a.msgsnap.prev`
+//! decodes under scope `a.msgsnap`, so latest and previous can be targeted
+//! separately); `pool_job` matches the pool's diagnostic label
+//! ([`crate::runtime::WorkerPool::with_label`] — engine pools are
+//! unlabeled). A spec without a scope matches every evaluation of its
+//! point.
+//!
+//! **Determinism + one-shot**: every spec fires at most once and is then
+//! retired; every live spec matching a point observes each evaluation (its
+//! hit counter advances), and the first spec whose trigger is satisfied
+//! fires. Repeating a spec N times makes it fire on N successive
+//! qualifying evaluations — e.g. three copies of `session_step/x:panic@turn=3`
+//! crash job `x` on its first run *and* both retries, driving it to
+//! quarantine.
+//!
+//! **Zero-cost when empty**: [`fire`] is two relaxed atomic loads (the
+//! one-time env install check and the armed flag) when no spec is
+//! installed — the registry never takes a lock on the hot path.
+//!
+//! A malformed `MSGSN_FAULTS` value panics at the first fault-point
+//! evaluation: a typo'd CI profile must fail the build loudly, not
+//! silently test nothing (`rust/tests/fleet.rs` additionally validates the
+//! profile in a dedicated test for a clean failure message).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard, Once, OnceLock, PoisonError};
+
+/// Environment variable holding the process-wide fault profile.
+pub const ENV_VAR: &str = "MSGSN_FAULTS";
+
+/// Named fault points compiled into real code paths.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultPoint {
+    /// A durable checkpoint write ([`crate::fleet::snapshot::write_durable`]).
+    /// `truncate` simulates a torn write (bytes cut and written
+    /// non-atomically over the final path), `err` an I/O failure.
+    CheckpointWrite,
+    /// Decoding a checkpoint file during restore
+    /// ([`crate::fleet::snapshot::load_from`]). Any action injects a decode
+    /// error (`panic` panics).
+    SnapshotDecode,
+    /// A session advancing ([`crate::engine::ConvergenceSession::step`]).
+    /// Any action panics — the poison-input simulation the fleet's
+    /// `catch_unwind` isolation is tested with.
+    SessionStep,
+    /// A task executing on a [`crate::runtime::WorkerPool`] worker. Any
+    /// action panics on the worker (caught there, re-raised in the caller —
+    /// the scoped-thread semantics the pool guarantees). Scope = the pool's
+    /// diagnostic label ([`crate::runtime::WorkerPool::with_label`]).
+    PoolJob,
+}
+
+impl FaultPoint {
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultPoint::CheckpointWrite => "checkpoint_write",
+            FaultPoint::SnapshotDecode => "snapshot_decode",
+            FaultPoint::SessionStep => "session_step",
+            FaultPoint::PoolJob => "pool_job",
+        }
+    }
+
+    fn from_name(s: &str) -> Option<FaultPoint> {
+        match s {
+            "checkpoint_write" => Some(FaultPoint::CheckpointWrite),
+            "snapshot_decode" => Some(FaultPoint::SnapshotDecode),
+            // `job` reads better in profiles targeting fleet jobs.
+            "session_step" | "job" => Some(FaultPoint::SessionStep),
+            "pool_job" => Some(FaultPoint::PoolJob),
+            _ => None,
+        }
+    }
+}
+
+/// What an armed spec does when it fires.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Cut the write to this many bytes — and write them *without* the
+    /// tmp+rename dance, simulating the torn file a crash mid-write of a
+    /// non-atomic writer would leave.
+    Truncate(u64),
+    /// Panic at the fault point.
+    Panic,
+    /// Return an injected error from the fault point.
+    Error,
+}
+
+/// When a spec fires (deterministic; see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultTrigger {
+    /// On the n-th matching evaluation (1-based; the default is 1).
+    Hit(u64),
+    /// On the first matching evaluation whose turn counter is ≥ n. `≥`
+    /// rather than `=` because schedulers step in strides — an exact turn
+    /// can be skipped over.
+    Turn(u64),
+}
+
+/// One armed fault: point + optional scope + action + trigger.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub point: FaultPoint,
+    /// `None` matches every evaluation of the point; `Some` must equal the
+    /// evaluation's scope exactly (job name / checkpoint file stem).
+    pub scope: Option<String>,
+    pub action: FaultAction,
+    pub trigger: FaultTrigger,
+}
+
+impl FaultSpec {
+    /// Does this spec observe an evaluation of `point` under `scope`?
+    /// An unscoped spec matches every scope (including `None`); a scoped
+    /// spec requires an exact match.
+    fn matches(&self, point: FaultPoint, scope: Option<&str>) -> bool {
+        self.point == point
+            && match &self.scope {
+                None => true,
+                Some(want) => scope == Some(want.as_str()),
+            }
+    }
+}
+
+struct Armed {
+    spec: FaultSpec,
+    /// Evaluations this spec has observed (drives [`FaultTrigger::Hit`]).
+    hits: u64,
+    /// One-shot: set when fired, never fires again.
+    spent: bool,
+}
+
+/// Fast-path flag: true iff any unspent spec is installed.
+static ARMED_ANY: AtomicBool = AtomicBool::new(false);
+static ENV_INIT: Once = Once::new();
+
+fn state() -> &'static Mutex<Vec<Armed>> {
+    static STATE: OnceLock<Mutex<Vec<Armed>>> = OnceLock::new();
+    STATE.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn lock_state() -> MutexGuard<'static, Vec<Armed>> {
+    // A panic while holding the registry lock (e.g. an injected panic
+    // unwinding through a test) must not disarm fault handling for the
+    // rest of the process.
+    state().lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn install_inner(specs: Vec<FaultSpec>) {
+    let mut st = lock_state();
+    *st = specs.into_iter().map(|spec| Armed { spec, hits: 0, spent: false }).collect();
+    ARMED_ANY.store(!st.is_empty(), Ordering::Relaxed);
+}
+
+fn ensure_env_installed() {
+    ENV_INIT.call_once(|| {
+        let Ok(text) = std::env::var(ENV_VAR) else { return };
+        if text.trim().is_empty() {
+            return;
+        }
+        match parse_faults(&text) {
+            Ok(specs) => install_inner(specs),
+            // Loud by design: a typo'd profile must not silently test
+            // nothing (see module docs).
+            Err(e) => panic!("{ENV_VAR}: {e}"),
+        }
+    });
+}
+
+/// Install a fault profile programmatically, replacing whatever is armed
+/// (including the `MSGSN_FAULTS` profile). Tests must hold [`test_lock`]
+/// around install/fire sequences — the registry is process-global.
+pub fn install(specs: Vec<FaultSpec>) {
+    // Consume the one-time env install first so it cannot later clobber
+    // this explicit profile.
+    ensure_env_installed();
+    install_inner(specs);
+}
+
+/// Disarm every spec (the `MSGSN_FAULTS` profile included).
+pub fn clear() {
+    install(Vec::new());
+}
+
+/// Number of unspent specs currently armed.
+pub fn armed_specs() -> usize {
+    ensure_env_installed();
+    lock_state().iter().filter(|a| !a.spent).count()
+}
+
+/// Evaluate a fault point. `scope` is the evaluation's identity (job name
+/// / file stem; see module docs), `turn` feeds `@turn=` triggers (pass the
+/// caller's monotone counter, `None` where no counter exists). Returns the
+/// action to simulate, or `None` — the overwhelmingly common case, costing
+/// two relaxed atomic loads.
+#[inline]
+pub fn fire(point: FaultPoint, scope: Option<&str>, turn: Option<u64>) -> Option<FaultAction> {
+    ensure_env_installed();
+    if !ARMED_ANY.load(Ordering::Relaxed) {
+        return None;
+    }
+    fire_slow(point, scope, turn)
+}
+
+#[cold]
+fn fire_slow(point: FaultPoint, scope: Option<&str>, turn: Option<u64>) -> Option<FaultAction> {
+    let mut st = lock_state();
+    let mut fired = None;
+    for a in st.iter_mut() {
+        if a.spent || !a.spec.matches(point, scope) {
+            continue;
+        }
+        a.hits += 1;
+        let fires = match a.spec.trigger {
+            FaultTrigger::Hit(n) => a.hits >= n,
+            FaultTrigger::Turn(n) => turn.is_some_and(|t| t >= n),
+        };
+        if fires {
+            a.spent = true;
+            fired = Some(a.spec.action.clone());
+            break;
+        }
+    }
+    if st.iter().all(|a| a.spent) {
+        ARMED_ANY.store(false, Ordering::Relaxed);
+    }
+    fired
+}
+
+/// Evaluate a panic-only fault point ([`FaultPoint::SessionStep`],
+/// [`FaultPoint::PoolJob`]): any armed action panics with an identifiable
+/// payload.
+#[inline]
+pub fn maybe_panic(point: FaultPoint, scope: Option<&str>, turn: Option<u64>) {
+    if let Some(action) = fire(point, scope, turn) {
+        panic!(
+            "injected fault: {} {:?} (scope {:?}, turn {:?})",
+            point.name(),
+            action,
+            scope,
+            turn
+        );
+    }
+}
+
+/// Serializes tests that install fault profiles (the registry is
+/// process-global and `cargo test` runs threads in parallel). Dropping the
+/// guard clears programmatic specs and re-installs the `MSGSN_FAULTS`
+/// profile — fresh, with zeroed hit counters — so env-profile runs keep
+/// exercising the recovery paths after a guarded test ran.
+pub struct TestGuard {
+    _inner: MutexGuard<'static, ()>,
+}
+
+pub fn test_lock() -> TestGuard {
+    static GATE: Mutex<()> = Mutex::new(());
+    // A previous test panicking under the guard is normal (#[should_panic],
+    // injected panics) — poison is not an error here.
+    let inner = GATE.lock().unwrap_or_else(PoisonError::into_inner);
+    TestGuard { _inner: inner }
+}
+
+impl Drop for TestGuard {
+    fn drop(&mut self) {
+        let specs = std::env::var(ENV_VAR)
+            .ok()
+            .and_then(|s| parse_faults(&s).ok())
+            .unwrap_or_default();
+        install(specs);
+    }
+}
+
+/// Parse a comma-separated fault profile (see the module-level grammar).
+pub fn parse_faults(text: &str) -> Result<Vec<FaultSpec>, String> {
+    let mut specs = Vec::new();
+    for raw in text.split(',') {
+        let raw = raw.trim();
+        if raw.is_empty() {
+            continue;
+        }
+        specs.push(parse_spec(raw).map_err(|e| format!("fault spec {raw:?}: {e}"))?);
+    }
+    Ok(specs)
+}
+
+fn parse_spec(raw: &str) -> Result<FaultSpec, String> {
+    let (target, rest) =
+        raw.split_once(':').ok_or("expected point[/scope]:action[@trigger]")?;
+    let (point_name, scope) = match target.split_once('/') {
+        Some((p, s)) if !s.is_empty() => (p, Some(s.to_string())),
+        Some(_) => return Err("empty scope after '/'".to_string()),
+        None => (target, None),
+    };
+    let point = FaultPoint::from_name(point_name).ok_or_else(|| {
+        format!(
+            "unknown fault point {point_name:?} \
+             (expected checkpoint_write|snapshot_decode|session_step|job|pool_job)"
+        )
+    })?;
+    let (head, at_suffix) = match rest.split_once('@') {
+        Some((h, t)) => (h, Some(t)),
+        None => (rest, None),
+    };
+    let (action_name, eq_arg) = match head.split_once('=') {
+        Some((a, v)) => (a, Some(v)),
+        None => (head, None),
+    };
+    let parse_n = |what: &str, s: &str| -> Result<u64, String> {
+        s.parse::<u64>().map_err(|_| format!("{what} expects an integer, got {s:?}"))
+    };
+    let parse_trigger = |t: Option<&str>| -> Result<FaultTrigger, String> {
+        match t {
+            None => Ok(FaultTrigger::Hit(1)),
+            Some(t) => match t.split_once('=') {
+                Some(("turn", n)) => Ok(FaultTrigger::Turn(parse_n("@turn=", n)?)),
+                Some((k, _)) => Err(format!("unknown trigger kind {k:?} (expected turn=N or N)")),
+                None => Ok(FaultTrigger::Hit(parse_n("@hit", t)?)),
+            },
+        }
+    };
+    let (action, trigger) = match action_name {
+        "truncate" => match eq_arg {
+            // `truncate=BYTES[@trigger]` — the unambiguous form.
+            Some(v) => (FaultAction::Truncate(parse_n("truncate=", v)?), parse_trigger(at_suffix)?),
+            // `truncate@BYTES` — shorthand: the `@` number is the byte
+            // count, the trigger defaults to the first hit.
+            None => {
+                let bytes = at_suffix.ok_or("truncate needs a byte count: truncate@N")?;
+                (FaultAction::Truncate(parse_n("truncate@", bytes)?), FaultTrigger::Hit(1))
+            }
+        },
+        "panic" | "err" => {
+            if eq_arg.is_some() {
+                return Err(format!("{action_name} takes no '=' argument"));
+            }
+            let action =
+                if action_name == "panic" { FaultAction::Panic } else { FaultAction::Error };
+            (action, parse_trigger(at_suffix)?)
+        }
+        other => return Err(format!("unknown action {other:?} (expected truncate|panic|err)")),
+    };
+    Ok(FaultSpec { point, scope, action, trigger })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grammar_round_trips() {
+        let specs = parse_faults(
+            "checkpoint_write:truncate@2, job:panic@turn=7,\
+             snapshot_decode/a:err,pool_job:panic@3,\
+             checkpoint_write/scan-a:truncate=100@2",
+        )
+        .unwrap();
+        assert_eq!(specs.len(), 5);
+        assert_eq!(
+            specs[0],
+            FaultSpec {
+                point: FaultPoint::CheckpointWrite,
+                scope: None,
+                action: FaultAction::Truncate(2),
+                trigger: FaultTrigger::Hit(1),
+            }
+        );
+        assert_eq!(
+            specs[1],
+            FaultSpec {
+                point: FaultPoint::SessionStep,
+                scope: None,
+                action: FaultAction::Panic,
+                trigger: FaultTrigger::Turn(7),
+            }
+        );
+        assert_eq!(
+            specs[2],
+            FaultSpec {
+                point: FaultPoint::SnapshotDecode,
+                scope: Some("a".to_string()),
+                action: FaultAction::Error,
+                trigger: FaultTrigger::Hit(1),
+            }
+        );
+        assert_eq!(specs[3].trigger, FaultTrigger::Hit(3));
+        assert_eq!(
+            specs[4],
+            FaultSpec {
+                point: FaultPoint::CheckpointWrite,
+                scope: Some("scan-a".to_string()),
+                action: FaultAction::Truncate(100),
+                trigger: FaultTrigger::Hit(2),
+            }
+        );
+        // Empty input / stray commas are fine.
+        assert!(parse_faults("").unwrap().is_empty());
+        assert!(parse_faults(" , ,").unwrap().is_empty());
+    }
+
+    #[test]
+    fn grammar_rejects_malformed_specs() {
+        for bad in [
+            "nonsense",
+            "warp:panic",
+            "job:frobnicate",
+            "job:panic@turn=x",
+            "job:panic@zap=3",
+            "checkpoint_write:truncate",
+            "checkpoint_write:truncate@x",
+            "job:panic=3",
+            "job/:panic",
+        ] {
+            assert!(parse_faults(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    // Every spec these tests install into the PROCESS-GLOBAL registry is
+    // scoped to a `zz-ut-*` name no real code path ever uses: `test_lock`
+    // serializes the fault tests against each other, but NOT against the
+    // rest of the suite, and innocent pool/session/snapshot activity in
+    // concurrently-running tests evaluates these same points (scope `None`
+    // or pid-unique file stems). An armed UNSCOPED spec would match them —
+    // eating the spec out from under the assertions here, or panicking an
+    // innocent test. Unscoped matching is covered by the pure predicate
+    // test below, off the registry.
+
+    #[test]
+    fn specs_fire_once_with_scope_and_trigger_matching() {
+        let _guard = test_lock();
+        install(
+            parse_faults(
+                "snapshot_decode/zz-ut-a:err,job/zz-ut-j:panic@turn=5,\
+                 pool_job/zz-ut-p:panic@2",
+            )
+            .unwrap(),
+        );
+        assert_eq!(armed_specs(), 3);
+
+        // Scope mismatch never fires; match fires exactly once.
+        assert_eq!(fire(FaultPoint::SnapshotDecode, Some("zz-ut-b"), None), None);
+        assert_eq!(
+            fire(FaultPoint::SnapshotDecode, Some("zz-ut-a"), None),
+            Some(FaultAction::Error)
+        );
+        assert_eq!(fire(FaultPoint::SnapshotDecode, Some("zz-ut-a"), None), None, "one-shot");
+
+        // Turn trigger: ≥, so a strided scheduler that skips the exact
+        // turn still fires.
+        assert_eq!(fire(FaultPoint::SessionStep, Some("zz-ut-j"), Some(4)), None);
+        assert_eq!(
+            fire(FaultPoint::SessionStep, Some("zz-ut-j"), Some(6)),
+            Some(FaultAction::Panic)
+        );
+        assert_eq!(fire(FaultPoint::SessionStep, Some("zz-ut-j"), Some(9)), None, "one-shot");
+
+        // Hit trigger: fires on the 2nd evaluation.
+        assert_eq!(fire(FaultPoint::PoolJob, Some("zz-ut-p"), None), None);
+        assert_eq!(fire(FaultPoint::PoolJob, Some("zz-ut-p"), None), Some(FaultAction::Panic));
+        assert_eq!(armed_specs(), 0, "every spec retired");
+        // With everything spent, the fast path is re-disarmed.
+        assert_eq!(fire(FaultPoint::PoolJob, Some("zz-ut-p"), None), None);
+    }
+
+    #[test]
+    fn unscoped_specs_match_every_scope() {
+        // Pure predicate test, deliberately NOT installed: see the module
+        // comment above — an armed unscoped spec would leak into other
+        // tests' pool/session/snapshot activity.
+        let unscoped = FaultSpec {
+            point: FaultPoint::SessionStep,
+            scope: None,
+            action: FaultAction::Panic,
+            trigger: FaultTrigger::Hit(1),
+        };
+        assert!(unscoped.matches(FaultPoint::SessionStep, None));
+        assert!(unscoped.matches(FaultPoint::SessionStep, Some("any-job")));
+        assert!(!unscoped.matches(FaultPoint::PoolJob, None), "wrong point never matches");
+        let scoped = FaultSpec { scope: Some("a".to_string()), ..unscoped };
+        assert!(scoped.matches(FaultPoint::SessionStep, Some("a")));
+        assert!(!scoped.matches(FaultPoint::SessionStep, Some("b")));
+        assert!(!scoped.matches(FaultPoint::SessionStep, None), "scoped needs a scope");
+    }
+
+    #[test]
+    fn repeated_specs_fire_on_successive_evaluations() {
+        let _guard = test_lock();
+        install(parse_faults("job/zz-ut-r:panic@turn=3,job/zz-ut-r:panic@turn=3").unwrap());
+        assert_eq!(
+            fire(FaultPoint::SessionStep, Some("zz-ut-r"), Some(3)),
+            Some(FaultAction::Panic)
+        );
+        assert_eq!(
+            fire(FaultPoint::SessionStep, Some("zz-ut-r"), Some(3)),
+            Some(FaultAction::Panic)
+        );
+        assert_eq!(fire(FaultPoint::SessionStep, Some("zz-ut-r"), Some(3)), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "injected fault: session_step")]
+    fn maybe_panic_panics_with_identifiable_payload() {
+        let _guard = test_lock();
+        install(parse_faults("session_step/zz-ut-mp:panic").unwrap());
+        maybe_panic(FaultPoint::SessionStep, Some("zz-ut-mp"), Some(0));
+    }
+
+    #[test]
+    fn clear_disarms_everything() {
+        let _guard = test_lock();
+        install(parse_faults("job/zz-ut-c:panic").unwrap());
+        clear();
+        assert_eq!(armed_specs(), 0);
+        assert_eq!(fire(FaultPoint::SessionStep, Some("zz-ut-c"), Some(0)), None);
+    }
+}

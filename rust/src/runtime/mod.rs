@@ -9,6 +9,7 @@
 //! and winners out. Python never runs here.
 
 pub mod bytes;
+pub mod fault;
 mod fw;
 mod json;
 mod manifest;

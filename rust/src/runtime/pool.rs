@@ -63,6 +63,11 @@ struct Shared {
     /// after the barrier (scoped-thread semantics — a worker panic must
     /// crash the caller, not deadlock it).
     panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+    /// Diagnostic identity: names this pool's workers at the `pool_job`
+    /// fault point (see [`crate::runtime::fault`]), so a fault spec can
+    /// target one pool instead of every pool in the process. Never read on
+    /// the job hot path beyond the fault-point evaluation.
+    label: Option<String>,
 }
 
 /// Persistent worker pool (see module docs). Dropping joins the workers.
@@ -78,6 +83,17 @@ pub struct WorkerPool {
 impl WorkerPool {
     /// Spawn `workers` parked threads (≥ 1).
     pub fn new(workers: usize) -> Self {
+        Self::build(workers, None)
+    }
+
+    /// Like [`Self::new`], with a diagnostic label that scopes this pool's
+    /// workers at the `pool_job` fault point ([`crate::runtime::fault`]) —
+    /// a `pool_job/<label>:…` spec then fires only on this pool's jobs.
+    pub fn with_label(workers: usize, label: impl Into<String>) -> Self {
+        Self::build(workers, Some(label.into()))
+    }
+
+    fn build(workers: usize, label: Option<String>) -> Self {
         let workers = workers.max(1);
         let shared = Arc::new(Shared {
             size: workers,
@@ -86,6 +102,7 @@ impl WorkerPool {
             done: Mutex::new((0, 0)),
             all_done: Condvar::new(),
             panic: Mutex::new(None),
+            label,
         });
         let handles = (0..workers)
             .map(|index| {
@@ -138,7 +155,12 @@ impl WorkerPool {
         }
         drop(done);
         self.shared.job.lock().unwrap().task = None;
-        let payload = self.shared.panic.lock().unwrap().take();
+        // Poison-tolerant: the payload slot is plain data (a caught panic
+        // payload), so a thread that panicked while holding this lock —
+        // however it managed to — must not escalate one caught job panic
+        // into a pool-wide abort on every later `run`.
+        let payload =
+            self.shared.panic.lock().unwrap_or_else(std::sync::PoisonError::into_inner).take();
         // Release every lock (including the caller gate) before re-raising,
         // so a propagated job panic cannot poison the pool's mutexes.
         drop(_gate);
@@ -220,9 +242,25 @@ fn worker_loop(shared: &Shared, index: usize) {
             continue;
         }
         if let Some(f) = task {
-            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(index)));
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                // Inside the catch so an injected worker panic takes the
+                // exact path a real job panic would: caught here, stashed,
+                // re-raised in the caller after the barrier.
+                crate::runtime::fault::maybe_panic(
+                    crate::runtime::fault::FaultPoint::PoolJob,
+                    shared.label.as_deref(),
+                    None,
+                );
+                f(index)
+            }));
             if let Err(payload) = result {
-                shared.panic.lock().unwrap().get_or_insert(payload);
+                // Poison-tolerant for the same reason as in `run`: stashing
+                // a payload into plain data must never abort the pool.
+                shared
+                    .panic
+                    .lock()
+                    .unwrap_or_else(std::sync::PoisonError::into_inner)
+                    .get_or_insert(payload);
             }
         }
         let mut done = shared.done.lock().unwrap();
@@ -327,6 +365,29 @@ mod tests {
             hits.fetch_add(1, Ordering::SeqCst);
         });
         assert_eq!(hits.into_inner(), 2);
+    }
+
+    #[test]
+    fn injected_pool_job_fault_behaves_like_a_real_job_panic() {
+        use crate::runtime::fault;
+        let _guard = fault::test_lock();
+        // Scoped to THIS pool's label: other tests run unlabeled pools
+        // concurrently, and an unscoped spec would fire on (or be eaten
+        // by) their workers. Fires on the 2nd matching evaluation: exactly
+        // one worker of the first generation panics, the barrier still
+        // completes, the caller sees the payload, and the pool keeps
+        // working afterwards.
+        fault::install(fault::parse_faults("pool_job/zz-ut-pool:panic@2").unwrap());
+        let pool = WorkerPool::with_label(2, "zz-ut-pool");
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(2, &|_| {});
+        }));
+        assert!(caught.is_err(), "injected fault must re-raise in the caller");
+        let hits = AtomicUsize::new(0);
+        pool.run(2, &|_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.into_inner(), 2, "pool must survive the injected panic");
     }
 
     #[test]

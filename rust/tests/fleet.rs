@@ -1,5 +1,5 @@
-//! Fleet integration tests — the PR 5 acceptance points that live at the
-//! subsystem boundary:
+//! Fleet integration tests — the PR 5 determinism acceptance points plus
+//! the PR 7 crash-safety acceptance points, all at the subsystem boundary:
 //!
 //! - **`fleet_determinism`**: a fleet of N jobs multiplexed over ONE shared
 //!   worker pool must produce networks bit-identical to N solo runs of the
@@ -10,15 +10,29 @@
 //! - **checkpointed fleets**: interrupting a fleet mid-flight (checkpoint
 //!   all jobs, drop the fleet, rebuild from the manifest, resume) finishes
 //!   bit-identical to the uninterrupted fleet.
+//! - **torn writes**: a checkpoint write cut at EVERY byte offset leaves a
+//!   fleet that resumes from the retained previous generation, bit for
+//!   bit (`torn_checkpoint_write_recovers_at_every_byte_offset`).
+//! - **poison jobs**: a job panicking at an injected turn is retried,
+//!   quarantined after its budget, and the surviving jobs finish
+//!   bit-identical to a fleet that never contained it — with the report
+//!   and exit code saying partial failure.
 //!
 //! The CI parity matrix re-runs this suite under the `MSGSN_TEST_*` knob
-//! combinations (same contract as `rust/tests/executor_parity.rs`).
+//! combinations, and one matrix cell re-runs it single-threaded under the
+//! `MSGSN_FAULTS` torn-write + job-panic profile (every recovery path is
+//! *transparent* — bit-exact restore/retry means the same assertions must
+//! hold with faults armed).
+
+use std::path::PathBuf;
 
 use msgsn::config::{Algorithm, Driver, RunConfig};
-use msgsn::engine::{make_algorithm, make_findwinners, run_convergence};
-use msgsn::fleet::{Fleet, FleetOptions, JobSpec};
+use msgsn::engine::{make_algorithm, make_findwinners, run_convergence, ConvergenceSession};
+use msgsn::fleet::snapshot::{prev_path, restore_session, snapshot_session, write_durable};
+use msgsn::fleet::{Fleet, FleetOptions, FleetOutcome, JobSpec, JobStatus, RestoreSource};
 use msgsn::mesh::{BenchmarkShape, SurfaceSampler};
 use msgsn::rng::Rng;
+use msgsn::runtime::fault;
 use msgsn::som::Network;
 
 /// Bitwise network equality (same contract as executor_parity's helper).
@@ -83,6 +97,28 @@ fn spec(
     JobSpec::from_config(name, cfg)
 }
 
+/// A deliberately small job for the fault-injection tests: the torn-write
+/// sweep restores a session per byte offset, so snapshot size and session
+/// build cost both matter.
+fn tiny_spec(name: &str, seed: u64) -> JobSpec {
+    let mut cfg = RunConfig::preset(BenchmarkShape::Blob);
+    cfg.driver = Driver::Multi;
+    cfg.algorithm = Algorithm::Soam;
+    cfg.seed = seed;
+    cfg.mesh_resolution = 16;
+    cfg.soam.insertion_threshold = 0.2;
+    cfg.limits.max_signals = 4_000;
+    JobSpec::from_config(name, cfg)
+}
+
+/// Unique per-test checkpoint dir: parallel `cargo test` processes (and
+/// parallel tests within one) must never share on-disk state.
+fn scratch_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("msgsn_it_{}_{}", std::process::id(), name));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
 /// Solo reference: the classic blocking path (`run_convergence` with its
 /// own pool wiring), keeping the algorithm so its network can be compared.
 fn solo_network(spec: &JobSpec) -> (Network, u64, u64) {
@@ -109,7 +145,7 @@ fn fleet_determinism() {
         ];
         let mut fleet = Fleet::new(specs.clone()).unwrap();
         let report = fleet.run(&FleetOptions::default(), |_| {}).unwrap();
-        assert_eq!(report.jobs.len(), 3);
+        assert_eq!(report.rows.len(), 3);
 
         for (k, spec) in specs.iter().enumerate() {
             let (net, signals, discarded) = solo_network(spec);
@@ -118,9 +154,14 @@ fn fleet_determinism() {
                 spec.name,
                 (spec.cfg.update_threads, spec.cfg.find_threads, spec.cfg.regions)
             );
-            assert_eq!(report.jobs[k].1.signals, signals, "{label}");
-            assert_eq!(report.jobs[k].1.discarded, discarded, "{label}");
-            assert_networks_identical(&net, fleet.jobs()[k].session().algo().net(), &label);
+            let row = report.rows[k].report.as_ref().unwrap();
+            assert_eq!(row.signals, signals, "{label}");
+            assert_eq!(row.discarded, discarded, "{label}");
+            assert_networks_identical(
+                &net,
+                fleet.jobs()[k].session().unwrap().algo().net(),
+                &label,
+            );
         }
     }
 }
@@ -142,11 +183,12 @@ fn fleet_pipelined_job_matches_threaded_driver() {
     let (net, signals, discarded) = solo_network(&job);
     let mut fleet = Fleet::new(vec![job]).unwrap();
     let report = fleet.run(&FleetOptions::default(), |_| {}).unwrap();
-    assert_eq!(report.jobs[0].1.signals, signals);
-    assert_eq!(report.jobs[0].1.discarded, discarded);
+    let row = report.rows[0].report.as_ref().unwrap();
+    assert_eq!(row.signals, signals);
+    assert_eq!(row.discarded, discarded);
     assert_networks_identical(
         &net,
-        fleet.jobs()[0].session().algo().net(),
+        fleet.jobs()[0].session().unwrap().algo().net(),
         "fleet pipelined vs threaded solo",
     );
 }
@@ -156,8 +198,7 @@ fn fleet_pipelined_job_matches_threaded_driver() {
 /// fleet.
 #[test]
 fn fleet_checkpoint_resume_matches_uninterrupted() {
-    let dir = std::env::temp_dir().join("msgsn_fleet_resume_test");
-    std::fs::remove_dir_all(&dir).ok();
+    let dir = scratch_dir("fleet_resume");
     let mk_specs = || {
         vec![
             spec("a", BenchmarkShape::Blob, Algorithm::Soam, Driver::Multi, 3, (1, 1, 1)),
@@ -179,6 +220,7 @@ fn fleet_checkpoint_resume_matches_uninterrupted() {
         stride: 4,
         checkpoint_every: 1,
         checkpoint_dir: Some(dir.clone()),
+        ..FleetOptions::default()
     };
     let mut capped_specs = mk_specs();
     for s in &mut capped_specs {
@@ -190,20 +232,250 @@ fn fleet_checkpoint_resume_matches_uninterrupted() {
 
     // Resume under the REAL caps: jobs continue from ~4k signals.
     let mut resumed = Fleet::new(mk_specs()).unwrap();
-    let names = resumed.resume_from(&dir).unwrap();
-    assert_eq!(names.len(), 2);
+    let outcomes = resumed.resume_from(&dir).unwrap();
+    assert_eq!(outcomes.len(), 2);
     let b = resumed.run(&FleetOptions::default(), |_| {}).unwrap();
 
     for k in 0..2 {
         let label = format!("job {k}: resumed fleet vs uninterrupted");
-        assert_eq!(a.jobs[k].1.signals, b.jobs[k].1.signals, "{label}");
-        assert_eq!(a.jobs[k].1.discarded, b.jobs[k].1.discarded, "{label}");
-        assert_eq!(a.jobs[k].1.qe.to_bits(), b.jobs[k].1.qe.to_bits(), "{label}");
+        let (ra, rb) =
+            (a.rows[k].report.as_ref().unwrap(), b.rows[k].report.as_ref().unwrap());
+        assert_eq!(ra.signals, rb.signals, "{label}");
+        assert_eq!(ra.discarded, rb.discarded, "{label}");
+        assert_eq!(ra.qe.to_bits(), rb.qe.to_bits(), "{label}");
         assert_networks_identical(
-            fleet.jobs()[k].session().algo().net(),
-            resumed.jobs()[k].session().algo().net(),
+            fleet.jobs()[k].session().unwrap().algo().net(),
+            resumed.jobs()[k].session().unwrap().algo().net(),
             &label,
         );
     }
     std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Acceptance (crash-safety, part a): tear the checkpoint write at EVERY
+/// byte offset — the fleet must resume from the retained previous
+/// generation, restoring its exact bytes, and promote it so the next
+/// rotation cannot clobber the only good state. At sampled offsets the
+/// recovered fleet additionally runs to completion and must be
+/// bit-identical to a clean resume of the same generation.
+#[test]
+fn torn_checkpoint_write_recovers_at_every_byte_offset() {
+    let _guard = fault::test_lock();
+    let dir = scratch_dir("torn_every_offset");
+    std::fs::create_dir_all(&dir).unwrap();
+    let spec = tiny_spec("tornjob", 17);
+    let mesh = spec.build_mesh().unwrap();
+
+    // Two checkpoint generations of one session: gen1 is the "last good"
+    // state, gen2 the write that gets torn.
+    let mut session = ConvergenceSession::new(&spec.cfg, &mesh, None).unwrap();
+    session.step(2);
+    let gen1 = snapshot_session(&session);
+    session.step(2);
+    let gen2 = snapshot_session(&session);
+
+    let latest = dir.join("tornjob.msgsnap");
+    let prev = prev_path(&latest);
+    let stem = latest.file_stem().unwrap().to_str().unwrap().to_string();
+    let arm_torn_write = |cut: usize| {
+        fault::install(
+            fault::parse_faults(&format!("checkpoint_write/{stem}:truncate={cut}@1"))
+                .unwrap(),
+        );
+    };
+    let lay_out_torn_generation = |cut: usize| {
+        std::fs::remove_file(&latest).ok();
+        std::fs::remove_file(&prev).ok();
+        write_durable(&latest, &gen1).unwrap();
+        arm_torn_write(cut);
+        write_durable(&latest, &gen2).unwrap();
+        fault::clear();
+        assert_eq!(std::fs::read(&latest).unwrap(), &gen2[..cut], "torn at {cut}");
+        assert_eq!(std::fs::read(&prev).unwrap(), gen1, "prev retained at {cut}");
+    };
+
+    // Every byte offset: the fleet is reused (resume_from rebuilds each
+    // job's session from disk every call), so one sweep iteration costs a
+    // restore, not a full fleet build.
+    let mut fleet = Fleet::new(vec![spec.clone()]).unwrap();
+    for cut in 0..gen2.len() {
+        lay_out_torn_generation(cut);
+        let outcomes = fleet.resume_from(&dir).unwrap();
+        assert_eq!(outcomes.len(), 1, "cut {cut}");
+        assert_eq!(outcomes[0].source, RestoreSource::Previous, "cut {cut}");
+        assert_eq!(
+            snapshot_session(fleet.jobs()[0].session().unwrap()),
+            gen1,
+            "cut {cut}: restored state must be the last good generation, bit for bit"
+        );
+        // Promotion: the good generation now holds the latest name, so a
+        // subsequent rotation cannot shift the torn file over it.
+        assert_eq!(std::fs::read(&latest).unwrap(), gen1, "cut {cut}: promoted");
+        assert!(!prev.exists(), "cut {cut}: prev consumed by promotion");
+    }
+
+    // Sampled offsets: run the recovered fleet to the end — recovery must
+    // be invisible in the final bits.
+    let reference = {
+        let mut s = ConvergenceSession::new(&spec.cfg, &mesh, None).unwrap();
+        restore_session(&mut s, &gen1).unwrap();
+        let r = s.run_to_end();
+        (s, r)
+    };
+    for cut in [0usize, 9, gen2.len() / 2, gen2.len() - 3] {
+        lay_out_torn_generation(cut);
+        let mut recovered = Fleet::new(vec![spec.clone()]).unwrap();
+        recovered.resume_from(&dir).unwrap();
+        let report = recovered.run(&FleetOptions::default(), |_| {}).unwrap();
+        let row = report.rows[0].report.as_ref().unwrap();
+        assert_eq!(row.signals, reference.1.signals, "cut {cut}");
+        assert_eq!(row.qe.to_bits(), reference.1.qe.to_bits(), "cut {cut}");
+        assert_networks_identical(
+            reference.0.algo().net(),
+            recovered.jobs()[0].session().unwrap().algo().net(),
+            &format!("cut {cut}: recovered fleet vs clean resume"),
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Acceptance (crash-safety, part b): a poison job panicking at an
+/// injected turn on every attempt is quarantined after its retry budget,
+/// while the remaining jobs finish bit-identically to a fleet that never
+/// contained it — and the report + exit code say partial failure.
+#[test]
+fn poison_job_is_quarantined_and_isolated() {
+    let _guard = fault::test_lock();
+    let healthy = || {
+        vec![
+            spec("iso-a", BenchmarkShape::Blob, Algorithm::Soam, Driver::Multi, 7, (1, 1, 1)),
+            spec("iso-b", BenchmarkShape::Eight, Algorithm::Gng, Driver::Multi, 9, (1, 1, 8)),
+        ]
+    };
+
+    // Clean reference: the fleet without the poison job.
+    fault::clear();
+    let mut clean = Fleet::new(healthy()).unwrap();
+    let clean_report = clean.run(&FleetOptions::default(), |_| {}).unwrap();
+
+    // Poisoned fleet: the same two jobs plus one that panics at turn ≥ 9
+    // on its first run AND both retries (three spec copies; the default
+    // budget is max_retries = 2).
+    let mut specs = healthy();
+    specs.push(spec("poison", BenchmarkShape::Blob, Algorithm::Gwr, Driver::Multi, 11, (1, 1, 1)));
+    fault::install(
+        fault::parse_faults(
+            "job/poison:panic@turn=9,job/poison:panic@turn=9,job/poison:panic@turn=9",
+        )
+        .unwrap(),
+    );
+    let mut fleet = Fleet::new(specs).unwrap();
+    let mut events = Vec::new();
+    let report = fleet.run(&FleetOptions::default(), |l| events.push(l.to_string())).unwrap();
+
+    let poison = &report.rows[2];
+    assert_eq!(poison.name, "poison");
+    assert_eq!(poison.status, JobStatus::Quarantined);
+    assert_eq!(poison.attempts, 3, "first run + two retries");
+    assert!(poison.error.as_deref().unwrap().contains("injected fault"), "{:?}", poison.error);
+    assert!(poison.report.is_none());
+    assert_eq!(report.outcome(), FleetOutcome::PartialFailure);
+    assert_eq!(report.outcome().exit_code(), 2);
+    assert!(events.iter().any(|l| l.contains("QUARANTINED")), "{events:?}");
+    let rendered = report.to_table().render();
+    assert!(rendered.contains("quarantined"), "{rendered}");
+
+    for k in 0..2 {
+        let label = format!("job {}: poisoned fleet vs clean fleet", report.rows[k].name);
+        assert_eq!(report.rows[k].status, JobStatus::Done, "{label}");
+        let (ra, rb) = (
+            clean_report.rows[k].report.as_ref().unwrap(),
+            report.rows[k].report.as_ref().unwrap(),
+        );
+        assert_eq!(ra.signals, rb.signals, "{label}");
+        assert_eq!(ra.qe.to_bits(), rb.qe.to_bits(), "{label}");
+        assert_networks_identical(
+            clean.jobs()[k].session().unwrap().algo().net(),
+            fleet.jobs()[k].session().unwrap().algo().net(),
+            &label,
+        );
+    }
+}
+
+/// Every job quarantined (here via the per-job `retries: 0` manifest
+/// override — first failure is final) is total failure: exit code 3, and
+/// the report renders placeholder columns instead of garbage.
+#[test]
+fn all_jobs_quarantined_is_total_failure() {
+    let _guard = fault::test_lock();
+    let mut doomed = tiny_spec("doomed", 3);
+    doomed.retries = Some(0);
+    fault::install(fault::parse_faults("job/doomed:panic@turn=2").unwrap());
+    let mut fleet = Fleet::new(vec![doomed]).unwrap();
+    let report = fleet.run(&FleetOptions::default(), |_| {}).unwrap();
+    assert_eq!(report.rows[0].status, JobStatus::Quarantined);
+    assert_eq!(report.rows[0].attempts, 1, "retries: 0 quarantines on the first failure");
+    assert!(report.rows[0].report.is_none());
+    assert_eq!(report.outcome(), FleetOutcome::AllFailed);
+    assert_eq!(report.outcome().exit_code(), 3);
+    let rendered = report.to_table().render();
+    assert!(rendered.contains('-'), "{rendered}");
+}
+
+/// A crash mid-run retries from the latest checkpoint and finishes
+/// bit-identical to a fleet that never crashed — recovery is invisible in
+/// the final state, which is the property that makes the CI fault profile
+/// sound.
+#[test]
+fn retry_restores_from_checkpoint_bit_exactly() {
+    let _guard = fault::test_lock();
+    let dir = scratch_dir("retry_ckpt");
+    let flaky = tiny_spec("flaky", 29);
+
+    // Clean reference run (no faults, no checkpoints).
+    fault::clear();
+    let mut clean = Fleet::new(vec![flaky.clone()]).unwrap();
+    let clean_report = clean.run(&FleetOptions::default(), |_| {}).unwrap();
+
+    // Crash at turn ≥ 8 with checkpoints every 2 turns: the retry restores
+    // the iteration-8 checkpoint and continues.
+    fault::install(fault::parse_faults("job/flaky:panic@turn=8").unwrap());
+    let opts = FleetOptions {
+        stride: 2,
+        checkpoint_every: 2,
+        checkpoint_dir: Some(dir.clone()),
+        ..FleetOptions::default()
+    };
+    let mut fleet = Fleet::new(vec![flaky]).unwrap();
+    let mut events = Vec::new();
+    let report = fleet.run(&opts, |l| events.push(l.to_string())).unwrap();
+    assert_eq!(report.rows[0].status, JobStatus::Done);
+    assert_eq!(report.rows[0].attempts, 1);
+    assert_eq!(report.outcome().exit_code(), 0, "a recovered job is a success");
+    assert!(
+        events.iter().any(|l| l.contains("retrying from latest checkpoint")),
+        "{events:?}"
+    );
+    let (ra, rb) = (
+        clean_report.rows[0].report.as_ref().unwrap(),
+        report.rows[0].report.as_ref().unwrap(),
+    );
+    assert_eq!(ra.signals, rb.signals);
+    assert_eq!(ra.qe.to_bits(), rb.qe.to_bits());
+    assert_networks_identical(
+        clean.jobs()[0].session().unwrap().algo().net(),
+        fleet.jobs()[0].session().unwrap().algo().net(),
+        "retried fleet vs never-crashed fleet",
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The CI fault-matrix profile must parse — a typo in the workflow's
+/// `MSGSN_FAULTS` value would otherwise panic at the first fault-point
+/// evaluation of every test in the cell.
+#[test]
+fn ci_fault_profile_parses() {
+    let specs =
+        fault::parse_faults("checkpoint_write:truncate=24@2,job:panic@turn=48").unwrap();
+    assert_eq!(specs.len(), 2);
 }
