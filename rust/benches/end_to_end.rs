@@ -147,12 +147,73 @@ fn main() -> anyhow::Result<()> {
         ));
     }
 
+    // Dist: the same two-job shape driven through the PR 8
+    // coordinator/worker split over the in-process channel transport —
+    // measures the protocol + snapshot-shipping overhead on top of the
+    // fleet-concurrent row. The row carries a "transport" field so
+    // scripts/compare_bench.py keys channel and tcp numbers separately
+    // (never a cross-transport diff).
+    println!("\ndist end-to-end (2 jobs, channel transport, smoke scale):");
+    let mut dist_rows = Vec::new();
+    {
+        let jobs: Vec<String> = [BenchmarkShape::Blob, BenchmarkShape::Eight]
+            .into_iter()
+            .enumerate()
+            .map(|(k, shape)| {
+                let cfg = Scale::SMOKE.configure(shape);
+                format!(
+                    "{{\"name\": \"{name}-{k}\", \"mesh\": \"{name}\", \
+                     \"driver\": \"parallel\", \"seed\": {seed}, \
+                     \"config\": {{\"mesh_resolution\": {res}, \"max_signals\": {cap}, \
+                     \"update_threads\": 0}}}}",
+                    name = shape.name(),
+                    seed = 42 + k as u64,
+                    res = cfg.mesh_resolution,
+                    cap = cfg.limits.max_signals,
+                )
+            })
+            .collect();
+        let manifest = format!("{{\"version\": 1, \"jobs\": [{}]}}", jobs.join(","));
+        let payloads = msgsn::fleet::manifest_job_payloads(&manifest)?;
+        let t0 = std::time::Instant::now();
+        let mut coordinator =
+            msgsn::dist::Coordinator::new(payloads, msgsn::dist::DistOptions::default());
+        let mut handles = Vec::new();
+        for name in ["bench-dist-w0", "bench-dist-w1"] {
+            let (coord_end, mut worker_end) = msgsn::dist::channel_transport_pair(name);
+            coordinator.add_worker(name, Box::new(coord_end));
+            let opts = msgsn::dist::WorkerOptions {
+                name: name.to_string(),
+                ..msgsn::dist::WorkerOptions::default()
+            };
+            handles.push(std::thread::spawn(move || {
+                let _ = msgsn::dist::run_worker(&mut worker_end, &opts, |_| {});
+            }));
+        }
+        let report = coordinator.run(|_| {});
+        let total = t0.elapsed().as_secs_f64();
+        for h in handles {
+            let _ = h.join();
+        }
+        let signals: u64 = report.rows.iter().map(|r| r.signals).sum();
+        println!(
+            "  {:18} {total:>8.3}s  ({signals} signals total, outcome {:?})",
+            "dist-fleet",
+            report.outcome(),
+        );
+        dist_rows.push(format!(
+            "    {{\"row\": \"dist-fleet\", \"jobs\": 2, \"transport\": \"channel\", \
+             \"total_s\": {total:.6}, \"signals_total\": {signals}}}"
+        ));
+    }
+
     let csv = grid.to_csv();
     let json = format!(
         "{{\n  \"bench\": \"end_to_end\",\n  \"worker_pool\": [\n{}\n  ],\n  \
-         \"fleet\": [\n{}\n  ],\n  \"grid_csv\": {:?}\n}}\n",
+         \"fleet\": [\n{}\n  ],\n  \"dist\": [\n{}\n  ],\n  \"grid_csv\": {:?}\n}}\n",
         pool_rows.join(",\n"),
         fleet_rows.join(",\n"),
+        dist_rows.join(",\n"),
         csv,
     );
     if let Err(e) = std::fs::write("BENCH_end_to_end.json", &json) {

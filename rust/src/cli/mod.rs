@@ -4,6 +4,8 @@
 //! ```text
 //! msgsn run        --mesh eight --driver multi [--seed N] [--set k=v]…
 //! msgsn fleet      --jobs jobs.json [--checkpoint-every N] [--resume]
+//! msgsn coordinator --jobs jobs.json --listen 127.0.0.1:7070 --workers 2
+//! msgsn worker     --connect 127.0.0.1:7070 --name w1
 //! msgsn reproduce  [--table N]… [--figure N]… [--all] [--scale quick|paper]
 //! msgsn mesh       --shape hand [--resolution N] [--out hand.obj]
 //! msgsn artifacts  [--dir artifacts] [--warmup-n 4096]
@@ -32,6 +34,12 @@ pub enum Command {
     Artifacts(Parsed),
     /// Ablation studies of the multi-signal design choices.
     Ablate(Parsed),
+    /// Distributed fleet: the coordinator process (owns the manifest,
+    /// routes jobs to workers, migrates them on worker death).
+    Coordinator(Parsed),
+    /// Distributed fleet: one worker process (runs a fleet driven by the
+    /// coordinator's assignments).
+    Worker(Parsed),
     Help,
 }
 
@@ -94,6 +102,31 @@ USAGE:
       --quiet                    suppress progress lines
       exit code: 0 all jobs succeeded, 2 some quarantined, 3 all
       quarantined (1 = usage/config errors)
+
+  msgsn coordinator [OPTIONS]    distributed fleet: the coordinator process
+      --jobs <jobs.json>         jobs manifest (required; same schema as
+                                 msgsn fleet)
+      --listen <host:port>       accept worker TCP connections here
+                                                               [127.0.0.1:7070]
+      --workers <N>              wait for N workers before scheduling  [1]
+      --heartbeat-timeout <S>    evict a worker silent for S seconds
+                                 (fractional ok)               [5]
+      --max-retries <N>          cross-worker crash retries before a job
+                                 is quarantined                [2]
+      --quiet                    suppress progress lines
+      exit code: 0 all jobs done, 2 some quarantined, 3 all quarantined,
+      4 every worker died/hung with jobs outstanding (1 = usage/config)
+
+  msgsn worker [OPTIONS]         distributed fleet: one worker process
+      --connect <host:port>      coordinator address            [127.0.0.1:7070]
+      --name <id>                worker identity (heartbeats + fault
+                                 scope worker/<id>:...)         [w<pid>]
+      --stride <N>               batches per job per round      [1]
+      --checkpoint-rounds <N>    ship a migration snapshot of every
+                                 running job each N rounds (0 = finals
+                                 only)                          [8]
+      --quiet                    suppress progress lines
+      exits when the coordinator sends shutdown (0) or the link dies (1)
 
   msgsn reproduce [OPTIONS]      regenerate the paper's evaluation
       --table <1|2|3|4>          one table (repeatable)
@@ -171,6 +204,16 @@ pub fn parse(args: &[String]) -> Result<Command, ArgError> {
             &["which", "max-signals", "seed"],
             &[],
         )?)),
+        "coordinator" => Ok(Command::Coordinator(parser::parse_flags(
+            rest,
+            &["jobs", "listen", "workers", "heartbeat-timeout", "max-retries"],
+            &["quiet"],
+        )?)),
+        "worker" => Ok(Command::Worker(parser::parse_flags(
+            rest,
+            &["connect", "name", "stride", "checkpoint-rounds"],
+            &["quiet"],
+        )?)),
         "help" | "--help" | "-h" => Ok(Command::Help),
         other => Err(ArgError::UnknownCommand(other.to_string())),
     }
@@ -185,6 +228,8 @@ impl fmt::Display for Command {
             Command::Mesh(_) => write!(f, "mesh"),
             Command::Artifacts(_) => write!(f, "artifacts"),
             Command::Ablate(_) => write!(f, "ablate"),
+            Command::Coordinator(_) => write!(f, "coordinator"),
+            Command::Worker(_) => write!(f, "worker"),
             Command::Help => write!(f, "help"),
         }
     }
@@ -243,6 +288,35 @@ mod tests {
             p.get("faults"),
             Some("checkpoint_write:truncate@2,job:panic@turn=7")
         );
+    }
+
+    #[test]
+    fn parses_coordinator_command() {
+        let cmd = parse(&argv(
+            "coordinator --jobs jobs.json --listen 127.0.0.1:7171 --workers 2 \
+             --heartbeat-timeout 0.5 --max-retries 1",
+        ))
+        .unwrap();
+        let Command::Coordinator(p) = cmd else { panic!("not coordinator") };
+        assert_eq!(p.get("jobs"), Some("jobs.json"));
+        assert_eq!(p.get("listen"), Some("127.0.0.1:7171"));
+        assert_eq!(p.get("workers"), Some("2"));
+        assert_eq!(p.get("heartbeat-timeout"), Some("0.5"));
+        assert_eq!(p.get("max-retries"), Some("1"));
+    }
+
+    #[test]
+    fn parses_worker_command() {
+        let cmd = parse(&argv(
+            "worker --connect 127.0.0.1:7171 --name w1 --stride 2 --checkpoint-rounds 4 --quiet",
+        ))
+        .unwrap();
+        let Command::Worker(p) = cmd else { panic!("not worker") };
+        assert_eq!(p.get("connect"), Some("127.0.0.1:7171"));
+        assert_eq!(p.get("name"), Some("w1"));
+        assert_eq!(p.get("stride"), Some("2"));
+        assert_eq!(p.get("checkpoint-rounds"), Some("4"));
+        assert!(p.flag("quiet"));
     }
 
     #[test]

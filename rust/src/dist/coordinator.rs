@@ -1,0 +1,646 @@
+//! The dist coordinator: owns the jobs manifest, routes each job to one
+//! of N workers, and keeps the manifest converging through worker death,
+//! hangs, and lossy links.
+//!
+//! ## Failure model
+//!
+//! | failure                  | detector                          | recovery |
+//! |--------------------------|-----------------------------------|----------|
+//! | worker process dies      | transport `Closed` on next poll   | evict; migrate its jobs from the last good checkpoint |
+//! | worker hangs             | missed heartbeats (`heartbeat_timeout`) | evict; migrate (partition-safe: the evicted link is never polled again) |
+//! | link corrupts a frame    | per-frame CRC → `Frame` error     | evict (the link is untrustworthy) |
+//! | message loss / dup       | seq + ack + retransmission        | Assigns resent until acked; finals resent by the worker; dups re-acked |
+//! | job crashes on a worker  | `Failed` message                  | retry budget + exponential backoff, placed on a worker it has not failed on |
+//! | job fails everywhere     | retry budget exhausted            | quarantined — reported, never silently dropped |
+//! | every worker lost        | alive count hits 0 with jobs open | [`DistOutcome::WorkersLost`], exit code 4 |
+//!
+//! **Partition safety.** Eviction is one-way: once a worker misses its
+//! heartbeat window (or its link errors), the coordinator stops polling
+//! that link forever. A hung-but-alive worker on the far side of a
+//! partition can keep computing and sending — nothing it says is read, so
+//! its stale results can never race the migrated job's. The only thing
+//! ever sent on an evicted link is the final best-effort `Shutdown`.
+//!
+//! **Migration is bit-exact.** The unit of migration is the
+//! `fleet::snapshot` v2 blob — the same CRC-trailed format the fleet
+//! proves restores bit-identically. The coordinator CRC-checks every
+//! received generation ([`crate::fleet::snapshot::verify_bytes`]) before
+//! accepting it as "last good", and a monotone `(owner, turn)` watermark
+//! keeps a duplicated *older* snapshot from regressing a newer one.
+//! A job migrated at an arbitrary round therefore finishes bit-identical
+//! to one that never moved (`rust/tests/dist.rs`).
+
+use std::time::{Duration, Instant};
+
+use crate::fleet::snapshot;
+use crate::metrics::Table;
+
+use super::transport::{Transport, TransportError};
+use super::wire::{Message, PROTOCOL_VERSION};
+
+/// Coordinator knobs.
+#[derive(Clone, Debug)]
+pub struct DistOptions {
+    /// Evict a worker that has not been heard from for this long. Must
+    /// exceed the worker's worst-case round time (it heartbeats once per
+    /// round, *between* job steps).
+    pub heartbeat_timeout: Duration,
+    /// How long each scheduler round waits on each worker's link for the
+    /// first message (subsequent drains never block).
+    pub poll: Duration,
+    /// Crash-retries a job gets (across workers) before quarantine —
+    /// same budget discipline as [`crate::fleet::FleetOptions::max_retries`].
+    pub max_retries: u32,
+    /// Base of the turn-based exponential backoff after a `Failed`
+    /// report: the k-th failure delays reassignment by
+    /// `backoff_rounds · 2^(k−1)` coordinator rounds.
+    pub backoff_rounds: u64,
+    /// Resend an unacked Assign (same seq) every this many rounds.
+    pub assign_resend_rounds: u64,
+}
+
+impl Default for DistOptions {
+    fn default() -> Self {
+        Self {
+            heartbeat_timeout: Duration::from_secs(5),
+            poll: Duration::from_millis(1),
+            max_retries: 2,
+            backoff_rounds: 2,
+            assign_resend_rounds: 50,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum JobPhase {
+    /// Waiting for (re)assignment — fresh, migrated, or backing off.
+    Pending,
+    /// Routed to a worker (acked or in flight).
+    Assigned,
+    /// Final snapshot received and verified.
+    Done,
+    /// Retry budget exhausted.
+    Quarantined,
+}
+
+struct JobState {
+    name: String,
+    /// Single-job manifest text ([`crate::fleet::manifest_job_payloads`]).
+    payload: String,
+    phase: JobPhase,
+    owner: Option<usize>,
+    owner_name: Option<String>,
+    assign_seq: u64,
+    acked: bool,
+    assigned_round: u64,
+    /// Crash reports charged against the retry budget (migrations are free).
+    attempts: u32,
+    retry_at_round: u64,
+    /// Workers this job crashed on — avoided on reassignment while any
+    /// other candidate is alive.
+    failed_on: Vec<String>,
+    last_error: Option<String>,
+    /// Last good checkpoint generation + its `(owner, turn)` watermark.
+    ckpt: Option<Vec<u8>>,
+    ckpt_from: Option<String>,
+    ckpt_turn: u64,
+    /// The verified final snapshot — the job's result.
+    final_bytes: Option<Vec<u8>>,
+    signals: u64,
+    units: u64,
+    /// Times the job changed workers because its owner was evicted.
+    migrations: u32,
+}
+
+struct WorkerSlot {
+    name: String,
+    link: Box<dyn Transport>,
+    alive: bool,
+    /// Hello received (jobs are only routed to introduced workers).
+    hello: bool,
+    last_heard: Instant,
+}
+
+/// Final state of one job in the [`DistReport`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DistJobStatus {
+    Done,
+    Quarantined,
+    /// Still open when the coordinator ran out of workers.
+    Unfinished,
+}
+
+impl DistJobStatus {
+    pub fn name(self) -> &'static str {
+        match self {
+            DistJobStatus::Done => "done",
+            DistJobStatus::Quarantined => "quarantined",
+            DistJobStatus::Unfinished => "unfinished",
+        }
+    }
+}
+
+/// One job's outcome row.
+#[derive(Clone, Debug)]
+pub struct DistRow {
+    pub name: String,
+    pub status: DistJobStatus,
+    /// Worker that produced the final result (or held the job last).
+    pub worker: Option<String>,
+    pub attempts: u32,
+    pub migrations: u32,
+    pub signals: u64,
+    pub units: u64,
+    pub error: Option<String>,
+}
+
+/// Process-level outcome, for the `msgsn coordinator` exit code.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DistOutcome {
+    AllDone,
+    /// Some — not all — jobs quarantined; the rest are done.
+    PartialFailure,
+    AllFailed,
+    /// Every worker died/hung with jobs still open.
+    WorkersLost,
+}
+
+impl DistOutcome {
+    /// Exit code: 0 success, 2 partial, 3 all failed — matching
+    /// [`crate::fleet::FleetOutcome::exit_code`] — plus 4 for the
+    /// coordinator-specific "no workers left" state.
+    pub fn exit_code(self) -> u8 {
+        match self {
+            DistOutcome::AllDone => 0,
+            DistOutcome::PartialFailure => 2,
+            DistOutcome::AllFailed => 3,
+            DistOutcome::WorkersLost => 4,
+        }
+    }
+}
+
+/// Aggregated result of a coordinator run, one row per manifest job.
+#[derive(Clone, Debug)]
+pub struct DistReport {
+    pub rows: Vec<DistRow>,
+}
+
+impl DistReport {
+    pub fn outcome(&self) -> DistOutcome {
+        if self.rows.iter().any(|r| r.status == DistJobStatus::Unfinished) {
+            return DistOutcome::WorkersLost;
+        }
+        let quarantined =
+            self.rows.iter().filter(|r| r.status == DistJobStatus::Quarantined).count();
+        if quarantined == 0 {
+            DistOutcome::AllDone
+        } else if quarantined == self.rows.len() {
+            DistOutcome::AllFailed
+        } else {
+            DistOutcome::PartialFailure
+        }
+    }
+
+    /// One summary row per job.
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(&[
+            "job",
+            "status",
+            "worker",
+            "attempts",
+            "migrations",
+            "signals",
+            "units",
+        ]);
+        for r in &self.rows {
+            t.row(vec![
+                r.name.clone(),
+                r.status.name().to_string(),
+                r.worker.clone().unwrap_or_else(|| "-".to_string()),
+                r.attempts.to_string(),
+                r.migrations.to_string(),
+                r.signals.to_string(),
+                r.units.to_string(),
+            ]);
+        }
+        t
+    }
+}
+
+/// The coordinator (see module docs).
+pub struct Coordinator {
+    opts: DistOptions,
+    workers: Vec<WorkerSlot>,
+    jobs: Vec<JobState>,
+    next_seq: u64,
+}
+
+impl Coordinator {
+    /// `payloads` is `(job name, single-job manifest text)` per job —
+    /// exactly what [`crate::fleet::manifest_job_payloads`] produces.
+    pub fn new(payloads: Vec<(String, String)>, opts: DistOptions) -> Self {
+        let jobs = payloads
+            .into_iter()
+            .map(|(name, payload)| JobState {
+                name,
+                payload,
+                phase: JobPhase::Pending,
+                owner: None,
+                owner_name: None,
+                assign_seq: 0,
+                acked: false,
+                assigned_round: 0,
+                attempts: 0,
+                retry_at_round: 0,
+                failed_on: Vec::new(),
+                last_error: None,
+                ckpt: None,
+                ckpt_from: None,
+                ckpt_turn: 0,
+                final_bytes: None,
+                signals: 0,
+                units: 0,
+                migrations: 0,
+            })
+            .collect();
+        Self { opts, workers: Vec::new(), jobs, next_seq: 1 }
+    }
+
+    /// Register a connected worker link. `name` is diagnostic (the wire
+    /// identity arrives in the worker's own Hello); the *link*'s peer
+    /// label is what fault scopes match.
+    pub fn add_worker(&mut self, name: &str, link: Box<dyn Transport>) {
+        self.workers.push(WorkerSlot {
+            name: name.to_string(),
+            link,
+            alive: true,
+            hello: false,
+            last_heard: Instant::now(),
+        });
+    }
+
+    /// The verified final snapshot for a finished job — restore it into a
+    /// fresh session to get the network (`rust/tests/dist.rs` does this
+    /// to prove migration bit-exactness).
+    pub fn final_snapshot(&self, name: &str) -> Option<&[u8]> {
+        self.jobs
+            .iter()
+            .find(|j| j.name == name)
+            .and_then(|j| j.final_bytes.as_deref())
+    }
+
+    /// Drive the manifest to completion (or to [`DistOutcome::WorkersLost`]).
+    pub fn run(&mut self, mut progress: impl FnMut(&str)) -> DistReport {
+        let mut round: u64 = 0;
+        loop {
+            // 1. Pump every *alive* worker's link (evicted links are
+            // never polled again — see "Partition safety").
+            for w in 0..self.workers.len() {
+                if !self.workers[w].alive {
+                    continue;
+                }
+                self.workers[w].link.set_turn(round);
+                let mut first = true;
+                for _ in 0..256 {
+                    let timeout = if first { self.opts.poll } else { Duration::ZERO };
+                    first = false;
+                    match self.workers[w].link.recv(timeout) {
+                        Ok(Some(msg)) => {
+                            self.workers[w].last_heard = Instant::now();
+                            self.handle(w, msg, round, &mut progress);
+                            if !self.workers[w].alive {
+                                break;
+                            }
+                        }
+                        Ok(None) => break,
+                        // Injected err: treat as a lost message.
+                        Err(TransportError::Injected) => continue,
+                        Err(e) => {
+                            self.evict(w, &e.to_string(), round, &mut progress);
+                            break;
+                        }
+                    }
+                }
+            }
+
+            // 2. Heartbeat timeouts: the only detector for a worker that
+            // is hung rather than dead.
+            for w in 0..self.workers.len() {
+                if self.workers[w].alive
+                    && self.workers[w].last_heard.elapsed() > self.opts.heartbeat_timeout
+                {
+                    self.evict(w, "heartbeat timeout", round, &mut progress);
+                }
+            }
+
+            // 3. Termination.
+            let outstanding = self
+                .jobs
+                .iter()
+                .any(|j| matches!(j.phase, JobPhase::Pending | JobPhase::Assigned));
+            if !outstanding {
+                self.broadcast_shutdown();
+                return self.report();
+            }
+            if self.workers.iter().all(|w| !w.alive) {
+                progress("all workers lost with jobs outstanding");
+                self.broadcast_shutdown();
+                return self.report();
+            }
+
+            // 4. (Re)assign pending jobs whose backoff has elapsed.
+            for j in 0..self.jobs.len() {
+                if self.jobs[j].phase == JobPhase::Pending && round >= self.jobs[j].retry_at_round {
+                    self.assign(j, round, &mut progress);
+                }
+            }
+
+            // 5. Retransmit unacked Assigns (same seq — the worker
+            // re-acks duplicates).
+            for j in 0..self.jobs.len() {
+                let job = &self.jobs[j];
+                if job.phase == JobPhase::Assigned
+                    && !job.acked
+                    && round.saturating_sub(job.assigned_round) >= self.opts.assign_resend_rounds
+                {
+                    self.resend_assign(j, round, &mut progress);
+                }
+            }
+
+            round += 1;
+        }
+    }
+
+    fn handle(&mut self, w: usize, msg: Message, round: u64, progress: &mut impl FnMut(&str)) {
+        match msg {
+            Message::Hello { worker, protocol } => {
+                if protocol != PROTOCOL_VERSION {
+                    self.evict(
+                        w,
+                        &format!("protocol {protocol} != {PROTOCOL_VERSION}"),
+                        round,
+                        progress,
+                    );
+                    return;
+                }
+                if !self.workers[w].hello {
+                    self.workers[w].hello = true;
+                    progress(&format!("worker {worker} connected (protocol {protocol})"));
+                }
+            }
+            Message::Heartbeat { .. } => {} // receipt already reset the clock
+            Message::Ack { seq } => {
+                if let Some(job) = self
+                    .jobs
+                    .iter_mut()
+                    .find(|j| j.owner == Some(w) && j.assign_seq == seq)
+                {
+                    job.acked = true;
+                }
+            }
+            Message::Progress { job, signals, units, .. } => {
+                if let Some(j) = self.jobs.iter_mut().find(|j| j.name == job && j.owner == Some(w))
+                {
+                    j.signals = signals;
+                    j.units = units;
+                }
+            }
+            Message::CheckpointBytes { seq, job, turn, is_final, bytes } => {
+                self.accept_checkpoint(w, seq, &job, turn, is_final, bytes, progress);
+            }
+            Message::Failed { job, error } => self.job_failed(w, &job, error, round, progress),
+            // Assign/Shutdown never legitimately flow worker → coordinator.
+            Message::Assign { .. } | Message::Shutdown => {}
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn accept_checkpoint(
+        &mut self,
+        w: usize,
+        seq: u64,
+        job: &str,
+        turn: u64,
+        is_final: bool,
+        bytes: Vec<u8>,
+        progress: &mut impl FnMut(&str),
+    ) {
+        let worker_name = self.workers[w].name.clone();
+        let Some(state) = self.jobs.iter_mut().find(|j| j.name == job) else {
+            return;
+        };
+        if is_final && state.phase == JobPhase::Done {
+            // Duplicate final (our Ack was lost): re-ack so the worker
+            // stops retransmitting. The stored result is untouched.
+            self.ack_to(w, seq);
+            return;
+        }
+        if state.owner != Some(w) {
+            // Stale sender: the job moved on. Only reachable via message
+            // reordering — an evicted ex-owner is never polled.
+            return;
+        }
+        // A snapshot that would fail restore must never become "last
+        // good": CRC-verify on receipt, at the coordinator, not at the
+        // eventual migration target.
+        if let Err(e) = snapshot::verify_bytes(&bytes) {
+            progress(&format!(
+                "job {job}: discarding corrupt checkpoint from {worker_name}: {e}"
+            ));
+            return;
+        }
+        if is_final {
+            state.final_bytes = Some(bytes);
+            state.phase = JobPhase::Done;
+            state.owner_name = Some(worker_name.clone());
+            progress(&format!("job {job} done on worker {worker_name}"));
+            self.ack_to(w, seq);
+        } else {
+            // Monotone watermark per owner: a duplicated older frame
+            // must not regress a newer generation. A fresh owner (after
+            // reassignment) always starts a new watermark.
+            let fresh_owner = state.ckpt_from.as_deref() != Some(worker_name.as_str());
+            if fresh_owner || turn >= state.ckpt_turn {
+                state.ckpt = Some(bytes);
+                state.ckpt_from = Some(worker_name);
+                state.ckpt_turn = turn;
+            }
+        }
+    }
+
+    fn job_failed(
+        &mut self,
+        w: usize,
+        job: &str,
+        error: String,
+        round: u64,
+        progress: &mut impl FnMut(&str),
+    ) {
+        let worker_name = self.workers[w].name.clone();
+        let budget = self.opts.max_retries;
+        let backoff_base = self.opts.backoff_rounds.max(1);
+        let Some(state) = self.jobs.iter_mut().find(|j| j.name == job && j.owner == Some(w))
+        else {
+            return;
+        };
+        state.attempts += 1;
+        state.last_error = Some(error.clone());
+        state.owner = None;
+        state.owner_name = Some(worker_name.clone());
+        if !state.failed_on.contains(&worker_name) {
+            state.failed_on.push(worker_name.clone());
+        }
+        if state.attempts > budget {
+            state.phase = JobPhase::Quarantined;
+            progress(&format!(
+                "job {job} QUARANTINED after {} attempts (last on {worker_name}): {error}",
+                state.attempts
+            ));
+        } else {
+            state.phase = JobPhase::Pending;
+            let backoff =
+                backoff_base.saturating_mul(1u64 << u64::from((state.attempts - 1).min(16)));
+            state.retry_at_round = round.saturating_add(backoff);
+            progress(&format!(
+                "job {job} failed on {worker_name} (attempt {}/{}): {error} — retry in {backoff} rounds",
+                state.attempts,
+                budget + 1
+            ));
+        }
+    }
+
+    /// Evict a worker and put its open jobs back in the pending pool for
+    /// immediate migration. Eviction consumes no retry attempts — worker
+    /// death is not the job's fault.
+    fn evict(&mut self, w: usize, why: &str, round: u64, progress: &mut impl FnMut(&str)) {
+        self.workers[w].alive = false;
+        progress(&format!("worker {} evicted: {why}", self.workers[w].name));
+        for job in &mut self.jobs {
+            if job.owner == Some(w) && job.phase == JobPhase::Assigned {
+                job.owner = None;
+                job.phase = JobPhase::Pending;
+                job.retry_at_round = round;
+                job.migrations += 1;
+                progress(&format!(
+                    "job {} migrating ({})",
+                    job.name,
+                    match &job.ckpt {
+                        Some(_) => format!("from checkpoint @ turn {}", job.ckpt_turn),
+                        None => "from scratch".to_string(),
+                    }
+                ));
+            }
+        }
+    }
+
+    fn assign(&mut self, j: usize, round: u64, progress: &mut impl FnMut(&str)) {
+        let candidates: Vec<usize> = (0..self.workers.len())
+            .filter(|&w| self.workers[w].alive && self.workers[w].hello)
+            .collect();
+        if candidates.is_empty() {
+            return; // wait for a Hello (or for WorkersLost to trigger)
+        }
+        // Placement: pin by manifest index for determinism, avoid workers
+        // the job already crashed on while any alternative exists.
+        let not_failed: Vec<usize> = candidates
+            .iter()
+            .copied()
+            .filter(|&w| !self.jobs[j].failed_on.contains(&self.workers[w].name))
+            .collect();
+        let pool = if not_failed.is_empty() { &candidates } else { &not_failed };
+        let pinned = j % self.workers.len();
+        let pick = if pool.contains(&pinned) { pinned } else { pool[j % pool.len()] };
+
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let msg = Message::Assign {
+            seq,
+            job: self.jobs[j].name.clone(),
+            spec_json: self.jobs[j].payload.clone(),
+            checkpoint: self.jobs[j].ckpt.clone(),
+        };
+        match self.workers[pick].link.send(&msg) {
+            Ok(()) | Err(TransportError::Injected) => {
+                let job = &mut self.jobs[j];
+                job.owner = Some(pick);
+                job.owner_name = Some(self.workers[pick].name.clone());
+                job.phase = JobPhase::Assigned;
+                job.assign_seq = seq;
+                job.acked = false;
+                job.assigned_round = round;
+                // New owner, new checkpoint watermark: its first shipped
+                // generation is accepted at any turn.
+                job.ckpt_from = None;
+                job.ckpt_turn = 0;
+                progress(&format!(
+                    "job {} → worker {} (seq {seq}, {})",
+                    job.name,
+                    self.workers[pick].name,
+                    match &job.ckpt {
+                        Some(_) => "resuming from checkpoint",
+                        None => "from scratch",
+                    }
+                ));
+            }
+            Err(e) => {
+                // The job stays Pending; the eviction migrates nothing
+                // extra (this job has no owner yet) and the next round
+                // picks a surviving worker.
+                self.evict(pick, &e.to_string(), round, progress);
+            }
+        }
+    }
+
+    fn resend_assign(&mut self, j: usize, round: u64, progress: &mut impl FnMut(&str)) {
+        let Some(w) = self.jobs[j].owner else { return };
+        let msg = Message::Assign {
+            seq: self.jobs[j].assign_seq,
+            job: self.jobs[j].name.clone(),
+            spec_json: self.jobs[j].payload.clone(),
+            checkpoint: self.jobs[j].ckpt.clone(),
+        };
+        match self.workers[w].link.send(&msg) {
+            Ok(()) | Err(TransportError::Injected) => {
+                self.jobs[j].assigned_round = round;
+            }
+            Err(e) => self.evict(w, &e.to_string(), round, progress),
+        }
+    }
+
+    fn ack_to(&mut self, w: usize, seq: u64) {
+        // Best-effort: a lost Ack just means one more retransmission.
+        let _ = self.workers[w].link.send(&Message::Ack { seq });
+    }
+
+    /// Best-effort Shutdown to *every* link, evicted ones included — a
+    /// hung-but-alive worker that wakes up after eviction should still
+    /// drain its mailbox and exit.
+    fn broadcast_shutdown(&mut self) {
+        for w in &mut self.workers {
+            let _ = w.link.send(&Message::Shutdown);
+        }
+    }
+
+    fn report(&self) -> DistReport {
+        DistReport {
+            rows: self
+                .jobs
+                .iter()
+                .map(|j| DistRow {
+                    name: j.name.clone(),
+                    status: match j.phase {
+                        JobPhase::Done => DistJobStatus::Done,
+                        JobPhase::Quarantined => DistJobStatus::Quarantined,
+                        JobPhase::Pending | JobPhase::Assigned => DistJobStatus::Unfinished,
+                    },
+                    worker: j.owner_name.clone(),
+                    attempts: j.attempts,
+                    migrations: j.migrations,
+                    signals: j.signals,
+                    units: j.units,
+                    error: j.last_error.clone(),
+                })
+                .collect(),
+        }
+    }
+}

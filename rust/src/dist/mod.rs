@@ -1,0 +1,45 @@
+//! dist — the fault-tolerant multi-process fleet: a coordinator process
+//! that owns the jobs manifest and N worker processes that each run
+//! today's [`crate::fleet::Fleet`] unchanged.
+//!
+//! The ROADMAP's "multi-process backend split: snapshots as the wire
+//! format" seam. The design bet is that the fleet already has the two
+//! hard pieces — a bit-exact, CRC-trailed checkpoint format
+//! ([`crate::fleet::snapshot`]) and per-job failure isolation — so
+//! distribution is *routing*, not new state machinery: the coordinator
+//! moves single-job manifests and snapshot blobs between workers, and
+//! every recovery path (worker death, hang, lossy link) reduces to
+//! "restore the last good generation somewhere else", which the fleet
+//! proves is indistinguishable from never having crashed.
+//!
+//! Layering (each module's docs carry its own contract):
+//!
+//! - [`wire`] — the versioned message vocabulary and its total,
+//!   size-capped, CRC-checked frame codec;
+//! - [`transport`] — [`transport::Pipe`] byte movers (in-process
+//!   channels, length-prefixed TCP) wrapped by [`transport::Link`], the
+//!   one place every injectable network pathology
+//!   (`transport_send`/`transport_recv` fault points: drop, delay, dup,
+//!   truncate, err, panic) is applied;
+//! - [`coordinator`] — manifest ownership, heartbeat-timeout eviction,
+//!   partition-safe job migration, retry budget + backoff, quarantine;
+//! - [`worker`] — a protocol-driven fleet: Assign in, heartbeats +
+//!   checkpoints out, the final snapshot as the job result.
+//!
+//! `rust/tests/dist.rs` proves the headline property end-to-end: kill a
+//! worker at an arbitrary scheduler round and every final network is
+//! bit-identical to an undisturbed single-process fleet run.
+
+pub mod coordinator;
+pub mod transport;
+pub mod wire;
+pub mod worker;
+
+pub use coordinator::{
+    Coordinator, DistJobStatus, DistOptions, DistOutcome, DistReport, DistRow,
+};
+pub use transport::{
+    channel_transport_pair, ChannelPipe, Link, Pipe, TcpPipe, Transport, TransportError,
+};
+pub use wire::{Message, PROTOCOL_VERSION};
+pub use worker::{run_worker, WorkerOptions};

@@ -1,0 +1,376 @@
+//! The dist wire protocol: a versioned message set framed with per-frame
+//! CRC and size caps.
+//!
+//! A frame is:
+//!
+//! ```text
+//! magic "MWF1"  (4 bytes)
+//! len           (u32 LE — payload length, capped at MAX_FRAME)
+//! payload       (len bytes — tagged message body over runtime::bytes)
+//! crc32         (u32 LE — CRC-32/IEEE of the payload)
+//! ```
+//!
+//! Decode is **total**: a malformed, truncated, bit-flipped or oversized
+//! frame is always an `Err`, never a panic and never a huge allocation —
+//! the declared length is validated against both [`MAX_FRAME`] and the
+//! actual frame size before anything is copied, and every payload read
+//! goes through the total [`crate::runtime::bytes::ByteReader`]
+//! (`rust/tests/properties.rs` proves this over an exhaustive truncation
+//! sweep and a randomized bit-flip corpus covering every message type).
+//!
+//! The protocol itself (who sends what when) lives in
+//! [`crate::dist::coordinator`] / [`crate::dist::worker`]; this module
+//! only defines the vocabulary and its bytes. Checkpoint payloads inside
+//! [`Message::Assign`] / [`Message::CheckpointBytes`] are opaque
+//! `fleet::snapshot` v2 blobs — they carry their *own* CRC trailer, so a
+//! migrated checkpoint is integrity-checked twice: once per hop (frame
+//! CRC) and once at restore (snapshot CRC).
+
+use crate::runtime::bytes::{crc32, ByteReader, ByteWriter};
+
+/// Version negotiated in [`Message::Hello`]; a mismatch is a refused
+/// worker, not a best-effort parse.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Frame magic: **M**sgsn **W**ire **F**rame v**1**.
+pub const FRAME_MAGIC: [u8; 4] = *b"MWF1";
+
+/// Hard cap on a frame payload (64 MiB). A declared length beyond this is
+/// rejected *before* any allocation — the guard that keeps a corrupt or
+/// hostile length field from driving `Vec::with_capacity(4 GiB)`.
+pub const MAX_FRAME: usize = 64 << 20;
+
+/// Frame overhead around the payload: magic + len + trailing CRC.
+pub const FRAME_OVERHEAD: usize = 12;
+
+/// Everything that travels between coordinator and worker.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Message {
+    /// Worker → coordinator, once per connection: identity + protocol
+    /// version. A version mismatch evicts the worker immediately.
+    Hello { worker: String, protocol: u32 },
+    /// Coordinator → worker: run this job. `spec_json` is a complete
+    /// single-job manifest (see [`crate::fleet::spec::manifest_job_payloads`]);
+    /// `checkpoint` is the last good snapshot generation to resume from
+    /// (`None` = start fresh). Resent with the *same* `seq` until acked —
+    /// the worker re-acks duplicates idempotently.
+    Assign { seq: u64, job: String, spec_json: String, checkpoint: Option<Vec<u8>> },
+    /// Either direction: acknowledges the `seq` of an [`Message::Assign`]
+    /// (worker → coordinator) or of a final [`Message::CheckpointBytes`]
+    /// (coordinator → worker). Loss-tolerant: the sender resends until
+    /// acked, the receiver re-acks duplicates.
+    Ack { seq: u64 },
+    /// Worker → coordinator: progress counters for one job.
+    Progress { job: String, signals: u64, units: u64, done: bool },
+    /// Worker → coordinator: a `fleet::snapshot` v2 blob for one job.
+    /// Periodic checkpoints (`is_final: false`) are fire-and-forget — a
+    /// lost one only widens the resume window. The final snapshot
+    /// (`is_final: true`) *is* the job result and is resent until acked.
+    CheckpointBytes { seq: u64, job: String, turn: u64, is_final: bool, bytes: Vec<u8> },
+    /// Worker → coordinator: liveness. `seq` is the worker's scheduler
+    /// round (monotone), purely diagnostic — receipt is what resets the
+    /// coordinator's missed-heartbeat clock.
+    Heartbeat { worker: String, seq: u64 },
+    /// Worker → coordinator: the job crashed or failed to build/restore.
+    /// The coordinator charges the retry budget and reassigns or
+    /// quarantines.
+    Failed { job: String, error: String },
+    /// Coordinator → worker: drain and exit.
+    Shutdown,
+}
+
+impl Message {
+    fn tag(&self) -> u8 {
+        match self {
+            Message::Hello { .. } => 1,
+            Message::Assign { .. } => 2,
+            Message::Ack { .. } => 3,
+            Message::Progress { .. } => 4,
+            Message::CheckpointBytes { .. } => 5,
+            Message::Heartbeat { .. } => 6,
+            Message::Failed { .. } => 7,
+            Message::Shutdown => 8,
+        }
+    }
+
+    /// Short name for log lines and errors.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Message::Hello { .. } => "hello",
+            Message::Assign { .. } => "assign",
+            Message::Ack { .. } => "ack",
+            Message::Progress { .. } => "progress",
+            Message::CheckpointBytes { .. } => "checkpoint",
+            Message::Heartbeat { .. } => "heartbeat",
+            Message::Failed { .. } => "failed",
+            Message::Shutdown => "shutdown",
+        }
+    }
+}
+
+fn encode_payload(msg: &Message) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.u8(msg.tag());
+    match msg {
+        Message::Hello { worker, protocol } => {
+            w.str(worker);
+            w.u32(*protocol);
+        }
+        Message::Assign { seq, job, spec_json, checkpoint } => {
+            w.u64(*seq);
+            w.str(job);
+            w.str(spec_json);
+            match checkpoint {
+                None => w.bool(false),
+                Some(bytes) => {
+                    w.bool(true);
+                    w.u32(bytes.len() as u32);
+                    w.raw(bytes);
+                }
+            }
+        }
+        Message::Ack { seq } => w.u64(*seq),
+        Message::Progress { job, signals, units, done } => {
+            w.str(job);
+            w.u64(*signals);
+            w.u64(*units);
+            w.bool(*done);
+        }
+        Message::CheckpointBytes { seq, job, turn, is_final, bytes } => {
+            w.u64(*seq);
+            w.str(job);
+            w.u64(*turn);
+            w.bool(*is_final);
+            w.u32(bytes.len() as u32);
+            w.raw(bytes);
+        }
+        Message::Heartbeat { worker, seq } => {
+            w.str(worker);
+            w.u64(*seq);
+        }
+        Message::Failed { job, error } => {
+            w.str(job);
+            w.str(error);
+        }
+        Message::Shutdown => {}
+    }
+    w.into_inner()
+}
+
+/// Length-prefixed byte blob; the prefix is validated against the
+/// remaining payload before the copy (same discipline as
+/// [`ByteReader::str`]).
+fn read_blob(r: &mut ByteReader<'_>) -> Result<Vec<u8>, String> {
+    let len = r.len_prefix(1).map_err(|e| e.to_string())?;
+    Ok(r.bytes(len).map_err(|e| e.to_string())?.to_vec())
+}
+
+fn decode_payload(payload: &[u8]) -> Result<Message, String> {
+    let mut r = ByteReader::new(payload);
+    let tag = r.u8().map_err(|e| e.to_string())?;
+    let s = |r: &mut ByteReader<'_>| r.str().map_err(|e| e.to_string());
+    let msg = match tag {
+        1 => {
+            let worker = s(&mut r)?;
+            let protocol = r.u32().map_err(|e| e.to_string())?;
+            Message::Hello { worker, protocol }
+        }
+        2 => {
+            let seq = r.u64().map_err(|e| e.to_string())?;
+            let job = s(&mut r)?;
+            let spec_json = s(&mut r)?;
+            let checkpoint = if r.bool().map_err(|e| e.to_string())? {
+                Some(read_blob(&mut r)?)
+            } else {
+                None
+            };
+            Message::Assign { seq, job, spec_json, checkpoint }
+        }
+        3 => Message::Ack { seq: r.u64().map_err(|e| e.to_string())? },
+        4 => {
+            let job = s(&mut r)?;
+            let signals = r.u64().map_err(|e| e.to_string())?;
+            let units = r.u64().map_err(|e| e.to_string())?;
+            let done = r.bool().map_err(|e| e.to_string())?;
+            Message::Progress { job, signals, units, done }
+        }
+        5 => {
+            let seq = r.u64().map_err(|e| e.to_string())?;
+            let job = s(&mut r)?;
+            let turn = r.u64().map_err(|e| e.to_string())?;
+            let is_final = r.bool().map_err(|e| e.to_string())?;
+            let bytes = read_blob(&mut r)?;
+            Message::CheckpointBytes { seq, job, turn, is_final, bytes }
+        }
+        6 => {
+            let worker = s(&mut r)?;
+            let seq = r.u64().map_err(|e| e.to_string())?;
+            Message::Heartbeat { worker, seq }
+        }
+        7 => {
+            let job = s(&mut r)?;
+            let error = s(&mut r)?;
+            Message::Failed { job, error }
+        }
+        8 => Message::Shutdown,
+        other => return Err(format!("unknown message tag {other}")),
+    };
+    r.expect_end().map_err(|e| e.to_string())?;
+    Ok(msg)
+}
+
+/// Encode a message as one self-delimiting frame (see module docs).
+pub fn encode_frame(msg: &Message) -> Vec<u8> {
+    let payload = encode_payload(msg);
+    assert!(payload.len() <= MAX_FRAME, "frame payload exceeds MAX_FRAME");
+    let mut out = Vec::with_capacity(payload.len() + FRAME_OVERHEAD);
+    out.extend_from_slice(&FRAME_MAGIC);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    let crc = crc32(&payload);
+    out.extend_from_slice(&payload);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Validate a frame *header* (first 8 bytes: magic + declared length).
+/// Streaming receivers call this before allocating the payload buffer, so
+/// the size cap holds even when the rest of the frame hasn't arrived yet.
+pub fn check_header(header: &[u8; 8]) -> Result<usize, String> {
+    if header[..4] != FRAME_MAGIC {
+        return Err(format!("bad frame magic {:?} (expected {FRAME_MAGIC:?})", &header[..4]));
+    }
+    let len = u32::from_le_bytes([header[4], header[5], header[6], header[7]]) as usize;
+    if len > MAX_FRAME {
+        return Err(format!("frame length {len} exceeds cap {MAX_FRAME}"));
+    }
+    Ok(len)
+}
+
+/// Decode one complete frame. Total: any malformed input — wrong magic,
+/// inconsistent or oversized length, CRC mismatch, truncated or
+/// trailing-garbage payload — is an `Err`.
+pub fn decode_frame(frame: &[u8]) -> Result<Message, String> {
+    if frame.len() < FRAME_OVERHEAD {
+        return Err(format!("frame of {} bytes is shorter than the frame overhead", frame.len()));
+    }
+    let mut header = [0u8; 8];
+    header.copy_from_slice(&frame[..8]);
+    let len = check_header(&header)?;
+    if len != frame.len() - FRAME_OVERHEAD {
+        return Err(format!(
+            "frame length field {len} disagrees with frame size {} - {FRAME_OVERHEAD}",
+            frame.len()
+        ));
+    }
+    let payload = &frame[8..8 + len];
+    let want = u32::from_le_bytes([
+        frame[8 + len],
+        frame[9 + len],
+        frame[10 + len],
+        frame[11 + len],
+    ]);
+    let got = crc32(payload);
+    if got != want {
+        return Err(format!("frame CRC mismatch (stored {want:#010x}, computed {got:#010x})"));
+    }
+    decode_payload(payload)
+}
+
+/// One sample of every message variant — shared by the codec tests and
+/// the corruption property suite so "every message type" stays true by
+/// construction when a variant is added.
+pub fn sample_messages() -> Vec<Message> {
+    vec![
+        Message::Hello { worker: "w-1".into(), protocol: PROTOCOL_VERSION },
+        Message::Assign {
+            seq: 7,
+            job: "blob-soam".into(),
+            spec_json: "{\"version\": 1, \"jobs\": [{\"name\": \"blob-soam\"}]}".into(),
+            checkpoint: Some(vec![0xAB; 40]),
+        },
+        Message::Ack { seq: 7 },
+        Message::Progress { job: "blob-soam".into(), signals: 4096, units: 131, done: false },
+        Message::CheckpointBytes {
+            seq: 9,
+            job: "blob-soam".into(),
+            turn: 64,
+            is_final: true,
+            bytes: (0..=255u8).collect(),
+        },
+        Message::Heartbeat { worker: "w-1".into(), seq: 12 },
+        Message::Failed { job: "blob-soam".into(), error: "injected fault: worker".into() },
+        Message::Shutdown,
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_message_round_trips() {
+        for msg in sample_messages() {
+            let frame = encode_frame(&msg);
+            assert_eq!(decode_frame(&frame).unwrap(), msg, "{}", msg.kind());
+        }
+    }
+
+    #[test]
+    fn assign_none_checkpoint_round_trips() {
+        let msg = Message::Assign {
+            seq: 1,
+            job: "j".into(),
+            spec_json: "{}".into(),
+            checkpoint: None,
+        };
+        let frame = encode_frame(&msg);
+        assert_eq!(decode_frame(&frame).unwrap(), msg);
+    }
+
+    #[test]
+    fn oversized_length_is_rejected_before_allocation() {
+        // A header that declares MAX_FRAME + 1: rejected at the header
+        // check, before any payload buffer exists.
+        let mut header = [0u8; 8];
+        header[..4].copy_from_slice(&FRAME_MAGIC);
+        header[4..].copy_from_slice(&((MAX_FRAME as u32) + 1).to_le_bytes());
+        assert!(check_header(&header).is_err());
+        // The same header embedded in a (tiny) frame is equally rejected.
+        let mut frame = header.to_vec();
+        frame.extend_from_slice(&[0u8; 8]);
+        assert!(decode_frame(&frame).is_err());
+    }
+
+    #[test]
+    fn wrong_magic_and_crc_are_errors() {
+        let mut frame = encode_frame(&Message::Shutdown);
+        frame[0] ^= 0x01;
+        assert!(decode_frame(&frame).is_err(), "bad magic");
+        let mut frame = encode_frame(&Message::Ack { seq: 3 });
+        let last = frame.len() - 1;
+        frame[last] ^= 0x80;
+        assert!(decode_frame(&frame).is_err(), "bad CRC");
+    }
+
+    #[test]
+    fn length_field_must_agree_with_frame_size() {
+        let mut frame = encode_frame(&Message::Ack { seq: 3 });
+        frame[4] = frame[4].wrapping_add(1);
+        assert!(decode_frame(&frame).is_err());
+    }
+
+    #[test]
+    fn trailing_garbage_inside_payload_is_an_error() {
+        // A payload with extra bytes after the message body: CRC is made
+        // valid, so only the `expect_end` discipline catches it.
+        let mut payload = vec![8u8]; // Shutdown tag
+        payload.push(0xEE);
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&FRAME_MAGIC);
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        let crc = crate::runtime::bytes::crc32(&payload);
+        frame.extend_from_slice(&payload);
+        frame.extend_from_slice(&crc.to_le_bytes());
+        assert!(decode_frame(&frame).is_err());
+    }
+}

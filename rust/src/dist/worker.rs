@@ -1,0 +1,281 @@
+//! The dist worker: a [`Fleet`] driven by protocol traffic instead of a
+//! static manifest.
+//!
+//! One worker process owns one fleet. Jobs arrive as [`Message::Assign`]
+//! payloads (a complete single-job manifest plus an optional snapshot to
+//! resume from), run through the *unchanged* fleet scheduler one
+//! [`Fleet::step_round`] per protocol round, and leave as a final
+//! [`Message::CheckpointBytes`] — the `fleet::snapshot` v2 blob **is** the
+//! job result, exactly the bytes a single-process run would have written
+//! to disk. That identity is what makes worker-kill migration bit-exact:
+//! the coordinator restores the same format the fleet already proves
+//! round-trips bit-identically.
+//!
+//! Division of labor with the coordinator:
+//!
+//! - the **coordinator** owns the retry budget, backoff, and placement —
+//!   the worker forces every admitted job to `retries = Some(0)`, so a
+//!   crashing job quarantines locally on the first failure and is
+//!   reported upstream as one [`Message::Failed`];
+//! - the **worker** owns stepping, periodic checkpoint shipping, and
+//!   liveness ([`Message::Heartbeat`] every round).
+//!
+//! Loss tolerance: Assign handling is idempotent (a resent `seq` is
+//! re-acked, not re-run), final checkpoints are resent until acked, and
+//! periodic checkpoints are fire-and-forget. An injected transport `err`
+//! is treated as a lost message — the retransmission discipline absorbs
+//! it — while `Closed`/`Frame` mean the coordinator is gone and the
+//! worker exits.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use crate::fleet::{parse_job_payload, snapshot, Fleet, FleetOptions, JobStatus};
+use crate::runtime::fault::{self, FaultAction, FaultPoint};
+
+use super::transport::{Transport, TransportError};
+use super::wire::{Message, PROTOCOL_VERSION};
+
+/// Worker knobs.
+#[derive(Clone, Debug)]
+pub struct WorkerOptions {
+    /// Worker identity: the `Hello` name, the heartbeat label, and the
+    /// fault-injection scope for `worker/<name>:...` specs.
+    pub name: String,
+    /// Iterations each live job advances per round ([`FleetOptions::stride`]).
+    pub stride: u64,
+    /// Ship a periodic (non-final) snapshot of every running job each
+    /// this many rounds (0 = finals only). Smaller = less lost work on
+    /// migration, more wire traffic.
+    pub checkpoint_rounds: u64,
+    /// How long to wait for traffic when no job is live (keeps an idle
+    /// worker from spinning; a busy worker polls without blocking).
+    pub idle_poll: Duration,
+}
+
+impl Default for WorkerOptions {
+    fn default() -> Self {
+        Self {
+            name: "worker".to_string(),
+            stride: 1,
+            checkpoint_rounds: 8,
+            idle_poll: Duration::from_millis(10),
+        }
+    }
+}
+
+/// Send, treating an injected transport error as message loss (the
+/// protocol's retransmission discipline absorbs it). `Closed`/`Frame`
+/// are fatal: the coordinator is unreachable or the link is corrupt.
+fn send(t: &mut dyn Transport, msg: &Message) -> Result<(), String> {
+    match t.send(msg) {
+        Ok(()) | Err(TransportError::Injected) => Ok(()),
+        Err(e) => Err(format!("coordinator link lost: {e}")),
+    }
+}
+
+/// Parse, admit and (optionally) restore one assigned job. On `Err` the
+/// caller removes the job and reports [`Message::Failed`].
+fn admit(fleet: &mut Fleet, job: &str, spec_json: &str, checkpoint: Option<&[u8]>) -> Result<(), String> {
+    let mut spec =
+        parse_job_payload(spec_json).map_err(|e| format!("bad job payload: {e:#}"))?;
+    if spec.name != job {
+        return Err(format!("payload names job {:?}, assignment says {job:?}", spec.name));
+    }
+    // The coordinator owns the retry budget: a local crash must surface
+    // as one Failed message, not burn rounds in a local retry loop.
+    spec.retries = Some(0);
+    fleet.add_job(spec).map_err(|e| format!("{e:#}"))?;
+    if let Some(bytes) = checkpoint {
+        fleet.restore_job(job, bytes)?;
+    }
+    Ok(())
+}
+
+/// Run the worker loop until the coordinator sends [`Message::Shutdown`]
+/// (`Ok`) or the link dies (`Err`). `progress` receives the fleet's
+/// per-job progress lines plus the worker's own protocol events.
+pub fn run_worker(
+    transport: &mut dyn Transport,
+    opts: &WorkerOptions,
+    mut progress: impl FnMut(&str),
+) -> Result<(), String> {
+    let mut fleet = Fleet::new(Vec::new()).map_err(|e| format!("{e:#}"))?;
+    let fleet_opts = FleetOptions {
+        stride: opts.stride.max(1),
+        checkpoint_every: 0,
+        checkpoint_secs: None,
+        checkpoint_dir: None,
+        max_retries: 0,
+        backoff_rounds: 1,
+    };
+    send(transport, &Message::Hello { worker: opts.name.clone(), protocol: PROTOCOL_VERSION })?;
+
+    let mut round: u64 = 0;
+    let mut live = 0usize;
+    // Set once anything arrives from the coordinator — until then the
+    // Hello is retransmitted (it may have been dropped, and an
+    // un-introduced worker is never assigned work).
+    let mut greeted = false;
+    // job → the assign seq it acked (duplicate Assigns re-ack, never re-run).
+    let mut assigned: HashMap<String, u64> = HashMap::new();
+    // seq → final CheckpointBytes awaiting the coordinator's Ack.
+    let mut unacked_finals: HashMap<u64, Message> = HashMap::new();
+    let mut next_seq: u64 = 1;
+
+    loop {
+        // Injected worker pathologies: `worker/<name>:panic` kills the
+        // process mid-run (the crash the migration machinery exists for),
+        // `delay=N` hangs it for N ms (the heartbeat-timeout case).
+        match fault::fire(FaultPoint::WorkerStep, Some(&opts.name), Some(round)) {
+            None => {}
+            Some(FaultAction::Panic) => {
+                panic!("injected fault: worker {:?} panic at round {round}", opts.name)
+            }
+            Some(FaultAction::Delay(ms)) => std::thread::sleep(Duration::from_millis(ms)),
+            Some(FaultAction::Error) => {
+                return Err(format!("injected fault: worker {:?} err", opts.name))
+            }
+            // drop/dup/truncate describe frames, not worker steps.
+            Some(_) => {}
+        }
+        transport.set_turn(round);
+
+        // Drain protocol traffic (budget-capped so a chatty coordinator
+        // cannot starve the scheduler).
+        let mut first = true;
+        for _ in 0..64 {
+            let timeout = if first && live == 0 { opts.idle_poll } else { Duration::ZERO };
+            first = false;
+            let msg = match transport.recv(timeout) {
+                Ok(Some(m)) => m,
+                Ok(None) => break,
+                Err(TransportError::Injected) => continue,
+                Err(e) => return Err(format!("coordinator link lost: {e}")),
+            };
+            greeted = true;
+            match msg {
+                Message::Assign { seq, job, spec_json, checkpoint } => {
+                    if assigned.get(&job) == Some(&seq) {
+                        // A resent Assign (our Ack was lost): re-ack only.
+                        send(transport, &Message::Ack { seq })?;
+                        continue;
+                    }
+                    // A *new* assignment supersedes anything we hold for
+                    // the name — including an unacked final the
+                    // coordinator evidently never received.
+                    fleet.remove_job(&job);
+                    unacked_finals.retain(
+                        |_, m| !matches!(m, Message::CheckpointBytes { job: j, .. } if *j == job),
+                    );
+                    match admit(&mut fleet, &job, &spec_json, checkpoint.as_deref()) {
+                        Ok(()) => {
+                            progress(&format!(
+                                "worker {}: job {job} admitted ({})",
+                                opts.name,
+                                if checkpoint.is_some() { "from checkpoint" } else { "from scratch" }
+                            ));
+                            assigned.insert(job, seq);
+                            send(transport, &Message::Ack { seq })?;
+                        }
+                        Err(e) => {
+                            // A torn restore may leave the session
+                            // unusable — drop the job before reporting.
+                            fleet.remove_job(&job);
+                            assigned.insert(job.clone(), seq);
+                            send(transport, &Message::Ack { seq })?;
+                            send(transport, &Message::Failed { job, error: e })?;
+                        }
+                    }
+                }
+                Message::Ack { seq } => {
+                    unacked_finals.remove(&seq);
+                }
+                Message::Shutdown => return Ok(()),
+                // Everything else is worker → coordinator vocabulary.
+                _ => {}
+            }
+        }
+
+        // One scheduler round over whatever is admitted.
+        live = fleet.step_round(&fleet_opts, round, None, &mut |line| progress(line));
+
+        // Collect results before mutating the fleet: finals for Done jobs
+        // (the snapshot *is* the result), Failed for quarantined ones,
+        // periodic snapshots for running ones on the cadence.
+        let ship_periodic =
+            opts.checkpoint_rounds > 0 && round % opts.checkpoint_rounds == opts.checkpoint_rounds - 1;
+        let mut finals: Vec<(String, Vec<u8>, u64, u64)> = Vec::new();
+        let mut failures: Vec<(String, String)> = Vec::new();
+        let mut periodic: Vec<(String, Vec<u8>, u64, u64)> = Vec::new();
+        for j in fleet.jobs() {
+            let name = j.spec().name.clone();
+            match j.status() {
+                JobStatus::Done => {
+                    let session = j.session().expect("done job keeps its session");
+                    let bytes = snapshot::snapshot_session(session);
+                    let (signals, units) =
+                        j.report().map_or((0, 0), |r| (r.signals, r.units as u64));
+                    finals.push((name, bytes, signals, units));
+                }
+                JobStatus::Quarantined => {
+                    failures.push((name, j.last_error().unwrap_or("crashed").to_string()));
+                }
+                JobStatus::Running if ship_periodic => {
+                    if let Some(s) = j.session() {
+                        let r = s.report_so_far();
+                        periodic.push((
+                            name,
+                            snapshot::snapshot_session(s),
+                            r.signals,
+                            r.units as u64,
+                        ));
+                    }
+                }
+                _ => {}
+            }
+        }
+        for (job, bytes, signals, units) in finals {
+            let seq = next_seq;
+            next_seq += 1;
+            let msg =
+                Message::CheckpointBytes { seq, job: job.clone(), turn: round, is_final: true, bytes };
+            send(transport, &msg)?;
+            send(transport, &Message::Progress { job: job.clone(), signals, units, done: true })?;
+            unacked_finals.insert(seq, msg);
+            // `assigned` keeps the name → seq entry: a late duplicate
+            // Assign still re-acks instead of re-running a finished job.
+            fleet.remove_job(&job);
+        }
+        for (job, error) in failures {
+            send(transport, &Message::Failed { job: job.clone(), error })?;
+            fleet.remove_job(&job);
+        }
+        for (job, bytes, signals, units) in periodic {
+            // Fire-and-forget: a lost periodic snapshot only widens the
+            // migration resume window.
+            send(
+                transport,
+                &Message::CheckpointBytes { seq: 0, job: job.clone(), turn: round, is_final: false, bytes },
+            )?;
+            send(transport, &Message::Progress { job, signals, units, done: false })?;
+        }
+
+        send(transport, &Message::Heartbeat { worker: opts.name.clone(), seq: round })?;
+        if round % 16 == 15 {
+            // Retransmit what loss can strand: the Hello (until the
+            // coordinator has spoken back) and finals it has not acked.
+            if !greeted {
+                send(
+                    transport,
+                    &Message::Hello { worker: opts.name.clone(), protocol: PROTOCOL_VERSION },
+                )?;
+            }
+            let pending: Vec<Message> = unacked_finals.values().cloned().collect();
+            for msg in &pending {
+                send(transport, msg)?;
+            }
+        }
+        round += 1;
+    }
+}

@@ -51,8 +51,8 @@ pub mod snapshot;
 mod spec;
 mod writer;
 
-pub use spec::{parse_manifest, JobSpec, MANIFEST_VERSION};
-pub use writer::{CheckpointWriter, WriteOutcome};
+pub use spec::{manifest_job_payloads, parse_job_payload, parse_manifest, JobSpec, MANIFEST_VERSION};
+pub use writer::{CheckpointWriter, WriteOutcome, DEFAULT_QUEUE_CAPACITY};
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -153,6 +153,9 @@ pub struct FleetJob {
     retry_at_round: u64,
     last_error: Option<String>,
     report: Option<RunReport>,
+    /// Non-fatal incidents surfaced per job in the [`FleetReport`]:
+    /// dropped (queue-full) and failed checkpoint write-outs.
+    notes: Vec<String>,
 }
 
 impl FleetJob {
@@ -187,6 +190,12 @@ impl FleetJob {
     /// quarantined before finishing).
     pub fn report(&self) -> Option<&RunReport> {
         self.report.as_ref()
+    }
+
+    /// Non-fatal incidents recorded against this job (dropped / failed
+    /// checkpoint write-outs).
+    pub fn notes(&self) -> &[String] {
+        &self.notes
     }
 
     fn checkpoint_path(&self, dir: &Path) -> PathBuf {
@@ -238,6 +247,10 @@ pub struct FleetRow {
     pub error: Option<String>,
     /// `None` for jobs quarantined before finishing.
     pub report: Option<RunReport>,
+    /// Non-fatal incidents (dropped / failed checkpoint write-outs) —
+    /// surfaced here so a degraded-durability run is visible in the
+    /// report, not only in scrollback progress lines.
+    pub notes: Vec<String>,
 }
 
 /// Process-level outcome of a fleet run, for the CLI exit code.
@@ -284,8 +297,10 @@ impl FleetReport {
     }
 
     /// One summary row per job (name, status, attempts, algorithm, driver,
-    /// signals, units, connections, converged, wall time). Quarantined
-    /// jobs without a report render `-` in the report columns.
+    /// signals, units, connections, converged, wall time, notes count).
+    /// Quarantined jobs without a report render `-` in the report columns;
+    /// the `notes` column counts per-job incidents (details in
+    /// [`FleetRow::notes`]).
     pub fn to_table(&self) -> Table {
         let mut t = Table::new(&[
             "job",
@@ -299,9 +314,15 @@ impl FleetReport {
             "connections",
             "converged",
             "time",
+            "notes",
         ]);
         for row in &self.rows {
-            let cells = match &row.report {
+            let notes = if row.notes.is_empty() {
+                "-".to_string()
+            } else {
+                row.notes.len().to_string()
+            };
+            let mut cells = match &row.report {
                 Some(r) => vec![
                     row.name.clone(),
                     row.status.to_string(),
@@ -329,6 +350,7 @@ impl FleetReport {
                     "-".to_string(),
                 ],
             };
+            cells.push(notes);
             t.row(cells);
         }
         t
@@ -416,28 +438,84 @@ impl Fleet {
         }
         let width = specs.iter().map(pool_width).max().unwrap_or(1);
         let pool = (width > 1).then(|| Arc::new(WorkerPool::new(width)));
-        let mut jobs = Vec::with_capacity(specs.len());
+        let mut fleet = Fleet { jobs: Vec::with_capacity(specs.len()), pool };
         for spec in specs {
-            let mesh = spec
-                .build_mesh()
-                .with_context(|| format!("job {:?}: building mesh", spec.name))?;
-            let mut session = ConvergenceSession::new(&spec.cfg, &mesh, pool.clone())
-                .with_context(|| format!("job {:?}", spec.name))?;
-            session.set_label(&spec.name);
-            jobs.push(FleetJob {
-                spec,
-                mesh,
-                session: Some(session),
-                status: JobStatus::Running,
-                turns_since_checkpoint: 0,
-                last_checkpoint: Instant::now(),
-                attempts: 0,
-                retry_at_round: 0,
-                last_error: None,
-                report: None,
-            });
+            fleet.push_job(spec)?;
         }
-        Ok(Fleet { jobs, pool })
+        Ok(fleet)
+    }
+
+    fn push_job(&mut self, spec: JobSpec) -> Result<()> {
+        let mesh = spec
+            .build_mesh()
+            .with_context(|| format!("job {:?}: building mesh", spec.name))?;
+        // A job wider than the shared pool (or added to a pool-less
+        // fleet) self-provisions: the session builds its own pool when
+        // handed `None` (see `ConvergenceSession::new`).
+        let mut session = ConvergenceSession::new(&spec.cfg, &mesh, self.pool.clone())
+            .with_context(|| format!("job {:?}", spec.name))?;
+        session.set_label(&spec.name);
+        self.jobs.push(FleetJob {
+            spec,
+            mesh,
+            session: Some(session),
+            status: JobStatus::Running,
+            turns_since_checkpoint: 0,
+            last_checkpoint: Instant::now(),
+            attempts: 0,
+            retry_at_round: 0,
+            last_error: None,
+            report: None,
+            notes: Vec::new(),
+        });
+        Ok(())
+    }
+
+    /// Add a job to a (possibly running) fleet — the dynamic-admission
+    /// primitive the dist worker is built on. Same stem-collision rule as
+    /// [`Fleet::new`].
+    pub fn add_job(&mut self, spec: JobSpec) -> Result<()> {
+        for existing in &self.jobs {
+            if existing.spec.file_stem() == spec.file_stem() {
+                bail!(
+                    "jobs {:?} and {:?} both checkpoint as {:?} — rename one",
+                    existing.spec.name,
+                    spec.name,
+                    spec.file_stem()
+                );
+            }
+        }
+        self.push_job(spec)
+    }
+
+    /// Remove a job (any status) by name. Returns whether it existed.
+    pub fn remove_job(&mut self, name: &str) -> bool {
+        let before = self.jobs.len();
+        self.jobs.retain(|j| j.spec.name != name);
+        self.jobs.len() != before
+    }
+
+    /// Restore a job's session from snapshot bytes (the dist migration
+    /// path: the coordinator ships the last good checkpoint generation,
+    /// the worker restores it into the freshly built session). On `Err`
+    /// the session may be torn — the caller must remove the job.
+    pub fn restore_job(&mut self, name: &str, bytes: &[u8]) -> Result<(), String> {
+        let job = self
+            .jobs
+            .iter_mut()
+            .find(|j| j.spec.name == name)
+            .ok_or_else(|| format!("no job named {name:?}"))?;
+        let session = job.session.as_mut().ok_or_else(|| {
+            format!("job {name:?} has no live session to restore into")
+        })?;
+        snapshot::restore_session(session, bytes)?;
+        if session.is_done() {
+            job.report = Some(session.finish());
+            job.status = JobStatus::Done;
+        } else {
+            job.status = JobStatus::Running;
+        }
+        Ok(())
     }
 
     pub fn jobs(&self) -> &[FleetJob] {
@@ -486,7 +564,6 @@ impl Fleet {
         opts: &FleetOptions,
         mut progress: impl FnMut(&str),
     ) -> Result<FleetReport> {
-        let stride = opts.stride.max(1);
         let checkpointing = opts.checkpoint_dir.is_some()
             && (opts.checkpoint_every > 0 || opts.checkpoint_secs.is_some());
         let mut ckpt = None;
@@ -499,76 +576,7 @@ impl Fleet {
 
         let mut round = 0u64;
         loop {
-            // Surface landed checkpoint outcomes (failures are progress
-            // lines, not fleet errors: a failed write costs at most one
-            // recovery generation).
-            if let Some(w) = ckpt.as_mut() {
-                for o in w.poll() {
-                    note_write(&o, &mut progress);
-                }
-            }
-            let mut live = 0usize;
-            for idx in 0..self.jobs.len() {
-                match self.jobs[idx].status {
-                    JobStatus::Done | JobStatus::Quarantined => continue,
-                    JobStatus::Failed => {
-                        live += 1;
-                        if round >= self.jobs[idx].retry_at_round {
-                            self.retry_job(idx, opts, ckpt.as_mut(), &mut progress);
-                        }
-                        continue;
-                    }
-                    JobStatus::Running => {}
-                }
-                live += 1;
-                let job = &mut self.jobs[idx];
-                let session = job.session.as_mut().expect("running job has a session");
-                let stepped = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    session.step(stride)
-                }));
-                let running = match stepped {
-                    Ok(running) => running,
-                    Err(payload) => {
-                        fail_job(job, payload, round, opts, &mut progress);
-                        continue;
-                    }
-                };
-                job.turns_since_checkpoint += 1;
-                // Checkpoint on either cadence and once more at termination
-                // (a kill right after the final batch must also resume to
-                // the finished state, not re-run the tail).
-                let turns_due = opts.checkpoint_every > 0
-                    && job.turns_since_checkpoint >= opts.checkpoint_every;
-                let wall_due = opts
-                    .checkpoint_secs
-                    .is_some_and(|s| job.last_checkpoint.elapsed().as_secs_f64() >= s);
-                if checkpointing && (turns_due || wall_due || !running) {
-                    let dir = opts.checkpoint_dir.as_deref().expect("checkpointing dir");
-                    // Encode on the scheduler thread (the bytes are the
-                    // boundary), write durably on the writer thread.
-                    let bytes = snapshot::snapshot_session(session);
-                    let path = job.checkpoint_path(dir);
-                    progress(&format!(
-                        "checkpoint {} @ {} signals",
-                        path.display(),
-                        session.report_so_far().signals
-                    ));
-                    ckpt.as_mut()
-                        .expect("writer exists while checkpointing")
-                        .enqueue(&job.spec.name, path, bytes);
-                    job.turns_since_checkpoint = 0;
-                    job.last_checkpoint = Instant::now();
-                }
-                if !running {
-                    let report = session.finish();
-                    progress(&format!(
-                        "job {} finished: {} units, {} signals, converged={}",
-                        job.spec.name, report.units, report.signals, report.converged
-                    ));
-                    job.report = Some(report);
-                    job.status = JobStatus::Done;
-                }
-            }
+            let live = self.step_round(opts, round, ckpt.as_mut(), &mut progress);
             if live == 0 {
                 break;
             }
@@ -578,10 +586,114 @@ impl Fleet {
         // "last good generation" durability statement is about disk).
         if let Some(w) = ckpt.as_mut() {
             for o in w.drain() {
-                note_write(&o, &mut progress);
+                self.note_write(&o, &mut progress);
             }
         }
-        Ok(FleetReport {
+        Ok(self.report())
+    }
+
+    /// Advance every live job one scheduler round (the body of [`Fleet::run`],
+    /// exposed so the dist worker can interleave scheduling with protocol
+    /// traffic). Returns the number of jobs still live (Running or Failed
+    /// awaiting retry); 0 = the fleet is finished.
+    pub fn step_round(
+        &mut self,
+        opts: &FleetOptions,
+        round: u64,
+        mut ckpt: Option<&mut CheckpointWriter>,
+        progress: &mut impl FnMut(&str),
+    ) -> usize {
+        let stride = opts.stride.max(1);
+        let checkpointing = ckpt.is_some()
+            && opts.checkpoint_dir.is_some()
+            && (opts.checkpoint_every > 0 || opts.checkpoint_secs.is_some());
+        // Surface landed checkpoint outcomes (failures are progress
+        // lines + per-job notes, not fleet errors: a failed write costs
+        // at most one recovery generation).
+        if let Some(w) = ckpt.as_deref_mut() {
+            for o in w.poll() {
+                self.note_write(&o, progress);
+            }
+        }
+        let mut live = 0usize;
+        for idx in 0..self.jobs.len() {
+            match self.jobs[idx].status {
+                JobStatus::Done | JobStatus::Quarantined => continue,
+                JobStatus::Failed => {
+                    live += 1;
+                    if round >= self.jobs[idx].retry_at_round {
+                        self.retry_job(idx, opts, ckpt.as_deref_mut(), progress);
+                    }
+                    continue;
+                }
+                JobStatus::Running => {}
+            }
+            live += 1;
+            let job = &mut self.jobs[idx];
+            let session = job.session.as_mut().expect("running job has a session");
+            let stepped = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                session.step(stride)
+            }));
+            let running = match stepped {
+                Ok(running) => running,
+                Err(payload) => {
+                    fail_job(job, payload, round, opts, progress);
+                    continue;
+                }
+            };
+            job.turns_since_checkpoint += 1;
+            // Checkpoint on either cadence and once more at termination
+            // (a kill right after the final batch must also resume to
+            // the finished state, not re-run the tail).
+            let turns_due = opts.checkpoint_every > 0
+                && job.turns_since_checkpoint >= opts.checkpoint_every;
+            let wall_due = opts
+                .checkpoint_secs
+                .is_some_and(|s| job.last_checkpoint.elapsed().as_secs_f64() >= s);
+            if checkpointing && (turns_due || wall_due || !running) {
+                let dir = opts.checkpoint_dir.as_deref().expect("checkpointing dir");
+                // Encode on the scheduler thread (the bytes are the
+                // boundary), write durably on the writer thread.
+                let bytes = snapshot::snapshot_session(session);
+                let path = job.checkpoint_path(dir);
+                let writer = ckpt.as_deref_mut().expect("writer exists while checkpointing");
+                if writer.enqueue(&job.spec.name, path.clone(), bytes) {
+                    progress(&format!(
+                        "checkpoint {} @ {} signals",
+                        path.display(),
+                        session.report_so_far().signals
+                    ));
+                } else {
+                    // Queue full: drop this generation rather than stall
+                    // convergence — recorded per job, visible in the
+                    // report (satellite: bounded writer queue).
+                    let note = format!(
+                        "checkpoint {} DROPPED: writer queue full",
+                        path.display()
+                    );
+                    progress(&note);
+                    job.notes.push(note);
+                }
+                job.turns_since_checkpoint = 0;
+                job.last_checkpoint = Instant::now();
+            }
+            if !running {
+                let report = session.finish();
+                progress(&format!(
+                    "job {} finished: {} units, {} signals, converged={}",
+                    job.spec.name, report.units, report.signals, report.converged
+                ));
+                job.report = Some(report);
+                job.status = JobStatus::Done;
+            }
+        }
+        live
+    }
+
+    /// Snapshot the fleet's current state as a [`FleetReport`] (finalizes
+    /// the report of any Done job that still holds one).
+    pub fn report(&mut self) -> FleetReport {
+        FleetReport {
             rows: self
                 .jobs
                 .iter_mut()
@@ -597,10 +709,23 @@ impl Fleet {
                         attempts: j.attempts,
                         error: j.last_error.clone(),
                         report: j.report.clone(),
+                        notes: j.notes.clone(),
                     }
                 })
                 .collect(),
-        })
+        }
+    }
+
+    /// Record a landed checkpoint write-out; failures become progress
+    /// lines *and* per-job notes.
+    fn note_write(&mut self, o: &WriteOutcome, progress: &mut impl FnMut(&str)) {
+        if let Err(e) = &o.result {
+            let note = format!("checkpoint {} FAILED: {e}", o.path.display());
+            progress(&format!("checkpoint {} FAILED for job {}: {e}", o.path.display(), o.job));
+            if let Some(job) = self.jobs.iter_mut().find(|j| j.spec.name == o.job) {
+                job.notes.push(note);
+            }
+        }
     }
 
     /// Restore a Failed job whose backoff has elapsed: drain pending
@@ -617,7 +742,7 @@ impl Fleet {
     ) {
         if let Some(w) = ckpt.take() {
             for o in w.drain() {
-                note_write(&o, progress);
+                self.note_write(&o, progress);
             }
         }
         let pool = self.pool.clone();
@@ -684,12 +809,6 @@ fn fail_job(
             job.attempts,
             budget + 1
         ));
-    }
-}
-
-fn note_write(o: &WriteOutcome, progress: &mut impl FnMut(&str)) {
-    if let Err(e) = &o.result {
-        progress(&format!("checkpoint {} FAILED for job {}: {e}", o.path.display(), o.job));
     }
 }
 

@@ -88,6 +88,42 @@ pub fn snapshot_session(session: &ConvergenceSession) -> Vec<u8> {
     bytes
 }
 
+/// Integrity probe without a session: magic, known version, and (v2) the
+/// CRC-32 trailer. This is the *transportable* half of the restore checks
+/// — the distributed coordinator runs it on every checkpoint generation a
+/// worker ships over the wire before accepting it as "last good", so a
+/// migration never resumes from bytes that would fail
+/// [`restore_session`]'s own integrity pass. Header/spec agreement
+/// (algo, driver, seed, fingerprint) still belongs to `restore_session`,
+/// which is the only place a session exists to compare against.
+pub fn verify_bytes(bytes: &[u8]) -> Result<(), String> {
+    let mut probe = ByteReader::new(bytes);
+    probe.expect_raw(MAGIC).map_err(|e| e.to_string())?;
+    let version = probe.u32().map_err(|e| e.to_string())?;
+    match version {
+        LEGACY_VERSION => Ok(()),
+        SNAPSHOT_VERSION => {
+            if bytes.len() < MAGIC.len() + 8 {
+                return Err("snapshot too short for its checksum trailer".to_string());
+            }
+            let (body, trailer) = bytes.split_at(bytes.len() - 4);
+            let stored = u32::from_le_bytes([trailer[0], trailer[1], trailer[2], trailer[3]]);
+            let computed = crc32(body);
+            if stored != computed {
+                return Err(format!(
+                    "checksum mismatch (stored {stored:#010x}, computed {computed:#010x}) — \
+                     the checkpoint is torn or corrupt"
+                ));
+            }
+            Ok(())
+        }
+        other => Err(format!(
+            "snapshot version {other} (this build reads versions \
+             {LEGACY_VERSION} and {SNAPSHOT_VERSION})"
+        )),
+    }
+}
+
 /// Restore a checkpoint into a freshly built session (same spec: same
 /// mesh, same `RunConfig`). The checksum (v2) is verified over the whole
 /// buffer **before** any state is decoded; the header is then validated

@@ -36,7 +36,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::{Algorithm, ConfigValue, Driver, RunConfig};
 use crate::mesh::{benchmark_mesh, read_obj, read_off, BenchmarkShape, Mesh};
-use crate::runtime::{parse_json, Json};
+use crate::runtime::{parse_json, render_json, Json};
 
 /// Supported manifest schema version.
 pub const MANIFEST_VERSION: u64 = 1;
@@ -128,6 +128,44 @@ pub fn parse_manifest(text: &str) -> Result<Vec<JobSpec>> {
         }
     }
     Ok(specs)
+}
+
+/// Split a manifest into per-job **payloads**: `(resolved name, single-job
+/// manifest text)` pairs, one per job, in manifest order. This is the
+/// dist-layer routing format — the coordinator validates the whole
+/// manifest once (this call parses it fully first), then ships each job
+/// to its worker as a self-contained manifest the worker re-parses with
+/// [`parse_manifest`]. Defaulted names (`job<N>`) are pinned into the
+/// payload so both sides agree on the job's identity regardless of its
+/// position in the original manifest.
+pub fn manifest_job_payloads(text: &str) -> Result<Vec<(String, String)>> {
+    let specs = parse_manifest(text)?;
+    let doc = parse_json(text).expect("parse_manifest validated the JSON");
+    let jobs = doc
+        .get("jobs")
+        .and_then(Json::as_arr)
+        .expect("parse_manifest validated the jobs array");
+    let mut payloads = Vec::with_capacity(specs.len());
+    for (spec, job) in specs.iter().zip(jobs) {
+        let Json::Obj(map) = job else { unreachable!("parse_job requires objects") };
+        let mut map = map.clone();
+        map.insert("name".to_string(), Json::Str(spec.name.clone()));
+        let payload = format!(
+            "{{\"version\": {MANIFEST_VERSION}, \"jobs\": [{}]}}",
+            render_json(&Json::Obj(map))
+        );
+        payloads.push((spec.name.clone(), payload));
+    }
+    Ok(payloads)
+}
+
+/// Parse a single-job payload produced by [`manifest_job_payloads`].
+pub fn parse_job_payload(text: &str) -> Result<JobSpec> {
+    let mut specs = parse_manifest(text)?;
+    if specs.len() != 1 {
+        bail!("job payload must contain exactly one job, found {}", specs.len());
+    }
+    Ok(specs.pop().expect("checked len"))
 }
 
 fn parse_job(job: &Json, index: usize) -> Result<JobSpec> {
@@ -314,5 +352,29 @@ mod tests {
     fn file_stem_sanitizes() {
         let spec = JobSpec::from_config("job/../weird name", RunConfig::default());
         assert_eq!(spec.file_stem(), "job_.._weird_name");
+    }
+
+    #[test]
+    fn job_payloads_round_trip_and_pin_defaulted_names() {
+        let payloads = manifest_job_payloads(MANIFEST).unwrap();
+        assert_eq!(payloads.len(), 2);
+        assert_eq!(payloads[0].0, "blob-soam");
+        assert_eq!(payloads[1].0, "job1", "defaulted name pinned into the payload");
+        let originals = parse_manifest(MANIFEST).unwrap();
+        for ((name, payload), original) in payloads.iter().zip(&originals) {
+            let spec = parse_job_payload(payload)
+                .unwrap_or_else(|e| panic!("payload for {name} must re-parse: {e}\n{payload}"));
+            assert_eq!(&spec.name, name);
+            assert_eq!(spec.cfg.shape, original.cfg.shape);
+            assert_eq!(spec.cfg.driver, original.cfg.driver);
+            assert_eq!(spec.cfg.algorithm, original.cfg.algorithm);
+            assert_eq!(spec.cfg.seed, original.cfg.seed);
+            assert_eq!(spec.cfg.regions, original.cfg.regions);
+            assert_eq!(spec.cfg.update_threads, original.cfg.update_threads);
+            assert_eq!(spec.cfg.limits.max_signals, original.cfg.limits.max_signals);
+            assert_eq!(spec.retries, original.retries);
+        }
+        // A multi-job text is not a valid single-job payload.
+        assert!(parse_job_payload(MANIFEST).is_err());
     }
 }

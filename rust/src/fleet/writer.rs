@@ -14,10 +14,19 @@
 //! the result channel and the writer thread *keeps running* — a failed
 //! checkpoint must cost at most one recovery generation, never the
 //! write-out path for every other job. The scheduler polls outcomes each
-//! round and surfaces failures as progress lines; [`CheckpointWriter::drain`]
-//! blocks until every queued write has landed (called before restore
-//! fallbacks and at end of run, so "last good generation" is on disk, not
-//! in a queue).
+//! round and surfaces failures as progress lines *and* per-job report
+//! notes; [`CheckpointWriter::drain`] blocks until every queued write has
+//! landed (called before restore fallbacks and at end of run, so "last
+//! good generation" is on disk, not in a queue).
+//!
+//! The queue is **bounded** ([`CheckpointWriter::with_capacity`]): a
+//! writer falling behind (slow disk, fsync storms) makes [`enqueue`]
+//! return `false` — the scheduler drops that generation and records a
+//! per-job note instead of growing an unbounded backlog of snapshot
+//! buffers. Dropping a *periodic* checkpoint is safe by construction: it
+//! only widens the resume window back to the previous generation.
+//!
+//! [`enqueue`]: CheckpointWriter::enqueue
 
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
@@ -49,10 +58,24 @@ pub struct CheckpointWriter {
     outcomes: Receiver<WriteOutcome>,
     handle: Option<JoinHandle<()>>,
     in_flight: usize,
+    /// Most writes allowed in flight before [`Self::enqueue`] refuses.
+    capacity: usize,
 }
+
+/// Default bound on queued-but-unwritten checkpoints. Deep enough that a
+/// healthy writer never hits it (a fleet checkpoints one generation per
+/// job per cadence), shallow enough that a wedged disk cannot buffer
+/// gigabytes of snapshot bytes.
+pub const DEFAULT_QUEUE_CAPACITY: usize = 64;
 
 impl CheckpointWriter {
     pub fn new() -> Self {
+        Self::with_capacity(DEFAULT_QUEUE_CAPACITY)
+    }
+
+    /// A writer whose queue holds at most `capacity` in-flight writes
+    /// (minimum 1).
+    pub fn with_capacity(capacity: usize) -> Self {
         let (tx, rx) = channel::<WriteRequest>();
         let (out_tx, out_rx) = channel::<WriteOutcome>();
         let handle = std::thread::Builder::new()
@@ -79,13 +102,27 @@ impl CheckpointWriter {
                 }
             })
             .expect("spawn checkpoint writer");
-        Self { tx: Some(tx), outcomes: out_rx, handle: Some(handle), in_flight: 0 }
+        Self {
+            tx: Some(tx),
+            outcomes: out_rx,
+            handle: Some(handle),
+            in_flight: 0,
+            capacity: capacity.max(1),
+        }
     }
 
-    /// Queue one encoded snapshot for durable write-out. Returns
-    /// immediately; the outcome arrives via [`Self::poll`] /
-    /// [`Self::drain`].
-    pub fn enqueue(&mut self, job: &str, path: PathBuf, bytes: Vec<u8>) {
+    /// Queue one encoded snapshot for durable write-out. Returns `true`
+    /// immediately on acceptance (the outcome arrives via [`Self::poll`] /
+    /// [`Self::drain`]); `false` when the bounded queue is full — the
+    /// caller drops this generation and should record why.
+    #[must_use = "a false return means the checkpoint was dropped"]
+    pub fn enqueue(&mut self, job: &str, path: PathBuf, bytes: Vec<u8>) -> bool {
+        // `in_flight` counts writes whose outcome has not been collected
+        // yet; the scheduler polls every round, so a full queue means the
+        // writer genuinely is not keeping up.
+        if self.in_flight >= self.capacity {
+            return false;
+        }
         let req = WriteRequest { job: job.to_string(), path, bytes };
         self.tx
             .as_ref()
@@ -93,6 +130,7 @@ impl CheckpointWriter {
             .send(req)
             .expect("checkpoint writer thread alive");
         self.in_flight += 1;
+        true
     }
 
     /// Collect every outcome that has landed so far, without blocking.
@@ -175,8 +213,8 @@ mod tests {
         let mut w = CheckpointWriter::new();
         let p1 = scratch("writer_a.msgsnap");
         let p2 = scratch("writer_b.msgsnap");
-        w.enqueue("a", p1.clone(), vec![1, 2, 3]);
-        w.enqueue("b", p2.clone(), vec![4, 5]);
+        assert!(w.enqueue("a", p1.clone(), vec![1, 2, 3]));
+        assert!(w.enqueue("b", p2.clone(), vec![4, 5]));
         let outcomes = w.drain();
         assert_eq!(outcomes.len(), 2);
         assert!(outcomes.iter().all(|o| o.result.is_ok()), "{outcomes:?}");
@@ -194,7 +232,7 @@ mod tests {
         let p = scratch("writer_drop.msgsnap");
         std::fs::remove_file(&p).ok();
         let mut w = CheckpointWriter::new();
-        w.enqueue("d", p.clone(), vec![9; 64]);
+        assert!(w.enqueue("d", p.clone(), vec![9; 64]));
         drop(w);
         assert_eq!(std::fs::read(&p).unwrap(), vec![9; 64]);
         std::fs::remove_file(&p).ok();
@@ -209,8 +247,8 @@ mod tests {
         fault::install(fault::parse_faults(&format!("checkpoint_write/{stem}:panic")).unwrap());
 
         let mut w = CheckpointWriter::new();
-        w.enqueue("bad", p_bad.clone(), vec![1]);
-        w.enqueue("good", p_good.clone(), vec![2]);
+        assert!(w.enqueue("bad", p_bad.clone(), vec![1]));
+        assert!(w.enqueue("good", p_good.clone(), vec![2]));
         let outcomes = w.drain();
         assert_eq!(outcomes.len(), 2, "writer must survive the panic");
         let bad = outcomes.iter().find(|o| o.job == "bad").unwrap();
@@ -230,10 +268,33 @@ mod tests {
         let stem = p.file_stem().unwrap().to_str().unwrap();
         fault::install(fault::parse_faults(&format!("checkpoint_write/{stem}:err")).unwrap());
         let mut w = CheckpointWriter::new();
-        w.enqueue("e", p.clone(), vec![7]);
+        assert!(w.enqueue("e", p.clone(), vec![7]));
         let outcomes = w.drain();
         assert_eq!(outcomes.len(), 1);
         assert!(outcomes[0].result.as_ref().unwrap_err().contains("injected"));
         assert!(!p.exists(), "err action writes nothing");
+    }
+
+    #[test]
+    fn full_queue_refuses_instead_of_buffering() {
+        // Capacity 1, and the one slot is stuck: a `delay`-free way to
+        // wedge the writer is a panic fault that still takes the slot
+        // until drained. Simpler: enqueue 1 with capacity 1, don't poll,
+        // and observe the second enqueue refused regardless of whether
+        // the first already landed.
+        let p1 = scratch("writer_cap_a.msgsnap");
+        let p2 = scratch("writer_cap_b.msgsnap");
+        let mut w = CheckpointWriter::with_capacity(1);
+        assert!(w.enqueue("a", p1.clone(), vec![1]));
+        assert!(!w.enqueue("b", p2.clone(), vec![2]), "queue bounded at 1");
+        let outcomes = w.drain();
+        assert_eq!(outcomes.len(), 1, "the refused write never entered the queue");
+        // With the outcome collected, capacity frees up again.
+        assert!(w.enqueue("b", p2.clone(), vec![2]));
+        assert_eq!(w.drain().len(), 1);
+        for p in [p1, p2] {
+            std::fs::remove_file(&p).ok();
+            std::fs::remove_file(crate::fleet::snapshot::prev_path(&p)).ok();
+        }
     }
 }

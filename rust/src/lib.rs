@@ -34,6 +34,7 @@
 //! | [`coordinator`] | batch-update executor, m-schedule, winner locks, pipeline |
 //! | [`engine`] | convergence drivers + resumable [`engine::ConvergenceSession`]s |
 //! | [`fleet`] | multi-network orchestration: jobs manifest, shared-pool scheduler, bit-exact checkpoint/restore |
+//! | [`dist`] | fault-tolerant multi-process fleet: coordinator/worker split, heartbeats, partition-safe job migration over snapshot bytes |
 //! | [`config`] | config structs, TOML-subset parser, per-mesh presets |
 //! | [`cli`] | argument parsing for the `msgsn` binary |
 //! | [`metrics`] | phase timers, counters, table rendering |
@@ -44,6 +45,7 @@ pub mod bench;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod dist;
 pub mod engine;
 pub mod findwinners;
 pub mod fleet;

@@ -18,6 +18,13 @@ use msgsn::rng::Rng;
 use msgsn::runtime::Registry;
 
 fn main() -> ExitCode {
+    // Arm-time validation of the env fault profile: a malformed
+    // MSGSN_FAULTS is a startup usage error, not a panic at whatever
+    // fault point happens to fire first, hours into a run.
+    if let Err(e) = msgsn::runtime::fault::validate_env() {
+        eprintln!("error: MSGSN_FAULTS: {e}");
+        return ExitCode::FAILURE;
+    }
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = match parse(&args) {
         Ok(c) => c,
@@ -44,6 +51,18 @@ fn main() -> ExitCode {
                 }
             }
         }
+        // Same: the coordinator folds job outcomes into exit codes
+        // 0/2/3 plus 4 for "every worker lost".
+        Command::Coordinator(p) => {
+            return match cmd_coordinator(&p) {
+                Ok(code) => code,
+                Err(e) => {
+                    eprintln!("error: {e:#}");
+                    ExitCode::FAILURE
+                }
+            }
+        }
+        Command::Worker(p) => cmd_worker(&p),
         Command::Reproduce(p) => cmd_reproduce(&p),
         Command::Mesh(p) => cmd_mesh(&p),
         Command::Artifacts(p) => cmd_artifacts(&p),
@@ -209,6 +228,107 @@ fn cmd_fleet(p: &Parsed) -> Result<ExitCode> {
         FleetOutcome::AllFailed => eprintln!("fleet: all jobs quarantined (exit 3)"),
     }
     Ok(ExitCode::from(outcome.exit_code()))
+}
+
+/// Distributed fleet, coordinator side: own the manifest, accept worker
+/// TCP connections, route jobs, migrate on worker death (`dist`
+/// subsystem). Exit codes 0/2/3 mirror `msgsn fleet`; 4 = every worker
+/// died or hung with jobs outstanding.
+fn cmd_coordinator(p: &Parsed) -> Result<ExitCode> {
+    use msgsn::dist::{Coordinator, DistOptions, DistOutcome, Link, TcpPipe};
+
+    let manifest_path = p
+        .get("jobs")
+        .context("--jobs <jobs.json> is required (see `msgsn help` for the schema)")?;
+    let text = std::fs::read_to_string(manifest_path)
+        .with_context(|| format!("reading jobs manifest {manifest_path}"))?;
+    let payloads = msgsn::fleet::manifest_job_payloads(&text)?;
+    let quiet = p.flag("quiet");
+
+    let listen = p.get("listen").unwrap_or("127.0.0.1:7070");
+    let expected: usize = p.get_parsed("workers", 1usize, "integer")?.max(1);
+    let heartbeat_secs: f64 = p
+        .get("heartbeat-timeout")
+        .map(|s| s.parse::<f64>().context("--heartbeat-timeout expects seconds"))
+        .transpose()?
+        .unwrap_or(5.0);
+    let opts = DistOptions {
+        heartbeat_timeout: std::time::Duration::from_secs_f64(heartbeat_secs.max(0.001)),
+        max_retries: p.get_parsed("max-retries", 2u32, "integer")?,
+        ..DistOptions::default()
+    };
+
+    let listener = std::net::TcpListener::bind(listen)
+        .with_context(|| format!("binding coordinator listener on {listen}"))?;
+    if !quiet {
+        println!(
+            "coordinator: {} jobs, waiting for {expected} worker(s) on {listen}",
+            payloads.len()
+        );
+    }
+    let mut coordinator = Coordinator::new(payloads, opts);
+    for _ in 0..expected {
+        let (stream, peer) = listener.accept().context("accepting a worker connection")?;
+        let label = peer.to_string();
+        let pipe = TcpPipe::new(stream).context("configuring the worker socket")?;
+        if !quiet {
+            println!("coordinator: worker link from {label}");
+        }
+        coordinator.add_worker(&label, Box::new(Link::new(pipe, label.clone())));
+    }
+
+    let report = coordinator.run(|line| {
+        if !quiet {
+            println!("{line}");
+        }
+    });
+    print!("{}", report.to_table().render());
+    let outcome = report.outcome();
+    match outcome {
+        DistOutcome::AllDone => {}
+        DistOutcome::PartialFailure => {
+            eprintln!("coordinator: partial failure — some jobs quarantined (exit 2)")
+        }
+        DistOutcome::AllFailed => eprintln!("coordinator: all jobs quarantined (exit 3)"),
+        DistOutcome::WorkersLost => {
+            eprintln!("coordinator: every worker died/hung with jobs outstanding (exit 4)")
+        }
+    }
+    Ok(ExitCode::from(outcome.exit_code()))
+}
+
+/// Distributed fleet, worker side: connect to the coordinator and run a
+/// protocol-driven fleet until it sends shutdown.
+fn cmd_worker(p: &Parsed) -> Result<()> {
+    use msgsn::dist::{run_worker, Link, TcpPipe, WorkerOptions};
+
+    let addr = p.get("connect").unwrap_or("127.0.0.1:7070");
+    let opts = WorkerOptions {
+        name: p
+            .get("name")
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("w{}", std::process::id())),
+        stride: p.get_parsed("stride", 1u64, "integer")?.max(1),
+        checkpoint_rounds: p.get_parsed("checkpoint-rounds", 8u64, "integer")?,
+        ..WorkerOptions::default()
+    };
+    let quiet = p.flag("quiet");
+
+    let pipe = TcpPipe::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    let mut link = Link::new(pipe, opts.name.clone());
+    if !quiet {
+        println!("worker {}: connected to {addr}", opts.name);
+    }
+    run_worker(&mut link, &opts, |line| {
+        if !quiet {
+            println!("{line}");
+        }
+    })
+    .map_err(anyhow::Error::msg)?;
+    if !quiet {
+        println!("worker {}: shutdown received, exiting", opts.name);
+    }
+    Ok(())
 }
 
 /// Re-run (same seed) keeping the network, then export its triangulation.

@@ -202,6 +202,13 @@ impl<'a> ByteReader<'a> {
         Ok(n)
     }
 
+    /// Borrow the next `n` raw bytes (validated against the remaining
+    /// buffer first — truncation is an `Err`, never a panic). The wire
+    /// codec uses this for checkpoint blobs after a `len_prefix` check.
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8], ByteError> {
+        self.take(n)
+    }
+
     /// Expect an exact magic byte sequence.
     pub fn expect_raw(&mut self, magic: &[u8]) -> Result<(), ByteError> {
         let got = self.take(magic.len())?;

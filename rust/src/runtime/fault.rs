@@ -15,10 +15,16 @@
 //! spec         = point ["/" scope] ":" action ["@" trigger]
 //! point        = "checkpoint_write" | "snapshot_decode"
 //!              | "session_step" | "job"            (alias) | "pool_job"
+//!              | "transport_send" | "transport_recv" | "worker"
 //! action       = "truncate" "@" BYTES              (torn write, 1st hit)
 //!              | "truncate" "=" BYTES ["@" trigger]
 //!              | "panic"    ["@" trigger]
 //!              | "err"      ["@" trigger]
+//!              | "drop"     ["@" trigger]          (transport: lose a frame)
+//!              | "delay" "=" N ["@" trigger]       (transport: hold a frame
+//!                                                   N operations; worker:
+//!                                                   stall N milliseconds)
+//!              | "dup"      ["@" trigger]          (transport: frame twice)
 //! trigger      = "turn=" N      (first evaluation whose turn ≥ N)
 //!              | N              (the N-th evaluation; default 1)
 //! ```
@@ -36,8 +42,10 @@
 //! decodes under scope `a.msgsnap`, so latest and previous can be targeted
 //! separately); `pool_job` matches the pool's diagnostic label
 //! ([`crate::runtime::WorkerPool::with_label`] — engine pools are
-//! unlabeled). A spec without a scope matches every evaluation of its
-//! point.
+//! unlabeled); `transport_send`/`transport_recv` match the link's peer
+//! label and `worker` matches the worker process name (the dist layer,
+//! `rust/src/dist/`). A spec without a scope matches every evaluation of
+//! its point.
 //!
 //! **Determinism + one-shot**: every spec fires at most once and is then
 //! retired; every live spec matching a point observes each evaluation (its
@@ -51,10 +59,12 @@
 //! one-time env install check and the armed flag) when no spec is
 //! installed — the registry never takes a lock on the hot path.
 //!
-//! A malformed `MSGSN_FAULTS` value panics at the first fault-point
-//! evaluation: a typo'd CI profile must fail the build loudly, not
-//! silently test nothing (`rust/tests/fleet.rs` additionally validates the
-//! profile in a dedicated test for a clean failure message).
+//! A malformed `MSGSN_FAULTS` value fails **at arm time**: `main()` calls
+//! [`validate_env`] before dispatching any command, so a typo'd chaos
+//! profile exits immediately with the parse diagnostic instead of only
+//! failing when (or if) the first fault point fires. Library users that
+//! never reach `main` keep the lazy backstop: the first [`fire`] panics on
+//! a malformed profile rather than silently testing nothing.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Mutex, MutexGuard, Once, OnceLock, PoisonError};
@@ -82,6 +92,19 @@ pub enum FaultPoint {
     /// the scoped-thread semantics the pool guarantees). Scope = the pool's
     /// diagnostic label ([`crate::runtime::WorkerPool::with_label`]).
     PoolJob,
+    /// A dist transport link sending one frame. `drop` loses the frame,
+    /// `delay=N` holds it back for N subsequent sends, `dup` transmits it
+    /// twice, `truncate=N` cuts the frame (the receiver must reject it),
+    /// `err` fails the send, `panic` panics. Scope = the link's peer label.
+    TransportSend,
+    /// A dist transport link receiving one frame (same action menu as
+    /// [`FaultPoint::TransportSend`], applied on the receive side).
+    TransportRecv,
+    /// A dist worker process at the top of its scheduler round. `panic`
+    /// kills the worker (the worker-death simulation), `delay=N` stalls it
+    /// N milliseconds without dying (the hung-worker simulation that only
+    /// a heartbeat timeout can detect). Scope = the worker name.
+    WorkerStep,
 }
 
 impl FaultPoint {
@@ -91,6 +114,9 @@ impl FaultPoint {
             FaultPoint::SnapshotDecode => "snapshot_decode",
             FaultPoint::SessionStep => "session_step",
             FaultPoint::PoolJob => "pool_job",
+            FaultPoint::TransportSend => "transport_send",
+            FaultPoint::TransportRecv => "transport_recv",
+            FaultPoint::WorkerStep => "worker",
         }
     }
 
@@ -101,6 +127,9 @@ impl FaultPoint {
             // `job` reads better in profiles targeting fleet jobs.
             "session_step" | "job" => Some(FaultPoint::SessionStep),
             "pool_job" => Some(FaultPoint::PoolJob),
+            "transport_send" => Some(FaultPoint::TransportSend),
+            "transport_recv" => Some(FaultPoint::TransportRecv),
+            "worker" => Some(FaultPoint::WorkerStep),
             _ => None,
         }
     }
@@ -117,6 +146,17 @@ pub enum FaultAction {
     Panic,
     /// Return an injected error from the fault point.
     Error,
+    /// Transport points: lose the frame — sent into the void / received
+    /// and discarded. The partition simulation.
+    Drop,
+    /// Transport points: hold the frame back for N subsequent operations
+    /// on the same link (reordering/stall simulation). Worker point: stall
+    /// the worker N milliseconds without killing it (the hung worker only
+    /// a heartbeat timeout catches).
+    Delay(u64),
+    /// Transport points: transmit/deliver the frame twice — the duplicate
+    /// the protocol's idempotent acks must absorb.
+    Dup,
 }
 
 /// When a spec fires (deterministic; see module docs).
@@ -197,6 +237,28 @@ fn ensure_env_installed() {
             Err(e) => panic!("{ENV_VAR}: {e}"),
         }
     });
+}
+
+/// Validate (and arm) the `MSGSN_FAULTS` profile **now**, instead of at
+/// the first fault-point evaluation. `main()` calls this before
+/// dispatching any command so a typo'd chaos profile fails the run
+/// immediately with the parse diagnostic — today the lazy install would
+/// only panic when (or if) a fault point fires. Returns the number of
+/// specs armed from the environment (0 when unset/empty); `Err` carries
+/// the parse diagnostic and leaves nothing armed.
+pub fn validate_env() -> Result<usize, String> {
+    let text = match std::env::var(ENV_VAR) {
+        Ok(text) if !text.trim().is_empty() => text,
+        _ => return Ok(0),
+    };
+    let specs = parse_faults(&text)?;
+    let count = specs.len();
+    // Consume the lazy one-shot first so it cannot clobber this install,
+    // then arm the validated profile (idempotent if the lazy path already
+    // installed the same env profile).
+    ensure_env_installed();
+    install_inner(specs);
+    Ok(count)
 }
 
 /// Install a fault profile programmatically, replacing whatever is armed
@@ -326,7 +388,8 @@ fn parse_spec(raw: &str) -> Result<FaultSpec, String> {
     let point = FaultPoint::from_name(point_name).ok_or_else(|| {
         format!(
             "unknown fault point {point_name:?} \
-             (expected checkpoint_write|snapshot_decode|session_step|job|pool_job)"
+             (expected checkpoint_write|snapshot_decode|session_step|job|pool_job\
+             |transport_send|transport_recv|worker)"
         )
     })?;
     let (head, at_suffix) = match rest.split_once('@') {
@@ -361,15 +424,27 @@ fn parse_spec(raw: &str) -> Result<FaultSpec, String> {
                 (FaultAction::Truncate(parse_n("truncate@", bytes)?), FaultTrigger::Hit(1))
             }
         },
-        "panic" | "err" => {
+        "panic" | "err" | "drop" | "dup" => {
             if eq_arg.is_some() {
                 return Err(format!("{action_name} takes no '=' argument"));
             }
-            let action =
-                if action_name == "panic" { FaultAction::Panic } else { FaultAction::Error };
+            let action = match action_name {
+                "panic" => FaultAction::Panic,
+                "err" => FaultAction::Error,
+                "drop" => FaultAction::Drop,
+                _ => FaultAction::Dup,
+            };
             (action, parse_trigger(at_suffix)?)
         }
-        other => return Err(format!("unknown action {other:?} (expected truncate|panic|err)")),
+        "delay" => {
+            let n = eq_arg.ok_or("delay needs a count: delay=N")?;
+            (FaultAction::Delay(parse_n("delay=", n)?), parse_trigger(at_suffix)?)
+        }
+        other => {
+            return Err(format!(
+                "unknown action {other:?} (expected truncate|panic|err|drop|delay|dup)"
+            ))
+        }
     };
     Ok(FaultSpec { point, scope, action, trigger })
 }
@@ -430,6 +505,45 @@ mod tests {
     }
 
     #[test]
+    fn grammar_parses_transport_points_and_actions() {
+        let specs = parse_faults(
+            "transport_recv:drop@turn=32,transport_send/w1:delay=3@2,\
+             transport_recv/w2:dup,worker:panic@2,worker/w-slow:delay=500@turn=4",
+        )
+        .unwrap();
+        assert_eq!(specs.len(), 5);
+        assert_eq!(
+            specs[0],
+            FaultSpec {
+                point: FaultPoint::TransportRecv,
+                scope: None,
+                action: FaultAction::Drop,
+                trigger: FaultTrigger::Turn(32),
+            }
+        );
+        assert_eq!(
+            specs[1],
+            FaultSpec {
+                point: FaultPoint::TransportSend,
+                scope: Some("w1".to_string()),
+                action: FaultAction::Delay(3),
+                trigger: FaultTrigger::Hit(2),
+            }
+        );
+        assert_eq!(specs[2].action, FaultAction::Dup);
+        assert_eq!(specs[3].point, FaultPoint::WorkerStep);
+        assert_eq!(
+            specs[4],
+            FaultSpec {
+                point: FaultPoint::WorkerStep,
+                scope: Some("w-slow".to_string()),
+                action: FaultAction::Delay(500),
+                trigger: FaultTrigger::Turn(4),
+            }
+        );
+    }
+
+    #[test]
     fn grammar_rejects_malformed_specs() {
         for bad in [
             "nonsense",
@@ -441,9 +555,23 @@ mod tests {
             "checkpoint_write:truncate@x",
             "job:panic=3",
             "job/:panic",
+            "transport_send:delay",
+            "transport_send:delay=x",
+            "transport_recv:drop=2",
+            "worker:dup=1",
         ] {
             assert!(parse_faults(bad).is_err(), "{bad:?} must be rejected");
         }
+    }
+
+    #[test]
+    fn validate_env_is_clean_on_the_current_environment() {
+        // `MSGSN_FAULTS` is either unset (normal runs, → Ok(0)) or holds
+        // the CI chaos profile (→ Ok(n), armed). Either way a well-formed
+        // environment must validate; re-arming under the guard is safe
+        // because the guard's drop reinstalls the env profile fresh.
+        let _guard = test_lock();
+        assert!(validate_env().is_ok());
     }
 
     // Every spec these tests install into the PROCESS-GLOBAL registry is

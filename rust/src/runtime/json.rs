@@ -52,6 +52,72 @@ impl Json {
     }
 }
 
+/// Render a value back to compact JSON text. The round-trip contract is
+/// `parse_json(render_json(v)) == v`: numbers print through Rust's
+/// shortest-round-trip `f64` formatting (integral values print without a
+/// fraction — `7`, not `7.0`), strings re-escape quotes, backslashes and
+/// control characters, object keys keep `BTreeMap` order. Non-finite
+/// numbers (unreachable from `parse_json`) render as `null`, the only
+/// valid-JSON option.
+pub fn render_json(v: &Json) -> String {
+    let mut out = String::new();
+    render_into(v, &mut out);
+    out
+}
+
+fn render_into(v: &Json, out: &mut String) {
+    match v {
+        Json::Null => out.push_str("null"),
+        Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Json::Num(x) => {
+            if x.is_finite() {
+                out.push_str(&format!("{x}"));
+            } else {
+                out.push_str("null");
+            }
+        }
+        Json::Str(s) => render_string(s, out),
+        Json::Arr(items) => {
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                render_into(item, out);
+            }
+            out.push(']');
+        }
+        Json::Obj(map) => {
+            out.push('{');
+            for (i, (k, val)) in map.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                render_string(k, out);
+                out.push(':');
+                render_into(val, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+fn render_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
 /// Parse error with byte offset.
 #[derive(Clone, Debug, PartialEq)]
 pub struct JsonError {
@@ -308,5 +374,24 @@ mod tests {
     fn empty_containers() {
         assert_eq!(parse_json("{}").unwrap(), Json::Obj(BTreeMap::new()));
         assert_eq!(parse_json("[]").unwrap(), Json::Arr(vec![]));
+    }
+
+    #[test]
+    fn render_round_trips() {
+        for doc in [
+            r#"{"version": 1, "jobs": [{"name": "a b", "seed": 7, "retries": 0,
+                "config": {"max_signals": 4000, "insertion_threshold": 0.2}}]}"#,
+            r#"{"neg": -1.5e-3, "big": 1e30, "zero": 0, "text": "q\"\\\n\tend"}"#,
+            "[[1,2],[3],[],{},null,true,false]",
+        ] {
+            let v = parse_json(doc).unwrap();
+            let rendered = render_json(&v);
+            assert_eq!(parse_json(&rendered).unwrap(), v, "{rendered}");
+        }
+        // Integral floats print as integers (manifest schema expects them).
+        assert_eq!(render_json(&Json::Num(7.0)), "7");
+        assert_eq!(render_json(&Json::Num(f64::NAN)), "null");
+        // Control characters escape to \uXXXX.
+        assert_eq!(render_json(&Json::Str("\u{1}".into())), "\"\\u0001\"");
     }
 }

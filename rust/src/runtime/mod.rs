@@ -18,7 +18,7 @@ mod registry;
 
 pub use bytes::{ByteError, ByteReader, ByteWriter};
 pub use fw::PjrtFindWinners;
-pub use json::{parse_json, Json, JsonError};
+pub use json::{parse_json, render_json, Json, JsonError};
 pub use manifest::{ArtifactEntry, Manifest};
 pub use pool::{resolve_threads, steal_chunk, WorkerPool};
 pub use registry::{ExecStats, Registry};

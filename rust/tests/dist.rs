@@ -1,0 +1,287 @@
+//! Dist integration tests — the PR 8 acceptance points, end to end over
+//! the in-process transport (real threads, real protocol, real fleet
+//! scheduling — only the pipe is a channel instead of a socket):
+//!
+//! - **baseline**: a coordinator + N worker threads complete a manifest
+//!   with every final network **bit-identical** to a single-process fleet
+//!   run of the same manifest (the distribution layer adds routing, not
+//!   state);
+//! - **worker kill**: a worker killed by an injected panic at an
+//!   arbitrary scheduler round has its jobs migrated to a survivor from
+//!   the last shipped checkpoint generation — finals still bit-identical
+//!   to the undisturbed run;
+//! - **hung worker**: a worker that stalls (injected delay) without dying
+//!   is evicted on the heartbeat timeout and its jobs complete elsewhere,
+//!   with no deadlock — and the woken zombie is partition-safe (never
+//!   polled again);
+//! - **all workers dead**: documented non-zero exit (code 4,
+//!   `DistOutcome::WorkersLost`) instead of a hang;
+//! - **lossy links**: deterministic dropped/duplicated frames are
+//!   absorbed by the seq/ack/retransmission discipline.
+//!
+//! The CI chaos matrix cell re-runs this suite single-threaded under
+//! `MSGSN_FAULTS="transport_recv:drop@turn=32,worker:panic@2"` — every
+//! recovery path is *transparent*, so the same assertions must hold with
+//! the unscoped chaos profile armed (tests that install their own scoped
+//! specs hold the fault test lock, which suspends the env profile for
+//! their duration and re-arms it after).
+
+use std::time::Duration;
+
+use msgsn::dist::{
+    channel_transport_pair, run_worker, Coordinator, DistJobStatus, DistOptions, DistOutcome,
+    WorkerOptions,
+};
+use msgsn::engine::ConvergenceSession;
+use msgsn::fleet::snapshot::restore_session;
+use msgsn::fleet::{manifest_job_payloads, parse_manifest, Fleet, FleetOptions, JobSpec};
+use msgsn::runtime::fault;
+use msgsn::som::Network;
+
+/// Bitwise network equality (same contract as the fleet suite's helper).
+fn assert_networks_identical(a: &Network, b: &Network, label: &str) {
+    assert_eq!(a.capacity(), b.capacity(), "{label}: slab capacity");
+    assert_eq!(a.len(), b.len(), "{label}: live units");
+    assert_eq!(a.edge_count(), b.edge_count(), "{label}: edges");
+    for id in 0..a.capacity() as u32 {
+        assert_eq!(a.is_alive(id), b.is_alive(id), "{label}: aliveness of {id}");
+        if !a.is_alive(id) {
+            continue;
+        }
+        let (ua, ub) = (a.unit(id), b.unit(id));
+        for (va, vb, what) in [
+            (ua.pos.x, ub.pos.x, "pos.x"),
+            (ua.pos.y, ub.pos.y, "pos.y"),
+            (ua.pos.z, ub.pos.z, "pos.z"),
+            (ua.firing, ub.firing, "firing"),
+            (ua.error, ub.error, "error"),
+            (ua.threshold, ub.threshold, "threshold"),
+        ] {
+            assert_eq!(va.to_bits(), vb.to_bits(), "{label}: unit {id} {what}");
+        }
+        let ea: Vec<(u32, u32)> =
+            a.edges_of(id).iter().map(|e| (e.to, e.age.to_bits())).collect();
+        let eb: Vec<(u32, u32)> =
+            b.edges_of(id).iter().map(|e| (e.to, e.age.to_bits())).collect();
+        assert_eq!(ea, eb, "{label}: edges of {id}");
+    }
+}
+
+/// A small-jobs manifest (tiny mesh, few signals): the suite restores
+/// sessions and runs reference fleets repeatedly, so job size is the
+/// suite's wall-clock.
+fn manifest(jobs: &[(&str, u64)]) -> String {
+    let rows: Vec<String> = jobs
+        .iter()
+        .map(|(name, seed)| {
+            format!(
+                r#"{{"name": "{name}", "mesh": "blob", "algorithm": "soam", "driver": "multi",
+                     "seed": {seed},
+                     "config": {{"mesh_resolution": 16, "insertion_threshold": 0.2,
+                                 "max_signals": 4000}}}}"#
+            )
+        })
+        .collect();
+    format!(r#"{{"version": 1, "jobs": [{}]}}"#, rows.join(","))
+}
+
+/// The undisturbed single-process reference: the same manifest through
+/// `fleet::Fleet` — what every dist run must be bit-identical to.
+fn reference_fleet(text: &str) -> Fleet {
+    let specs = parse_manifest(text).unwrap();
+    let mut fleet = Fleet::new(specs).unwrap();
+    fleet.run(&FleetOptions::default(), |_| {}).unwrap();
+    fleet
+}
+
+/// Restore a final snapshot shipped over the wire into a fresh session.
+fn restored_session(spec: &JobSpec, bytes: &[u8]) -> ConvergenceSession {
+    let mesh = spec.build_mesh().unwrap();
+    let mut s = ConvergenceSession::new(&spec.cfg, &mesh, None).unwrap();
+    restore_session(&mut s, bytes).unwrap_or_else(|e| panic!("restoring {}: {e}", spec.name));
+    s
+}
+
+/// Spawn one worker thread per name over in-process links, registering
+/// the coordinator ends. Worker names double as fault scopes — each test
+/// uses unique names so scoped specs can never leak across tests.
+fn spawn_workers(
+    coordinator: &mut Coordinator,
+    names: &[&str],
+    checkpoint_rounds: u64,
+) -> Vec<std::thread::JoinHandle<Result<(), String>>> {
+    names
+        .iter()
+        .map(|name| {
+            let (coord_end, mut worker_end) = channel_transport_pair(name);
+            coordinator.add_worker(name, Box::new(coord_end));
+            let opts = WorkerOptions {
+                name: name.to_string(),
+                stride: 1,
+                checkpoint_rounds,
+                idle_poll: Duration::from_millis(2),
+            };
+            std::thread::Builder::new()
+                .name(format!("msgsn-{name}"))
+                .spawn(move || run_worker(&mut worker_end, &opts, |_| {}))
+                .unwrap()
+        })
+        .collect()
+}
+
+/// Assert every job finished and is bit-identical to the single-process
+/// reference run of the same manifest.
+fn assert_bit_exact(coordinator: &Coordinator, text: &str) {
+    let reference = reference_fleet(text);
+    let specs = parse_manifest(text).unwrap();
+    for (k, spec) in specs.iter().enumerate() {
+        let bytes = coordinator
+            .final_snapshot(&spec.name)
+            .unwrap_or_else(|| panic!("no final snapshot for {}", spec.name));
+        let restored = restored_session(spec, bytes);
+        assert_networks_identical(
+            reference.jobs()[k].session().unwrap().algo().net(),
+            restored.algo().net(),
+            &spec.name,
+        );
+    }
+}
+
+#[test]
+fn dist_fleet_matches_single_process_fleet() {
+    let text = manifest(&[("dj-a", 11), ("dj-b", 12), ("dj-c", 13)]);
+    let mut coordinator = Coordinator::new(
+        manifest_job_payloads(&text).unwrap(),
+        DistOptions { heartbeat_timeout: Duration::from_secs(30), ..DistOptions::default() },
+    );
+    let workers = spawn_workers(&mut coordinator, &["zz-dist-base-w0", "zz-dist-base-w1"], 4);
+    let report = coordinator.run(|_| {});
+    assert_eq!(report.outcome(), DistOutcome::AllDone, "{report:?}");
+    assert_eq!(report.outcome().exit_code(), 0);
+    for row in &report.rows {
+        assert_eq!(row.status, DistJobStatus::Done, "{row:?}");
+    }
+    // Progress is fire-and-forget, so under the CI chaos profile a single
+    // counter update may be lost — but not every one of them.
+    assert!(report.rows.iter().any(|r| r.signals > 0), "progress counters flowed: {report:?}");
+    for w in workers {
+        let _ = w.join();
+    }
+    assert_bit_exact(&coordinator, &text);
+}
+
+#[test]
+fn worker_kill_migrates_jobs_bit_exactly() {
+    let _guard = fault::test_lock();
+    // Kill w1 at its 6th scheduler round — mid-job, after it has shipped
+    // at least two periodic checkpoint generations (cadence 2).
+    fault::install(fault::parse_faults("worker/zz-dist-kill-w1:panic@turn=6").unwrap());
+    let text = manifest(&[("dk-a", 21), ("dk-b", 22)]);
+    let mut coordinator = Coordinator::new(
+        manifest_job_payloads(&text).unwrap(),
+        DistOptions { heartbeat_timeout: Duration::from_secs(30), ..DistOptions::default() },
+    );
+    let workers = spawn_workers(&mut coordinator, &["zz-dist-kill-w0", "zz-dist-kill-w1"], 2);
+    let report = coordinator.run(|_| {});
+    assert_eq!(report.outcome(), DistOutcome::AllDone, "{report:?}");
+    assert!(
+        report.rows.iter().any(|r| r.migrations >= 1),
+        "the killed worker's job must have migrated: {report:?}"
+    );
+    for w in workers {
+        let _ = w.join(); // w1's thread died on the injected panic
+    }
+    assert_bit_exact(&coordinator, &text);
+}
+
+#[test]
+fn hung_worker_is_evicted_and_jobs_complete_elsewhere() {
+    let _guard = fault::test_lock();
+    // w0 stalls for 1.5s at its 3rd round — alive but silent far past the
+    // 250ms heartbeat window. Eviction must migrate its job and the run
+    // must terminate (no deadlock); the woken zombie keeps computing into
+    // a link nobody reads (partition safety) until the final Shutdown.
+    fault::install(fault::parse_faults("worker/zz-dist-hang-w0:delay=1500@turn=3").unwrap());
+    let text = manifest(&[("dh-a", 31), ("dh-b", 32)]);
+    let mut coordinator = Coordinator::new(
+        manifest_job_payloads(&text).unwrap(),
+        DistOptions {
+            heartbeat_timeout: Duration::from_millis(250),
+            ..DistOptions::default()
+        },
+    );
+    let workers = spawn_workers(&mut coordinator, &["zz-dist-hang-w0", "zz-dist-hang-w1"], 2);
+    let mut lines = Vec::new();
+    let report = coordinator.run(|l| lines.push(l.to_string()));
+    assert_eq!(report.outcome(), DistOutcome::AllDone, "{report:?}\n{lines:?}");
+    assert!(
+        lines.iter().any(|l| l.contains("evicted: heartbeat timeout")),
+        "eviction must come from the heartbeat detector: {lines:?}"
+    );
+    assert!(report.rows.iter().any(|r| r.migrations >= 1), "{report:?}");
+    for w in workers {
+        let _ = w.join(); // both exit on the Shutdown broadcast
+    }
+    assert_bit_exact(&coordinator, &text);
+}
+
+#[test]
+fn all_workers_dead_is_workers_lost_with_exit_code_4() {
+    let _guard = fault::test_lock();
+    fault::install(fault::parse_faults("worker/zz-dist-dead-w0:panic@turn=1").unwrap());
+    let text = manifest(&[("dd-a", 41)]);
+    let mut coordinator =
+        Coordinator::new(manifest_job_payloads(&text).unwrap(), DistOptions::default());
+    let workers = spawn_workers(&mut coordinator, &["zz-dist-dead-w0"], 2);
+    let report = coordinator.run(|_| {});
+    assert_eq!(report.outcome(), DistOutcome::WorkersLost, "{report:?}");
+    assert_eq!(report.outcome().exit_code(), 4);
+    assert_eq!(report.rows[0].status, DistJobStatus::Unfinished);
+    for w in workers {
+        let _ = w.join(); // died on the injected panic
+    }
+}
+
+#[test]
+fn dropped_and_duplicated_frames_are_absorbed() {
+    let _guard = fault::test_lock();
+    // Deterministic loss on the worker's link, spread across the early
+    // conversation: the first send is the worker's Hello (the coordinator
+    // only speaks after hearing it), so drop@1 exercises the
+    // Hello-retransmission path; the later drop/dup land on whatever the
+    // protocol is saying at those hits — every message must be either
+    // loss-tolerant or retransmitted-until-acked.
+    fault::install(
+        fault::parse_faults(
+            "transport_send/zz-dist-lossy-w0:drop@1,\
+             transport_recv/zz-dist-lossy-w0:dup@2,\
+             transport_send/zz-dist-lossy-w0:drop@7",
+        )
+        .unwrap(),
+    );
+    let text = manifest(&[("dl-a", 51)]);
+    let mut coordinator = Coordinator::new(
+        manifest_job_payloads(&text).unwrap(),
+        DistOptions {
+            heartbeat_timeout: Duration::from_secs(30),
+            assign_resend_rounds: 4,
+            ..DistOptions::default()
+        },
+    );
+    let workers = spawn_workers(&mut coordinator, &["zz-dist-lossy-w0"], 4);
+    let report = coordinator.run(|_| {});
+    assert_eq!(report.outcome(), DistOutcome::AllDone, "{report:?}");
+    for w in workers {
+        let _ = w.join();
+    }
+    assert_bit_exact(&coordinator, &text);
+}
+
+#[test]
+fn ci_chaos_profile_parses() {
+    // The exact profile the CI chaos matrix cell arms via MSGSN_FAULTS —
+    // a parse regression here would make that cell fail at startup.
+    let specs =
+        fault::parse_faults("transport_recv:drop@turn=32,worker:panic@2").unwrap();
+    assert_eq!(specs.len(), 2);
+}

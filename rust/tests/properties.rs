@@ -629,6 +629,117 @@ fn prop_snapshot_restore_total_on_corruption() {
     );
 }
 
+/// Satellite (PR 8) — the dist wire codec is *total*. Three regimes over
+/// every message type (via [`msgsn::dist::wire::sample_messages`], so new
+/// variants are covered by construction):
+///
+/// 1. **Exhaustive truncation sweep**: every proper prefix of every
+///    frame decodes to a clean `Err` — never a panic, never a partial
+///    message.
+/// 2. **Exhaustive single-bit flips**: the per-frame CRC-32 detects every
+///    1-bit corruption by construction (header flips fail the
+///    magic/length probes first).
+/// 3. **Randomized structural mutation**, half of it *re-forged*
+///    (magic/length/CRC made consistent again) so decode is driven past
+///    the frame checks into the payload reader — whose bounds checks and
+///    length-prefix allocation guards must stay total on garbage.
+#[test]
+fn prop_wire_codec_total_on_corruption() {
+    use msgsn::dist::wire::{
+        decode_frame, encode_frame, sample_messages, FRAME_MAGIC, FRAME_OVERHEAD,
+    };
+    use msgsn::runtime::bytes::crc32;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    let frames: Vec<Vec<u8>> = sample_messages().iter().map(encode_frame).collect();
+
+    // Regime 1 — every prefix of every frame.
+    for (k, frame) in frames.iter().enumerate() {
+        assert!(decode_frame(frame).is_ok(), "sample {k} must round-trip");
+        for cut in 0..frame.len() {
+            match catch_unwind(AssertUnwindSafe(|| decode_frame(&frame[..cut]))) {
+                Err(_) => panic!("sample {k} truncated to {cut} bytes panicked"),
+                Ok(Ok(_)) => panic!("sample {k} truncated to {cut} bytes decoded as valid"),
+                Ok(Err(_)) => {}
+            }
+        }
+    }
+
+    // Regime 2 — every bit of every byte of every frame.
+    for (k, frame) in frames.iter().enumerate() {
+        for byte in 0..frame.len() {
+            for bit in 0..8 {
+                let mut m = frame.clone();
+                m[byte] ^= 1 << bit;
+                match catch_unwind(AssertUnwindSafe(|| decode_frame(&m))) {
+                    Err(_) => panic!("sample {k} flip at byte {byte} bit {bit} panicked"),
+                    Ok(Ok(_)) => {
+                        panic!("sample {k} flip at byte {byte} bit {bit} decoded as valid")
+                    }
+                    Ok(Err(_)) => {}
+                }
+            }
+        }
+    }
+
+    // Regime 3 — random splice/truncate/garbage/huge-length mutation.
+    Prop::new(250, 0xD157).run(
+        |rng, _size| {
+            let mut m = frames[rng.index(frames.len())].clone();
+            for _ in 0..rng.below(4) + 1 {
+                match rng.below(4) {
+                    0 => m.truncate(rng.index(m.len() + 1)),
+                    1 => {
+                        if !m.is_empty() {
+                            let i = rng.index(m.len());
+                            m[i] = rng.below(256) as u8;
+                        }
+                    }
+                    2 => {
+                        // Splice garbage bytes at a random offset.
+                        let at = rng.index(m.len() + 1);
+                        for k in 0..rng.below(9) as usize {
+                            m.insert(at + k, 0xCD);
+                        }
+                    }
+                    _ => {
+                        // Stamp a huge little-endian u32 — on the frame
+                        // length it must hit the size cap, on a payload
+                        // string/bytes length prefix the reader's bounds
+                        // check (not an OOM abort) must reject it.
+                        if m.len() >= 4 {
+                            let at = rng.index(m.len() - 3);
+                            m[at..at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+                        }
+                    }
+                }
+            }
+            let forged = rng.below(2) == 0 && m.len() >= FRAME_OVERHEAD;
+            if forged {
+                let len = m.len() - FRAME_OVERHEAD;
+                m[..4].copy_from_slice(&FRAME_MAGIC);
+                m[4..8].copy_from_slice(&(len as u32).to_le_bytes());
+                let crc = crc32(&m[8..8 + len]);
+                let total = m.len();
+                m[total - 4..].copy_from_slice(&crc.to_le_bytes());
+            }
+            (m, forged)
+        },
+        |(m, forged)| {
+            match catch_unwind(AssertUnwindSafe(|| decode_frame(m))) {
+                Err(_) => Err("decode panicked on corrupt frame".into()),
+                // A forged frame may legitimately decode (the mutation can
+                // be harmless once re-checksummed); an unforged one only
+                // if it IS one of the originals.
+                Ok(Ok(_)) if !forged && !frames.iter().any(|f| f == m) => {
+                    Err("unforged corruption decoded as a valid frame".into())
+                }
+                Ok(_) => Ok(()),
+            }
+        },
+    );
+}
+
 /// PR-2 — sharding `find2_batch` across the persistent worker pool must not
 /// change a single bit of any `Winners` for any `find_threads`.
 #[test]

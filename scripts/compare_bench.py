@@ -21,7 +21,10 @@ key (driver rows) or "units" key (microbench rows). Fleet rows (the
 end_to_end "fleet-concurrent"/"fleet-sequential" pair) additionally carry
 a "jobs" field that becomes part of the key, so the same row name recorded
 at different fleet sizes never collides — re-sizing the fleet bench shows
-up as a new row (skipped) instead of a bogus diff. Likewise the per-ISA
+up as a new row (skipped) instead of a bogus diff. Dist rows additionally
+carry a "transport" field ("channel", "tcp") that joins the key for the
+same reason: the same fleet shape over a different transport is a new row,
+never a cross-diff. Likewise the per-ISA
 find_winners rows carry an "isa" field that becomes part of the key, so a
 baseline recorded on an AVX-512 host never cross-diffs against a fresh run
 on an AVX2-only host — a tier the host lacks is a skipped/new row, never a
@@ -43,8 +46,13 @@ def rows_by_key(node, out):
         key = None
         if "row" in node and "jobs" in node:
             # Fleet rows: the same row name at a different fleet size is a
-            # different workload, not a comparable measurement.
+            # different workload, not a comparable measurement. Dist rows
+            # additionally carry the transport ("channel", "tcp") — the
+            # same fleet shape over a different transport is a different
+            # measurement, never a cross-diff.
             key = ("row", f"{node['row']}/jobs={node['jobs']}")
+            if "transport" in node:
+                key = ("row", f"{key[1]}/transport={node['transport']}")
         elif "row" in node:
             key = ("row", str(node["row"]))
         elif "units" in node and "m" in node and "isa" in node:

@@ -11,6 +11,9 @@ a spurious failure would block every PR. These tests pin its contract:
 - fleet rows key on (row, jobs): a regression at the same fleet size
   fails, while the same row name at a different fleet size is a new row
   (skipped), never a cross-size diff;
+- dist rows key on (row, jobs, transport): a regression on the same
+  transport fails, while the same shape over a different transport
+  ("channel" vs "tcp") is a new row (skipped), never a cross-diff;
 - per-ISA find_winners rows key on (units, m, isa): a regression on the
   same tier fails, while a tier only one host supports is a new row
   (skipped) — baselines from hosts with different ISA support never
@@ -192,6 +195,50 @@ class CompareBenchCase(unittest.TestCase):
         r = run_compare(self.baseline, self.fresh)
         self.assertEqual(r.returncode, 0, r.stdout + r.stderr)
         self.assertIn("no regressions beyond the threshold", r.stdout)
+
+    def test_dist_row_regression_fails_on_same_transport(self):
+        def dist_payload(total_s):
+            return {
+                "bench": "end_to_end",
+                "dist": [
+                    {
+                        "row": "dist-fleet",
+                        "jobs": 2,
+                        "transport": "channel",
+                        "total_s": total_s,
+                    }
+                ],
+            }
+
+        self.write(self.baseline, "BENCH_end_to_end.json", dist_payload(1.0))
+        self.write(self.fresh, "BENCH_end_to_end.json", dist_payload(1.5))
+        r = run_compare(self.baseline, self.fresh)
+        self.assertEqual(r.returncode, 1, r.stdout + r.stderr)
+        self.assertIn("dist-fleet/jobs=2/transport=channel", r.stdout)
+        self.assertIn("REGRESSION", r.stdout)
+
+    def test_dist_rows_on_different_transports_never_cross_diff(self):
+        # The same dist shape over TCP instead of the in-process channel is
+        # a different measurement: a huge "regression" between them must be
+        # a new-row skip, not a failure.
+        def dist_payload(transport, total_s):
+            return {
+                "bench": "end_to_end",
+                "dist": [
+                    {
+                        "row": "dist-fleet",
+                        "jobs": 2,
+                        "transport": transport,
+                        "total_s": total_s,
+                    }
+                ],
+            }
+
+        self.write(self.baseline, "BENCH_end_to_end.json", dist_payload("channel", 1.0))
+        self.write(self.fresh, "BENCH_end_to_end.json", dist_payload("tcp", 50.0))
+        r = run_compare(self.baseline, self.fresh)
+        self.assertEqual(r.returncode, 0, r.stdout + r.stderr)
+        self.assertIn("new row", r.stdout)
 
     def test_isa_row_regression_fails_on_same_tier(self):
         self.write(
