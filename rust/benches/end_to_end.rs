@@ -207,13 +207,61 @@ fn main() -> anyhow::Result<()> {
         ));
     }
 
+    // Serve: the same two-job shape preloaded into the `msgsn serve`
+    // daemon over a real TCP loopback socket, with one client requesting
+    // shutdown so the daemon drains and reports. Measures the line-JSON
+    // protocol + QoS scheduling overhead on top of the fleet-concurrent
+    // row. The row carries "serve": true so scripts/compare_bench.py
+    // keys daemon-path numbers separately from batch-fleet rows.
+    println!("\nserve end-to-end (2 jobs, tcp loopback, smoke scale):");
+    let mut serve_rows = Vec::new();
+    {
+        use std::io::{BufRead, BufReader, Write};
+        let t0 = std::time::Instant::now();
+        let mut server = msgsn::serve::Server::bind("127.0.0.1:0", fleet_specs())?;
+        let addr = server.local_addr()?;
+        let client = std::thread::spawn(move || {
+            let mut stream = std::net::TcpStream::connect(addr)?;
+            stream.write_all(b"{\"cmd\": \"watch\"}\n{\"cmd\": \"shutdown\"}\n")?;
+            let mut lines = BufReader::new(stream).lines();
+            let mut seen = 0usize;
+            for line in &mut lines {
+                seen += 1;
+                if line?.contains("\"bye\"") {
+                    break;
+                }
+            }
+            Ok::<usize, std::io::Error>(seen)
+        });
+        let opts = msgsn::serve::ServeOptions {
+            idle_poll: std::time::Duration::from_millis(1),
+            ..msgsn::serve::ServeOptions::default()
+        };
+        let report = server.run(&opts, &mut |_| {})?;
+        let lines = client.join().expect("serve bench client panicked")?;
+        let total = t0.elapsed().as_secs_f64();
+        let signals: u64 =
+            report.rows.iter().filter_map(|row| row.report.as_ref()).map(|r| r.signals).sum();
+        println!(
+            "  {:18} {total:>8.3}s  ({signals} signals total, {lines} protocol lines, outcome {:?})",
+            "serve-fleet",
+            report.outcome(),
+        );
+        serve_rows.push(format!(
+            "    {{\"row\": \"serve-fleet\", \"jobs\": 2, \"serve\": true, \
+             \"total_s\": {total:.6}, \"signals_total\": {signals}}}"
+        ));
+    }
+
     let csv = grid.to_csv();
     let json = format!(
         "{{\n  \"bench\": \"end_to_end\",\n  \"worker_pool\": [\n{}\n  ],\n  \
-         \"fleet\": [\n{}\n  ],\n  \"dist\": [\n{}\n  ],\n  \"grid_csv\": {:?}\n}}\n",
+         \"fleet\": [\n{}\n  ],\n  \"dist\": [\n{}\n  ],\n  \
+         \"serve\": [\n{}\n  ],\n  \"grid_csv\": {:?}\n}}\n",
         pool_rows.join(",\n"),
         fleet_rows.join(",\n"),
         dist_rows.join(",\n"),
+        serve_rows.join(",\n"),
         csv,
     );
     if let Err(e) = std::fs::write("BENCH_end_to_end.json", &json) {

@@ -4,6 +4,7 @@
 //! ```text
 //! msgsn run        --mesh eight --driver multi [--seed N] [--set k=v]…
 //! msgsn fleet      --jobs jobs.json [--checkpoint-every N] [--resume]
+//! msgsn serve      --listen 127.0.0.1:7081 [--jobs jobs.json] [--checkpoint-secs S]
 //! msgsn coordinator --jobs jobs.json --listen 127.0.0.1:7070 --workers 2
 //! msgsn worker     --connect 127.0.0.1:7070 --name w1
 //! msgsn reproduce  [--table N]… [--figure N]… [--all] [--scale quick|paper]
@@ -26,6 +27,9 @@ pub enum Command {
     /// N concurrent reconstructions from a jobs manifest, with resumable
     /// checkpointing (the fleet subsystem).
     Fleet(Parsed),
+    /// The fleet as a long-running daemon: line-JSON protocol over TCP
+    /// (submit/status/watch/query/cancel/shutdown).
+    Serve(Parsed),
     /// Regenerate paper tables/figures.
     Reproduce(Parsed),
     /// Generate / inspect benchmark meshes.
@@ -99,9 +103,33 @@ USAGE:
       --faults <spec,...>        arm deterministic fault injection (testing;
                                  same grammar as env MSGSN_FAULTS, e.g.
                                  checkpoint_write:truncate@2,job:panic@turn=7)
+      --report-json <path>       also write the final report as JSON
+                                 (rows + outcome + exit_code)
       --quiet                    suppress progress lines
       exit code: 0 all jobs succeeded, 2 some quarantined, 3 all
       quarantined (1 = usage/config errors)
+
+  msgsn serve [OPTIONS]          the fleet as a long-running TCP daemon
+      --listen <host:port>       accept client connections here
+                                                               [127.0.0.1:7081]
+      --jobs <jobs.json>         preload a jobs manifest (optional — an
+                                 empty daemon waits for submits)
+      --checkpoint-every <N>     as in msgsn fleet              [0]
+      --checkpoint-secs <S>      as in msgsn fleet
+      --checkpoint-dir <dir>     as in msgsn fleet              [checkpoints]
+      --resume                   restore preloaded jobs from checkpoints
+      --stride <N>               batches per job per round      [1]
+      --max-retries <N>          as in msgsn fleet              [2]
+      --watch-every <N>          progress event cadence (rounds) [8]
+      --report-json <path>       write the final report as JSON on drain
+      --faults <spec,...>        arm fault injection (adds serve_conn:
+                                 drop|err|delay=N|dup on client
+                                 connections, scope c<id>)
+      --quiet                    suppress progress lines
+      protocol: line-delimited JSON — {\"cmd\": \"submit\", \"job\": {…}} |
+      status | watch | query (units|mesh|snapshot) | cancel | shutdown;
+      runs until a shutdown request drains the fleet, then exits with
+      the fleet exit code (0/2/3; 1 = usage/config errors)
 
   msgsn coordinator [OPTIONS]    distributed fleet: the coordinator process
       --jobs <jobs.json>         jobs manifest (required; same schema as
@@ -181,6 +209,23 @@ pub fn parse(args: &[String]) -> Result<Command, ArgError> {
                 "stride",
                 "max-retries",
                 "faults",
+                "report-json",
+            ],
+            &["resume", "quiet"],
+        )?)),
+        "serve" => Ok(Command::Serve(parser::parse_flags(
+            rest,
+            &[
+                "listen",
+                "jobs",
+                "checkpoint-every",
+                "checkpoint-secs",
+                "checkpoint-dir",
+                "stride",
+                "max-retries",
+                "watch-every",
+                "faults",
+                "report-json",
             ],
             &["resume", "quiet"],
         )?)),
@@ -224,6 +269,7 @@ impl fmt::Display for Command {
         match self {
             Command::Run(_) => write!(f, "run"),
             Command::Fleet(_) => write!(f, "fleet"),
+            Command::Serve(_) => write!(f, "serve"),
             Command::Reproduce(_) => write!(f, "reproduce"),
             Command::Mesh(_) => write!(f, "mesh"),
             Command::Artifacts(_) => write!(f, "artifacts"),
@@ -288,6 +334,32 @@ mod tests {
             p.get("faults"),
             Some("checkpoint_write:truncate@2,job:panic@turn=7")
         );
+    }
+
+    #[test]
+    fn parses_serve_command() {
+        let cmd = parse(&argv(
+            "serve --listen 127.0.0.1:7081 --jobs jobs.json --checkpoint-secs 1 \
+             --watch-every 4 --report-json report.json --quiet",
+        ))
+        .unwrap();
+        let Command::Serve(p) = cmd else { panic!("not serve") };
+        assert_eq!(p.get("listen"), Some("127.0.0.1:7081"));
+        assert_eq!(p.get("jobs"), Some("jobs.json"));
+        assert_eq!(p.get("checkpoint-secs"), Some("1"));
+        assert_eq!(p.get("watch-every"), Some("4"));
+        assert_eq!(p.get("report-json"), Some("report.json"));
+        assert!(p.flag("quiet"));
+    }
+
+    #[test]
+    fn parses_fleet_report_json_flag() {
+        let Command::Fleet(p) =
+            parse(&argv("fleet --jobs j.json --report-json out.json")).unwrap()
+        else {
+            panic!("not fleet")
+        };
+        assert_eq!(p.get("report-json"), Some("out.json"));
     }
 
     #[test]

@@ -51,9 +51,12 @@ pub mod snapshot;
 mod spec;
 mod writer;
 
-pub use spec::{manifest_job_payloads, parse_job_payload, parse_manifest, JobSpec, MANIFEST_VERSION};
+pub use spec::{
+    manifest_job_payloads, parse_job_payload, parse_manifest, JobSpec, QosClass, MANIFEST_VERSION,
+};
 pub use writer::{CheckpointWriter, WriteOutcome, DEFAULT_QUEUE_CAPACITY};
 
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Instant;
@@ -63,7 +66,7 @@ use anyhow::{bail, Context, Result};
 use crate::engine::{resolve_run_threads, ConvergenceSession, RunReport};
 use crate::mesh::Mesh;
 use crate::metrics::{fmt_secs, Table};
-use crate::runtime::WorkerPool;
+use crate::runtime::{Json, WorkerPool};
 
 use writer::panic_message;
 
@@ -273,6 +276,15 @@ impl FleetOutcome {
             FleetOutcome::AllFailed => 3,
         }
     }
+
+    /// Stable machine-readable name (the `--report-json` payload).
+    pub fn name(self) -> &'static str {
+        match self {
+            FleetOutcome::AllSucceeded => "all-succeeded",
+            FleetOutcome::PartialFailure => "partial-failure",
+            FleetOutcome::AllFailed => "all-failed",
+        }
+    }
 }
 
 /// Aggregated result of a fleet run: one [`FleetRow`] per job, in
@@ -354,6 +366,59 @@ impl FleetReport {
             t.row(cells);
         }
         t
+    }
+
+    /// Machine-readable form of the report — the `--report-json` payload
+    /// CI asserts on instead of scraping the rendered table:
+    /// `{"rows": [...], "outcome": "...", "exit_code": N}`, one object per
+    /// job carrying name/status/attempts/error/notes plus the numeric
+    /// report columns (`null` report for jobs quarantined before
+    /// finishing). The serve daemon streams the same row objects in its
+    /// final `report` event, so batch and daemon consumers parse one
+    /// schema.
+    pub fn to_json(&self) -> Json {
+        let mut top = BTreeMap::new();
+        top.insert("rows".to_string(), Json::Arr(self.rows.iter().map(FleetRow::to_json).collect()));
+        let outcome = self.outcome();
+        top.insert("outcome".to_string(), Json::Str(outcome.name().to_string()));
+        top.insert("exit_code".to_string(), Json::Num(f64::from(outcome.exit_code())));
+        Json::Obj(top)
+    }
+}
+
+impl FleetRow {
+    /// One row of [`FleetReport::to_json`].
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("status".to_string(), Json::Str(self.status.name().to_string()));
+        m.insert("attempts".to_string(), Json::Num(f64::from(self.attempts)));
+        m.insert(
+            "error".to_string(),
+            self.error.clone().map_or(Json::Null, Json::Str),
+        );
+        m.insert(
+            "notes".to_string(),
+            Json::Arr(self.notes.iter().cloned().map(Json::Str).collect()),
+        );
+        let report = match &self.report {
+            None => Json::Null,
+            Some(r) => {
+                let mut rm = BTreeMap::new();
+                rm.insert("algorithm".to_string(), Json::Str(r.algorithm.clone()));
+                rm.insert("driver".to_string(), Json::Str(r.implementation.clone()));
+                rm.insert("signals".to_string(), Json::Num(r.signals as f64));
+                rm.insert("discarded".to_string(), Json::Num(r.discarded as f64));
+                rm.insert("units".to_string(), Json::Num(r.units as f64));
+                rm.insert("connections".to_string(), Json::Num(r.connections as f64));
+                rm.insert("converged".to_string(), Json::Bool(r.converged));
+                rm.insert("qe".to_string(), Json::Num(f64::from(r.qe)));
+                rm.insert("total_s".to_string(), Json::Num(r.total.as_secs_f64()));
+                Json::Obj(rm)
+            }
+        };
+        m.insert("report".to_string(), report);
+        Json::Obj(m)
     }
 }
 
@@ -585,9 +650,7 @@ impl Fleet {
         // Every queued write must land before the run reports back (the
         // "last good generation" durability statement is about disk).
         if let Some(w) = ckpt.as_mut() {
-            for o in w.drain() {
-                self.note_write(&o, &mut progress);
-            }
+            self.drain_checkpoints(w, &mut progress);
         }
         Ok(self.report())
     }
@@ -630,6 +693,12 @@ impl Fleet {
             }
             live += 1;
             let job = &mut self.jobs[idx];
+            // QoS: an interactive job advances weight× the batches of a
+            // batch-class job per turn. Stride-invariance (chunked
+            // stepping ≡ a blocking run, proven in rust/tests/fleet.rs)
+            // makes the weight a pure latency knob — it reorders turn
+            // interleaving, never results.
+            let stride = stride.saturating_mul(job.spec.qos.weight());
             let session = job.session.as_mut().expect("running job has a session");
             let stepped = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 session.step(stride)
@@ -713,6 +782,20 @@ impl Fleet {
                     }
                 })
                 .collect(),
+        }
+    }
+
+    /// Block until every queued checkpoint write has landed and record
+    /// the outcomes — the end-of-run durability barrier [`Fleet::run`]
+    /// uses, exposed for callers that drive [`Fleet::step_round`]
+    /// themselves (the serve daemon's drain path).
+    pub fn drain_checkpoints(
+        &mut self,
+        ckpt: &mut CheckpointWriter,
+        progress: &mut impl FnMut(&str),
+    ) {
+        for o in ckpt.drain() {
+            self.note_write(&o, progress);
         }
     }
 
@@ -869,6 +952,56 @@ mod tests {
         let rendered = report.to_table().render();
         assert!(rendered.contains("gng") && rendered.contains("soam"), "{rendered}");
         assert!(rendered.contains("done"), "{rendered}");
+    }
+
+    #[test]
+    fn report_json_round_trips_with_status_and_outcome() {
+        let specs = vec![quick_spec("j", BenchmarkShape::Blob, Algorithm::Soam, 11)];
+        let mut fleet = Fleet::new(specs).unwrap();
+        let report = fleet.run(&FleetOptions::default(), |_| {}).unwrap();
+        let text = crate::runtime::render_json(&report.to_json());
+        let doc = crate::runtime::parse_json(&text).unwrap();
+        assert_eq!(doc.get("outcome").and_then(Json::as_str), Some("all-succeeded"));
+        assert_eq!(doc.get("exit_code").and_then(Json::as_u64), Some(0));
+        let rows = doc.get("rows").and_then(Json::as_arr).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("name").and_then(Json::as_str), Some("j"));
+        assert_eq!(rows[0].get("status").and_then(Json::as_str), Some("done"));
+        assert_eq!(rows[0].get("attempts").and_then(Json::as_u64), Some(0));
+        assert_eq!(rows[0].get("error"), Some(&Json::Null));
+        let r = rows[0].get("report").unwrap();
+        assert!(r.get("signals").and_then(Json::as_u64).unwrap() >= 8_000);
+        assert_eq!(
+            r.get("algorithm").and_then(Json::as_str),
+            Some("soam"),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn qos_weight_changes_scheduling_not_results() {
+        // Same two jobs, once all-batch and once with one interactive:
+        // the interactive job's 4× stride reorders turn interleaving but
+        // every per-job result must be bit-identical (stride invariance).
+        let base = || {
+            vec![
+                quick_spec("fg", BenchmarkShape::Blob, Algorithm::Soam, 21),
+                quick_spec("bg", BenchmarkShape::Eight, Algorithm::Gng, 22),
+            ]
+        };
+        let mut plain = Fleet::new(base()).unwrap();
+        let a = plain.run(&FleetOptions::default(), |_| {}).unwrap();
+        let mut specs = base();
+        specs[0].qos = crate::fleet::QosClass::Interactive;
+        let mut weighted = Fleet::new(specs).unwrap();
+        let b = weighted.run(&FleetOptions::default(), |_| {}).unwrap();
+        for (ra, rb) in a.rows.iter().zip(&b.rows) {
+            let (pa, pb) = (ra.report.as_ref().unwrap(), rb.report.as_ref().unwrap());
+            assert_eq!(pa.signals, pb.signals, "{}", ra.name);
+            assert_eq!(pa.units, pb.units, "{}", ra.name);
+            assert_eq!(pa.connections, pb.connections, "{}", ra.name);
+            assert_eq!(pa.qe.to_bits(), pb.qe.to_bits(), "{}", ra.name);
+        }
     }
 
     #[test]

@@ -41,6 +41,50 @@ use crate::runtime::{parse_json, render_json, Json};
 /// Supported manifest schema version.
 pub const MANIFEST_VERSION: u64 = 1;
 
+/// Scheduling priority class (the serve-tier QoS knob, manifest key
+/// `"qos"`). The scheduler multiplies the fleet-wide per-round stride by
+/// the class weight, so an `interactive` job advances
+/// [`QosClass::INTERACTIVE_WEIGHT`]× the batches of a `batch` job per
+/// round-robin turn. Because chunked stepping is stride-invariant (a
+/// session stepped in any chunking is bit-identical to a blocking run —
+/// `rust/tests/fleet.rs` proves it), QoS weighting changes *when* a job
+/// finishes relative to its neighbors, never *what* it converges to.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum QosClass {
+    /// Latency-sensitive: [`QosClass::INTERACTIVE_WEIGHT`]× the stride.
+    Interactive,
+    /// Throughput work: the baseline stride (the default).
+    #[default]
+    Batch,
+}
+
+impl QosClass {
+    /// Stride multiplier of the `interactive` class.
+    pub const INTERACTIVE_WEIGHT: u64 = 4;
+
+    pub fn weight(self) -> u64 {
+        match self {
+            QosClass::Interactive => Self::INTERACTIVE_WEIGHT,
+            QosClass::Batch => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            QosClass::Interactive => "interactive",
+            QosClass::Batch => "batch",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "interactive" => Some(QosClass::Interactive),
+            "batch" => Some(QosClass::Batch),
+            _ => None,
+        }
+    }
+}
+
 /// One fleet job: a point-cloud source plus a full run configuration.
 #[derive(Clone, Debug)]
 pub struct JobSpec {
@@ -55,12 +99,14 @@ pub struct JobSpec {
     /// [`super::FleetOptions::max_retries`]). `Some(0)` quarantines on the
     /// first failure.
     pub retries: Option<u32>,
+    /// Scheduling priority class ([`QosClass`], manifest key `"qos"`).
+    pub qos: QosClass,
 }
 
 impl JobSpec {
     /// A spec over a benchmark shape, named after shape + algorithm.
     pub fn from_config(name: impl Into<String>, cfg: RunConfig) -> Self {
-        Self { name: name.into(), mesh_path: None, cfg, retries: None }
+        Self { name: name.into(), mesh_path: None, cfg, retries: None, qos: QosClass::default() }
     }
 
     /// Materialize the job's point-cloud source.
@@ -173,10 +219,11 @@ fn parse_job(job: &Json, index: usize) -> Result<JobSpec> {
     for key in map.keys() {
         if !matches!(
             key.as_str(),
-            "name" | "mesh" | "algorithm" | "driver" | "seed" | "config" | "retries"
+            "name" | "mesh" | "algorithm" | "driver" | "seed" | "config" | "retries" | "qos"
         ) {
             bail!(
-                "unknown job key {key:?} (expected name|mesh|algorithm|driver|seed|config|retries)"
+                "unknown job key {key:?} \
+                 (expected name|mesh|algorithm|driver|seed|config|retries|qos)"
             );
         }
     }
@@ -241,7 +288,15 @@ fn parse_job(job: &Json, index: usize) -> Result<JobSpec> {
             Some(u32::try_from(n).context("\"retries\" out of range")?)
         }
     };
-    Ok(JobSpec { name, mesh_path, cfg, retries })
+    let qos = match job.get("qos") {
+        None => QosClass::default(),
+        Some(v) => {
+            let s = v.as_str().context("\"qos\" must be a string")?;
+            QosClass::from_name(s)
+                .with_context(|| format!("unknown qos class {s:?} (expected interactive|batch)"))?
+        }
+    };
+    Ok(JobSpec { name, mesh_path, cfg, retries, qos })
 }
 
 /// Manifest values reuse the config-file scalar domain.
@@ -307,6 +362,25 @@ mod tests {
         assert_eq!(specs[2].retries, None);
         let bad = r#"{"version": 1, "jobs": [{"name": "x", "retries": "lots"}]}"#;
         assert!(parse_manifest(bad).is_err(), "non-integer retries rejected");
+    }
+
+    #[test]
+    fn qos_class_parses_and_defaults_to_batch() {
+        let text = r#"{"version": 1, "jobs": [
+          {"name": "fg", "qos": "interactive"},
+          {"name": "bg", "qos": "batch"},
+          {"name": "default"}
+        ]}"#;
+        let specs = parse_manifest(text).unwrap();
+        assert_eq!(specs[0].qos, QosClass::Interactive);
+        assert_eq!(specs[0].qos.weight(), QosClass::INTERACTIVE_WEIGHT);
+        assert_eq!(specs[1].qos, QosClass::Batch);
+        assert_eq!(specs[2].qos, QosClass::Batch, "qos defaults to batch");
+        let bad = r#"{"version": 1, "jobs": [{"name": "x", "qos": "vip"}]}"#;
+        assert!(parse_manifest(bad).is_err(), "unknown qos class rejected");
+        // The dist/serve payload path pins qos through the round-trip.
+        let payloads = manifest_job_payloads(text).unwrap();
+        assert_eq!(parse_job_payload(&payloads[0].1).unwrap().qos, QosClass::Interactive);
     }
 
     #[test]

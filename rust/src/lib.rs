@@ -35,6 +35,7 @@
 //! | [`engine`] | convergence drivers + resumable [`engine::ConvergenceSession`]s |
 //! | [`fleet`] | multi-network orchestration: jobs manifest, shared-pool scheduler, bit-exact checkpoint/restore |
 //! | [`dist`] | fault-tolerant multi-process fleet: coordinator/worker split, heartbeats, partition-safe job migration over snapshot bytes |
+//! | [`serve`] | the fleet as a long-running service: line-JSON protocol over TCP, QoS scheduling, batch-boundary read views |
 //! | [`config`] | config structs, TOML-subset parser, per-mesh presets |
 //! | [`cli`] | argument parsing for the `msgsn` binary |
 //! | [`metrics`] | phase timers, counters, table rendering |
@@ -58,6 +59,7 @@ pub mod metrics;
 pub mod proptest;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod som;
 pub mod topology;
 

@@ -51,6 +51,16 @@ fn main() -> ExitCode {
                 }
             }
         }
+        // Same: the daemon exits with the drained fleet's exit code.
+        Command::Serve(p) => {
+            return match cmd_serve(&p) {
+                Ok(code) => code,
+                Err(e) => {
+                    eprintln!("error: {e:#}");
+                    ExitCode::FAILURE
+                }
+            }
+        }
         // Same: the coordinator folds job outcomes into exit codes
         // 0/2/3 plus 4 for "every worker lost".
         Command::Coordinator(p) => {
@@ -219,6 +229,9 @@ fn cmd_fleet(p: &Parsed) -> Result<ExitCode> {
         }
     })?;
     print!("{}", report.to_table().render());
+    if let Some(path) = p.get("report-json") {
+        write_report_json(&report, path)?;
+    }
     let outcome = report.outcome();
     match outcome {
         FleetOutcome::AllSucceeded => {}
@@ -226,6 +239,89 @@ fn cmd_fleet(p: &Parsed) -> Result<ExitCode> {
             eprintln!("fleet: partial failure — some jobs quarantined (exit 2)")
         }
         FleetOutcome::AllFailed => eprintln!("fleet: all jobs quarantined (exit 3)"),
+    }
+    Ok(ExitCode::from(outcome.exit_code()))
+}
+
+/// `--report-json`: the FleetReport as machine-readable JSON (rows +
+/// outcome + exit_code) — what CI asserts on instead of scraping stdout.
+fn write_report_json(report: &msgsn::fleet::FleetReport, path: &str) -> Result<()> {
+    let mut text = msgsn::runtime::render_json(&report.to_json());
+    text.push('\n');
+    std::fs::write(path, text).with_context(|| format!("writing report JSON {path}"))
+}
+
+/// The fleet as a long-running TCP daemon (`serve` subsystem): admits
+/// jobs over line-JSON, streams progress, answers batch-boundary
+/// queries, drains on `shutdown`, exits with the fleet exit code.
+fn cmd_serve(p: &Parsed) -> Result<ExitCode> {
+    use msgsn::serve::{ServeOptions, Server};
+
+    let quiet = p.flag("quiet");
+    if let Some(profile) = p.get("faults") {
+        let specs = msgsn::runtime::fault::parse_faults(profile)
+            .map_err(anyhow::Error::msg)
+            .context("--faults")?;
+        msgsn::runtime::fault::install(specs);
+    }
+
+    let specs = match p.get("jobs") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading jobs manifest {path}"))?;
+            parse_manifest(&text)?
+        }
+        None => Vec::new(),
+    };
+
+    let opts = ServeOptions {
+        fleet: FleetOptions {
+            stride: p.get_parsed("stride", 1u64, "integer")?.max(1),
+            checkpoint_every: p.get_parsed("checkpoint-every", 0u64, "integer")?,
+            checkpoint_secs: p
+                .get("checkpoint-secs")
+                .map(|s| {
+                    s.parse::<f64>().context("--checkpoint-secs expects seconds (fractional ok)")
+                })
+                .transpose()?,
+            checkpoint_dir: Some(PathBuf::from(p.get("checkpoint-dir").unwrap_or("checkpoints"))),
+            max_retries: p.get_parsed("max-retries", 2u32, "integer")?,
+            ..FleetOptions::default()
+        },
+        watch_every: p.get_parsed("watch-every", 8u64, "integer")?.max(1),
+        ..ServeOptions::default()
+    };
+
+    let listen = p.get("listen").unwrap_or("127.0.0.1:7081");
+    let mut server = Server::bind(listen, specs)?;
+    if p.flag("resume") {
+        let dir = opts.fleet.checkpoint_dir.clone().expect("checkpoint dir defaulted");
+        let resumed = server.resume_from(&dir)?;
+        if !quiet {
+            for o in &resumed {
+                println!("resume: {} from {}", o.name, o.source.describe());
+            }
+        }
+    }
+    // Announced unconditionally (and flushed by the newline): the e2e
+    // harness waits for this line before connecting.
+    println!("serve: listening on {}", server.local_addr()?);
+    let report = server.run(&opts, |line| {
+        if !quiet {
+            println!("{line}");
+        }
+    })?;
+    print!("{}", report.to_table().render());
+    if let Some(path) = p.get("report-json") {
+        write_report_json(&report, path)?;
+    }
+    let outcome = report.outcome();
+    match outcome {
+        FleetOutcome::AllSucceeded => {}
+        FleetOutcome::PartialFailure => {
+            eprintln!("serve: partial failure — some jobs quarantined (exit 2)")
+        }
+        FleetOutcome::AllFailed => eprintln!("serve: all jobs quarantined (exit 3)"),
     }
     Ok(ExitCode::from(outcome.exit_code()))
 }

@@ -16,6 +16,7 @@
 //! point        = "checkpoint_write" | "snapshot_decode"
 //!              | "session_step" | "job"            (alias) | "pool_job"
 //!              | "transport_send" | "transport_recv" | "worker"
+//!              | "serve_conn"
 //! action       = "truncate" "@" BYTES              (torn write, 1st hit)
 //!              | "truncate" "=" BYTES ["@" trigger]
 //!              | "panic"    ["@" trigger]
@@ -44,8 +45,9 @@
 //! ([`crate::runtime::WorkerPool::with_label`] — engine pools are
 //! unlabeled); `transport_send`/`transport_recv` match the link's peer
 //! label and `worker` matches the worker process name (the dist layer,
-//! `rust/src/dist/`). A spec without a scope matches every evaluation of
-//! its point.
+//! `rust/src/dist/`); `serve_conn` matches the serve daemon's connection
+//! label (`c<id>`, in accept order — the serve layer, `rust/src/serve/`).
+//! A spec without a scope matches every evaluation of its point.
 //!
 //! **Determinism + one-shot**: every spec fires at most once and is then
 //! retired; every live spec matching a point observes each evaluation (its
@@ -105,6 +107,15 @@ pub enum FaultPoint {
     /// N milliseconds without dying (the hung-worker simulation that only
     /// a heartbeat timeout can detect). Scope = the worker name.
     WorkerStep,
+    /// The serve daemon handling one complete request line from a client
+    /// connection (`rust/src/serve/`). `drop` discards the request and
+    /// closes the connection (the vanished client the daemon must
+    /// survive), `err` closes it after an error response, `delay=N`
+    /// stalls the daemon N milliseconds, `dup` handles the request twice
+    /// (the duplicate an idempotent protocol must absorb), `truncate=N`
+    /// cuts the request line (a parse-error response), `panic` panics.
+    /// Scope = the connection label (`c<id>`, in accept order).
+    ServeConn,
 }
 
 impl FaultPoint {
@@ -117,6 +128,7 @@ impl FaultPoint {
             FaultPoint::TransportSend => "transport_send",
             FaultPoint::TransportRecv => "transport_recv",
             FaultPoint::WorkerStep => "worker",
+            FaultPoint::ServeConn => "serve_conn",
         }
     }
 
@@ -130,6 +142,7 @@ impl FaultPoint {
             "transport_send" => Some(FaultPoint::TransportSend),
             "transport_recv" => Some(FaultPoint::TransportRecv),
             "worker" => Some(FaultPoint::WorkerStep),
+            "serve_conn" => Some(FaultPoint::ServeConn),
             _ => None,
         }
     }
@@ -389,7 +402,7 @@ fn parse_spec(raw: &str) -> Result<FaultSpec, String> {
         format!(
             "unknown fault point {point_name:?} \
              (expected checkpoint_write|snapshot_decode|session_step|job|pool_job\
-             |transport_send|transport_recv|worker)"
+             |transport_send|transport_recv|worker|serve_conn)"
         )
     })?;
     let (head, at_suffix) = match rest.split_once('@') {
@@ -532,6 +545,17 @@ mod tests {
         );
         assert_eq!(specs[2].action, FaultAction::Dup);
         assert_eq!(specs[3].point, FaultPoint::WorkerStep);
+        let serve = parse_faults("serve_conn:drop@2,serve_conn/c1:delay=5").unwrap();
+        assert_eq!(
+            serve[0],
+            FaultSpec {
+                point: FaultPoint::ServeConn,
+                scope: None,
+                action: FaultAction::Drop,
+                trigger: FaultTrigger::Hit(2),
+            }
+        );
+        assert_eq!(serve[1].scope.as_deref(), Some("c1"));
         assert_eq!(
             specs[4],
             FaultSpec {

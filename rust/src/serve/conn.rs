@@ -1,0 +1,195 @@
+//! One client connection: non-blocking line framing over a `TcpStream`.
+//!
+//! The daemon's round loop cannot afford to block on a slow or silent
+//! client — convergence is the product, the sockets are a side channel.
+//! Reads use the same bounded-timeout pattern as `dist::transport::TcpPipe`
+//! (a short `set_read_timeout`, `WouldBlock`/`TimedOut` meaning "nothing
+//! yet", `Ok(0)` meaning the peer hung up), and writes carry their own
+//! short timeout so a stalled watcher degrades to a closed connection
+//! instead of a stalled fleet.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::runtime::{render_json, Json};
+
+/// Longest accepted request line. Anything bigger is a protocol error
+/// (or an attack), not a job submission — 1 MiB comfortably fits any
+/// manifest job object.
+pub const MAX_LINE: usize = 1 << 20;
+
+/// How long a single response write may stall before the connection is
+/// declared dead. Watch streams are best-effort; the fleet never waits.
+const WRITE_TIMEOUT: Duration = Duration::from_millis(50);
+
+pub struct ClientConn {
+    stream: TcpStream,
+    /// Fault-scope label: `c<id>` in accept order, matching the
+    /// `serve_conn/c<id>` grammar in `runtime::fault`.
+    label: String,
+    /// Bytes received but not yet terminated by `\n`.
+    partial: Vec<u8>,
+    /// Whether this connection subscribed to streamed events.
+    pub watching: bool,
+    closed: bool,
+}
+
+impl ClientConn {
+    pub fn new(stream: TcpStream, id: u64) -> Self {
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+        ClientConn {
+            stream,
+            label: format!("c{id}"),
+            partial: Vec::new(),
+            watching: false,
+            closed: false,
+        }
+    }
+
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed
+    }
+
+    /// Mark the connection dead; the registry sweeps it after the round.
+    pub fn close(&mut self) {
+        self.closed = true;
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
+    }
+
+    /// Try to read one complete request line, waiting at most `timeout`.
+    /// Returns `None` when no full line is available yet (or the
+    /// connection is gone — check [`is_closed`](Self::is_closed)).
+    pub fn poll_line(&mut self, timeout: Duration) -> Option<String> {
+        if self.closed {
+            return None;
+        }
+        if let Some(line) = self.take_line() {
+            return Some(line);
+        }
+        // Zero-duration read timeouts mean "block forever" on most
+        // platforms; clamp to 1ms like TcpPipe does.
+        let _ = self.stream.set_read_timeout(Some(timeout.max(Duration::from_millis(1))));
+        let mut buf = [0u8; 4096];
+        match self.stream.read(&mut buf) {
+            Ok(0) => {
+                self.closed = true;
+                None
+            }
+            Ok(n) => {
+                self.partial.extend_from_slice(&buf[..n]);
+                if self.partial.len() > MAX_LINE && !self.partial.contains(&b'\n') {
+                    // A line that long is never a legal request; cut the
+                    // peer loose rather than buffering without bound.
+                    self.close();
+                    return None;
+                }
+                self.take_line()
+            }
+            Err(e) if matches!(
+                e.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut | std::io::ErrorKind::Interrupted
+            ) => None,
+            Err(_) => {
+                self.closed = true;
+                None
+            }
+        }
+    }
+
+    fn take_line(&mut self) -> Option<String> {
+        let nl = self.partial.iter().position(|&b| b == b'\n')?;
+        let mut line: Vec<u8> = self.partial.drain(..=nl).collect();
+        line.pop(); // the \n
+        if line.last() == Some(&b'\r') {
+            line.pop();
+        }
+        match String::from_utf8(line) {
+            Ok(s) => Some(s),
+            // Not UTF-8, not a request we can parse — surface it as a
+            // line the protocol layer will reject with bad-request.
+            Err(_) => Some("\u{fffd}".to_string()),
+        }
+    }
+
+    /// Send one JSON line. A failed or stalled write closes the
+    /// connection; it never propagates into the fleet loop.
+    pub fn write_line(&mut self, doc: &Json) {
+        if self.closed {
+            return;
+        }
+        let mut line = render_json(doc);
+        line.push('\n');
+        if self.stream.write_all(line.as_bytes()).is_err() || self.stream.flush().is_err() {
+            self.close();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    fn pair() -> (TcpStream, ClientConn) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (served, _) = listener.accept().unwrap();
+        (client, ClientConn::new(served, 0))
+    }
+
+    #[test]
+    fn frames_lines_across_partial_reads() {
+        let (mut client, mut conn) = pair();
+        client.write_all(b"{\"cmd\": \"sta").unwrap();
+        assert_eq!(conn.poll_line(Duration::from_millis(20)), None);
+        client.write_all(b"tus\"}\r\n{\"cmd\": \"watch\"}\n").unwrap();
+        let mut lines = Vec::new();
+        for _ in 0..20 {
+            if let Some(l) = conn.poll_line(Duration::from_millis(20)) {
+                lines.push(l);
+            }
+            if lines.len() == 2 {
+                break;
+            }
+        }
+        assert_eq!(lines, ["{\"cmd\": \"status\"}", "{\"cmd\": \"watch\"}"]);
+        assert!(!conn.is_closed());
+    }
+
+    #[test]
+    fn peer_hangup_marks_closed_without_error() {
+        let (client, mut conn) = pair();
+        drop(client);
+        for _ in 0..50 {
+            if conn.poll_line(Duration::from_millis(10)).is_some() {
+                panic!("no line was ever sent");
+            }
+            if conn.is_closed() {
+                return;
+            }
+        }
+        panic!("hangup never detected");
+    }
+
+    #[test]
+    fn oversized_line_closes_the_connection() {
+        let (mut client, mut conn) = pair();
+        let blob = vec![b'x'; MAX_LINE + 4096];
+        // The daemon may close mid-send; ignore the client-side error.
+        let _ = client.write_all(&blob);
+        for _ in 0..200 {
+            let _ = conn.poll_line(Duration::from_millis(5));
+            if conn.is_closed() {
+                return;
+            }
+        }
+        panic!("oversized line was buffered without bound");
+    }
+}

@@ -1,0 +1,379 @@
+//! `msgsn serve`: the fleet as a long-running service.
+//!
+//! The batch CLI runs a manifest to completion and exits; the daemon
+//! keeps the same [`Fleet`] resident and interleaves its scheduler
+//! rounds with a line-delimited JSON protocol over TCP (see
+//! [`protocol`]). The structure mirrors the dist worker's round loop —
+//! drain a bounded budget of protocol traffic, then advance every live
+//! job exactly one [`Fleet::step_round`] — so all the batch-path
+//! invariants carry over unchanged:
+//!
+//! - **Bit-parity with the batch path.** The daemon calls the very same
+//!   `step_round`; stride invariance (a chunked run is bit-identical to
+//!   a blocking run) means a job submitted over the wire converges to
+//!   the same bits as `msgsn fleet` on the same spec. `rust/tests/serve.rs`
+//!   pins this over real TCP.
+//! - **Batch-boundary read views.** Requests are only handled *between*
+//!   rounds, and [`view`] builds every answer from immutable accessors —
+//!   a `query` observes the exact state the next round resumes from and
+//!   cannot perturb convergence.
+//! - **Crash safety.** `--checkpoint-secs`/`--checkpoint-every` pass
+//!   straight into [`FleetOptions`]; the daemon runs the same
+//!   [`CheckpointWriter`] protocol as the batch path, so a killed daemon
+//!   resumes from last-good generations like a killed fleet run.
+//! - **Failure isolation.** A client is to the daemon what a job is to
+//!   the fleet: a torn, slow, or malicious connection degrades to a
+//!   closed socket ([`conn`]), never a stalled or dead daemon. The
+//!   `serve_conn` fault point injects exactly those failures in tests
+//!   and the CI chaos cell.
+//!
+//! Lifecycle: the daemon idles when no jobs are live (it stays resident
+//! for future submits), and `shutdown` flips it into draining — new
+//! submits are refused, live jobs run to completion, every open
+//! connection receives the final report and a `bye` event carrying the
+//! fleet exit code, and [`Server::run`] returns the [`FleetReport`].
+
+pub mod conn;
+pub mod protocol;
+pub mod view;
+
+use std::collections::BTreeSet;
+use std::net::{SocketAddr, TcpListener};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::fleet::{
+    parse_job_payload, CheckpointWriter, Fleet, FleetOptions, FleetReport, JobSpec,
+};
+use crate::runtime::fault::{self, FaultAction, FaultPoint};
+use crate::runtime::{render_json, Json};
+
+use conn::ClientConn;
+use protocol::{err_response, event, ok_response, parse_request, Request};
+use view::{mesh_view, snapshot_view, status_row, units_view};
+
+/// Most request lines handled per scheduler round, across all
+/// connections — the same bounded-drain idea as the dist worker's
+/// message budget: protocol traffic must not starve convergence.
+const REQUEST_BUDGET: usize = 64;
+
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Scheduler/checkpoint knobs, shared verbatim with the batch path.
+    pub fleet: FleetOptions,
+    /// Broadcast a `progress` event to watchers every this many rounds
+    /// (job completions are always announced immediately).
+    pub watch_every: u64,
+    /// How long to sleep per poll when nothing is live and no traffic is
+    /// arriving — the daemon's idle heartbeat.
+    pub idle_poll: Duration,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self {
+            fleet: FleetOptions::default(),
+            watch_every: 8,
+            idle_poll: Duration::from_millis(10),
+        }
+    }
+}
+
+pub struct Server {
+    listener: TcpListener,
+    fleet: Fleet,
+    conns: Vec<ClientConn>,
+    next_conn_id: u64,
+    draining: bool,
+    /// Jobs whose completion has already been broadcast to watchers.
+    announced_done: BTreeSet<String>,
+}
+
+impl Server {
+    /// Bind the listener and build the resident fleet. `specs` may be
+    /// empty — an idle daemon waiting for its first `submit` is the
+    /// normal cold start.
+    pub fn bind(addr: &str, specs: Vec<JobSpec>) -> Result<Server> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding serve listener on {addr}"))?;
+        listener
+            .set_nonblocking(true)
+            .context("setting serve listener non-blocking")?;
+        Ok(Server {
+            listener,
+            fleet: Fleet::new(specs)?,
+            conns: Vec::new(),
+            next_conn_id: 0,
+            draining: false,
+            announced_done: BTreeSet::new(),
+        })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr().context("reading serve listener address")
+    }
+
+    /// The resident fleet (read-only — tests assert parity on the final
+    /// sessions after [`Server::run`] returns).
+    pub fn fleet(&self) -> &Fleet {
+        &self.fleet
+    }
+
+    /// Resume preloaded jobs from their checkpoints before serving
+    /// (delegates to [`Fleet::resume_from`]; `--resume` on the CLI).
+    pub fn resume_from(&mut self, dir: &std::path::Path) -> Result<Vec<crate::fleet::ResumeOutcome>> {
+        self.fleet.resume_from(dir)
+    }
+
+    /// Serve until a `shutdown` request has been honoured and every live
+    /// job drained. Returns the final report (also broadcast to every
+    /// connection still open).
+    pub fn run(
+        &mut self,
+        opts: &ServeOptions,
+        mut progress: impl FnMut(&str),
+    ) -> Result<FleetReport> {
+        let checkpointing = opts.fleet.checkpoint_dir.is_some()
+            && (opts.fleet.checkpoint_every > 0 || opts.fleet.checkpoint_secs.is_some());
+        let mut ckpt = None;
+        if checkpointing {
+            let dir = opts.fleet.checkpoint_dir.as_deref().expect("checkpointing implies a dir");
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+            ckpt = Some(CheckpointWriter::new());
+        }
+
+        let mut round = 0u64;
+        loop {
+            self.accept_new(&mut progress);
+            let live_before = self
+                .fleet
+                .jobs()
+                .iter()
+                .filter(|j| !j.is_done())
+                .count();
+            // Busy fleet: skim traffic with a near-zero poll. Idle
+            // daemon: the poll timeout *is* the heartbeat.
+            let poll = if live_before > 0 {
+                Duration::from_millis(1)
+            } else {
+                opts.idle_poll
+            };
+            let handled = self.drain_requests(poll, &mut progress);
+            if self.conns.is_empty() && live_before == 0 && !self.draining {
+                std::thread::sleep(opts.idle_poll);
+            }
+
+            let live = self.fleet.step_round(&opts.fleet, round, ckpt.as_mut(), &mut progress);
+            self.broadcast_progress(round, opts.watch_every, handled);
+            if self.draining && live == 0 {
+                break;
+            }
+            round += 1;
+        }
+
+        if let Some(w) = ckpt.as_mut() {
+            self.fleet.drain_checkpoints(w, &mut progress);
+        }
+        let report = self.fleet.report();
+        let rows = Json::Arr(report.rows.iter().map(|r| r.to_json()).collect());
+        let exit = report.outcome().exit_code();
+        self.broadcast(&event("report", vec![("rows", rows)]), false);
+        self.broadcast(
+            &event("bye", vec![("exit", Json::Num(f64::from(exit)))]),
+            false,
+        );
+        progress(&format!("serve: drained, outcome {}", report.outcome().name()));
+        Ok(report)
+    }
+
+    fn accept_new(&mut self, progress: &mut impl FnMut(&str)) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    let c = ClientConn::new(stream, self.next_conn_id);
+                    progress(&format!("serve: accepted {} from {peer}", c.label()));
+                    self.next_conn_id += 1;
+                    self.conns.push(c);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(_) => break,
+            }
+        }
+    }
+
+    /// Read and handle up to [`REQUEST_BUDGET`] request lines across all
+    /// connections, firing the `serve_conn` fault point once per
+    /// completed line. Returns how many requests were handled.
+    fn drain_requests(&mut self, poll: Duration, progress: &mut impl FnMut(&str)) -> usize {
+        let mut handled = 0;
+        'budget: while handled < REQUEST_BUDGET {
+            let mut any = false;
+            for i in 0..self.conns.len() {
+                let Some(line) = self.conns[i].poll_line(poll) else { continue };
+                any = true;
+                let label = self.conns[i].label().to_string();
+                match fault::fire(FaultPoint::ServeConn, Some(&label), None) {
+
+                    Some(FaultAction::Drop) => {
+                        // The mid-request client vanish: request discarded,
+                        // connection gone, daemon and jobs untouched.
+                        progress(&format!("serve: injected drop on {label}"));
+                        self.conns[i].close();
+                    }
+                    Some(FaultAction::Error) => {
+                        let resp = err_response("injected", "injected connection error");
+                        self.conns[i].write_line(&resp);
+                        self.conns[i].close();
+                    }
+                    Some(FaultAction::Delay(ms)) => {
+                        std::thread::sleep(Duration::from_millis(ms));
+                        self.handle_line(i, &line, progress);
+                    }
+                    Some(FaultAction::Dup) => {
+                        self.handle_line(i, &line, progress);
+                        self.handle_line(i, &line, progress);
+                    }
+                    Some(FaultAction::Truncate(n)) => {
+                        let cut: String = line.chars().take(n as usize).collect();
+                        self.handle_line(i, &cut, progress);
+                    }
+                    Some(FaultAction::Panic) => panic!("injected serve_conn panic"),
+                    None => self.handle_line(i, &line, progress),
+                }
+                handled += 1;
+                if handled >= REQUEST_BUDGET {
+                    break 'budget;
+                }
+            }
+            self.conns.retain(|c| !c.is_closed());
+            if !any {
+                break;
+            }
+        }
+        self.conns.retain(|c| !c.is_closed());
+        handled
+    }
+
+    fn handle_line(&mut self, i: usize, line: &str, progress: &mut impl FnMut(&str)) {
+        let req = match parse_request(line) {
+            Ok(r) => r,
+            Err(e) => {
+                let resp = err_response("bad-request", e);
+                self.conns[i].write_line(&resp);
+                return;
+            }
+        };
+        let resp = match req {
+            Request::Submit { job } => self.handle_submit(&job, progress),
+            Request::Status => {
+                let rows: Vec<Json> = self.fleet.jobs().iter().map(status_row).collect();
+                ok_response(vec![
+                    ("jobs", Json::Arr(rows)),
+                    ("draining", Json::Bool(self.draining)),
+                ])
+            }
+            Request::Watch => {
+                self.conns[i].watching = true;
+                ok_response(vec![("watching", Json::Bool(true))])
+            }
+            Request::Query { job, what } => self.handle_query(&job, what),
+            Request::Cancel { job } => {
+                if self.fleet.remove_job(&job) {
+                    progress(&format!("serve: cancelled job {job:?}"));
+                    ok_response(vec![("cancelled", Json::Str(job))])
+                } else {
+                    err_response("no-such-job", format!("no job named {job:?}"))
+                }
+            }
+            Request::Shutdown => {
+                self.draining = true;
+                progress("serve: shutdown requested, draining");
+                ok_response(vec![("draining", Json::Bool(true))])
+            }
+        };
+        self.conns[i].write_line(&resp);
+    }
+
+    fn handle_submit(&mut self, job: &Json, progress: &mut impl FnMut(&str)) -> Json {
+        if self.draining {
+            return err_response("draining", "daemon is draining; submit refused");
+        }
+        // Re-wrap the inline job object as a one-job manifest so the
+        // daemon validates submissions with exactly the batch parser.
+        let payload = format!("{{\"version\": 1, \"jobs\": [{}]}}", render_json(job));
+        let spec = match parse_job_payload(&payload) {
+            Ok(s) => s,
+            Err(e) => return err_response("bad-request", format!("invalid job payload: {e:#}")),
+        };
+        let name = spec.name.clone();
+        if self.fleet.jobs().iter().any(|j| j.spec().name == name) {
+            return err_response("exists", format!("job {name:?} already admitted"));
+        }
+        match self.fleet.add_job(spec) {
+            Ok(()) => {
+                progress(&format!("serve: admitted job {name:?}"));
+                ok_response(vec![("job", Json::Str(name))])
+            }
+            Err(e) => err_response("bad-request", format!("{e:#}")),
+        }
+    }
+
+    fn handle_query(&self, name: &str, what: protocol::QueryWhat) -> Json {
+        let Some(job) = self.fleet.jobs().iter().find(|j| j.spec().name == name) else {
+            return err_response("no-such-job", format!("no job named {name:?}"));
+        };
+        let body = match what {
+            protocol::QueryWhat::Units => units_view(job),
+            protocol::QueryWhat::Mesh => mesh_view(job),
+            protocol::QueryWhat::Snapshot => snapshot_view(job),
+        };
+        match body {
+            Some(view) => ok_response(vec![
+                ("job", Json::Str(name.to_string())),
+                ("what", Json::Str(what.name().to_string())),
+                ("view", view),
+            ]),
+            None => err_response(
+                "no-session",
+                format!("job {name:?} has no live session (status {})", job.status().name()),
+            ),
+        }
+    }
+
+    /// Stream per-round progress to watchers: completions immediately,
+    /// the full row set every `watch_every` rounds.
+    fn broadcast_progress(&mut self, round: u64, watch_every: u64, handled: usize) {
+        let mut newly_done = Vec::new();
+        for job in self.fleet.jobs() {
+            if job.is_done() && !self.announced_done.contains(&job.spec().name) {
+                newly_done.push(status_row(job));
+                self.announced_done.insert(job.spec().name.clone());
+            }
+        }
+        for row in newly_done {
+            self.broadcast(&event("done", vec![("job", row)]), true);
+        }
+        let cadence = watch_every.max(1);
+        let live = self.fleet.jobs().iter().any(|j| !j.is_done());
+        if (live || handled > 0) && round % cadence == 0 {
+            let rows: Vec<Json> = self.fleet.jobs().iter().map(status_row).collect();
+            self.broadcast(
+                &event(
+                    "progress",
+                    vec![("round", Json::Num(round as f64)), ("jobs", Json::Arr(rows))],
+                ),
+                true,
+            );
+        }
+    }
+
+    fn broadcast(&mut self, doc: &Json, watchers_only: bool) {
+        for c in &mut self.conns {
+            if !watchers_only || c.watching {
+                c.write_line(doc);
+            }
+        }
+    }
+}

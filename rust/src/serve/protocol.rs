@@ -1,0 +1,211 @@
+//! The serve wire protocol: line-delimited JSON requests and responses.
+//!
+//! One request per line, one JSON object per request, `"cmd"` selects the
+//! verb. Responses are single lines too: request/response pairs carry
+//! `"ok"` (with `"code"` naming the failure class on `"ok": false`),
+//! streamed lines carry `"event"` instead — a client can always tell a
+//! reply from a broadcast. The vocabulary:
+//!
+//! ```text
+//! {"cmd": "submit", "job": { ...manifest job object... }}
+//! {"cmd": "status"}
+//! {"cmd": "watch"}
+//! {"cmd": "query", "job": "name", "what": "units" | "mesh" | "snapshot"}
+//! {"cmd": "cancel", "job": "name"}
+//! {"cmd": "shutdown"}
+//! ```
+//!
+//! `submit`'s `"job"` payload is exactly one entry of the jobs-manifest
+//! schema (`fleet::parse_manifest` — mesh/algorithm/driver/seed/retries/
+//! qos plus any config key): the daemon wraps it in a single-job manifest
+//! and re-parses it through [`crate::fleet::parse_job_payload`], so the
+//! batch CLI and the daemon validate submissions with the same code and
+//! reject the same typos.
+//!
+//! Error codes: `bad-request` (unparseable line / unknown cmd / invalid
+//! job payload), `exists` (submit of a name already admitted — the
+//! idempotent-resubmit signal a reconnecting client treats as success),
+//! `no-such-job`, `no-session` (query against a crashed/quarantined job),
+//! `draining` (submit after shutdown was requested).
+
+use std::collections::BTreeMap;
+
+use crate::runtime::{parse_json, Json};
+
+/// One parsed client request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Admit one job (inline manifest-job object).
+    Submit { job: Json },
+    /// One-shot snapshot of every job's live counters.
+    Status,
+    /// Subscribe this connection to streamed progress/report events.
+    Watch,
+    /// Read one job's live state (batch-boundary read view).
+    Query { job: String, what: QueryWhat },
+    /// Remove a job (any status).
+    Cancel { job: String },
+    /// Stop admitting work, drain to completion, report, exit.
+    Shutdown,
+}
+
+/// What a `query` extracts from the read view.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueryWhat {
+    /// Unit/connection counts + QE (the cheap poll).
+    Units,
+    /// Full mesh-extraction statistics of the network triangulation.
+    Mesh,
+    /// Snapshot length + CRC-32 of the encoded session — a bit-exactness
+    /// probe cheap enough to answer over the wire.
+    Snapshot,
+}
+
+impl QueryWhat {
+    pub fn name(self) -> &'static str {
+        match self {
+            QueryWhat::Units => "units",
+            QueryWhat::Mesh => "mesh",
+            QueryWhat::Snapshot => "snapshot",
+        }
+    }
+
+    fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "units" => Some(QueryWhat::Units),
+            "mesh" => Some(QueryWhat::Mesh),
+            "snapshot" => Some(QueryWhat::Snapshot),
+            _ => None,
+        }
+    }
+}
+
+/// Parse one request line. `Err` carries the diagnostic the daemon wraps
+/// in a `bad-request` response — a malformed line must never kill the
+/// connection, let alone the daemon.
+pub fn parse_request(line: &str) -> Result<Request, String> {
+    let doc = parse_json(line).map_err(|e| format!("request is not valid JSON: {e}"))?;
+    let Json::Obj(_) = &doc else {
+        return Err("request must be a JSON object".to_string());
+    };
+    let cmd = doc
+        .get("cmd")
+        .and_then(Json::as_str)
+        .ok_or_else(|| "request needs a string \"cmd\"".to_string())?;
+    let job_name = |what: &str| -> Result<String, String> {
+        doc.get("job")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| format!("{what} needs a string \"job\""))
+    };
+    match cmd {
+        "submit" => match doc.get("job") {
+            Some(job @ Json::Obj(_)) => Ok(Request::Submit { job: job.clone() }),
+            _ => Err("submit needs a \"job\" object (one manifest job entry)".to_string()),
+        },
+        "status" => Ok(Request::Status),
+        "watch" => Ok(Request::Watch),
+        "query" => {
+            let what = doc
+                .get("what")
+                .and_then(Json::as_str)
+                .unwrap_or("units");
+            let what = QueryWhat::from_name(what)
+                .ok_or_else(|| format!("unknown query {what:?} (expected units|mesh|snapshot)"))?;
+            Ok(Request::Query { job: job_name("query")?, what })
+        }
+        "cancel" => Ok(Request::Cancel { job: job_name("cancel")? }),
+        "shutdown" => Ok(Request::Shutdown),
+        other => Err(format!(
+            "unknown cmd {other:?} (expected submit|status|watch|query|cancel|shutdown)"
+        )),
+    }
+}
+
+/// Build a JSON object from field pairs (the response-builder spine).
+pub fn obj(fields: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in fields {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+/// A success response with extra fields.
+pub fn ok_response(fields: Vec<(&str, Json)>) -> Json {
+    let mut all = vec![("ok", Json::Bool(true))];
+    all.extend(fields);
+    obj(all)
+}
+
+/// A failure response: `{"ok": false, "code": ..., "error": ...}`.
+pub fn err_response(code: &str, error: impl Into<String>) -> Json {
+    obj(vec![
+        ("ok", Json::Bool(false)),
+        ("code", Json::Str(code.to_string())),
+        ("error", Json::Str(error.into())),
+    ])
+}
+
+/// A streamed event line: `{"event": ..., ...fields}`.
+pub fn event(name: &str, fields: Vec<(&str, Json)>) -> Json {
+    let mut all = vec![("event", Json::Str(name.to_string()))];
+    all.extend(fields);
+    obj(all)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::render_json;
+
+    #[test]
+    fn parses_every_verb() {
+        let r = parse_request(r#"{"cmd": "submit", "job": {"name": "a", "mesh": "blob"}}"#);
+        assert!(matches!(r, Ok(Request::Submit { .. })), "{r:?}");
+        assert_eq!(parse_request(r#"{"cmd": "status"}"#), Ok(Request::Status));
+        assert_eq!(parse_request(r#"{"cmd": "watch"}"#), Ok(Request::Watch));
+        assert_eq!(
+            parse_request(r#"{"cmd": "query", "job": "a", "what": "mesh"}"#),
+            Ok(Request::Query { job: "a".to_string(), what: QueryWhat::Mesh })
+        );
+        assert_eq!(
+            parse_request(r#"{"cmd": "query", "job": "a"}"#),
+            Ok(Request::Query { job: "a".to_string(), what: QueryWhat::Units }),
+            "query defaults to the cheap units probe"
+        );
+        assert_eq!(
+            parse_request(r#"{"cmd": "cancel", "job": "a"}"#),
+            Ok(Request::Cancel { job: "a".to_string() })
+        );
+        assert_eq!(parse_request(r#"{"cmd": "shutdown"}"#), Ok(Request::Shutdown));
+    }
+
+    #[test]
+    fn rejects_malformed_requests_with_diagnostics() {
+        for (bad, needle) in [
+            ("not json", "not valid JSON"),
+            ("[1,2]", "must be a JSON object"),
+            (r#"{"verb": "status"}"#, "needs a string \"cmd\""),
+            (r#"{"cmd": "frobnicate"}"#, "unknown cmd"),
+            (r#"{"cmd": "submit"}"#, "needs a \"job\" object"),
+            (r#"{"cmd": "submit", "job": "a"}"#, "needs a \"job\" object"),
+            (r#"{"cmd": "query"}"#, "needs a string \"job\""),
+            (r#"{"cmd": "query", "job": "a", "what": "vibes"}"#, "unknown query"),
+            (r#"{"cmd": "cancel"}"#, "needs a string \"job\""),
+        ] {
+            let err = parse_request(bad).unwrap_err();
+            assert!(err.contains(needle), "{bad:?}: {err:?} missing {needle:?}");
+        }
+    }
+
+    #[test]
+    fn responses_render_with_stable_discriminators() {
+        let ok = render_json(&ok_response(vec![("job", Json::Str("a".to_string()))]));
+        assert!(ok.contains("\"ok\":true") && ok.contains("\"job\":\"a\""), "{ok}");
+        let err = render_json(&err_response("exists", "job \"a\" already admitted"));
+        assert!(err.contains("\"ok\":false") && err.contains("\"code\":\"exists\""), "{err}");
+        let ev = render_json(&event("bye", vec![("exit", Json::Num(0.0))]));
+        assert!(ev.contains("\"event\":\"bye\"") && ev.contains("\"exit\":0"), "{ev}");
+    }
+}

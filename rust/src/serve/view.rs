@@ -1,0 +1,96 @@
+//! Batch-boundary read views over live fleet jobs.
+//!
+//! Every function here takes `&FleetJob` / `&ConvergenceSession` and only
+//! calls immutable accessors (`report_so_far`, `algo().net()`,
+//! `snapshot_session`) — a query can therefore never perturb convergence,
+//! by construction rather than by care. The daemon calls these between
+//! `step_round` batches, so the numbers a client sees are exactly the
+//! state the next round resumes from: the same consistency point the
+//! checkpoint writer snapshots at.
+
+use crate::fleet::snapshot::snapshot_session;
+use crate::fleet::FleetJob;
+use crate::runtime::{bytes::crc32, Json};
+
+use super::protocol::obj;
+
+/// One job's live counters, as a `status` row / `watch` progress row.
+pub fn status_row(job: &FleetJob) -> Json {
+    let mut fields = vec![
+        ("name", Json::Str(job.spec().name.clone())),
+        ("status", Json::Str(job.status().name().to_string())),
+        ("qos", Json::Str(job.spec().qos.name().to_string())),
+        ("attempts", Json::Num(job.attempts() as f64)),
+    ];
+    // Prefer the final report (survives session teardown on failure);
+    // fall back to the live session's running totals.
+    let live = job.session().map(|s| s.report_so_far());
+    if let Some(r) = job.report().or(live) {
+        fields.push(("signals", Json::Num(r.signals as f64)));
+        fields.push(("units", Json::Num(r.units.max(units_of(job)) as f64)));
+        fields.push(("connections", Json::Num(r.connections.max(connections_of(job)) as f64)));
+        fields.push(("qe", Json::Num(qe_of(job).unwrap_or(r.qe) as f64)));
+        fields.push(("converged", Json::Bool(r.converged)));
+    }
+    if let Some(e) = job.last_error() {
+        fields.push(("error", Json::Str(e.to_string())));
+    }
+    obj(fields)
+}
+
+/// `query what=units`: counts + QE straight off the live network.
+pub fn units_view(job: &FleetJob) -> Option<Json> {
+    let session = job.session()?;
+    let net = session.algo().net();
+    Some(obj(vec![
+        ("units", Json::Num(net.len() as f64)),
+        ("connections", Json::Num(net.edge_count() as f64)),
+        ("qe", Json::Num(session.algo().quantization_error() as f64)),
+        ("signals", Json::Num(session.report_so_far().signals as f64)),
+        ("done", Json::Bool(session.is_done())),
+    ]))
+}
+
+/// `query what=mesh`: triangulate the current network and summarise it.
+pub fn mesh_view(job: &FleetJob) -> Option<Json> {
+    let session = job.session()?;
+    let stats = session.algo().net().to_mesh().stats();
+    Some(obj(vec![
+        ("vertices", Json::Num(stats.vertices as f64)),
+        ("edges", Json::Num(stats.edges as f64)),
+        ("faces", Json::Num(stats.faces as f64)),
+        ("euler_characteristic", Json::Num(stats.euler_characteristic as f64)),
+        (
+            "genus",
+            stats.genus.map_or(Json::Null, |g| Json::Num(g as f64)),
+        ),
+        ("components", Json::Num(stats.components as f64)),
+        ("watertight", Json::Bool(stats.watertight)),
+        ("total_area", Json::Num(stats.total_area)),
+    ]))
+}
+
+/// `query what=snapshot`: length + CRC-32 of the encoded session. Two
+/// runs that answer the same pair here hold bit-identical state — the
+/// cheapest parity probe that fits on one line.
+pub fn snapshot_view(job: &FleetJob) -> Option<Json> {
+    let session = job.session()?;
+    let bytes = snapshot_session(session);
+    Some(obj(vec![
+        ("len", Json::Num(bytes.len() as f64)),
+        ("crc32", Json::Str(format!("{:08x}", crc32(&bytes)))),
+        ("fingerprint", Json::Str(format!("{:016x}", session.fingerprint()))),
+    ]))
+}
+
+fn units_of(job: &FleetJob) -> usize {
+    job.session().map_or(0, |s| s.algo().net().len())
+}
+
+fn connections_of(job: &FleetJob) -> usize {
+    job.session().map_or(0, |s| s.algo().net().edge_count())
+}
+
+fn qe_of(job: &FleetJob) -> Option<f32> {
+    job.session().map(|s| s.algo().quantization_error())
+}

@@ -470,6 +470,59 @@ fn retry_restores_from_checkpoint_bit_exactly() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// Dynamic admission (the serve daemon's substrate): jobs added and
+/// removed mid-run through `add_job`/`remove_job` — previously only
+/// exercised via the dist worker — leave every *surviving* job
+/// bit-identical to a static fleet that ran it start-to-finish. The
+/// round-robin scheduler steps each live job by its own turn counter, so
+/// membership churn reshuffles interleaving, never per-job state.
+#[test]
+fn dynamic_admission_is_bit_identical_to_static_fleet() {
+    // Static references, run solo so membership never differs.
+    let reference = |name: &str, seed: u64| {
+        let mut fleet = Fleet::new(vec![tiny_spec(name, seed)]).unwrap();
+        fleet.run(&FleetOptions::default(), |_| {}).unwrap();
+        fleet
+    };
+    let ref_a = reference("dyn-a", 31);
+    let ref_c = reference("dyn-c", 33);
+
+    // Dynamic fleet: starts [a, b]; c arrives mid-run; b is cancelled
+    // mid-run; the survivors drain to completion.
+    let mut fleet =
+        Fleet::new(vec![tiny_spec("dyn-a", 31), tiny_spec("dyn-b", 32)]).unwrap();
+    let opts = FleetOptions::default();
+    let mut progress = |_: &str| {};
+    let mut round = 0u64;
+    loop {
+        // Mutations land between rounds — the same batch-boundary
+        // consistency point the serve daemon handles requests at.
+        if round == 2 {
+            fleet.add_job(tiny_spec("dyn-c", 33)).unwrap();
+        }
+        if round == 4 {
+            assert!(fleet.remove_job("dyn-b"), "dyn-b was admitted at start");
+        }
+        let live = fleet.step_round(&opts, round, None, &mut progress);
+        round += 1;
+        if live == 0 && round > 4 {
+            break;
+        }
+    }
+
+    let names: Vec<&str> = fleet.jobs().iter().map(|j| j.spec().name.as_str()).collect();
+    assert_eq!(names, ["dyn-a", "dyn-c"], "cancelled job lingered");
+    for (reference, name) in [(&ref_a, "dyn-a"), (&ref_c, "dyn-c")] {
+        let survivor = fleet.jobs().iter().find(|j| j.spec().name == name).unwrap();
+        assert_eq!(survivor.status(), JobStatus::Done);
+        assert_networks_identical(
+            reference.jobs()[0].session().unwrap().algo().net(),
+            survivor.session().unwrap().algo().net(),
+            &format!("{name}: dynamic vs static fleet"),
+        );
+    }
+}
+
 /// The CI fault-matrix profile must parse — a typo in the workflow's
 /// `MSGSN_FAULTS` value would otherwise panic at the first fault-point
 /// evaluation of every test in the cell.

@@ -1,0 +1,347 @@
+//! Serve integration tests — the PR 9 acceptance points, end to end over
+//! real TCP (real listener, real line protocol, the same `Fleet` as the
+//! batch path):
+//!
+//! - **serve ≡ batch**: jobs submitted over the wire to a running daemon
+//!   finish **bit-identical** to the same manifest run via `fleet::Fleet`
+//!   (the daemon adds a protocol, not state);
+//! - **query non-perturbation**: a client hammering `status` / `query`
+//!   (units, mesh extraction, snapshot CRC) against a converging job
+//!   leaves the final network — and the full encoded session — bitwise
+//!   unchanged versus an unobserved run;
+//! - **chaos**: a `serve_conn:drop@2` injection that severs a client
+//!   mid-conversation kills neither the daemon nor its jobs; the client
+//!   reconnects, resubmission is answered with the idempotent `exists`
+//!   code, and parity still holds.
+//!
+//! Every test holds the fault test lock: the chaos test arms an unscoped
+//! `serve_conn` spec that would otherwise be consumed by a concurrently
+//! running sibling's connections, and the parity tests clear the profile
+//! because a dropped test client (no reconnect logic) is exactly what
+//! they are *not* about — the CI `serve-e2e` chaos cell drives the real
+//! daemon under `MSGSN_FAULTS` instead.
+
+use std::collections::BTreeSet;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use msgsn::fleet::snapshot::snapshot_session;
+use msgsn::fleet::{parse_manifest, Fleet, FleetOptions, FleetOutcome};
+use msgsn::runtime::fault;
+use msgsn::runtime::{parse_json, Json};
+use msgsn::serve::{ServeOptions, Server};
+use msgsn::som::Network;
+
+/// Bitwise network equality (same contract as the fleet/dist suites).
+fn assert_networks_identical(a: &Network, b: &Network, label: &str) {
+    assert_eq!(a.capacity(), b.capacity(), "{label}: slab capacity");
+    assert_eq!(a.len(), b.len(), "{label}: live units");
+    assert_eq!(a.edge_count(), b.edge_count(), "{label}: edges");
+    for id in 0..a.capacity() as u32 {
+        assert_eq!(a.is_alive(id), b.is_alive(id), "{label}: aliveness of {id}");
+        if !a.is_alive(id) {
+            continue;
+        }
+        let (ua, ub) = (a.unit(id), b.unit(id));
+        for (va, vb, what) in [
+            (ua.pos.x, ub.pos.x, "pos.x"),
+            (ua.pos.y, ub.pos.y, "pos.y"),
+            (ua.pos.z, ub.pos.z, "pos.z"),
+            (ua.firing, ub.firing, "firing"),
+            (ua.error, ub.error, "error"),
+            (ua.threshold, ub.threshold, "threshold"),
+        ] {
+            assert_eq!(va.to_bits(), vb.to_bits(), "{label}: unit {id} {what}");
+        }
+        let ea: Vec<(u32, u32)> =
+            a.edges_of(id).iter().map(|e| (e.to, e.age.to_bits())).collect();
+        let eb: Vec<(u32, u32)> =
+            b.edges_of(id).iter().map(|e| (e.to, e.age.to_bits())).collect();
+        assert_eq!(ea, eb, "{label}: edges of {id}");
+    }
+}
+
+/// One inline manifest-job object — the same text is submitted over the
+/// wire and assembled into the reference manifest, so both paths parse
+/// byte-identical specs.
+fn job_row(name: &str, seed: u64) -> String {
+    format!(
+        r#"{{"name": "{name}", "mesh": "blob", "algorithm": "soam", "driver": "multi",
+             "seed": {seed},
+             "config": {{"mesh_resolution": 16, "insertion_threshold": 0.2,
+                         "max_signals": 4000}}}}"#
+    )
+}
+
+fn manifest(jobs: &[(&str, u64)]) -> String {
+    let rows: Vec<String> = jobs.iter().map(|(n, s)| job_row(n, s)).collect();
+    format!(r#"{{"version": 1, "jobs": [{}]}}"#, rows.join(","))
+}
+
+/// The undisturbed batch reference: the same manifest through
+/// `fleet::Fleet` — what every serve run must be bit-identical to.
+fn reference_fleet(text: &str) -> Fleet {
+    let specs = parse_manifest(text).unwrap();
+    let mut fleet = Fleet::new(specs).unwrap();
+    fleet.run(&FleetOptions::default(), |_| {}).unwrap();
+    fleet
+}
+
+fn job_net<'a>(fleet: &'a Fleet, name: &str) -> &'a Network {
+    fleet
+        .jobs()
+        .iter()
+        .find(|j| j.spec().name == name)
+        .unwrap_or_else(|| panic!("no job {name:?} in fleet"))
+        .session()
+        .unwrap_or_else(|| panic!("job {name:?} has no session"))
+        .algo()
+        .net()
+}
+
+/// Start a daemon on an ephemeral port; the thread returns the drained
+/// server (for post-run parity assertions) and its final report.
+fn spawn_server() -> (SocketAddr, std::thread::JoinHandle<(Server, msgsn::fleet::FleetReport)>) {
+    let mut server = Server::bind("127.0.0.1:0", Vec::new()).unwrap();
+    let addr = server.local_addr().unwrap();
+    let handle = std::thread::Builder::new()
+        .name("msgsn-serve".to_string())
+        .spawn(move || {
+            let opts = ServeOptions {
+                idle_poll: Duration::from_millis(1),
+                watch_every: 4,
+                ..ServeOptions::default()
+            };
+            let report = server.run(&opts, |_| {}).unwrap();
+            (server, report)
+        })
+        .unwrap();
+    (addr, handle)
+}
+
+/// A deliberately simple blocking line client: the daemon under test is
+/// the non-blocking side.
+struct LineClient {
+    reader: BufReader<TcpStream>,
+}
+
+impl LineClient {
+    fn connect(addr: SocketAddr) -> LineClient {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_nodelay(true).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(120)))
+            .unwrap();
+        LineClient { reader: BufReader::new(stream) }
+    }
+
+    fn send(&mut self, line: &str) {
+        let s = self.reader.get_mut();
+        s.write_all(line.as_bytes()).unwrap();
+        s.write_all(b"\n").unwrap();
+    }
+
+    /// Next line as JSON; `None` on EOF (the daemon closed us).
+    fn recv(&mut self) -> Option<Json> {
+        let mut line = String::new();
+        match self.reader.read_line(&mut line) {
+            Ok(0) => None,
+            Ok(_) => Some(parse_json(line.trim()).unwrap_or_else(|e| {
+                panic!("daemon sent invalid JSON {line:?}: {e}")
+            })),
+            Err(e) => panic!("reading from daemon: {e}"),
+        }
+    }
+
+    /// Send a request and read to its response (an `"ok"`-keyed object),
+    /// routing interleaved `"event"` lines into `events`. `None` on EOF.
+    fn request(&mut self, line: &str, events: &mut Vec<Json>) -> Option<Json> {
+        self.send(line);
+        loop {
+            let doc = self.recv()?;
+            if doc.get("ok").is_some() {
+                return Some(doc);
+            }
+            events.push(doc);
+        }
+    }
+}
+
+fn assert_ok(resp: &Json, label: &str) {
+    assert_eq!(
+        resp.get("ok").and_then(Json::as_bool),
+        Some(true),
+        "{label}: {resp:?}"
+    );
+}
+
+fn event_name(doc: &Json) -> Option<&str> {
+    doc.get("event").and_then(Json::as_str)
+}
+
+/// Drive a shutdown-initiated drain to the `bye` event, returning every
+/// event seen since `events` (done/progress/report/bye).
+fn drain_to_bye(client: &mut LineClient, events: &mut Vec<Json>) {
+    loop {
+        let doc = client.recv().expect("daemon hung up before bye");
+        let done = event_name(&doc) == Some("bye");
+        events.push(doc);
+        if done {
+            return;
+        }
+    }
+}
+
+#[test]
+fn serve_path_is_bit_identical_to_batch_path() {
+    let _guard = fault::test_lock();
+    fault::clear();
+    let jobs = [("sv-par-a", 41u64), ("sv-par-b", 42u64)];
+    let reference = reference_fleet(&manifest(&jobs));
+
+    let (addr, handle) = spawn_server();
+    let mut client = LineClient::connect(addr);
+    let mut events = Vec::new();
+    let watch = client.request(r#"{"cmd": "watch"}"#, &mut events).unwrap();
+    assert_ok(&watch, "watch");
+    for (name, seed) in jobs {
+        let resp = client
+            .request(&format!(r#"{{"cmd": "submit", "job": {}}}"#, job_row(name, seed)), &mut events)
+            .unwrap();
+        assert_ok(&resp, "submit");
+        assert_eq!(resp.get("job").and_then(Json::as_str), Some(name));
+    }
+    let resp = client.request(r#"{"cmd": "shutdown"}"#, &mut events).unwrap();
+    assert_ok(&resp, "shutdown");
+    drain_to_bye(&mut client, &mut events);
+
+    // The stream announced both completions, streamed progress, and
+    // carried the final report + exit code.
+    let done: BTreeSet<&str> = events
+        .iter()
+        .filter(|e| event_name(e) == Some("done"))
+        .filter_map(|e| e.get("job").and_then(|j| j.get("name")).and_then(Json::as_str))
+        .collect();
+    assert_eq!(done, jobs.iter().map(|(n, _)| *n).collect::<BTreeSet<_>>());
+    assert!(
+        events.iter().any(|e| event_name(e) == Some("progress")),
+        "no progress events were streamed"
+    );
+    let bye = events.iter().find(|e| event_name(e) == Some("bye")).unwrap();
+    assert_eq!(bye.get("exit").and_then(Json::as_u64), Some(0));
+    let report_ev = events.iter().find(|e| event_name(e) == Some("report")).unwrap();
+    assert_eq!(
+        report_ev.get("rows").and_then(Json::as_arr).map(Vec::len),
+        Some(jobs.len())
+    );
+
+    let (server, report) = handle.join().unwrap();
+    assert_eq!(report.outcome(), FleetOutcome::AllSucceeded);
+    for (name, _) in jobs {
+        assert_networks_identical(
+            job_net(server.fleet(), name),
+            job_net(&reference, name),
+            name,
+        );
+    }
+}
+
+#[test]
+fn query_during_convergence_does_not_perturb() {
+    let _guard = fault::test_lock();
+    fault::clear();
+    let name = "sv-query";
+    let reference = reference_fleet(&manifest(&[(name, 77)]));
+
+    let (addr, handle) = spawn_server();
+    let mut client = LineClient::connect(addr);
+    let mut events = Vec::new();
+    let resp = client
+        .request(&format!(r#"{{"cmd": "submit", "job": {}}}"#, job_row(name, 77)), &mut events)
+        .unwrap();
+    assert_ok(&resp, "submit");
+
+    // Hammer the read surface while the job converges: every batch
+    // boundary the daemon reaches may serve a units / mesh / snapshot
+    // view. If read views perturbed anything, the final bits would drift.
+    let mut views = 0usize;
+    loop {
+        for what in ["units", "mesh", "snapshot"] {
+            let q = client
+                .request(
+                    &format!(r#"{{"cmd": "query", "job": "{name}", "what": "{what}"}}"#),
+                    &mut events,
+                )
+                .unwrap();
+            assert_ok(&q, "query");
+            assert!(q.get("view").is_some(), "query carried no view: {q:?}");
+            views += 1;
+        }
+        let status = client.request(r#"{"cmd": "status"}"#, &mut events).unwrap();
+        assert_ok(&status, "status");
+        let rows = status.get("jobs").and_then(Json::as_arr).unwrap();
+        assert_eq!(rows.len(), 1);
+        let done = rows[0].get("status").and_then(Json::as_str) == Some("done");
+        if done {
+            break;
+        }
+    }
+    assert!(views >= 3, "the queries never ran");
+    let resp = client.request(r#"{"cmd": "shutdown"}"#, &mut events).unwrap();
+    assert_ok(&resp, "shutdown");
+    drain_to_bye(&mut client, &mut events);
+
+    let (server, report) = handle.join().unwrap();
+    assert_eq!(report.outcome(), FleetOutcome::AllSucceeded);
+    assert_networks_identical(job_net(server.fleet(), name), job_net(&reference, name), name);
+    // Stronger than the network: the complete encoded session (RNG
+    // streams, counters, index) is byte-identical to the unobserved run.
+    let observed = server.fleet().jobs()[0].session().unwrap();
+    let unobserved = reference.jobs()[0].session().unwrap();
+    assert_eq!(
+        snapshot_session(observed),
+        snapshot_session(unobserved),
+        "read views perturbed the encoded session"
+    );
+}
+
+#[test]
+fn dropped_client_kills_neither_daemon_nor_jobs() {
+    let _guard = fault::test_lock();
+    fault::install(fault::parse_faults("serve_conn:drop@2").unwrap());
+    let name = "sv-chaos";
+    let reference = reference_fleet(&manifest(&[(name, 91)]));
+
+    let (addr, handle) = spawn_server();
+    let mut client = LineClient::connect(addr);
+    let mut events = Vec::new();
+    let resp = client
+        .request(&format!(r#"{{"cmd": "submit", "job": {}}}"#, job_row(name, 91)), &mut events)
+        .unwrap();
+    assert_ok(&resp, "submit");
+    // Second request trips the injected drop: the daemon discards it and
+    // severs the connection. The client observes EOF, nothing more.
+    let severed = client.request(r#"{"cmd": "status"}"#, &mut events);
+    assert!(severed.is_none(), "injected drop did not sever the connection: {severed:?}");
+
+    // Reconnect; the daemon is alive and the job kept converging.
+    let mut client = LineClient::connect(addr);
+    let status = client.request(r#"{"cmd": "status"}"#, &mut events).unwrap();
+    assert_ok(&status, "status after reconnect");
+    // Idempotent resubmission: answered with the `exists` code, not an
+    // error that would make a retrying client give up.
+    let resub = client
+        .request(&format!(r#"{{"cmd": "submit", "job": {}}}"#, job_row(name, 91)), &mut events)
+        .unwrap();
+    assert_eq!(resub.get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(resub.get("code").and_then(Json::as_str), Some("exists"));
+
+    let resp = client.request(r#"{"cmd": "shutdown"}"#, &mut events).unwrap();
+    assert_ok(&resp, "shutdown");
+    drain_to_bye(&mut client, &mut events);
+
+    let (server, report) = handle.join().unwrap();
+    assert_eq!(report.outcome(), FleetOutcome::AllSucceeded);
+    assert_networks_identical(job_net(server.fleet(), name), job_net(&reference, name), name);
+}

@@ -24,7 +24,10 @@ at different fleet sizes never collides — re-sizing the fleet bench shows
 up as a new row (skipped) instead of a bogus diff. Dist rows additionally
 carry a "transport" field ("channel", "tcp") that joins the key for the
 same reason: the same fleet shape over a different transport is a new row,
-never a cross-diff. Likewise the per-ISA
+never a cross-diff. Serve rows carry a "serve": true field that suffixes
+the key ("<row>/jobs=N/serve"), so daemon-path measurements (protocol +
+scheduling on top of the fleet) never cross-diff against batch-fleet rows
+of the same name and size. Likewise the per-ISA
 find_winners rows carry an "isa" field that becomes part of the key, so a
 baseline recorded on an AVX-512 host never cross-diffs against a fresh run
 on an AVX2-only host — a tier the host lacks is a skipped/new row, never a
@@ -63,6 +66,12 @@ def rows_by_key(node, out):
             key = ("units", f"{node['units']}/m={node['m']}")
         elif "units" in node:
             key = ("units", str(node["units"]))
+        if key is not None and key[0] == "row" and node.get("serve"):
+            # Serve-keyed rows ("serve": true): the daemon path measures
+            # protocol + scheduling on top of the fleet, so its rows must
+            # never cross-diff against batch-fleet rows of the same name
+            # and size.
+            key = ("row", f"{key[1]}/serve")
         if key is not None:
             out[key] = node
         for v in node.values():

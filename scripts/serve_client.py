@@ -1,0 +1,274 @@
+#!/usr/bin/env python3
+"""Line-JSON client for `msgsn serve` — the CI serve-e2e driver.
+
+Subcommands:
+
+  session       drive a full daemon conversation: submit every job from a
+                manifest, subscribe to watch, poll status until all jobs
+                finish, query every job (units / mesh / snapshot), then
+                request shutdown and read the stream to the `bye` event.
+                Reconnects with bounded retries when the daemon severs the
+                connection (the chaos cell injects exactly that), treating
+                the `exists` code on resubmission as success.
+  check-report  assert on a --report-json file: every row done, exit 0.
+
+Exit codes: 0 success, 1 assertion/protocol failure, 2 could not connect.
+
+Stdlib only — runs on the bare CI python3.
+"""
+
+import argparse
+import json
+import socket
+import sys
+import time
+
+CONNECT_RETRIES = 40
+CONNECT_DELAY = 0.25
+RECONNECT_RETRIES = 5
+LINE_TIMEOUT = 120.0
+
+
+def log(msg):
+    print(f"serve_client: {msg}", flush=True)
+
+
+class Severed(Exception):
+    """The daemon closed the connection (EOF mid-conversation)."""
+
+
+class Client:
+    """One TCP connection speaking the line-JSON protocol."""
+
+    def __init__(self, addr):
+        host, port = addr.rsplit(":", 1)
+        last = None
+        for _ in range(CONNECT_RETRIES):
+            try:
+                self.sock = socket.create_connection((host, int(port)), timeout=5)
+                break
+            except OSError as e:
+                last = e
+                time.sleep(CONNECT_DELAY)
+        else:
+            log(f"cannot connect to {addr}: {last}")
+            sys.exit(2)
+        self.sock.settimeout(LINE_TIMEOUT)
+        self.reader = self.sock.makefile("r", encoding="utf-8")
+
+    def send(self, obj):
+        self.sock.sendall((json.dumps(obj) + "\n").encode("utf-8"))
+
+    def recv(self):
+        line = self.reader.readline()
+        if not line:
+            raise Severed("daemon closed the connection")
+        return json.loads(line)
+
+    def request(self, obj, events):
+        """Send and read to the response, routing events aside."""
+        self.send(obj)
+        while True:
+            doc = self.recv()
+            if "ok" in doc:
+                return doc
+            events.append(doc)
+
+    def close(self):
+        try:
+            self.reader.close()
+            self.sock.close()
+        except OSError:
+            pass
+
+
+class Session:
+    """The scripted conversation, with reconnect-on-EOF."""
+
+    def __init__(self, addr):
+        self.addr = addr
+        self.events = []
+        self.reconnects = 0
+        self.client = Client(addr)
+        self.watching = False
+
+    def reconnect(self):
+        self.reconnects += 1
+        if self.reconnects > RECONNECT_RETRIES:
+            raise SystemExit("serve_client: reconnect budget exhausted")
+        log(f"connection severed — reconnecting ({self.reconnects}/{RECONNECT_RETRIES})")
+        self.client.close()
+        self.client = Client(self.addr)
+        if self.watching:
+            # watch subscriptions are per-connection; re-arm.
+            resp = self.client.request({"cmd": "watch"}, self.events)
+            assert_ok(resp, "re-watch")
+
+    def request(self, obj, ok_codes=()):
+        """Request with reconnect; `ok_codes` are failure codes treated as
+        success (e.g. `exists` when resubmitting after a severed submit)."""
+        while True:
+            try:
+                resp = self.client.request(obj, self.events)
+            except Severed:
+                self.reconnect()
+                continue
+            if resp.get("ok"):
+                return resp
+            if resp.get("code") in ok_codes:
+                log(f"{obj.get('cmd')}: tolerated code {resp.get('code')!r}")
+                return resp
+            raise SystemExit(f"serve_client: {obj.get('cmd')} failed: {resp}")
+
+    def watch(self):
+        self.request({"cmd": "watch"})
+        self.watching = True
+
+    def drain_to_bye(self):
+        while True:
+            try:
+                doc = self.client.recv()
+            except Severed:
+                self.reconnect()
+                # Draining continues; the daemon rebroadcasts nothing, but
+                # status still answers — fall back to polling below.
+                return None
+            self.events.append(doc)
+            if doc.get("event") == "bye":
+                return doc
+
+
+def assert_ok(resp, label):
+    if not resp.get("ok"):
+        raise SystemExit(f"serve_client: {label} failed: {resp}")
+
+
+def load_jobs(path, max_signals):
+    with open(path, "r", encoding="utf-8") as f:
+        manifest = json.load(f)
+    jobs = manifest["jobs"]
+    if max_signals is not None:
+        for job in jobs:
+            job.setdefault("config", {})["max_signals"] = max_signals
+    return jobs
+
+
+def cmd_session(args):
+    deadline = time.monotonic() + args.timeout
+    jobs = load_jobs(args.jobs, args.max_signals)
+    if args.expect_jobs is not None and len(jobs) != args.expect_jobs:
+        raise SystemExit(
+            f"serve_client: manifest has {len(jobs)} jobs, expected {args.expect_jobs}"
+        )
+    names = [job["name"] for job in jobs]
+    session = Session(args.connect)
+    session.watch()
+
+    for job in jobs:
+        resp = session.request({"cmd": "submit", "job": job}, ok_codes=("exists",))
+        log(f"submitted {job['name']}: {resp}")
+
+    # Poll status until every job reports done (watch events stream in on
+    # the side and are collected for the final sanity checks).
+    while True:
+        if time.monotonic() > deadline:
+            raise SystemExit("serve_client: timed out waiting for jobs to finish")
+        resp = session.request({"cmd": "status"})
+        rows = {row["name"]: row for row in resp["jobs"]}
+        missing = [n for n in names if n not in rows]
+        if missing:
+            # A submit acknowledged before a drop may have been the
+            # duplicate — resubmit idempotently.
+            for job in jobs:
+                if job["name"] in missing:
+                    session.request({"cmd": "submit", "job": job}, ok_codes=("exists",))
+            continue
+        states = {n: rows[n]["status"] for n in names}
+        log(f"status: {states}")
+        bad = [n for n, s in states.items() if s in ("failed", "quarantined")]
+        if bad:
+            raise SystemExit(f"serve_client: jobs failed: {bad}")
+        if all(s == "done" for s in states.values()):
+            break
+        time.sleep(args.poll_secs)
+
+    # Every read view answers for every finished job.
+    for name in names:
+        for what in ("units", "mesh", "snapshot"):
+            resp = session.request({"cmd": "query", "job": name, "what": what})
+            view = resp.get("view", {})
+            log(f"query {name}/{what}: {view}")
+            if what == "units" and view.get("units", 0) <= 0:
+                raise SystemExit(f"serve_client: {name} reports no units: {resp}")
+            if what == "snapshot" and not view.get("crc32"):
+                raise SystemExit(f"serve_client: {name} snapshot probe empty: {resp}")
+
+    session.request({"cmd": "shutdown"})
+    bye = session.drain_to_bye()
+    if bye is None:
+        log("severed during drain — daemon exit code must prove the drain instead")
+    else:
+        log(f"bye: {bye}")
+        if bye.get("exit") != 0:
+            raise SystemExit(f"serve_client: daemon drained with exit {bye.get('exit')}")
+        report = [e for e in session.events if e.get("event") == "report"]
+        if not report:
+            raise SystemExit("serve_client: no report event before bye")
+        rows = report[-1]["rows"]
+        if sorted(r["name"] for r in rows) != sorted(names):
+            raise SystemExit(f"serve_client: report rows mismatch: {rows}")
+
+    done_events = {e["job"]["name"] for e in session.events if e.get("event") == "done"}
+    progress = sum(1 for e in session.events if e.get("event") == "progress")
+    log(f"events: {len(session.events)} total, {progress} progress, done={sorted(done_events)}")
+    log("session complete")
+    return 0
+
+
+def cmd_check_report(args):
+    with open(args.path, "r", encoding="utf-8") as f:
+        report = json.load(f)
+    rows = report["rows"]
+    if args.expect_jobs is not None and len(rows) != args.expect_jobs:
+        raise SystemExit(f"check-report: {len(rows)} rows, expected {args.expect_jobs}")
+    not_done = [r["name"] for r in rows if r["status"] != "done"]
+    if not_done:
+        raise SystemExit(f"check-report: jobs not done: {not_done}")
+    if report.get("outcome") != "all-succeeded" or report.get("exit_code") != 0:
+        raise SystemExit(
+            f"check-report: outcome {report.get('outcome')!r} "
+            f"exit_code {report.get('exit_code')!r}"
+        )
+    for r in rows:
+        run = r.get("report") or {}
+        if not run.get("converged") or run.get("units", 0) <= 0:
+            raise SystemExit(f"check-report: row {r['name']} did not converge: {r}")
+    log(f"check-report: {len(rows)} rows all done, outcome all-succeeded")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    sub = ap.add_subparsers(dest="sub", required=True)
+
+    s = sub.add_parser("session", help="drive a full daemon conversation")
+    s.add_argument("--connect", default="127.0.0.1:7081")
+    s.add_argument("--jobs", required=True, help="jobs manifest to submit from")
+    s.add_argument("--max-signals", type=int, default=None,
+                   help="override each job's max_signals (CI wall-clock)")
+    s.add_argument("--expect-jobs", type=int, default=None)
+    s.add_argument("--poll-secs", type=float, default=0.5)
+    s.add_argument("--timeout", type=float, default=300.0)
+    s.set_defaults(fn=cmd_session)
+
+    c = sub.add_parser("check-report", help="assert on a --report-json file")
+    c.add_argument("path")
+    c.add_argument("--expect-jobs", type=int, default=None)
+    c.set_defaults(fn=cmd_check_report)
+
+    args = ap.parse_args()
+    sys.exit(args.fn(args))
+
+
+if __name__ == "__main__":
+    main()

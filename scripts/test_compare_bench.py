@@ -17,7 +17,10 @@ a spurious failure would block every PR. These tests pin its contract:
 - per-ISA find_winners rows key on (units, m, isa): a regression on the
   same tier fails, while a tier only one host supports is a new row
   (skipped) — baselines from hosts with different ISA support never
-  cross-diff.
+  cross-diff;
+- serve rows ("serve": true) key on (row, jobs, serve): a regression on
+  the daemon path fails against the serve baseline, while serve and
+  batch-fleet rows of the same name and size never cross-diff.
 
 Runnable with the stdlib alone (`python3 -m unittest discover -s scripts`)
 or with pytest.
@@ -236,6 +239,39 @@ class CompareBenchCase(unittest.TestCase):
 
         self.write(self.baseline, "BENCH_end_to_end.json", dist_payload("channel", 1.0))
         self.write(self.fresh, "BENCH_end_to_end.json", dist_payload("tcp", 50.0))
+        r = run_compare(self.baseline, self.fresh)
+        self.assertEqual(r.returncode, 0, r.stdout + r.stderr)
+        self.assertIn("new row", r.stdout)
+
+    def serve_payload(self, total_s, serve=True, row="serve-fleet"):
+        entry = {"row": row, "jobs": 2, "total_s": total_s}
+        if serve:
+            entry["serve"] = True
+        return {"bench": "end_to_end", "serve": [entry]}
+
+    def test_serve_row_regression_fails_against_serve_baseline(self):
+        self.write(self.baseline, "BENCH_end_to_end.json", self.serve_payload(1.0))
+        self.write(self.fresh, "BENCH_end_to_end.json", self.serve_payload(1.5))
+        r = run_compare(self.baseline, self.fresh)
+        self.assertEqual(r.returncode, 1, r.stdout + r.stderr)
+        self.assertIn("serve-fleet/jobs=2/serve", r.stdout)
+        self.assertIn("REGRESSION", r.stdout)
+
+    def test_serve_and_batch_rows_never_cross_diff(self):
+        # A daemon-path row must not diff against a batch-fleet row of the
+        # same name and size: the serve row measures protocol + scheduling
+        # on top of the fleet, so a huge delta between them is two
+        # workloads, not a regression.
+        self.write(
+            self.baseline,
+            "BENCH_end_to_end.json",
+            self.serve_payload(1.0, serve=False, row="fleet-concurrent"),
+        )
+        self.write(
+            self.fresh,
+            "BENCH_end_to_end.json",
+            self.serve_payload(50.0, serve=True, row="fleet-concurrent"),
+        )
         r = run_compare(self.baseline, self.fresh)
         self.assertEqual(r.returncode, 0, r.stdout + r.stderr)
         self.assertIn("new row", r.stdout)
