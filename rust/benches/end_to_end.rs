@@ -253,15 +253,45 @@ fn main() -> anyhow::Result<()> {
         ));
     }
 
+    // Telemetry: the same solo smoke run with the instrument registry off
+    // vs fully on (counters + phase timers + trace). The contract says the
+    // results are bit-identical and the overhead is one relaxed load per
+    // hot-path site; this row pair puts a wall-clock number on it. Rows
+    // carry a "telemetry" field so scripts/compare_bench.py keys them
+    // separately (an on-row never regression-diffs against an off-row).
+    println!("\ntelemetry overhead end-to-end (blob, smoke scale):");
+    let mut telemetry_rows = Vec::new();
+    for (name, enabled) in [("off", false), ("on", true)] {
+        msgsn::telemetry::set_enabled(enabled);
+        let mut cfg = Scale::SMOKE.configure(BenchmarkShape::Blob);
+        cfg.update_threads = 0;
+        cfg.find_threads = 0;
+        let mut rng = msgsn::rng::Rng::seed_from(42);
+        let t0 = std::time::Instant::now();
+        let r = msgsn::engine::run(&mesh, Driver::Parallel, &cfg, &mut rng)?;
+        let total = t0.elapsed().as_secs_f64();
+        println!(
+            "  telemetry-{:3} {total:>8.3}s  ({} units, {} discarded)",
+            name, r.units, r.discarded,
+        );
+        telemetry_rows.push(format!(
+            "    {{\"row\": \"telemetry-overhead\", \"telemetry\": \"{name}\", \
+             \"total_s\": {total:.6}, \"units\": {}, \"discarded\": {}}}",
+            r.units, r.discarded,
+        ));
+    }
+    msgsn::telemetry::set_enabled(false);
+
     let csv = grid.to_csv();
     let json = format!(
         "{{\n  \"bench\": \"end_to_end\",\n  \"worker_pool\": [\n{}\n  ],\n  \
          \"fleet\": [\n{}\n  ],\n  \"dist\": [\n{}\n  ],\n  \
-         \"serve\": [\n{}\n  ],\n  \"grid_csv\": {:?}\n}}\n",
+         \"serve\": [\n{}\n  ],\n  \"telemetry\": [\n{}\n  ],\n  \"grid_csv\": {:?}\n}}\n",
         pool_rows.join(",\n"),
         fleet_rows.join(",\n"),
         dist_rows.join(",\n"),
         serve_rows.join(",\n"),
+        telemetry_rows.join(",\n"),
         csv,
     );
     if let Err(e) = std::fs::write("BENCH_end_to_end.json", &json) {

@@ -104,8 +104,16 @@ USAGE:
                                  same grammar as env MSGSN_FAULTS, e.g.
                                  checkpoint_write:truncate@2,job:panic@turn=7)
       --report-json <path>       also write the final report as JSON
-                                 (rows + outcome + exit_code)
+                                 (rows + outcome + exit_code; embeds a
+                                 \"telemetry\" object when telemetry is on)
+      --metrics-json <path>      write the telemetry registry (counters,
+                                 gauges, histograms + trace tail) as JSON
+                                 at exit; implies telemetry on
+      --trace-file <path>        write the structured event trace as JSONL
+                                 at exit; implies telemetry on
       --quiet                    suppress progress lines
+      env MSGSN_TELEMETRY=1 enables the instrument registry without
+      writing files (bit-identical results either way)
       exit code: 0 all jobs succeeded, 2 some quarantined, 3 all
       quarantined (1 = usage/config errors)
 
@@ -122,12 +130,18 @@ USAGE:
       --max-retries <N>          as in msgsn fleet              [2]
       --watch-every <N>          progress event cadence (rounds) [8]
       --report-json <path>       write the final report as JSON on drain
+      --metrics-json <path>      write the telemetry registry as JSON on
+                                 drain; implies telemetry on
+      --trace-file <path>        write the event trace as JSONL on drain;
+                                 implies telemetry on
       --faults <spec,...>        arm fault injection (adds serve_conn:
                                  drop|err|delay=N|dup on client
                                  connections, scope c<id>)
       --quiet                    suppress progress lines
       protocol: line-delimited JSON — {\"cmd\": \"submit\", \"job\": {…}} |
-      status | watch | query (units|mesh|snapshot) | cancel | shutdown;
+      status | watch | query (units|mesh|snapshot) | cancel | metrics |
+      shutdown; the metrics verb answers from the telemetry registry
+      only (never touches a session — polls cannot perturb convergence);
       runs until a shutdown request drains the fleet, then exits with
       the fleet exit code (0/2/3; 1 = usage/config errors)
 
@@ -141,6 +155,10 @@ USAGE:
                                  (fractional ok)               [5]
       --max-retries <N>          cross-worker crash retries before a job
                                  is quarantined                [2]
+      --trace-file <path>        write the event trace (admits, failures,
+                                 migrations, evictions, checkpoint
+                                 promotions) as JSONL at exit; implies
+                                 telemetry on
       --quiet                    suppress progress lines
       exit code: 0 all jobs done, 2 some quarantined, 3 all quarantined,
       4 every worker died/hung with jobs outstanding (1 = usage/config)
@@ -153,6 +171,8 @@ USAGE:
       --checkpoint-rounds <N>    ship a migration snapshot of every
                                  running job each N rounds (0 = finals
                                  only)                          [8]
+      --trace-file <path>        write the event trace as JSONL at exit;
+                                 implies telemetry on
       --quiet                    suppress progress lines
       exits when the coordinator sends shutdown (0) or the link dies (1)
 
@@ -210,6 +230,8 @@ pub fn parse(args: &[String]) -> Result<Command, ArgError> {
                 "max-retries",
                 "faults",
                 "report-json",
+                "metrics-json",
+                "trace-file",
             ],
             &["resume", "quiet"],
         )?)),
@@ -226,6 +248,8 @@ pub fn parse(args: &[String]) -> Result<Command, ArgError> {
                 "watch-every",
                 "faults",
                 "report-json",
+                "metrics-json",
+                "trace-file",
             ],
             &["resume", "quiet"],
         )?)),
@@ -251,12 +275,19 @@ pub fn parse(args: &[String]) -> Result<Command, ArgError> {
         )?)),
         "coordinator" => Ok(Command::Coordinator(parser::parse_flags(
             rest,
-            &["jobs", "listen", "workers", "heartbeat-timeout", "max-retries"],
+            &[
+                "jobs",
+                "listen",
+                "workers",
+                "heartbeat-timeout",
+                "max-retries",
+                "trace-file",
+            ],
             &["quiet"],
         )?)),
         "worker" => Ok(Command::Worker(parser::parse_flags(
             rest,
-            &["connect", "name", "stride", "checkpoint-rounds"],
+            &["connect", "name", "stride", "checkpoint-rounds", "trace-file"],
             &["quiet"],
         )?)),
         "help" | "--help" | "-h" => Ok(Command::Help),
@@ -360,6 +391,45 @@ mod tests {
             panic!("not fleet")
         };
         assert_eq!(p.get("report-json"), Some("out.json"));
+    }
+
+    #[test]
+    fn parses_telemetry_flags_on_every_verb_that_has_them() {
+        let Command::Fleet(p) = parse(&argv(
+            "fleet --jobs j.json --metrics-json m.json --trace-file t.jsonl",
+        ))
+        .unwrap() else {
+            panic!("not fleet")
+        };
+        assert_eq!(p.get("metrics-json"), Some("m.json"));
+        assert_eq!(p.get("trace-file"), Some("t.jsonl"));
+
+        let Command::Serve(p) = parse(&argv(
+            "serve --metrics-json m.json --trace-file t.jsonl",
+        ))
+        .unwrap() else {
+            panic!("not serve")
+        };
+        assert_eq!(p.get("metrics-json"), Some("m.json"));
+        assert_eq!(p.get("trace-file"), Some("t.jsonl"));
+
+        let Command::Coordinator(p) =
+            parse(&argv("coordinator --jobs j.json --trace-file t.jsonl")).unwrap()
+        else {
+            panic!("not coordinator")
+        };
+        assert_eq!(p.get("trace-file"), Some("t.jsonl"));
+
+        let Command::Worker(p) = parse(&argv("worker --trace-file t.jsonl")).unwrap() else {
+            panic!("not worker")
+        };
+        assert_eq!(p.get("trace-file"), Some("t.jsonl"));
+
+        // run/mesh/etc. deliberately do not take them.
+        assert!(matches!(
+            parse(&argv("run --metrics-json m.json")),
+            Err(ArgError::UnknownFlag(_))
+        ));
     }
 
     #[test]

@@ -34,6 +34,7 @@ use std::time::{Duration, Instant};
 
 use crate::fleet::snapshot;
 use crate::metrics::Table;
+use crate::runtime::Json;
 
 use super::transport::{Transport, TransportError};
 use super::wire::{Message, PROTOCOL_VERSION};
@@ -454,6 +455,15 @@ impl Coordinator {
             state.phase = JobPhase::Done;
             state.owner_name = Some(worker_name.clone());
             progress(&format!("job {job} done on worker {worker_name}"));
+            crate::telemetry::emit(
+                "checkpoint_promoted",
+                Some(job),
+                vec![
+                    ("worker", Json::Str(worker_name)),
+                    ("final", Json::Bool(true)),
+                    ("turn", Json::Num(turn as f64)),
+                ],
+            );
             self.ack_to(w, seq);
         } else {
             // Monotone watermark per owner: a duplicated older frame
@@ -462,8 +472,17 @@ impl Coordinator {
             let fresh_owner = state.ckpt_from.as_deref() != Some(worker_name.as_str());
             if fresh_owner || turn >= state.ckpt_turn {
                 state.ckpt = Some(bytes);
-                state.ckpt_from = Some(worker_name);
+                state.ckpt_from = Some(worker_name.clone());
                 state.ckpt_turn = turn;
+                crate::telemetry::emit(
+                    "checkpoint_promoted",
+                    Some(job),
+                    vec![
+                        ("worker", Json::Str(worker_name)),
+                        ("final", Json::Bool(false)),
+                        ("turn", Json::Num(turn as f64)),
+                    ],
+                );
             }
         }
     }
@@ -490,12 +509,27 @@ impl Coordinator {
         if !state.failed_on.contains(&worker_name) {
             state.failed_on.push(worker_name.clone());
         }
+        crate::telemetry::emit(
+            "job_failed",
+            Some(job),
+            vec![
+                ("worker", Json::Str(worker_name.clone())),
+                ("attempt", Json::Num(f64::from(state.attempts))),
+                ("error", Json::Str(error.clone())),
+            ],
+        );
         if state.attempts > budget {
             state.phase = JobPhase::Quarantined;
             progress(&format!(
                 "job {job} QUARANTINED after {} attempts (last on {worker_name}): {error}",
                 state.attempts
             ));
+            crate::telemetry::add(crate::telemetry::Counter::JobsQuarantined, 1);
+            crate::telemetry::emit(
+                "job_quarantined",
+                Some(job),
+                vec![("attempts", Json::Num(f64::from(state.attempts)))],
+            );
         } else {
             state.phase = JobPhase::Pending;
             let backoff =
@@ -506,6 +540,12 @@ impl Coordinator {
                 state.attempts,
                 budget + 1
             ));
+            crate::telemetry::add(crate::telemetry::Counter::JobsRetried, 1);
+            crate::telemetry::emit(
+                "job_retried",
+                Some(job),
+                vec![("attempt", Json::Num(f64::from(state.attempts)))],
+            );
         }
     }
 
@@ -515,6 +555,16 @@ impl Coordinator {
     fn evict(&mut self, w: usize, why: &str, round: u64, progress: &mut impl FnMut(&str)) {
         self.workers[w].alive = false;
         progress(&format!("worker {} evicted: {why}", self.workers[w].name));
+        crate::telemetry::add(crate::telemetry::Counter::WorkersEvicted, 1);
+        crate::telemetry::emit(
+            "worker_evicted",
+            None,
+            vec![
+                ("worker", Json::Str(self.workers[w].name.clone())),
+                ("why", Json::Str(why.to_string())),
+                ("round", Json::Num(round as f64)),
+            ],
+        );
         for job in &mut self.jobs {
             if job.owner == Some(w) && job.phase == JobPhase::Assigned {
                 job.owner = None;
@@ -529,6 +579,16 @@ impl Coordinator {
                         None => "from scratch".to_string(),
                     }
                 ));
+                crate::telemetry::add(crate::telemetry::Counter::JobsMigrated, 1);
+                crate::telemetry::emit(
+                    "job_migrated",
+                    Some(&job.name),
+                    vec![
+                        ("from_checkpoint", Json::Bool(job.ckpt.is_some())),
+                        ("ckpt_turn", Json::Num(job.ckpt_turn as f64)),
+                        ("migrations", Json::Num(f64::from(job.migrations))),
+                    ],
+                );
             }
         }
     }

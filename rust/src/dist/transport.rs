@@ -270,9 +270,16 @@ impl<P: Pipe> Transport for Link<P> {
         self.mature()?;
         let frame = wire::encode_frame(msg);
         match fault::fire(FaultPoint::TransportSend, Some(&self.peer), Some(self.turn)) {
-            None => self.pipe.send_frame(&frame),
-            Some(FaultAction::Drop) => Ok(()),
+            None => {
+                crate::telemetry::add(crate::telemetry::Counter::FramesSent, 1);
+                self.pipe.send_frame(&frame)
+            }
+            Some(FaultAction::Drop) => {
+                crate::telemetry::add(crate::telemetry::Counter::FramesDropped, 1);
+                Ok(())
+            }
             Some(FaultAction::Dup) => {
+                crate::telemetry::add(crate::telemetry::Counter::FramesSent, 2);
                 self.pipe.send_frame(&frame)?;
                 self.pipe.send_frame(&frame)
             }
@@ -301,10 +308,17 @@ impl<P: Pipe> Transport for Link<P> {
             },
         };
         match fault::fire(FaultPoint::TransportRecv, Some(&self.peer), Some(self.turn)) {
-            None => self.decode(&frame).map(Some),
-            Some(FaultAction::Drop) => Ok(None),
+            None => {
+                crate::telemetry::add(crate::telemetry::Counter::FramesReceived, 1);
+                self.decode(&frame).map(Some)
+            }
+            Some(FaultAction::Drop) => {
+                crate::telemetry::add(crate::telemetry::Counter::FramesDropped, 1);
+                Ok(None)
+            }
             Some(FaultAction::Dup) => {
                 self.ready_in.push_back(frame.clone());
+                crate::telemetry::add(crate::telemetry::Counter::FramesReceived, 1);
                 self.decode(&frame).map(Some)
             }
             Some(FaultAction::Delay(n)) => {

@@ -49,6 +49,7 @@ use crate::rng::Rng;
 use crate::runtime::bytes::{ByteReader, ByteWriter};
 use crate::runtime::WorkerPool;
 use crate::som::{ChangeLog, GrowingNetwork, Winners};
+use crate::telemetry::{self, Counter};
 
 use super::report::RunReport;
 use super::{
@@ -215,19 +216,23 @@ impl SessionCore {
     ) {
         let clock = PhaseClock::start();
         let signal = sampler.sample(rng);
-        clock.stop(&mut self.phase, Phase::Sample);
+        let d = clock.stop(&mut self.phase, Phase::Sample);
+        telemetry::add(Counter::PhaseSampleNanos, d.as_nanos() as u64);
 
         let clock = PhaseClock::start();
         let winners = fw.find2(algo.net(), signal);
-        clock.stop(&mut self.phase, Phase::FindWinners);
+        let d = clock.stop(&mut self.phase, Phase::FindWinners);
+        telemetry::add(Counter::PhaseFindNanos, d.as_nanos() as u64);
 
         let clock = PhaseClock::start();
         self.report.discarded +=
             self.executor.run_batch(algo, fw, &[signal], &[winners], rng);
-        clock.stop(&mut self.phase, Phase::Update);
+        let d = clock.stop(&mut self.phase, Phase::Update);
+        telemetry::add(Counter::PhaseUpdateNanos, d.as_nanos() as u64);
 
         self.report.signals += 1;
         self.report.iterations += 1;
+        telemetry::add(Counter::SignalsProcessed, 1);
 
         if self.report.signals % self.limits.check_interval == 0 {
             self.log.clear();
@@ -266,27 +271,33 @@ impl SessionCore {
             let clock = PhaseClock::start();
             let srng = self.sampler_rng.as_mut().expect("pipelined sampler stream");
             sampler.sample_batch(srng, m, &mut self.signals);
-            clock.stop(&mut self.phase, Phase::Sample);
+            let d = clock.stop(&mut self.phase, Phase::Sample);
+            telemetry::add(Counter::PhaseSampleNanos, d.as_nanos() as u64);
             self.next_m = m_schedule(algo.net().len(), self.limits.max_parallelism);
             m
         } else {
             let m = m_schedule(algo.net().len(), self.limits.max_parallelism);
             let clock = PhaseClock::start();
             sampler.sample_batch(rng, m, &mut self.signals);
-            clock.stop(&mut self.phase, Phase::Sample);
+            let d = clock.stop(&mut self.phase, Phase::Sample);
+            telemetry::add(Counter::PhaseSampleNanos, d.as_nanos() as u64);
             m
         };
 
         let clock = PhaseClock::start();
         fw.find2_batch(algo.net(), &self.signals, &mut self.winners);
-        clock.stop(&mut self.phase, Phase::FindWinners);
+        let d = clock.stop(&mut self.phase, Phase::FindWinners);
+        telemetry::add(Counter::PhaseFindNanos, d.as_nanos() as u64);
 
         let clock = PhaseClock::start();
         self.report.discarded +=
             self.executor.run_batch(algo, fw, &self.signals, &self.winners, rng);
-        clock.stop(&mut self.phase, Phase::Update);
+        let d = clock.stop(&mut self.phase, Phase::Update);
+        telemetry::add(Counter::PhaseUpdateNanos, d.as_nanos() as u64);
 
         self.report.signals += m as u64;
+        telemetry::add(Counter::SignalsProcessed, m as u64);
+        telemetry::add(Counter::Batches, 1);
 
         self.log.clear();
         let converged = algo.housekeeping(&mut self.log);

@@ -213,6 +213,15 @@ fn scan_shard(
                 None => fallback.push(k),
             }
         }
+        // Batched per shard (runs on pool workers — relaxed atomics).
+        crate::telemetry::add(
+            crate::telemetry::Counter::RegionLocalResolves,
+            (signals.len() - fallback.len()) as u64,
+        );
+        crate::telemetry::add(
+            crate::telemetry::Counter::RegionFallbackScans,
+            fallback.len() as u64,
+        );
         if fallback.is_empty() {
             return;
         }

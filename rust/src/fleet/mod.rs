@@ -65,8 +65,9 @@ use anyhow::{bail, Context, Result};
 
 use crate::engine::{resolve_run_threads, ConvergenceSession, RunReport};
 use crate::mesh::Mesh;
-use crate::metrics::{fmt_secs, Table};
+use crate::metrics::{fmt_secs, PhaseTimes, Table};
 use crate::runtime::{Json, WorkerPool};
+use crate::telemetry::{self, Counter};
 
 use writer::panic_message;
 
@@ -295,6 +296,19 @@ pub struct FleetReport {
 }
 
 impl FleetReport {
+    /// Per-phase time totals aggregated across every job that produced a
+    /// report — the fleet-level view of the paper's Sample / Find Winners
+    /// / Update axes ([`PhaseTimes::merge`]).
+    pub fn phase_totals(&self) -> PhaseTimes {
+        let mut totals = PhaseTimes::default();
+        for row in &self.rows {
+            if let Some(r) = &row.report {
+                totals.merge(&r.phase);
+            }
+        }
+        totals
+    }
+
     /// Fold job statuses into the process-level outcome.
     pub fn outcome(&self) -> FleetOutcome {
         let quarantined =
@@ -309,10 +323,10 @@ impl FleetReport {
     }
 
     /// One summary row per job (name, status, attempts, algorithm, driver,
-    /// signals, units, connections, converged, wall time, notes count).
-    /// Quarantined jobs without a report render `-` in the report columns;
-    /// the `notes` column counts per-job incidents (details in
-    /// [`FleetRow::notes`]).
+    /// signals, units, connections, converged, wall time, per-phase times,
+    /// notes count). Quarantined jobs without a report render `-` in the
+    /// report columns; the `notes` column counts per-job incidents
+    /// (details in [`FleetRow::notes`]).
     pub fn to_table(&self) -> Table {
         let mut t = Table::new(&[
             "job",
@@ -326,6 +340,9 @@ impl FleetReport {
             "connections",
             "converged",
             "time",
+            "sample",
+            "find",
+            "update",
             "notes",
         ]);
         for row in &self.rows {
@@ -347,20 +364,16 @@ impl FleetReport {
                     r.connections.to_string(),
                     r.converged.to_string(),
                     fmt_secs(r.total),
+                    fmt_secs(r.phase.sample),
+                    fmt_secs(r.phase.find),
+                    fmt_secs(r.phase.update),
                 ],
-                None => vec![
-                    row.name.clone(),
-                    row.status.to_string(),
-                    row.attempts.to_string(),
-                    "-".to_string(),
-                    "-".to_string(),
-                    "-".to_string(),
-                    "-".to_string(),
-                    "-".to_string(),
-                    "-".to_string(),
-                    "-".to_string(),
-                    "-".to_string(),
-                ],
+                None => {
+                    let mut cells =
+                        vec![row.name.clone(), row.status.to_string(), row.attempts.to_string()];
+                    cells.extend(std::iter::repeat("-".to_string()).take(11));
+                    cells
+                }
             };
             cells.push(notes);
             t.row(cells);
@@ -382,6 +395,12 @@ impl FleetReport {
         let outcome = self.outcome();
         top.insert("outcome".to_string(), Json::Str(outcome.name().to_string()));
         top.insert("exit_code".to_string(), Json::Num(f64::from(outcome.exit_code())));
+        let totals = self.phase_totals();
+        let mut pt = BTreeMap::new();
+        pt.insert("sample_s".to_string(), Json::Num(totals.sample.as_secs_f64()));
+        pt.insert("find_s".to_string(), Json::Num(totals.find.as_secs_f64()));
+        pt.insert("update_s".to_string(), Json::Num(totals.update.as_secs_f64()));
+        top.insert("phase_totals".to_string(), Json::Obj(pt));
         Json::Obj(top)
     }
 }
@@ -414,6 +433,9 @@ impl FleetRow {
                 rm.insert("converged".to_string(), Json::Bool(r.converged));
                 rm.insert("qe".to_string(), Json::Num(f64::from(r.qe)));
                 rm.insert("total_s".to_string(), Json::Num(r.total.as_secs_f64()));
+                rm.insert("sample_s".to_string(), Json::Num(r.phase.sample.as_secs_f64()));
+                rm.insert("find_s".to_string(), Json::Num(r.phase.find.as_secs_f64()));
+                rm.insert("update_s".to_string(), Json::Num(r.phase.update.as_secs_f64()));
                 Json::Obj(rm)
             }
         };
@@ -427,6 +449,11 @@ pub struct Fleet {
     jobs: Vec<FleetJob>,
     /// The one shared pool (None when every job is single-threaded).
     pool: Option<Arc<WorkerPool>>,
+    /// Checkpoint generations dropped run-wide (writer queue full) —
+    /// summarized loudly at end of run, not only in per-job notes.
+    ckpt_dropped: u64,
+    /// Checkpoint write-outs that failed run-wide (I/O error / panic).
+    ckpt_failed: u64,
 }
 
 /// Build a fresh session for `spec` over `mesh` and restore the best
@@ -503,7 +530,12 @@ impl Fleet {
         }
         let width = specs.iter().map(pool_width).max().unwrap_or(1);
         let pool = (width > 1).then(|| Arc::new(WorkerPool::new(width)));
-        let mut fleet = Fleet { jobs: Vec::with_capacity(specs.len()), pool };
+        let mut fleet = Fleet {
+            jobs: Vec::with_capacity(specs.len()),
+            pool,
+            ckpt_dropped: 0,
+            ckpt_failed: 0,
+        };
         for spec in specs {
             fleet.push_job(spec)?;
         }
@@ -520,6 +552,12 @@ impl Fleet {
         let mut session = ConvergenceSession::new(&spec.cfg, &mesh, self.pool.clone())
             .with_context(|| format!("job {:?}", spec.name))?;
         session.set_label(&spec.name);
+        telemetry::add(Counter::JobsAdmitted, 1);
+        telemetry::emit(
+            "job_admitted",
+            Some(&spec.name),
+            vec![("driver", Json::Str(spec.cfg.driver.name().to_string()))],
+        );
         self.jobs.push(FleetJob {
             spec,
             mesh,
@@ -652,6 +690,17 @@ impl Fleet {
         if let Some(w) = ckpt.as_mut() {
             self.drain_checkpoints(w, &mut progress);
         }
+        // Degraded durability must be loud at end of run, not only buried
+        // in per-job notes: every drop/fail widens some job's resume
+        // window back to its previous checkpoint generation.
+        if self.ckpt_dropped > 0 || self.ckpt_failed > 0 {
+            eprintln!(
+                "msgsn fleet: WARNING: degraded checkpoint durability — \
+                 {} write-out(s) dropped (writer queue full), {} failed; \
+                 affected jobs resume from an older generation",
+                self.ckpt_dropped, self.ckpt_failed
+            );
+        }
         Ok(self.report())
     }
 
@@ -742,6 +791,8 @@ impl Fleet {
                     );
                     progress(&note);
                     job.notes.push(note);
+                    self.ckpt_dropped += 1;
+                    telemetry::add(Counter::CheckpointsDropped, 1);
                 }
                 job.turns_since_checkpoint = 0;
                 job.last_checkpoint = Instant::now();
@@ -752,6 +803,15 @@ impl Fleet {
                     "job {} finished: {} units, {} signals, converged={}",
                     job.spec.name, report.units, report.signals, report.converged
                 ));
+                telemetry::emit(
+                    "job_done",
+                    Some(&job.spec.name),
+                    vec![
+                        ("signals", Json::Num(report.signals as f64)),
+                        ("units", Json::Num(report.units as f64)),
+                        ("converged", Json::Bool(report.converged)),
+                    ],
+                );
                 job.report = Some(report);
                 job.status = JobStatus::Done;
             }
@@ -808,6 +868,8 @@ impl Fleet {
             if let Some(job) = self.jobs.iter_mut().find(|j| j.spec.name == o.job) {
                 job.notes.push(note);
             }
+            self.ckpt_failed += 1;
+            telemetry::add(Counter::CheckpointsFailed, 1);
         }
     }
 
@@ -838,6 +900,15 @@ impl Fleet {
                     source.describe(),
                     job.attempts
                 ));
+                telemetry::add(Counter::JobsRetried, 1);
+                telemetry::emit(
+                    "job_retried",
+                    Some(&job.spec.name),
+                    vec![
+                        ("attempt", Json::Num(f64::from(job.attempts))),
+                        ("source", Json::Str(source.describe())),
+                    ],
+                );
                 if session.is_done() {
                     job.report = Some(session.finish());
                     job.status = JobStatus::Done;
@@ -853,6 +924,12 @@ impl Fleet {
                     "job {} QUARANTINED: session rebuild failed: {e}",
                     job.spec.name
                 ));
+                telemetry::add(Counter::JobsQuarantined, 1);
+                telemetry::emit(
+                    "job_quarantined",
+                    Some(&job.spec.name),
+                    vec![("error", Json::Str(e.to_string()))],
+                );
             }
         }
     }
@@ -872,6 +949,14 @@ fn fail_job(
     job.attempts += 1;
     let msg = panic_message(payload.as_ref());
     job.last_error = Some(msg.clone());
+    telemetry::emit(
+        "job_failed",
+        Some(&job.spec.name),
+        vec![
+            ("attempt", Json::Num(f64::from(job.attempts))),
+            ("error", Json::Str(msg.clone())),
+        ],
+    );
     let budget = job.spec.retries.unwrap_or(opts.max_retries);
     if job.attempts > budget {
         job.status = JobStatus::Quarantined;
@@ -879,6 +964,12 @@ fn fail_job(
             "job {} QUARANTINED after {} attempts: {msg}",
             job.spec.name, job.attempts
         ));
+        telemetry::add(Counter::JobsQuarantined, 1);
+        telemetry::emit(
+            "job_quarantined",
+            Some(&job.spec.name),
+            vec![("attempts", Json::Num(f64::from(job.attempts)))],
+        );
     } else {
         job.status = JobStatus::Failed;
         let backoff = opts

@@ -85,6 +85,7 @@ impl CheckpointWriter {
                     // An injected panic in write_durable must not kill the
                     // writer: convert it to an Err outcome and keep serving
                     // the other jobs' checkpoints.
+                    let t0 = std::time::Instant::now();
                     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                         write_durable(&req.path, &req.bytes)
                     }));
@@ -96,6 +97,16 @@ impl CheckpointWriter {
                             panic_message(&payload)
                         )),
                     };
+                    if result.is_ok() {
+                        crate::telemetry::observe(
+                            crate::telemetry::Histogram::CheckpointWriteNanos,
+                            t0.elapsed().as_nanos() as u64,
+                        );
+                        crate::telemetry::add(
+                            crate::telemetry::Counter::CheckpointsWritten,
+                            1,
+                        );
+                    }
                     // The scheduler may already be gone (drop order at end
                     // of run); losing the outcome then is fine.
                     let _ = out_tx.send(WriteOutcome { job: req.job, path: req.path, result });
@@ -130,6 +141,10 @@ impl CheckpointWriter {
             .send(req)
             .expect("checkpoint writer thread alive");
         self.in_flight += 1;
+        crate::telemetry::set_gauge(
+            crate::telemetry::Gauge::WriterQueueDepth,
+            self.in_flight as u64,
+        );
         true
     }
 
@@ -145,6 +160,10 @@ impl CheckpointWriter {
                 Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
             }
         }
+        crate::telemetry::set_gauge(
+            crate::telemetry::Gauge::WriterQueueDepth,
+            self.in_flight as u64,
+        );
         out
     }
 

@@ -39,6 +39,7 @@
 //! | [`config`] | config structs, TOML-subset parser, per-mesh presets |
 //! | [`cli`] | argument parsing for the `msgsn` binary |
 //! | [`metrics`] | phase timers, counters, table rendering |
+//! | [`telemetry`] | lock-free instrument registry + structured event trace, JSON/Prometheus exposition |
 //! | [`bench`] | experiment grid regenerating Tables 1–4 and Figs 2,7–10 |
 //! | [`proptest`] | minimal in-repo property-testing harness |
 
@@ -61,6 +62,7 @@ pub mod rng;
 pub mod runtime;
 pub mod serve;
 pub mod som;
+pub mod telemetry;
 pub mod topology;
 
 /// The most common imports, bundled.

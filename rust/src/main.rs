@@ -180,6 +180,7 @@ fn cmd_fleet(p: &Parsed) -> Result<ExitCode> {
         .with_context(|| format!("reading jobs manifest {manifest_path}"))?;
     let specs = parse_manifest(&text)?;
     let quiet = p.flag("quiet");
+    telemetry_arm(p);
 
     if let Some(profile) = p.get("faults") {
         let specs = msgsn::runtime::fault::parse_faults(profile)
@@ -232,6 +233,7 @@ fn cmd_fleet(p: &Parsed) -> Result<ExitCode> {
     if let Some(path) = p.get("report-json") {
         write_report_json(&report, path)?;
     }
+    telemetry_flush(p)?;
     let outcome = report.outcome();
     match outcome {
         FleetOutcome::AllSucceeded => {}
@@ -245,10 +247,43 @@ fn cmd_fleet(p: &Parsed) -> Result<ExitCode> {
 
 /// `--report-json`: the FleetReport as machine-readable JSON (rows +
 /// outcome + exit_code) — what CI asserts on instead of scraping stdout.
+/// When telemetry is on the registry snapshot + trace tail ride along
+/// under a `"telemetry"` key.
 fn write_report_json(report: &msgsn::fleet::FleetReport, path: &str) -> Result<()> {
-    let mut text = msgsn::runtime::render_json(&report.to_json());
+    let mut doc = report.to_json();
+    if msgsn::telemetry::enabled() {
+        if let msgsn::runtime::Json::Obj(m) = &mut doc {
+            m.insert("telemetry".to_string(), msgsn::telemetry::metrics_json(64));
+        }
+    }
+    let mut text = msgsn::runtime::render_json(&doc);
     text.push('\n');
     std::fs::write(path, text).with_context(|| format!("writing report JSON {path}"))
+}
+
+/// Arm the telemetry registry when an exposition flag asks for it —
+/// called before the fleet/server/worker is built, so job admissions
+/// land in the trace.
+fn telemetry_arm(p: &Parsed) {
+    if p.get("metrics-json").is_some() || p.get("trace-file").is_some() {
+        msgsn::telemetry::set_enabled(true);
+    }
+}
+
+/// Flush `--metrics-json` / `--trace-file` at the end of a run. Metrics
+/// first: its trace tail is a copy, while `--trace-file` drains the ring.
+fn telemetry_flush(p: &Parsed) -> Result<()> {
+    if let Some(path) = p.get("metrics-json") {
+        let mut text = msgsn::runtime::render_json(&msgsn::telemetry::metrics_json(64));
+        text.push('\n');
+        std::fs::write(path, text).with_context(|| format!("writing metrics JSON {path}"))?;
+    }
+    if let Some(path) = p.get("trace-file") {
+        let events = msgsn::telemetry::trace::drain_all();
+        std::fs::write(path, msgsn::telemetry::trace::to_jsonl(&events))
+            .with_context(|| format!("writing trace JSONL {path}"))?;
+    }
+    Ok(())
 }
 
 /// The fleet as a long-running TCP daemon (`serve` subsystem): admits
@@ -258,6 +293,7 @@ fn cmd_serve(p: &Parsed) -> Result<ExitCode> {
     use msgsn::serve::{ServeOptions, Server};
 
     let quiet = p.flag("quiet");
+    telemetry_arm(p);
     if let Some(profile) = p.get("faults") {
         let specs = msgsn::runtime::fault::parse_faults(profile)
             .map_err(anyhow::Error::msg)
@@ -315,6 +351,7 @@ fn cmd_serve(p: &Parsed) -> Result<ExitCode> {
     if let Some(path) = p.get("report-json") {
         write_report_json(&report, path)?;
     }
+    telemetry_flush(p)?;
     let outcome = report.outcome();
     match outcome {
         FleetOutcome::AllSucceeded => {}
@@ -340,6 +377,7 @@ fn cmd_coordinator(p: &Parsed) -> Result<ExitCode> {
         .with_context(|| format!("reading jobs manifest {manifest_path}"))?;
     let payloads = msgsn::fleet::manifest_job_payloads(&text)?;
     let quiet = p.flag("quiet");
+    telemetry_arm(p);
 
     let listen = p.get("listen").unwrap_or("127.0.0.1:7070");
     let expected: usize = p.get_parsed("workers", 1usize, "integer")?.max(1);
@@ -379,6 +417,7 @@ fn cmd_coordinator(p: &Parsed) -> Result<ExitCode> {
         }
     });
     print!("{}", report.to_table().render());
+    telemetry_flush(p)?;
     let outcome = report.outcome();
     match outcome {
         DistOutcome::AllDone => {}
@@ -409,6 +448,7 @@ fn cmd_worker(p: &Parsed) -> Result<()> {
         ..WorkerOptions::default()
     };
     let quiet = p.flag("quiet");
+    telemetry_arm(p);
 
     let pipe = TcpPipe::connect(addr).with_context(|| format!("connecting to {addr}"))?;
     let mut link = Link::new(pipe, opts.name.clone());
@@ -421,6 +461,7 @@ fn cmd_worker(p: &Parsed) -> Result<()> {
         }
     })
     .map_err(anyhow::Error::msg)?;
+    telemetry_flush(p)?;
     if !quiet {
         println!("worker {}: shutdown received, exiting", opts.name);
     }

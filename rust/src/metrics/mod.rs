@@ -34,6 +34,14 @@ impl PhaseTimes {
         }
     }
 
+    /// Fold another accumulation into this one — aggregating per-job
+    /// phase times into fleet totals (`FleetReport::phase_totals`).
+    pub fn merge(&mut self, other: &PhaseTimes) {
+        self.sample += other.sample;
+        self.find += other.find;
+        self.update += other.update;
+    }
+
     pub fn total(&self) -> Duration {
         self.sample + self.find + self.update
     }
@@ -61,16 +69,12 @@ impl PhaseClock {
         Self { start: Instant::now() }
     }
 
+    /// Stop and record, returning the measured duration so callers can
+    /// feed telemetry off the same single `Instant::elapsed` read.
     #[inline]
-    pub fn stop(self, times: &mut PhaseTimes, phase: Phase) {
-        times.add(phase, self.start.elapsed());
-    }
-
-    #[inline]
-    pub fn lap(&mut self) -> Duration {
-        let now = Instant::now();
-        let d = now - self.start;
-        self.start = now;
+    pub fn stop(self, times: &mut PhaseTimes, phase: Phase) -> Duration {
+        let d = self.start.elapsed();
+        times.add(phase, d);
         d
     }
 }
@@ -175,8 +179,28 @@ mod tests {
         let mut times = PhaseTimes::default();
         let c = PhaseClock::start();
         std::thread::sleep(Duration::from_millis(2));
-        c.stop(&mut times, Phase::Update);
+        let d = c.stop(&mut times, Phase::Update);
         assert!(times.update >= Duration::from_millis(1));
+        assert_eq!(d, times.update);
+    }
+
+    #[test]
+    fn phase_times_merge_adds_slotwise() {
+        let mut a = PhaseTimes {
+            sample: Duration::from_millis(1),
+            find: Duration::from_millis(2),
+            update: Duration::from_millis(3),
+        };
+        let b = PhaseTimes {
+            sample: Duration::from_millis(10),
+            find: Duration::from_millis(20),
+            update: Duration::from_millis(30),
+        };
+        a.merge(&b);
+        assert_eq!(a.sample, Duration::from_millis(11));
+        assert_eq!(a.find, Duration::from_millis(22));
+        assert_eq!(a.update, Duration::from_millis(33));
+        assert_eq!(a.total(), Duration::from_millis(66));
     }
 
     #[test]

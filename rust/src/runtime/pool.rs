@@ -133,6 +133,7 @@ impl WorkerPool {
             return;
         }
         let _gate = self.gate.lock().unwrap();
+        crate::telemetry::set_gauge(crate::telemetry::Gauge::PoolWorkersActive, active as u64);
         let generation = {
             let mut job = self.shared.job.lock().unwrap();
             job.generation += 1;
@@ -186,12 +187,23 @@ impl WorkerPool {
             return;
         }
         let next = AtomicUsize::new(0);
-        self.run(workers.max(1).min(jobs), &|_| loop {
-            let j = next.fetch_add(1, Ordering::Relaxed);
-            if j >= jobs {
-                break;
+        self.run(workers.max(1).min(jobs), &|_| {
+            // Telemetry is accumulated locally and flushed once per worker
+            // per generation — zero per-claim overhead. A worker's claims
+            // beyond its first are the work-stealing traffic.
+            let mut claimed = 0u64;
+            loop {
+                let j = next.fetch_add(1, Ordering::Relaxed);
+                if j >= jobs {
+                    break;
+                }
+                claimed += 1;
+                f(j);
             }
-            f(j);
+            if claimed > 0 {
+                crate::telemetry::add(crate::telemetry::Counter::PoolJobs, claimed);
+                crate::telemetry::add(crate::telemetry::Counter::PoolSteals, claimed - 1);
+            }
         });
     }
 }

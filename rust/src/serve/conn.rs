@@ -39,6 +39,7 @@ impl ClientConn {
     pub fn new(stream: TcpStream, id: u64) -> Self {
         let _ = stream.set_nodelay(true);
         let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+        crate::telemetry::add(crate::telemetry::Counter::ServeConnsOpened, 1);
         ClientConn {
             stream,
             label: format!("c{id}"),
@@ -58,6 +59,14 @@ impl ClientConn {
 
     /// Mark the connection dead; the registry sweeps it after the round.
     pub fn close(&mut self) {
+        if !self.closed {
+            crate::telemetry::add(crate::telemetry::Counter::ServeConnsSevered, 1);
+            crate::telemetry::emit(
+                "conn_severed",
+                None,
+                vec![("conn", Json::Str(self.label.clone()))],
+            );
+        }
         self.closed = true;
         let _ = self.stream.shutdown(std::net::Shutdown::Both);
     }

@@ -58,6 +58,11 @@ use view::{mesh_view, snapshot_view, status_row, units_view};
 /// message budget: protocol traffic must not starve convergence.
 const REQUEST_BUDGET: usize = 64;
 
+/// How many trace events a `metrics` response carries. The full ring is
+/// for `--trace-file`; over the wire a bounded tail keeps the response a
+/// single sane line.
+const METRICS_TRACE_TAIL: usize = 64;
+
 #[derive(Clone, Debug)]
 pub struct ServeOptions {
     /// Scheduler/checkpoint knobs, shared verbatim with the batch path.
@@ -201,6 +206,10 @@ impl Server {
                 Err(_) => break,
             }
         }
+        crate::telemetry::set_gauge(
+            crate::telemetry::Gauge::ServeConnsOpen,
+            self.conns.len() as u64,
+        );
     }
 
     /// Read and handle up to [`REQUEST_BUDGET`] request lines across all
@@ -253,6 +262,11 @@ impl Server {
             }
         }
         self.conns.retain(|c| !c.is_closed());
+        crate::telemetry::set_gauge(
+            crate::telemetry::Gauge::ServeConnsOpen,
+            self.conns.len() as u64,
+        );
+        crate::telemetry::add(crate::telemetry::Counter::ServeRequests, handled as u64);
         handled
     }
 
@@ -287,6 +301,20 @@ impl Server {
                     err_response("no-such-job", format!("no job named {job:?}"))
                 }
             }
+            // Answered entirely from the telemetry registry and trace
+            // ring — no session, job, or fleet state is touched, so a
+            // `metrics` poll can never perturb convergence (pinned by
+            // the byte-equal snapshot test in `rust/tests/telemetry.rs`).
+            Request::Metrics => ok_response(vec![
+                (
+                    "metrics",
+                    crate::telemetry::metrics_json(METRICS_TRACE_TAIL),
+                ),
+                (
+                    "text",
+                    Json::Str(crate::telemetry::snapshot().render_prometheus()),
+                ),
+            ]),
             Request::Shutdown => {
                 self.draining = true;
                 progress("serve: shutdown requested, draining");

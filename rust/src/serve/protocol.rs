@@ -12,6 +12,7 @@
 //! {"cmd": "watch"}
 //! {"cmd": "query", "job": "name", "what": "units" | "mesh" | "snapshot"}
 //! {"cmd": "cancel", "job": "name"}
+//! {"cmd": "metrics"}
 //! {"cmd": "shutdown"}
 //! ```
 //!
@@ -45,6 +46,9 @@ pub enum Request {
     Query { job: String, what: QueryWhat },
     /// Remove a job (any status).
     Cancel { job: String },
+    /// One-shot snapshot of the telemetry registry + trace tail. Answered
+    /// entirely from `crate::telemetry` — never touches a session.
+    Metrics,
     /// Stop admitting work, drain to completion, report, exit.
     Shutdown,
 }
@@ -115,9 +119,10 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
             Ok(Request::Query { job: job_name("query")?, what })
         }
         "cancel" => Ok(Request::Cancel { job: job_name("cancel")? }),
+        "metrics" => Ok(Request::Metrics),
         "shutdown" => Ok(Request::Shutdown),
         other => Err(format!(
-            "unknown cmd {other:?} (expected submit|status|watch|query|cancel|shutdown)"
+            "unknown cmd {other:?} (expected submit|status|watch|query|cancel|metrics|shutdown)"
         )),
     }
 }
@@ -178,6 +183,7 @@ mod tests {
             parse_request(r#"{"cmd": "cancel", "job": "a"}"#),
             Ok(Request::Cancel { job: "a".to_string() })
         );
+        assert_eq!(parse_request(r#"{"cmd": "metrics"}"#), Ok(Request::Metrics));
         assert_eq!(parse_request(r#"{"cmd": "shutdown"}"#), Ok(Request::Shutdown));
     }
 

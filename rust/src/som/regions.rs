@@ -285,9 +285,14 @@ impl RegionGrid {
         if self.slot_region.len() < net.capacity() {
             self.slot_region.resize(net.capacity(), NO_REGION);
         }
+        let before = self.crossings;
         for &id in &ids {
             self.reconcile(net, id);
         }
+        crate::telemetry::add(
+            crate::telemetry::Counter::RegionCrossings,
+            self.crossings - before,
+        );
         self.scratch = ids;
         self.seen_capacity = net.capacity();
         self.seen_live = net.len();

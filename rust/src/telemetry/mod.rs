@@ -1,0 +1,80 @@
+//! Process-wide observability spine: lock-free instruments + a bounded
+//! structured event trace, with JSON / Prometheus-text exposition.
+//!
+//! The paper's whole argument is a measurement story — per-phase times
+//! (Sample / Find Winners / Update, Tables 1–4) and time-per-signal —
+//! so this crate measures itself continuously, from live processes,
+//! without bending the bit-parity contract:
+//!
+//! - [`registry`] — preregistered counters, gauges and log-2 histograms
+//!   on relaxed atomics, zero-cost-when-disabled (one relaxed load per
+//!   instrument site; gate pattern mirrors [`crate::runtime::fault`]).
+//!   Instrumented paths: engine phase timings and signal/batch counts,
+//!   pool job/steal traffic, region crossings and fallback scans,
+//!   checkpoint write-out latency and drops, fleet/dist job lifecycle
+//!   (retry/quarantine/migration, worker eviction), transport frames,
+//!   serve connections and requests.
+//! - [`trace`] — a bounded drop-oldest ring of structured lifecycle
+//!   events rendered as JSONL; flushed by `--trace-file` and embedded
+//!   in `--report-json`.
+//! - Exposition — the serve protocol's `metrics` verb and
+//!   `msgsn fleet --metrics-json PATH` both emit [`metrics_json`];
+//!   [`RegistrySnapshot::render_prometheus`] produces scrape-able text.
+//!
+//! Enable with `MSGSN_TELEMETRY=1` (or programmatically via
+//! [`set_enabled`]; the CLI does so for `--metrics-json`/`--trace-file`).
+//! The invariant `rust/tests/telemetry.rs` proves: telemetry-on runs are
+//! **bit-identical** to telemetry-off runs — instruments observe, they
+//! never steer.
+
+pub mod registry;
+pub mod trace;
+
+pub use registry::{
+    add, counter, enabled, observe, set_enabled, set_gauge, snapshot, test_lock, Counter,
+    Gauge, Histogram, HistogramSnapshot, RegistrySnapshot, TestGuard, ENV_VAR,
+};
+pub use trace::{emit, TraceEvent};
+
+use crate::runtime::Json;
+
+/// Combined exposition document: the registry snapshot plus the newest
+/// trace events — the payload of the serve `metrics` verb and of
+/// `--metrics-json`.
+pub fn metrics_json(trace_tail: usize) -> Json {
+    let snap = registry::snapshot();
+    let events = trace::tail(trace_tail);
+    let mut obj = match snap.to_json() {
+        Json::Obj(m) => m,
+        _ => unreachable!("snapshot json is an object"),
+    };
+    obj.insert(
+        "trace".to_string(),
+        Json::Arr(events.iter().map(TraceEvent::to_json).collect()),
+    );
+    obj.insert("trace_dropped".to_string(), Json::Num(trace::dropped() as f64));
+    Json::Obj(obj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_json_combines_registry_and_trace() {
+        let _guard = test_lock();
+        set_enabled(true);
+        add(Counter::ServeRequests, 2);
+        emit("job_admitted", Some("j0"), vec![]);
+        let doc = metrics_json(16);
+        assert_eq!(
+            doc.get("counters")
+                .and_then(|c| c.get("msgsn_serve_requests_total"))
+                .and_then(|v| v.as_u64()),
+            Some(2)
+        );
+        let trace = doc.get("trace").and_then(|t| t.as_arr()).expect("trace array");
+        assert_eq!(trace.len(), 1);
+        assert_eq!(doc.get("trace_dropped").and_then(|v| v.as_u64()), Some(0));
+    }
+}

@@ -1,0 +1,586 @@
+//! Lock-free instrument registry: named counters, gauges and log-2
+//! histograms behind one process-wide enable flag.
+//!
+//! Every instrument is **preregistered** as an enum variant, so a hot
+//! path never hashes a name or takes a lock — [`add`] is an index into a
+//! static `AtomicU64` array and one relaxed `fetch_add`. The enable gate
+//! mirrors the [`crate::runtime::fault`] fast path exactly: a `Once` for
+//! the one-time `MSGSN_TELEMETRY` env read plus one relaxed `AtomicBool`
+//! load, so a *disabled* registry costs a single relaxed load per
+//! instrument site and touches nothing else.
+//!
+//! **Non-perturbation is the contract.** Instruments are pure observers:
+//! they never branch the computation, never touch an RNG, and never
+//! reorder admissions or commits. `rust/tests/telemetry.rs` proves a run
+//! with every instrument armed is *bit-identical* to one with the
+//! registry disabled — the same bar every optimization in this repo
+//! clears.
+//!
+//! Orderings are `Relaxed` throughout: counters are monotone statistics
+//! read at batch boundaries, not synchronization edges. A snapshot may
+//! therefore be internally skewed by in-flight increments (counter A
+//! read before a worker's paired bump of counter B lands) — fine for
+//! observability, and why nothing here may ever gate logic.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, Once, PoisonError};
+
+use crate::runtime::Json;
+
+/// Environment variable enabling telemetry process-wide (`1`/`true`/`on`).
+/// CLI flags that need the registry (`--metrics-json`, `--trace-file`)
+/// enable it programmatically via [`set_enabled`] as well.
+pub const ENV_VAR: &str = "MSGSN_TELEMETRY";
+
+/// Preregistered monotone counters. The variant order IS the storage
+/// index — append new instruments to the end of [`Counter::ALL`] too.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Counter {
+    /// Nanoseconds spent in the Sample phase (paper Tables 1–4 axis).
+    PhaseSampleNanos,
+    /// Nanoseconds spent in Find Winners.
+    PhaseFindNanos,
+    /// Nanoseconds spent in Update.
+    PhaseUpdateNanos,
+    /// Signals drawn through any session (single + batched paths).
+    SignalsProcessed,
+    /// Multi-signal batches executed.
+    Batches,
+    /// Indexed jobs executed on a [`crate::runtime::WorkerPool`].
+    PoolJobs,
+    /// Pool claims beyond a worker's first in one `run_indexed` call —
+    /// the work-stealing traffic.
+    PoolSteals,
+    /// Live units whose roster assignment crossed a region boundary.
+    RegionCrossings,
+    /// Batched signals resolved entirely inside their 3×3×3 region
+    /// neighborhood (no global scan).
+    RegionLocalResolves,
+    /// Batched signals that fell back to the global tile scan.
+    RegionFallbackScans,
+    /// Durable checkpoint write-outs that completed successfully.
+    CheckpointsWritten,
+    /// Checkpoint write-outs dropped because the writer queue was full.
+    CheckpointsDropped,
+    /// Checkpoint write-outs that failed (I/O error or writer panic).
+    CheckpointsFailed,
+    /// Jobs admitted into a fleet (static manifest, serve submit, dist
+    /// assign — all funnel through `Fleet::add_job`).
+    JobsAdmitted,
+    /// Job crash-retries granted (fleet + dist coordinator).
+    JobsRetried,
+    /// Jobs quarantined after exhausting their retry budget.
+    JobsQuarantined,
+    /// Jobs migrated off an evicted dist worker.
+    JobsMigrated,
+    /// Dist workers evicted (death, hang, or corrupt link).
+    WorkersEvicted,
+    /// Transport frames sent.
+    FramesSent,
+    /// Transport frames received and decoded.
+    FramesReceived,
+    /// Transport frames dropped by fault injection (either side).
+    FramesDropped,
+    /// Serve connections accepted.
+    ServeConnsOpened,
+    /// Serve connections closed by the daemon (hangup, error, protocol
+    /// violation, injected sever).
+    ServeConnsSevered,
+    /// Complete request lines handled by the serve daemon.
+    ServeRequests,
+    /// Trace events evicted from the ring by overflow
+    /// ([`crate::telemetry::trace`]).
+    TraceEventsDropped,
+}
+
+impl Counter {
+    /// Every counter, in storage order.
+    pub const ALL: [Counter; 25] = [
+        Counter::PhaseSampleNanos,
+        Counter::PhaseFindNanos,
+        Counter::PhaseUpdateNanos,
+        Counter::SignalsProcessed,
+        Counter::Batches,
+        Counter::PoolJobs,
+        Counter::PoolSteals,
+        Counter::RegionCrossings,
+        Counter::RegionLocalResolves,
+        Counter::RegionFallbackScans,
+        Counter::CheckpointsWritten,
+        Counter::CheckpointsDropped,
+        Counter::CheckpointsFailed,
+        Counter::JobsAdmitted,
+        Counter::JobsRetried,
+        Counter::JobsQuarantined,
+        Counter::JobsMigrated,
+        Counter::WorkersEvicted,
+        Counter::FramesSent,
+        Counter::FramesReceived,
+        Counter::FramesDropped,
+        Counter::ServeConnsOpened,
+        Counter::ServeConnsSevered,
+        Counter::ServeRequests,
+        Counter::TraceEventsDropped,
+    ];
+
+    /// Prometheus-style metric name (`_total` suffix by convention).
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::PhaseSampleNanos => "msgsn_phase_sample_nanos_total",
+            Counter::PhaseFindNanos => "msgsn_phase_find_nanos_total",
+            Counter::PhaseUpdateNanos => "msgsn_phase_update_nanos_total",
+            Counter::SignalsProcessed => "msgsn_signals_processed_total",
+            Counter::Batches => "msgsn_batches_total",
+            Counter::PoolJobs => "msgsn_pool_jobs_total",
+            Counter::PoolSteals => "msgsn_pool_steals_total",
+            Counter::RegionCrossings => "msgsn_region_crossings_total",
+            Counter::RegionLocalResolves => "msgsn_region_local_resolves_total",
+            Counter::RegionFallbackScans => "msgsn_region_fallback_scans_total",
+            Counter::CheckpointsWritten => "msgsn_checkpoints_written_total",
+            Counter::CheckpointsDropped => "msgsn_checkpoints_dropped_total",
+            Counter::CheckpointsFailed => "msgsn_checkpoints_failed_total",
+            Counter::JobsAdmitted => "msgsn_jobs_admitted_total",
+            Counter::JobsRetried => "msgsn_jobs_retried_total",
+            Counter::JobsQuarantined => "msgsn_jobs_quarantined_total",
+            Counter::JobsMigrated => "msgsn_jobs_migrated_total",
+            Counter::WorkersEvicted => "msgsn_workers_evicted_total",
+            Counter::FramesSent => "msgsn_frames_sent_total",
+            Counter::FramesReceived => "msgsn_frames_received_total",
+            Counter::FramesDropped => "msgsn_frames_dropped_total",
+            Counter::ServeConnsOpened => "msgsn_serve_conns_opened_total",
+            Counter::ServeConnsSevered => "msgsn_serve_conns_severed_total",
+            Counter::ServeRequests => "msgsn_serve_requests_total",
+            Counter::TraceEventsDropped => "msgsn_trace_events_dropped_total",
+        }
+    }
+}
+
+/// Preregistered gauges (last-write-wins instantaneous values).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Gauge {
+    /// Workers activated by the pool's most recent parallel section.
+    PoolWorkersActive,
+    /// Checkpoint writer queue depth after the most recent enqueue/poll.
+    WriterQueueDepth,
+    /// Serve connections currently registered.
+    ServeConnsOpen,
+}
+
+impl Gauge {
+    pub const ALL: [Gauge; 3] =
+        [Gauge::PoolWorkersActive, Gauge::WriterQueueDepth, Gauge::ServeConnsOpen];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Gauge::PoolWorkersActive => "msgsn_pool_workers_active",
+            Gauge::WriterQueueDepth => "msgsn_writer_queue_depth",
+            Gauge::ServeConnsOpen => "msgsn_serve_conns_open",
+        }
+    }
+}
+
+/// Preregistered fixed-bucket log-2 histograms.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Histogram {
+    /// Durable checkpoint write latency (tmp+fsync+rename), nanoseconds.
+    CheckpointWriteNanos,
+}
+
+impl Histogram {
+    pub const ALL: [Histogram; 1] = [Histogram::CheckpointWriteNanos];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Histogram::CheckpointWriteNanos => "msgsn_checkpoint_write_nanos",
+        }
+    }
+}
+
+/// Buckets per histogram: bucket `b` counts values in `[2^(b-1), 2^b)`
+/// (bucket 0 holds 0 and 1); the last bucket absorbs everything larger.
+pub const HIST_BUCKETS: usize = 40;
+
+// The const-item repeat trick: a `const` with interior mutability is the
+// sanctioned way to initialize a static atomic array.
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO: AtomicU64 = AtomicU64::new(0);
+
+static COUNTERS: [AtomicU64; Counter::ALL.len()] = [ZERO; Counter::ALL.len()];
+static GAUGES: [AtomicU64; Gauge::ALL.len()] = [ZERO; Gauge::ALL.len()];
+static HIST_COUNTS: [[AtomicU64; HIST_BUCKETS]; Histogram::ALL.len()] =
+    [[ZERO; HIST_BUCKETS]; Histogram::ALL.len()];
+static HIST_TOTALS: [AtomicU64; Histogram::ALL.len()] = [ZERO; Histogram::ALL.len()];
+static HIST_SUMS: [AtomicU64; Histogram::ALL.len()] = [ZERO; Histogram::ALL.len()];
+
+/// Fast-path flag, mirroring `runtime::fault::ARMED_ANY`.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static ENV_INIT: Once = Once::new();
+
+fn ensure_env_installed() {
+    ENV_INIT.call_once(|| {
+        if env_requests_enable() {
+            ENABLED.store(true, Ordering::Relaxed);
+        }
+    });
+}
+
+fn env_requests_enable() -> bool {
+    match std::env::var(ENV_VAR) {
+        Ok(v) => matches!(v.trim(), "1" | "true" | "on" | "yes"),
+        Err(_) => false,
+    }
+}
+
+/// Is the registry recording? One `Once` fast path + one relaxed load —
+/// the entire cost of a disabled instrument site.
+#[inline]
+pub fn enabled() -> bool {
+    ensure_env_installed();
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Enable/disable the registry programmatically (CLI flags, tests). Takes
+/// precedence over the `MSGSN_TELEMETRY` env install.
+pub fn set_enabled(on: bool) {
+    ensure_env_installed();
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Bump a counter by `n`. Disabled: a single relaxed load.
+#[inline]
+pub fn add(c: Counter, n: u64) {
+    if !enabled() {
+        return;
+    }
+    COUNTERS[c as usize].fetch_add(n, Ordering::Relaxed);
+}
+
+/// Set a gauge to `v` (last write wins).
+#[inline]
+pub fn set_gauge(g: Gauge, v: u64) {
+    if !enabled() {
+        return;
+    }
+    GAUGES[g as usize].store(v, Ordering::Relaxed);
+}
+
+/// Record one observation into a log-2 histogram.
+#[inline]
+pub fn observe(h: Histogram, v: u64) {
+    if !enabled() {
+        return;
+    }
+    let b = bucket_of(v);
+    let i = h as usize;
+    HIST_COUNTS[i][b].fetch_add(1, Ordering::Relaxed);
+    HIST_TOTALS[i].fetch_add(1, Ordering::Relaxed);
+    HIST_SUMS[i].fetch_add(v, Ordering::Relaxed);
+}
+
+/// Log-2 bucket index of `v` (see [`HIST_BUCKETS`]).
+#[inline]
+pub fn bucket_of(v: u64) -> usize {
+    ((64 - v.leading_zeros() as usize).saturating_sub(1)).min(HIST_BUCKETS - 1)
+}
+
+/// Inclusive upper bound of bucket `b` (`u64::MAX` for the overflow
+/// bucket).
+pub fn bucket_le(b: usize) -> u64 {
+    if b + 1 >= HIST_BUCKETS {
+        u64::MAX
+    } else {
+        (1u64 << (b + 1)) - 1
+    }
+}
+
+/// Read a single counter's current value (test + exposition helper).
+pub fn counter(c: Counter) -> u64 {
+    COUNTERS[c as usize].load(Ordering::Relaxed)
+}
+
+/// One histogram's snapshot: cumulative log-2 buckets + count + sum.
+#[derive(Clone, Debug)]
+pub struct HistogramSnapshot {
+    pub name: &'static str,
+    pub count: u64,
+    pub sum: u64,
+    /// `(inclusive upper bound, cumulative count ≤ bound)`, ascending.
+    /// Empty trailing buckets are elided; the last entry always carries
+    /// the full count (Prometheus `+Inf` semantics).
+    pub buckets: Vec<(u64, u64)>,
+}
+
+/// A point-in-time copy of every instrument.
+#[derive(Clone, Debug)]
+pub struct RegistrySnapshot {
+    pub counters: Vec<(&'static str, u64)>,
+    pub gauges: Vec<(&'static str, u64)>,
+    pub histograms: Vec<HistogramSnapshot>,
+}
+
+/// Copy the registry. Relaxed reads: values are monotone statistics, not
+/// a consistent cut (see module docs).
+pub fn snapshot() -> RegistrySnapshot {
+    let counters = Counter::ALL
+        .iter()
+        .map(|c| (c.name(), COUNTERS[*c as usize].load(Ordering::Relaxed)))
+        .collect();
+    let gauges = Gauge::ALL
+        .iter()
+        .map(|g| (g.name(), GAUGES[*g as usize].load(Ordering::Relaxed)))
+        .collect();
+    let histograms = Histogram::ALL
+        .iter()
+        .map(|h| {
+            let i = *h as usize;
+            let count = HIST_TOTALS[i].load(Ordering::Relaxed);
+            let sum = HIST_SUMS[i].load(Ordering::Relaxed);
+            let mut cum = 0u64;
+            let mut buckets = Vec::new();
+            let mut last_nonempty = 0usize;
+            let raw: Vec<u64> =
+                (0..HIST_BUCKETS).map(|b| HIST_COUNTS[i][b].load(Ordering::Relaxed)).collect();
+            for (b, n) in raw.iter().enumerate() {
+                if *n > 0 {
+                    last_nonempty = b;
+                }
+            }
+            for (b, n) in raw.iter().enumerate().take(last_nonempty + 1) {
+                cum += n;
+                buckets.push((bucket_le(b), cum));
+            }
+            HistogramSnapshot { name: h.name(), count, sum, buckets }
+        })
+        .collect();
+    RegistrySnapshot { counters, gauges, histograms }
+}
+
+impl RegistrySnapshot {
+    /// JSON form (`runtime::json`): counters/gauges as name → value maps,
+    /// histograms as `{count, sum, buckets: [[le, cumulative], …]}`.
+    pub fn to_json(&self) -> Json {
+        let mut counters = std::collections::BTreeMap::new();
+        for (name, v) in &self.counters {
+            counters.insert((*name).to_string(), Json::Num(*v as f64));
+        }
+        let mut gauges = std::collections::BTreeMap::new();
+        for (name, v) in &self.gauges {
+            gauges.insert((*name).to_string(), Json::Num(*v as f64));
+        }
+        let mut hists = std::collections::BTreeMap::new();
+        for h in &self.histograms {
+            let mut obj = std::collections::BTreeMap::new();
+            obj.insert("count".to_string(), Json::Num(h.count as f64));
+            obj.insert("sum".to_string(), Json::Num(h.sum as f64));
+            obj.insert(
+                "buckets".to_string(),
+                Json::Arr(
+                    h.buckets
+                        .iter()
+                        .map(|(le, n)| {
+                            Json::Arr(vec![
+                                // The +Inf bucket has no finite bound.
+                                if *le == u64::MAX {
+                                    Json::Null
+                                } else {
+                                    Json::Num(*le as f64)
+                                },
+                                Json::Num(*n as f64),
+                            ])
+                        })
+                        .collect(),
+                ),
+            );
+            hists.insert(h.name.to_string(), Json::Obj(obj));
+        }
+        let mut root = std::collections::BTreeMap::new();
+        root.insert("counters".to_string(), Json::Obj(counters));
+        root.insert("gauges".to_string(), Json::Obj(gauges));
+        root.insert("histograms".to_string(), Json::Obj(hists));
+        Json::Obj(root)
+    }
+
+    /// Prometheus text exposition (`# TYPE` lines + samples; histograms
+    /// as cumulative `_bucket{le=…}` series with `_sum`/`_count`).
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+        }
+        for (name, v) in &self.gauges {
+            out.push_str(&format!("# TYPE {name} gauge\n{name} {v}\n"));
+        }
+        for h in &self.histograms {
+            let name = h.name;
+            out.push_str(&format!("# TYPE {name} histogram\n"));
+            for (le, n) in &h.buckets {
+                if *le == u64::MAX {
+                    continue;
+                }
+                out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {n}\n"));
+            }
+            out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count));
+            out.push_str(&format!("{name}_sum {}\n", h.sum));
+            out.push_str(&format!("{name}_count {}\n", h.count));
+        }
+        out
+    }
+}
+
+/// Zero every instrument (tests; a long-lived process that wants
+/// per-interval numbers should diff snapshots instead).
+pub fn reset() {
+    for c in &COUNTERS {
+        c.store(0, Ordering::Relaxed);
+    }
+    for g in &GAUGES {
+        g.store(0, Ordering::Relaxed);
+    }
+    for i in 0..Histogram::ALL.len() {
+        for b in 0..HIST_BUCKETS {
+            HIST_COUNTS[i][b].store(0, Ordering::Relaxed);
+        }
+        HIST_TOTALS[i].store(0, Ordering::Relaxed);
+        HIST_SUMS[i].store(0, Ordering::Relaxed);
+    }
+    super::trace::reset();
+}
+
+/// Serializes tests that enable/reset the process-global registry, the
+/// same discipline as [`crate::runtime::fault::test_lock`]. Dropping the
+/// guard resets every instrument and restores the `MSGSN_TELEMETRY`
+/// enable state, so an unguarded suite never sees a guarded test's
+/// numbers.
+pub struct TestGuard {
+    _inner: MutexGuard<'static, ()>,
+}
+
+pub fn test_lock() -> TestGuard {
+    static GATE: Mutex<()> = Mutex::new(());
+    let inner = GATE.lock().unwrap_or_else(PoisonError::into_inner);
+    TestGuard { _inner: inner }
+}
+
+impl Drop for TestGuard {
+    fn drop(&mut self) {
+        reset();
+        set_enabled(env_requests_enable());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_registry_records_nothing() {
+        let _guard = test_lock();
+        set_enabled(false);
+        reset();
+        add(Counter::SignalsProcessed, 10);
+        observe(Histogram::CheckpointWriteNanos, 100);
+        set_gauge(Gauge::ServeConnsOpen, 3);
+        let snap = snapshot();
+        assert!(snap.counters.iter().all(|(_, v)| *v == 0));
+        assert!(snap.gauges.iter().all(|(_, v)| *v == 0));
+        assert!(snap.histograms.iter().all(|h| h.count == 0 && h.sum == 0));
+    }
+
+    #[test]
+    fn enabled_counters_accumulate_and_snapshot() {
+        let _guard = test_lock();
+        set_enabled(true);
+        reset();
+        add(Counter::SignalsProcessed, 7);
+        add(Counter::SignalsProcessed, 5);
+        set_gauge(Gauge::PoolWorkersActive, 4);
+        assert_eq!(counter(Counter::SignalsProcessed), 12);
+        let snap = snapshot();
+        let sig = snap
+            .counters
+            .iter()
+            .find(|(n, _)| *n == "msgsn_signals_processed_total")
+            .unwrap();
+        assert_eq!(sig.1, 12);
+        let g =
+            snap.gauges.iter().find(|(n, _)| *n == "msgsn_pool_workers_active").unwrap();
+        assert_eq!(g.1, 4);
+    }
+
+    #[test]
+    fn log2_buckets_are_cumulative_and_bounded() {
+        let _guard = test_lock();
+        set_enabled(true);
+        reset();
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 1);
+        assert_eq!(bucket_of(4), 2);
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
+        for v in [1u64, 2, 3, 1024, u64::MAX] {
+            observe(Histogram::CheckpointWriteNanos, v);
+        }
+        let snap = snapshot();
+        let h = &snap.histograms[0];
+        assert_eq!(h.count, 5);
+        assert_eq!(h.sum, 1u64.wrapping_add(2).wrapping_add(3).wrapping_add(1024).wrapping_add(u64::MAX));
+        // Cumulative: each bucket count is ≥ the previous one, and the
+        // last bucket carries the full count.
+        let mut prev = 0;
+        for (_, n) in &h.buckets {
+            assert!(*n >= prev);
+            prev = *n;
+        }
+        assert_eq!(h.buckets.last().unwrap().1, 5);
+    }
+
+    #[test]
+    fn prometheus_text_renders_every_instrument_kind() {
+        let _guard = test_lock();
+        set_enabled(true);
+        reset();
+        add(Counter::Batches, 3);
+        set_gauge(Gauge::WriterQueueDepth, 2);
+        observe(Histogram::CheckpointWriteNanos, 4096);
+        let text = snapshot().render_prometheus();
+        assert!(text.contains("# TYPE msgsn_batches_total counter"));
+        assert!(text.contains("msgsn_batches_total 3"));
+        assert!(text.contains("msgsn_writer_queue_depth 2"));
+        assert!(text.contains("msgsn_checkpoint_write_nanos_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("msgsn_checkpoint_write_nanos_count 1"));
+    }
+
+    #[test]
+    fn snapshot_json_round_trips_through_the_parser() {
+        let _guard = test_lock();
+        set_enabled(true);
+        reset();
+        add(Counter::FramesSent, 9);
+        observe(Histogram::CheckpointWriteNanos, 77);
+        let text = crate::runtime::render_json(&snapshot().to_json());
+        let doc = crate::runtime::parse_json(&text).expect("valid json");
+        let frames = doc
+            .get("counters")
+            .and_then(|c| c.get("msgsn_frames_sent_total"))
+            .and_then(|v| v.as_u64());
+        assert_eq!(frames, Some(9));
+        let count = doc
+            .get("histograms")
+            .and_then(|h| h.get("msgsn_checkpoint_write_nanos"))
+            .and_then(|h| h.get("count"))
+            .and_then(|v| v.as_u64());
+        assert_eq!(count, Some(1));
+    }
+
+    #[test]
+    fn reset_zeroes_everything() {
+        let _guard = test_lock();
+        set_enabled(true);
+        add(Counter::PoolSteals, 5);
+        observe(Histogram::CheckpointWriteNanos, 10);
+        reset();
+        assert_eq!(counter(Counter::PoolSteals), 0);
+        assert_eq!(snapshot().histograms[0].count, 0);
+    }
+}

@@ -1,0 +1,207 @@
+//! Bounded structured event ring: the narrative half of the telemetry
+//! spine.
+//!
+//! Counters say *how much*; the trace says *what happened, in order*.
+//! Lifecycle transitions — job admitted/retried/quarantined/migrated,
+//! worker evicted, checkpoint promoted, connection severed — emit a
+//! [`TraceEvent`] carrying a process-monotonic sequence number, the
+//! event kind, an optional job label, and free-form fields. Events land
+//! in a fixed-capacity ring guarded by one mutex: transitions are rare
+//! (per job-lifecycle, not per signal), so a short critical section off
+//! the hot path is the right trade. On overflow the ring **drops the
+//! oldest event and increments a drop counter — it never blocks** and
+//! never grows without bound.
+//!
+//! Rendering is line-delimited JSON (`runtime::json`), one event per
+//! line, so `--trace-file` output replays a run (e.g. a dist
+//! kill-and-migrate) as an ordered, parseable narrative.
+//!
+//! Emission is gated on [`super::registry::enabled`] — telemetry off
+//! means one relaxed load and no lock touch, preserving the
+//! non-perturbation contract.
+
+use std::collections::VecDeque;
+use std::sync::{Mutex, OnceLock, PoisonError};
+
+use crate::runtime::Json;
+
+use super::registry::{self, Counter};
+
+/// Default ring capacity; tune with [`set_capacity`].
+pub const DEFAULT_CAPACITY: usize = 1024;
+
+/// One structured lifecycle event.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// Process-monotonic sequence number (counts every emit, including
+    /// events later evicted by overflow — gaps in a tail reveal drops).
+    pub seq: u64,
+    /// Event kind: `job_admitted`, `job_retried`, `job_quarantined`,
+    /// `job_migrated`, `job_done`, `worker_evicted`,
+    /// `checkpoint_promoted`, `conn_severed`.
+    pub kind: &'static str,
+    /// Job label, when the event concerns one.
+    pub job: Option<String>,
+    /// Kind-specific fields, in emission order.
+    pub fields: Vec<(&'static str, Json)>,
+}
+
+impl TraceEvent {
+    pub fn to_json(&self) -> Json {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("seq".to_string(), Json::Num(self.seq as f64));
+        obj.insert("kind".to_string(), Json::Str(self.kind.to_string()));
+        if let Some(job) = &self.job {
+            obj.insert("job".to_string(), Json::Str(job.clone()));
+        }
+        for (k, v) in &self.fields {
+            obj.insert((*k).to_string(), v.clone());
+        }
+        Json::Obj(obj)
+    }
+}
+
+struct Ring {
+    events: VecDeque<TraceEvent>,
+    capacity: usize,
+    next_seq: u64,
+    dropped: u64,
+}
+
+fn ring() -> &'static Mutex<Ring> {
+    static RING: OnceLock<Mutex<Ring>> = OnceLock::new();
+    RING.get_or_init(|| {
+        Mutex::new(Ring {
+            events: VecDeque::new(),
+            capacity: DEFAULT_CAPACITY,
+            next_seq: 0,
+            dropped: 0,
+        })
+    })
+}
+
+fn lock_ring() -> std::sync::MutexGuard<'static, Ring> {
+    ring().lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Emit an event (no-op when telemetry is disabled). On a full ring the
+/// oldest event is evicted and [`Counter::TraceEventsDropped`] bumped;
+/// emission itself never blocks beyond the short ring lock.
+pub fn emit(kind: &'static str, job: Option<&str>, fields: Vec<(&'static str, Json)>) {
+    if !registry::enabled() {
+        return;
+    }
+    let mut r = lock_ring();
+    let seq = r.next_seq;
+    r.next_seq += 1;
+    if r.events.len() >= r.capacity {
+        r.events.pop_front();
+        r.dropped += 1;
+        registry::add(Counter::TraceEventsDropped, 1);
+    }
+    r.events.push_back(TraceEvent { seq, kind, job: job.map(str::to_string), fields });
+}
+
+/// Resize the ring (tests, long-lived daemons). Shrinking evicts oldest
+/// events without counting them as overflow drops.
+pub fn set_capacity(capacity: usize) {
+    let mut r = lock_ring();
+    r.capacity = capacity.max(1);
+    while r.events.len() > r.capacity {
+        r.events.pop_front();
+    }
+}
+
+/// Copy the newest `n` events, oldest-first.
+pub fn tail(n: usize) -> Vec<TraceEvent> {
+    let r = lock_ring();
+    let skip = r.events.len().saturating_sub(n);
+    r.events.iter().skip(skip).cloned().collect()
+}
+
+/// Drain every buffered event, oldest-first (used by `--trace-file`
+/// flushes at end of run).
+pub fn drain_all() -> Vec<TraceEvent> {
+    let mut r = lock_ring();
+    r.events.drain(..).collect()
+}
+
+/// Events evicted by overflow since the last [`reset`].
+pub fn dropped() -> u64 {
+    lock_ring().dropped
+}
+
+/// Clear the ring and restore the default capacity (tests; called by
+/// [`super::registry::reset`]).
+pub fn reset() {
+    let mut r = lock_ring();
+    r.events.clear();
+    r.capacity = DEFAULT_CAPACITY;
+    r.next_seq = 0;
+    r.dropped = 0;
+}
+
+/// Render events as JSONL: one `render_json` object per line.
+pub fn to_jsonl(events: &[TraceEvent]) -> String {
+    let mut out = String::new();
+    for e in events {
+        out.push_str(&crate::runtime::render_json(&e.to_json()));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::registry::{set_enabled, test_lock};
+
+    #[test]
+    fn disabled_emit_is_a_no_op() {
+        let _guard = test_lock();
+        set_enabled(false);
+        emit("job_admitted", Some("j0"), vec![]);
+        set_enabled(true);
+        assert!(tail(10).is_empty());
+    }
+
+    #[test]
+    fn events_carry_monotone_seq_and_fields() {
+        let _guard = test_lock();
+        set_enabled(true);
+        emit("job_admitted", Some("j0"), vec![("attempt", Json::Num(1.0))]);
+        emit("job_done", Some("j0"), vec![]);
+        let events = tail(10);
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].kind, "job_admitted");
+        assert_eq!(events[1].kind, "job_done");
+        assert!(events[0].seq < events[1].seq);
+        let line = to_jsonl(&events[..1]);
+        let doc = crate::runtime::parse_json(line.trim()).expect("valid jsonl line");
+        assert_eq!(doc.get("kind").and_then(|v| v.as_str()), Some("job_admitted"));
+        assert_eq!(doc.get("job").and_then(|v| v.as_str()), Some("j0"));
+        assert_eq!(doc.get("attempt").and_then(|v| v.as_u64()), Some(1));
+    }
+
+    #[test]
+    fn overflow_drops_oldest_and_counts() {
+        let _guard = test_lock();
+        set_enabled(true);
+        set_capacity(4);
+        for k in 0..10u64 {
+            emit("job_admitted", Some(&format!("j{k}")), vec![]);
+        }
+        let events = tail(100);
+        assert_eq!(events.len(), 4);
+        // Oldest were evicted: the survivors are the last four emits.
+        assert_eq!(events[0].job.as_deref(), Some("j6"));
+        assert_eq!(events[3].job.as_deref(), Some("j9"));
+        assert_eq!(dropped(), 6);
+        assert_eq!(
+            crate::telemetry::registry::counter(Counter::TraceEventsDropped),
+            6
+        );
+        // seq keeps counting across drops, exposing the gap.
+        assert_eq!(events[3].seq, 9);
+    }
+}

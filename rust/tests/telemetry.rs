@@ -1,0 +1,504 @@
+//! Telemetry integration tests — the PR 10 acceptance points.
+//!
+//! The non-negotiable invariant: **telemetry is a pure observer**. A run
+//! with the full instrument registry and event trace enabled must be
+//! bit-identical — same networks, same counters, same encoded session
+//! bytes — to the same run with telemetry off. Everything else here is
+//! exposition plumbing:
+//!
+//! - **on ≡ off parity**: SOAM, GWR and GNG across the Multi / Parallel /
+//!   Pipelined drivers and regions ∈ {1, 27}, proven by
+//!   `assert_networks_identical` plus byte-equal `snapshot_session`;
+//! - **instrument catalog**: a checkpointing fleet run populates the
+//!   per-phase time totals, signal/batch/pool counters, the checkpoint
+//!   write-latency histogram, and the job-lifecycle trace, all visible
+//!   through `metrics_json` and the Prometheus text rendering;
+//! - **trace narrative**: a crash-and-retry fleet run and a
+//!   kill-and-migrate dist run both replay as ordered, parseable JSONL;
+//! - **serve `metrics` verb**: polling a converging daemon returns
+//!   monotone counters and leaves the final encoded session byte-equal
+//!   to an unobserved run;
+//! - **ring overflow**: the event ring drops oldest and counts drops.
+//!
+//! Every test serializes on `telemetry::test_lock()` (the registry and
+//! ring are process-global); tests that also arm fault specs take
+//! `fault::test_lock()` after it, in that order, like the fleet suite.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use msgsn::config::{Algorithm, Driver, RunConfig};
+use msgsn::engine::ConvergenceSession;
+use msgsn::fleet::snapshot::snapshot_session;
+use msgsn::fleet::{parse_manifest, Fleet, FleetOptions, FleetOutcome, JobSpec};
+use msgsn::mesh::{benchmark_mesh, BenchmarkShape, Mesh};
+use msgsn::runtime::fault;
+use msgsn::runtime::{parse_json, Json};
+use msgsn::som::Network;
+use msgsn::telemetry::{self, Counter};
+
+/// Bitwise network equality (same contract as the executor-parity suite).
+fn assert_networks_identical(a: &Network, b: &Network, label: &str) {
+    assert_eq!(a.capacity(), b.capacity(), "{label}: slab capacity");
+    assert_eq!(a.len(), b.len(), "{label}: live units");
+    assert_eq!(a.edge_count(), b.edge_count(), "{label}: edges");
+    for id in 0..a.capacity() as u32 {
+        assert_eq!(a.is_alive(id), b.is_alive(id), "{label}: aliveness of {id}");
+        if !a.is_alive(id) {
+            continue;
+        }
+        let (ua, ub) = (a.unit(id), b.unit(id));
+        for (va, vb, what) in [
+            (ua.pos.x, ub.pos.x, "pos.x"),
+            (ua.pos.y, ub.pos.y, "pos.y"),
+            (ua.pos.z, ub.pos.z, "pos.z"),
+            (ua.firing, ub.firing, "firing"),
+            (ua.error, ub.error, "error"),
+            (ua.threshold, ub.threshold, "threshold"),
+        ] {
+            assert_eq!(va.to_bits(), vb.to_bits(), "{label}: unit {id} {what}");
+        }
+        let mut ea: Vec<(u32, u32)> =
+            a.edges_of(id).iter().map(|e| (e.to, e.age.to_bits())).collect();
+        let mut eb: Vec<(u32, u32)> =
+            b.edges_of(id).iter().map(|e| (e.to, e.age.to_bits())).collect();
+        ea.sort_unstable();
+        eb.sort_unstable();
+        assert_eq!(ea, eb, "{label}: edges of {id}");
+    }
+}
+
+/// Run a session to convergence; return it with the full encoded-session
+/// bytes and the report counters that must match across on/off.
+fn run_to_completion(cfg: &RunConfig, mesh: &Mesh) -> (ConvergenceSession, Vec<u8>, [u64; 3], u32) {
+    let mut session = ConvergenceSession::new(cfg, mesh, None).unwrap();
+    while session.step(17) {}
+    let bytes = snapshot_session(&session);
+    let r = session.finish();
+    (session, bytes, [r.iterations, r.signals, r.discarded], r.qe.to_bits())
+}
+
+fn parity_config(algorithm: Algorithm, driver: Driver, regions: usize) -> (RunConfig, Mesh) {
+    // GNG gets the Eight mesh (its insertion schedule is the interesting
+    // path there); SOAM/GWR the Blob — mirroring the executor-parity suite.
+    let shape = match algorithm {
+        Algorithm::Gng => BenchmarkShape::Eight,
+        _ => BenchmarkShape::Blob,
+    };
+    let mut cfg = RunConfig::preset(shape);
+    cfg.algorithm = algorithm;
+    cfg.driver = driver;
+    cfg.regions = regions;
+    cfg.seed = 47;
+    cfg.mesh_resolution = 16;
+    cfg.soam.insertion_threshold = 0.2;
+    cfg.gwr.insertion_threshold = 0.12;
+    cfg.gng.lambda = 60;
+    cfg.limits.max_signals = 8_000;
+    if driver != Driver::Multi {
+        cfg.update_threads = 2;
+        cfg.find_threads = 2;
+    }
+    (cfg, benchmark_mesh(shape, 16))
+}
+
+/// The tentpole invariant: full telemetry (registry + trace) changes
+/// **nothing** — not one bit of the network, not one byte of the encoded
+/// session — for any algorithm × driver × regions combination.
+#[test]
+fn telemetry_on_runs_are_bit_identical_to_off() {
+    let _guard = telemetry::test_lock();
+    let mut combos: Vec<(Algorithm, Driver, usize)> = Vec::new();
+    for algorithm in [Algorithm::Soam, Algorithm::Gng] {
+        for driver in [Driver::Multi, Driver::Parallel, Driver::Pipelined] {
+            for regions in [1usize, 27] {
+                combos.push((algorithm, driver, regions));
+            }
+        }
+    }
+    // GWR rides one parallel region combo (its global insertion threshold
+    // is the third deferred-insert flavor).
+    combos.push((Algorithm::Gwr, Driver::Parallel, 27));
+
+    for (algorithm, driver, regions) in combos {
+        let (cfg, mesh) = parity_config(algorithm, driver, regions);
+        let label = format!("{:?}/{:?}/regions={regions}", algorithm, driver);
+
+        telemetry::set_enabled(false);
+        let (off_session, off_bytes, off_counts, off_qe) = run_to_completion(&cfg, &mesh);
+
+        telemetry::set_enabled(true);
+        let (on_session, on_bytes, on_counts, on_qe) = run_to_completion(&cfg, &mesh);
+
+        assert_eq!(off_counts, on_counts, "{label}: report counters");
+        assert_eq!(off_qe, on_qe, "{label}: qe bits");
+        assert_networks_identical(
+            off_session.algo().net(),
+            on_session.algo().net(),
+            &label,
+        );
+        assert_eq!(
+            off_bytes, on_bytes,
+            "{label}: telemetry-on encoded session differs from telemetry-off"
+        );
+        // The observer actually observed: the enabled run moved counters.
+        assert!(
+            telemetry::counter(Counter::SignalsProcessed) > 0,
+            "{label}: enabled run recorded nothing"
+        );
+    }
+}
+
+fn tiny_spec(name: &str, seed: u64) -> JobSpec {
+    let mut cfg = RunConfig::preset(BenchmarkShape::Blob);
+    cfg.driver = Driver::Multi;
+    cfg.algorithm = Algorithm::Soam;
+    cfg.seed = seed;
+    cfg.mesh_resolution = 16;
+    cfg.soam.insertion_threshold = 0.2;
+    cfg.limits.max_signals = 4_000;
+    JobSpec::from_config(name, cfg)
+}
+
+fn scratch_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("msgsn_tel_{}_{}", std::process::id(), name));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// A checkpointing fleet run populates the whole instrument catalog the
+/// acceptance list names: phase time totals, signal/batch counts, pool
+/// traffic, the checkpoint write-latency histogram, and the lifecycle
+/// trace — all visible through `metrics_json` and the Prometheus text.
+#[test]
+fn fleet_run_populates_the_instrument_catalog() {
+    let _guard = telemetry::test_lock();
+    let _faults = fault::test_lock();
+    fault::clear();
+    telemetry::set_enabled(true);
+    let dir = scratch_dir("catalog");
+    let opts = FleetOptions {
+        checkpoint_every: 2,
+        checkpoint_dir: Some(dir.clone()),
+        ..FleetOptions::default()
+    };
+    // Parallel driver with real thread counts so the pool instruments
+    // (job/steal counters) genuinely move.
+    let mut spec = tiny_spec("tel-cat", 5);
+    spec.cfg.driver = Driver::Parallel;
+    spec.cfg.update_threads = 2;
+    spec.cfg.find_threads = 2;
+    let mut fleet = Fleet::new(vec![spec]).unwrap();
+    let report = fleet.run(&opts, |_| {}).unwrap();
+    assert_eq!(report.outcome(), FleetOutcome::AllSucceeded);
+
+    let doc = telemetry::metrics_json(64);
+    let counter = |name: &str| -> u64 {
+        doc.get("counters")
+            .and_then(|c| c.get(name))
+            .and_then(|v| v.as_u64())
+            .unwrap_or_else(|| panic!("counter {name} missing: {doc:?}"))
+    };
+    for name in [
+        "msgsn_signals_processed_total",
+        "msgsn_batches_total",
+        "msgsn_pool_jobs_total",
+        "msgsn_phase_sample_nanos_total",
+        "msgsn_phase_find_nanos_total",
+        "msgsn_phase_update_nanos_total",
+        "msgsn_jobs_admitted_total",
+        "msgsn_checkpoints_written_total",
+    ] {
+        assert!(counter(name) > 0, "{name} never moved: {doc:?}");
+    }
+    let hist = doc
+        .get("histograms")
+        .and_then(|h| h.get("msgsn_checkpoint_write_nanos"))
+        .expect("checkpoint write histogram missing");
+    assert!(
+        hist.get("count").and_then(|v| v.as_u64()).unwrap_or(0) > 0,
+        "histogram recorded no write-outs: {hist:?}"
+    );
+    let kinds: Vec<&str> = doc
+        .get("trace")
+        .and_then(Json::as_arr)
+        .expect("trace array")
+        .iter()
+        .filter_map(|e| e.get("kind").and_then(Json::as_str))
+        .collect();
+    assert!(kinds.contains(&"job_admitted"), "{kinds:?}");
+    assert!(kinds.contains(&"job_done"), "{kinds:?}");
+
+    // Prometheus rendering carries every instrument family.
+    let text = telemetry::snapshot().render_prometheus();
+    assert!(text.contains("# TYPE msgsn_signals_processed_total counter"), "{text}");
+    assert!(text.contains("# TYPE msgsn_checkpoint_write_nanos histogram"), "{text}");
+    assert!(text.contains("msgsn_checkpoint_write_nanos_bucket{le=\"+Inf\"}"), "{text}");
+
+    // Satellite: per-job phase times aggregate into the fleet report.
+    let totals = report.phase_totals();
+    assert!(totals.sample + totals.find + totals.update > Duration::ZERO);
+    let row_json = report.rows[0].to_json();
+    let rep = row_json.get("report").expect("report object");
+    for key in ["sample_s", "find_s", "update_s"] {
+        assert!(rep.get(key).and_then(|v| v.as_f64()).is_some(), "{key} missing: {rep:?}");
+    }
+    let report_json = report.to_json();
+    assert!(report_json.get("phase_totals").is_some(), "{report_json:?}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A crash-and-retry fleet run replays as an ordered narrative: admitted,
+/// then failed, then retried, then done — with monotone sequence numbers
+/// and parseable JSONL throughout.
+#[test]
+fn trace_replays_crash_and_retry_in_order() {
+    let _guard = telemetry::test_lock();
+    let _faults = fault::test_lock();
+    telemetry::set_enabled(true);
+    msgsn::telemetry::trace::reset();
+    fault::install(fault::parse_faults("job/tel-flaky:panic@turn=8").unwrap());
+    let dir = scratch_dir("retry");
+    let opts = FleetOptions {
+        stride: 2,
+        checkpoint_every: 2,
+        checkpoint_dir: Some(dir.clone()),
+        ..FleetOptions::default()
+    };
+    let mut fleet = Fleet::new(vec![tiny_spec("tel-flaky", 29)]).unwrap();
+    let report = fleet.run(&opts, |_| {}).unwrap();
+    assert_eq!(report.outcome(), FleetOutcome::AllSucceeded);
+    assert!(telemetry::counter(Counter::JobsRetried) >= 1);
+
+    let events = msgsn::telemetry::trace::drain_all();
+    let jsonl = msgsn::telemetry::trace::to_jsonl(&events);
+    let mut seqs = Vec::new();
+    let mut kinds = Vec::new();
+    for line in jsonl.lines() {
+        let doc = parse_json(line).unwrap_or_else(|e| panic!("bad JSONL {line:?}: {e}"));
+        seqs.push(doc.get("seq").and_then(|v| v.as_u64()).expect("seq"));
+        kinds.push(doc.get("kind").and_then(Json::as_str).expect("kind").to_string());
+    }
+    assert!(seqs.windows(2).all(|w| w[0] < w[1]), "seq not monotone: {seqs:?}");
+    let pos = |kind: &str| {
+        kinds
+            .iter()
+            .position(|k| k == kind)
+            .unwrap_or_else(|| panic!("no {kind} event in {kinds:?}"))
+    };
+    assert!(pos("job_admitted") < pos("job_failed"), "{kinds:?}");
+    assert!(pos("job_failed") < pos("job_retried"), "{kinds:?}");
+    assert!(pos("job_retried") < pos("job_done"), "{kinds:?}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A kill-and-migrate dist run replays as ordered JSONL carrying the
+/// whole story — checkpoint promotions, the eviction, the migration —
+/// and moves the matching counters.
+#[test]
+fn dist_kill_and_migrate_replays_as_ordered_jsonl() {
+    use msgsn::dist::{
+        channel_transport_pair, run_worker, Coordinator, DistOptions, DistOutcome, WorkerOptions,
+    };
+    use msgsn::fleet::manifest_job_payloads;
+
+    let _guard = telemetry::test_lock();
+    let _faults = fault::test_lock();
+    telemetry::set_enabled(true);
+    msgsn::telemetry::trace::reset();
+    fault::install(fault::parse_faults("worker/zz-tel-kill-w1:panic@turn=6").unwrap());
+
+    let text = format!(
+        r#"{{"version": 1, "jobs": [{}, {}]}}"#,
+        r#"{"name": "tk-a", "mesh": "blob", "algorithm": "soam", "driver": "multi",
+            "seed": 21,
+            "config": {"mesh_resolution": 16, "insertion_threshold": 0.2,
+                       "max_signals": 4000}}"#,
+        r#"{"name": "tk-b", "mesh": "blob", "algorithm": "soam", "driver": "multi",
+            "seed": 22,
+            "config": {"mesh_resolution": 16, "insertion_threshold": 0.2,
+                       "max_signals": 4000}}"#,
+    );
+    let mut coordinator = Coordinator::new(
+        manifest_job_payloads(&text).unwrap(),
+        DistOptions { heartbeat_timeout: Duration::from_secs(30), ..DistOptions::default() },
+    );
+    let workers: Vec<_> = ["zz-tel-kill-w0", "zz-tel-kill-w1"]
+        .iter()
+        .map(|name| {
+            let (coord_end, mut worker_end) = channel_transport_pair(name);
+            coordinator.add_worker(name, Box::new(coord_end));
+            let opts = WorkerOptions {
+                name: name.to_string(),
+                stride: 1,
+                checkpoint_rounds: 2,
+                idle_poll: Duration::from_millis(2),
+            };
+            std::thread::Builder::new()
+                .name(format!("msgsn-{name}"))
+                .spawn(move || run_worker(&mut worker_end, &opts, |_| {}))
+                .unwrap()
+        })
+        .collect();
+    let report = coordinator.run(|_| {});
+    for w in workers {
+        let _ = w.join(); // w1's thread died on the injected panic
+    }
+    assert_eq!(report.outcome(), DistOutcome::AllDone, "{report:?}");
+    assert!(report.rows.iter().any(|r| r.migrations >= 1), "{report:?}");
+
+    assert!(telemetry::counter(Counter::WorkersEvicted) >= 1);
+    assert!(telemetry::counter(Counter::JobsMigrated) >= 1);
+    assert!(telemetry::counter(Counter::FramesSent) > 0);
+    assert!(telemetry::counter(Counter::FramesReceived) > 0);
+
+    let events = msgsn::telemetry::trace::drain_all();
+    let jsonl = msgsn::telemetry::trace::to_jsonl(&events);
+    let mut last_seq = None;
+    let mut kinds = Vec::new();
+    for line in jsonl.lines() {
+        let doc = parse_json(line).unwrap_or_else(|e| panic!("bad JSONL {line:?}: {e}"));
+        let seq = doc.get("seq").and_then(|v| v.as_u64()).expect("seq");
+        assert!(last_seq.is_none_or(|p| p < seq), "seq regressed at {line}");
+        last_seq = Some(seq);
+        kinds.push(doc.get("kind").and_then(Json::as_str).expect("kind").to_string());
+    }
+    for kind in ["job_admitted", "checkpoint_promoted", "worker_evicted", "job_migrated"] {
+        assert!(kinds.iter().any(|k| k == kind), "no {kind} in {kinds:?}");
+    }
+}
+
+/// Serve `metrics` polls against a converging daemon: counters are
+/// monotone across polls, the Prometheus text renders, and the final
+/// encoded session is byte-equal to an unobserved batch run — the verb
+/// reads the registry, never the fleet.
+#[test]
+fn serve_metrics_polls_do_not_perturb_convergence() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+
+    use msgsn::serve::{ServeOptions, Server};
+
+    let _guard = telemetry::test_lock();
+    let _faults = fault::test_lock();
+    fault::clear();
+    telemetry::set_enabled(true);
+    let name = "tel-serve";
+    let job = r#"{"name": "tel-serve", "mesh": "blob", "algorithm": "soam", "driver": "multi",
+                  "seed": 77,
+                  "config": {"mesh_resolution": 16, "insertion_threshold": 0.2,
+                             "max_signals": 4000}}"#;
+
+    // Unobserved reference: the same spec through the batch fleet.
+    let manifest = format!(r#"{{"version": 1, "jobs": [{job}]}}"#);
+    let specs = parse_manifest(&manifest).unwrap();
+    let mut reference = Fleet::new(specs).unwrap();
+    reference.run(&FleetOptions::default(), |_| {}).unwrap();
+
+    let mut server = Server::bind("127.0.0.1:0", Vec::new()).unwrap();
+    let addr = server.local_addr().unwrap();
+    let handle = std::thread::Builder::new()
+        .name("msgsn-tel-serve".to_string())
+        .spawn(move || {
+            let opts = ServeOptions {
+                idle_poll: Duration::from_millis(1),
+                watch_every: 4,
+                ..ServeOptions::default()
+            };
+            let report = server.run(&opts, |_| {}).unwrap();
+            (server, report)
+        })
+        .unwrap();
+
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut request = |line: &str| -> Json {
+        let s = reader.get_mut();
+        s.write_all(line.as_bytes()).unwrap();
+        s.write_all(b"\n").unwrap();
+        loop {
+            let mut resp = String::new();
+            assert!(reader.read_line(&mut resp).unwrap() > 0, "daemon hung up");
+            let doc = parse_json(resp.trim()).unwrap();
+            if doc.get("ok").is_some() {
+                assert_eq!(doc.get("ok").and_then(Json::as_bool), Some(true), "{doc:?}");
+                return doc;
+            }
+            // Stray event line (none expected — we never watch).
+        }
+    };
+
+    let resp = request(&format!(r#"{{"cmd": "submit", "job": {job}}}"#));
+    assert_eq!(resp.get("job").and_then(Json::as_str), Some(name));
+
+    // Poll metrics while the job converges; the signal counter must be
+    // monotone poll over poll.
+    let signals_of = |doc: &Json| -> u64 {
+        doc.get("metrics")
+            .and_then(|m| m.get("counters"))
+            .and_then(|c| c.get("msgsn_signals_processed_total"))
+            .and_then(|v| v.as_u64())
+            .unwrap_or_else(|| panic!("no signal counter: {doc:?}"))
+    };
+    let mut polls = Vec::new();
+    loop {
+        let m = request(r#"{"cmd": "metrics"}"#);
+        assert!(
+            m.get("text")
+                .and_then(Json::as_str)
+                .is_some_and(|t| t.contains("# TYPE msgsn_signals_processed_total counter")),
+            "prometheus text missing: {m:?}"
+        );
+        polls.push(signals_of(&m));
+        let status = request(r#"{"cmd": "status"}"#);
+        let rows = status.get("jobs").and_then(Json::as_arr).unwrap();
+        if rows[0].get("status").and_then(Json::as_str) == Some("done") {
+            break;
+        }
+    }
+    assert!(polls.len() >= 2, "the metrics polls never ran");
+    assert!(polls.windows(2).all(|w| w[0] <= w[1]), "counters regressed: {polls:?}");
+    assert!(*polls.last().unwrap() > 0, "no signals were ever counted");
+
+    request(r#"{"cmd": "shutdown"}"#);
+    let (server, report) = handle.join().unwrap();
+    assert_eq!(report.outcome(), FleetOutcome::AllSucceeded);
+    let observed = server
+        .fleet()
+        .jobs()
+        .iter()
+        .find(|j| j.spec().name == name)
+        .unwrap()
+        .session()
+        .unwrap();
+    let unobserved = reference.jobs()[0].session().unwrap();
+    assert_networks_identical(observed.algo().net(), unobserved.algo().net(), name);
+    assert_eq!(
+        snapshot_session(observed),
+        snapshot_session(unobserved),
+        "metrics polls perturbed the encoded session"
+    );
+}
+
+/// The event ring under overflow: oldest events evicted, drops counted,
+/// sequence numbers preserved across the gap — via the public crate API.
+#[test]
+fn event_ring_overflow_drops_oldest_and_counts() {
+    let _guard = telemetry::test_lock();
+    telemetry::set_enabled(true);
+    msgsn::telemetry::trace::set_capacity(8);
+    for k in 0..20u64 {
+        telemetry::emit("job_admitted", Some(&format!("ring-{k}")), vec![]);
+    }
+    let events = msgsn::telemetry::trace::tail(100);
+    assert_eq!(events.len(), 8);
+    assert_eq!(events[0].job.as_deref(), Some("ring-12"));
+    assert_eq!(events[7].job.as_deref(), Some("ring-19"));
+    assert_eq!(msgsn::telemetry::trace::dropped(), 12);
+    assert_eq!(telemetry::counter(Counter::TraceEventsDropped), 12);
+    assert_eq!(events[7].seq, 19, "seq keeps counting across drops");
+    let doc = telemetry::metrics_json(4);
+    assert_eq!(doc.get("trace").and_then(Json::as_arr).map(|a| a.len()), Some(4));
+    assert_eq!(doc.get("trace_dropped").and_then(|v| v.as_u64()), Some(12));
+}

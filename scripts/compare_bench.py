@@ -27,7 +27,12 @@ same reason: the same fleet shape over a different transport is a new row,
 never a cross-diff. Serve rows carry a "serve": true field that suffixes
 the key ("<row>/jobs=N/serve"), so daemon-path measurements (protocol +
 scheduling on top of the fleet) never cross-diff against batch-fleet rows
-of the same name and size. Likewise the per-ISA
+of the same name and size. Telemetry rows carry a "telemetry" field
+("off", "on") that suffixes the key ("<row>/telemetry=on"), so the
+instrumented and uninstrumented arms of the telemetry-overhead bench are
+tracked as separate measurements and never cross-diff — a regression in
+the "on" arm is reported against the previous "on" number, not against
+the cheaper "off" arm. Likewise the per-ISA
 find_winners rows carry an "isa" field that becomes part of the key, so a
 baseline recorded on an AVX-512 host never cross-diffs against a fresh run
 on an AVX2-only host — a tier the host lacks is a skipped/new row, never a
@@ -72,6 +77,11 @@ def rows_by_key(node, out):
             # never cross-diff against batch-fleet rows of the same name
             # and size.
             key = ("row", f"{key[1]}/serve")
+        if key is not None and key[0] == "row" and "telemetry" in node:
+            # Telemetry-keyed rows: the on/off arms of the overhead bench
+            # measure different code paths, so they are separate rows —
+            # never diff one against the other.
+            key = ("row", f"{key[1]}/telemetry={node['telemetry']}")
         if key is not None:
             out[key] = node
         for v in node.values():

@@ -10,6 +10,12 @@ Subcommands:
                 Reconnects with bounded retries when the daemon severs the
                 connection (the chaos cell injects exactly that), treating
                 the `exists` code on resubmission as success.
+  metrics       poll the daemon's `metrics` verb twice: assert both polls
+                answer ok, the Prometheus text pane is non-empty, and every
+                counter is monotone non-decreasing between polls. The verb
+                answers from the telemetry registry only, so this is safe to
+                run at any point in the daemon's life — including while
+                sessions are mid-convergence.
   check-report  assert on a --report-json file: every row done, exit 0.
 
 Exit codes: 0 success, 1 assertion/protocol failure, 2 could not connect.
@@ -225,6 +231,44 @@ def cmd_session(args):
     return 0
 
 
+def poll_metrics(session):
+    """One `metrics` request; returns (counters_dict, prometheus_text)."""
+    resp = session.request({"cmd": "metrics"})
+    metrics = resp.get("metrics", {})
+    text = resp.get("text", "")
+    if not isinstance(metrics, dict) or "counters" not in metrics:
+        raise SystemExit(f"serve_client: metrics response missing counters: {resp}")
+    counters = metrics["counters"]
+    if not text or "# TYPE" not in text:
+        raise SystemExit("serve_client: metrics response has no Prometheus text pane")
+    return counters, text
+
+
+def cmd_metrics(args):
+    session = Session(args.connect)
+    first, text = poll_metrics(session)
+    log(f"metrics poll 1: {len(first)} counters")
+    time.sleep(args.gap_secs)
+    second, _ = poll_metrics(session)
+    log(f"metrics poll 2: {len(second)} counters")
+    regressed = [
+        name
+        for name, value in first.items()
+        if second.get(name, 0) < value
+    ]
+    if regressed:
+        raise SystemExit(f"serve_client: counters regressed between polls: {regressed}")
+    # The daemon served at least these two requests, so the serve counters
+    # must have moved by the second poll.
+    if second.get("msgsn_serve_requests_total", 0) <= 0:
+        raise SystemExit(f"serve_client: msgsn_serve_requests_total never moved: {second}")
+    for line in text.splitlines()[:6]:
+        log(f"prometheus: {line}")
+    session.client.close()
+    log("metrics complete")
+    return 0
+
+
 def cmd_check_report(args):
     with open(args.path, "r", encoding="utf-8") as f:
         report = json.load(f)
@@ -260,6 +304,12 @@ def main():
     s.add_argument("--poll-secs", type=float, default=0.5)
     s.add_argument("--timeout", type=float, default=300.0)
     s.set_defaults(fn=cmd_session)
+
+    m = sub.add_parser("metrics", help="poll the metrics verb and assert monotonicity")
+    m.add_argument("--connect", default="127.0.0.1:7081")
+    m.add_argument("--gap-secs", type=float, default=0.5,
+                   help="pause between the two polls")
+    m.set_defaults(fn=cmd_metrics)
 
     c = sub.add_parser("check-report", help="assert on a --report-json file")
     c.add_argument("path")

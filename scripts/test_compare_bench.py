@@ -20,7 +20,10 @@ a spurious failure would block every PR. These tests pin its contract:
   cross-diff;
 - serve rows ("serve": true) key on (row, jobs, serve): a regression on
   the daemon path fails against the serve baseline, while serve and
-  batch-fleet rows of the same name and size never cross-diff.
+  batch-fleet rows of the same name and size never cross-diff;
+- telemetry rows ("telemetry": "off"/"on") key on (row, telemetry): a
+  regression in one arm fails against that arm's own baseline, while the
+  instrumented and uninstrumented arms never cross-diff.
 
 Runnable with the stdlib alone (`python3 -m unittest discover -s scripts`)
 or with pytest.
@@ -271,6 +274,58 @@ class CompareBenchCase(unittest.TestCase):
             self.fresh,
             "BENCH_end_to_end.json",
             self.serve_payload(50.0, serve=True, row="fleet-concurrent"),
+        )
+        r = run_compare(self.baseline, self.fresh)
+        self.assertEqual(r.returncode, 0, r.stdout + r.stderr)
+        self.assertIn("new row", r.stdout)
+
+    def telemetry_payload(self, off_s, on_s):
+        return {
+            "bench": "end_to_end",
+            "telemetry": [
+                {"row": "telemetry-overhead", "telemetry": "off", "total_s": off_s},
+                {"row": "telemetry-overhead", "telemetry": "on", "total_s": on_s},
+            ],
+        }
+
+    def test_telemetry_row_regression_fails_within_same_arm(self):
+        self.write(
+            self.baseline, "BENCH_end_to_end.json", self.telemetry_payload(1.0, 1.02)
+        )
+        self.write(
+            self.fresh, "BENCH_end_to_end.json", self.telemetry_payload(1.0, 1.5)
+        )
+        r = run_compare(self.baseline, self.fresh)
+        self.assertEqual(r.returncode, 1, r.stdout + r.stderr)
+        self.assertIn("telemetry-overhead/telemetry=on", r.stdout)
+        self.assertIn("REGRESSION", r.stdout)
+
+    def test_telemetry_on_and_off_arms_never_cross_diff(self):
+        # Without the telemetry key suffix the two arms would collide on
+        # ("row", "telemetry-overhead") and the later row would silently
+        # shadow the earlier one — the gate would then diff an "on" fresh
+        # number against an "off" baseline. The suffix keeps the arms as
+        # two separate rows, so an arm present on only one side is a
+        # new-row skip, never a cross-arm failure.
+        self.write(
+            self.baseline,
+            "BENCH_end_to_end.json",
+            {
+                "bench": "end_to_end",
+                "telemetry": [
+                    {"row": "telemetry-overhead", "telemetry": "off", "total_s": 1.0}
+                ],
+            },
+        )
+        self.write(
+            self.fresh,
+            "BENCH_end_to_end.json",
+            {
+                "bench": "end_to_end",
+                "telemetry": [
+                    {"row": "telemetry-overhead", "telemetry": "on", "total_s": 50.0}
+                ],
+            },
         )
         r = run_compare(self.baseline, self.fresh)
         self.assertEqual(r.returncode, 0, r.stdout + r.stderr)
